@@ -1,0 +1,72 @@
+//! Semi-supervised HMM inference (the paper's Table 2a HMM workload),
+//! comparing all three architectures on the same dataset and checking
+//! the posterior recovers the generating transition matrix.
+//!
+//!     make artifacts && cargo run --release --example hmm_semisupervised
+
+use anyhow::Result;
+use fugue::coordinator::{run_chain, NutsOptions};
+use fugue::harness::builders::{build_sampler, init_z, Backend, Workload};
+use fugue::ppl::transforms::stick_breaking;
+use fugue::runtime::engine::Engine;
+
+fn main() -> Result<()> {
+    let engine = Engine::new("artifacts")?;
+    let seed = 7;
+    let workload = Workload::for_model(&engine, "hmm", seed)?;
+    let truth = match &workload {
+        Workload::Hmm(h) => h.theta_true.clone(),
+        _ => unreachable!(),
+    };
+    println!("true transition matrix:");
+    for row in 0..3 {
+        println!(
+            "  [{:.3} {:.3} {:.3}]",
+            truth[row * 3],
+            truth[row * 3 + 1],
+            truth[row * 3 + 2]
+        );
+    }
+
+    for (backend, dtype) in [
+        (Backend::Fused, "f32"),
+        (Backend::Fused, "f64"),
+        (Backend::Native, "f64"),
+    ] {
+        let mut sampler = build_sampler(&engine, "hmm", backend, dtype, &workload, 10)?;
+        let dim = sampler.dim();
+        let opts = NutsOptions {
+            num_warmup: 300,
+            num_samples: 300,
+            seed,
+            ..Default::default()
+        };
+        let res = run_chain(&mut sampler, &init_z(dim, seed), &opts)?;
+        // posterior-mean unconstrained theta sticks -> simplex rows
+        let n = (res.samples.len() / dim) as f64;
+        let mut mean = vec![0.0; dim];
+        for row in res.samples.chunks(dim) {
+            for (m, v) in mean.iter_mut().zip(row) {
+                *m += v / n;
+            }
+        }
+        let mut err = 0.0;
+        println!("\n{} {dtype}:", backend.paper_name());
+        for row in 0..3 {
+            let (simplex, _) = stick_breaking(&mean[27 + row * 2..27 + (row + 1) * 2]);
+            println!(
+                "  [{:.3} {:.3} {:.3}]",
+                simplex[0], simplex[1], simplex[2]
+            );
+            for j in 0..3 {
+                err += (simplex[j] - truth[row * 3 + j]).abs() / 9.0;
+            }
+        }
+        println!(
+            "  mean |err| {err:.3} | {:.4} ms/leapfrog | {} leapfrogs",
+            res.ms_per_leapfrog(),
+            res.sample_leapfrogs
+        );
+    }
+    Ok(())
+}

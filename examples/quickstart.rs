@@ -1,0 +1,50 @@
+//! Quickstart: load the end-to-end-compiled NUTS artifact for a small
+//! logistic-regression model, run one adaptively-warmed chain, print a
+//! posterior summary.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the paper's headline loop in ~30 lines of user code: the
+//! entire NUTS transition (Appendix A, Algorithm 2 — leapfrog, in-graph
+//! gradients, U-turn checks, proposal sampling) is ONE compiled XLA
+//! executable; Rust owns warmup adaptation and diagnostics.
+
+use anyhow::Result;
+use fugue::coordinator::{run_chain, FusedSampler, NutsOptions};
+use fugue::diagnostics::summary::{render_table, summarize};
+use fugue::harness::builders::{init_z, Workload};
+use fugue::runtime::engine::Engine;
+use fugue::runtime::NutsStep;
+
+fn main() -> Result<()> {
+    let engine = Engine::new("artifacts")?;
+    let model = "covtype_small";
+
+    // workload data is an artifact *input*: generate once, upload once
+    let workload = Workload::for_model(&engine, model, 42)?;
+    let entry = engine.manifest.find(model, "nuts_step", "f32")?;
+    let data = workload.tensors(entry.inputs[1].dtype)?;
+    let step = NutsStep::new(&engine, &format!("{model}_nuts_step_f32"), &data)?;
+    let dim = step.dim;
+    println!("loaded {model}: {dim}-dimensional posterior");
+
+    let mut sampler = FusedSampler::new(step);
+    let opts = NutsOptions {
+        num_warmup: 300,
+        num_samples: 500,
+        seed: 42,
+        ..Default::default()
+    };
+    let res = run_chain(&mut sampler, &init_z(dim, 42), &opts)?;
+
+    let rows = summarize(&[res.samples.clone()], dim, &entry.param_layout);
+    println!("{}", render_table(&rows));
+    println!(
+        "adapted step size {:.4} | {:.4} ms/leapfrog | {} dispatches for {} draws",
+        res.step_size,
+        res.ms_per_leapfrog(),
+        sampler.step.dispatches,
+        opts.num_warmup + opts.num_samples,
+    );
+    Ok(())
+}

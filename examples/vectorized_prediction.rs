@@ -1,0 +1,109 @@
+//! Fig 1 of the paper, end to end: the three vectorized inference
+//! subroutines — prior predictive, posterior predictive, log-likelihood
+//! — each a single compiled executable built by composing `vmap` with
+//! the `seed` / `condition` / `trace` effect handlers (§3.2).
+//!
+//!     make artifacts && cargo run --release --example vectorized_prediction
+
+use anyhow::Result;
+use fugue::coordinator::{run_chain, FusedSampler, NutsOptions};
+use fugue::harness::builders::{init_z, Workload};
+use fugue::ppl::special::log_sum_exp;
+use fugue::rng::Rng;
+use fugue::runtime::engine::{literal_to_f64, Engine, HostTensor};
+use fugue::runtime::NutsStep;
+
+fn main() -> Result<()> {
+    let engine = Engine::new("artifacts")?;
+    let seed = 11;
+    let model = "covtype_small";
+    let workload = Workload::for_model(&engine, model, seed)?;
+    let (x, y, n, d) = match &workload {
+        Workload::Logistic(l) => (l.x.clone(), l.y.clone(), l.n, l.d),
+        _ => unreachable!(),
+    };
+
+    let predict = engine.executable("covtype_predict_f32")?;
+    let s = predict.entry.meta_usize("num_samples").unwrap_or(100);
+    let fdt = predict.entry.inputs[1].dtype;
+    let mut rng = Rng::new(seed);
+    let mut keys = |count: usize| -> Vec<u32> {
+        (0..count)
+            .flat_map(|_| vec![(rng.next_u64() >> 32) as u32, rng.next_u64() as u32])
+            .collect()
+    };
+    let x_b = engine.upload(&HostTensor::from_f64(&x, &[n, d], fdt)?)?;
+
+    // 1. prior predictive: prior draws of (m, b) through the same
+    //    conditioned-predict artifact (vmap ∘ seed ∘ condition)
+    let mut prior_m = vec![0.0; s * d];
+    let mut prior_b = vec![0.0; s];
+    let mut prior_rng = Rng::new(seed ^ 0x1234);
+    prior_rng.fill_normal(&mut prior_m);
+    prior_rng.fill_normal(&mut prior_b);
+    let keys_b = engine.upload(&HostTensor::U32(keys(s), vec![s, 2]))?;
+    let pm_b = engine.upload(&HostTensor::from_f64(&prior_m, &[s, d], fdt)?)?;
+    let pb_b = engine.upload(&HostTensor::from_f64(&prior_b, &[s], fdt)?)?;
+    let outs = predict.run_buffers(&[&keys_b, &pm_b, &pb_b, &x_b])?;
+    let prior_pred = literal_to_f64(&outs[0])?;
+    let prior_rate = prior_pred.iter().sum::<f64>() / prior_pred.len() as f64;
+    println!("prior predictive positive rate:     {prior_rate:.3} (expect ~0.5 under N(0,1) priors)");
+
+    // 2. posterior samples via the fused NUTS artifact
+    let entry = engine.manifest.find(model, "nuts_step", "f32")?.clone();
+    let step = NutsStep::new(
+        &engine,
+        &format!("{model}_nuts_step_f32"),
+        &workload.tensors(entry.inputs[1].dtype)?,
+    )?;
+    let dim = step.dim;
+    let mut sampler = FusedSampler::new(step);
+    let opts = NutsOptions {
+        num_warmup: 250,
+        num_samples: s,
+        seed,
+        ..Default::default()
+    };
+    let res = run_chain(&mut sampler, &init_z(dim, seed), &opts)?;
+    let mut post_m = Vec::with_capacity(s * d);
+    let mut post_b = Vec::with_capacity(s);
+    for row in res.samples.chunks(dim) {
+        post_b.push(row[0]);
+        post_m.extend_from_slice(&row[1..]);
+    }
+
+    // 3. posterior predictive + accuracy
+    let keys_b = engine.upload(&HostTensor::U32(keys(s), vec![s, 2]))?;
+    let mm_b = engine.upload(&HostTensor::from_f64(&post_m, &[s, d], fdt)?)?;
+    let bb_b = engine.upload(&HostTensor::from_f64(&post_b, &[s], fdt)?)?;
+    let outs = predict.run_buffers(&[&keys_b, &mm_b, &bb_b, &x_b])?;
+    let post_pred = literal_to_f64(&outs[0])?;
+    let mut correct = 0;
+    for i in 0..n {
+        let votes: f64 = (0..s).map(|k| post_pred[k * n + i]).sum();
+        if ((votes / s as f64 > 0.5) as i32 as f64 - y[i]).abs() < 0.5 {
+            correct += 1;
+        }
+    }
+    println!(
+        "posterior predictive accuracy:       {:.3}",
+        correct as f64 / n as f64
+    );
+
+    // 4. vectorized log-likelihood (Fig 1c lines 7-8)
+    let loglik = engine.executable("covtype_loglik_f32")?;
+    let y_b = engine.upload(&HostTensor::I32(
+        y.iter().map(|&v| v as i32).collect(),
+        vec![n],
+    ))?;
+    let outs = loglik.run_buffers(&[&mm_b, &bb_b, &x_b, &y_b])?;
+    let post_ll = literal_to_f64(&outs[0])?;
+    let outs = loglik.run_buffers(&[&pm_b, &pb_b, &x_b, &y_b])?;
+    let prior_ll = literal_to_f64(&outs[0])?;
+    let e_post = log_sum_exp(&post_ll) - (s as f64).ln();
+    let e_prior = log_sum_exp(&prior_ll) - (s as f64).ln();
+    println!("expected log-lik (posterior draws):  {e_post:.1}");
+    println!("expected log-lik (prior draws):      {e_prior:.1}");
+    println!("\nposterior beats prior by {:.1} nats — handlers + vmap compose (§3.2)", e_post - e_prior);
+    Ok(())
+}

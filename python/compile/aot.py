@@ -1,0 +1,449 @@
+"""AOT lowering driver: JAX/Pallas (L1+L2)  ->  artifacts/*.hlo.txt (L3).
+
+Runs ONCE at build time (``make artifacts``); the Rust coordinator then
+loads, compiles (PJRT CPU) and executes the artifacts with Python never
+on the request path.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per model (f32; run again under JAX_ENABLE_X64=1 for f64):
+
+* ``potential_and_grad`` — (z, *data) -> (U, dU/dz).  One PJRT dispatch
+  per leapfrog: this is the *Pyro-architecture baseline* of Table 2a.
+* ``nuts_step`` — (key, z, step_size, inv_mass, *data) -> transition.
+  The paper's headline: the whole iterative NUTS draw (Appendix A,
+  Algorithm 2) as ONE XLA executable.  Step size / mass matrix are
+  inputs so the Rust coordinator adapts without recompiling.
+* ``nuts_step_vmapK`` — K chains per dispatch via vmap (§3.2, E7).
+* covtype extras (Fig 1 / Appendix D): ``predict``, ``loglik``,
+  ``elbo_and_grad``.
+
+A ``manifest.json`` records every artifact's input/output signature,
+parameter layout (site -> flat-vector span) and static workload metadata;
+the Rust runtime is entirely manifest-driven.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import minippl as mp
+from .infer.nuts import build_nuts_step
+from .minippl import distributions as dist
+from .models.hmm import HmmData, hmm_model, make_hmm_data
+from .models.logistic import logistic_regression, logistic_regression_fused, make_covtype_like
+from .models.skim import SkimHypers, make_skim_data, skim_model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def float_dtype():
+    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+
+def dtype_tag() -> str:
+    return "f64" if jax.config.jax_enable_x64 else "f32"
+
+
+def _spec(x) -> Dict[str, Any]:
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return {"dtype": str(x.dtype), "shape": list(x.shape)}
+    return {"dtype": str(jnp.asarray(x).dtype), "shape": list(jnp.shape(x))}
+
+
+def _abstract(args: Sequence[Any]) -> List[Any]:
+    return [jax.ShapeDtypeStruct(jnp.shape(a), jnp.asarray(a).dtype) for a in args]
+
+
+class Lowerer:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: List[Dict[str, Any]] = []
+
+    def lower(
+        self,
+        name: str,
+        fn: Callable,
+        example_args: Sequence[Any],
+        input_names: Sequence[str],
+        output_names: Sequence[str],
+        meta: Dict[str, Any],
+    ) -> None:
+        tag = dtype_tag()
+        fname = f"{name}_{tag}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        print(f"[aot] lowering {fname} ...", flush=True)
+        lowered = jax.jit(fn).lower(*_abstract(example_args))
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *_abstract(example_args))
+        out_list = outs if isinstance(outs, (tuple, list)) else (outs,)
+        self.entries.append(
+            {
+                "name": f"{name}_{tag}",
+                "file": fname,
+                "dtype": tag,
+                "inputs": [
+                    {"name": n, **_spec(a)} for n, a in zip(input_names, example_args)
+                ],
+                "outputs": [
+                    {"name": n, **_spec(o)} for n, o in zip(output_names, out_list)
+                ],
+                **meta,
+            }
+        )
+        print(f"[aot]   wrote {len(text)} chars", flush=True)
+
+
+NUTS_OUTPUTS = ["z_new", "accept_prob", "num_leapfrog", "potential", "diverging", "depth"]
+
+
+def param_layout(model, *args) -> List[Dict[str, Any]]:
+    """Site -> (offset, shape) in the flat unconstrained vector.
+
+    ``ravel_pytree`` flattens dicts in sorted-key order; record it so the
+    Rust side can label posterior columns."""
+    probe = mp.infer_util.get_model_trace(model, jax.random.PRNGKey(0), *args)
+    transforms = mp.infer_util.constrain_transforms(probe)
+    layout = []
+    offset = 0
+    for name in sorted(transforms):
+        site = probe[name]
+        t = transforms[name]
+        shape = t.inverse_shape(jnp.shape(site["value"]))
+        size = 1
+        for s in shape:
+            size *= s
+        layout.append(
+            {
+                "site": name,
+                "unconstrained_shape": list(shape),
+                "constrained_shape": list(jnp.shape(site["value"])),
+                "offset": offset,
+                "size": size,
+                "support": repr(site["fn"].support),
+            }
+        )
+        offset += size
+    return layout
+
+
+def lower_model_bundle(
+    lw: Lowerer,
+    model_name: str,
+    model_builder: Callable,  # (*data) -> nullary model
+    data: Tuple[Any, ...],
+    data_names: Sequence[str],
+    meta: Dict[str, Any],
+    max_tree_depth: int = 10,
+    vmap_chains: int = 0,
+) -> None:
+    """Lower potential_and_grad + nuts_step (+ vmapped variant)."""
+    fdt = float_dtype()
+    model0 = lambda: model_builder(*data)
+    _, z0, unravel, _ = mp.initialize_model(model0, jax.random.PRNGKey(0))
+    dim = z0.shape[0]
+    layout = param_layout(model0)
+    meta = {**meta, "model": model_name, "dim": dim, "param_layout": layout}
+
+    def potential(z, *d):
+        return mp.potential_energy(lambda: model_builder(*d), (), {}, unravel(z))
+
+    def potential_and_grad(z, *d):
+        return jax.value_and_grad(lambda zz: potential(zz, *d))(z)
+
+    z_ex = jnp.zeros((dim,), fdt)
+    lw.lower(
+        f"{model_name}_potential_and_grad",
+        potential_and_grad,
+        (z_ex, *data),
+        ["z", *data_names],
+        ["potential", "grad"],
+        {**meta, "kind": "potential_and_grad"},
+    )
+
+    def nuts_step(key_raw, z, step_size, inv_mass, *d):
+        key = jax.random.wrap_key_data(key_raw)
+        pg = lambda zz: jax.value_and_grad(lambda q: potential(q, *d))(zz)
+        step = build_nuts_step(pg, max_tree_depth)
+        return step(key, z, step_size, inv_mass)
+
+    key_ex = jnp.zeros((2,), jnp.uint32)
+    eps_ex = jnp.asarray(0.1, fdt)
+    mass_ex = jnp.ones((dim,), fdt)
+    lw.lower(
+        f"{model_name}_nuts_step",
+        nuts_step,
+        (key_ex, z_ex, eps_ex, mass_ex, *data),
+        ["key", "z", "step_size", "inv_mass_diag", *data_names],
+        NUTS_OUTPUTS,
+        {**meta, "kind": "nuts_step", "max_tree_depth": max_tree_depth},
+    )
+
+    if vmap_chains > 1:
+        k = vmap_chains
+        vstep = jax.vmap(
+            nuts_step, in_axes=(0, 0, 0, 0) + (None,) * len(data)
+        )
+        lw.lower(
+            f"{model_name}_nuts_step_vmap{k}",
+            vstep,
+            (
+                jnp.zeros((k, 2), jnp.uint32),
+                jnp.zeros((k, dim), fdt),
+                jnp.full((k,), 0.1, fdt),
+                jnp.ones((k, dim), fdt),
+                *data,
+            ),
+            ["keys", "zs", "step_sizes", "inv_mass_diags", *data_names],
+            NUTS_OUTPUTS,
+            {
+                **meta,
+                "kind": "nuts_step_vmap",
+                "chains": k,
+                "max_tree_depth": max_tree_depth,
+            },
+        )
+
+
+# ---------------------------------------------------------------------------
+# covtype extras: Fig 1 predictive/log-lik + Appendix D ELBO
+# ---------------------------------------------------------------------------
+
+
+def lower_covtype_extras(lw: Lowerer, x, y, num_samples: int, num_particles: int):
+    fdt = float_dtype()
+    n, d = x.shape
+
+    # Fig 1c line 5-7: vmap over posterior draws, composing handlers.
+    def predict_one(key_raw, m, b, xx):
+        key = jax.random.wrap_key_data(key_raw)
+        conditioned = mp.condition(logistic_regression, data={"m": m, "b": b})
+        return mp.seed(conditioned, rng_key=key)(xx)
+
+    def predict(keys, ms, bs, xx):
+        return jax.vmap(lambda k, m, b: predict_one(k, m, b, xx))(keys, ms, bs)
+
+    s = num_samples
+    keys_ex = jnp.zeros((s, 2), jnp.uint32)
+    ms_ex = jnp.zeros((s, d), fdt)
+    bs_ex = jnp.zeros((s,), fdt)
+    lw.lower(
+        "covtype_predict",
+        predict,
+        (keys_ex, ms_ex, bs_ex, x),
+        ["keys", "m_samples", "b_samples", "x"],
+        ["y_pred"],
+        {"model": "covtype", "kind": "predict", "num_samples": s},
+    )
+
+    def loglik_one(m, b, xx, yy):
+        tr = mp.trace(
+            mp.substitute(logistic_regression, data={"m": m, "b": b})
+        ).get_trace(xx, y=yy)
+        site = tr["y"]
+        return jnp.sum(site["fn"].log_prob(site["value"]))
+
+    def loglik(ms, bs, xx, yy):
+        return jax.vmap(lambda m, b: loglik_one(m, b, xx, yy))(ms, bs)
+
+    lw.lower(
+        "covtype_loglik",
+        loglik,
+        (ms_ex, bs_ex, x, y),
+        ["m_samples", "b_samples", "x", "y"],
+        ["log_likelihood"],
+        {"model": "covtype", "kind": "loglik", "num_samples": s},
+    )
+
+    # Appendix D: vectorized ELBO (mean-field normal guide on (m, b)).
+    def elbo_and_grad(key_raw, loc, log_scale, xx, yy):
+        key = jax.random.wrap_key_data(key_raw)
+
+        def neg_elbo(params):
+            loc_, log_scale_ = params
+            scale = jnp.exp(log_scale_)
+
+            def particle(k):
+                eps = jax.random.normal(k, loc_.shape, fdt)
+                zz = loc_ + scale * eps
+                m, b = zz[:d], zz[d]
+                logq = jnp.sum(dist.Normal(loc_, scale).log_prob(zz))
+                logp, _ = mp.log_density(
+                    logistic_regression, (xx,), {"y": yy}, {"m": m, "b": b}
+                )
+                return logp - logq
+
+            ks = jax.random.split(key, num_particles)
+            return -jnp.mean(jax.vmap(particle)(ks))
+
+        value, grads = jax.value_and_grad(neg_elbo)((loc, log_scale))
+        return -value, grads[0], grads[1]
+
+    lw.lower(
+        "covtype_elbo_and_grad",
+        elbo_and_grad,
+        (jnp.zeros((2,), jnp.uint32), jnp.zeros((d + 1,), fdt), jnp.zeros((d + 1,), fdt), x, y),
+        ["key", "loc", "log_scale", "x", "y"],
+        ["elbo", "grad_loc", "grad_log_scale"],
+        {"model": "covtype", "kind": "elbo_and_grad", "num_particles": num_particles},
+    )
+
+
+def write_manifest(out_dir: str, entries: List[Dict[str, Any]]):
+    path = os.path.join(out_dir, "manifest.json")
+    existing: List[Dict[str, Any]] = []
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f).get("entries", [])
+    merged = {e["name"]: e for e in existing}
+    for e in entries:
+        merged[e["name"]] = e
+    with open(path, "w") as f:
+        json.dump({"version": 1, "entries": sorted(merged.values(), key=lambda e: e["name"])}, f, indent=1)
+    print(f"[aot] manifest: {len(merged)} entries -> {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="hmm,covtype,covtype_small,skim",
+        help="comma list: hmm,covtype,covtype_small,skim",
+    )
+    ap.add_argument("--covtype-n", type=int, default=50_000)
+    ap.add_argument("--covtype-small-n", type=int, default=2_000)
+    ap.add_argument("--skim-p", default="25,50,100,200")
+    ap.add_argument("--skim-n", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=20191222)
+    ap.add_argument("--vmap-chains", type=int, default=4)
+    ap.add_argument(
+        "--pallas-variants",
+        action=argparse.BooleanOptionalAction,
+        default=True,
+        help="also emit *_pallas artifact variants (interpret-mode L1 "
+        "kernels end-to-end; the ablate-kernel experiment)",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    fdt = float_dtype()
+    models = args.models.split(",")
+    lw = Lowerer(args.out_dir)
+    key = jax.random.PRNGKey(args.seed)
+
+    # Kernel implementation policy (EXPERIMENTS.md §Perf): the default
+    # hot-path artifacts use the pure-jnp reference implementations,
+    # which XLA fuses into fast native loops on CPU; `*_pallas` variants
+    # carry the L1 Pallas kernels through interpret mode — numerically
+    # identical (asserted by `fugue experiment ablate-kernel` and the
+    # cross-check tests) but paying the interpreter tax on CPU.  On a
+    # real TPU the Pallas variants (without interpret) are the fast
+    # path; see DESIGN.md §6.
+    if "hmm" in models:
+        data = make_hmm_data(key)
+        hmm_meta = {
+            "seq_len": int(data.obs.shape[0]),
+            "num_supervised": int(data.sup_states.shape[0]),
+        }
+        lower_model_bundle(
+            lw,
+            "hmm",
+            lambda obs, sup: hmm_model(HmmData(obs, sup), use_kernel=False),
+            (data.obs, data.sup_states),
+            ["obs", "sup_states"],
+            {**hmm_meta, "kernel_impl": "ref"},
+            vmap_chains=args.vmap_chains,
+        )
+        if args.pallas_variants:
+            lower_model_bundle(
+                lw,
+                "hmm_pallas",
+                lambda obs, sup: hmm_model(HmmData(obs, sup), use_kernel=True),
+                (data.obs, data.sup_states),
+                ["obs", "sup_states"],
+                {**hmm_meta, "kernel_impl": "pallas"},
+            )
+
+    if "covtype" in models:
+        x, y, _ = make_covtype_like(key, n=args.covtype_n, dtype=fdt)
+        lower_model_bundle(
+            lw,
+            "covtype",
+            lambda xx, yy: logistic_regression(xx, yy),
+            (x, y),
+            ["x", "y"],
+            {"n": int(x.shape[0]), "d": int(x.shape[1]), "kernel_impl": "ref"},
+        )
+
+    if "covtype_small" in models:
+        x, y, _ = make_covtype_like(key, n=args.covtype_small_n, dtype=fdt)
+        ct_meta = {"n": int(x.shape[0]), "d": int(x.shape[1])}
+        lower_model_bundle(
+            lw,
+            "covtype_small",
+            lambda xx, yy: logistic_regression(xx, yy),
+            (x, y),
+            ["x", "y"],
+            {**ct_meta, "kernel_impl": "ref"},
+            vmap_chains=args.vmap_chains,
+        )
+        if args.pallas_variants:
+            lower_model_bundle(
+                lw,
+                "covtype_small_pallas",
+                lambda xx, yy: logistic_regression_fused(xx, yy),
+                (x, y),
+                ["x", "y"],
+                {**ct_meta, "kernel_impl": "pallas"},
+            )
+        lower_covtype_extras(lw, x, y, num_samples=100, num_particles=8)
+
+    if "skim" in models:
+        for p in [int(s) for s in args.skim_p.split(",")]:
+            xs, ys, _, _ = make_skim_data(key, n=args.skim_n, p=p, dtype=fdt)
+            lower_model_bundle(
+                lw,
+                f"skim_p{p}",
+                lambda xx, yy: skim_model(xx, yy, use_kernel=False),
+                (xs, ys),
+                ["x", "y"],
+                {"n": int(xs.shape[0]), "p": p, "kernel_impl": "ref"},
+            )
+        if args.pallas_variants:
+            p = int(args.skim_p.split(",")[0])
+            xs, ys, _, _ = make_skim_data(key, n=args.skim_n, p=p, dtype=fdt)
+            lower_model_bundle(
+                lw,
+                f"skim_p{p}_pallas",
+                lambda xx, yy: skim_model(xx, yy, use_kernel=True),
+                (xs, ys),
+                ["x", "y"],
+                {"n": int(xs.shape[0]), "p": p, "kernel_impl": "pallas"},
+            )
+
+    write_manifest(args.out_dir, lw.entries)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""HMC building blocks shared by the iterative NUTS step.
+
+Pure-and-statically-composed functions (§3): the leapfrog integrator
+(with the in-graph gradient the paper highlights — ``jit`` composes with
+``grad``), kinetic energy under a diagonal mass matrix, the U-turn
+criterion, and the bit-twiddling helpers of Appendix A's
+ITERATIVEBUILDTREE (candidate-set C(n) via trailing-ones masking).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class IntegratorState(NamedTuple):
+    z: jax.Array  # position (D,)
+    r: jax.Array  # momentum (D,)
+    potential: jax.Array  # U(z), scalar
+    grad: jax.Array  # dU/dz (D,)
+
+
+def velocity_verlet(
+    potential_and_grad: Callable[[jax.Array], Tuple[jax.Array, jax.Array]],
+    state: IntegratorState,
+    step_size: jax.Array,
+    inv_mass_diag: jax.Array,
+) -> IntegratorState:
+    """One leapfrog step of the velocity-Verlet integrator.
+
+    The gradient evaluation here is what Pyro pays a Python dispatch for
+    on every call and what the fully-compiled step fuses away (§3.1).
+    """
+    z, r, _, grad = state
+    r_half = r - 0.5 * step_size * grad
+    z_new = z + step_size * (inv_mass_diag * r_half)
+    potential_new, grad_new = potential_and_grad(z_new)
+    r_new = r_half - 0.5 * step_size * grad_new
+    return IntegratorState(z_new, r_new, potential_new, grad_new)
+
+
+def kinetic_energy(r: jax.Array, inv_mass_diag: jax.Array) -> jax.Array:
+    """K(r) = 0.5 r^T M^{-1} r for diagonal M."""
+    return 0.5 * jnp.sum(inv_mass_diag * r * r)
+
+
+def is_u_turn(
+    z_left: jax.Array,
+    z_right: jax.Array,
+    r_left: jax.Array,
+    r_right: jax.Array,
+    inv_mass_diag: jax.Array,
+) -> jax.Array:
+    """Hoffman-Gelman termination criterion on a (sub)trajectory: the
+    velocity at either end points back across the chord."""
+    dz = z_right - z_left
+    return (jnp.dot(dz, inv_mass_diag * r_left) <= 0) | (
+        jnp.dot(dz, inv_mass_diag * r_right) <= 0
+    )
+
+
+# ---------------------------------------------------------------------------
+# Appendix A bit-twiddling: candidate set C(n)
+# ---------------------------------------------------------------------------
+
+
+def bit_count(n: jax.Array) -> jax.Array:
+    """Population count (index into the even-node storage S)."""
+    return jax.lax.population_count(n.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def trailing_ones(n: jax.Array) -> jax.Array:
+    """Number of trailing contiguous 1 bits of n = |C(n)|: the number of
+    balanced subtrees for which node n is the rightmost leaf."""
+    n = n.astype(jnp.uint32)
+    return (jax.lax.population_count(n ^ (n + 1)) - 1).astype(jnp.int32)
+
+
+def candidate_range(n: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Storage-index range [i_min, i_max] of C(n) inside S for odd n
+    (Appendix A): i_max = BitCount(n-1); i_min = i_max - TrailingOnes(n) + 1."""
+    i_max = bit_count(n - 1)
+    i_min = i_max - trailing_ones(n) + 1
+    return i_min, i_max
+
+
+# ---------------------------------------------------------------------------
+# Warmup adaptation primitives (also implemented on the Rust side; kept
+# here so pure-python inference works end-to-end and for cross-testing)
+# ---------------------------------------------------------------------------
+
+
+class DualAverageState(NamedTuple):
+    log_step: jax.Array
+    log_step_avg: jax.Array
+    grad_sum: jax.Array
+    t: jax.Array
+    mu: jax.Array
+
+
+def dual_average_init(step_size: float) -> DualAverageState:
+    z = jnp.zeros(())
+    return DualAverageState(
+        jnp.log(jnp.asarray(step_size)),
+        jnp.zeros(()),
+        z,
+        jnp.zeros(()),
+        jnp.log(10.0 * jnp.asarray(step_size)),
+    )
+
+
+def dual_average_update(
+    state: DualAverageState,
+    accept_prob: jax.Array,
+    target: float = 0.8,
+    gamma: float = 0.05,
+    t0: float = 10.0,
+    kappa: float = 0.75,
+) -> DualAverageState:
+    """Nesterov dual averaging on log step size (Hoffman-Gelman §3.2)."""
+    log_step, log_step_avg, grad_sum, t, mu = state
+    t = t + 1.0
+    grad_sum = grad_sum + (target - accept_prob)
+    # x_{t+1} = mu - sqrt(t)/gamma * (1/(t+t0)) * sum_i (delta - alpha_i)
+    log_step = mu - jnp.sqrt(t) / gamma * grad_sum / (t + t0)
+    eta = t ** (-kappa)
+    log_step_avg = eta * log_step + (1.0 - eta) * log_step_avg
+    return DualAverageState(log_step, log_step_avg, grad_sum, t, mu)
+
+
+class WelfordState(NamedTuple):
+    mean: jax.Array
+    m2: jax.Array
+    count: jax.Array
+
+
+def welford_init(dim: int, dtype=jnp.float32) -> WelfordState:
+    return WelfordState(
+        jnp.zeros((dim,), dtype), jnp.zeros((dim,), dtype), jnp.zeros((), dtype)
+    )
+
+
+def welford_update(state: WelfordState, x: jax.Array) -> WelfordState:
+    mean, m2, count = state
+    count = count + 1.0
+    delta = x - mean
+    mean = mean + delta / count
+    m2 = m2 + delta * (x - mean)
+    return WelfordState(mean, m2, count)
+
+
+def welford_variance(state: WelfordState, regularize: bool = True) -> jax.Array:
+    """Sample variance, with Stan's shrinkage toward unit scale."""
+    var = state.m2 / jnp.maximum(state.count - 1.0, 1.0)
+    if regularize:
+        n = state.count
+        var = (n / (n + 5.0)) * var + 1e-3 * (5.0 / (n + 5.0))
+    return var

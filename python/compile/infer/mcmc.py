@@ -1,0 +1,132 @@
+"""Pure-python MCMC driver over the compiled NUTS step.
+
+This mirrors (and cross-validates) the Rust coordinator's chain loop:
+Stan-style warmup schedule — fast dual-averaging intervals around slow
+Welford mass-matrix windows — followed by sampling.  At build time it is
+used by the test-suite to check statistical correctness of the in-graph
+NUTS step; at run time the same logic lives in
+``rust/src/coordinator/warmup.rs``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hmc_util import (
+    dual_average_init,
+    dual_average_update,
+    welford_init,
+    welford_update,
+    welford_variance,
+)
+from .nuts import build_nuts_step
+
+
+class WarmupSchedule(NamedTuple):
+    """Stan's three-phase warmup: initial fast interval, doubling slow
+    windows (mass-matrix estimation), terminal fast interval."""
+
+    initial_fast: int
+    slow_windows: list
+    terminal_fast: int
+
+    @staticmethod
+    def build(num_warmup: int) -> "WarmupSchedule":
+        if num_warmup < 20:
+            return WarmupSchedule(num_warmup, [], 0)
+        initial = max(int(0.15 * num_warmup), 10)
+        terminal = max(int(0.10 * num_warmup), 10)
+        slow_total = num_warmup - initial - terminal
+        windows = []
+        w = 25
+        remaining = slow_total
+        while remaining > 0:
+            if remaining >= 3 * w:
+                windows.append(w)
+                remaining -= w
+                w *= 2
+            else:
+                windows.append(remaining)
+                remaining = 0
+        return WarmupSchedule(initial, windows, terminal)
+
+
+def run_nuts(
+    potential_fn: Callable,
+    init_z: jax.Array,
+    rng_key: jax.Array,
+    num_warmup: int = 500,
+    num_samples: int = 500,
+    max_tree_depth: int = 10,
+    init_step_size: float = 1.0,
+    target_accept: float = 0.8,
+    fixed_step_size: Optional[float] = None,
+) -> Dict[str, np.ndarray]:
+    """Run one NUTS chain; returns samples plus per-draw stats."""
+    value_and_grad = jax.value_and_grad(potential_fn)
+    step = jax.jit(build_nuts_step(lambda z: value_and_grad(z), max_tree_depth))
+    dim = init_z.shape[0]
+    dtype = init_z.dtype
+
+    z = init_z
+    inv_mass = jnp.ones((dim,), dtype)
+    da = dual_average_init(init_step_size if fixed_step_size is None else fixed_step_size)
+    step_size = jnp.exp(da.log_step)
+    if fixed_step_size is not None:
+        step_size = jnp.asarray(fixed_step_size, dtype)
+
+    schedule = WarmupSchedule.build(num_warmup)
+    # window boundaries in warmup iterations
+    boundaries = []
+    pos = schedule.initial_fast
+    for w in schedule.slow_windows:
+        pos += w
+        boundaries.append(pos)
+    slow_start = schedule.initial_fast
+    slow_end = num_warmup - schedule.terminal_fast
+
+    welford = welford_init(dim, dtype)
+    keys = jax.random.split(rng_key, num_warmup + num_samples)
+
+    samples = np.empty((num_samples, dim), np.float64)
+    stats = {
+        "accept_prob": np.empty(num_warmup + num_samples),
+        "num_leapfrog": np.empty(num_warmup + num_samples, np.int64),
+        "potential": np.empty(num_warmup + num_samples),
+        "diverging": np.empty(num_warmup + num_samples, bool),
+        "depth": np.empty(num_warmup + num_samples, np.int64),
+    }
+
+    for i in range(num_warmup + num_samples):
+        z, accept, n_lf, pot, div, depth = step(keys[i], z, step_size, inv_mass)
+        stats["accept_prob"][i] = float(accept)
+        stats["num_leapfrog"][i] = int(n_lf)
+        stats["potential"][i] = float(pot)
+        stats["diverging"][i] = bool(div)
+        stats["depth"][i] = int(depth)
+
+        if i < num_warmup:
+            if fixed_step_size is None:
+                da = dual_average_update(da, accept, target=target_accept)
+                step_size = jnp.exp(da.log_step)
+            if slow_start <= i < slow_end:
+                welford = welford_update(welford, z)
+                if (i - slow_start + 1) in [
+                    b - slow_start for b in boundaries
+                ] or i == slow_end - 1:
+                    # close the slow window: refresh mass matrix, reset
+                    inv_mass = welford_variance(welford).astype(dtype)
+                    welford = welford_init(dim, dtype)
+                    if fixed_step_size is None:
+                        da = dual_average_init(float(jnp.exp(da.log_step_avg)))
+                        step_size = jnp.exp(da.log_step)
+            if i == num_warmup - 1 and fixed_step_size is None:
+                step_size = jnp.exp(da.log_step_avg)
+        else:
+            samples[i - num_warmup] = np.asarray(z, np.float64)
+
+    return {"samples": samples, "step_size": float(step_size), "inv_mass": np.asarray(inv_mass), **stats}

@@ -1,0 +1,338 @@
+"""Iterative No-U-Turn Sampler — the paper's §3.1 / Appendix A.
+
+The recursive ``BuildTree`` of Hoffman & Gelman (Algorithm 1) cannot be
+traced by JAX (recursion + data-dependent control flow).  This module
+implements ITERATIVEBUILDTREE (Algorithm 2): the 2^d leapfrog steps of a
+trajectory doubling run inside a ``lax.while_loop``; even-numbered nodes
+are stored at ``S[BitCount(n)]`` (so |S| = max tree depth, preserving the
+O(log N) memory of the recursion); at odd nodes the U-turn condition is
+checked against the candidate set C(n) obtained by progressively masking
+trailing 1-bits of n.
+
+The full transition kernel ``build_nuts_step`` — momentum refresh,
+trajectory doubling with multinomial proposal sampling, divergence
+checks, acceptance statistics — is one pure function of
+``(rng_key, z, step_size, inverse mass)`` and therefore JIT-compiles
+end-to-end into a single XLA executable, which is the paper's headline
+(Table 2a).  Step size and mass matrix are *inputs*, so the Rust
+coordinator performs warmup adaptation between calls without recompiling.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .hmc_util import (
+    IntegratorState,
+    bit_count,
+    candidate_range,
+    is_u_turn,
+    kinetic_energy,
+    velocity_verlet,
+)
+
+MAX_DELTA_ENERGY = 1000.0  # divergence threshold, as in NumPyro/Stan
+
+
+class TreeState(NamedTuple):
+    """State of the trajectory being built (both edges + proposal)."""
+
+    z_left: jax.Array
+    r_left: jax.Array
+    grad_left: jax.Array
+    z_right: jax.Array
+    r_right: jax.Array
+    grad_right: jax.Array
+    z_proposal: jax.Array
+    potential_proposal: jax.Array
+    depth: jax.Array
+    weight: jax.Array  # log sum of exp(-energy) over leaves
+    turning: jax.Array
+    diverging: jax.Array
+    sum_accept_prob: jax.Array
+    num_leapfrog: jax.Array
+    r_sum: jax.Array  # sum of leaf momenta (generalized U-turn)
+
+
+class _SubtreeCarry(NamedTuple):
+    n: jax.Array  # leaf counter within this subtree (0-based)
+    state: IntegratorState
+    s_z: jax.Array  # (max_depth, D) even-node positions
+    s_r: jax.Array  # (max_depth, D) even-node momenta
+    z_first: jax.Array  # leftmost leaf of this subtree (S[0] in Alg. 2)
+    r_first: jax.Array
+    grad_first: jax.Array
+    z_prop: jax.Array
+    u_prop: jax.Array  # potential at proposal
+    weight: jax.Array
+    turning: jax.Array
+    diverging: jax.Array
+    sum_accept: jax.Array
+    r_sum: jax.Array
+    key: jax.Array
+
+
+def _uturn_against_candidates(
+    s_z, s_r, z, r, inv_mass_diag, i_min, i_max, going_right
+) -> jax.Array:
+    """Vectorized check of IsUTurn(S[k], z) for k in [i_min, i_max]
+    (Algorithm 2's inner loop), other rows masked out.
+
+    The criterion is orientation-sensitive: the chord must run from the
+    *time-earlier* end to the *time-later* end.  Candidates precede node
+    n in integration order, so for a forward subtree the chord is
+    z - S[k]; for a backward subtree (negative step size) node n is the
+    time-earlier end and the chord flips (this mirrors the eps-sign
+    branch in rust/src/mcmc/nuts_iterative.rs)."""
+    max_depth = s_z.shape[0]
+    ks = jnp.arange(max_depth)
+    active = (ks >= i_min) & (ks <= i_max)
+    dz = z[None, :] - s_z  # (max_depth, D), candidate -> n
+    dz = jnp.where(going_right, dz, -dz)  # time order
+    vleft = jnp.einsum("kd,kd->k", dz, inv_mass_diag[None, :] * s_r)
+    vright = dz @ (inv_mass_diag * r)
+    turning = (vleft <= 0) | (vright <= 0)
+    return jnp.any(turning & active)
+
+
+def iterative_build_subtree(
+    potential_and_grad: Callable,
+    key: jax.Array,
+    initial: IntegratorState,
+    depth: jax.Array,
+    step_size: jax.Array,  # signed: direction folded in
+    inv_mass_diag: jax.Array,
+    energy_0: jax.Array,
+    max_depth: int,
+):
+    """Run up to 2^depth leapfrog steps (Algorithm 2), with early exit on
+    U-turn or divergence.  Returns the subtree summary used by the outer
+    doubling loop."""
+    dim = initial.z.shape[0]
+    dtype = initial.z.dtype
+    num_leaves = jnp.asarray(1, jnp.int32) << depth
+
+    carry = _SubtreeCarry(
+        n=jnp.zeros((), jnp.int32),
+        state=initial,
+        s_z=jnp.zeros((max_depth, dim), dtype),
+        s_r=jnp.zeros((max_depth, dim), dtype),
+        z_first=initial.z,
+        r_first=initial.r,
+        grad_first=initial.grad,
+        z_prop=initial.z,
+        u_prop=initial.potential,
+        weight=jnp.asarray(-jnp.inf, dtype),
+        turning=jnp.zeros((), bool),
+        diverging=jnp.zeros((), bool),
+        sum_accept=jnp.zeros((), dtype),
+        r_sum=jnp.zeros((dim,), dtype),
+        key=key,
+    )
+
+    def cond(c: _SubtreeCarry):
+        return (c.n < num_leaves) & ~c.turning & ~c.diverging
+
+    def body(c: _SubtreeCarry):
+        state = velocity_verlet(potential_and_grad, c.state, step_size, inv_mass_diag)
+        energy = state.potential + kinetic_energy(state.r, inv_mass_diag)
+        energy = jnp.where(jnp.isnan(energy), jnp.inf, energy)
+        delta = energy - energy_0
+        diverging = delta > MAX_DELTA_ENERGY
+        # acceptance statistic (per-leaf MH ratio vs initial energy)
+        accept = jnp.minimum(1.0, jnp.exp(-delta)).astype(c.sum_accept.dtype)
+
+        # multinomial progressive sampling within the subtree:
+        # leaf weight = -energy (relative weights exp(-H))
+        leaf_w = (-energy).astype(c.weight.dtype)
+        new_weight = jnp.logaddexp(c.weight, leaf_w)
+        key, sub = jax.random.split(c.key)
+        take_new = jax.random.uniform(sub, dtype=c.weight.dtype) < jnp.exp(
+            leaf_w - new_weight
+        )
+        z_prop = jnp.where(take_new, state.z, c.z_prop)
+        u_prop = jnp.where(take_new, state.potential, c.u_prop)
+
+        # remember the subtree's leftmost leaf (n == 0) — Alg. 2's S[0]
+        first = c.n == 0
+        z_first = jnp.where(first, state.z, c.z_first)
+        r_first = jnp.where(first, state.r, c.r_first)
+        grad_first = jnp.where(first, state.grad, c.grad_first)
+
+        n = c.n
+        is_even = (n % 2) == 0
+        # even: store node at S[BitCount(n)]
+        idx = bit_count(n)
+        s_z = jnp.where(
+            is_even,
+            c.s_z.at[idx].set(state.z),
+            c.s_z,
+        )
+        s_r = jnp.where(
+            is_even,
+            c.s_r.at[idx].set(state.r),
+            c.s_r,
+        )
+        # odd: U-turn check against candidate rows of S
+        i_min, i_max = candidate_range(n)
+        turning_odd = _uturn_against_candidates(
+            c.s_z, c.s_r, state.z, state.r, inv_mass_diag, i_min, i_max,
+            step_size > 0,
+        )
+        turning = jnp.where(is_even, c.turning, turning_odd)
+
+        return _SubtreeCarry(
+            n=n + 1,
+            state=state,
+            s_z=s_z,
+            s_r=s_r,
+            z_first=z_first,
+            r_first=r_first,
+            grad_first=grad_first,
+            z_prop=z_prop,
+            u_prop=u_prop,
+            weight=new_weight,
+            turning=turning,
+            diverging=diverging,
+            sum_accept=c.sum_accept + accept,
+            r_sum=c.r_sum + state.r,
+            key=key,
+        )
+
+    out = jax.lax.while_loop(cond, body, carry)
+    return out
+
+
+def build_nuts_step(
+    potential_and_grad: Callable[[jax.Array], Tuple[jax.Array, jax.Array]],
+    max_tree_depth: int = 10,
+):
+    """Return ``nuts_step(key, z, step_size, inv_mass_diag)``: one NUTS
+    transition as a single pure function (end-to-end jittable).
+
+    Output: ``(z_new, accept_prob, num_leapfrog, potential_new,
+    diverging, tree_depth)``.
+    """
+
+    def nuts_step(key, z, step_size, inv_mass_diag):
+        dtype = z.dtype
+        dim = z.shape[0]
+        key_mom, key_loop = jax.random.split(key)
+
+        potential_0, grad_0 = potential_and_grad(z)
+        # momentum refresh: r ~ N(0, M), M = diag(1/inv_mass)
+        eps = jax.random.normal(key_mom, (dim,), dtype)
+        r0 = eps / jnp.sqrt(inv_mass_diag)
+        energy_0 = potential_0 + kinetic_energy(r0, inv_mass_diag)
+
+        init = TreeState(
+            z_left=z,
+            r_left=r0,
+            grad_left=grad_0,
+            z_right=z,
+            r_right=r0,
+            grad_right=grad_0,
+            z_proposal=z,
+            potential_proposal=potential_0,
+            depth=jnp.zeros((), jnp.int32),
+            weight=(-energy_0).astype(dtype),
+            turning=jnp.zeros((), bool),
+            diverging=jnp.zeros((), bool),
+            sum_accept_prob=jnp.zeros((), dtype),
+            num_leapfrog=jnp.zeros((), jnp.int32),
+            r_sum=r0,
+        )
+
+        def cond(val):
+            tree, _ = val
+            return (tree.depth < max_tree_depth) & ~tree.turning & ~tree.diverging
+
+        def body(val):
+            tree, key = val
+            key, key_dir, key_subtree, key_accept = jax.random.split(key, 4)
+            going_right = jax.random.bernoulli(key_dir)
+            signed_eps = jnp.where(going_right, step_size, -step_size).astype(dtype)
+
+            edge = IntegratorState(
+                z=jnp.where(going_right, tree.z_right, tree.z_left),
+                r=jnp.where(going_right, tree.r_right, tree.r_left),
+                potential=jnp.zeros((), dtype),  # unused by the integrator
+                grad=jnp.where(going_right, tree.grad_right, tree.grad_left),
+            )
+            sub = iterative_build_subtree(
+                potential_and_grad,
+                key_subtree,
+                edge,
+                tree.depth,
+                signed_eps,
+                inv_mass_diag,
+                energy_0,
+                max_tree_depth,
+            )
+
+            # new outer edge = last state reached in the subtree
+            z_left = jnp.where(going_right, tree.z_left, sub.state.z)
+            r_left = jnp.where(going_right, tree.r_left, sub.state.r)
+            grad_left = jnp.where(going_right, tree.grad_left, sub.state.grad)
+            z_right = jnp.where(going_right, sub.state.z, tree.z_right)
+            r_right = jnp.where(going_right, sub.state.r, tree.r_right)
+            grad_right = jnp.where(going_right, sub.state.grad, tree.grad_right)
+
+            subtree_complete = ~sub.turning & ~sub.diverging
+
+            # biased progressive sampling across subtrees (NumPyro/Stan):
+            # accept the subtree's proposal with prob min(1, w_sub / w_tree)
+            log_ratio = sub.weight - tree.weight
+            take_new = subtree_complete & (
+                jnp.log(jax.random.uniform(key_accept, dtype=tree.weight.dtype))
+                < log_ratio
+            )
+            z_proposal = jnp.where(take_new, sub.z_prop, tree.z_proposal)
+            potential_proposal = jnp.where(
+                take_new, sub.u_prop, tree.potential_proposal
+            )
+            weight = jnp.logaddexp(tree.weight, sub.weight)
+
+            # U-turn across the merged tree (only meaningful if the new
+            # subtree completed). Uses the full-trajectory endpoints.
+            r_sum = tree.r_sum + sub.r_sum
+            turning_merged = is_u_turn(z_left, z_right, r_left, r_right, inv_mass_diag)
+            turning = sub.turning | (subtree_complete & turning_merged)
+
+            new_tree = TreeState(
+                z_left=z_left,
+                r_left=r_left,
+                grad_left=grad_left,
+                z_right=z_right,
+                r_right=r_right,
+                grad_right=grad_right,
+                z_proposal=z_proposal,
+                potential_proposal=potential_proposal,
+                depth=tree.depth + 1,
+                weight=weight,
+                turning=turning,
+                diverging=sub.diverging,
+                sum_accept_prob=tree.sum_accept_prob + sub.sum_accept,
+                num_leapfrog=tree.num_leapfrog + sub.n,
+                r_sum=r_sum,
+            )
+            return new_tree, key
+
+        tree, _ = jax.lax.while_loop(cond, body, (init, key_loop))
+
+        accept_prob = tree.sum_accept_prob / jnp.maximum(
+            tree.num_leapfrog.astype(dtype), 1.0
+        )
+        return (
+            tree.z_proposal,
+            accept_prob,
+            tree.num_leapfrog,
+            tree.potential_proposal,
+            tree.diverging,
+            tree.depth,
+        )
+
+    return nuts_step

@@ -1,0 +1,81 @@
+"""Index-level oracles for the tree-building algorithms (test-only).
+
+The correctness core of Appendix A is *which* U-turn checks the iterative
+algorithm performs and *what* the storage array S contains when it
+performs them.  These oracles replay both algorithms over abstract leaf
+indices (no dynamics), so the test suite can assert:
+
+* RECURSIVEBUILDTREE (Algorithm 1) checks exactly the pairs
+  (leftmost leaf, rightmost leaf) of every balanced subtree;
+* ITERATIVEBUILDTREE (Algorithm 2) checks, at every odd node n, the pairs
+  (m, n) for m in C(n) — trailing 1-bits of n progressively masked;
+* the S-array indexing scheme S[BitCount(k)] really does hold the needed
+  candidate node when it is needed (the memory-efficiency claim).
+"""
+
+from __future__ import annotations
+
+from typing import List, Set, Tuple
+
+
+def bit_count(n: int) -> int:
+    return bin(n).count("1")
+
+
+def trailing_ones(n: int) -> int:
+    count = 0
+    while n & 1:
+        count += 1
+        n >>= 1
+    return count
+
+
+def candidate_set(n: int) -> List[int]:
+    """C(n) per Appendix A: progressively mask trailing contiguous 1s.
+
+    e.g. n=11=(1011): C = {(1010), (1000)} = {10, 8}."""
+    out = []
+    m = n
+    for _ in range(trailing_ones(n)):
+        # clear the lowest set bit (each clears one trailing 1)
+        m = m & (m - 1)
+        out.append(m)
+    return out
+
+
+def recursive_checks(base: int, depth: int) -> List[Tuple[int, int]]:
+    """U-turn check pairs (left leaf, right leaf) performed by Algorithm 1
+    on a tree of 2**depth leaves starting at ``base`` (no early exit)."""
+    if depth == 0:
+        return []
+    half = 1 << (depth - 1)
+    checks = recursive_checks(base, depth - 1)
+    checks += recursive_checks(base + half, depth - 1)
+    checks.append((base, base + (1 << depth) - 1))
+    return checks
+
+
+def iterative_checks(depth: int) -> List[Tuple[int, int]]:
+    """U-turn check pairs performed by Algorithm 2 over 2**depth leaves
+    (no early exit), *via the S-array mechanism*: at odd n, pairs
+    (S[k], n) for k in [i_min, i_max].
+
+    Raises AssertionError if S does not contain the candidate-set node it
+    is supposed to (the memory-correctness claim of Appendix A)."""
+    max_size = max(depth, 1)
+    storage = [None] * max_size  # S[i] = even node index with bitcount i
+    checks: List[Tuple[int, int]] = []
+    for n in range(1 << depth):
+        if n % 2 == 0:
+            storage[bit_count(n)] = n
+        else:
+            expected = candidate_set(n)
+            i_max = bit_count(n - 1)
+            i_min = i_max - trailing_ones(n) + 1
+            got = [storage[k] for k in range(i_min, i_max + 1)]
+            assert sorted(x for x in got if x is not None) == sorted(expected), (
+                f"S-array mismatch at n={n}: got {got}, expected {expected}"
+            )
+            for m in got:
+                checks.append((m, n))
+    return checks

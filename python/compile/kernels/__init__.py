@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels (interpret mode on CPU; see DESIGN.md §6 for
+the TPU mapping) plus the pure-jnp oracle in :mod:`ref`."""
+
+from . import ref
+from .hmm_forward import hmm_forward
+from .logistic_loglik import logistic_loglik
+from .skim_kernel import skim_kernel_matrix
+
+__all__ = ["hmm_forward", "logistic_loglik", "ref", "skim_kernel_matrix"]

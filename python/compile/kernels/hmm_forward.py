@@ -1,0 +1,91 @@
+"""HMM forward-algorithm Pallas kernel.
+
+The hot-spot of the paper's HMM benchmark (Table 2a, E1): the log-space
+forward recursion
+
+    alpha_t = logsumexp(alpha_{t-1}[:, None] + log_A, axis=0) + log_B[:, y_t]
+
+is strictly sequential in t, so the kernel runs a grid of T steps and
+carries ``alpha`` in the *output ref* (its index map is constant, so the
+block persists in VMEM across the sequential TPU grid — the canonical
+carry/accumulator pattern).  The entire working set (alpha: K floats,
+log_A: KxK, log_B: KxV) lives in VMEM for the whole recursion; on TPU
+this kernel would never touch HBM inside the loop, which is exactly the
+fusion the paper credits XLA with on GPU.
+
+Differentiation: the backward recursion needs all intermediate alphas,
+which the O(K)-memory forward kernel deliberately does not keep.  The
+custom VJP therefore recomputes via the pure-jnp scan oracle
+(``ref.hmm_forward``) and differentiates that — the standard
+recompute-on-backward (checkpointing) trade, documented in DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _fwd_kernel(log_a_ref, log_b_ref, obs_ref, alpha0_ref, alpha_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        alpha_ref[...] = alpha0_ref[...]
+
+    alpha = alpha_ref[...]  # (1, K) carry from previous grid step
+    log_a = log_a_ref[...]  # (K, K)
+    scores = alpha.T + log_a  # (K, K): scores[i, j] = alpha_i + log_a[i, j]
+    m = jnp.max(scores, axis=0)
+    new_alpha = m + jnp.log(jnp.sum(jnp.exp(scores - m[None, :]), axis=0))
+    y_t = obs_ref[0]
+    alpha_ref[...] = (new_alpha + log_b_ref[:, y_t])[None, :]
+
+
+def _hmm_forward_impl(log_a, log_b, obs, alpha0):
+    k, v = log_b.shape
+    t_len = obs.shape[0]
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=(t_len,),
+        in_specs=[
+            pl.BlockSpec((k, k), lambda t: (0, 0)),
+            pl.BlockSpec((k, v), lambda t: (0, 0)),
+            pl.BlockSpec((1,), lambda t: (t,)),
+            pl.BlockSpec((1, k), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, k), log_a.dtype),
+        interpret=True,  # CPU-PJRT execution; real TPU would drop this.
+    )(log_a, log_b, obs, alpha0[None, :])
+    return out[0]
+
+
+@jax.custom_vjp
+def hmm_forward(log_a, log_b, obs, alpha0):
+    """Final log forward vector ``alpha_T``; marginal log-likelihood is
+    ``logsumexp(alpha_T)``.  Differentiable wrt ``log_a``/``log_b``/
+    ``alpha0`` (recompute-on-backward via the jnp oracle)."""
+    return _hmm_forward_impl(log_a, log_b, obs, alpha0)
+
+
+def _vjp_fwd(log_a, log_b, obs, alpha0):
+    return _hmm_forward_impl(log_a, log_b, obs, alpha0), (log_a, log_b, obs, alpha0)
+
+
+def _vjp_bwd(res, ct):
+    log_a, log_b, obs, alpha0 = res
+    _, vjp = jax.vjp(lambda a, b, z: ref.hmm_forward(a, b, obs, z), log_a, log_b, alpha0)
+    g_a, g_b, g_alpha0 = vjp(ct)
+    # integer observations take a float0 (symbolic zero) cotangent
+    g_obs = np.zeros(obs.shape, dtype=jax.dtypes.float0)
+    return g_a, g_b, g_obs, g_alpha0
+
+
+hmm_forward.defvjp(_vjp_fwd, _vjp_bwd)

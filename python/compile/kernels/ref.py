@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal: pytest + hypothesis sweep shapes
+and dtypes asserting ``kernel(x) ≈ ref(x)`` (and the same for gradients,
+via the custom VJPs).  They are also the implementations used on the
+backward pass where a hand-written backward kernel is not warranted (see
+each kernel module's docstring).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import logsumexp
+
+
+def logistic_loglik(x, w, b, y):
+    """Bernoulli-logit log-likelihood: sum_i y_i z_i - softplus(z_i),
+    z = x @ w + b."""
+    z = x @ w + b
+    return jnp.sum(y * z - jax.nn.softplus(z))
+
+
+def logistic_loglik_grad(x, w, b, y):
+    """Closed-form gradient wrt (w, b): r = y - sigmoid(z)."""
+    z = x @ w + b
+    r = y - jax.nn.sigmoid(z)
+    return x.T @ r, jnp.sum(r)
+
+
+def hmm_forward(log_a, log_b, obs, alpha0):
+    """Forward algorithm in log space.
+
+    ``log_a[i, j] = log p(s_t = j | s_{t-1} = i)``;
+    ``log_b[k, v] = log p(y = v | s = k)``; returns the final log
+    forward vector ``alpha_T`` (marginal log-lik = logsumexp(alpha_T)).
+    """
+
+    def step(alpha, y_t):
+        alpha = logsumexp(alpha[:, None] + log_a, axis=0) + log_b[:, y_t]
+        return alpha, None
+
+    alpha_t, _ = jax.lax.scan(step, alpha0, obs)
+    return alpha_t
+
+
+def skim_kernel_matrix(k_x, eta1sq, eta2sq, csq):
+    """SKIM pairwise-interaction kernel (Agrawal et al. 2019, as used in
+    the paper's Fig 2b benchmark): with G = kX kX^T and G2 = kX^2 (kX^2)^T,
+
+        K = 0.5 eta2^2 (1 + G)^2 - 0.5 eta2^2 G2
+            + (eta1^2 - eta2^2) G + (c^2 - 0.5 eta2^2)
+    """
+    gram = k_x @ k_x.T
+    gram2 = jnp.square(k_x) @ jnp.square(k_x).T
+    return (
+        0.5 * eta2sq * jnp.square(1.0 + gram)
+        - 0.5 * eta2sq * gram2
+        + (eta1sq - eta2sq) * gram
+        + (csq - 0.5 * eta2sq)
+    )

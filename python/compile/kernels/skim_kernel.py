@@ -1,0 +1,91 @@
+"""SKIM pairwise-interaction kernel-matrix Pallas kernel.
+
+Hot-spot of the paper's Fig 2b benchmark (E3): the N x N Gram-style
+kernel of the "kernel interaction trick" (Agrawal et al. 2019),
+
+    K = 0.5*eta2sq*(1 + G)^2 - 0.5*eta2sq*G2 + (eta1sq - eta2sq)*G
+        + (csq - 0.5*eta2sq),
+    G  = kX kX^T,   G2 = kX^2 (kX^2)^T,   kX = kappa * X.
+
+TPU mapping: the grid tiles the output into (BLOCK, BLOCK) MXU-sized
+blocks; each step streams the (BLOCK, p) row-strips of kX for its block
+row/column into VMEM, computes both Gram contractions on the MXU (two
+(BLOCK x p) x (p x BLOCK) matmuls), and fuses the degree-2 polynomial
+elementwise on the VPU — this replaces the GPU version's shared-memory
+tiling (DESIGN.md §6).  For Fig 2b sizes (N=200, p<=512) a whole
+(128, p) strip is ~256 KiB in f32, comfortably inside VMEM.
+
+Backward: the VJP of K wrt (kX, scalars) is again two matmuls; it is
+derived from the jnp oracle (cost symmetric to forward, fully fusable by
+XLA), keeping the hand-written kernel budget on the forward path that
+dominates the NUTS leapfrog.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK = 128
+
+
+def _kernel(kx_row_ref, kx_col_ref, consts_ref, o_ref):
+    kx_r = kx_row_ref[...]  # (block, p)
+    kx_c = kx_col_ref[...]  # (block, p)
+    eta1sq = consts_ref[0]
+    eta2sq = consts_ref[1]
+    csq = consts_ref[2]
+    gram = kx_r @ kx_c.T  # MXU
+    gram2 = jnp.square(kx_r) @ jnp.square(kx_c).T  # MXU
+    o_ref[...] = (
+        0.5 * eta2sq * jnp.square(1.0 + gram)
+        - 0.5 * eta2sq * gram2
+        + (eta1sq - eta2sq) * gram
+        + (csq - 0.5 * eta2sq)
+    )
+
+
+def _skim_impl(k_x, eta1sq, eta2sq, csq, *, block: int):
+    n, p = k_x.shape
+    pad = (-n) % block
+    kxp = jnp.pad(k_x, ((0, pad), (0, 0))) if pad else k_x
+    np_ = kxp.shape[0]
+    consts = jnp.stack([eta1sq, eta2sq, csq]).astype(k_x.dtype)
+    grid = (np_ // block, np_ // block)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, p), lambda i, j: (j, 0)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, np_), k_x.dtype),
+        interpret=True,  # CPU-PJRT execution; real TPU would drop this.
+    )(kxp, kxp, consts)
+    return out[:n, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def skim_kernel_matrix(k_x, eta1sq, eta2sq, csq, block: int = DEFAULT_BLOCK):
+    """N x N SKIM interaction kernel; differentiable wrt all array args."""
+    return _skim_impl(k_x, eta1sq, eta2sq, csq, block=block)
+
+
+def _vjp_fwd(k_x, eta1sq, eta2sq, csq, block):
+    return _skim_impl(k_x, eta1sq, eta2sq, csq, block=block), (k_x, eta1sq, eta2sq, csq)
+
+
+def _vjp_bwd(block, res, ct):
+    k_x, eta1sq, eta2sq, csq = res
+    _, vjp = jax.vjp(ref.skim_kernel_matrix, k_x, eta1sq, eta2sq, csq)
+    return vjp(ct)
+
+
+skim_kernel_matrix.defvjp(_vjp_fwd, _vjp_bwd)

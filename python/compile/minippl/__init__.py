@@ -1,0 +1,42 @@
+"""minippl — a from-scratch reimplementation of the paper's effect-handler
+probabilistic programming layer (NumPyro §2) on JAX.
+
+The modeling language is the paper's: ``sample``/``param`` primitives with
+composable effect handlers (``seed``, ``trace``, ``condition``,
+``substitute``, ``replay``, ``mask``, ...) that are transparent to the JAX
+tracer and therefore compose with ``jit`` / ``grad`` / ``vmap``.
+"""
+
+from . import constraints, distributions, handlers, transforms
+from .handlers import block, condition, mask, replay, scale, seed, substitute, trace
+from .infer_util import (
+    constrain_fn,
+    initialize_model,
+    log_density,
+    potential_energy,
+    unconstrain_sample,
+)
+from .primitives import factor, param, sample
+
+__all__ = [
+    "block",
+    "condition",
+    "constraints",
+    "constrain_fn",
+    "distributions",
+    "factor",
+    "handlers",
+    "initialize_model",
+    "log_density",
+    "mask",
+    "param",
+    "potential_energy",
+    "replay",
+    "sample",
+    "scale",
+    "seed",
+    "substitute",
+    "trace",
+    "transforms",
+    "unconstrain_sample",
+]

@@ -1,0 +1,110 @@
+"""Support constraints for distributions.
+
+Each distribution declares its ``support``; ``transforms.biject_to`` maps
+a constraint to the bijection HMC uses to run on unconstrained space.
+Constraints are also *checkable* (``constraint(x)`` returns a boolean
+mask), which the test-suite uses to property-check samplers.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+class Constraint:
+    event_dim = 0
+
+    def __call__(self, x):
+        raise NotImplementedError
+
+
+class _Real(Constraint):
+    def __call__(self, x):
+        return jnp.isfinite(x)
+
+    def __repr__(self):
+        return "Real()"
+
+
+class _Positive(Constraint):
+    def __call__(self, x):
+        return x > 0
+
+    def __repr__(self):
+        return "Positive()"
+
+
+class _UnitInterval(Constraint):
+    def __call__(self, x):
+        return (x > 0) & (x < 1)
+
+    def __repr__(self):
+        return "UnitInterval()"
+
+
+class _Interval(Constraint):
+    def __init__(self, low, high):
+        self.low = low
+        self.high = high
+
+    def __call__(self, x):
+        return (x > self.low) & (x < self.high)
+
+    def __repr__(self):
+        return f"Interval({self.low}, {self.high})"
+
+
+class _Simplex(Constraint):
+    event_dim = 1
+
+    def __call__(self, x):
+        return (x >= 0).all(-1) & (jnp.abs(x.sum(-1) - 1.0) < 1e-5)
+
+    def __repr__(self):
+        return "Simplex()"
+
+
+class _OrderedVector(Constraint):
+    event_dim = 1
+
+    def __call__(self, x):
+        return (jnp.diff(x, axis=-1) > 0).all(-1)
+
+    def __repr__(self):
+        return "OrderedVector()"
+
+
+class _IntegerInterval(Constraint):
+    def __init__(self, low, high):
+        self.low = low
+        self.high = high
+
+    def __call__(self, x):
+        return (x >= self.low) & (x <= self.high) & (x == jnp.floor(x))
+
+    def __repr__(self):
+        return f"IntegerInterval({self.low}, {self.high})"
+
+
+class _Boolean(Constraint):
+    def __call__(self, x):
+        return (x == 0) | (x == 1)
+
+    def __repr__(self):
+        return "Boolean()"
+
+
+real = _Real()
+positive = _Positive()
+unit_interval = _UnitInterval()
+simplex = _Simplex()
+ordered_vector = _OrderedVector()
+boolean = _Boolean()
+
+
+def interval(low, high) -> _Interval:
+    return _Interval(low, high)
+
+
+def integer_interval(low, high) -> _IntegerInterval:
+    return _IntegerInterval(low, high)

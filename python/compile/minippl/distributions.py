@@ -1,0 +1,454 @@
+"""JAX distributions for minippl.
+
+Every distribution exposes ``sample(key, sample_shape)``, ``log_prob(x)``,
+``support`` (a :mod:`constraints` object), ``batch_shape``/``event_shape``
+and — where cheap — ``mean``/``variance`` (used by the test suite and the
+moment-based diagnostics on the Rust side).
+
+All densities are written with numerically-stable primitives from
+``jax.scipy.special`` so they remain well-behaved under ``grad`` inside
+the compiled NUTS step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import betaln, digamma, gammaln, xlog1py, xlogy
+
+from . import constraints
+
+
+def _promote(*args):
+    return jnp.broadcast_arrays(*[jnp.asarray(a) for a in args])
+
+
+class Distribution:
+    support = constraints.real
+    event_shape: tuple = ()
+
+    def __init__(self, batch_shape=()):
+        self.batch_shape = tuple(batch_shape)
+
+    @property
+    def event_dim(self) -> int:
+        return len(self.event_shape)
+
+    def shape(self, sample_shape=()) -> tuple:
+        return tuple(sample_shape) + self.batch_shape + self.event_shape
+
+    def sample(self, key, sample_shape=()):
+        raise NotImplementedError
+
+    def log_prob(self, value):
+        raise NotImplementedError
+
+    @property
+    def mean(self):
+        raise NotImplementedError
+
+    @property
+    def variance(self):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Continuous, univariate
+# ---------------------------------------------------------------------------
+
+
+class Normal(Distribution):
+    support = constraints.real
+
+    def __init__(self, loc=0.0, scale=1.0):
+        self.loc, self.scale = _promote(loc, scale)
+        super().__init__(jnp.shape(self.loc))
+
+    def sample(self, key, sample_shape=()):
+        eps = jax.random.normal(key, self.shape(sample_shape), dtype=jnp.result_type(self.loc, float))
+        return self.loc + self.scale * eps
+
+    def log_prob(self, value):
+        z = (value - self.loc) / self.scale
+        return -0.5 * z**2 - jnp.log(self.scale) - 0.5 * jnp.log(2 * jnp.pi)
+
+    @property
+    def mean(self):
+        return self.loc
+
+    @property
+    def variance(self):
+        return self.scale**2
+
+
+class LogNormal(Distribution):
+    support = constraints.positive
+
+    def __init__(self, loc=0.0, scale=1.0):
+        self.loc, self.scale = _promote(loc, scale)
+        self._base = Normal(self.loc, self.scale)
+        super().__init__(jnp.shape(self.loc))
+
+    def sample(self, key, sample_shape=()):
+        return jnp.exp(self._base.sample(key, sample_shape))
+
+    def log_prob(self, value):
+        return self._base.log_prob(jnp.log(value)) - jnp.log(value)
+
+    @property
+    def mean(self):
+        return jnp.exp(self.loc + 0.5 * self.scale**2)
+
+    @property
+    def variance(self):
+        return (jnp.exp(self.scale**2) - 1) * jnp.exp(2 * self.loc + self.scale**2)
+
+
+class HalfNormal(Distribution):
+    support = constraints.positive
+
+    def __init__(self, scale=1.0):
+        (self.scale,) = _promote(scale)
+        super().__init__(jnp.shape(self.scale))
+
+    def sample(self, key, sample_shape=()):
+        eps = jax.random.normal(key, self.shape(sample_shape), dtype=jnp.result_type(self.scale, float))
+        return jnp.abs(self.scale * eps)
+
+    def log_prob(self, value):
+        z = value / self.scale
+        return jnp.log(2.0) - 0.5 * z**2 - jnp.log(self.scale) - 0.5 * jnp.log(2 * jnp.pi)
+
+    @property
+    def mean(self):
+        return self.scale * jnp.sqrt(2.0 / jnp.pi)
+
+    @property
+    def variance(self):
+        return self.scale**2 * (1.0 - 2.0 / jnp.pi)
+
+
+class Cauchy(Distribution):
+    support = constraints.real
+
+    def __init__(self, loc=0.0, scale=1.0):
+        self.loc, self.scale = _promote(loc, scale)
+        super().__init__(jnp.shape(self.loc))
+
+    def sample(self, key, sample_shape=()):
+        u = jax.random.uniform(key, self.shape(sample_shape), dtype=jnp.result_type(self.loc, float))
+        return self.loc + self.scale * jnp.tan(jnp.pi * (u - 0.5))
+
+    def log_prob(self, value):
+        z = (value - self.loc) / self.scale
+        return -jnp.log(jnp.pi) - jnp.log(self.scale) - jnp.log1p(z**2)
+
+
+class HalfCauchy(Distribution):
+    """Workhorse of sparsity-inducing priors (SKIM's local scales)."""
+
+    support = constraints.positive
+
+    def __init__(self, scale=1.0):
+        (self.scale,) = _promote(scale)
+        super().__init__(jnp.shape(self.scale))
+
+    def sample(self, key, sample_shape=()):
+        u = jax.random.uniform(key, self.shape(sample_shape), dtype=jnp.result_type(self.scale, float))
+        return self.scale * jnp.tan(jnp.pi * u / 2.0)
+
+    def log_prob(self, value):
+        z = value / self.scale
+        return jnp.log(2.0) - jnp.log(jnp.pi) - jnp.log(self.scale) - jnp.log1p(z**2)
+
+
+class StudentT(Distribution):
+    support = constraints.real
+
+    def __init__(self, df, loc=0.0, scale=1.0):
+        self.df, self.loc, self.scale = _promote(df, loc, scale)
+        super().__init__(jnp.shape(self.loc))
+
+    def sample(self, key, sample_shape=()):
+        shape = self.shape(sample_shape)
+        dtype = jnp.result_type(self.loc, float)
+        return self.loc + self.scale * jax.random.t(key, self.df, shape, dtype=dtype)
+
+    def log_prob(self, value):
+        z = (value - self.loc) / self.scale
+        nu = self.df
+        return (
+            gammaln(0.5 * (nu + 1.0))
+            - gammaln(0.5 * nu)
+            - 0.5 * jnp.log(nu * jnp.pi)
+            - jnp.log(self.scale)
+            - 0.5 * (nu + 1.0) * jnp.log1p(z**2 / nu)
+        )
+
+
+class Exponential(Distribution):
+    support = constraints.positive
+
+    def __init__(self, rate=1.0):
+        (self.rate,) = _promote(rate)
+        super().__init__(jnp.shape(self.rate))
+
+    def sample(self, key, sample_shape=()):
+        u = jax.random.exponential(key, self.shape(sample_shape), dtype=jnp.result_type(self.rate, float))
+        return u / self.rate
+
+    def log_prob(self, value):
+        return jnp.log(self.rate) - self.rate * value
+
+    @property
+    def mean(self):
+        return 1.0 / self.rate
+
+    @property
+    def variance(self):
+        return 1.0 / self.rate**2
+
+
+class Gamma(Distribution):
+    support = constraints.positive
+
+    def __init__(self, concentration, rate=1.0):
+        self.concentration, self.rate = _promote(concentration, rate)
+        super().__init__(jnp.shape(self.concentration))
+
+    def sample(self, key, sample_shape=()):
+        dtype = jnp.result_type(self.concentration, float)
+        g = jax.random.gamma(key, self.concentration, self.shape(sample_shape), dtype=dtype)
+        return g / self.rate
+
+    def log_prob(self, value):
+        a, b = self.concentration, self.rate
+        return xlogy(a, b) + xlogy(a - 1.0, value) - b * value - gammaln(a)
+
+    @property
+    def mean(self):
+        return self.concentration / self.rate
+
+    @property
+    def variance(self):
+        return self.concentration / self.rate**2
+
+
+class InverseGamma(Distribution):
+    support = constraints.positive
+
+    def __init__(self, concentration, rate=1.0):
+        self.concentration, self.rate = _promote(concentration, rate)
+        super().__init__(jnp.shape(self.concentration))
+
+    def sample(self, key, sample_shape=()):
+        dtype = jnp.result_type(self.concentration, float)
+        g = jax.random.gamma(key, self.concentration, self.shape(sample_shape), dtype=dtype)
+        return self.rate / g
+
+    def log_prob(self, value):
+        a, b = self.concentration, self.rate
+        return xlogy(a, b) - xlogy(a + 1.0, value) - b / value - gammaln(a)
+
+
+class Beta(Distribution):
+    support = constraints.unit_interval
+
+    def __init__(self, concentration1, concentration0):
+        self.concentration1, self.concentration0 = _promote(concentration1, concentration0)
+        super().__init__(jnp.shape(self.concentration1))
+
+    def sample(self, key, sample_shape=()):
+        dtype = jnp.result_type(self.concentration1, float)
+        return jax.random.beta(
+            key, self.concentration1, self.concentration0, self.shape(sample_shape), dtype=dtype
+        )
+
+    def log_prob(self, value):
+        a, b = self.concentration1, self.concentration0
+        return xlogy(a - 1.0, value) + xlog1py(b - 1.0, -value) - betaln(a, b)
+
+    @property
+    def mean(self):
+        return self.concentration1 / (self.concentration1 + self.concentration0)
+
+
+class Uniform(Distribution):
+    def __init__(self, low=0.0, high=1.0):
+        self.low, self.high = _promote(low, high)
+        super().__init__(jnp.shape(self.low))
+
+    @property
+    def support(self):
+        return constraints.interval(self.low, self.high)
+
+    def sample(self, key, sample_shape=()):
+        u = jax.random.uniform(key, self.shape(sample_shape), dtype=jnp.result_type(self.low, float))
+        return self.low + (self.high - self.low) * u
+
+    def log_prob(self, value):
+        inside = (value >= self.low) & (value <= self.high)
+        lp = -jnp.log(self.high - self.low)
+        return jnp.where(inside, lp, -jnp.inf)
+
+    @property
+    def mean(self):
+        return 0.5 * (self.low + self.high)
+
+
+class Unit(Distribution):
+    """Degenerate distribution carrying only a log-density factor.
+
+    Backs the ``factor(name, log_factor)`` primitive (arbitrary
+    log-density terms such as the HMM forward-algorithm marginal)."""
+
+    support = constraints.real
+
+    def __init__(self, log_factor):
+        self.log_factor = jnp.asarray(log_factor)
+        super().__init__(())
+
+    def sample(self, key, sample_shape=()):
+        return jnp.zeros(tuple(sample_shape))
+
+    def log_prob(self, value):
+        return self.log_factor
+
+
+# ---------------------------------------------------------------------------
+# Discrete
+# ---------------------------------------------------------------------------
+
+
+class Bernoulli(Distribution):
+    support = constraints.boolean
+
+    def __init__(self, probs=None, logits=None):
+        if (probs is None) == (logits is None):
+            raise ValueError("Bernoulli: provide exactly one of probs / logits")
+        if probs is not None:
+            (self.probs,) = _promote(probs)
+            self.logits = jnp.log(self.probs) - jnp.log1p(-self.probs)
+        else:
+            (self.logits,) = _promote(logits)
+            self.probs = jax.nn.sigmoid(self.logits)
+        super().__init__(jnp.shape(self.logits))
+
+    def sample(self, key, sample_shape=()):
+        u = jax.random.uniform(key, self.shape(sample_shape))
+        return (u < self.probs).astype(jnp.int32)
+
+    def log_prob(self, value):
+        # x*l - softplus(l): stable for both classes.
+        return value * self.logits - jax.nn.softplus(self.logits)
+
+    @property
+    def mean(self):
+        return self.probs
+
+    @property
+    def variance(self):
+        return self.probs * (1.0 - self.probs)
+
+
+class Categorical(Distribution):
+    def __init__(self, probs=None, logits=None):
+        if (probs is None) == (logits is None):
+            raise ValueError("Categorical: provide exactly one of probs / logits")
+        if probs is not None:
+            (self.probs,) = _promote(probs)
+            self.logits = jnp.log(self.probs)
+        else:
+            (self.logits,) = _promote(logits)
+            self.probs = jax.nn.softmax(self.logits, axis=-1)
+        super().__init__(jnp.shape(self.logits)[:-1])
+
+    @property
+    def support(self):
+        return constraints.integer_interval(0, jnp.shape(self.logits)[-1] - 1)
+
+    def sample(self, key, sample_shape=()):
+        return jax.random.categorical(
+            key, self.logits, axis=-1, shape=self.shape(sample_shape)
+        )
+
+    def log_prob(self, value):
+        logp = jax.nn.log_softmax(self.logits, axis=-1)
+        value = jnp.asarray(value)[..., None]
+        return jnp.take_along_axis(logp, value, axis=-1)[..., 0]
+
+    @property
+    def mean(self):
+        k = jnp.arange(self.probs.shape[-1])
+        return jnp.sum(self.probs * k, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Multivariate
+# ---------------------------------------------------------------------------
+
+
+class Dirichlet(Distribution):
+    support = constraints.simplex
+    event_dim = 1
+
+    def __init__(self, concentration):
+        self.concentration = jnp.asarray(concentration)
+        self.event_shape = jnp.shape(self.concentration)[-1:]
+        super().__init__(jnp.shape(self.concentration)[:-1])
+
+    def sample(self, key, sample_shape=()):
+        dtype = jnp.result_type(self.concentration, float)
+        shape = tuple(sample_shape) + self.batch_shape
+        return jax.random.dirichlet(key, self.concentration, shape, dtype=dtype)
+
+    def log_prob(self, value):
+        a = self.concentration
+        norm = jnp.sum(gammaln(a), axis=-1) - gammaln(jnp.sum(a, axis=-1))
+        return jnp.sum(xlogy(a - 1.0, value), axis=-1) - norm
+
+    @property
+    def mean(self):
+        return self.concentration / jnp.sum(self.concentration, axis=-1, keepdims=True)
+
+
+class MultivariateNormal(Distribution):
+    """MVN parameterized by a Cholesky factor (``scale_tril``) or a dense
+    covariance (Cholesky taken internally).  This is the marginal-likelihood
+    workhorse for SKIM's GP-style kernel formulation."""
+
+    support = constraints.real
+    event_dim = 1
+
+    def __init__(self, loc=0.0, covariance_matrix=None, scale_tril=None):
+        if (covariance_matrix is None) == (scale_tril is None):
+            raise ValueError("MVN: provide exactly one of covariance_matrix / scale_tril")
+        if scale_tril is None:
+            # pure-JAX Cholesky: LAPACK custom-calls cannot be AOT-compiled
+            # by the Rust-side XLA (see minippl/linalg.py)
+            from . import linalg
+
+            scale_tril = linalg.cholesky(covariance_matrix)
+        self.scale_tril = jnp.asarray(scale_tril)
+        dim = self.scale_tril.shape[-1]
+        self.loc = jnp.broadcast_to(jnp.asarray(loc), jnp.shape(self.scale_tril)[:-2] + (dim,))
+        self.event_shape = (dim,)
+        super().__init__(jnp.shape(self.scale_tril)[:-2])
+
+    def sample(self, key, sample_shape=()):
+        dtype = jnp.result_type(self.loc, float)
+        eps = jax.random.normal(key, self.shape(sample_shape), dtype=dtype)
+        return self.loc + jnp.einsum("...ij,...j->...i", self.scale_tril, eps)
+
+    def log_prob(self, value):
+        from . import linalg
+
+        return linalg.mvn_logpdf(value, self.loc, self.scale_tril)
+
+    @property
+    def mean(self):
+        return self.loc
+
+    @property
+    def covariance_matrix(self):
+        return jnp.einsum("...ij,...kj->...ik", self.scale_tril, self.scale_tril)

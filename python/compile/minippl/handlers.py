@@ -1,0 +1,194 @@
+"""Effect handlers (the paper's Table 1).
+
+Each handler gives a nonstandard interpretation to ``sample`` / ``param``
+statements.  Handlers are plain Python objects operating on message dicts,
+hence invisible to the JAX tracer: ``vmap(lambda k: seed(model, k)(x))``
+traces straight through them (§3.2).
+
+=============  ====================  =========================================
+handler        primitives affected   effect
+=============  ====================  =========================================
+``seed``       sample                split a PRNGKey for every sample site
+``trace``      sample, param         record inputs/outputs of every site
+``condition``  sample                fix *observed* values at given sites
+``substitute`` sample, param         fix values (stay unobserved; for HMC/SVI)
+``replay``     sample                replay values from a recorded trace
+``mask``       sample                mask log-density contributions
+``block``      sample, param         hide sites from outer handlers
+``scale``      sample                rescale log-density contributions
+=============  ====================  =========================================
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from .primitives import Messenger
+
+
+class trace(Messenger):
+    """Record the input, output and distribution of every ``sample`` /
+    ``param`` statement into an ordered dict keyed by site name.
+
+    Usage: ``tr = trace(fn).get_trace(*args)``.
+    """
+
+    def __enter__(self):
+        super().__enter__()
+        self._trace: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
+        return self._trace
+
+    def postprocess_message(self, msg: Dict[str, Any]) -> None:
+        if msg["type"] in ("sample", "param"):
+            name = msg["name"]
+            if name in self._trace:
+                raise ValueError(f"duplicate site name '{name}' in trace")
+            self._trace[name] = msg.copy()
+
+    def get_trace(self, *args, **kwargs) -> "OrderedDict[str, Dict[str, Any]]":
+        self(*args, **kwargs)
+        return self._trace
+
+
+class seed(Messenger):
+    """Seed ``fn`` with a PRNGKey.  Every ``sample`` call splits the key to
+    generate a fresh seed for subsequent calls, abstracting JAX's explicit
+    functional PRNG away from the modeling language (§2)."""
+
+    def __init__(self, fn: Optional[Callable] = None, rng_key: Optional[jax.Array] = None):
+        if rng_key is None:
+            raise ValueError("seed(...) requires an rng_key")
+        # Accept raw uint32[2] key data as well as typed keys.
+        if getattr(rng_key, "dtype", None) is not None and rng_key.dtype == jax.numpy.uint32:
+            rng_key = jax.random.wrap_key_data(rng_key)
+        self.rng_key = rng_key
+        super().__init__(fn)
+
+    def process_message(self, msg: Dict[str, Any]) -> None:
+        if (
+            msg["type"] == "sample"
+            and not msg["is_observed"]
+            and msg["value"] is None
+            and msg["kwargs"].get("rng_key") is None
+        ):
+            self.rng_key, subkey = jax.random.split(self.rng_key)
+            msg["kwargs"]["rng_key"] = subkey
+
+
+class substitute(Messenger):
+    """Fix the value of matching sites to ``data[name]`` (or the result of
+    ``substitute_fn(msg)``) *without* marking them observed.  Used to run a
+    model at specific latent values, e.g. inside potential-energy
+    evaluation for HMC/NUTS or parameter updates in SVI."""
+
+    def __init__(
+        self,
+        fn: Optional[Callable] = None,
+        data: Optional[Dict[str, jax.Array]] = None,
+        substitute_fn: Optional[Callable] = None,
+    ):
+        if (data is None) == (substitute_fn is None):
+            raise ValueError("substitute: provide exactly one of data / substitute_fn")
+        self.data = data
+        self.substitute_fn = substitute_fn
+        super().__init__(fn)
+
+    def process_message(self, msg: Dict[str, Any]) -> None:
+        if msg["type"] not in ("sample", "param"):
+            return
+        if self.data is not None:
+            if msg["name"] in self.data:
+                msg["value"] = self.data[msg["name"]]
+        else:
+            value = self.substitute_fn(msg)
+            if value is not None:
+                msg["value"] = value
+
+
+class condition(Messenger):
+    """Condition unobserved ``sample`` sites to the values in ``data``,
+    marking them observed (they contribute to the likelihood and are not
+    resampled)."""
+
+    def __init__(self, fn: Optional[Callable] = None, data: Optional[Dict[str, jax.Array]] = None):
+        if data is None:
+            raise ValueError("condition(...) requires data")
+        self.data = data
+        super().__init__(fn)
+
+    def process_message(self, msg: Dict[str, Any]) -> None:
+        if msg["type"] == "sample" and msg["name"] in self.data:
+            if msg["is_observed"]:
+                raise ValueError(
+                    f"cannot condition already-observed site '{msg['name']}'"
+                )
+            msg["value"] = self.data[msg["name"]]
+            msg["is_observed"] = True
+
+
+class replay(Messenger):
+    """Replay ``sample`` statements against values recorded in a trace
+    (e.g. run the model at the guide's sampled latents when computing an
+    ELBO)."""
+
+    def __init__(self, fn: Optional[Callable] = None, guide_trace: Optional[Dict] = None):
+        if guide_trace is None:
+            raise ValueError("replay(...) requires a guide_trace")
+        self.guide_trace = guide_trace
+        super().__init__(fn)
+
+    def process_message(self, msg: Dict[str, Any]) -> None:
+        if msg["type"] == "sample" and msg["name"] in self.guide_trace:
+            site = self.guide_trace[msg["name"]]
+            if site["type"] != "sample":
+                return
+            if msg["is_observed"]:
+                return
+            msg["value"] = site["value"]
+
+
+class mask(Messenger):
+    """Multiply the log-density contribution of matching sample sites by a
+    boolean (or float) mask — used e.g. for ragged batches or
+    semi-supervised likelihoods."""
+
+    def __init__(self, fn: Optional[Callable] = None, mask: Any = True):
+        self.mask = mask
+        super().__init__(fn)
+
+    def process_message(self, msg: Dict[str, Any]) -> None:
+        if msg["type"] == "sample":
+            prev = msg.get("mask")
+            msg["mask"] = self.mask if prev is None else prev & self.mask
+
+
+class scale(Messenger):
+    """Rescale the log-density of matching sites by a positive factor
+    (used for data subsampling corrections)."""
+
+    def __init__(self, fn: Optional[Callable] = None, scale_factor: float = 1.0):
+        if not (scale_factor is not None):
+            raise ValueError("scale(...) requires scale_factor")
+        self.scale_factor = scale_factor
+        super().__init__(fn)
+
+    def process_message(self, msg: Dict[str, Any]) -> None:
+        if msg["type"] == "sample":
+            prev = msg.get("scale")
+            msg["scale"] = self.scale_factor if prev is None else prev * self.scale_factor
+
+
+class block(Messenger):
+    """Hide matching sites from handlers *outside* this one (stop message
+    propagation).  ``hide_fn`` selects which sites to hide (default all)."""
+
+    def __init__(self, fn: Optional[Callable] = None, hide_fn: Optional[Callable] = None):
+        self.hide_fn = hide_fn if hide_fn is not None else (lambda msg: True)
+        super().__init__(fn)
+
+    def process_message(self, msg: Dict[str, Any]) -> None:
+        if self.hide_fn(msg):
+            msg["stop"] = True

@@ -1,0 +1,134 @@
+"""Inference utilities: potential energy on unconstrained space.
+
+This is the glue between the modeling language (handlers + primitives)
+and HMC/NUTS: given a model and data, build a pure function
+``U(theta_unconstrained) -> -log p(theta, data)`` including the
+change-of-variables Jacobian terms, plus helpers to flatten the latent
+pytree to the single vector the compiled NUTS step operates on.
+
+Everything here is pure-and-statically-composed: ``potential_energy``
+traces cleanly under ``jit``, ``grad`` and ``vmap`` (§3).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from . import handlers
+from .primitives import sample  # noqa: F401  (re-export convenience)
+from .transforms import biject_to
+
+
+def get_model_trace(model, rng_key, *model_args, **model_kwargs):
+    """Run the model under ``seed`` + ``trace`` and return the trace."""
+    seeded = handlers.seed(model, rng_key=rng_key)
+    return handlers.trace(seeded).get_trace(*model_args, **model_kwargs)
+
+
+def latent_sites(model_trace) -> Dict[str, Any]:
+    """Sites that HMC samples: unobserved ``sample`` sites."""
+    return {
+        name: site
+        for name, site in model_trace.items()
+        if site["type"] == "sample" and not site["is_observed"]
+    }
+
+
+def constrain_transforms(model_trace) -> Dict[str, Any]:
+    """Per-latent-site bijection unconstrained -> support."""
+    return {
+        name: biject_to(site["fn"].support)
+        for name, site in latent_sites(model_trace).items()
+    }
+
+
+def unconstrain_sample(model_trace) -> Dict[str, jax.Array]:
+    """Pull the latent values of a trace back to unconstrained space."""
+    transforms = constrain_transforms(model_trace)
+    return {
+        name: transforms[name].inv(site["value"])
+        for name, site in latent_sites(model_trace).items()
+    }
+
+
+def log_density(model, model_args, model_kwargs, params) -> Tuple[jax.Array, Dict]:
+    """``log p(params, data)`` — run the model with latents substituted to
+    ``params`` (constrained space) and sum site log-probabilities,
+    honouring ``mask`` and ``scale`` effects."""
+    substituted = handlers.substitute(model, data=params)
+    tr = handlers.trace(handlers.seed(substituted, rng_key=jax.random.PRNGKey(0))).get_trace(
+        *model_args, **model_kwargs
+    )
+    logp = 0.0
+    for site in tr.values():
+        if site["type"] != "sample":
+            continue
+        lp = site["fn"].log_prob(site["value"])
+        if site.get("mask") is not None:
+            lp = jnp.where(site["mask"], lp, 0.0)
+        if site.get("scale") is not None:
+            lp = site["scale"] * lp
+        logp = logp + jnp.sum(lp)
+    return logp, tr
+
+
+def potential_energy(model, model_args, model_kwargs, unconstrained: Dict[str, jax.Array]):
+    """``U(theta) = -log p(f(theta), data) - log |det J_f(theta)|`` where
+    ``f`` is the per-site bijection onto each latent's support."""
+    # One throwaway trace to discover sites/supports (shapes are static, so
+    # under jit this costs nothing at runtime).
+    probe = get_model_trace(model, jax.random.PRNGKey(0), *model_args, **model_kwargs)
+    transforms = constrain_transforms(probe)
+    params = {}
+    jac = 0.0
+    for name, x in unconstrained.items():
+        t = transforms[name]
+        y = t(x)
+        params[name] = y
+        jac = jac + jnp.sum(t.log_abs_det_jacobian(x, y))
+    logp, _ = log_density(model, model_args, model_kwargs, params)
+    return -(logp + jac)
+
+
+def initialize_model(model, rng_key, *model_args, **model_kwargs):
+    """Return ``(potential_fn, init_vec, unravel, transforms)`` where
+    ``potential_fn`` maps a flat unconstrained vector to scalar potential
+    energy — exactly the signature the NUTS step consumes.
+
+    Initialization follows NumPyro's ``init_to_uniform``: latents start at
+    a uniform(-2, 2) draw in unconstrained space.
+    """
+    probe = get_model_trace(model, rng_key, *model_args, **model_kwargs)
+    transforms = constrain_transforms(probe)
+    init_unconstrained = {}
+    key = rng_key
+    for name, site in latent_sites(probe).items():
+        t = transforms[name]
+        shape = t.inverse_shape(jnp.shape(site["value"]))
+        key, sub = jax.random.split(key)
+        dtype = jnp.result_type(site["value"], float)
+        init_unconstrained[name] = jax.random.uniform(
+            sub, shape, minval=-2.0, maxval=2.0, dtype=dtype
+        )
+    init_vec, unravel = ravel_pytree(init_unconstrained)
+
+    def potential_fn(z_flat):
+        return potential_energy(model, model_args, model_kwargs, unravel(z_flat))
+
+    return potential_fn, init_vec, unravel, transforms
+
+
+def constrain_fn(model, model_args, model_kwargs, unravel) -> Callable:
+    """Map a flat unconstrained vector to a dict of constrained latents."""
+    probe = get_model_trace(model, jax.random.PRNGKey(0), *model_args, **model_kwargs)
+    transforms = constrain_transforms(probe)
+
+    def _constrain(z_flat):
+        unc = unravel(z_flat)
+        return {name: transforms[name](x) for name, x in unc.items()}
+
+    return _constrain

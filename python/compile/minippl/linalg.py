@@ -1,0 +1,62 @@
+"""Pure-JAX dense linear algebra (Cholesky + triangular solve).
+
+``jnp.linalg.cholesky`` / ``jax.scipy.linalg.solve_triangular`` lower to
+LAPACK *custom calls* on CPU (API_VERSION_TYPED_FFI) which the AOT
+consumer (xla_extension 0.5.1 behind the Rust ``xla`` crate) cannot
+compile.  These versions lower to plain HLO (fori_loop + dynamic
+slicing), are reverse-mode differentiable, and are validated against the
+LAPACK-backed implementations in the pytest suite.
+
+Used by :class:`minippl.distributions.MultivariateNormal`, i.e. by the
+SKIM marginal likelihood — N = 200, so the O(N) sequential loop with
+O(N) vector body is cheap relative to the N x N kernel construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cholesky(a: jax.Array) -> jax.Array:
+    """Lower Cholesky factor of an SPD matrix (Cholesky-Banachiewicz,
+    column at a time)."""
+    n = a.shape[-1]
+    idx = jnp.arange(n)
+
+    def body(j, l):
+        # columns < j of `l` are final; the rest are zero.
+        lj = l[j, :]  # row j: only entries < j are nonzero
+        d = a[j, j] - jnp.dot(lj, lj)
+        ljj = jnp.sqrt(d)
+        # column j below the diagonal
+        col = (a[:, j] - l @ lj) / ljj
+        col = jnp.where(idx > j, col, 0.0)
+        l = l.at[:, j].add(col)
+        l = l.at[j, j].set(ljj)
+        return l
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(a), unroll=False)
+
+
+def solve_lower(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve L x = b for lower-triangular L (forward substitution)."""
+    n = b.shape[0]
+
+    def body(i, x):
+        xi = (b[i] - jnp.dot(l[i, :], x)) / l[i, i]
+        return x.at[i].set(xi)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b), unroll=False)
+
+
+def mvn_logpdf(value: jax.Array, loc: jax.Array, scale_tril: jax.Array) -> jax.Array:
+    """log N(value | loc, L L^T) without LAPACK custom calls."""
+    dim = value.shape[-1]
+    alpha = solve_lower(scale_tril, value - loc)
+    half_logdet = jnp.sum(jnp.log(jnp.diagonal(scale_tril)))
+    return (
+        -0.5 * jnp.sum(alpha * alpha)
+        - half_logdet
+        - 0.5 * dim * jnp.log(2 * jnp.pi).astype(value.dtype)
+    )

@@ -1,0 +1,153 @@
+"""Core language primitives: ``sample`` and ``param``.
+
+This module implements the effect-handling abstraction of the paper's §2:
+primitive statements construct a *message* that travels down a stack of
+handlers (``Messenger`` subclasses, see :mod:`minippl.handlers`), each of
+which may modify it (``process_message``), then — after the default
+behaviour runs — back up the stack (``postprocess_message``).
+
+Because handlers operate entirely within the Python runtime on plain
+dicts and JAX arrays, they are transparent to the JAX tracer and compose
+freely with ``jit`` / ``grad`` / ``vmap`` (the paper's central point).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+# The global handler stack.  Entering a Messenger pushes it; exiting pops.
+_HANDLER_STACK: List["Messenger"] = []
+
+
+class Messenger:
+    """Base effect handler.
+
+    A ``Messenger`` wraps a callable ``fn``; while the wrapper executes,
+    the messenger sits on the handler stack and sees every primitive
+    message issued inside ``fn``.
+    """
+
+    def __init__(self, fn: Optional[Callable] = None):
+        self.fn = fn
+
+    def __enter__(self) -> "Messenger":
+        _HANDLER_STACK.append(self)
+        return self
+
+    def __exit__(self, exc_type, exc_value, tb) -> None:
+        popped = _HANDLER_STACK.pop()
+        if exc_type is None:
+            assert popped is self, "handler stack corrupted"
+
+    def process_message(self, msg: Dict[str, Any]) -> None:
+        """Hook run top-down *before* the default behaviour."""
+
+    def postprocess_message(self, msg: Dict[str, Any]) -> None:
+        """Hook run bottom-up *after* the default behaviour."""
+
+    def __call__(self, *args, **kwargs):
+        if self.fn is None:
+            raise ValueError(
+                f"{type(self).__name__} wraps no function; it can only be "
+                "used as a context manager"
+            )
+        with self:
+            return self.fn(*args, **kwargs)
+
+
+def _default_sample(msg: Dict[str, Any]) -> None:
+    """Default interpretation of a ``sample`` statement: draw from ``fn``."""
+    if msg["value"] is None:
+        rng_key = msg["kwargs"].get("rng_key")
+        if rng_key is None:
+            raise ValueError(
+                f"site '{msg['name']}': no value and no PRNGKey. Wrap the "
+                "model in the seed(...) handler (see Table 1 of the paper)."
+            )
+        msg["value"] = msg["fn"].sample(rng_key, msg["kwargs"].get("sample_shape", ()))
+
+
+def apply_stack(msg: Dict[str, Any]) -> Dict[str, Any]:
+    """Send ``msg`` through the handler stack (top-down), apply the default
+    behaviour, then unwind (bottom-up)."""
+    pointer = 0
+    # Top of the stack is the innermost handler: traverse outermost-last,
+    # i.e. iterate from the end (innermost) toward the beginning.
+    for pointer, handler in enumerate(reversed(_HANDLER_STACK)):
+        handler.process_message(msg)
+        if msg.get("stop"):
+            break
+    if msg["type"] == "sample":
+        _default_sample(msg)
+    # Unwind only through the handlers that saw the message.
+    for handler in _HANDLER_STACK[len(_HANDLER_STACK) - pointer - 1 :]:
+        handler.postprocess_message(msg)
+    return msg
+
+
+def sample(
+    name: str,
+    fn,
+    obs: Optional[jax.Array] = None,
+    rng_key: Optional[jax.Array] = None,
+    sample_shape: tuple = (),
+):
+    """Designate a random variable ``name ~ fn``.
+
+    With no handlers on the stack this behaves like a direct draw
+    (requiring ``rng_key``); handlers reinterpret it (record, condition,
+    seed, replay...).
+    """
+    if not _HANDLER_STACK and obs is None and rng_key is None:
+        raise ValueError(
+            f"sample('{name}', ...) called outside any handler without "
+            "obs/rng_key"
+        )
+    msg = {
+        "type": "sample",
+        "name": name,
+        "fn": fn,
+        "args": (),
+        "kwargs": {"rng_key": rng_key, "sample_shape": sample_shape},
+        "value": obs,
+        "is_observed": obs is not None,
+        "scale": None,
+        "stop": False,
+    }
+    apply_stack(msg)
+    return msg["value"]
+
+
+def factor(name: str, log_factor) -> None:
+    """Add an arbitrary log-density term to the model (a ``sample``
+    statement against a degenerate :class:`~minippl.distributions.Unit`
+    distribution).  Used e.g. for marginalized likelihoods."""
+    from . import distributions as dist
+
+    sample(name, dist.Unit(log_factor), obs=jnp.zeros(()))
+
+
+def param(name: str, init_value: Optional[jax.Array] = None, **kwargs):
+    """Designate a learnable parameter.
+
+    The default behaviour returns ``init_value``; handlers like
+    ``substitute`` replace it with optimizer state (used by SVI).
+    """
+    msg = {
+        "type": "param",
+        "name": name,
+        "fn": lambda v: v,
+        "args": (init_value,),
+        "kwargs": kwargs,
+        "value": None,
+        "is_observed": False,
+        "scale": None,
+        "stop": False,
+    }
+    apply_stack(msg)
+    if msg["value"] is None:
+        msg["value"] = init_value
+    return msg["value"]

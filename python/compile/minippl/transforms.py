@@ -1,0 +1,225 @@
+"""Bijective transforms between unconstrained space and distribution
+supports, with log-abs-det Jacobians.
+
+HMC/NUTS runs on unconstrained parameters; ``biject_to(support)`` selects
+the transform that maps R^n onto the support of each latent site, and the
+potential energy adds the Jacobian correction (§3.1 — this mirrors what
+Stan and NumPyro do internally).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import constraints
+
+
+class Transform:
+    """Bijection ``y = f(x)`` from unconstrained ``x`` to constrained ``y``.
+
+    ``event_dim_in``/``event_dim_out`` give the event dimensionality on
+    each side (stick-breaking maps vectors to vectors of different size).
+    ``log_abs_det_jacobian`` returns per-event values (already summed over
+    event dims).
+    """
+
+    event_dim_in = 0
+    event_dim_out = 0
+
+    def __call__(self, x):
+        raise NotImplementedError
+
+    def inv(self, y):
+        raise NotImplementedError
+
+    def log_abs_det_jacobian(self, x, y):
+        raise NotImplementedError
+
+    # Shape of x needed to produce a constrained value of shape `shape`.
+    def inverse_shape(self, shape):
+        return shape
+
+
+class IdentityTransform(Transform):
+    def __call__(self, x):
+        return x
+
+    def inv(self, y):
+        return y
+
+    def log_abs_det_jacobian(self, x, y):
+        return jnp.zeros(jnp.shape(x))
+
+
+class ExpTransform(Transform):
+    """R -> (0, inf), y = exp(x)."""
+
+    def __call__(self, x):
+        return jnp.exp(x)
+
+    def inv(self, y):
+        return jnp.log(y)
+
+    def log_abs_det_jacobian(self, x, y):
+        return x
+
+
+class SigmoidTransform(Transform):
+    """R -> (0, 1), y = sigmoid(x)."""
+
+    def __call__(self, x):
+        return jax.nn.sigmoid(x)
+
+    def inv(self, y):
+        return jnp.log(y) - jnp.log1p(-y)
+
+    def log_abs_det_jacobian(self, x, y):
+        # log sigmoid'(x) = log σ(x) + log σ(-x) = -softplus(-x) - softplus(x)
+        return -jax.nn.softplus(x) - jax.nn.softplus(-x)
+
+
+class AffineTransform(Transform):
+    """y = loc + scale * x."""
+
+    def __init__(self, loc, scale):
+        self.loc = loc
+        self.scale = scale
+
+    def __call__(self, x):
+        return self.loc + self.scale * x
+
+    def inv(self, y):
+        return (y - self.loc) / self.scale
+
+    def log_abs_det_jacobian(self, x, y):
+        return jnp.broadcast_to(jnp.log(jnp.abs(self.scale)), jnp.shape(x))
+
+
+class ComposeTransform(Transform):
+    """f = parts[-1] ∘ ... ∘ parts[0]."""
+
+    def __init__(self, parts):
+        self.parts = list(parts)
+        self.event_dim_in = self.parts[0].event_dim_in
+        self.event_dim_out = self.parts[-1].event_dim_out
+
+    def __call__(self, x):
+        for p in self.parts:
+            x = p(x)
+        return x
+
+    def inv(self, y):
+        for p in reversed(self.parts):
+            y = p.inv(y)
+        return y
+
+    def log_abs_det_jacobian(self, x, y):
+        total = 0.0
+        for p in self.parts:
+            y_p = p(x)
+            total = total + p.log_abs_det_jacobian(x, y_p)
+            x = y_p
+        return total
+
+    def inverse_shape(self, shape):
+        for p in reversed(self.parts):
+            shape = p.inverse_shape(shape)
+        return shape
+
+
+class StickBreakingTransform(Transform):
+    """R^{K-1} -> K-simplex via the stick-breaking construction.
+
+    With offsets o_i = log(K-1-i), z_i = sigmoid(x_i - o_i), remainder
+    r_i = prod_{j<i}(1 - z_j):   y_i = z_i * r_i,  y_{K-1} = r_{K-1}.
+    The offset makes x = 0 map to the uniform simplex point.
+    """
+
+    event_dim_in = 1
+    event_dim_out = 1
+
+    def __call__(self, x):
+        k = x.shape[-1]
+        offsets = jnp.log(jnp.arange(k, 0, -1, dtype=x.dtype))
+        z = jax.nn.sigmoid(x - offsets)
+        one_minus = 1.0 - z
+        rem = jnp.concatenate(
+            [jnp.ones(x.shape[:-1] + (1,), dtype=x.dtype), jnp.cumprod(one_minus, axis=-1)],
+            axis=-1,
+        )
+        y = jnp.concatenate([z, jnp.ones(x.shape[:-1] + (1,), dtype=x.dtype)], axis=-1)
+        return y * rem
+
+    def inv(self, y):
+        k = y.shape[-1] - 1
+        offsets = jnp.log(jnp.arange(k, 0, -1, dtype=y.dtype))
+        # remainder before index i: 1 - cumsum_{j<i} y_j
+        cs = jnp.cumsum(y[..., :-1], axis=-1)
+        rem = jnp.concatenate(
+            [jnp.ones(y.shape[:-1] + (1,), dtype=y.dtype), 1.0 - cs[..., :-1]], axis=-1
+        )
+        z = jnp.clip(y[..., :-1] / rem, 1e-12, 1.0 - 1e-12)
+        return jnp.log(z) - jnp.log1p(-z) + offsets
+
+    def log_abs_det_jacobian(self, x, y):
+        k = x.shape[-1]
+        offsets = jnp.log(jnp.arange(k, 0, -1, dtype=x.dtype))
+        xs = x - offsets
+        # log z + log(1-z) per coordinate
+        log_z = -jax.nn.softplus(-xs)
+        log_1mz = -jax.nn.softplus(xs)
+        one_minus = jax.nn.sigmoid(-xs)
+        log_rem = jnp.concatenate(
+            [
+                jnp.zeros(x.shape[:-1] + (1,), dtype=x.dtype),
+                jnp.cumsum(jnp.log(one_minus), axis=-1)[..., :-1],
+            ],
+            axis=-1,
+        )
+        return jnp.sum(log_z + log_1mz + log_rem, axis=-1)
+
+    def inverse_shape(self, shape):
+        return shape[:-1] + (shape[-1] - 1,)
+
+
+class OrderedTransform(Transform):
+    """R^K -> ordered vectors: y_0 = x_0, y_i = y_{i-1} + exp(x_i)."""
+
+    event_dim_in = 1
+    event_dim_out = 1
+
+    def __call__(self, x):
+        z = jnp.concatenate([x[..., :1], jnp.exp(x[..., 1:])], axis=-1)
+        return jnp.cumsum(z, axis=-1)
+
+    def inv(self, y):
+        return jnp.concatenate(
+            [y[..., :1], jnp.log(jnp.diff(y, axis=-1))], axis=-1
+        )
+
+    def log_abs_det_jacobian(self, x, y):
+        return jnp.sum(x[..., 1:], axis=-1)
+
+
+def biject_to(constraint) -> Transform:
+    """Select the canonical bijection from unconstrained space onto the
+    support described by ``constraint``."""
+    if isinstance(constraint, constraints._Real):
+        return IdentityTransform()
+    if isinstance(constraint, constraints._Positive):
+        return ExpTransform()
+    if isinstance(constraint, constraints._UnitInterval):
+        return SigmoidTransform()
+    if isinstance(constraint, constraints._Interval):
+        return ComposeTransform(
+            [
+                SigmoidTransform(),
+                AffineTransform(constraint.low, constraint.high - constraint.low),
+            ]
+        )
+    if isinstance(constraint, constraints._Simplex):
+        return StickBreakingTransform()
+    if isinstance(constraint, constraints._OrderedVector):
+        return OrderedTransform()
+    raise NotImplementedError(f"no bijection registered for {constraint}")

@@ -1,0 +1,2 @@
+# L2: paper's jax model fwd/bwd, calling kernels.*
+import jax.numpy as jnp

@@ -1,0 +1,82 @@
+"""Logistic regression (the paper's Fig 1a and the COVTYPE benchmark E2).
+
+Two variants of the same model:
+
+* :func:`logistic_regression` — the paper's Fig 1a verbatim (pure
+  minippl + jnp); used for the handler/vmap demos (E5) and as oracle.
+* :func:`logistic_regression_fused` — identical density, but the
+  Bernoulli likelihood is evaluated through the fused Pallas kernel
+  (:mod:`compile.kernels.logistic_loglik`), which is what the compiled
+  NUTS step runs in its leapfrog hot loop.
+
+The paper's dataset is Forest CoverType (581,012 x 54, binarized).  We
+substitute a synthetic design matrix of the same shape and statistics
+(standardized features, logit-linear labels) — see DESIGN.md §5: the
+benchmark measures time per leapfrog, which depends on shape/dtype, not
+on the actual covariate values.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import minippl as mp
+from ..kernels.logistic_loglik import DEFAULT_BLOCK_N, logistic_loglik
+from ..minippl import constraints, distributions as dist
+
+COVTYPE_N = 581_012
+COVTYPE_D = 54
+
+
+class FusedBernoulliLogits(dist.Distribution):
+    """Bernoulli(logits = x @ w + b) over all N rows as one event, with
+    ``log_prob`` routed through the fused Pallas kernel."""
+
+    support = constraints.boolean
+
+    def __init__(self, x, w, b, block_n: int = DEFAULT_BLOCK_N):
+        self.x, self.w, self.b = x, w, b
+        self.block_n = block_n
+        self.event_shape = (x.shape[0],)
+        super().__init__(())
+
+    def sample(self, key, sample_shape=()):
+        logits = self.x @ self.w + self.b
+        u = jax.random.uniform(key, tuple(sample_shape) + logits.shape)
+        return (u < jax.nn.sigmoid(logits)).astype(jnp.int32)
+
+    def log_prob(self, value):
+        return logistic_loglik(
+            self.x, self.w, self.b, value.astype(self.x.dtype), self.block_n
+        )
+
+
+def logistic_regression(x, y=None):
+    """The paper's Fig 1a model, verbatim."""
+    ndims = jnp.shape(x)[-1]
+    m = mp.sample("m", dist.Normal(0.0, jnp.ones(ndims)))
+    b = mp.sample("b", dist.Normal(0.0, 1.0))
+    return mp.sample("y", dist.Bernoulli(logits=x @ m + b), obs=y)
+
+
+def logistic_regression_fused(x, y=None, block_n: int = DEFAULT_BLOCK_N):
+    """Same density; likelihood through the L1 Pallas kernel."""
+    ndims = jnp.shape(x)[-1]
+    m = mp.sample("m", dist.Normal(0.0, jnp.ones(ndims)))
+    b = mp.sample("b", dist.Normal(0.0, 1.0))
+    return mp.sample("y", FusedBernoulliLogits(x, m, b, block_n), obs=y)
+
+
+def make_covtype_like(rng_key, n: int = 50_000, d: int = COVTYPE_D, dtype=jnp.float32):
+    """Synthetic CovType substitute: standardized features, labels from a
+    sparse-ish logit-linear ground truth (class imbalance ~ the merged
+    binary CovType task)."""
+    kx, kw, ky = jax.random.split(rng_key, 3)
+    x = jax.random.normal(kx, (n, d), dtype)
+    w_true = jax.random.normal(kw, (d,), dtype) * (
+        jax.random.uniform(jax.random.fold_in(kw, 1), (d,)) < 0.3
+    )
+    logits = x @ w_true - 0.5
+    y = (jax.random.uniform(ky, (n,)) < jax.nn.sigmoid(logits)).astype(jnp.int32)
+    return x, y, w_true

@@ -1,0 +1,89 @@
+"""Sparse Kernel Interaction Model (Fig 2b benchmark, E3).
+
+The "kernel interaction trick" of Agrawal et al. (2019), as benchmarked
+in the paper: Bayesian sparse regression with pairwise interactions,
+marginalized through a GP-style kernel so that the per-datapoint latent
+weights never appear.  The sparsity-inducing prior puts a HalfCauchy
+local scale lambda_i on each of the p input dimensions — latent
+dimension grows with p, which is exactly Fig 2b's x-axis.
+
+Hyperpriors follow the NumPyro reference implementation
+(``sparse_regression.py`` on the benchmarks branch):
+
+    sigma  ~ HalfNormal(alpha3)
+    eta1   ~ HalfCauchy(phi),   phi = sigma * S / ((P - S) sqrt(N))
+    msq    ~ InverseGamma(alpha1, beta1)
+    xisq   ~ InverseGamma(alpha2, beta2)
+    lambda ~ HalfCauchy(1)^P
+    eta2   = eta1^2 sqrt(xisq) / msq
+    kappa  = sqrt(msq) lambda / sqrt(msq + (eta1 lambda)^2)
+    Y      ~ MVN(0, K(kappa X) + (sigma^2 + jitter) I)
+
+The N x N kernel matrix is the L1 Pallas kernel
+(:mod:`compile.kernels.skim_kernel`).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import minippl as mp
+from ..kernels import ref
+from ..kernels.skim_kernel import DEFAULT_BLOCK, skim_kernel_matrix
+from ..minippl import distributions as dist
+
+
+class SkimHypers(NamedTuple):
+    expected_sparsity: float = 3.0
+    alpha1: float = 3.0
+    beta1: float = 1.0
+    alpha2: float = 3.0
+    beta2: float = 1.0
+    alpha3: float = 1.0
+    c: float = 1.0
+    jitter: float = 1e-4
+
+
+def skim_model(x, y, hypers: SkimHypers = SkimHypers(), use_kernel: bool = True):
+    n, p = x.shape
+    s = hypers.expected_sparsity
+
+    sigma = mp.sample("sigma", dist.HalfNormal(hypers.alpha3))
+    phi = sigma * (s / jnp.sqrt(n)) / (p - s)
+    eta1 = mp.sample("eta1", dist.HalfCauchy(phi))
+    msq = mp.sample("msq", dist.InverseGamma(hypers.alpha1, hypers.beta1))
+    xisq = mp.sample("xisq", dist.InverseGamma(hypers.alpha2, hypers.beta2))
+    lam = mp.sample("lambda", dist.HalfCauchy(jnp.ones(p)))
+
+    eta2 = jnp.square(eta1) * jnp.sqrt(xisq) / msq
+    kappa = jnp.sqrt(msq) * lam / jnp.sqrt(msq + jnp.square(eta1 * lam))
+
+    k_x = kappa * x
+    kern = skim_kernel_matrix if use_kernel else ref.skim_kernel_matrix
+    k = kern(
+        k_x,
+        jnp.square(eta1).astype(x.dtype),
+        jnp.square(eta2).astype(x.dtype),
+        jnp.asarray(hypers.c**2, x.dtype),
+    )
+    k = k + (jnp.square(sigma) + hypers.jitter) * jnp.eye(n, dtype=x.dtype)
+    return mp.sample("y", dist.MultivariateNormal(0.0, covariance_matrix=k), obs=y)
+
+
+def make_skim_data(rng_key, n: int = 200, p: int = 100, num_pairs: int = 3, dtype=jnp.float32):
+    """The paper's Appendix C synthetic SKIM data: N=200 points, 3 random
+    pairwise interactions among the p covariates (plus matching main
+    effects and observation noise)."""
+    kx, kp, kc, ke = jax.random.split(rng_key, 4)
+    x = jax.random.normal(kx, (n, p), dtype)
+    idx = jax.random.choice(kp, p, (num_pairs, 2), replace=False)
+    coefs = 1.0 + jnp.abs(jax.random.normal(kc, (num_pairs,), dtype))
+    y = jnp.zeros((n,), dtype)
+    for q in range(num_pairs):
+        i, j = idx[q, 0], idx[q, 1]
+        y = y + coefs[q] * x[:, i] * x[:, j] + 0.5 * (x[:, i] + x[:, j])
+    y = y + 0.3 * jax.random.normal(ke, (n,), dtype)
+    return x, y, idx, coefs

@@ -1,0 +1,106 @@
+"""AOT lowering contract: HLO text is parseable and custom-call-free,
+manifest entries are complete and consistent, f64 path toggles dtypes.
+
+These are fast (tiny shapes) — the full-size artifacts are exercised by
+`fugue artifacts-check` and the Rust integration tests.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import compile.minippl as mp
+from compile.aot import Lowerer, lower_model_bundle, param_layout, to_hlo_text, write_manifest
+from compile.models.logistic import logistic_regression_fused, make_covtype_like
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def tiny_bundle(tmp_path):
+    x, y, _ = make_covtype_like(KEY, n=64, d=4)
+    lw = Lowerer(str(tmp_path))
+    lower_model_bundle(
+        lw,
+        "tiny",
+        lambda xx, yy: logistic_regression_fused(xx, yy, block_n=32),
+        (x, y),
+        ["x", "y"],
+        {"n": 64, "d": 4},
+        max_tree_depth=5,
+        vmap_chains=2,
+    )
+    write_manifest(str(tmp_path), lw.entries)
+    return tmp_path
+
+
+def test_bundle_files_and_manifest(tiny_bundle):
+    files = sorted(os.listdir(tiny_bundle))
+    assert "manifest.json" in files
+    assert any("tiny_nuts_step_f32" in f for f in files)
+    assert any("tiny_potential_and_grad_f32" in f for f in files)
+    assert any("tiny_nuts_step_vmap2_f32" in f for f in files)
+    with open(tiny_bundle / "manifest.json") as f:
+        manifest = json.load(f)
+    entries = {e["name"]: e for e in manifest["entries"]}
+    step = entries["tiny_nuts_step_f32"]
+    assert step["dim"] == 5
+    assert [i["name"] for i in step["inputs"]] == [
+        "key",
+        "z",
+        "step_size",
+        "inv_mass_diag",
+        "x",
+        "y",
+    ]
+    assert [o["name"] for o in step["outputs"]] == [
+        "z_new",
+        "accept_prob",
+        "num_leapfrog",
+        "potential",
+        "diverging",
+        "depth",
+    ]
+    assert step["max_tree_depth"] == 5
+    layout = step["param_layout"]
+    assert [e["site"] for e in layout] == ["b", "m"]
+    assert layout[1]["offset"] == 1 and layout[1]["size"] == 4
+
+
+def test_hlo_text_is_wellformed_and_custom_call_free(tiny_bundle):
+    for fname in os.listdir(tiny_bundle):
+        if not fname.endswith(".hlo.txt"):
+            continue
+        text = (tiny_bundle / fname).read_text()
+        assert text.startswith("HloModule"), fname
+        assert "custom-call" not in text, f"{fname} contains a custom call"
+        assert "ENTRY" in text
+
+
+def test_manifest_merge_replaces_by_name(tmp_path):
+    write_manifest(str(tmp_path), [{"name": "a", "v": 1}])
+    write_manifest(str(tmp_path), [{"name": "a", "v": 2}, {"name": "b", "v": 3}])
+    with open(tmp_path / "manifest.json") as f:
+        entries = {e["name"]: e for e in json.load(f)["entries"]}
+    assert entries["a"]["v"] == 2
+    assert set(entries) == {"a", "b"}
+
+
+def test_to_hlo_text_roundtrip_simple():
+    f = lambda x: (x @ x.T,)
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((3, 3), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+
+
+def test_param_layout_spans_are_disjoint_and_ordered():
+    x, y, _ = make_covtype_like(KEY, n=32, d=3)
+    layout = param_layout(lambda: logistic_regression_fused(x, y))
+    end = 0
+    for e in layout:
+        assert e["offset"] == end
+        end = e["offset"] + e["size"]
+    assert end == 4

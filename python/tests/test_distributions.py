@@ -1,0 +1,131 @@
+"""minippl distribution correctness: densities against scipy, samplers
+against their own densities (moment checks), support/constraint
+consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.stats as ss
+
+from compile.minippl import constraints, distributions as dist
+
+KEY = jax.random.PRNGKey(0)
+
+
+DENSITY_CASES = [
+    (dist.Normal(0.5, 1.3), ss.norm(0.5, 1.3), [-2.0, 0.0, 0.5, 3.1]),
+    (dist.HalfNormal(0.7), ss.halfnorm(scale=0.7), [0.1, 0.5, 2.0]),
+    (dist.Cauchy(1.0, 2.0), ss.cauchy(1.0, 2.0), [-5.0, 0.0, 1.0, 4.0]),
+    (dist.HalfCauchy(1.5), ss.halfcauchy(scale=1.5), [0.1, 1.0, 10.0]),
+    (dist.Exponential(2.0), ss.expon(scale=0.5), [0.1, 1.0, 3.0]),
+    (dist.Gamma(3.0, 2.0), ss.gamma(3.0, scale=0.5), [0.2, 1.0, 4.0]),
+    (dist.InverseGamma(3.0, 2.0), ss.invgamma(3.0, scale=2.0), [0.2, 1.0, 4.0]),
+    (dist.Beta(2.0, 3.0), ss.beta(2.0, 3.0), [0.1, 0.4, 0.9]),
+    (dist.LogNormal(0.2, 0.8), ss.lognorm(0.8, scale=np.exp(0.2)), [0.2, 1.0, 5.0]),
+    (dist.Uniform(-1.0, 2.0), ss.uniform(-1.0, 3.0), [-0.5, 0.0, 1.9]),
+    (dist.StudentT(4.0, 0.5, 1.2), ss.t(4.0, 0.5, 1.2), [-3.0, 0.5, 2.0]),
+]
+
+
+@pytest.mark.parametrize("d,ref,points", DENSITY_CASES, ids=lambda c: type(c).__name__)
+def test_log_prob_matches_scipy(d, ref, points):
+    for x in points:
+        got = float(d.log_prob(jnp.asarray(x)))
+        want = ref.logpdf(x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_bernoulli_logits_and_probs_agree():
+    logits = jnp.asarray(0.7)
+    d1 = dist.Bernoulli(logits=logits)
+    d2 = dist.Bernoulli(probs=jax.nn.sigmoid(logits))
+    for v in [0, 1]:
+        np.testing.assert_allclose(d1.log_prob(v), d2.log_prob(v), rtol=1e-6)
+    with pytest.raises(ValueError):
+        dist.Bernoulli()
+    with pytest.raises(ValueError):
+        dist.Bernoulli(probs=0.5, logits=0.0)
+
+
+def test_categorical_log_prob_normalizes():
+    d = dist.Categorical(logits=jnp.asarray([0.1, -0.5, 2.0, 1.0]))
+    total = sum(float(jnp.exp(d.log_prob(jnp.asarray(k)))) for k in range(4))
+    np.testing.assert_allclose(total, 1.0, rtol=1e-6)
+
+
+def test_dirichlet_matches_scipy():
+    conc = jnp.asarray([2.0, 3.0, 0.5])
+    d = dist.Dirichlet(conc)
+    x = np.array([0.3, 0.5, 0.2])
+    np.testing.assert_allclose(
+        float(d.log_prob(jnp.asarray(x))),
+        ss.dirichlet(np.asarray(conc)).logpdf(x),
+        rtol=1e-5,
+    )
+
+
+def test_mvn_matches_scipy():
+    cov = np.array([[2.0, 0.6], [0.6, 1.0]])
+    d = dist.MultivariateNormal(jnp.zeros(2), covariance_matrix=jnp.asarray(cov))
+    x = np.array([0.7, -1.1])
+    np.testing.assert_allclose(
+        float(d.log_prob(jnp.asarray(x))),
+        ss.multivariate_normal(np.zeros(2), cov).logpdf(x),
+        rtol=1e-5,
+    )
+
+
+SAMPLER_CASES = [
+    dist.Normal(1.0, 2.0),
+    dist.HalfNormal(1.5),
+    dist.Exponential(0.7),
+    dist.Gamma(4.0, 2.0),
+    dist.Beta(2.0, 5.0),
+    dist.LogNormal(0.0, 0.5),
+    dist.Uniform(-2.0, 1.0),
+]
+
+
+@pytest.mark.parametrize("d", SAMPLER_CASES, ids=lambda d: type(d).__name__)
+def test_sampler_moments_match_mean(d):
+    xs = d.sample(KEY, (20000,))
+    np.testing.assert_allclose(
+        float(jnp.mean(xs)), float(d.mean), rtol=0.06, atol=0.02
+    )
+
+
+@pytest.mark.parametrize(
+    "d",
+    [
+        dist.HalfNormal(1.0),
+        dist.HalfCauchy(1.0),
+        dist.Gamma(2.0, 1.0),
+        dist.Beta(2.0, 2.0),
+        dist.Dirichlet(jnp.ones(4)),
+    ],
+    ids=lambda d: type(d).__name__,
+)
+def test_samples_respect_support(d):
+    xs = d.sample(KEY, (500,))
+    assert bool(jnp.all(d.support(xs)))
+
+
+def test_unit_distribution_carries_factor():
+    d = dist.Unit(jnp.asarray(-3.25))
+    np.testing.assert_allclose(d.log_prob(jnp.zeros(())), -3.25)
+
+
+def test_batched_normal_shapes():
+    d = dist.Normal(jnp.zeros((4, 3)), jnp.ones((4, 3)))
+    assert d.batch_shape == (4, 3)
+    xs = d.sample(KEY, (7,))
+    assert xs.shape == (7, 4, 3)
+    assert d.log_prob(xs).shape == (7, 4, 3)
+
+
+def test_dirichlet_batch_shapes():
+    d = dist.Dirichlet(jnp.ones((5, 3)))
+    xs = d.sample(KEY)
+    assert xs.shape == (5, 3)
+    assert d.log_prob(xs).shape == (5,)

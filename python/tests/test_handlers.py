@@ -1,0 +1,171 @@
+"""§2 / Table 1 semantics: every effect handler's contract, plus
+composition with jit/vmap/grad (the paper's central claim)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import compile.minippl as mp
+from compile.minippl import distributions as dist
+
+
+def model(x, y=None):
+    m = mp.sample("m", dist.Normal(0.0, jnp.ones(x.shape[-1])))
+    b = mp.sample("b", dist.Normal(0.0, 1.0))
+    return mp.sample("y", dist.Bernoulli(logits=x @ m + b), obs=y)
+
+
+@pytest.fixture
+def x():
+    return jax.random.normal(jax.random.PRNGKey(0), (20, 3))
+
+
+def test_seed_provides_keys_and_is_deterministic(x):
+    y1 = mp.seed(model, rng_key=jax.random.PRNGKey(1))(x)
+    y2 = mp.seed(model, rng_key=jax.random.PRNGKey(1))(x)
+    y3 = mp.seed(model, rng_key=jax.random.PRNGKey(2))(x)
+    np.testing.assert_array_equal(y1, y2)
+    assert not np.array_equal(y1, y3)
+
+
+def test_unseeded_sample_raises(x):
+    with pytest.raises(ValueError, match="seed"):
+        mp.trace(model).get_trace(x)
+
+
+def test_trace_records_all_sites(x):
+    tr = mp.trace(mp.seed(model, rng_key=jax.random.PRNGKey(0))).get_trace(x)
+    assert list(tr.keys()) == ["m", "b", "y"]
+    assert not tr["m"]["is_observed"]
+    assert not tr["y"]["is_observed"]  # no obs passed
+    tr2 = mp.trace(mp.seed(model, rng_key=jax.random.PRNGKey(0))).get_trace(
+        x, y=jnp.zeros(20, dtype=jnp.int32)
+    )
+    assert tr2["y"]["is_observed"]
+
+
+def test_trace_rejects_duplicate_sites():
+    def bad():
+        mp.sample("a", dist.Normal(0.0, 1.0))
+        mp.sample("a", dist.Normal(0.0, 1.0))
+
+    with pytest.raises(ValueError, match="duplicate"):
+        mp.trace(mp.seed(bad, rng_key=jax.random.PRNGKey(0))).get_trace()
+
+
+def test_condition_fixes_and_observes(x):
+    data = {"m": jnp.ones(3), "b": jnp.asarray(0.5)}
+    tr = mp.trace(mp.seed(mp.condition(model, data=data), rng_key=jax.random.PRNGKey(0))).get_trace(x)
+    np.testing.assert_array_equal(tr["m"]["value"], data["m"])
+    assert tr["m"]["is_observed"]
+    assert tr["b"]["is_observed"]
+
+
+def test_condition_on_observed_site_raises(x):
+    y = jnp.zeros(20, dtype=jnp.int32)
+    cond = mp.condition(model, data={"y": y})
+    with pytest.raises(ValueError, match="observed"):
+        mp.seed(cond, rng_key=jax.random.PRNGKey(0))(x, y=y)
+
+
+def test_substitute_fixes_without_observing(x):
+    tr = mp.trace(
+        mp.seed(mp.substitute(model, data={"b": jnp.asarray(2.0)}), rng_key=jax.random.PRNGKey(0))
+    ).get_trace(x)
+    assert float(tr["b"]["value"]) == 2.0
+    assert not tr["b"]["is_observed"]
+
+
+def test_replay_reuses_trace(x):
+    key = jax.random.PRNGKey(3)
+    tr = mp.trace(mp.seed(model, rng_key=key)).get_trace(x)
+    tr2 = mp.trace(
+        mp.seed(mp.replay(model, guide_trace=tr), rng_key=jax.random.PRNGKey(99))
+    ).get_trace(x)
+    np.testing.assert_array_equal(tr["m"]["value"], tr2["m"]["value"])
+    np.testing.assert_array_equal(tr["b"]["value"], tr2["b"]["value"])
+
+
+def test_block_hides_sites(x):
+    def fn():
+        mp.sample("hidden", dist.Normal(0.0, 1.0))
+        return mp.sample("visible", dist.Normal(0.0, 1.0))
+
+    # seed must sit *inside* block so the hidden site still gets a key:
+    # block hides sites from handlers OUTSIDE it (here: trace).
+    seeded = mp.seed(fn, rng_key=jax.random.PRNGKey(0))
+    blocked = mp.block(seeded, hide_fn=lambda msg: msg["name"] == "hidden")
+    tr = mp.trace(blocked).get_trace()
+    assert "hidden" not in tr and "visible" in tr
+
+
+def test_mask_zeroes_log_prob():
+    def fn():
+        with mp.mask(mask=jnp.asarray(False)):
+            mp.sample("a", dist.Normal(0.0, 1.0), obs=jnp.asarray(3.0))
+        mp.sample("b", dist.Normal(0.0, 1.0), obs=jnp.asarray(0.0))
+
+    logp, _ = mp.log_density(fn, (), {}, {})
+    expect = dist.Normal(0.0, 1.0).log_prob(0.0)
+    np.testing.assert_allclose(logp, expect, rtol=1e-6)
+
+
+def test_scale_multiplies_log_prob():
+    def fn():
+        with mp.handlers.scale(scale_factor=2.5):
+            mp.sample("a", dist.Normal(0.0, 1.0), obs=jnp.asarray(1.0))
+
+    logp, _ = mp.log_density(fn, (), {}, {})
+    expect = 2.5 * dist.Normal(0.0, 1.0).log_prob(1.0)
+    np.testing.assert_allclose(logp, expect, rtol=1e-6)
+
+
+def test_factor_adds_arbitrary_term():
+    def fn():
+        mp.factor("f", jnp.asarray(-7.25))
+
+    logp, _ = mp.log_density(fn, (), {}, {})
+    np.testing.assert_allclose(logp, -7.25)
+
+
+def test_nested_handlers_compose(x):
+    # condition inside substitute: substitute wins where it applies
+    inner = mp.condition(model, data={"b": jnp.asarray(1.0)})
+    outer = mp.substitute(inner, data={"m": jnp.zeros(3)})
+    tr = mp.trace(mp.seed(outer, rng_key=jax.random.PRNGKey(0))).get_trace(x)
+    np.testing.assert_array_equal(tr["m"]["value"], jnp.zeros(3))
+    assert float(tr["b"]["value"]) == 1.0
+
+
+# ---- composition with JAX transformations (§3.2) ----
+
+
+def test_handlers_compose_with_vmap(x):
+    keys = jax.random.split(jax.random.PRNGKey(0), 8)
+    ys = jax.vmap(lambda k: mp.seed(model, rng_key=k)(x))(keys)
+    assert ys.shape == (8, 20)
+    # different keys -> different draws somewhere
+    assert np.unique(np.asarray(ys), axis=0).shape[0] > 1
+
+
+def test_handlers_compose_with_jit_and_grad(x):
+    y = mp.seed(model, rng_key=jax.random.PRNGKey(5))(x)
+
+    def loss(params):
+        logp, _ = mp.log_density(model, (x,), {"y": y}, params)
+        return -logp
+
+    params = {"m": jnp.zeros(3), "b": jnp.asarray(0.0)}
+    g = jax.jit(jax.grad(loss))(params)
+    assert g["m"].shape == (3,)
+    assert jnp.isfinite(g["b"])
+
+
+def test_vmap_log_density_over_param_batch(x):
+    y = mp.seed(model, rng_key=jax.random.PRNGKey(5))(x)
+    ms = jax.random.normal(jax.random.PRNGKey(1), (6, 3))
+    bs = jnp.zeros(6)
+    lls = jax.vmap(lambda m, b: mp.log_density(model, (x,), {"y": y}, {"m": m, "b": b})[0])(ms, bs)
+    assert lls.shape == (6,)
+    assert bool(jnp.all(jnp.isfinite(lls)))

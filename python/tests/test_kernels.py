@@ -1,0 +1,141 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle,
+with hypothesis sweeping shapes and dtypes (the mandated correctness
+signal for the kernel layer)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.hmm_forward import hmm_forward
+from compile.kernels.logistic_loglik import logistic_loglik
+from compile.kernels.skim_kernel import skim_kernel_matrix
+
+SETTINGS = dict(deadline=None, max_examples=12)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-3, atol=2e-3) if dtype == jnp.float32 else dict(rtol=1e-8, atol=1e-8)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 3000),
+    d=st.integers(1, 64),
+    block_n=st.sampled_from([64, 256, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_logistic_loglik_matches_ref(n, d, block_n, seed):
+    k = jax.random.PRNGKey(seed)
+    kx, kw, kb, ky = jax.random.split(k, 4)
+    x = jax.random.normal(kx, (n, d))
+    w = jax.random.normal(kw, (d,))
+    b = jax.random.normal(kb, ())
+    y = (jax.random.uniform(ky, (n,)) < 0.5).astype(jnp.float32)
+    got = logistic_loglik(x, w, b, y, block_n)
+    want = ref.logistic_loglik(x, w, b, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3 * n)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(2, 800),
+    d=st.integers(1, 54),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_logistic_loglik_gradient_matches_ref(n, d, seed):
+    k = jax.random.PRNGKey(seed)
+    kx, kw, ky = jax.random.split(k, 3)
+    x = jax.random.normal(kx, (n, d))
+    w = jax.random.normal(kw, (d,)) * 0.5
+    b = jnp.float32(0.2)
+    y = (jax.random.uniform(ky, (n,)) < 0.5).astype(jnp.float32)
+    gw, gb = jax.grad(lambda w, b: logistic_loglik(x, w, b, y, 256), argnums=(0, 1))(w, b)
+    ew, eb = ref.logistic_loglik_grad(x, w, b, y)
+    np.testing.assert_allclose(gw, ew, rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(gb, eb, rtol=1e-3, atol=1e-2)
+
+
+@settings(**SETTINGS)
+@given(
+    k_states=st.integers(2, 5),
+    v_cats=st.integers(2, 12),
+    t_len=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hmm_forward_matches_ref(k_states, v_cats, t_len, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    log_a = jax.nn.log_softmax(jax.random.normal(k1, (k_states, k_states)), axis=1)
+    log_b = jax.nn.log_softmax(jax.random.normal(k2, (k_states, v_cats)), axis=1)
+    obs = jax.random.randint(k3, (t_len,), 0, v_cats)
+    alpha0 = jnp.full((k_states,), -jnp.log(k_states))
+    got = hmm_forward(log_a, log_b, obs, alpha0)
+    want = ref.hmm_forward(log_a, log_b, obs, alpha0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_hmm_forward_gradient_matches_ref():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    K, V, T = 3, 10, 80
+    log_a = jax.nn.log_softmax(jax.random.normal(k1, (K, K)), axis=1)
+    log_b = jax.nn.log_softmax(jax.random.normal(k2, (K, V)), axis=1)
+    obs = jax.random.randint(k3, (T,), 0, V)
+    alpha0 = jnp.zeros((K,))
+    f = lambda fwd, a, b: jax.scipy.special.logsumexp(fwd(a, b, obs, alpha0))
+    g1 = jax.grad(lambda a: f(hmm_forward, a, log_b))(log_a)
+    g2 = jax.grad(lambda a: f(ref.hmm_forward, a, log_b))(log_a)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(2, 300),
+    p=st.integers(1, 64),
+    block=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_skim_kernel_matches_ref(n, p, block, seed):
+    key = jax.random.PRNGKey(seed)
+    kx = jax.random.normal(key, (n, p))
+    args = (jnp.float32(1.3), jnp.float32(0.4), jnp.float32(1.0))
+    got = skim_kernel_matrix(kx, *args, block)
+    want = ref.skim_kernel_matrix(kx, *args)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_skim_kernel_gradients_match_ref():
+    key = jax.random.PRNGKey(7)
+    kx = jax.random.normal(key, (50, 9))
+    loss = lambda kern, kx, e1, e2: jnp.sum(kern(kx, e1, e2, jnp.float32(1.0)))
+    g1 = jax.grad(lambda kx, e1, e2: loss(lambda *a: skim_kernel_matrix(*a, 32), kx, e1, e2), argnums=(0, 1, 2))(
+        kx, jnp.float32(1.3), jnp.float32(0.4)
+    )
+    g2 = jax.grad(lambda kx, e1, e2: loss(ref.skim_kernel_matrix, kx, e1, e2), argnums=(0, 1, 2))(
+        kx, jnp.float32(1.3), jnp.float32(0.4)
+    )
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_kernels_work_under_jit():
+    x = jax.random.normal(jax.random.PRNGKey(0), (500, 8))
+    w = jnp.ones(8) * 0.1
+    y = jnp.ones(500)
+    f = jax.jit(lambda w: logistic_loglik(x, w, jnp.float32(0.0), y, 256))
+    np.testing.assert_allclose(f(w), ref.logistic_loglik(x, w, 0.0, y), rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_logistic_kernel_padding_edge(dtype):
+    # N exactly one below/above a block boundary
+    for n in [1023, 1024, 1025]:
+        x = jax.random.normal(jax.random.PRNGKey(n), (n, 4), dtype)
+        w = jnp.ones(4, dtype)
+        y = jnp.zeros(n, dtype)
+        got = logistic_loglik(x, w, dtype(0.0), y, 1024)
+        want = ref.logistic_loglik(x, w, 0.0, y)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)

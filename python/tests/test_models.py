@@ -1,0 +1,118 @@
+"""The three benchmark models: potential finiteness + gradients, fused
+(Pallas) vs reference (pure-jnp) density agreement, and workload
+generator sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import compile.minippl as mp
+from compile.models.hmm import HmmData, hmm_model, make_hmm_data
+from compile.models.logistic import (
+    logistic_regression,
+    logistic_regression_fused,
+    make_covtype_like,
+)
+from compile.models.skim import SkimHypers, make_skim_data, skim_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def hmm_data():
+    return make_hmm_data(KEY, seq_len=120, num_supervised=30)
+
+
+@pytest.fixture(scope="module")
+def covtype_data():
+    return make_covtype_like(KEY, n=500, d=10)
+
+
+@pytest.fixture(scope="module")
+def skim_data():
+    return make_skim_data(KEY, n=50, p=12)
+
+
+def test_hmm_dims_and_gradient(hmm_data):
+    pf, z0, _, _ = mp.initialize_model(lambda: hmm_model(hmm_data), KEY)
+    assert z0.shape == (3 * 9 + 3 * 2,)
+    u = pf(z0)
+    g = jax.grad(pf)(z0)
+    assert jnp.isfinite(u)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_hmm_kernel_and_reference_densities_agree(hmm_data):
+    pf_k, z0, _, _ = mp.initialize_model(lambda: hmm_model(hmm_data, use_kernel=True), KEY)
+    pf_r, _, _, _ = mp.initialize_model(lambda: hmm_model(hmm_data, use_kernel=False), KEY)
+    for seed in range(3):
+        z = jax.random.normal(jax.random.PRNGKey(seed), z0.shape)
+        np.testing.assert_allclose(pf_k(z), pf_r(z), rtol=1e-5)
+        np.testing.assert_allclose(jax.grad(pf_k)(z), jax.grad(pf_r)(z), rtol=1e-3, atol=1e-4)
+
+
+def test_logistic_fused_matches_reference(covtype_data):
+    x, y, _ = covtype_data
+    pf_f, z0, _, _ = mp.initialize_model(lambda: logistic_regression_fused(x, y), KEY)
+    pf_r, _, _, _ = mp.initialize_model(lambda: logistic_regression(x, y), KEY)
+    for seed in range(3):
+        z = jax.random.normal(jax.random.PRNGKey(seed), z0.shape) * 0.5
+        np.testing.assert_allclose(pf_f(z), pf_r(z), rtol=1e-4)
+        np.testing.assert_allclose(
+            jax.grad(pf_f)(z), jax.grad(pf_r)(z), rtol=1e-3, atol=1e-3
+        )
+
+
+def test_skim_kernel_and_reference_densities_agree(skim_data):
+    x, y, _, _ = skim_data
+    pf_k, z0, _, _ = mp.initialize_model(lambda: skim_model(x, y, use_kernel=True), KEY)
+    pf_r, _, _, _ = mp.initialize_model(lambda: skim_model(x, y, use_kernel=False), KEY)
+    for seed in range(3):
+        z = jax.random.normal(jax.random.PRNGKey(seed), z0.shape) * 0.3
+        np.testing.assert_allclose(pf_k(z), pf_r(z), rtol=5e-4)
+        np.testing.assert_allclose(
+            jax.grad(pf_k)(z), jax.grad(pf_r)(z), rtol=5e-3, atol=5e-3
+        )
+
+
+def test_skim_latent_dim_grows_with_p():
+    for p in [7, 17]:
+        x, y, _, _ = make_skim_data(KEY, n=30, p=p)
+        _, z0, _, _ = mp.initialize_model(lambda: skim_model(x, y), KEY)
+        assert z0.shape == (p + 4,)
+
+
+def test_hmm_generator_shapes(hmm_data):
+    assert hmm_data.obs.shape == (120,)
+    assert hmm_data.sup_states.shape == (30,)
+    assert int(hmm_data.obs.max()) < 10
+    assert int(hmm_data.sup_states.max()) < 3
+
+
+def test_covtype_generator_classes_balanced_ish(covtype_data):
+    _, y, _ = covtype_data
+    rate = float(jnp.mean(y))
+    assert 0.1 < rate < 0.9
+
+
+def test_potentials_jit_and_vmap(covtype_data):
+    x, y, _ = covtype_data
+    pf, z0, _, _ = mp.initialize_model(lambda: logistic_regression_fused(x, y), KEY)
+    zs = jax.random.normal(KEY, (4,) + z0.shape) * 0.1
+    us = jax.jit(jax.vmap(pf))(zs)
+    assert us.shape == (4,)
+    assert bool(jnp.isfinite(us).all())
+
+
+def test_param_layout_is_sorted_and_contiguous(covtype_data):
+    from compile.aot import param_layout
+
+    x, y, _ = covtype_data
+    layout = param_layout(lambda: logistic_regression_fused(x, y))
+    sites = [e["site"] for e in layout]
+    assert sites == sorted(sites) == ["b", "m"]
+    offset = 0
+    for e in layout:
+        assert e["offset"] == offset
+        offset += e["size"]

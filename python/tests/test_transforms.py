@@ -1,0 +1,114 @@
+"""Transform correctness: round-trips, Jacobians vs autodiff, and the
+biject_to registry, hypothesis-swept."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.minippl import constraints
+from compile.minippl.transforms import (
+    AffineTransform,
+    ComposeTransform,
+    ExpTransform,
+    OrderedTransform,
+    SigmoidTransform,
+    StickBreakingTransform,
+    biject_to,
+)
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+
+def autodiff_logdet(t, x):
+    """log |det J| via jacfwd (square part for dimension-changing maps)."""
+    if t.event_dim_in == 0:
+        return jnp.log(jnp.abs(jax.grad(lambda v: t(v))(x)))
+    if isinstance(t, StickBreakingTransform):
+        J = jax.jacfwd(lambda v: t(v)[:-1])(x)
+    else:
+        J = jax.jacfwd(t)(x)
+    return jnp.linalg.slogdet(J)[1]
+
+
+@settings(**SETTINGS)
+@given(x=st.floats(-5, 5))
+def test_exp_transform(x):
+    t = ExpTransform()
+    x = jnp.asarray(x, jnp.float32)
+    y = t(x)
+    assert y > 0
+    np.testing.assert_allclose(t.inv(y), x, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        t.log_abs_det_jacobian(x, y), autodiff_logdet(t, x), rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(x=st.floats(-4, 4))
+def test_sigmoid_transform(x):
+    t = SigmoidTransform()
+    x = jnp.asarray(x, jnp.float32)
+    y = t(x)
+    assert 0 < y < 1
+    np.testing.assert_allclose(t.inv(y), x, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(
+        t.log_abs_det_jacobian(x, y), autodiff_logdet(t, x), rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(2, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stick_breaking(k, seed):
+    t = StickBreakingTransform()
+    x = jax.random.normal(jax.random.PRNGKey(seed), (k - 1,)) * 2.0
+    y = t(x)
+    np.testing.assert_allclose(jnp.sum(y), 1.0, rtol=1e-5)
+    assert bool(jnp.all(y > 0))
+    np.testing.assert_allclose(t.inv(y), x, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(
+        t.log_abs_det_jacobian(x, y), autodiff_logdet(t, x), rtol=1e-3, atol=1e-3
+    )
+    assert t.inverse_shape((k,)) == (k - 1,)
+
+
+@settings(**SETTINGS)
+@given(k=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+def test_ordered_transform(k, seed):
+    t = OrderedTransform()
+    x = jax.random.normal(jax.random.PRNGKey(seed), (k,))
+    y = t(x)
+    assert bool(jnp.all(jnp.diff(y) > 0))
+    np.testing.assert_allclose(t.inv(y), x, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        t.log_abs_det_jacobian(x, y), autodiff_logdet(t, x), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_compose_and_affine():
+    t = ComposeTransform([SigmoidTransform(), AffineTransform(-1.0, 3.0)])
+    x = jnp.asarray(0.3)
+    y = t(x)
+    assert -1 < y < 2
+    np.testing.assert_allclose(t.inv(y), x, rtol=1e-5)
+    np.testing.assert_allclose(
+        t.log_abs_det_jacobian(x, y), autodiff_logdet(t, x), rtol=1e-5
+    )
+
+
+def test_biject_to_registry():
+    assert isinstance(biject_to(constraints.positive), ExpTransform)
+    assert isinstance(biject_to(constraints.unit_interval), SigmoidTransform)
+    assert isinstance(biject_to(constraints.simplex), StickBreakingTransform)
+    t = biject_to(constraints.interval(2.0, 5.0))
+    y = t(jnp.asarray(0.0))
+    assert 2.0 < float(y) < 5.0
+
+
+def test_stick_breaking_zero_is_uniform():
+    t = StickBreakingTransform()
+    y = t(jnp.zeros(4))
+    np.testing.assert_allclose(y, jnp.full(5, 0.2), rtol=1e-6)

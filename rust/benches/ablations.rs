@@ -1,0 +1,27 @@
+//! Bench: the two design ablations — E7 (vmapped chains vs sequential
+//! dispatch) and E8 (iterative vs recursive tree building).
+
+use fugue::config::Settings;
+use fugue::harness::ablations;
+use fugue::runtime::engine::Engine;
+
+fn main() {
+    let mut settings = Settings::default();
+    settings.quick = std::env::var("FUGUE_FULL").is_err();
+    settings.full = !settings.quick;
+    let engine = match Engine::new(&settings.artifacts_dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    match ablations::ablate_tree(&engine, &settings) {
+        Ok(report) => println!("{report}"),
+        Err(e) => eprintln!("ablate-tree failed: {e:#}"),
+    }
+    match ablations::ablate_vmap(&engine, &settings) {
+        Ok(report) => println!("{report}"),
+        Err(e) => eprintln!("ablate-vmap failed: {e:#}"),
+    }
+}

@@ -1,0 +1,22 @@
+//! Bench: Fig 2b (E3) — SKIM ms/effective-sample vs dimensionality.
+
+use fugue::config::Settings;
+use fugue::harness::fig2b;
+use fugue::runtime::engine::Engine;
+
+fn main() {
+    let mut settings = Settings::default();
+    settings.quick = std::env::var("FUGUE_FULL").is_err();
+    settings.full = !settings.quick;
+    let engine = match Engine::new(&settings.artifacts_dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    match fig2b::run(&engine, &settings) {
+        Ok(report) => println!("{report}"),
+        Err(e) => eprintln!("bench failed: {e:#}"),
+    }
+}

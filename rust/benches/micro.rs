@@ -1,0 +1,133 @@
+//! Micro-benchmarks of the L3 substrates (no artifacts needed): autodiff
+//! tape throughput, native potentials, RNG, ESS, PJRT dispatch overhead
+//! when artifacts exist.  These feed the §Perf log in EXPERIMENTS.md.
+
+use fugue::data;
+use fugue::mcmc::Potential;
+use fugue::models::{HmmNative, LogisticNative, SkimNative};
+use fugue::models::skim::SkimHypers;
+use fugue::rng::Rng;
+use fugue::util::timer::bench;
+
+fn main() {
+    println!("{:<44} {:>12} {:>12}", "microbench", "median", "mean");
+    let mut report = |name: &str, t: fugue::util::timer::Timing| {
+        println!(
+            "{:<44} {:>9.3} ms {:>9.3} ms",
+            name,
+            t.median_ms(),
+            t.mean_ms()
+        );
+    };
+
+    // RNG throughput
+    {
+        let mut rng = Rng::new(0);
+        let mut out = vec![0.0; 100_000];
+        report(
+            "rng: 100k normals",
+            bench(3, 20, || rng.fill_normal(&mut out)),
+        );
+    }
+
+    // native potential evaluations (the Stan-architecture leapfrog body)
+    {
+        let d = data::make_hmm(0, 600, 100, 3, 10);
+        let mut pot = HmmNative::new(d.obs, d.sup_states, 3, 10);
+        let z = vec![0.1; pot.dim()];
+        let mut g = vec![0.0; pot.dim()];
+        report(
+            "hmm native potential_and_grad (T=600)",
+            bench(3, 50, || {
+                let _ = pot.value_and_grad(&z, &mut g);
+            }),
+        );
+    }
+    {
+        let d = data::make_covtype_like(0, 50_000, 54);
+        let mut pot = LogisticNative::new(d.x, d.y, 50_000, 54);
+        let z = vec![0.05; pot.dim()];
+        let mut g = vec![0.0; pot.dim()];
+        report(
+            "logistic native potential_and_grad (N=50k)",
+            bench(2, 10, || {
+                let _ = pot.value_and_grad(&z, &mut g);
+            }),
+        );
+    }
+    {
+        let d = data::make_skim(0, 200, 100, 3);
+        let mut pot = SkimNative::new(d.x, d.y, 200, 100, SkimHypers::default());
+        let z = vec![0.1; pot.dim()];
+        let mut g = vec![0.0; pot.dim()];
+        report(
+            "skim native potential_and_grad (N=200,p=100)",
+            bench(2, 10, || {
+                let _ = pot.value_and_grad(&z, &mut g);
+            }),
+        );
+    }
+
+    // ESS cost
+    {
+        let mut rng = Rng::new(1);
+        let chain: Vec<f64> = (0..1000).map(|_| rng.normal()).collect();
+        let chains = [chain];
+        report(
+            "ess: 1 chain x 1000 draws",
+            bench(3, 30, || {
+                let _ = fugue::diagnostics::effective_sample_size(&chains);
+            }),
+        );
+    }
+
+    // PJRT dispatch overhead: potential_and_grad on the smallest model
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use fugue::harness::builders::Workload;
+        use fugue::runtime::engine::Engine;
+        use fugue::runtime::PjrtPotential;
+        let engine = Engine::new("artifacts").unwrap();
+        if let Ok(entry) = engine.manifest.get("hmm_potential_and_grad_f32") {
+            let dim = entry.dim;
+            let dt = entry.inputs[0].dtype;
+            let workload = Workload::for_model(&engine, "hmm", 0).unwrap();
+            let mut pot = PjrtPotential::new(
+                &engine,
+                "hmm_potential_and_grad_f32",
+                &workload.tensors(dt).unwrap(),
+            )
+            .unwrap();
+            let z = vec![0.1; dim];
+            let mut g = vec![0.0; dim];
+            report(
+                "hmm PJRT potential_and_grad dispatch",
+                bench(5, 50, || {
+                    let _ = pot.eval(&z, &mut g).unwrap();
+                }),
+            );
+        }
+        if let Ok(entry) = engine.manifest.get("hmm_nuts_step_f32") {
+            let dim = entry.dim;
+            let dt = entry.inputs[1].dtype;
+            let workload = Workload::for_model(&engine, "hmm", 0).unwrap();
+            let mut step = fugue::runtime::NutsStep::new(
+                &engine,
+                "hmm_nuts_step_f32",
+                &workload.tensors(dt).unwrap(),
+            )
+            .unwrap();
+            let z = vec![0.1; dim];
+            let mass = vec![1.0; dim];
+            let mut k = 0u32;
+            report(
+                "hmm fused nuts_step dispatch (whole draw)",
+                bench(5, 50, || {
+                    k += 1;
+                    let _ = step.step([k, 1], &z, 0.05, &mass).unwrap();
+                }),
+            );
+        }
+    } else {
+        println!("(artifacts/ absent: skipping PJRT micro-benches)");
+    }
+}

@@ -1,0 +1,26 @@
+//! Bench: Table 2a, COVTYPE column (E2). CovType-substitute logistic
+//! regression at the manifest's baked N (50k default; the paper's
+//! 581,012 via `python -m compile.aot --covtype-n 581012`).
+
+use fugue::config::Settings;
+use fugue::harness::table2a;
+use fugue::runtime::engine::Engine;
+
+fn main() {
+    let mut settings = Settings::default();
+    settings.quick = std::env::var("FUGUE_FULL").is_err();
+    settings.full = !settings.quick;
+    let engine = match Engine::new(&settings.artifacts_dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    for model in ["covtype", "covtype_small"] {
+        match table2a::run(&engine, &settings, Some(model)) {
+            Ok(report) => println!("{report}"),
+            Err(e) => eprintln!("bench {model} failed: {e:#}"),
+        }
+    }
+}

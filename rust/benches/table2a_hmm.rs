@@ -1,0 +1,24 @@
+//! Bench: Table 2a, HMM column (E1). Thin wrapper over the harness so
+//! `cargo bench` regenerates the paper row with reduced defaults
+//! (env FUGUE_FULL=1 for paper-scale).
+
+use fugue::config::Settings;
+use fugue::harness::table2a;
+use fugue::runtime::engine::Engine;
+
+fn main() {
+    let mut settings = Settings::default();
+    settings.quick = std::env::var("FUGUE_FULL").is_err();
+    settings.full = !settings.quick;
+    let engine = match Engine::new(&settings.artifacts_dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    match table2a::run(&engine, &settings, Some("hmm")) {
+        Ok(report) => println!("{report}"),
+        Err(e) => eprintln!("bench failed: {e:#}"),
+    }
+}

@@ -1,0 +1,403 @@
+//! Tape-based reverse-mode automatic differentiation.
+//!
+//! This is the *Stan substrate* of the benchmark suite (DESIGN.md §3):
+//! Stan's performance profile comes from compiled native code running a
+//! reverse-mode sweep over an expression tape, with heavy lifting done
+//! by fused vector primitives (`bernoulli_logit_glm_lpmf`, cholesky
+//! rev-rules, ...).  We reproduce exactly that architecture:
+//!
+//! * scalar nodes for the (low-dimensional) prior/transform algebra;
+//! * [`Tape::composite`] nodes — scalar-valued primitives with
+//!   *precomputed partials* wrt each parent — for the model hot paths
+//!   (GLM likelihood, HMM forward algorithm, SKIM marginal), mirroring
+//!   Stan's fused math-library rev rules.
+//!
+//! The native NUTS sampler ([`crate::mcmc`]) consumes this through the
+//! [`crate::mcmc::Potential`] trait; every evaluation builds a fresh
+//! tape (like Stan's per-leapfrog nested autodiff region).
+
+/// Handle to a node on a [`Tape`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Var(pub u32);
+
+#[derive(Debug)]
+enum Op {
+    /// Leaf (input or constant): no parents.
+    Leaf,
+    Add(u32, u32),
+    Sub(u32, u32),
+    Mul(u32, u32),
+    Div(u32, u32),
+    Neg(u32),
+    Exp(u32),
+    Ln(u32),
+    Log1p(u32),
+    Sqrt(u32),
+    Sigmoid(u32),
+    Softplus(u32),
+    Tanh(u32),
+    Powi(u32, i32),
+    /// value = c * parent
+    Scale(u32, f64),
+    /// value = parent + c
+    Offset(u32),
+    /// Scalar-valued fused primitive with precomputed partials.
+    Composite {
+        parents: Box<[u32]>,
+        partials: Box<[f64]>,
+    },
+}
+
+struct Node {
+    op: Op,
+    value: f64,
+}
+
+/// Reverse-mode tape. Build the expression with the `Tape` methods, then
+/// call [`Tape::grad`] on the output.
+pub struct Tape {
+    nodes: Vec<Node>,
+}
+
+impl Default for Tape {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tape {
+    pub fn new() -> Self {
+        Tape {
+            nodes: Vec::with_capacity(1024),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn value(&self, v: Var) -> f64 {
+        self.nodes[v.0 as usize].value
+    }
+
+    fn push(&mut self, op: Op, value: f64) -> Var {
+        let idx = self.nodes.len() as u32;
+        self.nodes.push(Node { op, value });
+        Var(idx)
+    }
+
+    /// Differentiable input leaf.
+    pub fn input(&mut self, value: f64) -> Var {
+        self.push(Op::Leaf, value)
+    }
+
+    /// Constant leaf (gradient is computed but conventionally unused).
+    pub fn constant(&mut self, value: f64) -> Var {
+        self.push(Op::Leaf, value)
+    }
+
+    pub fn add(&mut self, a: Var, b: Var) -> Var {
+        let v = self.value(a) + self.value(b);
+        self.push(Op::Add(a.0, b.0), v)
+    }
+
+    pub fn sub(&mut self, a: Var, b: Var) -> Var {
+        let v = self.value(a) - self.value(b);
+        self.push(Op::Sub(a.0, b.0), v)
+    }
+
+    pub fn mul(&mut self, a: Var, b: Var) -> Var {
+        let v = self.value(a) * self.value(b);
+        self.push(Op::Mul(a.0, b.0), v)
+    }
+
+    pub fn div(&mut self, a: Var, b: Var) -> Var {
+        let v = self.value(a) / self.value(b);
+        self.push(Op::Div(a.0, b.0), v)
+    }
+
+    pub fn neg(&mut self, a: Var) -> Var {
+        let v = -self.value(a);
+        self.push(Op::Neg(a.0), v)
+    }
+
+    pub fn exp(&mut self, a: Var) -> Var {
+        let v = self.value(a).exp();
+        self.push(Op::Exp(a.0), v)
+    }
+
+    pub fn ln(&mut self, a: Var) -> Var {
+        let v = self.value(a).ln();
+        self.push(Op::Ln(a.0), v)
+    }
+
+    pub fn log1p(&mut self, a: Var) -> Var {
+        let v = self.value(a).ln_1p();
+        self.push(Op::Log1p(a.0), v)
+    }
+
+    pub fn sqrt(&mut self, a: Var) -> Var {
+        let v = self.value(a).sqrt();
+        self.push(Op::Sqrt(a.0), v)
+    }
+
+    pub fn sigmoid(&mut self, a: Var) -> Var {
+        let x = self.value(a);
+        let v = if x >= 0.0 {
+            1.0 / (1.0 + (-x).exp())
+        } else {
+            let e = x.exp();
+            e / (1.0 + e)
+        };
+        self.push(Op::Sigmoid(a.0), v)
+    }
+
+    /// log(1 + e^x), overflow-safe.
+    pub fn softplus(&mut self, a: Var) -> Var {
+        let x = self.value(a);
+        let v = if x > 30.0 { x } else { x.exp().ln_1p() };
+        self.push(Op::Softplus(a.0), v)
+    }
+
+    pub fn tanh(&mut self, a: Var) -> Var {
+        let v = self.value(a).tanh();
+        self.push(Op::Tanh(a.0), v)
+    }
+
+    pub fn powi(&mut self, a: Var, n: i32) -> Var {
+        let v = self.value(a).powi(n);
+        self.push(Op::Powi(a.0, n), v)
+    }
+
+    pub fn square(&mut self, a: Var) -> Var {
+        self.powi(a, 2)
+    }
+
+    /// c / x for constant numerator.
+    pub fn div_const_by(&mut self, c: f64, x: Var) -> Var {
+        let cv = self.constant(c);
+        self.div(cv, x)
+    }
+
+    pub fn scale(&mut self, a: Var, c: f64) -> Var {
+        let v = c * self.value(a);
+        self.push(Op::Scale(a.0, c), v)
+    }
+
+    pub fn offset(&mut self, a: Var, c: f64) -> Var {
+        let v = self.value(a) + c;
+        self.push(Op::Offset(a.0), v)
+    }
+
+    pub fn sum(&mut self, xs: &[Var]) -> Var {
+        let value: f64 = xs.iter().map(|v| self.value(*v)).sum();
+        let partials = vec![1.0; xs.len()];
+        self.composite(xs, &partials, value)
+    }
+
+    /// dot(w, c) for constant coefficients c.
+    pub fn dot_const(&mut self, w: &[Var], c: &[f64]) -> Var {
+        assert_eq!(w.len(), c.len());
+        let value: f64 = w.iter().zip(c).map(|(v, x)| self.value(*v) * x).sum();
+        self.composite(w, c, value)
+    }
+
+    /// Numerically-stable logsumexp with exact partials (softmax).
+    pub fn logsumexp(&mut self, xs: &[Var]) -> Var {
+        let vals: Vec<f64> = xs.iter().map(|v| self.value(*v)).collect();
+        let m = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        if m == f64::NEG_INFINITY {
+            return self.constant(f64::NEG_INFINITY);
+        }
+        let sum: f64 = vals.iter().map(|v| (v - m).exp()).sum();
+        let value = m + sum.ln();
+        let partials: Vec<f64> = vals.iter().map(|v| (v - m).exp() / sum).collect();
+        self.composite(xs, &partials, value)
+    }
+
+    /// Scalar-valued fused primitive: `value` with `partials[i] =
+    /// d value / d parents[i]` computed by the caller (the Stan
+    /// math-library pattern).
+    pub fn composite(&mut self, parents: &[Var], partials: &[f64], value: f64) -> Var {
+        assert_eq!(parents.len(), partials.len());
+        let parents: Box<[u32]> = parents.iter().map(|v| v.0).collect();
+        self.push(
+            Op::Composite {
+                parents,
+                partials: partials.into(),
+            },
+            value,
+        )
+    }
+
+    /// Reverse sweep from `output`; returns the adjoint of every node
+    /// (index with `Var.0`).
+    pub fn grad(&self, output: Var) -> Vec<f64> {
+        let mut adj = vec![0.0; self.nodes.len()];
+        adj[output.0 as usize] = 1.0;
+        for i in (0..self.nodes.len()).rev() {
+            let a = adj[i];
+            if a == 0.0 {
+                continue;
+            }
+            let node = &self.nodes[i];
+            match &node.op {
+                Op::Leaf => {}
+                Op::Add(x, y) => {
+                    adj[*x as usize] += a;
+                    adj[*y as usize] += a;
+                }
+                Op::Sub(x, y) => {
+                    adj[*x as usize] += a;
+                    adj[*y as usize] -= a;
+                }
+                Op::Mul(x, y) => {
+                    let (vx, vy) = (self.nodes[*x as usize].value, self.nodes[*y as usize].value);
+                    adj[*x as usize] += a * vy;
+                    adj[*y as usize] += a * vx;
+                }
+                Op::Div(x, y) => {
+                    let (vx, vy) = (self.nodes[*x as usize].value, self.nodes[*y as usize].value);
+                    adj[*x as usize] += a / vy;
+                    adj[*y as usize] -= a * vx / (vy * vy);
+                }
+                Op::Neg(x) => adj[*x as usize] -= a,
+                Op::Exp(x) => adj[*x as usize] += a * node.value,
+                Op::Ln(x) => adj[*x as usize] += a / self.nodes[*x as usize].value,
+                Op::Log1p(x) => adj[*x as usize] += a / (1.0 + self.nodes[*x as usize].value),
+                Op::Sqrt(x) => adj[*x as usize] += a * 0.5 / node.value,
+                Op::Sigmoid(x) => adj[*x as usize] += a * node.value * (1.0 - node.value),
+                Op::Softplus(x) => {
+                    let xv = self.nodes[*x as usize].value;
+                    let s = if xv >= 0.0 {
+                        1.0 / (1.0 + (-xv).exp())
+                    } else {
+                        let e = xv.exp();
+                        e / (1.0 + e)
+                    };
+                    adj[*x as usize] += a * s;
+                }
+                Op::Tanh(x) => adj[*x as usize] += a * (1.0 - node.value * node.value),
+                Op::Powi(x, n) => {
+                    let xv = self.nodes[*x as usize].value;
+                    adj[*x as usize] += a * (*n as f64) * xv.powi(n - 1);
+                }
+                Op::Scale(x, c) => adj[*x as usize] += a * c,
+                Op::Offset(x) => adj[*x as usize] += a,
+                Op::Composite { parents, partials } => {
+                    for (p, g) in parents.iter().zip(partials.iter()) {
+                        adj[*p as usize] += a * g;
+                    }
+                }
+            }
+        }
+        adj
+    }
+}
+
+/// Gradient of `f` at `x` by central finite differences (test utility).
+pub fn finite_diff<F: FnMut(&[f64]) -> f64>(x: &[f64], mut f: F, h: f64) -> Vec<f64> {
+    let mut g = vec![0.0; x.len()];
+    let mut xp = x.to_vec();
+    for i in 0..x.len() {
+        let hi = h * (1.0 + x[i].abs());
+        xp[i] = x[i] + hi;
+        let fp = f(&xp);
+        xp[i] = x[i] - hi;
+        let fm = f(&xp);
+        xp[i] = x[i];
+        g[i] = (fp - fm) / (2.0 * hi);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad_of<F: Fn(&mut Tape, &[Var]) -> Var>(x: &[f64], build: F) -> (f64, Vec<f64>) {
+        let mut t = Tape::new();
+        let vars: Vec<Var> = x.iter().map(|&v| t.input(v)).collect();
+        let out = build(&mut t, &vars);
+        let adj = t.grad(out);
+        (t.value(out), vars.iter().map(|v| adj[v.0 as usize]).collect())
+    }
+
+    #[test]
+    fn basic_ops_match_finite_diff() {
+        let f = |t: &mut Tape, v: &[Var]| {
+            // sin-free smoke: ((x*y + exp(x)) / sqrt(y)) - softplus(x)
+            let xy = t.mul(v[0], v[1]);
+            let ex = t.exp(v[0]);
+            let num = t.add(xy, ex);
+            let sq = t.sqrt(v[1]);
+            let frac = t.div(num, sq);
+            let sp = t.softplus(v[0]);
+            t.sub(frac, sp)
+        };
+        let x = [0.7, 2.3];
+        let (_, g) = grad_of(&x, f);
+        let fd = finite_diff(&x, |x| grad_of(x, f).0, 1e-6);
+        for i in 0..2 {
+            assert!((g[i] - fd[i]).abs() < 1e-6, "{} vs {}", g[i], fd[i]);
+        }
+    }
+
+    #[test]
+    fn logsumexp_matches_finite_diff() {
+        let f = |t: &mut Tape, v: &[Var]| t.logsumexp(v);
+        let x = [1.0, -2.0, 0.5, 3.0];
+        let (val, g) = grad_of(&x, f);
+        let expect = x.iter().map(|v| v.exp()).sum::<f64>().ln();
+        assert!((val - expect).abs() < 1e-12);
+        let fd = finite_diff(&x, |x| grad_of(x, f).0, 1e-6);
+        for i in 0..x.len() {
+            assert!((g[i] - fd[i]).abs() < 1e-6);
+        }
+        assert!((g.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fanout_accumulates() {
+        // y = x*x + x  => dy/dx = 2x + 1
+        let (v, g) = grad_of(&[3.0], |t, v| {
+            let sq = t.mul(v[0], v[0]);
+            t.add(sq, v[0])
+        });
+        assert_eq!(v, 12.0);
+        assert_eq!(g[0], 7.0);
+    }
+
+    #[test]
+    fn composite_partials_flow() {
+        // composite computing 2x + 3y with explicit partials
+        let (v, g) = grad_of(&[5.0, 7.0], |t, v| {
+            let value = 2.0 * t.value(v[0]) + 3.0 * t.value(v[1]);
+            t.composite(v, &[2.0, 3.0], value)
+        });
+        assert_eq!(v, 31.0);
+        assert_eq!(g, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn dot_const_and_sum() {
+        let (v, g) = grad_of(&[1.0, 2.0, 3.0], |t, v| {
+            let d = t.dot_const(v, &[4.0, 5.0, 6.0]);
+            let s = t.sum(v);
+            t.add(d, s)
+        });
+        assert_eq!(v, 4.0 + 10.0 + 18.0 + 6.0);
+        assert_eq!(g, vec![5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn powi_negative_exponent() {
+        let (v, g) = grad_of(&[2.0], |t, v| t.powi(v[0], -2));
+        assert!((v - 0.25).abs() < 1e-15);
+        assert!((g[0] + 0.25).abs() < 1e-12);
+    }
+}

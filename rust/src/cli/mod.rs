@@ -1,0 +1,122 @@
+//! Minimal CLI argument parser (no `clap` in the offline crate set):
+//! positional arguments + `--flag value` pairs + boolean `--switch`es.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: BTreeSet<String>,
+}
+
+/// Flags that take a value; everything else starting with `--` is a switch.
+const VALUE_FLAGS: &[&str] = &[
+    "artifacts",
+    "results",
+    "config",
+    "seed",
+    "warmup",
+    "samples",
+    "chains",
+    "target-accept",
+    "max-tree-depth",
+    "model",
+    "backend",
+    "dtype",
+    "step-size",
+    "steps",
+    "lr",
+    "out",
+    "hmc-steps",
+];
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = argv.peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if VALUE_FLAGS.contains(&name) {
+                    let v = iter
+                        .next()
+                        .with_context(|| format!("flag --{name} expects a value"))?;
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.switches.insert(name.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.parse().with_context(|| format!("--{name} {v}: not an integer")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.get(name)
+            .map(|v| v.parse().with_context(|| format!("--{name} {v}: not an integer")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse().with_context(|| format!("--{name} {v}: not a number")))
+            .transpose()
+    }
+
+    pub fn subcommand(&self) -> Result<&str> {
+        match self.positional.first() {
+            Some(s) => Ok(s.as_str()),
+            None => bail!("no subcommand; run `fugue help`"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse("experiment table2a --model hmm --quick --seed 7");
+        assert_eq!(a.positional, vec!["experiment", "table2a"]);
+        assert_eq!(a.get("model"), Some("hmm"));
+        assert!(a.has("quick"));
+        assert_eq!(a.get_u64("seed").unwrap(), Some(7));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse("run --warmup=250 --dtype=f64");
+        assert_eq!(a.get_usize("warmup").unwrap(), Some(250));
+        assert_eq!(a.get("dtype"), Some("f64"));
+    }
+
+    #[test]
+    fn rejects_bad_numbers() {
+        let a = parse("run --warmup abc");
+        assert!(a.get_usize("warmup").is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Experiment/run configuration: defaults, optional JSON config file,
+//! CLI flag overrides (in that precedence order).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::cli::Args;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Settings {
+    pub artifacts_dir: String,
+    pub results_dir: String,
+    pub seed: u64,
+    /// shrink workloads for smoke runs (`--quick`)
+    pub quick: bool,
+    /// paper-scale workloads (`--full`)
+    pub full: bool,
+    pub num_warmup: Option<usize>,
+    pub num_samples: Option<usize>,
+    pub num_chains: usize,
+    pub target_accept: f64,
+    pub max_tree_depth: u32,
+}
+
+impl Default for Settings {
+    fn default() -> Self {
+        Settings {
+            artifacts_dir: "artifacts".to_string(),
+            results_dir: "results".to_string(),
+            seed: 20191222,
+            quick: false,
+            full: false,
+            num_warmup: None,
+            num_samples: None,
+            num_chains: 1,
+            target_accept: 0.8,
+            max_tree_depth: 10,
+        }
+    }
+}
+
+impl Settings {
+    /// Load from an optional JSON file then apply CLI overrides.
+    pub fn from_args(args: &Args) -> Result<Settings> {
+        let mut s = Settings::default();
+        if let Some(path) = args.get("config") {
+            s.apply_json(path)?;
+        }
+        if let Some(v) = args.get("artifacts") {
+            s.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = args.get("results") {
+            s.results_dir = v.to_string();
+        }
+        if let Some(v) = args.get_u64("seed")? {
+            s.seed = v;
+        }
+        if args.has("quick") {
+            s.quick = true;
+        }
+        if args.has("full") {
+            s.full = true;
+        }
+        if let Some(v) = args.get_usize("warmup")? {
+            s.num_warmup = Some(v);
+        }
+        if let Some(v) = args.get_usize("samples")? {
+            s.num_samples = Some(v);
+        }
+        if let Some(v) = args.get_usize("chains")? {
+            s.num_chains = v;
+        }
+        if let Some(v) = args.get_f64("target-accept")? {
+            s.target_accept = v;
+        }
+        if let Some(v) = args.get_usize("max-tree-depth")? {
+            s.max_tree_depth = v as u32;
+        }
+        Ok(s)
+    }
+
+    fn apply_json(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        let j = Json::parse(&text).context("parsing config JSON")?;
+        if let Some(v) = j.get("artifacts_dir").and_then(|v| v.as_str()) {
+            self.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = j.get("results_dir").and_then(|v| v.as_str()) {
+            self.results_dir = v.to_string();
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_i64()) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = j.get("num_chains").and_then(|v| v.as_usize()) {
+            self.num_chains = v;
+        }
+        if let Some(v) = j.get("target_accept").and_then(|v| v.as_f64()) {
+            self.target_accept = v;
+        }
+        if let Some(v) = j.get("num_warmup").and_then(|v| v.as_usize()) {
+            self.num_warmup = Some(v);
+        }
+        if let Some(v) = j.get("num_samples").and_then(|v| v.as_usize()) {
+            self.num_samples = Some(v);
+        }
+        Ok(())
+    }
+
+    /// Warmup/samples with quick/full scaling and per-experiment paper
+    /// defaults.
+    pub fn budget(&self, paper_warmup: usize, paper_samples: usize) -> (usize, usize) {
+        let scale = |x: usize| {
+            if self.quick {
+                (x / 10).max(20)
+            } else if self.full {
+                x
+            } else {
+                (x / 2).max(50)
+            }
+        };
+        (
+            self.num_warmup.unwrap_or_else(|| scale(paper_warmup)),
+            self.num_samples.unwrap_or_else(|| scale(paper_samples)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_scales() {
+        let mut s = Settings::default();
+        assert_eq!(s.budget(1000, 1000), (500, 500));
+        s.quick = true;
+        assert_eq!(s.budget(1000, 1000), (100, 100));
+        s.quick = false;
+        s.full = true;
+        assert_eq!(s.budget(1000, 1000), (1000, 1000));
+        s.num_warmup = Some(7);
+        assert_eq!(s.budget(1000, 1000).0, 7);
+    }
+}

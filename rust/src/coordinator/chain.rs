@@ -1,0 +1,227 @@
+//! Chain runner: warmup (dual averaging + Welford windows) then
+//! sampling, with per-phase timing and leapfrog accounting — the
+//! numbers Table 2a and Fig 2b are computed from.
+
+use anyhow::Result;
+
+use crate::coordinator::sampler::Sampler;
+use crate::coordinator::warmup::WarmupSchedule;
+use crate::mcmc::{DualAverage, Welford};
+use crate::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct NutsOptions {
+    pub num_warmup: usize,
+    pub num_samples: usize,
+    pub target_accept: f64,
+    pub init_step_size: f64,
+    /// Some(eps): skip step-size adaptation (the paper fixes eps for the
+    /// COVTYPE benchmark and for Pyro's HMM runs).
+    pub fixed_step_size: Option<f64>,
+    pub adapt_mass: bool,
+    pub seed: u64,
+}
+
+impl Default for NutsOptions {
+    fn default() -> Self {
+        NutsOptions {
+            num_warmup: 500,
+            num_samples: 500,
+            target_accept: 0.8,
+            init_step_size: 0.1,
+            fixed_step_size: None,
+            adapt_mass: true,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ChainStats {
+    pub accept_prob: Vec<f64>,
+    pub num_leapfrog: Vec<u32>,
+    pub potential: Vec<f64>,
+    pub diverging: Vec<bool>,
+    pub depth: Vec<u32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ChainResult {
+    /// (num_samples x dim) row-major
+    pub samples: Vec<f64>,
+    pub dim: usize,
+    pub stats: ChainStats,
+    pub step_size: f64,
+    pub inv_mass: Vec<f64>,
+    pub warmup_secs: f64,
+    pub sample_secs: f64,
+    /// leapfrogs during the sampling phase only
+    pub sample_leapfrogs: u64,
+    pub total_leapfrogs: u64,
+    pub divergences: u64,
+}
+
+impl ChainResult {
+    /// Time per leapfrog during sampling — Table 2a's metric.
+    pub fn ms_per_leapfrog(&self) -> f64 {
+        1e3 * self.sample_secs / self.sample_leapfrogs.max(1) as f64
+    }
+}
+
+/// Run one chain: Stan-style warmup + sampling.
+pub fn run_chain<S: Sampler>(
+    sampler: &mut S,
+    init_z: &[f64],
+    opts: &NutsOptions,
+) -> Result<ChainResult> {
+    let dim = sampler.dim();
+    assert_eq!(init_z.len(), dim);
+    let mut rng = Rng::new(opts.seed);
+    let schedule = WarmupSchedule::build(opts.num_warmup);
+    let closes = schedule.window_closes();
+
+    let mut z = init_z.to_vec();
+    let mut inv_mass = vec![1.0; dim];
+    let mut da = DualAverage::new(
+        opts.fixed_step_size.unwrap_or(opts.init_step_size),
+        opts.target_accept,
+    );
+    let mut step_size = opts.fixed_step_size.unwrap_or(opts.init_step_size);
+    let mut welford = Welford::new(dim);
+
+    let mut stats = ChainStats::default();
+    let mut samples = Vec::with_capacity(opts.num_samples * dim);
+    let mut sample_leapfrogs: u64 = 0;
+    let mut total_leapfrogs: u64 = 0;
+    let mut divergences: u64 = 0;
+
+    let t_warm = std::time::Instant::now();
+    let mut warmup_secs = 0.0;
+
+    for i in 0..opts.num_warmup + opts.num_samples {
+        let tr = sampler.draw(&mut rng, &z, step_size, &inv_mass)?;
+        z = tr.z.clone();
+        total_leapfrogs += tr.num_leapfrog as u64;
+        if tr.diverging {
+            divergences += 1;
+        }
+        stats.accept_prob.push(tr.accept_prob);
+        stats.num_leapfrog.push(tr.num_leapfrog);
+        stats.potential.push(tr.potential);
+        stats.diverging.push(tr.diverging);
+        stats.depth.push(tr.depth);
+
+        if i < opts.num_warmup {
+            if opts.fixed_step_size.is_none() {
+                da.update(tr.accept_prob);
+                step_size = da.step_size();
+            }
+            if opts.adapt_mass && schedule.in_slow(i) {
+                welford.update(&z);
+                if closes.contains(&i) {
+                    inv_mass = welford.regularized_variance();
+                    welford.reset();
+                    if opts.fixed_step_size.is_none() {
+                        da.restart(da.step_size());
+                        step_size = da.step_size();
+                    }
+                }
+            }
+            if i + 1 == opts.num_warmup {
+                if opts.fixed_step_size.is_none() {
+                    step_size = da.final_step_size();
+                }
+                warmup_secs = t_warm.elapsed().as_secs_f64();
+            }
+        } else {
+            samples.extend_from_slice(&z);
+            sample_leapfrogs += tr.num_leapfrog as u64;
+        }
+    }
+    if opts.num_warmup == 0 {
+        warmup_secs = 0.0;
+    }
+    let sample_secs = t_warm.elapsed().as_secs_f64() - warmup_secs;
+
+    Ok(ChainResult {
+        samples,
+        dim,
+        stats,
+        step_size,
+        inv_mass,
+        warmup_secs,
+        sample_secs,
+        sample_leapfrogs,
+        total_leapfrogs,
+        divergences,
+    })
+}
+
+/// Run several chains sequentially with derived seeds and random
+/// uniform(-2,2) initializations (NumPyro's init_to_uniform).
+pub fn run_chains<S: Sampler>(
+    sampler: &mut S,
+    num_chains: usize,
+    opts: &NutsOptions,
+) -> Result<Vec<ChainResult>> {
+    let dim = sampler.dim();
+    let mut results = Vec::with_capacity(num_chains);
+    for c in 0..num_chains {
+        let mut init_rng = Rng::new(opts.seed ^ (0xC0FFEE + c as u64));
+        let init_z: Vec<f64> = (0..dim).map(|_| init_rng.uniform_in(-2.0, 2.0)).collect();
+        let mut o = opts.clone();
+        o.seed = opts.seed.wrapping_add(1 + c as u64);
+        results.push(run_chain(sampler, &init_z, &o)?);
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sampler::{NativeSampler, TreeAlgorithm};
+    use crate::mcmc::Potential;
+
+    /// Standard 2-d Gaussian potential.
+    struct Gauss;
+    impl Potential for Gauss {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+            grad.copy_from_slice(z);
+            0.5 * (z[0] * z[0] + z[1] * z[1])
+        }
+    }
+
+    fn check_gaussian(algorithm: TreeAlgorithm) {
+        let mut sampler = NativeSampler::new(Gauss, algorithm, 10);
+        let opts = NutsOptions {
+            num_warmup: 300,
+            num_samples: 1500,
+            seed: 42,
+            ..Default::default()
+        };
+        let res = run_chain(&mut sampler, &[1.0, -1.0], &opts).unwrap();
+        let n = opts.num_samples as f64;
+        for d in 0..2 {
+            let mean: f64 = res.samples.chunks(2).map(|r| r[d]).sum::<f64>() / n;
+            let var: f64 = res.samples.chunks(2).map(|r| (r[d] - mean).powi(2)).sum::<f64>() / n;
+            assert!(mean.abs() < 0.15, "{algorithm:?} mean[{d}] {mean}");
+            assert!((var - 1.0).abs() < 0.25, "{algorithm:?} var[{d}] {var}");
+        }
+        // adaptation reached a sensible step size and acceptance
+        let accept: f64 = res.stats.accept_prob[300..].iter().sum::<f64>() / n;
+        assert!(accept > 0.6, "{algorithm:?} accept {accept}");
+    }
+
+    #[test]
+    fn iterative_samples_standard_gaussian() {
+        check_gaussian(TreeAlgorithm::Iterative);
+    }
+
+    #[test]
+    fn recursive_samples_standard_gaussian() {
+        check_gaussian(TreeAlgorithm::Recursive);
+    }
+}

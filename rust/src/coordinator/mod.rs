@@ -1,0 +1,16 @@
+//! The inference coordinator: chain lifecycle, Stan-style warmup
+//! adaptation, multi-chain scheduling, and dispatch accounting.
+//!
+//! The paper leaves this layer to Python; here it is the L3 Rust
+//! service.  The key design point is that the compiled NUTS artifact
+//! takes step size and inverse mass matrix as *inputs*, so all
+//! adaptation happens host-side between dispatches without recompiling
+//! (DESIGN.md §2).
+
+pub mod chain;
+pub mod sampler;
+pub mod warmup;
+
+pub use chain::{run_chain, run_chains, ChainResult, ChainStats, NutsOptions};
+pub use sampler::{FusedSampler, NativeSampler, Sampler, TreeAlgorithm};
+pub use warmup::WarmupSchedule;

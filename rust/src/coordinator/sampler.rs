@@ -1,0 +1,152 @@
+//! The [`Sampler`] abstraction: one NUTS transition, whatever the
+//! backend.  The three implementations are the three architectures of
+//! Table 2a (DESIGN.md §3):
+//!
+//! * [`FusedSampler`] — NumPyro architecture: one PJRT dispatch per draw
+//!   (the whole Algorithm-2 tree compiled end-to-end).
+//! * [`NativeSampler`] over a native potential — Stan architecture:
+//!   compiled native code, no dispatch boundary at all.
+//! * [`NativeSampler`] over [`crate::runtime::PjrtPotential`] with the
+//!   recursive tree — Pyro architecture: host-side tree, one compiled
+//!   dispatch per leapfrog.
+
+use anyhow::Result;
+
+use crate::mcmc::{nuts_iterative, nuts_recursive, Potential, Transition};
+use crate::rng::Rng;
+use crate::runtime::NutsStep;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TreeAlgorithm {
+    /// Algorithm 1 (recursive BuildTree)
+    Recursive,
+    /// Algorithm 2 (IterativeBuildTree)
+    Iterative,
+}
+
+pub trait Sampler {
+    fn dim(&self) -> usize;
+
+    fn draw(
+        &mut self,
+        rng: &mut Rng,
+        z: &[f64],
+        step_size: f64,
+        inv_mass: &[f64],
+    ) -> Result<Transition>;
+
+    /// Compiled-callable dispatches so far (for the Table 2a narrative).
+    fn dispatches(&self) -> u64 {
+        0
+    }
+}
+
+impl Sampler for Box<dyn Sampler> {
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+
+    fn draw(
+        &mut self,
+        rng: &mut Rng,
+        z: &[f64],
+        step_size: f64,
+        inv_mass: &[f64],
+    ) -> Result<Transition> {
+        (**self).draw(rng, z, step_size, inv_mass)
+    }
+
+    fn dispatches(&self) -> u64 {
+        (**self).dispatches()
+    }
+}
+
+/// NumPyro architecture: the fused `nuts_step` artifact.
+pub struct FusedSampler {
+    pub step: NutsStep,
+}
+
+impl FusedSampler {
+    pub fn new(step: NutsStep) -> Self {
+        FusedSampler { step }
+    }
+}
+
+impl Sampler for FusedSampler {
+    fn dim(&self) -> usize {
+        self.step.dim
+    }
+
+    fn draw(
+        &mut self,
+        rng: &mut Rng,
+        z: &[f64],
+        step_size: f64,
+        inv_mass: &[f64],
+    ) -> Result<Transition> {
+        let key = [
+            (rng.next_u64() >> 32) as u32,
+            (rng.next_u64() & 0xFFFF_FFFF) as u32,
+        ];
+        self.step.step(key, z, step_size, inv_mass)
+    }
+
+    fn dispatches(&self) -> u64 {
+        self.step.dispatches
+    }
+}
+
+/// Host-side tree building over any [`Potential`] (native autodiff =
+/// Stan architecture; PJRT potential = Pyro architecture).
+pub struct NativeSampler<P: Potential> {
+    pub potential: P,
+    pub algorithm: TreeAlgorithm,
+    pub max_tree_depth: u32,
+}
+
+impl<P: Potential> NativeSampler<P> {
+    pub fn new(potential: P, algorithm: TreeAlgorithm, max_tree_depth: u32) -> Self {
+        NativeSampler {
+            potential,
+            algorithm,
+            max_tree_depth,
+        }
+    }
+}
+
+impl<P: Potential> Sampler for NativeSampler<P> {
+    fn dim(&self) -> usize {
+        self.potential.dim()
+    }
+
+    fn draw(
+        &mut self,
+        rng: &mut Rng,
+        z: &[f64],
+        step_size: f64,
+        inv_mass: &[f64],
+    ) -> Result<Transition> {
+        Ok(match self.algorithm {
+            TreeAlgorithm::Recursive => nuts_recursive::draw(
+                &mut self.potential,
+                rng,
+                z,
+                step_size,
+                inv_mass,
+                self.max_tree_depth,
+            ),
+            TreeAlgorithm::Iterative => nuts_iterative::draw(
+                &mut self.potential,
+                rng,
+                z,
+                step_size,
+                inv_mass,
+                self.max_tree_depth,
+            ),
+        })
+    }
+
+    fn dispatches(&self) -> u64 {
+        self.potential.num_evals()
+    }
+}

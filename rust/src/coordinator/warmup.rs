@@ -1,0 +1,107 @@
+//! Stan's three-phase warmup schedule: an initial fast interval (step
+//! size only), doubling slow windows (mass-matrix estimation), and a
+//! terminal fast interval.  Mirrors `python/compile/infer/mcmc.py`.
+
+#[derive(Debug, Clone)]
+pub struct WarmupSchedule {
+    pub initial_fast: usize,
+    pub slow_windows: Vec<usize>,
+    pub terminal_fast: usize,
+}
+
+impl WarmupSchedule {
+    pub fn build(num_warmup: usize) -> WarmupSchedule {
+        if num_warmup < 20 {
+            return WarmupSchedule {
+                initial_fast: num_warmup,
+                slow_windows: vec![],
+                terminal_fast: 0,
+            };
+        }
+        let initial = ((0.15 * num_warmup as f64) as usize).max(10);
+        let terminal = ((0.10 * num_warmup as f64) as usize).max(10);
+        let mut remaining = num_warmup - initial - terminal;
+        let mut windows = Vec::new();
+        let mut w = 25;
+        while remaining > 0 {
+            if remaining >= 3 * w {
+                windows.push(w);
+                remaining -= w;
+                w *= 2;
+            } else {
+                windows.push(remaining);
+                remaining = 0;
+            }
+        }
+        WarmupSchedule {
+            initial_fast: initial,
+            slow_windows: windows,
+            terminal_fast: terminal,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.initial_fast + self.slow_windows.iter().sum::<usize>() + self.terminal_fast
+    }
+
+    /// Iteration indices (within warmup) at which a slow window closes —
+    /// i.e. refresh the mass matrix and restart dual averaging.
+    pub fn window_closes(&self) -> Vec<usize> {
+        let mut closes = Vec::new();
+        let mut pos = self.initial_fast;
+        for w in &self.slow_windows {
+            pos += w;
+            closes.push(pos - 1);
+        }
+        closes
+    }
+
+    /// Is iteration `i` inside a slow (mass-estimation) window?
+    pub fn in_slow(&self, i: usize) -> bool {
+        let slow_start = self.initial_fast;
+        let slow_end = self.total() - self.terminal_fast;
+        i >= slow_start && i < slow_end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_exactly() {
+        for &n in &[20, 50, 100, 500, 1000, 1234] {
+            let s = WarmupSchedule::build(n);
+            assert_eq!(s.total(), n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn windows_double() {
+        let s = WarmupSchedule::build(1000);
+        assert_eq!(s.initial_fast, 150);
+        assert_eq!(s.terminal_fast, 100);
+        // doubling windows, last absorbs the remainder
+        let w = &s.slow_windows;
+        assert!(w.len() >= 3);
+        for i in 1..w.len() - 1 {
+            assert_eq!(w[i], 2 * w[i - 1]);
+        }
+    }
+
+    #[test]
+    fn tiny_warmup_is_all_fast() {
+        let s = WarmupSchedule::build(10);
+        assert_eq!(s.initial_fast, 10);
+        assert!(s.slow_windows.is_empty());
+        assert!(s.window_closes().is_empty());
+    }
+
+    #[test]
+    fn window_closes_inside_slow_phase() {
+        let s = WarmupSchedule::build(400);
+        for c in s.window_closes() {
+            assert!(s.in_slow(c));
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Synthetic workload generators (Appendix C of the paper; CovType is
+//! substituted per DESIGN.md §5).  All generators are deterministic in
+//! the seed and produce both the raw arrays and the [`HostTensor`]s the
+//! artifacts take as inputs.
+
+use crate::ppl::special::sigmoid;
+use crate::rng::Rng;
+use crate::runtime::engine::HostTensor;
+use crate::runtime::manifest::DType;
+
+/// Semi-supervised HMM sequence (K states, V categories), sticky
+/// transitions + informative emissions as in
+/// `python/compile/models/hmm.py::make_hmm_data`.
+pub struct HmmData {
+    pub obs: Vec<usize>,
+    pub sup_states: Vec<usize>,
+    pub theta_true: Vec<f64>,
+    pub phi_true: Vec<f64>,
+    pub num_states: usize,
+    pub num_categories: usize,
+}
+
+pub fn make_hmm(seed: u64, seq_len: usize, num_supervised: usize, k: usize, v: usize) -> HmmData {
+    let mut rng = Rng::new(seed);
+    // sticky transition rows: Dirichlet(1 + 4 I)
+    let mut theta = vec![0.0; k * k];
+    for i in 0..k {
+        let alpha: Vec<f64> = (0..k).map(|j| if i == j { 5.0 } else { 1.0 }).collect();
+        let row = rng.dirichlet(&alpha);
+        theta[i * k..(i + 1) * k].copy_from_slice(&row);
+    }
+    // informative emissions: Dirichlet(1 + 6 one_hot(i * V/K))
+    let mut phi = vec![0.0; k * v];
+    for i in 0..k {
+        let peak = i * (v / k);
+        let alpha: Vec<f64> = (0..v).map(|w| if w == peak { 7.0 } else { 1.0 }).collect();
+        let row = rng.dirichlet(&alpha);
+        phi[i * v..(i + 1) * v].copy_from_slice(&row);
+    }
+    let mut obs = Vec::with_capacity(seq_len);
+    let mut states = Vec::with_capacity(seq_len);
+    let mut z = 0usize;
+    for _ in 0..seq_len {
+        z = rng.categorical(&theta[z * k..(z + 1) * k]);
+        states.push(z);
+        obs.push(rng.categorical(&phi[z * v..(z + 1) * v]));
+    }
+    HmmData {
+        obs,
+        sup_states: states[..num_supervised].to_vec(),
+        theta_true: theta,
+        phi_true: phi,
+        num_states: k,
+        num_categories: v,
+    }
+}
+
+impl HmmData {
+    /// Artifact inputs: (obs i32[T], sup_states i32[T_sup]).
+    pub fn tensors(&self) -> Vec<HostTensor> {
+        vec![
+            HostTensor::I32(
+                self.obs.iter().map(|&x| x as i32).collect(),
+                vec![self.obs.len()],
+            ),
+            HostTensor::I32(
+                self.sup_states.iter().map(|&x| x as i32).collect(),
+                vec![self.sup_states.len()],
+            ),
+        ]
+    }
+}
+
+/// CovType-substitute logistic regression design (DESIGN.md §5:
+/// standardized features, sparse logit-linear labels, class imbalance).
+pub struct LogisticData {
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub w_true: Vec<f64>,
+    pub n: usize,
+    pub d: usize,
+}
+
+pub fn make_covtype_like(seed: u64, n: usize, d: usize) -> LogisticData {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0; n * d];
+    rng.fill_normal(&mut x);
+    let w_true: Vec<f64> = (0..d)
+        .map(|_| {
+            if rng.bernoulli(0.3) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let logit: f64 = xi.iter().zip(&w_true).map(|(a, b)| a * b).sum::<f64>() - 0.5;
+        y[i] = if rng.bernoulli(sigmoid(logit)) { 1.0 } else { 0.0 };
+    }
+    LogisticData {
+        x,
+        y,
+        w_true,
+        n,
+        d,
+    }
+}
+
+impl LogisticData {
+    /// Artifact inputs: (x float[N,D], y i32[N]).
+    pub fn tensors(&self, dtype: DType) -> anyhow::Result<Vec<HostTensor>> {
+        Ok(vec![
+            HostTensor::from_f64(&self.x, &[self.n, self.d], dtype)?,
+            HostTensor::I32(self.y.iter().map(|&v| v as i32).collect(), vec![self.n]),
+        ])
+    }
+}
+
+/// SKIM synthetic data: 3 random pairwise interactions among p
+/// covariates (paper Appendix C).
+pub struct SkimData {
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub pairs: Vec<(usize, usize)>,
+    pub n: usize,
+    pub p: usize,
+}
+
+pub fn make_skim(seed: u64, n: usize, p: usize, num_pairs: usize) -> SkimData {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0; n * p];
+    rng.fill_normal(&mut x);
+    let idx = rng.choose(p, 2 * num_pairs);
+    let pairs: Vec<(usize, usize)> = idx.chunks(2).map(|c| (c[0], c[1])).collect();
+    let coefs: Vec<f64> = (0..num_pairs).map(|_| 1.0 + rng.normal().abs()).collect();
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let xi = &x[i * p..(i + 1) * p];
+        let mut v = 0.0;
+        for (q, &(a, b)) in pairs.iter().enumerate() {
+            v += coefs[q] * xi[a] * xi[b] + 0.5 * (xi[a] + xi[b]);
+        }
+        y[i] = v + 0.3 * rng.normal();
+    }
+    SkimData { x, y, pairs, n, p }
+}
+
+impl SkimData {
+    /// Artifact inputs: (x float[N,P], y float[N]).
+    pub fn tensors(&self, dtype: DType) -> anyhow::Result<Vec<HostTensor>> {
+        Ok(vec![
+            HostTensor::from_f64(&self.x, &[self.n, self.p], dtype)?,
+            HostTensor::from_f64(&self.y, &[self.n], dtype)?,
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hmm_data_shapes_and_ranges() {
+        let d = make_hmm(0, 600, 100, 3, 10);
+        assert_eq!(d.obs.len(), 600);
+        assert_eq!(d.sup_states.len(), 100);
+        assert!(d.obs.iter().all(|&o| o < 10));
+        assert!(d.sup_states.iter().all(|&s| s < 3));
+        // rows are simplexes
+        for i in 0..3 {
+            let s: f64 = d.theta_true[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn covtype_labels_correlate_with_truth() {
+        let d = make_covtype_like(1, 5000, 10);
+        // score = x @ w_true should separate classes
+        let mut mean_pos = 0.0;
+        let mut mean_neg = 0.0;
+        let (mut np, mut nn) = (0.0, 0.0);
+        for i in 0..d.n {
+            let s: f64 = d.x[i * d.d..(i + 1) * d.d]
+                .iter()
+                .zip(&d.w_true)
+                .map(|(a, b)| a * b)
+                .sum();
+            if d.y[i] > 0.5 {
+                mean_pos += s;
+                np += 1.0;
+            } else {
+                mean_neg += s;
+                nn += 1.0;
+            }
+        }
+        assert!(mean_pos / np > mean_neg / nn + 0.5);
+    }
+
+    #[test]
+    fn skim_pairs_are_distinct() {
+        let d = make_skim(2, 200, 50, 3);
+        let mut seen = std::collections::HashSet::new();
+        for (a, b) in &d.pairs {
+            assert!(a != b);
+            assert!(seen.insert(*a) && seen.insert(*b), "overlapping pairs");
+        }
+        assert_eq!(d.y.len(), 200);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = make_covtype_like(7, 100, 5);
+        let b = make_covtype_like(7, 100, 5);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+}

@@ -1,0 +1,186 @@
+//! Effective sample size + split R-hat (Stan / BDA3 reference
+//! formulation).
+//!
+//! Input layout: `chains[c]` is chain c's draws of ONE scalar parameter.
+//! Chains are split in half internally (so m = 2 * num_chains), which
+//! makes the estimators valid for a single chain too.
+
+/// Autocovariance at lags 0..max_lag (biased, divided by n).
+fn autocovariance(x: &[f64], max_lag: usize) -> Vec<f64> {
+    let n = x.len();
+    let mean = x.iter().sum::<f64>() / n as f64;
+    let mut acov = Vec::with_capacity(max_lag + 1);
+    for t in 0..=max_lag {
+        let mut s = 0.0;
+        for i in 0..n - t {
+            s += (x[i] - mean) * (x[i + t] - mean);
+        }
+        acov.push(s / n as f64);
+    }
+    acov
+}
+
+fn split(chains: &[Vec<f64>]) -> Vec<&[f64]> {
+    let mut halves = Vec::with_capacity(chains.len() * 2);
+    for c in chains {
+        let h = c.len() / 2;
+        halves.push(&c[..h]);
+        halves.push(&c[h..2 * h]);
+    }
+    halves
+}
+
+/// Split R-hat (potential scale reduction factor).
+pub fn split_rhat(chains: &[Vec<f64>]) -> f64 {
+    let halves = split(chains);
+    let m = halves.len() as f64;
+    let n = halves[0].len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let means: Vec<f64> = halves
+        .iter()
+        .map(|h| h.iter().sum::<f64>() / n)
+        .collect();
+    let grand = means.iter().sum::<f64>() / m;
+    let b = n / (m - 1.0) * means.iter().map(|mu| (mu - grand).powi(2)).sum::<f64>();
+    let w = halves
+        .iter()
+        .zip(&means)
+        .map(|(h, mu)| h.iter().map(|x| (x - mu).powi(2)).sum::<f64>() / (n - 1.0))
+        .sum::<f64>()
+        / m;
+    if w <= 0.0 {
+        return f64::NAN;
+    }
+    let var_plus = (n - 1.0) / n * w + b / n;
+    (var_plus / w).sqrt()
+}
+
+/// Effective sample size with Geyer's initial monotone positive
+/// sequence over the combined-chain correlogram.
+pub fn effective_sample_size(chains: &[Vec<f64>]) -> f64 {
+    let halves = split(chains);
+    let m = halves.len() as f64;
+    let n = halves[0].len();
+    if n < 4 {
+        return f64::NAN;
+    }
+    let max_lag = n - 1;
+    let acovs: Vec<Vec<f64>> = halves
+        .iter()
+        .map(|h| autocovariance(h, max_lag))
+        .collect();
+    // within-chain variance (unbiased) and var_plus
+    let w: f64 = acovs.iter().map(|a| a[0] * n as f64 / (n as f64 - 1.0)).sum::<f64>() / m;
+    let means: Vec<f64> = halves
+        .iter()
+        .map(|h| h.iter().sum::<f64>() / n as f64)
+        .collect();
+    let grand = means.iter().sum::<f64>() / m;
+    let b_over_n = if halves.len() > 1 {
+        means.iter().map(|mu| (mu - grand).powi(2)).sum::<f64>() / (m - 1.0)
+    } else {
+        0.0
+    };
+    let var_plus = w * (n as f64 - 1.0) / n as f64 + b_over_n;
+    if var_plus <= 0.0 {
+        return f64::NAN;
+    }
+
+    // rho_t = 1 - (W - mean acov_t) / var_plus
+    let mut rho = vec![0.0; max_lag + 1];
+    for (t, r) in rho.iter_mut().enumerate() {
+        let mean_acov: f64 = acovs.iter().map(|a| a[t]).sum::<f64>() / m;
+        *r = 1.0 - (w - mean_acov) / var_plus;
+    }
+
+    // Geyer: sum consecutive pairs while positive, enforce monotone
+    // non-increasing pair sums.
+    let mut sum_rho = 0.0;
+    let mut prev_pair = f64::INFINITY;
+    let mut t = 1;
+    while t + 1 <= max_lag {
+        let mut pair = rho[t] + rho[t + 1];
+        if pair < 0.0 {
+            break;
+        }
+        if pair > prev_pair {
+            pair = prev_pair;
+        }
+        sum_rho += pair;
+        prev_pair = pair;
+        t += 2;
+    }
+    let tau = 1.0 + 2.0 * sum_rho;
+    let total = m * n as f64;
+    (total / tau).min(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn ar1(rng: &mut Rng, n: usize, rho: f64) -> Vec<f64> {
+        let mut x = vec![0.0; n];
+        let sd = (1.0 - rho * rho).sqrt();
+        for i in 1..n {
+            x[i] = rho * x[i - 1] + sd * rng.normal();
+        }
+        x
+    }
+
+    #[test]
+    fn iid_chain_ess_near_n() {
+        let mut rng = Rng::new(0);
+        let chain: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
+        let ess = effective_sample_size(&[chain]);
+        assert!(ess > 3000.0 && ess <= 4000.0, "ess {ess}");
+    }
+
+    #[test]
+    fn ar1_ess_matches_analytic() {
+        // ESS/N -> (1-rho)/(1+rho) for AR(1)
+        let mut rng = Rng::new(1);
+        let rho = 0.7;
+        let n = 20_000;
+        let chain = ar1(&mut rng, n, rho);
+        let ess = effective_sample_size(&[chain]);
+        let expect = n as f64 * (1.0 - rho) / (1.0 + rho);
+        assert!(
+            (ess - expect).abs() < 0.25 * expect,
+            "ess {ess} vs analytic {expect}"
+        );
+    }
+
+    #[test]
+    fn rhat_near_one_for_same_distribution() {
+        let mut rng = Rng::new(2);
+        let chains: Vec<Vec<f64>> = (0..4)
+            .map(|_| (0..2000).map(|_| rng.normal()).collect())
+            .collect();
+        let r = split_rhat(&chains);
+        assert!((r - 1.0).abs() < 0.02, "rhat {r}");
+    }
+
+    #[test]
+    fn rhat_detects_divergent_means() {
+        let mut rng = Rng::new(3);
+        let a: Vec<f64> = (0..1000).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..1000).map(|_| rng.normal() + 5.0).collect();
+        let r = split_rhat(&[a, b]);
+        assert!(r > 2.0, "rhat {r}");
+    }
+
+    #[test]
+    fn anticorrelated_chain_ess_exceeds_n() {
+        // ESS can exceed N for negatively autocorrelated chains, but is
+        // clamped to total draws by our implementation.
+        let mut rng = Rng::new(4);
+        let chain = ar1(&mut rng, 8000, -0.5);
+        let ess = effective_sample_size(&[chain]);
+        assert!(ess <= 8000.0 + 1e-9);
+        assert!(ess > 7000.0, "ess {ess}");
+    }
+}

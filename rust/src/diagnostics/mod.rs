@@ -1,0 +1,10 @@
+//! Convergence diagnostics: split-chain R-hat and effective sample size
+//! (Geyer initial monotone sequence), following Stan's reference
+//! implementations — these produce the "time per effective sample" axis
+//! of Fig 2b and the ESS counts of footnote 6.
+
+pub mod ess;
+pub mod summary;
+
+pub use ess::{effective_sample_size, split_rhat};
+pub use summary::{summarize, ParamSummary};

@@ -1,0 +1,111 @@
+//! Posterior summaries: per-parameter mean/sd/quantiles + ESS + R-hat,
+//! with manifest-driven site labels.
+
+use crate::diagnostics::ess::{effective_sample_size, split_rhat};
+use crate::runtime::manifest::ParamSpan;
+
+#[derive(Debug, Clone)]
+pub struct ParamSummary {
+    pub name: String,
+    pub mean: f64,
+    pub sd: f64,
+    pub q05: f64,
+    pub q50: f64,
+    pub q95: f64,
+    pub ess: f64,
+    pub rhat: f64,
+}
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// `chains[c]` is a (draws x dim) row-major matrix for chain c.
+/// `layout` labels flat indices with site names (may be empty).
+pub fn summarize(chains: &[Vec<f64>], dim: usize, layout: &[ParamSpan]) -> Vec<ParamSummary> {
+    let label = |d: usize| -> String {
+        for span in layout {
+            if d >= span.offset && d < span.offset + span.size {
+                if span.size == 1 {
+                    return span.site.clone();
+                }
+                return format!("{}[{}]", span.site, d - span.offset);
+            }
+        }
+        format!("z[{d}]")
+    };
+
+    (0..dim)
+        .map(|d| {
+            let per_chain: Vec<Vec<f64>> = chains
+                .iter()
+                .map(|c| c.chunks(dim).map(|row| row[d]).collect())
+                .collect();
+            let all: Vec<f64> = per_chain.iter().flatten().copied().collect();
+            let n = all.len() as f64;
+            let mean = all.iter().sum::<f64>() / n;
+            let sd = (all.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0)).sqrt();
+            let mut sorted = all;
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ParamSummary {
+                name: label(d),
+                mean,
+                sd,
+                q05: quantile(&sorted, 0.05),
+                q50: quantile(&sorted, 0.50),
+                q95: quantile(&sorted, 0.95),
+                ess: effective_sample_size(&per_chain),
+                rhat: split_rhat(&per_chain),
+            }
+        })
+        .collect()
+}
+
+/// Render a summary table (plain text).
+pub fn render_table(rows: &[ParamSummary]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>9} {:>9} {:>9} {:>9} {:>9} {:>8} {:>6}\n",
+        "param", "mean", "sd", "5%", "50%", "95%", "ess", "rhat"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<16} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>8.0} {:>6.3}\n",
+            r.name, r.mean, r.sd, r.q05, r.q50, r.q95, r.ess, r.rhat
+        ));
+    }
+    out
+}
+
+/// Min ESS across parameters (the Fig 2b denominator).
+pub fn min_ess(rows: &[ParamSummary]) -> f64 {
+    rows.iter().map(|r| r.ess).fold(f64::INFINITY, f64::min)
+}
+
+/// Mean ESS across parameters (footnote 6 reports averages).
+pub fn mean_ess(rows: &[ParamSummary]) -> f64 {
+    rows.iter().map(|r| r.ess).sum::<f64>() / rows.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn summary_of_known_gaussian() {
+        let mut rng = Rng::new(0);
+        let dim = 2;
+        let draws = 4000;
+        let chain: Vec<f64> = (0..draws)
+            .flat_map(|_| vec![rng.normal() * 2.0 + 1.0, rng.normal()])
+            .collect();
+        let rows = summarize(&[chain], dim, &[]);
+        assert!((rows[0].mean - 1.0).abs() < 0.15);
+        assert!((rows[0].sd - 2.0).abs() < 0.15);
+        assert!((rows[1].mean).abs() < 0.1);
+        assert!((rows[1].q50 - rows[1].mean).abs() < 0.1);
+        assert!(rows[0].ess > 3000.0);
+    }
+}

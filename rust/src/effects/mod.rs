@@ -1,0 +1,358 @@
+//! Effect handlers in Rust — the paper's Table 1, ported to the native
+//! pipeline.
+//!
+//! A model is any `Fn(&mut Interp)` that issues [`Interp::sample`] /
+//! [`Interp::param`] statements.  Each statement builds a message that
+//! travels through the handler stack exactly as in `minippl`
+//! (`process` top-down, default behaviour, `postprocess` bottom-up):
+//!
+//! | handler        | affects        | effect                                   |
+//! |----------------|----------------|------------------------------------------|
+//! | [`Seed`]       | sample         | provides the RNG (split per site)        |
+//! | [`TraceH`]     | sample, param  | records every site                       |
+//! | [`Condition`]  | sample         | fixes values, marks observed             |
+//! | [`Substitute`] | sample, param  | fixes values, stays unobserved           |
+//! | [`Replay`]     | sample         | replays values from a recorded trace     |
+//!
+//! The native models in [`crate::models`] use these for data generation
+//! and prior/posterior predictive checks; the Rust test-suite asserts
+//! handler semantics match the Python implementation site-for-site.
+
+use std::collections::BTreeMap;
+
+use crate::ppl::dist::Dist;
+use crate::rng::Rng;
+
+/// Message passed through the handler stack for every primitive site.
+#[derive(Debug, Clone)]
+pub struct Msg {
+    pub name: String,
+    pub dist: Option<Dist>,
+    pub value: Option<Vec<f64>>,
+    pub is_observed: bool,
+    pub stop: bool,
+}
+
+/// One recorded site.
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub dist: Option<Dist>,
+    pub value: Vec<f64>,
+    pub is_observed: bool,
+    pub log_prob: f64,
+}
+
+pub type Trace = BTreeMap<String, Site>;
+
+/// Effect handler interface (Messenger in minippl).
+pub trait Handler {
+    fn process(&mut self, _msg: &mut Msg) {}
+    fn postprocess(&mut self, _msg: &mut Msg) {}
+}
+
+/// Seeds sample statements with an RNG, splitting per site.
+pub struct Seed {
+    rng: Rng,
+}
+
+impl Seed {
+    pub fn new(seed: u64) -> Self {
+        Seed {
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl Handler for Seed {
+    fn process(&mut self, msg: &mut Msg) {
+        if msg.value.is_none() {
+            if let Some(d) = &msg.dist {
+                let mut sub = self.rng.split(0);
+                msg.value = Some(d.sample(&mut sub));
+            }
+        }
+    }
+}
+
+/// Records every site into a [`Trace`].
+#[derive(Default)]
+pub struct TraceH {
+    pub trace: Trace,
+}
+
+impl Handler for TraceH {
+    fn postprocess(&mut self, msg: &mut Msg) {
+        let value = msg.value.clone().expect("traced site must have a value");
+        let log_prob = msg
+            .dist
+            .as_ref()
+            .map(|d| d.log_prob(&value))
+            .unwrap_or(0.0);
+        let prev = self.trace.insert(
+            msg.name.clone(),
+            Site {
+                dist: msg.dist.clone(),
+                value,
+                is_observed: msg.is_observed,
+                log_prob,
+            },
+        );
+        assert!(prev.is_none(), "duplicate site '{}'", msg.name);
+    }
+}
+
+/// Conditions matching sites to observed values.
+pub struct Condition {
+    pub data: BTreeMap<String, Vec<f64>>,
+}
+
+impl Handler for Condition {
+    fn process(&mut self, msg: &mut Msg) {
+        if let Some(v) = self.data.get(&msg.name) {
+            assert!(
+                !msg.is_observed,
+                "cannot condition already-observed site '{}'",
+                msg.name
+            );
+            msg.value = Some(v.clone());
+            msg.is_observed = true;
+        }
+    }
+}
+
+/// Substitutes values without marking observed (HMC/SVI plumbing).
+pub struct Substitute {
+    pub data: BTreeMap<String, Vec<f64>>,
+}
+
+impl Handler for Substitute {
+    fn process(&mut self, msg: &mut Msg) {
+        if let Some(v) = self.data.get(&msg.name) {
+            msg.value = Some(v.clone());
+        }
+    }
+}
+
+/// Replays sample sites from a recorded trace.
+pub struct Replay {
+    pub guide_trace: Trace,
+}
+
+impl Handler for Replay {
+    fn process(&mut self, msg: &mut Msg) {
+        if msg.is_observed {
+            return;
+        }
+        if let Some(site) = self.guide_trace.get(&msg.name) {
+            msg.value = Some(site.value.clone());
+        }
+    }
+}
+
+/// Hides matching sites from outer handlers.
+pub struct Block<F: Fn(&Msg) -> bool> {
+    pub hide: F,
+}
+
+impl<F: Fn(&Msg) -> bool> Handler for Block<F> {
+    fn process(&mut self, msg: &mut Msg) {
+        if (self.hide)(msg) {
+            msg.stop = true;
+        }
+    }
+}
+
+/// Interpreter carrying the handler stack (innermost last).
+pub struct Interp<'a> {
+    handlers: Vec<&'a mut dyn Handler>,
+}
+
+impl<'a> Interp<'a> {
+    pub fn new(handlers: Vec<&'a mut dyn Handler>) -> Self {
+        Interp { handlers }
+    }
+
+    fn apply(&mut self, mut msg: Msg) -> Msg {
+        // innermost (end of vec) first, like minippl's reversed stack
+        let mut seen = 0;
+        for h in self.handlers.iter_mut().rev() {
+            seen += 1;
+            h.process(&mut msg);
+            if msg.stop {
+                break;
+            }
+        }
+        if msg.value.is_none() {
+            panic!(
+                "site '{}': no value and no Seed handler on the stack",
+                msg.name
+            );
+        }
+        let n = self.handlers.len();
+        for h in self.handlers[n - seen..].iter_mut() {
+            h.postprocess(&mut msg);
+        }
+        msg
+    }
+
+    /// `sample(name, dist)` primitive; returns the site value.
+    pub fn sample(&mut self, name: &str, dist: Dist) -> Vec<f64> {
+        let msg = Msg {
+            name: name.to_string(),
+            dist: Some(dist),
+            value: None,
+            is_observed: false,
+            stop: false,
+        };
+        self.apply(msg).value.unwrap()
+    }
+
+    /// `sample(name, dist, obs)` — observed site.
+    pub fn observe(&mut self, name: &str, dist: Dist, obs: Vec<f64>) -> Vec<f64> {
+        let msg = Msg {
+            name: name.to_string(),
+            dist: Some(dist),
+            value: Some(obs),
+            is_observed: true,
+            stop: false,
+        };
+        self.apply(msg).value.unwrap()
+    }
+
+    /// `param(name, init)` primitive.
+    pub fn param(&mut self, name: &str, init: Vec<f64>) -> Vec<f64> {
+        let msg = Msg {
+            name: name.to_string(),
+            dist: None,
+            value: Some(init),
+            is_observed: false,
+            stop: false,
+        };
+        self.apply(msg).value.unwrap()
+    }
+}
+
+/// Run `model` under Seed + Trace, returning the trace
+/// (`trace(seed(model, key)).get_trace()` in the paper's notation).
+pub fn traced<F: Fn(&mut Interp)>(model: F, seed: u64) -> Trace {
+    let mut s = Seed::new(seed);
+    let mut t = TraceH::default();
+    {
+        let mut interp = Interp::new(vec![&mut s, &mut t]);
+        model(&mut interp);
+    }
+    t.trace
+}
+
+/// Joint log-density of a trace.
+pub fn log_density(trace: &Trace) -> f64 {
+    trace.values().map(|s| s.log_prob).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model(i: &mut Interp) {
+        let m = i.sample(
+            "m",
+            Dist::Normal {
+                loc: 0.0,
+                scale: 1.0,
+            },
+        );
+        i.observe(
+            "y",
+            Dist::Normal {
+                loc: m[0],
+                scale: 0.5,
+            },
+            vec![0.3],
+        );
+    }
+
+    #[test]
+    fn seed_trace_records_sites() {
+        let tr = traced(toy_model, 1);
+        assert_eq!(tr.len(), 2);
+        assert!(!tr["m"].is_observed);
+        assert!(tr["y"].is_observed);
+        assert_eq!(tr["y"].value, vec![0.3]);
+        assert!(log_density(&tr).is_finite());
+    }
+
+    #[test]
+    fn seed_is_deterministic() {
+        let a = traced(toy_model, 7);
+        let b = traced(toy_model, 7);
+        assert_eq!(a["m"].value, b["m"].value);
+        let c = traced(toy_model, 8);
+        assert_ne!(a["m"].value, c["m"].value);
+    }
+
+    #[test]
+    fn condition_marks_observed() {
+        let mut s = Seed::new(1);
+        let mut c = Condition {
+            data: [("m".to_string(), vec![2.0])].into_iter().collect(),
+        };
+        let mut t = TraceH::default();
+        {
+            let mut interp = Interp::new(vec![&mut s, &mut c, &mut t]);
+            toy_model(&mut interp);
+        }
+        assert_eq!(t.trace["m"].value, vec![2.0]);
+        assert!(t.trace["m"].is_observed);
+        // N(2 | 0, 1) contributes to the joint
+        let lp = t.trace["m"].log_prob;
+        assert!((lp - Dist::Normal { loc: 0.0, scale: 1.0 }.log_prob(&[2.0])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn substitute_stays_unobserved() {
+        let mut s = Seed::new(1);
+        let mut sub = Substitute {
+            data: [("m".to_string(), vec![-1.5])].into_iter().collect(),
+        };
+        let mut t = TraceH::default();
+        {
+            let mut interp = Interp::new(vec![&mut s, &mut sub, &mut t]);
+            toy_model(&mut interp);
+        }
+        assert_eq!(t.trace["m"].value, vec![-1.5]);
+        assert!(!t.trace["m"].is_observed);
+    }
+
+    #[test]
+    fn replay_reuses_trace_values() {
+        let first = traced(toy_model, 3);
+        let mut s = Seed::new(99);
+        let mut r = Replay {
+            guide_trace: first.clone(),
+        };
+        let mut t = TraceH::default();
+        {
+            let mut interp = Interp::new(vec![&mut s, &mut r, &mut t]);
+            toy_model(&mut interp);
+        }
+        assert_eq!(t.trace["m"].value, first["m"].value);
+    }
+
+    #[test]
+    fn block_hides_from_outer() {
+        let mut s = Seed::new(1);
+        let mut t = TraceH::default();
+        let mut b = Block {
+            hide: |m: &Msg| m.name == "m",
+        };
+        {
+            // stack: seed, trace, block (innermost) — block stops "m"
+            // before it reaches trace, but seed never sees it either, so
+            // sampling must happen below block: put seed innermost.
+            let mut interp = Interp::new(vec![&mut t, &mut b, &mut s]);
+            toy_model(&mut interp);
+        }
+        assert!(!t.trace.contains_key("m"));
+        assert!(t.trace.contains_key("y"));
+    }
+}

@@ -1,0 +1,202 @@
+//! Design-choice ablations called out in DESIGN.md:
+//!
+//! * E7 (`ablate-vmap`, §3.2): K chains per dispatch via the vmapped
+//!   artifact vs K sequential dispatches.
+//! * E8 (`ablate-tree`, §3.1/Appendix A): iterative vs recursive tree
+//!   building over the *same* native potential — the paper claims the
+//!   iterative formulation's overhead is "insignificant".
+
+use anyhow::Result;
+
+use crate::config::Settings;
+use crate::coordinator::{run_chain, NutsOptions, TreeAlgorithm};
+use crate::coordinator::NativeSampler;
+use crate::harness::builders::{init_z, Workload};
+use crate::runtime::engine::Engine;
+use crate::runtime::NutsStep;
+use crate::rng::Rng;
+
+pub fn ablate_vmap(engine: &Engine, settings: &Settings) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("E7 — vmapped multi-chain NUTS vs sequential dispatches (§3.2)\n\n");
+    let model = "covtype_small";
+    let dtype = "f32";
+    let vmap_name = format!("{model}_nuts_step_vmap4_{dtype}");
+    let entry = engine.manifest.get(&vmap_name)?;
+    let chains = entry.meta_usize("chains").unwrap_or(4);
+    let dim = entry.dim;
+    let workload = Workload::for_model(engine, model, settings.seed)?;
+    let dt = entry.inputs[4].dtype; // data dtype (x)
+    let draws = if settings.quick { 20 } else { 100 };
+
+    // vmapped: one dispatch advances all chains
+    let mut vstep = NutsStep::new(engine, &vmap_name, &workload.tensors(dt)?)?;
+    let mut rng = Rng::new(settings.seed);
+    let mut zs = vec![0.0; chains * dim];
+    for z in zs.iter_mut() {
+        *z = rng.uniform_in(-2.0, 2.0);
+    }
+    let step_sizes = vec![0.05; chains];
+    let inv_masses = vec![1.0; chains * dim];
+    let t0 = std::time::Instant::now();
+    let mut total_leapfrogs = 0u64;
+    for _ in 0..draws {
+        let keys: Vec<[u32; 2]> = (0..chains)
+            .map(|_| {
+                [
+                    (rng.next_u64() >> 32) as u32,
+                    (rng.next_u64() & 0xFFFF_FFFF) as u32,
+                ]
+            })
+            .collect();
+        let trs = vstep.step_vmap(&keys, &zs, &step_sizes, &inv_masses)?;
+        for (c, tr) in trs.iter().enumerate() {
+            zs[c * dim..(c + 1) * dim].copy_from_slice(&tr.z);
+            total_leapfrogs += tr.num_leapfrog as u64;
+        }
+    }
+    let vmap_secs = t0.elapsed().as_secs_f64();
+    out.push_str(&format!(
+        "vmap{chains}: {draws} draws x {chains} chains in {vmap_secs:.3}s ({} leapfrogs, {} dispatches)\n",
+        total_leapfrogs, vstep.dispatches
+    ));
+
+    // sequential: chains advanced one dispatch each
+    let mut sstep = NutsStep::new(
+        engine,
+        &format!("{model}_nuts_step_{dtype}"),
+        &workload.tensors(dt)?,
+    )?;
+    let mut zs2 = zs.clone();
+    let t0 = std::time::Instant::now();
+    let mut seq_leapfrogs = 0u64;
+    for _ in 0..draws {
+        for c in 0..chains {
+            let key = [
+                (rng.next_u64() >> 32) as u32,
+                (rng.next_u64() & 0xFFFF_FFFF) as u32,
+            ];
+            let tr = sstep.step(key, &zs2[c * dim..(c + 1) * dim].to_vec(), 0.05, &vec![1.0; dim])?;
+            zs2[c * dim..(c + 1) * dim].copy_from_slice(&tr.z);
+            seq_leapfrogs += tr.num_leapfrog as u64;
+        }
+    }
+    let seq_secs = t0.elapsed().as_secs_f64();
+    out.push_str(&format!(
+        "sequential: {draws} draws x {chains} chains in {seq_secs:.3}s ({} leapfrogs, {} dispatches)\n",
+        seq_leapfrogs, sstep.dispatches
+    ));
+    out.push_str(&format!(
+        "\n-> per-(draw*chain) time: vmap {:.3} ms vs sequential {:.3} ms (dispatch amortization {:.2}x)\n",
+        1e3 * vmap_secs / (draws * chains) as f64,
+        1e3 * seq_secs / (draws * chains) as f64,
+        seq_secs / vmap_secs,
+    ));
+    Ok(out)
+}
+
+pub fn ablate_kernel(engine: &Engine, settings: &Settings) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("Kernel-impl ablation — interpret-mode Pallas vs XLA-fused reference\n");
+    out.push_str("(same density; the wallclock ratio is the CPU interpreter tax.\n");
+    out.push_str(" On real TPU the Pallas variant compiles to Mosaic and is the fast path.)\n\n");
+    out.push_str(&format!(
+        "{:<28} {:>14} {:>14} {:>12}\n",
+        "model", "U (ref)", "U (pallas)", "ms ratio"
+    ));
+    let variants: Vec<String> = engine
+        .manifest
+        .models()
+        .iter()
+        .filter(|m| m.ends_with("_pallas"))
+        .cloned()
+        .collect();
+    if variants.is_empty() {
+        out.push_str("(no *_pallas artifacts in manifest; re-run make artifacts)\n");
+        return Ok(out);
+    }
+    for pallas_model in variants {
+        let base = pallas_model.strip_suffix("_pallas").unwrap().to_string();
+        let workload = Workload::for_model(engine, &base, settings.seed)?;
+        let mut times = Vec::new();
+        let mut potentials = Vec::new();
+        for model in [&base, &pallas_model] {
+            let name = format!("{model}_potential_and_grad_f32");
+            let entry = engine.manifest.get(&name)?.clone();
+            let dt = entry.inputs[0].dtype;
+            let mut pot =
+                crate::runtime::PjrtPotential::new(engine, &name, &workload.tensors(dt)?)?;
+            let dim = entry.dim;
+            let z = vec![0.1; dim];
+            let mut g = vec![0.0; dim];
+            let reps = if settings.quick { 5 } else { 20 };
+            let timing = crate::util::timer::bench(2, reps, || {
+                let _ = pot.eval(&z, &mut g).unwrap();
+            });
+            times.push(timing.median_s);
+            potentials.push(pot.eval(&z, &mut g)?);
+        }
+        out.push_str(&format!(
+            "{:<28} {:>14.4} {:>14.4} {:>11.1}x\n",
+            base,
+            potentials[0],
+            potentials[1],
+            times[1] / times[0]
+        ));
+        let rel = (potentials[0] - potentials[1]).abs() / (1.0 + potentials[0].abs());
+        anyhow::ensure!(rel < 1e-4, "{base}: pallas and ref densities diverge");
+    }
+    out.push_str("\n-> identical densities; ratio = interpret-mode cost on CPU (DESIGN.md §6)\n");
+    Ok(out)
+}
+
+pub fn ablate_tree(engine: &Engine, settings: &Settings) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("E8 — iterative (Alg. 2) vs recursive (Alg. 1) tree building,\n");
+    out.push_str("same native HMM potential (paper: overhead 'insignificant')\n\n");
+    let workload = Workload::for_model(engine, "hmm", settings.seed)?;
+    let (warmup, samples) = settings.budget(400, 400);
+
+    out.push_str(&format!(
+        "{:<12} {:>14} {:>12} {:>10}\n",
+        "algorithm", "ms/leapfrog", "leapfrogs", "sample s"
+    ));
+    let mut ms: Vec<f64> = Vec::new();
+    for (label, alg) in [
+        ("iterative", TreeAlgorithm::Iterative),
+        ("recursive", TreeAlgorithm::Recursive),
+    ] {
+        struct BoxedPotential(Box<dyn crate::mcmc::Potential>);
+        impl crate::mcmc::Potential for BoxedPotential {
+            fn dim(&self) -> usize {
+                self.0.dim()
+            }
+            fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+                self.0.value_and_grad(z, grad)
+            }
+        }
+        let pot = BoxedPotential(workload.native_potential()?);
+        let mut sampler = NativeSampler::new(pot, alg, settings.max_tree_depth);
+        let dim = 33;
+        let opts = NutsOptions {
+            num_warmup: warmup,
+            num_samples: samples,
+            seed: settings.seed,
+            ..Default::default()
+        };
+        let res = run_chain(&mut sampler, &init_z(dim, settings.seed), &opts)?;
+        out.push_str(&format!(
+            "{:<12} {:>14.4} {:>12} {:>10.3}\n",
+            label,
+            res.ms_per_leapfrog(),
+            res.sample_leapfrogs,
+            res.sample_secs
+        ));
+        ms.push(res.ms_per_leapfrog());
+    }
+    out.push_str(&format!(
+        "\n-> iterative / recursive per-leapfrog ratio: {:.3} (paper: ~1)\n",
+        ms[0] / ms[1]
+    ));
+    Ok(out)
+}

@@ -1,0 +1,191 @@
+//! Shared builders: construct samplers for (model, backend, dtype)
+//! triples with workload data generated to match the artifact manifest's
+//! static shapes, so the native and PJRT pipelines see the *same* data.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{FusedSampler, NativeSampler, Sampler, TreeAlgorithm};
+use crate::data;
+use crate::models::{HmmNative, LogisticNative, SkimNative};
+use crate::models::skim::SkimHypers;
+use crate::runtime::engine::{Engine, HostTensor};
+use crate::runtime::manifest::DType;
+use crate::runtime::{NutsStep, PjrtPotential};
+
+/// The three architectures of Table 2a.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// NumPyro: fused end-to-end `nuts_step` artifact.
+    Fused,
+    /// Pyro: recursive host tree + `potential_and_grad` dispatch per leapfrog.
+    Stepwise,
+    /// Stan: native Rust autodiff potential + iterative host tree.
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        Ok(match s {
+            "fused" | "numpyro" => Backend::Fused,
+            "stepwise" | "pyro" => Backend::Stepwise,
+            "native" | "stan" => Backend::Native,
+            other => bail!("unknown backend '{other}' (fused|stepwise|native)"),
+        })
+    }
+
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            Backend::Fused => "fused (NumPyro arch)",
+            Backend::Stepwise => "stepwise (Pyro arch)",
+            Backend::Native => "native (Stan arch)",
+        }
+    }
+}
+
+/// Workload data for one model, generated to the manifest's shapes.
+pub enum Workload {
+    Hmm(data::HmmData),
+    Logistic(data::LogisticData),
+    Skim(data::SkimData),
+}
+
+impl Workload {
+    /// Generate the workload for a model name using the nuts_step
+    /// entry's static metadata.  `*_pallas` variants share their base
+    /// model's workload.
+    pub fn for_model(engine: &Engine, model: &str, seed: u64) -> Result<Workload> {
+        // dtype tag irrelevant for shapes; prefer f32 entry, fall back f64
+        let entry = engine
+            .manifest
+            .find(model, "nuts_step", "f32")
+            .or_else(|_| engine.manifest.find(model, "nuts_step", "f64"))?;
+        let model = model.strip_suffix("_pallas").unwrap_or(model);
+        Ok(if model == "hmm" {
+            let t = entry.meta_usize("seq_len").unwrap_or(600);
+            let s = entry.meta_usize("num_supervised").unwrap_or(100);
+            Workload::Hmm(data::make_hmm(seed, t, s, 3, 10))
+        } else if model.starts_with("covtype") {
+            let n = entry.meta_usize("n").unwrap_or(2000);
+            let d = entry.meta_usize("d").unwrap_or(54);
+            Workload::Logistic(data::make_covtype_like(seed, n, d))
+        } else if model.starts_with("skim") {
+            let n = entry.meta_usize("n").unwrap_or(200);
+            let p = entry.meta_usize("p").unwrap_or(100);
+            Workload::Skim(data::make_skim(seed, n, p, 3))
+        } else {
+            bail!("unknown model '{model}'")
+        })
+    }
+
+    pub fn tensors(&self, dtype: DType) -> Result<Vec<HostTensor>> {
+        Ok(match self {
+            Workload::Hmm(d) => d.tensors(),
+            Workload::Logistic(d) => d.tensors(dtype)?,
+            Workload::Skim(d) => d.tensors(dtype)?,
+        })
+    }
+
+    /// Native (Stan-architecture) potential over the same data.
+    pub fn native_potential(&self) -> Result<Box<dyn crate::mcmc::Potential>> {
+        Ok(match self {
+            Workload::Hmm(d) => Box::new(HmmNative::new(
+                d.obs.clone(),
+                d.sup_states.clone(),
+                d.num_states,
+                d.num_categories,
+            )),
+            Workload::Logistic(d) => Box::new(LogisticNative::new(
+                d.x.clone(),
+                d.y.clone(),
+                d.n,
+                d.d,
+            )),
+            Workload::Skim(d) => Box::new(SkimNative::new(
+                d.x.clone(),
+                d.y.clone(),
+                d.n,
+                d.p,
+                SkimHypers::default(),
+            )),
+        })
+    }
+}
+
+fn float_dtype_of(engine: &Engine, model: &str, kind: &str, tag: &str) -> Result<DType> {
+    let entry = engine.manifest.find(model, kind, tag)?;
+    Ok(entry.inputs[if kind == "potential_and_grad" { 0 } else { 1 }].dtype)
+}
+
+/// Build a sampler for (model, backend, dtype tag).
+pub fn build_sampler(
+    engine: &Engine,
+    model: &str,
+    backend: Backend,
+    dtype_tag: &str,
+    workload: &Workload,
+    max_tree_depth: u32,
+) -> Result<Box<dyn Sampler>> {
+    Ok(match backend {
+        Backend::Fused => {
+            let name = format!("{model}_nuts_step_{dtype_tag}");
+            let dt = float_dtype_of(engine, model, "nuts_step", dtype_tag)?;
+            let step = NutsStep::new(engine, &name, &workload.tensors(dt)?)?;
+            Box::new(FusedSampler::new(step))
+        }
+        Backend::Stepwise => {
+            let name = format!("{model}_potential_and_grad_{dtype_tag}");
+            let dt = float_dtype_of(engine, model, "potential_and_grad", dtype_tag)?;
+            let pot = PjrtPotential::new(engine, &name, &workload.tensors(dt)?)?;
+            Box::new(NativeSampler::new(pot, TreeAlgorithm::Recursive, max_tree_depth))
+        }
+        Backend::Native => {
+            struct BoxedPotential(Box<dyn crate::mcmc::Potential>);
+            impl crate::mcmc::Potential for BoxedPotential {
+                fn dim(&self) -> usize {
+                    self.0.dim()
+                }
+                fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+                    self.0.value_and_grad(z, grad)
+                }
+                fn num_evals(&self) -> u64 {
+                    self.0.num_evals()
+                }
+            }
+            let pot = BoxedPotential(workload.native_potential()?);
+            Box::new(NativeSampler::new(pot, TreeAlgorithm::Iterative, max_tree_depth))
+        }
+    })
+}
+
+/// Wraps a potential with a busy-wait per evaluation, emulating the
+/// host-language dispatch cost of the paper's Pyro baseline (~30 ms of
+/// Python overhead per leapfrog on the 2019 testbed; our Rust host loop
+/// pays only ~µs of PJRT dispatch, so the paper's regime is simulated
+/// explicitly — DESIGN.md §5).
+pub struct PenalizedPotential<P> {
+    pub inner: P,
+    pub penalty: std::time::Duration,
+}
+
+impl<P: crate::mcmc::Potential> crate::mcmc::Potential for PenalizedPotential<P> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+        let t0 = std::time::Instant::now();
+        let u = self.inner.value_and_grad(z, grad);
+        while t0.elapsed() < self.penalty {
+            std::hint::spin_loop();
+        }
+        u
+    }
+    fn num_evals(&self) -> u64 {
+        self.inner.num_evals()
+    }
+}
+
+/// Uniform(-2,2) init, matching NumPyro's init_to_uniform.
+pub fn init_z(dim: usize, seed: u64) -> Vec<f64> {
+    let mut rng = crate::rng::Rng::new(seed ^ 0xC0FFEE);
+    (0..dim).map(|_| rng.uniform_in(-2.0, 2.0)).collect()
+}

@@ -1,0 +1,116 @@
+//! Fig 2b: time (ms) per effective sample for SKIM as dimensionality p
+//! varies (E3).  Paper protocol: N = 200, p swept, 1000 warmup + 1000
+//! draws, time/ESS averaged over runs; Stan vs NumPyro.
+//!
+//! Shape check: the fused (NumPyro-architecture) series sits below the
+//! native (Stan-architecture) series at every p — "consistently lower
+//! overhead" — with both growing in p.
+
+use anyhow::Result;
+
+use crate::config::Settings;
+use crate::coordinator::{run_chain, NutsOptions};
+use crate::diagnostics::summary::{mean_ess, min_ess, summarize};
+use crate::harness::builders::{build_sampler, init_z, Backend, Workload};
+use crate::runtime::engine::Engine;
+
+pub struct Point {
+    pub p: usize,
+    pub backend: &'static str,
+    pub ms_per_ess: f64,
+    pub mean_ess: f64,
+    pub sample_secs: f64,
+}
+
+fn measure(
+    engine: &Engine,
+    model: &str,
+    p: usize,
+    backend: Backend,
+    dtype: &str,
+    warmup: usize,
+    samples: usize,
+    settings: &Settings,
+) -> Result<Point> {
+    let workload = Workload::for_model(engine, model, settings.seed)?;
+    let mut sampler = build_sampler(engine, model, backend, dtype, &workload, settings.max_tree_depth)?;
+    let dim = sampler.dim();
+    let opts = NutsOptions {
+        num_warmup: warmup,
+        num_samples: samples,
+        target_accept: settings.target_accept,
+        init_step_size: 0.1,
+        fixed_step_size: None,
+        adapt_mass: true,
+        seed: settings.seed,
+    };
+    let res = run_chain(&mut sampler, &init_z(dim, settings.seed), &opts)?;
+    let rows = summarize(&[res.samples.clone()], dim, &[]);
+    let ess = min_ess(&rows).max(1.0);
+    Ok(Point {
+        p,
+        backend: backend.paper_name(),
+        ms_per_ess: 1e3 * res.sample_secs / ess,
+        mean_ess: mean_ess(&rows),
+        sample_secs: res.sample_secs,
+    })
+}
+
+pub fn run(engine: &Engine, settings: &Settings) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("Fig 2b — SKIM: time (ms) per effective sample vs dimensionality p\n");
+    out.push_str("(paper: NumPyro consistently below Stan; both grow with p)\n\n");
+    let (warmup, samples) = settings.budget(1000, 1000);
+    out.push_str(&format!("warmup {warmup}, draws {samples}\n"));
+    out.push_str(&format!(
+        "{:>6} {:<26} {:>12} {:>10} {:>10}\n",
+        "p", "backend", "ms/ESS(min)", "mean ESS", "sample s"
+    ));
+
+    // sweep every skim_p* model present in the manifest
+    let mut ps: Vec<usize> = engine
+        .manifest
+        .models()
+        .iter()
+        .filter_map(|m| m.strip_prefix("skim_p").and_then(|s| s.parse().ok()))
+        .collect();
+    ps.sort_unstable();
+    if settings.quick {
+        ps.truncate(2);
+    }
+
+    let mut series: Vec<Point> = Vec::new();
+    for &p in &ps {
+        let model = format!("skim_p{p}");
+        for (backend, dtype) in [(Backend::Native, "f64"), (Backend::Fused, "f32")] {
+            match measure(engine, &model, p, backend, dtype, warmup, samples, settings) {
+                Ok(pt) => {
+                    out.push_str(&format!(
+                        "{:>6} {:<26} {:>12.3} {:>10.1} {:>10.3}\n",
+                        pt.p, pt.backend, pt.ms_per_ess, pt.mean_ess, pt.sample_secs
+                    ));
+                    series.push(pt);
+                }
+                Err(e) => out.push_str(&format!("{p:>6} {}: failed: {e:#}\n", backend.paper_name())),
+            }
+        }
+    }
+
+    // shape check: fused below native at each p
+    let mut wins = 0;
+    let mut total = 0;
+    for &p in &ps {
+        let native = series.iter().find(|s| s.p == p && s.backend.contains("native"));
+        let fused = series.iter().find(|s| s.p == p && s.backend.contains("fused"));
+        if let (Some(n), Some(f)) = (native, fused) {
+            total += 1;
+            if f.ms_per_ess < n.ms_per_ess {
+                wins += 1;
+            }
+        }
+    }
+    out.push_str(&format!(
+        "\n-> fused wins on {wins}/{total} dimensionalities (paper: all)\n"
+    ));
+    Ok(out)
+}

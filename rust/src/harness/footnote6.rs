@@ -1,0 +1,90 @@
+//! Footnote 6: effective sample size on the HMM across 5 random seeds,
+//! 32-bit vs 64-bit (E4).  Paper: average ESS 652 (Stan), 556
+//! (NumPyro-32), 788 (NumPyro-64) — i.e. f64 samples better per draw
+//! but slower per second (the Fig 2b trade-off).
+
+use anyhow::Result;
+
+use crate::config::Settings;
+use crate::coordinator::{run_chain, NutsOptions};
+use crate::diagnostics::summary::{mean_ess, summarize};
+use crate::harness::builders::{build_sampler, init_z, Backend, Workload};
+use crate::runtime::engine::Engine;
+
+pub fn run(engine: &Engine, settings: &Settings) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("Footnote 6 — HMM mean ESS across 5 seeds (1000 warmup + 1000 draws)\n");
+    out.push_str("(paper: Stan 652, NumPyro 32-bit 556, NumPyro 64-bit 788)\n\n");
+    let (warmup, samples) = settings.budget(1000, 1000);
+    let seeds: Vec<u64> = (0..5).map(|i| settings.seed + i).collect();
+
+    let mut table: Vec<(String, Vec<f64>, f64)> = Vec::new();
+    let configs: Vec<(&str, Backend, &str)> = vec![
+        ("native (Stan arch) f64", Backend::Native, "f64"),
+        ("fused (NumPyro arch) f32", Backend::Fused, "f32"),
+        ("fused (NumPyro arch) f64", Backend::Fused, "f64"),
+    ];
+
+    for (label, backend, dtype) in configs {
+        if backend == Backend::Fused
+            && engine.manifest.find("hmm", "nuts_step", dtype).is_err()
+        {
+            continue;
+        }
+        let mut esses = Vec::new();
+        let mut secs = 0.0;
+        for &seed in &seeds {
+            let mut s = settings.clone();
+            s.seed = seed;
+            let workload = Workload::for_model(engine, "hmm", seed)?;
+            let mut sampler =
+                build_sampler(engine, "hmm", backend, dtype, &workload, s.max_tree_depth)?;
+            let dim = sampler.dim();
+            let opts = NutsOptions {
+                num_warmup: warmup,
+                num_samples: samples,
+                target_accept: s.target_accept,
+                seed,
+                ..Default::default()
+            };
+            let res = run_chain(&mut sampler, &init_z(dim, seed), &opts)?;
+            let rows = summarize(&[res.samples.clone()], dim, &[]);
+            esses.push(mean_ess(&rows));
+            secs += res.sample_secs;
+        }
+        table.push((label.to_string(), esses, secs / seeds.len() as f64));
+    }
+
+    out.push_str(&format!(
+        "{:<28} {:>10} {:>28} {:>12}\n",
+        "config", "mean ESS", "per-seed ESS", "sample s"
+    ));
+    for (label, esses, secs) in &table {
+        let mean = esses.iter().sum::<f64>() / esses.len() as f64;
+        let per: Vec<String> = esses.iter().map(|e| format!("{e:.0}")).collect();
+        out.push_str(&format!(
+            "{:<28} {:>10.0} {:>28} {:>12.2}\n",
+            label,
+            mean,
+            per.join(","),
+            secs
+        ));
+    }
+
+    // shape check: f64 >= f32 in ESS (paper: 788 vs 556)
+    let f32_ess = table
+        .iter()
+        .find(|(l, _, _)| l.contains("f32"))
+        .map(|(_, e, _)| e.iter().sum::<f64>() / e.len() as f64);
+    let f64_ess = table
+        .iter()
+        .find(|(l, _, _)| l.contains("fused") && l.contains("f64"))
+        .map(|(_, e, _)| e.iter().sum::<f64>() / e.len() as f64);
+    if let (Some(a), Some(b)) = (f32_ess, f64_ess) {
+        out.push_str(&format!(
+            "\n-> fused f64 / f32 ESS ratio = {:.2} (paper: 788/556 = 1.42)\n",
+            b / a
+        ));
+    }
+    Ok(out)
+}

@@ -1,0 +1,37 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (DESIGN.md §4 experiment index).
+//!
+//! | experiment  | paper artifact | module        |
+//! |-------------|----------------|---------------|
+//! | E1/E2       | Table 2a       | [`table2a`]   |
+//! | E3          | Fig 2b         | [`fig2b`]     |
+//! | E4          | footnote 6     | [`footnote6`] |
+//! | E5          | Fig 1 / App. B | [`fig1`]      |
+//! | E6          | Appendix D     | [`appendix_d`]|
+//! | E7, E8      | §3.1/§3.2      | [`ablations`] |
+//!
+//! Every experiment returns a plain-text report (also written under
+//! `results/`), with the measured *shape* checks described in
+//! EXPERIMENTS.md.
+
+pub mod ablations;
+pub mod appendix_d;
+pub mod builders;
+pub mod fig1;
+pub mod fig2b;
+pub mod footnote6;
+pub mod table2a;
+
+use anyhow::Result;
+
+use crate::config::Settings;
+
+/// Write a report under `results/` and echo it.
+pub fn emit(settings: &Settings, name: &str, report: &str) -> Result<()> {
+    std::fs::create_dir_all(&settings.results_dir)?;
+    let path = format!("{}/{}.txt", settings.results_dir, name);
+    std::fs::write(&path, report)?;
+    println!("{report}");
+    println!("[saved {path}]");
+    Ok(())
+}

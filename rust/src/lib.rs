@@ -1,0 +1,39 @@
+//! # fugue — composable effects + end-to-end-compiled iterative NUTS
+//!
+//! Reproduction of *"Composable Effects for Flexible and Accelerated
+//! Probabilistic Programming in NumPyro"* (Phan, Pradhan & Jankowiak,
+//! 2019) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time, Python)** — the paper's effect-handler PPL and
+//!   the iterative NUTS transition (Appendix A, Algorithm 2) are lowered
+//!   once by `python/compile/aot.py` into `artifacts/*.hlo.txt`.
+//! * **L3 (this crate)** — a self-contained inference coordinator that
+//!   loads the artifacts through PJRT ([`runtime`]), runs multi-chain
+//!   NUTS with Stan-style warmup adaptation ([`coordinator`]), computes
+//!   convergence diagnostics ([`diagnostics`]), and regenerates every
+//!   table and figure of the paper's evaluation ([`harness`]).
+//!
+//! The crate also contains complete *native* comparators used by the
+//! benchmarks (DESIGN.md §3): a tape-based reverse-mode autodiff
+//! ([`autodiff`], the Stan analogue), a Rust distribution/transform
+//! library ([`ppl`]), Table 1's effect handlers over a Rust model trait
+//! ([`effects`]), and pure-Rust recursive + iterative NUTS ([`mcmc`]).
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `fugue` binary is self-contained.
+
+pub mod autodiff;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod diagnostics;
+pub mod effects;
+pub mod harness;
+pub mod mcmc;
+pub mod models;
+pub mod ppl;
+pub mod rng;
+pub mod runtime;
+pub mod svi;
+pub mod util;

@@ -1,0 +1,319 @@
+//! `fugue` — CLI for the NumPyro-paper reproduction stack.
+//!
+//! Subcommands:
+//!   info                         list artifacts from the manifest
+//!   run                          run NUTS on a model, print a summary
+//!   experiment <name>            regenerate a paper table/figure
+//!   artifacts-check              load + compile + smoke-run every artifact
+//!   help
+//!
+//! Common flags: --artifacts DIR --results DIR --seed N --quick --full
+//!               --warmup N --samples N --chains N --model NAME
+//!               --backend fused|stepwise|native --dtype f32|f64
+
+use anyhow::{bail, Context, Result};
+
+use fugue::cli::Args;
+use fugue::config::Settings;
+use fugue::coordinator::{run_chains, NutsOptions};
+use fugue::diagnostics::summary::{render_table, summarize};
+use fugue::harness::{self, builders};
+use fugue::runtime::engine::Engine;
+
+const HELP: &str = "\
+fugue — composable effects + end-to-end-compiled iterative NUTS (paper reproduction)
+
+USAGE: fugue <subcommand> [flags]
+
+SUBCOMMANDS
+  info                      list models/artifacts in the manifest
+  run                       sample a model and print posterior summary
+                            (--model NAME --backend fused|stepwise|native
+                             --dtype f32|f64 --warmup N --samples N --chains N)
+  experiment table2a        Table 2a: ms/leapfrog across architectures (--model hmm|covtype)
+  experiment fig2b          Fig 2b: SKIM ms/effective-sample vs p
+  experiment footnote6      footnote 6: HMM ESS across seeds, f32 vs f64
+  experiment fig1           Fig 1/App. B: vectorized prediction + log-lik
+  experiment appendix-d     App. D: SVI with vectorized ELBO
+  experiment ablate-vmap    E7: vmapped chains vs sequential dispatch
+  experiment ablate-tree    E8: iterative vs recursive tree (native)
+  experiment ablate-kernel  interpret-mode Pallas vs XLA-fused reference
+  experiment all            everything above
+  artifacts-check           compile + smoke-run every artifact in the manifest
+  diagnose FILE.npy         ESS/R-hat summary of a saved posterior (--chains K)
+
+FLAGS
+  --artifacts DIR   artifact directory (default: artifacts)
+  --results DIR     report directory (default: results)
+  --seed N          base RNG seed
+  --quick           ~10x smaller workloads (CI/smoke)
+  --full            paper-scale workloads
+";
+
+fn cmd_info(engine: &Engine) -> Result<()> {
+    println!("artifacts dir: {}", engine.manifest.dir.display());
+    println!("models: {}", engine.manifest.models().join(", "));
+    println!();
+    println!(
+        "{:<38} {:>6} {:>6} {:>22}",
+        "artifact", "dim", "dtype", "kind"
+    );
+    for e in engine.manifest.entries.values() {
+        println!(
+            "{:<38} {:>6} {:>6} {:>22}",
+            e.name, e.dim, e.dtype, e.kind
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(engine: &Engine, args: &Args, settings: &Settings) -> Result<()> {
+    let model = args.get("model").unwrap_or("covtype_small");
+    let backend = builders::Backend::parse(args.get("backend").unwrap_or("fused"))?;
+    let dtype = args.get("dtype").unwrap_or("f32");
+    let (warmup, samples) = settings.budget(500, 500);
+
+    println!(
+        "model={model} backend={backend:?} dtype={dtype} warmup={warmup} samples={samples} chains={}",
+        settings.num_chains
+    );
+    let workload = builders::Workload::for_model(engine, model, settings.seed)?;
+    let mut sampler: Box<dyn fugue::coordinator::Sampler> =
+        if let Some(steps) = args.get_usize("hmc-steps")? {
+            // plain HMC (static trajectory) over the native potential —
+            // the sampler NUTS exists to replace (mcmc/hmc.rs)
+            anyhow::ensure!(
+                backend == builders::Backend::Native,
+                "--hmc-steps requires --backend native"
+            );
+            struct BoxedPotential(Box<dyn fugue::mcmc::Potential>);
+            impl fugue::mcmc::Potential for BoxedPotential {
+                fn dim(&self) -> usize {
+                    self.0.dim()
+                }
+                fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+                    self.0.value_and_grad(z, grad)
+                }
+            }
+            Box::new(fugue::mcmc::hmc::HmcSampler {
+                potential: BoxedPotential(workload.native_potential()?),
+                num_steps: steps as u32,
+            })
+        } else {
+            builders::build_sampler(
+                engine,
+                model,
+                backend,
+                dtype,
+                &workload,
+                settings.max_tree_depth,
+            )?
+        };
+    let dim = sampler.dim();
+    let opts = NutsOptions {
+        num_warmup: warmup,
+        num_samples: samples,
+        target_accept: settings.target_accept,
+        fixed_step_size: args.get_f64("step-size")?,
+        adapt_mass: args.get_f64("step-size")?.is_none(),
+        init_step_size: 0.1,
+        seed: settings.seed,
+    };
+    let t0 = std::time::Instant::now();
+    let results = run_chains(&mut sampler, settings.num_chains, &opts)?;
+    let total = t0.elapsed().as_secs_f64();
+
+    let layout = engine
+        .manifest
+        .find(model, "nuts_step", dtype)
+        .map(|e| e.param_layout.clone())
+        .unwrap_or_default();
+    let chains: Vec<Vec<f64>> = results.iter().map(|r| r.samples.clone()).collect();
+    let rows = summarize(&chains, dim, &layout);
+    println!("{}", render_table(&rows));
+
+    if let Some(out) = args.get("out") {
+        let all: Vec<f64> = chains.concat();
+        let draws = all.len() / dim;
+        fugue::util::npy::write_f64(out, &all, &[draws, dim])?;
+        println!("posterior saved to {out} ({draws} x {dim}, numpy .npy)");
+    }
+
+    let leapfrogs: u64 = results.iter().map(|r| r.sample_leapfrogs).sum();
+    let sample_secs: f64 = results.iter().map(|r| r.sample_secs).sum();
+    let divergences: u64 = results.iter().map(|r| r.divergences).sum();
+    println!(
+        "total {total:.2}s | sampling {sample_secs:.2}s | {leapfrogs} leapfrogs | {:.4} ms/leapfrog | {} divergences | step sizes: {}",
+        1e3 * sample_secs / leapfrogs.max(1) as f64,
+        divergences,
+        results
+            .iter()
+            .map(|r| format!("{:.4}", r.step_size))
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+    Ok(())
+}
+
+fn cmd_artifacts_check(engine: &Engine, settings: &Settings) -> Result<()> {
+    let names: Vec<String> = engine.manifest.entries.keys().cloned().collect();
+    let mut failures = 0;
+    for name in &names {
+        let t0 = std::time::Instant::now();
+        match check_one(engine, name, settings) {
+            Ok(msg) => println!(
+                "OK   {name:<42} {:>7.2}s  {msg}",
+                t0.elapsed().as_secs_f64()
+            ),
+            Err(e) => {
+                failures += 1;
+                println!("FAIL {name:<42} {e:#}");
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures}/{} artifacts failed", names.len());
+    }
+    println!("all {} artifacts OK", names.len());
+    Ok(())
+}
+
+fn check_one(engine: &Engine, name: &str, settings: &Settings) -> Result<String> {
+    let exe = engine.executable(name)?;
+    let entry = exe.entry.clone();
+    match entry.kind.as_str() {
+        "nuts_step" | "nuts_step_vmap" => {
+            let workload = builders::Workload::for_model(engine, &entry.model, settings.seed)?;
+            let dt = entry.inputs[1].dtype;
+            let mut step = fugue::runtime::NutsStep::new(engine, name, &workload.tensors(dt)?)?;
+            let dim = entry.dim;
+            if entry.kind == "nuts_step_vmap" {
+                let k = entry.meta_usize("chains").unwrap_or(4);
+                let trs = step.step_vmap(
+                    &vec![[1u32, 2u32]; k],
+                    &vec![0.1; k * dim],
+                    &vec![0.01; k],
+                    &vec![1.0; k * dim],
+                )?;
+                let lf: u32 = trs.iter().map(|t| t.num_leapfrog).sum();
+                Ok(format!("{k} chains, {lf} leapfrogs"))
+            } else {
+                let tr = step.step([1, 2], &vec![0.1; dim], 0.01, &vec![1.0; dim])?;
+                anyhow::ensure!(tr.num_leapfrog > 0, "no leapfrogs taken");
+                anyhow::ensure!(tr.potential.is_finite(), "non-finite potential");
+                Ok(format!(
+                    "{} leapfrogs, U={:.2}",
+                    tr.num_leapfrog, tr.potential
+                ))
+            }
+        }
+        "potential_and_grad" => {
+            let workload = builders::Workload::for_model(engine, &entry.model, settings.seed)?;
+            let dt = entry.inputs[0].dtype;
+            let mut pot =
+                fugue::runtime::PjrtPotential::new(engine, name, &workload.tensors(dt)?)?;
+            let dim = entry.dim;
+            let mut grad = vec![0.0; dim];
+            let u = pot.eval(&vec![0.1; dim], &mut grad)?;
+            anyhow::ensure!(u.is_finite(), "non-finite potential");
+            anyhow::ensure!(grad.iter().all(|g| g.is_finite()), "non-finite grad");
+            Ok(format!(
+                "U={u:.2} |g|={:.2}",
+                grad.iter().map(|g| g * g).sum::<f64>().sqrt()
+            ))
+        }
+        _ => {
+            // predict / loglik / elbo artifacts: compile-only check here;
+            // exercised end-to-end by `experiment fig1` / `appendix-d`.
+            Ok(format!("compiled ({} inputs)", entry.inputs.len()))
+        }
+    }
+}
+
+fn cmd_experiment(engine: &Engine, args: &Args, settings: &Settings) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .context("experiment name required (table2a|fig2b|footnote6|fig1|appendix-d|ablate-vmap|ablate-tree|all)")?;
+    let model_filter = args.get("model");
+    let run_one = |name: &str| -> Result<()> {
+        let report = match name {
+            "table2a" => harness::table2a::run(engine, settings, model_filter)?,
+            "fig2b" => harness::fig2b::run(engine, settings)?,
+            "footnote6" => harness::footnote6::run(engine, settings)?,
+            "fig1" => harness::fig1::run(engine, settings)?,
+            "appendix-d" => harness::appendix_d::run(engine, settings)?,
+            "ablate-vmap" => harness::ablations::ablate_vmap(engine, settings)?,
+            "ablate-tree" => harness::ablations::ablate_tree(engine, settings)?,
+            "ablate-kernel" => harness::ablations::ablate_kernel(engine, settings)?,
+            other => bail!("unknown experiment '{other}'"),
+        };
+        harness::emit(settings, name, &report)
+    };
+    if which == "all" {
+        for name in [
+            "table2a",
+            "fig2b",
+            "footnote6",
+            "fig1",
+            "appendix-d",
+            "ablate-vmap",
+            "ablate-tree",
+            "ablate-kernel",
+        ] {
+            println!("\n================ {name} ================\n");
+            run_one(name)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    if args.positional.is_empty() || args.positional[0] == "help" {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let settings = Settings::from_args(&args)?;
+    let sub = args.subcommand()?;
+    let engine = Engine::new(&settings.artifacts_dir)?;
+    match sub {
+        "info" => cmd_info(&engine),
+        "run" => cmd_run(&engine, &args, &settings),
+        "experiment" => cmd_experiment(&engine, &args, &settings),
+        "artifacts-check" => cmd_artifacts_check(&engine, &settings),
+        "diagnose" => cmd_diagnose(&args, &settings),
+        other => bail!("unknown subcommand '{other}'; run `fugue help`"),
+    }
+}
+
+/// `fugue diagnose <posterior.npy> [--chains K]` — summaries + ESS/R-hat
+/// for a saved posterior (splits rows evenly across K chains).
+fn cmd_diagnose(args: &Args, settings: &Settings) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("diagnose requires a .npy path (from `fugue run --out ...`)")?;
+    let (data, shape) = fugue::util::npy::read_f64(path)?;
+    anyhow::ensure!(shape.len() == 2, "expected 2-d draws x dim array");
+    let (draws, dim) = (shape[0], shape[1]);
+    let k = settings.num_chains.max(1).min(draws);
+    let per = draws / k;
+    let chains: Vec<Vec<f64>> = (0..k)
+        .map(|c| data[c * per * dim..(c + 1) * per * dim].to_vec())
+        .collect();
+    let rows = summarize(&chains, dim, &[]);
+    println!("{}", render_table(&rows));
+    println!(
+        "{} draws x {} params as {} chain(s) | min ESS {:.0} | max split-Rhat {:.3}",
+        draws,
+        dim,
+        k,
+        fugue::diagnostics::summary::min_ess(&rows),
+        rows.iter().map(|r| r.rhat).fold(0.0, f64::max)
+    );
+    Ok(())
+}

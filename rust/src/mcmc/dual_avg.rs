@@ -1,0 +1,93 @@
+//! Nesterov dual averaging on log step size (Hoffman-Gelman §3.2),
+//! numerically identical to `python/compile/infer/hmc_util.py`.
+
+#[derive(Debug, Clone)]
+pub struct DualAverage {
+    pub log_step: f64,
+    pub log_step_avg: f64,
+    grad_sum: f64,
+    t: f64,
+    mu: f64,
+    pub target: f64,
+    gamma: f64,
+    t0: f64,
+    kappa: f64,
+}
+
+impl DualAverage {
+    pub fn new(step_size: f64, target: f64) -> Self {
+        DualAverage {
+            log_step: step_size.ln(),
+            log_step_avg: 0.0,
+            grad_sum: 0.0,
+            t: 0.0,
+            mu: (10.0 * step_size).ln(),
+            target,
+            gamma: 0.05,
+            t0: 10.0,
+            kappa: 0.75,
+        }
+    }
+
+    pub fn update(&mut self, accept_prob: f64) {
+        self.t += 1.0;
+        self.grad_sum += self.target - accept_prob;
+        self.log_step = self.mu - self.t.sqrt() / self.gamma * self.grad_sum / (self.t + self.t0);
+        let eta = self.t.powf(-self.kappa);
+        self.log_step_avg = eta * self.log_step + (1.0 - eta) * self.log_step_avg;
+    }
+
+    pub fn step_size(&self) -> f64 {
+        self.log_step.exp()
+    }
+
+    pub fn final_step_size(&self) -> f64 {
+        self.log_step_avg.exp()
+    }
+
+    /// Restart around a new anchor (window boundary), keeping the target.
+    pub fn restart(&mut self, step_size: f64) {
+        *self = DualAverage::new(step_size, self.target);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_to_target_accept() {
+        // fake world: accept_prob = min(1, exp(-5 (eps - 0.3))): larger
+        // steps accept less; fixed point where accept == target.
+        let mut da = DualAverage::new(1.0, 0.8);
+        for _ in 0..2000 {
+            let eps = da.step_size();
+            let accept = (-5.0 * (eps - 0.3)).exp().min(1.0);
+            da.update(accept);
+        }
+        let eps = da.final_step_size();
+        let accept = (-5.0 * (eps - 0.3)).exp().min(1.0);
+        assert!(
+            (accept - 0.8).abs() < 0.05,
+            "converged accept {accept} at eps {eps}"
+        );
+    }
+
+    #[test]
+    fn shrinks_step_when_rejecting() {
+        let mut da = DualAverage::new(1.0, 0.8);
+        for _ in 0..50 {
+            da.update(0.0);
+        }
+        assert!(da.step_size() < 0.1);
+    }
+
+    #[test]
+    fn grows_step_when_accepting() {
+        let mut da = DualAverage::new(0.01, 0.8);
+        for _ in 0..50 {
+            da.update(1.0);
+        }
+        assert!(da.step_size() > 0.01);
+    }
+}

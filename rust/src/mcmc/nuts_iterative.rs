@@ -1,0 +1,230 @@
+//! Algorithm 2: `IterativeBuildTree` (the paper's Appendix A), in Rust.
+//!
+//! Identical trajectory logic to the in-graph JAX implementation
+//! (`python/compile/infer/nuts.py`): 2^depth leapfrog steps in a flat
+//! loop; even nodes stored at `S[BitCount(n)]`; at odd nodes the U-turn
+//! condition is checked against the candidate set C(n) (trailing 1-bits
+//! progressively masked), giving O(max_depth) memory.
+//!
+//! Run against the native autodiff potentials this is the *Stan* cost
+//! model (compiled native code, no per-leapfrog dispatch); the contrast
+//! with [`super::nuts_recursive`] isolates the iterative-formulation
+//! overhead that the paper reports as "insignificant" (E8).
+
+use crate::mcmc::{
+    is_u_turn, kinetic, leapfrog, PhaseState, Potential, Transition, MAX_DELTA_ENERGY,
+};
+use crate::rng::Rng;
+
+use super::nuts_recursive::Subtree;
+
+#[inline]
+pub fn bit_count(n: u32) -> u32 {
+    n.count_ones()
+}
+
+#[inline]
+pub fn trailing_ones(n: u32) -> u32 {
+    (n ^ (n + 1)).count_ones() - 1
+}
+
+/// Candidate storage-index range [i_min, i_max] for odd n (Appendix A).
+#[inline]
+pub fn candidate_range(n: u32) -> (u32, u32) {
+    let i_max = bit_count(n - 1);
+    let i_min = i_max + 1 - trailing_ones(n);
+    (i_min, i_max)
+}
+
+/// Build 2^depth leaves iteratively from `edge` (Algorithm 2), with
+/// early exit on U-turn / divergence.
+fn build_subtree<P: Potential + ?Sized>(
+    pot: &mut P,
+    rng: &mut Rng,
+    edge: &PhaseState,
+    depth: u32,
+    eps: f64,
+    inv_mass: &[f64],
+    energy_0: f64,
+    max_depth: u32,
+) -> Subtree {
+    let dim = edge.z.len();
+    let num_leaves: u32 = 1 << depth;
+    // S[i] stores the even node with BitCount == i (positions + momenta)
+    let slots = max_depth.max(1) as usize;
+    let mut s_z = vec![0.0f64; slots * dim];
+    let mut s_r = vec![0.0f64; slots * dim];
+
+    let mut state = edge.clone();
+    let mut z_prop: Vec<f64> = edge.z.clone();
+    let mut u_prop = f64::INFINITY;
+    let mut weight = f64::NEG_INFINITY;
+    let mut sum_accept = 0.0;
+    let mut turning = false;
+    let mut diverging = false;
+    let mut n: u32 = 0;
+
+    while n < num_leaves && !turning && !diverging {
+        state = leapfrog(pot, &state, eps, inv_mass);
+        let mut energy = state.potential + kinetic(&state.r, inv_mass);
+        if energy.is_nan() {
+            energy = f64::INFINITY;
+        }
+        let delta = energy - energy_0;
+        diverging = delta > MAX_DELTA_ENERGY;
+        sum_accept += (-delta).exp().min(1.0);
+
+        // multinomial progressive sampling within the subtree
+        let leaf_w = -energy;
+        let new_weight = log_add_exp(weight, leaf_w);
+        if rng.uniform().ln() < leaf_w - new_weight {
+            z_prop.copy_from_slice(&state.z);
+            u_prop = state.potential;
+        }
+        weight = new_weight;
+
+        if n % 2 == 0 {
+            let i = bit_count(n) as usize;
+            s_z[i * dim..(i + 1) * dim].copy_from_slice(&state.z);
+            s_r[i * dim..(i + 1) * dim].copy_from_slice(&state.r);
+        } else {
+            let (i_min, i_max) = candidate_range(n);
+            for k in i_min..=i_max {
+                let k = k as usize;
+                let cand_z = &s_z[k * dim..(k + 1) * dim];
+                let cand_r = &s_r[k * dim..(k + 1) * dim];
+                // candidate precedes `state` in integration order
+                let t = if eps > 0.0 {
+                    is_u_turn(cand_z, &state.z, cand_r, &state.r, inv_mass)
+                } else {
+                    is_u_turn(&state.z, cand_z, &state.r, cand_r, inv_mass)
+                };
+                if t {
+                    turning = true;
+                    break;
+                }
+            }
+        }
+        n += 1;
+    }
+
+    Subtree {
+        last: state,
+        z_prop,
+        u_prop,
+        weight,
+        turning,
+        diverging,
+        sum_accept,
+        n_leapfrog: n,
+    }
+}
+
+fn log_add_exp(a: f64, b: f64) -> f64 {
+    let m = a.max(b);
+    if m == f64::NEG_INFINITY {
+        return m;
+    }
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+/// One NUTS transition using the iterative tree builder.  The outer
+/// doubling loop is the same biased-progressive scheme as the recursive
+/// version; only the subtree construction differs.
+pub fn draw<P: Potential + ?Sized>(
+    pot: &mut P,
+    rng: &mut Rng,
+    z0: &[f64],
+    step_size: f64,
+    inv_mass: &[f64],
+    max_depth: u32,
+) -> Transition {
+    let dim = z0.len();
+    let mut grad = vec![0.0; dim];
+    let potential_0 = pot.value_and_grad(z0, &mut grad);
+    let mut r0 = vec![0.0; dim];
+    for i in 0..dim {
+        r0[i] = rng.normal() / inv_mass[i].sqrt();
+    }
+    let init = PhaseState {
+        z: z0.to_vec(),
+        r: r0,
+        potential: potential_0,
+        grad,
+    };
+    let energy_0 = init.energy(inv_mass);
+
+    let mut left = init.clone();
+    let mut right = init;
+    let mut z_prop = z0.to_vec();
+    let mut u_prop = potential_0;
+    let mut weight = -energy_0;
+    let mut sum_accept = 0.0;
+    let mut n_leapfrog = 0u32;
+    let mut depth = 0u32;
+    let mut diverging = false;
+
+    while depth < max_depth {
+        let going_right = rng.bernoulli(0.5);
+        let eps = if going_right { step_size } else { -step_size };
+        let edge = if going_right { &right } else { &left };
+        let sub = build_subtree(
+            pot, rng, edge, depth, eps, inv_mass, energy_0, max_depth,
+        );
+        sum_accept += sub.sum_accept;
+        n_leapfrog += sub.n_leapfrog;
+        let complete = !sub.turning && !sub.diverging;
+        diverging = sub.diverging;
+
+        if going_right {
+            right = sub.last.clone();
+        } else {
+            left = sub.last.clone();
+        }
+        if complete {
+            if rng.uniform().ln() < sub.weight - weight {
+                z_prop = sub.z_prop;
+                u_prop = sub.u_prop;
+            }
+            weight = log_add_exp(weight, sub.weight);
+        } else {
+            break;
+        }
+        depth += 1;
+        if is_u_turn(&left.z, &right.z, &left.r, &right.r, inv_mass) {
+            break;
+        }
+    }
+
+    Transition {
+        z: z_prop,
+        accept_prob: sum_accept / (n_leapfrog.max(1) as f64),
+        num_leapfrog: n_leapfrog,
+        potential: u_prop,
+        diverging,
+        depth,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_helpers_match_paper_example() {
+        // n = 11 = (1011)2: C(11) = {(1010)2, (1000)2} = {10, 8}
+        assert_eq!(trailing_ones(11), 2);
+        let (i_min, i_max) = candidate_range(11);
+        // i_max = BitCount(10) = 2, two candidates -> i_min = 1
+        assert_eq!((i_min, i_max), (1, 2));
+    }
+
+    #[test]
+    fn trailing_ones_basics() {
+        assert_eq!(trailing_ones(0), 0);
+        assert_eq!(trailing_ones(1), 1);
+        assert_eq!(trailing_ones(3), 2);
+        assert_eq!(trailing_ones(7), 3);
+        assert_eq!(trailing_ones(8), 0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Algorithm 1: recursive `BuildTree` (Hoffman & Gelman) with
+//! multinomial proposal sampling.
+//!
+//! This is the host-recursion formulation that JAX cannot trace — the
+//! paper's motivation for Algorithm 2.  Run against a PJRT
+//! `potential_and_grad` executable it reproduces the *Pyro* cost model:
+//! tree logic on the host, one compiled dispatch per leapfrog.
+
+use crate::mcmc::{
+    is_u_turn, kinetic, leapfrog, PhaseState, Potential, Transition, MAX_DELTA_ENERGY,
+};
+use crate::rng::Rng;
+
+/// Subtree summary in integration order (`last` = outermost state
+/// reached; the caller's edge was `first`'s predecessor).
+pub(crate) struct Subtree {
+    pub last: PhaseState,
+    pub z_prop: Vec<f64>,
+    pub u_prop: f64,
+    /// log sum of exp(-H) over leaves
+    pub weight: f64,
+    pub turning: bool,
+    pub diverging: bool,
+    pub sum_accept: f64,
+    pub n_leapfrog: u32,
+}
+
+fn leaf<P: Potential + ?Sized>(
+    pot: &mut P,
+    edge: &PhaseState,
+    eps: f64,
+    inv_mass: &[f64],
+    energy_0: f64,
+) -> Subtree {
+    let state = leapfrog(pot, edge, eps, inv_mass);
+    let mut energy = state.potential + kinetic(&state.r, inv_mass);
+    if energy.is_nan() {
+        energy = f64::INFINITY;
+    }
+    let delta = energy - energy_0;
+    Subtree {
+        z_prop: state.z.clone(),
+        u_prop: state.potential,
+        weight: -energy,
+        turning: false,
+        diverging: delta > MAX_DELTA_ENERGY,
+        sum_accept: (-delta).exp().min(1.0),
+        n_leapfrog: 1,
+        last: state,
+    }
+}
+
+fn log_add_exp(a: f64, b: f64) -> f64 {
+    let m = a.max(b);
+    if m == f64::NEG_INFINITY {
+        return m;
+    }
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+/// Recursive BuildTree: builds 2^depth leaves from `edge` in the
+/// direction of `eps`'s sign, tracking the subtree's first state for
+/// internal U-turn checks.
+fn build_tree<P: Potential + ?Sized>(
+    pot: &mut P,
+    rng: &mut Rng,
+    edge: &PhaseState,
+    depth: u32,
+    eps: f64,
+    inv_mass: &[f64],
+    energy_0: f64,
+) -> (Subtree, PhaseState) {
+    if depth == 0 {
+        let t = leaf(pot, edge, eps, inv_mass, energy_0);
+        let first = t.last.clone();
+        return (t, first);
+    }
+    let (left, first) = build_tree(pot, rng, edge, depth - 1, eps, inv_mass, energy_0);
+    if left.turning || left.diverging {
+        return (left, first);
+    }
+    let (right, _right_first) =
+        build_tree(pot, rng, &left.last, depth - 1, eps, inv_mass, energy_0);
+
+    let weight = log_add_exp(left.weight, right.weight);
+    // uniform multinomial within the subtree
+    let take_right = !(right.turning || right.diverging)
+        && rng.uniform().ln() < right.weight - weight;
+    let (z_prop, u_prop) = if take_right {
+        (right.z_prop.clone(), right.u_prop)
+    } else {
+        (left.z_prop.clone(), left.u_prop)
+    };
+    let mut turning = right.turning;
+    if !right.turning && !right.diverging {
+        // U-turn across this (sub)trajectory in integration order
+        turning |= if eps > 0.0 {
+            is_u_turn(&first.z, &right.last.z, &first.r, &right.last.r, inv_mass)
+        } else {
+            is_u_turn(&right.last.z, &first.z, &right.last.r, &first.r, inv_mass)
+        };
+    }
+    (
+        Subtree {
+            last: right.last,
+            z_prop,
+            u_prop,
+            weight,
+            turning,
+            diverging: left.diverging || right.diverging,
+            sum_accept: left.sum_accept + right.sum_accept,
+            n_leapfrog: left.n_leapfrog + right.n_leapfrog,
+        },
+        first,
+    )
+}
+
+/// One NUTS transition using the recursive tree builder.
+pub fn draw<P: Potential + ?Sized>(
+    pot: &mut P,
+    rng: &mut Rng,
+    z0: &[f64],
+    step_size: f64,
+    inv_mass: &[f64],
+    max_depth: u32,
+) -> Transition {
+    let dim = z0.len();
+    let mut grad = vec![0.0; dim];
+    let potential_0 = pot.value_and_grad(z0, &mut grad);
+    let mut r0 = vec![0.0; dim];
+    for i in 0..dim {
+        r0[i] = rng.normal() / inv_mass[i].sqrt();
+    }
+    let init = PhaseState {
+        z: z0.to_vec(),
+        r: r0,
+        potential: potential_0,
+        grad,
+    };
+    let energy_0 = init.energy(inv_mass);
+
+    let mut left = init.clone();
+    let mut right = init;
+    let mut z_prop = z0.to_vec();
+    let mut u_prop = potential_0;
+    let mut weight = -energy_0;
+    let mut sum_accept = 0.0;
+    let mut n_leapfrog = 0u32;
+    let mut depth = 0u32;
+    let mut diverging = false;
+
+    while depth < max_depth {
+        let going_right = rng.bernoulli(0.5);
+        let eps = if going_right { step_size } else { -step_size };
+        let edge = if going_right { &right } else { &left };
+        let (sub, _) = build_tree(pot, rng, edge, depth, eps, inv_mass, energy_0);
+        sum_accept += sub.sum_accept;
+        n_leapfrog += sub.n_leapfrog;
+        let complete = !sub.turning && !sub.diverging;
+        diverging = sub.diverging;
+
+        if going_right {
+            right = sub.last.clone();
+        } else {
+            left = sub.last.clone();
+        }
+        if complete {
+            // biased progressive sampling across subtrees
+            if rng.uniform().ln() < sub.weight - weight {
+                z_prop = sub.z_prop;
+                u_prop = sub.u_prop;
+            }
+            weight = log_add_exp(weight, sub.weight);
+        } else {
+            break;
+        }
+        depth += 1;
+        if is_u_turn(&left.z, &right.z, &left.r, &right.r, inv_mass) {
+            break;
+        }
+    }
+
+    Transition {
+        z: z_prop,
+        accept_prob: sum_accept / (n_leapfrog.max(1) as f64),
+        num_leapfrog: n_leapfrog,
+        potential: u_prop,
+        diverging,
+        depth,
+    }
+}

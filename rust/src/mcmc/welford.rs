@@ -1,0 +1,87 @@
+//! Streaming (Welford) estimation of the diagonal mass matrix, with
+//! Stan's shrinkage regularization toward unit scale.
+
+#[derive(Debug, Clone)]
+pub struct Welford {
+    pub mean: Vec<f64>,
+    m2: Vec<f64>,
+    pub count: u64,
+}
+
+impl Welford {
+    pub fn new(dim: usize) -> Self {
+        Welford {
+            mean: vec![0.0; dim],
+            m2: vec![0.0; dim],
+            count: 0,
+        }
+    }
+
+    pub fn update(&mut self, x: &[f64]) {
+        self.count += 1;
+        let n = self.count as f64;
+        for i in 0..x.len() {
+            let delta = x[i] - self.mean[i];
+            self.mean[i] += delta / n;
+            self.m2[i] += delta * (x[i] - self.mean[i]);
+        }
+    }
+
+    /// Sample variance per coordinate.
+    pub fn variance(&self) -> Vec<f64> {
+        let denom = (self.count.max(2) - 1) as f64;
+        self.m2.iter().map(|m| m / denom).collect()
+    }
+
+    /// Regularized variance (Stan: shrink toward 1e-3 with weight
+    /// 5/(n+5)) — used as the inverse mass matrix diagonal.
+    pub fn regularized_variance(&self) -> Vec<f64> {
+        let n = self.count as f64;
+        let w = n / (n + 5.0);
+        self.variance()
+            .iter()
+            .map(|v| w * v + 1e-3 * (5.0 / (n + 5.0)))
+            .collect()
+    }
+
+    pub fn reset(&mut self) {
+        for v in self.mean.iter_mut().chain(self.m2.iter_mut()) {
+            *v = 0.0;
+        }
+        self.count = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matches_two_pass_moments() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<Vec<f64>> = (0..500)
+            .map(|_| vec![rng.normal() * 2.0 + 1.0, rng.normal() * 0.5])
+            .collect();
+        let mut w = Welford::new(2);
+        for x in &xs {
+            w.update(x);
+        }
+        for d in 0..2 {
+            let mean = xs.iter().map(|x| x[d]).sum::<f64>() / xs.len() as f64;
+            let var = xs.iter().map(|x| (x[d] - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+            assert!((w.mean[d] - mean).abs() < 1e-12);
+            assert!((w.variance()[d] - var).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn regularization_shrinks_small_counts() {
+        let mut w = Welford::new(1);
+        w.update(&[10.0]);
+        w.update(&[10.1]);
+        let rv = w.regularized_variance()[0];
+        // tiny sample: dominated by the 1e-3 * 5/(n+5) prior term
+        assert!(rv < 0.01, "rv {rv}");
+    }
+}

@@ -1,0 +1,274 @@
+//! Native semi-supervised HMM potential (Table 2a HMM benchmark, E1).
+//!
+//! Density identical to `python/compile/models/hmm.py`: Dirichlet(1)
+//! priors on the rows of theta (K x K transitions) and phi (K x V
+//! emissions), supervised transition/emission likelihood as sufficient
+//! statistics, and the marginalized tail through the log-space forward
+//! algorithm — implemented as one fused composite primitive whose
+//! partials come from the exact reverse recursion (stored alphas), the
+//! Stan-style rev rule for an HMM marginal.
+//!
+//! Unconstrained layout (sorted site names, matching `ravel_pytree`):
+//! `[phi sticks (K*(V-1)) row-major, theta sticks (K*(K-1))]`.
+
+use crate::autodiff::{Tape, Var};
+use crate::mcmc::Potential;
+use crate::ppl::special::{ln_gamma, log_sum_exp};
+use crate::ppl::transforms::stick_breaking_t;
+
+pub struct HmmNative {
+    pub num_states: usize,
+    pub num_categories: usize,
+    pub obs: Vec<usize>,
+    pub sup_states: Vec<usize>,
+    /// supervised transition counts (K x K)
+    trans_counts: Vec<f64>,
+    /// supervised emission counts (K x V)
+    emis_counts: Vec<f64>,
+    evals: u64,
+    /// stored forward alphas for the composite backward (T_u x K)
+    alphas: Vec<f64>,
+}
+
+impl HmmNative {
+    pub fn new(obs: Vec<usize>, sup_states: Vec<usize>, num_states: usize, num_categories: usize) -> Self {
+        let (k, v) = (num_states, num_categories);
+        let mut trans_counts = vec![0.0; k * k];
+        for w in sup_states.windows(2) {
+            trans_counts[w[0] * k + w[1]] += 1.0;
+        }
+        let mut emis_counts = vec![0.0; k * v];
+        for (t, &s) in sup_states.iter().enumerate() {
+            emis_counts[s * v + obs[t]] += 1.0;
+        }
+        let t_unsup = obs.len() - sup_states.len();
+        HmmNative {
+            num_states,
+            num_categories,
+            obs,
+            sup_states,
+            trans_counts,
+            emis_counts,
+            evals: 0,
+            alphas: vec![0.0; t_unsup * k],
+        }
+    }
+
+    /// Fused forward-algorithm marginal: given la (K*K) and lb (K*V)
+    /// values, returns log p(y_unsup) and writes partials wrt la then lb
+    /// into `partials` (length K*K + K*V).
+    fn forward_marginal(&mut self, la: &[f64], lb: &[f64], partials: &mut [f64]) -> f64 {
+        let k = self.num_states;
+        let v = self.num_categories;
+        let t_sup = self.sup_states.len();
+        let unsup = &self.obs[t_sup..];
+        let t_u = unsup.len();
+        let s_last = *self.sup_states.last().unwrap();
+
+        // forward pass, storing alphas
+        let alphas = &mut self.alphas;
+        for j in 0..k {
+            alphas[j] = la[s_last * k + j] + lb[j * v + unsup[0]];
+        }
+        let mut scores = vec![0.0; k];
+        for t in 1..t_u {
+            let (prev, cur) = alphas.split_at_mut(t * k);
+            let prev = &prev[(t - 1) * k..];
+            for j in 0..k {
+                for i in 0..k {
+                    scores[i] = prev[i] + la[i * k + j];
+                }
+                cur[j] = log_sum_exp(&scores) + lb[j * v + unsup[t]];
+            }
+        }
+        let last = &alphas[(t_u - 1) * k..t_u * k];
+        let value = log_sum_exp(last);
+
+        // reverse pass
+        for p in partials.iter_mut() {
+            *p = 0.0;
+        }
+        let (gla, glb) = partials.split_at_mut(k * k);
+        let mut abar: Vec<f64> = last.iter().map(|a| (a - value).exp()).collect();
+        let mut abar_prev = vec![0.0; k];
+        for t in (1..t_u).rev() {
+            let prev = &alphas[(t - 1) * k..t * k];
+            let cur = &alphas[t * k..(t + 1) * k];
+            abar_prev.iter_mut().for_each(|x| *x = 0.0);
+            for j in 0..k {
+                let aj = abar[j];
+                if aj == 0.0 {
+                    continue;
+                }
+                glb[j * v + unsup[t]] += aj;
+                let s_t = cur[j] - lb[j * v + unsup[t]];
+                for i in 0..k {
+                    let w = (prev[i] + la[i * k + j] - s_t).exp();
+                    gla[i * k + j] += aj * w;
+                    abar_prev[i] += aj * w;
+                }
+            }
+            std::mem::swap(&mut abar, &mut abar_prev);
+        }
+        // t = 0: alpha0_j = la[s_last, j] + lb[j, y_0]
+        for j in 0..k {
+            gla[s_last * k + j] += abar[j];
+            glb[j * v + unsup[0]] += abar[j];
+        }
+        value
+    }
+}
+
+impl Potential for HmmNative {
+    fn dim(&self) -> usize {
+        let (k, v) = (self.num_states, self.num_categories);
+        k * (v - 1) + k * (k - 1)
+    }
+
+    fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+        self.evals += 1;
+        let (k, v) = (self.num_states, self.num_categories);
+        let n_phi = k * (v - 1);
+
+        let mut t = Tape::new();
+        let inputs: Vec<Var> = z.iter().map(|&x| t.input(x)).collect();
+
+        // phi rows via stick-breaking
+        let mut log_phi: Vec<Var> = Vec::with_capacity(k * v);
+        let mut ladjs: Vec<Var> = Vec::new();
+        for row in 0..k {
+            let sticks = &inputs[row * (v - 1)..(row + 1) * (v - 1)];
+            let (simplex, ladj) = stick_breaking_t(&mut t, sticks);
+            ladjs.push(ladj);
+            for y in simplex {
+                log_phi.push(t.ln(y));
+            }
+        }
+        // theta rows
+        let mut log_theta: Vec<Var> = Vec::with_capacity(k * k);
+        for row in 0..k {
+            let base = n_phi + row * (k - 1);
+            let sticks = &inputs[base..base + (k - 1)];
+            let (simplex, ladj) = stick_breaking_t(&mut t, sticks);
+            ladjs.push(ladj);
+            for y in simplex {
+                log_theta.push(t.ln(y));
+            }
+        }
+        let ladj = t.sum(&ladjs);
+
+        // Dirichlet(1) priors contribute the normalizing constants only
+        let prior_const = k as f64 * (ln_gamma(v as f64) + ln_gamma(k as f64));
+
+        // supervised sufficient statistics
+        let mut sup_terms: Vec<Var> = Vec::new();
+        for i in 0..k {
+            for j in 0..k {
+                let c = self.trans_counts[i * k + j];
+                if c != 0.0 {
+                    sup_terms.push(t.scale(log_theta[i * k + j], c));
+                }
+            }
+            for w in 0..v {
+                let c = self.emis_counts[i * v + w];
+                if c != 0.0 {
+                    sup_terms.push(t.scale(log_phi[i * v + w], c));
+                }
+            }
+        }
+        let sup_ll = t.sum(&sup_terms);
+
+        // unsupervised tail: fused forward-algorithm composite
+        let la_vals: Vec<f64> = log_theta.iter().map(|v| t.value(*v)).collect();
+        let lb_vals: Vec<f64> = log_phi.iter().map(|v| t.value(*v)).collect();
+        let mut partials = vec![0.0; k * k + k * v];
+        let marg = self.forward_marginal(&la_vals, &lb_vals, &mut partials);
+        let parents: Vec<Var> = log_theta.iter().chain(log_phi.iter()).copied().collect();
+        let unsup_ll = t.composite(&parents, &partials, marg);
+
+        let mut logp = t.add(sup_ll, unsup_ll);
+        logp = t.add(logp, ladj);
+        logp = t.offset(logp, prior_const);
+        let u = t.neg(logp);
+        let adj = t.grad(u);
+        for (i, v_in) in inputs.iter().enumerate() {
+            grad[i] = adj[v_in.0 as usize];
+        }
+        t.value(u)
+    }
+
+    fn num_evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::finite_diff;
+    use crate::rng::Rng;
+
+    fn toy() -> HmmNative {
+        let mut rng = Rng::new(0);
+        let (k, v, t_len, t_sup) = (3usize, 10usize, 60usize, 15usize);
+        let obs: Vec<usize> = (0..t_len).map(|_| rng.below(v)).collect();
+        let sup: Vec<usize> = (0..t_sup).map(|_| rng.below(k)).collect();
+        HmmNative::new(obs, sup, k, v)
+    }
+
+    #[test]
+    fn grad_matches_finite_diff() {
+        let mut pot = toy();
+        let dim = pot.dim();
+        assert_eq!(dim, 33);
+        let mut rng = Rng::new(1);
+        let z: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.5).collect();
+        let mut g = vec![0.0; dim];
+        let _ = pot.value_and_grad(&z, &mut g);
+        let fd = finite_diff(&z, |zz| {
+            let mut tmp = vec![0.0; dim];
+            pot.value_and_grad(zz, &mut tmp)
+        }, 1e-6);
+        for i in 0..dim {
+            assert!(
+                (g[i] - fd[i]).abs() < 1e-4 * (1.0 + fd[i].abs()),
+                "i={i}: {} vs {}",
+                g[i],
+                fd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn forward_marginal_matches_brute_force_tiny() {
+        // 2 states, 2 categories, 3 unsupervised steps: enumerate paths.
+        let obs = vec![0, 1, 0, 1]; // first is supervised
+        let sup = vec![1];
+        let mut pot = HmmNative::new(obs.clone(), sup.clone(), 2, 2);
+        let theta: [[f64; 2]; 2] = [[0.7, 0.3], [0.4, 0.6]];
+        let phi: [[f64; 2]; 2] = [[0.2, 0.8], [0.9, 0.1]];
+        let la: Vec<f64> = theta.iter().flatten().map(|p| p.ln()).collect();
+        let lb: Vec<f64> = phi.iter().flatten().map(|p| p.ln()).collect();
+        let mut partials = vec![0.0; 4 + 4];
+        let got = pot.forward_marginal(&la, &lb, &mut partials);
+
+        // brute force over z_1, z_2, z_3 given z_0 = 1
+        let unsup = &obs[1..];
+        let mut total: f64 = 0.0;
+        for z1 in 0..2 {
+            for z2 in 0..2 {
+                for z3 in 0..2 {
+                    total += theta[1][z1]
+                        * phi[z1][unsup[0]]
+                        * theta[z1][z2]
+                        * phi[z2][unsup[1]]
+                        * theta[z2][z3]
+                        * phi[z3][unsup[2]];
+                }
+            }
+        }
+        assert!((got - total.ln()).abs() < 1e-12, "{got} vs {}", total.ln());
+        // partials sum: d logp / d la rows: each abar distributes; sanity
+        assert!(partials.iter().all(|p| p.is_finite()));
+    }
+}

@@ -1,0 +1,165 @@
+//! Native logistic regression potential (COVTYPE benchmark, E2).
+//!
+//! Density identical to `python/compile/models/logistic.py`:
+//! unit-normal priors on weights `m` (D) and intercept `b`, Bernoulli
+//! likelihood with logits `X m + b`.
+//!
+//! The likelihood is one fused composite node — the exact analogue of
+//! Stan's `bernoulli_logit_glm_lpmf`: forward computes
+//! `sum_i y_i z_i - softplus(z_i)` and the partials
+//! `d/dm_j = sum_i (y_i - sigmoid(z_i)) x_ij`, `d/db = sum_i (y_i - s_i)`
+//! in the same O(ND) sweep.
+//!
+//! Parameter layout matches the artifact manifest: `ravel_pytree` sorts
+//! site names, so the flat vector is `[b, m_0..m_{D-1}]`.
+
+use crate::autodiff::{Tape, Var};
+use crate::mcmc::Potential;
+use crate::ppl::special::{sigmoid, softplus, LN_2PI};
+
+pub struct LogisticNative {
+    /// row-major (n, d)
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub n: usize,
+    pub d: usize,
+    evals: u64,
+    /// scratch logits buffer (reused across evaluations)
+    z_buf: Vec<f64>,
+}
+
+impl LogisticNative {
+    pub fn new(x: Vec<f64>, y: Vec<f64>, n: usize, d: usize) -> Self {
+        assert_eq!(x.len(), n * d);
+        assert_eq!(y.len(), n);
+        LogisticNative {
+            x,
+            y,
+            n,
+            d,
+            evals: 0,
+            z_buf: vec![0.0; n],
+        }
+    }
+
+    /// Fused GLM log-likelihood: value + partials wrt (m_0..m_{D-1}, b).
+    fn glm_loglik(&mut self, m: &[f64], b: f64, grad_out: &mut [f64]) -> f64 {
+        let (n, d) = (self.n, self.d);
+        let mut value = 0.0;
+        for g in grad_out.iter_mut() {
+            *g = 0.0;
+        }
+        for i in 0..n {
+            let xi = &self.x[i * d..(i + 1) * d];
+            let mut z = b;
+            for j in 0..d {
+                z += xi[j] * m[j];
+            }
+            self.z_buf[i] = z;
+            value += self.y[i] * z - softplus(z);
+            let r = self.y[i] - sigmoid(z);
+            for j in 0..d {
+                grad_out[j] += r * xi[j];
+            }
+            grad_out[d] += r;
+        }
+        value
+    }
+}
+
+impl Potential for LogisticNative {
+    fn dim(&self) -> usize {
+        self.d + 1
+    }
+
+    fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+        self.evals += 1;
+        let d = self.d;
+        // layout: [b, m...] (sorted site names: "b" < "m")
+        let b_val = z[0];
+        let m_vals = &z[1..];
+
+        let mut t = Tape::new();
+        let b = t.input(b_val);
+        let m: Vec<Var> = m_vals.iter().map(|&v| t.input(v)).collect();
+
+        // priors: N(0,1) on b and each m_j
+        let mut prior_terms = Vec::with_capacity(d + 1);
+        for &v in std::iter::once(&b).chain(m.iter()) {
+            let sq = t.square(v);
+            let half = t.scale(sq, -0.5);
+            prior_terms.push(t.offset(half, -0.5 * LN_2PI));
+        }
+        let log_prior = t.sum(&prior_terms);
+
+        // fused likelihood composite
+        let mut partials = vec![0.0; d + 1];
+        let ll_value = self.glm_loglik(m_vals, b_val, &mut partials);
+        let mut parents: Vec<Var> = m.clone();
+        parents.push(b);
+        let log_lik = t.composite(&parents, &partials, ll_value);
+
+        let logp = t.add(log_prior, log_lik);
+        let u = t.neg(logp);
+        let adj = t.grad(u);
+        grad[0] = adj[b.0 as usize];
+        for j in 0..d {
+            grad[1 + j] = adj[m[j].0 as usize];
+        }
+        t.value(u)
+    }
+
+    fn num_evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::finite_diff;
+    use crate::rng::Rng;
+
+    fn toy() -> LogisticNative {
+        let mut rng = Rng::new(0);
+        let (n, d) = (50, 3);
+        let x: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+        LogisticNative::new(x, y, n, d)
+    }
+
+    #[test]
+    fn grad_matches_finite_diff() {
+        let mut pot = toy();
+        let z = [0.3, -0.5, 0.8, 0.1];
+        let mut g = vec![0.0; 4];
+        let _ = pot.value_and_grad(&z, &mut g);
+        let fd = finite_diff(&z, |zz| {
+            let mut tmp = vec![0.0; 4];
+            pot.value_and_grad(zz, &mut tmp)
+        }, 1e-6);
+        for i in 0..4 {
+            assert!((g[i] - fd[i]).abs() < 1e-5, "i={i}: {} vs {}", g[i], fd[i]);
+        }
+    }
+
+    #[test]
+    fn value_matches_direct_formula() {
+        let mut pot = toy();
+        let z = [0.2, 0.4, -0.3, 0.9];
+        let mut g = vec![0.0; 4];
+        let u = pot.value_and_grad(&z, &mut g);
+        // direct: -sum prior - sum lik
+        let (b, m) = (z[0], &z[1..]);
+        let mut logp = 0.0;
+        for v in z.iter() {
+            logp += -0.5 * v * v - 0.5 * LN_2PI;
+        }
+        for i in 0..pot.n {
+            let xi = &pot.x[i * pot.d..(i + 1) * pot.d];
+            let zi = b + xi.iter().zip(m).map(|(a, c)| a * c).sum::<f64>();
+            logp += pot.y[i] * zi - softplus(zi);
+        }
+        assert!((u + logp).abs() < 1e-10, "{u} vs {}", -logp);
+    }
+}

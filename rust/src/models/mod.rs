@@ -1,0 +1,17 @@
+//! Native Rust potential energies for the three benchmark models — the
+//! *Stan comparator* of Table 2a / Fig 2b (DESIGN.md §3): compiled
+//! native code differentiated by the [`crate::autodiff`] tape, with the
+//! model hot paths as fused composite primitives (the Stan math-library
+//! pattern).
+//!
+//! Densities are kept numerically identical to the Python/minippl models
+//! so unconstrained vectors and potentials agree across the native and
+//! PJRT pipelines (cross-checked in `rust/tests/cross_check.rs`).
+
+pub mod hmm;
+pub mod logistic;
+pub mod skim;
+
+pub use hmm::HmmNative;
+pub use logistic::LogisticNative;
+pub use skim::SkimNative;

@@ -1,0 +1,371 @@
+//! Native SKIM potential (Fig 2b benchmark, E3).
+//!
+//! Density identical to `python/compile/models/skim.py`: the
+//! kernel-interaction-trick marginal likelihood (Agrawal et al. 2019)
+//! with HalfCauchy local scales — latent dimension p + 4.
+//!
+//! The N x N kernel construction + MVN marginal is one fused composite
+//! primitive (the Stan-analogue of a custom cholesky rev rule): forward
+//! builds K(kappa, eta1sq, eta2sq, sigma_sq), factorizes, evaluates the
+//! marginal; backward forms Kbar = 0.5 (beta beta^T - K^{-1}) with
+//! beta = K^{-1} y and contracts analytically to the parameter partials
+//! (see DESIGN.md §2 and the derivation in this file).
+//!
+//! Unconstrained layout (sorted site names): [eta1, lambda (p), msq,
+//! sigma, xisq], all positive -> exp transform.
+
+use crate::autodiff::{Tape, Var};
+use crate::mcmc::Potential;
+use crate::ppl::special::LN_2PI;
+use crate::util::linalg::{cholesky, log_det_from_chol, solve_lower, solve_lower_t, spd_inverse_from_chol};
+
+pub struct SkimHypers {
+    pub expected_sparsity: f64,
+    pub alpha1: f64,
+    pub beta1: f64,
+    pub alpha2: f64,
+    pub beta2: f64,
+    pub alpha3: f64,
+    pub c: f64,
+    pub jitter: f64,
+}
+
+impl Default for SkimHypers {
+    fn default() -> Self {
+        SkimHypers {
+            expected_sparsity: 3.0,
+            alpha1: 3.0,
+            beta1: 1.0,
+            alpha2: 3.0,
+            beta2: 1.0,
+            alpha3: 1.0,
+            c: 1.0,
+            jitter: 1e-4,
+        }
+    }
+}
+
+pub struct SkimNative {
+    /// row-major (n, p)
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub n: usize,
+    pub p: usize,
+    pub hypers: SkimHypers,
+    evals: u64,
+}
+
+impl SkimNative {
+    pub fn new(x: Vec<f64>, y: Vec<f64>, n: usize, p: usize, hypers: SkimHypers) -> Self {
+        assert_eq!(x.len(), n * p);
+        assert_eq!(y.len(), n);
+        SkimNative {
+            x,
+            y,
+            n,
+            p,
+            hypers,
+            evals: 0,
+        }
+    }
+
+    /// Fused marginal: value = log MVN(y | 0, K + (sigma^2 + jitter) I)
+    /// and partials wrt (kappa_0..kappa_{p-1}, eta1sq, eta2sq, sigma_sq).
+    #[allow(clippy::too_many_arguments)]
+    fn marginal(
+        &self,
+        kappa: &[f64],
+        eta1sq: f64,
+        eta2sq: f64,
+        sigma_sq: f64,
+        partials: &mut [f64],
+    ) -> Result<f64, String> {
+        let (n, p) = (self.n, self.p);
+        let csq = self.hypers.c * self.hypers.c;
+
+        // kX and kX^2
+        let mut kx = vec![0.0; n * p];
+        let mut kx2 = vec![0.0; n * p];
+        for i in 0..n {
+            for d in 0..p {
+                let v = kappa[d] * self.x[i * p + d];
+                kx[i * p + d] = v;
+                kx2[i * p + d] = v * v;
+            }
+        }
+        // G = kX kX^T, G2 = kX^2 (kX^2)^T
+        let mut g = vec![0.0; n * n];
+        let mut g2 = vec![0.0; n * n];
+        crate::util::linalg::gram(&kx, &kx, n, p, &mut g);
+        crate::util::linalg::gram(&kx2, &kx2, n, p, &mut g2);
+
+        // K = 0.5 e2 (1+G)^2 - 0.5 e2 G2 + (e1 - e2) G + (c^2 - 0.5 e2)
+        //     + (sigma^2 + jitter) I
+        let mut k_mat = vec![0.0; n * n];
+        for i in 0..n * n {
+            let gi = g[i];
+            k_mat[i] = 0.5 * eta2sq * (1.0 + gi) * (1.0 + gi) - 0.5 * eta2sq * g2[i]
+                + (eta1sq - eta2sq) * gi
+                + (csq - 0.5 * eta2sq);
+        }
+        for i in 0..n {
+            k_mat[i * n + i] += sigma_sq + self.hypers.jitter;
+        }
+
+        // factorize + marginal
+        let mut l = k_mat;
+        cholesky(&mut l, n)?;
+        let mut beta = self.y.clone();
+        solve_lower(&l, n, &mut beta);
+        let quad: f64 = beta.iter().map(|b| b * b).sum();
+        let value = -0.5 * quad - 0.5 * log_det_from_chol(&l, n) - 0.5 * n as f64 * LN_2PI;
+        solve_lower_t(&l, n, &mut beta); // now beta = K^{-1} y
+
+        // Kbar = 0.5 (beta beta^T - K^{-1})
+        let kinv = spd_inverse_from_chol(&l, n);
+        let mut kbar = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                kbar[i * n + j] = 0.5 * (beta[i] * beta[j] - kinv[i * n + j]);
+            }
+        }
+
+        // partials wrt scalars
+        let mut d_e1 = 0.0;
+        let mut d_e2 = 0.0;
+        let mut d_sig = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                let kb = kbar[i * n + j];
+                let gi = g[i * n + j];
+                d_e1 += kb * gi;
+                d_e2 += kb * (0.5 * (1.0 + gi) * (1.0 + gi) - 0.5 * g2[i * n + j] - gi - 0.5);
+            }
+            d_sig += kbar[i * n + i];
+        }
+
+        // partials wrt kappa: Gbar = Kbar * dK/dG, G2bar = -0.5 e2 Kbar;
+        // grad_kappa_d = 2 kappa_d (X^T Gbar X)_dd + 4 kappa_d^3 (X2^T G2bar X2)_dd
+        let mut gbar = vec![0.0; n * n];
+        for i in 0..n * n {
+            gbar[i] = kbar[i] * (eta2sq * (1.0 + g[i]) + eta1sq - eta2sq);
+        }
+        // M = Gbar X (n x p); diag_d = sum_i x_id M_id
+        let mut m_buf = vec![0.0; n * p];
+        for i in 0..n {
+            for j in 0..n {
+                let gb = gbar[i * n + j];
+                if gb == 0.0 {
+                    continue;
+                }
+                let xj = &self.x[j * p..(j + 1) * p];
+                let mi = &mut m_buf[i * p..(i + 1) * p];
+                for d in 0..p {
+                    mi[d] += gb * xj[d];
+                }
+            }
+        }
+        for d in 0..p {
+            let mut acc = 0.0;
+            for i in 0..n {
+                acc += self.x[i * p + d] * m_buf[i * p + d];
+            }
+            partials[d] = 2.0 * kappa[d] * acc;
+        }
+        // second term with X2 = X o X and G2bar
+        let mut m2_buf = vec![0.0; n * p];
+        for i in 0..n {
+            for j in 0..n {
+                let g2b = -0.5 * eta2sq * kbar[i * n + j];
+                let xj = &self.x[j * p..(j + 1) * p];
+                let mi = &mut m2_buf[i * p..(i + 1) * p];
+                for d in 0..p {
+                    mi[d] += g2b * xj[d] * xj[d];
+                }
+            }
+        }
+        for d in 0..p {
+            let mut acc = 0.0;
+            for i in 0..n {
+                let xi = self.x[i * p + d];
+                acc += xi * xi * m2_buf[i * p + d];
+            }
+            partials[d] += 4.0 * kappa[d].powi(3) * acc;
+        }
+        partials[p] = d_e1;
+        partials[p + 1] = d_e2;
+        partials[p + 2] = d_sig;
+        Ok(value)
+    }
+}
+
+/// log HalfCauchy(x; scale) on the tape (x, scale both Vars).
+fn half_cauchy_lpdf(t: &mut Tape, x: Var, scale: Var) -> Var {
+    let z = t.div(x, scale);
+    let z2 = t.square(z);
+    let l1p = t.log1p(z2);
+    let ls = t.ln(scale);
+    let sum = t.add(l1p, ls);
+    let neg = t.neg(sum);
+    t.offset(neg, (2.0 / std::f64::consts::PI).ln())
+}
+
+impl Potential for SkimNative {
+    fn dim(&self) -> usize {
+        self.p + 4
+    }
+
+    fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+        self.evals += 1;
+        let p = self.p;
+        let h = &self.hypers;
+        let mut t = Tape::new();
+        let inputs: Vec<Var> = z.iter().map(|&v| t.input(v)).collect();
+        // layout (sorted): eta1, lambda[p], msq, sigma, xisq
+        let u_eta1 = inputs[0];
+        let u_lam = &inputs[1..1 + p];
+        let u_msq = inputs[1 + p];
+        let u_sigma = inputs[2 + p];
+        let u_xisq = inputs[3 + p];
+
+        // exp transforms; ladj = sum of unconstrained values
+        let eta1 = t.exp(u_eta1);
+        let lam: Vec<Var> = u_lam.iter().map(|&u| t.exp(u)).collect();
+        let msq = t.exp(u_msq);
+        let sigma = t.exp(u_sigma);
+        let xisq = t.exp(u_xisq);
+        let mut ladj_parents = vec![u_eta1, u_msq, u_sigma, u_xisq];
+        ladj_parents.extend_from_slice(u_lam);
+        let ladj = t.sum(&ladj_parents);
+
+        // priors
+        // sigma ~ HalfNormal(alpha3)
+        let zsig = t.scale(sigma, 1.0 / h.alpha3);
+        let zsig2 = t.square(zsig);
+        let p_sigma_core = t.scale(zsig2, -0.5);
+        let p_sigma = t.offset(
+            p_sigma_core,
+            2f64.ln() - h.alpha3.ln() - 0.5 * LN_2PI,
+        );
+        // eta1 ~ HalfCauchy(phi), phi = sigma * S/sqrt(N) / (P - S)
+        let phi_coef = (h.expected_sparsity / (self.n as f64).sqrt()) / (p as f64 - h.expected_sparsity);
+        let phi = t.scale(sigma, phi_coef);
+        let p_eta1 = half_cauchy_lpdf(&mut t, eta1, phi);
+        // msq ~ InverseGamma(a1, b1); xisq ~ InverseGamma(a2, b2)
+        let ig = |t: &mut Tape, x: Var, a: f64, b: f64| {
+            let lx = t.ln(x);
+            let term1 = t.scale(lx, -(a + 1.0));
+            let inv = t.div_const_by(b, x);
+            let diff = t.sub(term1, inv);
+            t.offset(diff, a * b.ln() - crate::ppl::special::ln_gamma(a))
+        };
+        let p_msq = ig(&mut t, msq, h.alpha1, h.beta1);
+        let p_xisq = ig(&mut t, xisq, h.alpha2, h.beta2);
+        // lambda_d ~ HalfCauchy(1)
+        let mut p_lam_terms = Vec::with_capacity(p);
+        for &l in &lam {
+            let l2 = t.square(l);
+            let l1p = t.log1p(l2);
+            let neg = t.neg(l1p);
+            p_lam_terms.push(t.offset(neg, (2.0 / std::f64::consts::PI).ln()));
+        }
+        let p_lam = t.sum(&p_lam_terms);
+
+        // derived quantities
+        let eta1sq = t.square(eta1);
+        // eta2 = eta1^2 sqrt(xisq) / msq  =>  eta2sq = eta1^4 xisq / msq^2
+        let eta1_4 = t.square(eta1sq);
+        let num = t.mul(eta1_4, xisq);
+        let msq2 = t.square(msq);
+        let eta2sq = t.div(num, msq2);
+        // kappa_d = sqrt(msq) lam / sqrt(msq + (eta1 lam)^2)
+        let sqrt_msq = t.sqrt(msq);
+        let mut kappa: Vec<Var> = Vec::with_capacity(p);
+        for &l in &lam {
+            let el = t.mul(eta1, l);
+            let el2 = t.square(el);
+            let denom_in = t.add(msq, el2);
+            let denom = t.sqrt(denom_in);
+            let num_l = t.mul(sqrt_msq, l);
+            kappa.push(t.div(num_l, denom));
+        }
+        let sigma_sq = t.square(sigma);
+
+        // fused marginal composite
+        let kappa_vals: Vec<f64> = kappa.iter().map(|&v| t.value(v)).collect();
+        let mut partials = vec![0.0; p + 3];
+        let marg = self
+            .marginal(
+                &kappa_vals,
+                t.value(eta1sq),
+                t.value(eta2sq),
+                t.value(sigma_sq),
+                &mut partials,
+            )
+            .unwrap_or(f64::NEG_INFINITY);
+        let mut parents = kappa.clone();
+        parents.push(eta1sq);
+        parents.push(eta2sq);
+        parents.push(sigma_sq);
+        let lik = t.composite(&parents, &partials, marg);
+
+        let prior_terms = [p_sigma, p_eta1, p_msq, p_xisq, p_lam, lik, ladj];
+        let logp = t.sum(&prior_terms);
+        let u = t.neg(logp);
+        let adj = t.grad(u);
+        for (i, v_in) in inputs.iter().enumerate() {
+            grad[i] = adj[v_in.0 as usize];
+        }
+        t.value(u)
+    }
+
+    fn num_evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::finite_diff;
+    use crate::rng::Rng;
+
+    fn toy(n: usize, p: usize) -> SkimNative {
+        let mut rng = Rng::new(0);
+        let x: Vec<f64> = (0..n * p).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        SkimNative::new(x, y, n, p, SkimHypers::default())
+    }
+
+    #[test]
+    fn grad_matches_finite_diff() {
+        let mut pot = toy(20, 5);
+        let dim = pot.dim();
+        let mut rng = Rng::new(1);
+        let z: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.3).collect();
+        let mut g = vec![0.0; dim];
+        let _ = pot.value_and_grad(&z, &mut g);
+        let fd = finite_diff(&z, |zz| {
+            let mut tmp = vec![0.0; dim];
+            pot.value_and_grad(zz, &mut tmp)
+        }, 1e-6);
+        for i in 0..dim {
+            assert!(
+                (g[i] - fd[i]).abs() < 2e-4 * (1.0 + fd[i].abs()),
+                "i={i}: {} vs {}",
+                g[i],
+                fd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn value_is_finite_at_origin() {
+        let mut pot = toy(15, 4);
+        let z = vec![0.0; pot.dim()];
+        let mut g = vec![0.0; pot.dim()];
+        let u = pot.value_and_grad(&z, &mut g);
+        assert!(u.is_finite());
+        assert!(g.iter().all(|x| x.is_finite()));
+    }
+}

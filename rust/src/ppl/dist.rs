@@ -1,0 +1,301 @@
+//! Rust distribution library (the native-pipeline counterpart of
+//! `python/compile/minippl/distributions.py`).
+//!
+//! Values are `Vec<f64>`-shaped (scalars are length-1); every
+//! distribution exposes a density and a sampler so the Rust effect
+//! handlers ([`crate::effects`]) can run full models natively.  The
+//! densities are kept numerically identical to the Python side — the
+//! cross-language agreement tests in `rust/tests/` rely on it.
+
+use crate::ppl::special::{ln_beta, ln_gamma, log_sum_exp, sigmoid, softplus, LN_2PI};
+use crate::rng::Rng;
+
+/// Support declaration; drives the unconstraining transform in
+/// [`crate::ppl::transforms`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Support {
+    Real,
+    Positive,
+    UnitInterval,
+    Simplex,
+    /// Discrete (no transform; not sampled by NUTS).
+    Discrete,
+}
+
+/// A univariate or small-multivariate distribution.
+#[derive(Debug, Clone)]
+pub enum Dist {
+    Normal { loc: f64, scale: f64 },
+    HalfNormal { scale: f64 },
+    Cauchy { loc: f64, scale: f64 },
+    HalfCauchy { scale: f64 },
+    Exponential { rate: f64 },
+    Gamma { concentration: f64, rate: f64 },
+    InverseGamma { concentration: f64, rate: f64 },
+    Beta { a: f64, b: f64 },
+    Uniform { low: f64, high: f64 },
+    LogNormal { loc: f64, scale: f64 },
+    BernoulliLogits { logits: f64 },
+    Categorical { probs: Vec<f64> },
+    Dirichlet { concentration: Vec<f64> },
+}
+
+impl Dist {
+    pub fn support(&self) -> Support {
+        use Dist::*;
+        match self {
+            Normal { .. } | Cauchy { .. } => Support::Real,
+            HalfNormal { .. }
+            | HalfCauchy { .. }
+            | Exponential { .. }
+            | Gamma { .. }
+            | InverseGamma { .. }
+            | LogNormal { .. } => Support::Positive,
+            Beta { .. } => Support::UnitInterval,
+            Uniform { .. } => Support::UnitInterval, // via affine in transforms
+            BernoulliLogits { .. } | Categorical { .. } => Support::Discrete,
+            Dirichlet { .. } => Support::Simplex,
+        }
+    }
+
+    /// Dimensionality of one draw.
+    pub fn event_len(&self) -> usize {
+        match self {
+            Dist::Dirichlet { concentration } => concentration.len(),
+            _ => 1,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Vec<f64> {
+        use Dist::*;
+        match self {
+            Normal { loc, scale } => vec![rng.normal_with(*loc, *scale)],
+            HalfNormal { scale } => vec![(rng.normal() * scale).abs()],
+            Cauchy { loc, scale } => vec![rng.cauchy(*loc, *scale)],
+            HalfCauchy { scale } => vec![rng.half_cauchy(*scale)],
+            Exponential { rate } => vec![rng.exponential(*rate)],
+            Gamma {
+                concentration,
+                rate,
+            } => vec![rng.gamma_rate(*concentration, *rate)],
+            InverseGamma {
+                concentration,
+                rate,
+            } => vec![rng.inverse_gamma(*concentration, *rate)],
+            Beta { a, b } => vec![rng.beta(*a, *b)],
+            Uniform { low, high } => vec![rng.uniform_in(*low, *high)],
+            LogNormal { loc, scale } => vec![rng.normal_with(*loc, *scale).exp()],
+            BernoulliLogits { logits } => {
+                vec![if rng.bernoulli(sigmoid(*logits)) { 1.0 } else { 0.0 }]
+            }
+            Categorical { probs } => vec![rng.categorical(probs) as f64],
+            Dirichlet { concentration } => rng.dirichlet(concentration),
+        }
+    }
+
+    /// Log-density of one draw (summed over the event for Dirichlet).
+    pub fn log_prob(&self, value: &[f64]) -> f64 {
+        use Dist::*;
+        match self {
+            Normal { loc, scale } => {
+                let z = (value[0] - loc) / scale;
+                -0.5 * z * z - scale.ln() - 0.5 * LN_2PI
+            }
+            HalfNormal { scale } => {
+                if value[0] < 0.0 {
+                    return f64::NEG_INFINITY;
+                }
+                let z = value[0] / scale;
+                2f64.ln() - 0.5 * z * z - scale.ln() - 0.5 * LN_2PI
+            }
+            Cauchy { loc, scale } => {
+                let z = (value[0] - loc) / scale;
+                -std::f64::consts::PI.ln() - scale.ln() - (z * z).ln_1p()
+            }
+            HalfCauchy { scale } => {
+                if value[0] < 0.0 {
+                    return f64::NEG_INFINITY;
+                }
+                let z = value[0] / scale;
+                2f64.ln() - std::f64::consts::PI.ln() - scale.ln() - (z * z).ln_1p()
+            }
+            Exponential { rate } => {
+                if value[0] < 0.0 {
+                    return f64::NEG_INFINITY;
+                }
+                rate.ln() - rate * value[0]
+            }
+            Gamma {
+                concentration: a,
+                rate: b,
+            } => {
+                if value[0] <= 0.0 {
+                    return f64::NEG_INFINITY;
+                }
+                a * b.ln() + (a - 1.0) * value[0].ln() - b * value[0] - ln_gamma(*a)
+            }
+            InverseGamma {
+                concentration: a,
+                rate: b,
+            } => {
+                if value[0] <= 0.0 {
+                    return f64::NEG_INFINITY;
+                }
+                a * b.ln() - (a + 1.0) * value[0].ln() - b / value[0] - ln_gamma(*a)
+            }
+            Beta { a, b } => {
+                let x = value[0];
+                if !(0.0..=1.0).contains(&x) {
+                    return f64::NEG_INFINITY;
+                }
+                (a - 1.0) * x.ln() + (b - 1.0) * (-x).ln_1p() - ln_beta(*a, *b)
+            }
+            Uniform { low, high } => {
+                if value[0] < *low || value[0] > *high {
+                    f64::NEG_INFINITY
+                } else {
+                    -(high - low).ln()
+                }
+            }
+            LogNormal { loc, scale } => {
+                let x = value[0];
+                if x <= 0.0 {
+                    return f64::NEG_INFINITY;
+                }
+                let z = (x.ln() - loc) / scale;
+                -0.5 * z * z - scale.ln() - 0.5 * LN_2PI - x.ln()
+            }
+            BernoulliLogits { logits } => value[0] * logits - softplus(*logits),
+            Categorical { probs } => {
+                let idx = value[0] as usize;
+                let logps: Vec<f64> = probs.iter().map(|p| p.ln()).collect();
+                logps[idx] - log_sum_exp(&logps)
+            }
+            Dirichlet { concentration } => {
+                let a = concentration;
+                let norm: f64 =
+                    a.iter().map(|&ai| ln_gamma(ai)).sum::<f64>() - ln_gamma(a.iter().sum());
+                a.iter()
+                    .zip(value)
+                    .map(|(&ai, &x)| (ai - 1.0) * x.ln())
+                    .sum::<f64>()
+                    - norm
+            }
+        }
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        use Dist::*;
+        match self {
+            Normal { loc, .. } => Some(*loc),
+            Exponential { rate } => Some(1.0 / rate),
+            Gamma {
+                concentration,
+                rate,
+            } => Some(concentration / rate),
+            Beta { a, b } => Some(a / (a + b)),
+            Uniform { low, high } => Some(0.5 * (low + high)),
+            BernoulliLogits { logits } => Some(sigmoid(*logits)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_density_peak() {
+        let d = Dist::Normal {
+            loc: 1.0,
+            scale: 2.0,
+        };
+        // N(1, 2) at x=1: -log(2) - 0.5 log(2π)
+        let expect = -(2f64.ln()) - 0.5 * LN_2PI;
+        assert!((d.log_prob(&[1.0]) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn densities_integrate_to_one() {
+        // trapezoid integration over a wide grid
+        let cases: Vec<(Dist, f64, f64)> = vec![
+            (
+                Dist::Normal {
+                    loc: 0.5,
+                    scale: 1.3,
+                },
+                -12.0,
+                13.0,
+            ),
+            (Dist::HalfNormal { scale: 0.7 }, 1e-9, 10.0),
+            (Dist::Exponential { rate: 2.0 }, 1e-9, 20.0),
+            (
+                Dist::Gamma {
+                    concentration: 3.0,
+                    rate: 2.0,
+                },
+                1e-9,
+                30.0,
+            ),
+            (
+                Dist::InverseGamma {
+                    concentration: 3.0,
+                    rate: 1.0,
+                },
+                1e-6,
+                60.0,
+            ),
+            (Dist::Beta { a: 2.5, b: 1.5 }, 1e-9, 1.0 - 1e-9),
+            (
+                Dist::LogNormal {
+                    loc: 0.0,
+                    scale: 0.5,
+                },
+                1e-9,
+                30.0,
+            ),
+        ];
+        for (d, lo, hi) in cases {
+            let n = 400_000;
+            let h = (hi - lo) / n as f64;
+            let mut total = 0.0;
+            for i in 0..=n {
+                let x = lo + i as f64 * h;
+                let w = if i == 0 || i == n { 0.5 } else { 1.0 };
+                total += w * d.log_prob(&[x]).exp();
+            }
+            total *= h;
+            assert!((total - 1.0).abs() < 1e-3, "{d:?}: integral {total}");
+        }
+    }
+
+    #[test]
+    fn sampler_matches_density_moments() {
+        let mut rng = Rng::new(42);
+        let d = Dist::Gamma {
+            concentration: 4.0,
+            rate: 2.0,
+        };
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| d.sample(&mut rng)[0]).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.03, "mean {mean}");
+    }
+
+    #[test]
+    fn bernoulli_logit_density() {
+        let d = Dist::BernoulliLogits { logits: 0.7 };
+        let p = sigmoid(0.7);
+        assert!((d.log_prob(&[1.0]) - p.ln()).abs() < 1e-12);
+        assert!((d.log_prob(&[0.0]) - (1.0 - p).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dirichlet_uniform_case() {
+        // Dir(1,1,1) log-density = log Γ(3) = log 2 everywhere on the simplex
+        let d = Dist::Dirichlet {
+            concentration: vec![1.0, 1.0, 1.0],
+        };
+        assert!((d.log_prob(&[0.2, 0.3, 0.5]) - 2f64.ln()).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,10 @@
+//! Native-Rust probabilistic-programming substrate: distributions with
+//! densities + samplers ([`dist`]), constraint transforms ([`transforms`])
+//! and special functions ([`special`]).  Together with [`crate::effects`]
+//! this is the Rust-side mirror of the Python `minippl` package.
+
+pub mod dist;
+pub mod special;
+pub mod transforms;
+
+pub use dist::{Dist, Support};

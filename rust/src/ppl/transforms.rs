@@ -1,0 +1,197 @@
+//! Constraint transforms (unconstrained <-> support) with log-Jacobians,
+//! in two flavours: plain `f64` (diagnostics, initialization) and
+//! [`Tape`]-valued (inside native potentials, so the Jacobian term is
+//! differentiated along with the density).
+//!
+//! Matches `python/compile/minippl/transforms.py` exactly — including
+//! the stick-breaking offsets — so unconstrained vectors are
+//! interchangeable between the native and PJRT pipelines.
+
+use crate::autodiff::{Tape, Var};
+use crate::ppl::dist::Support;
+use crate::ppl::special::{logit, sigmoid};
+
+/// y = exp(x): R -> (0, inf). Returns (y, log|J|).
+pub fn exp_transform(x: f64) -> (f64, f64) {
+    (x.exp(), x)
+}
+
+pub fn exp_inverse(y: f64) -> f64 {
+    y.ln()
+}
+
+/// y = sigmoid(x): R -> (0,1). Returns (y, log|J|).
+pub fn sigmoid_transform(x: f64) -> (f64, f64) {
+    let y = sigmoid(x);
+    let ladj = -crate::ppl::special::softplus(x) - crate::ppl::special::softplus(-x);
+    (y, ladj)
+}
+
+pub fn sigmoid_inverse(y: f64) -> f64 {
+    logit(y)
+}
+
+/// Stick-breaking: R^{K-1} -> K-simplex (offset so x=0 maps to uniform).
+/// Returns (y, log|J|).
+pub fn stick_breaking(x: &[f64]) -> (Vec<f64>, f64) {
+    let km1 = x.len();
+    let mut y = Vec::with_capacity(km1 + 1);
+    let mut rem: f64 = 1.0;
+    let mut ladj = 0.0;
+    for (i, &xi) in x.iter().enumerate() {
+        let offset = ((km1 - i) as f64).ln();
+        let zs = xi - offset;
+        let z = sigmoid(zs);
+        ladj += -crate::ppl::special::softplus(zs) - crate::ppl::special::softplus(-zs) + rem.ln();
+        y.push(z * rem);
+        rem *= 1.0 - z;
+    }
+    y.push(rem);
+    (y, ladj)
+}
+
+pub fn stick_breaking_inverse(y: &[f64]) -> Vec<f64> {
+    let k = y.len();
+    let mut x = Vec::with_capacity(k - 1);
+    let mut rem = 1.0;
+    for i in 0..k - 1 {
+        let offset = ((k - 1 - i) as f64).ln();
+        let z = (y[i] / rem).clamp(1e-12, 1.0 - 1e-12);
+        x.push(logit(z) + offset);
+        rem -= y[i];
+    }
+    x
+}
+
+// ---------------------------------------------------------------------------
+// Tape-valued versions (for native potentials)
+// ---------------------------------------------------------------------------
+
+/// exp transform on tape: returns (y, ladj contribution).
+pub fn exp_transform_t(t: &mut Tape, x: Var) -> (Var, Var) {
+    (t.exp(x), x)
+}
+
+/// Stick-breaking on tape: maps K-1 vars to K simplex vars; returns
+/// (simplex, ladj).
+pub fn stick_breaking_t(t: &mut Tape, x: &[Var]) -> (Vec<Var>, Var) {
+    let km1 = x.len();
+    let one = t.constant(1.0);
+    let mut rem = one;
+    let mut ys = Vec::with_capacity(km1 + 1);
+    let mut ladj_terms = Vec::with_capacity(km1);
+    for (i, &xi) in x.iter().enumerate() {
+        let offset = ((km1 - i) as f64).ln();
+        let zs = t.offset(xi, -offset);
+        let z = t.sigmoid(zs);
+        // log z' = -softplus(zs) - softplus(-zs)
+        let sp_pos = t.softplus(zs);
+        let neg_zs = t.neg(zs);
+        let sp_neg = t.softplus(neg_zs);
+        let log_rem = t.ln(rem);
+        let sp_sum = t.add(sp_pos, sp_neg);
+        let term = t.sub(log_rem, sp_sum);
+        ladj_terms.push(term);
+        let y = t.mul(z, rem);
+        ys.push(y);
+        let one_minus_z = t.sub(one, z);
+        rem = t.mul(rem, one_minus_z);
+    }
+    ys.push(rem);
+    let ladj = t.sum(&ladj_terms);
+    (ys, ladj)
+}
+
+/// Transform an unconstrained tape var onto `support`; returns
+/// (constrained, ladj). Simplex handled by [`stick_breaking_t`].
+pub fn constrain_t(t: &mut Tape, support: Support, x: Var) -> (Var, Var) {
+    match support {
+        Support::Real => (x, t.constant(0.0)),
+        Support::Positive => exp_transform_t(t, x),
+        Support::UnitInterval => {
+            let y = t.sigmoid(x);
+            let sp = t.softplus(x);
+            let nx = t.neg(x);
+            let sn = t.softplus(nx);
+            let sum = t.add(sp, sn);
+            (y, t.neg(sum))
+        }
+        Support::Simplex | Support::Discrete => {
+            panic!("constrain_t: unsupported scalar support {support:?}")
+        }
+    }
+}
+
+/// Unconstrained dimension needed to represent `support` of event length n.
+pub fn unconstrained_len(support: Support, event_len: usize) -> usize {
+    match support {
+        Support::Simplex => event_len - 1,
+        Support::Discrete => 0,
+        _ => event_len,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::finite_diff;
+
+    #[test]
+    fn stick_breaking_roundtrip() {
+        let x = [0.3, -1.2, 0.7, 2.0];
+        let (y, _) = stick_breaking(&x);
+        assert!((y.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(y.iter().all(|&v| v > 0.0));
+        let x2 = stick_breaking_inverse(&y);
+        for (a, b) in x.iter().zip(&x2) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn stick_breaking_zero_maps_to_uniform() {
+        let (y, _) = stick_breaking(&[0.0, 0.0, 0.0]);
+        for v in y {
+            assert!((v - 0.25).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tape_stick_breaking_matches_plain() {
+        let x = [0.5, -0.3, 1.1];
+        let mut t = Tape::new();
+        let vars: Vec<Var> = x.iter().map(|&v| t.input(v)).collect();
+        let (ys, ladj) = stick_breaking_t(&mut t, &vars);
+        let (y_plain, ladj_plain) = stick_breaking(&x);
+        for (yv, yp) in ys.iter().zip(&y_plain) {
+            assert!((t.value(*yv) - yp).abs() < 1e-12);
+        }
+        assert!((t.value(ladj) - ladj_plain).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tape_ladj_gradient_matches_fd() {
+        let x = [0.2, -0.8];
+        let f = |xs: &[f64]| stick_breaking(xs).1;
+        let fd = finite_diff(&x, f, 1e-6);
+        let mut t = Tape::new();
+        let vars: Vec<Var> = x.iter().map(|&v| t.input(v)).collect();
+        let (_, ladj) = stick_breaking_t(&mut t, &vars);
+        let adj = t.grad(ladj);
+        for i in 0..x.len() {
+            assert!(
+                (adj[vars[i].0 as usize] - fd[i]).abs() < 1e-6,
+                "{} vs {}",
+                adj[vars[i].0 as usize],
+                fd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sigmoid_transform_jacobian() {
+        let (y, ladj) = sigmoid_transform(0.7);
+        // dy/dx = y(1-y)
+        assert!((ladj.exp() - y * (1.0 - y)).abs() < 1e-12);
+    }
+}

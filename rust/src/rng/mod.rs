@@ -1,0 +1,294 @@
+//! Counter-friendly pseudo-random number generation.
+//!
+//! The offline crate set has no `rand`, so this is a from-scratch
+//! substrate: SplitMix64 for seeding/stream-splitting (mirroring JAX's
+//! functional split semantics at the coordinator level) and
+//! xoshiro256++ for the main stream, plus the samplers the native
+//! pipeline needs (normal, gamma, beta, dirichlet, categorical, ...).
+//!
+//! Determinism contract: every coordinator-level decision (chain seeds,
+//! data generation, native-NUTS momenta) derives from an explicit seed,
+//! so runs replay bit-identically.
+
+/// xoshiro256++ seeded via SplitMix64.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Box-Muller normal
+    spare_normal: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng {
+            s,
+            spare_normal: None,
+        }
+    }
+
+    /// Derive an independent stream (JAX-style key split).
+    pub fn split(&mut self, stream: u64) -> Rng {
+        let mut sm = self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng {
+            s,
+            spare_normal: None,
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = (s[0].wrapping_add(s[3]))
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 high bits -> [0,1) double
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        // rejection-free Lemire reduction is overkill here
+        (self.uniform() * n as f64) as usize % n.max(1)
+    }
+
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare_normal = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    pub fn normal_with(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Fill `out` with i.i.d. standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for v in out {
+            *v = self.normal();
+        }
+    }
+
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -(1.0 - self.uniform()).ln() / rate
+    }
+
+    pub fn cauchy(&mut self, loc: f64, scale: f64) -> f64 {
+        loc + scale * (std::f64::consts::PI * (self.uniform() - 0.5)).tan()
+    }
+
+    pub fn half_cauchy(&mut self, scale: f64) -> f64 {
+        scale * (std::f64::consts::FRAC_PI_2 * self.uniform()).tan()
+    }
+
+    /// Gamma(shape, rate=1) via Marsaglia-Tsang; boosts shape < 1.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Gamma(a) = Gamma(a + 1) * U^{1/a}
+            let g = self.gamma(shape + 1.0);
+            let u = self.uniform().max(f64::MIN_POSITIVE);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v3;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    pub fn gamma_rate(&mut self, shape: f64, rate: f64) -> f64 {
+        self.gamma(shape) / rate
+    }
+
+    pub fn inverse_gamma(&mut self, shape: f64, rate: f64) -> f64 {
+        rate / self.gamma(shape)
+    }
+
+    pub fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a);
+        let y = self.gamma(b);
+        x / (x + y)
+    }
+
+    pub fn dirichlet(&mut self, alpha: &[f64]) -> Vec<f64> {
+        let mut g: Vec<f64> = alpha.iter().map(|&a| self.gamma(a)).collect();
+        let sum: f64 = g.iter().sum();
+        for v in &mut g {
+            *v /= sum;
+        }
+        g
+    }
+
+    /// Sample an index proportional to `probs` (need not be normalized).
+    pub fn categorical(&mut self, probs: &[f64]) -> usize {
+        let total: f64 = probs.iter().sum();
+        let mut u = self.uniform() * total;
+        for (i, p) in probs.iter().enumerate() {
+            u -= p;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        probs.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices from [0, n).
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut rng = Rng::new(1);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| rng.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 5e-3, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(2);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut rng = Rng::new(3);
+        for &shape in &[0.5, 1.0, 2.5, 10.0] {
+            let n = 100_000;
+            let mean: f64 = (0..n).map(|_| rng.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.05 * shape.max(1.0),
+                "shape {shape}: mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut rng = Rng::new(4);
+        let d = rng.dirichlet(&[1.0, 2.0, 3.0]);
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(d.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let mut rng = Rng::new(5);
+        let probs = [0.2, 0.5, 0.3];
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[rng.categorical(&probs)] += 1;
+        }
+        for i in 0..3 {
+            let freq = counts[i] as f64 / n as f64;
+            assert!((freq - probs[i]).abs() < 0.01, "i={i} freq={freq}");
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut base = Rng::new(9);
+        let mut a = base.split(0);
+        let mut b = base.split(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,130 @@
+//! PJRT engine: CPU client + per-artifact compile cache.
+//!
+//! HLO **text** is the interchange format (jax >= 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects in proto form; the
+//! text parser reassigns ids — see /opt/xla-example/README.md).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactEntry, DType, Manifest};
+
+/// Host-side tensor for marshalling executable inputs.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    F64(Vec<f64>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    U32(Vec<u32>, Vec<usize>),
+}
+
+impl HostTensor {
+    /// Cast an f64 slice to the dtype the artifact expects.
+    pub fn from_f64(data: &[f64], shape: &[usize], dtype: DType) -> Result<HostTensor> {
+        Ok(match dtype {
+            DType::F32 => {
+                HostTensor::F32(data.iter().map(|&v| v as f32).collect(), shape.to_vec())
+            }
+            DType::F64 => HostTensor::F64(data.to_vec(), shape.to_vec()),
+            DType::I32 => {
+                HostTensor::I32(data.iter().map(|&v| v as i32).collect(), shape.to_vec())
+            }
+            other => bail!("from_f64: unsupported target dtype {other:?}"),
+        })
+    }
+
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let buf = match self {
+            HostTensor::F32(d, s) => client.buffer_from_host_buffer(d, s, None)?,
+            HostTensor::F64(d, s) => client.buffer_from_host_buffer(d, s, None)?,
+            HostTensor::I32(d, s) => client.buffer_from_host_buffer(d, s, None)?,
+            HostTensor::U32(d, s) => client.buffer_from_host_buffer(d, s, None)?,
+        };
+        Ok(buf)
+    }
+}
+
+/// A compiled artifact plus its manifest entry.
+pub struct Executable {
+    pub entry: ArtifactEntry,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with device-resident buffers; returns the decomposed
+    /// output tuple as host literals.
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute_b(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// PJRT CPU client + compile cache, shared by all handles.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.get(name)?.clone();
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {name}"))?;
+        let exec = Rc::new(Executable { entry, exe });
+        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        t.to_buffer(&self.client)
+    }
+}
+
+/// Read a literal's contents as f64 regardless of its element type.
+pub fn literal_to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    let ty = lit.ty()?;
+    Ok(match ty {
+        xla::ElementType::F32 => lit.to_vec::<f32>()?.into_iter().map(|v| v as f64).collect(),
+        xla::ElementType::F64 => lit.to_vec::<f64>()?,
+        xla::ElementType::S32 => lit.to_vec::<i32>()?.into_iter().map(|v| v as f64).collect(),
+        xla::ElementType::Pred => {
+            // PRED literals reject typed reads; convert to S32 first
+            let conv = lit.convert(xla::PrimitiveType::S32)?;
+            conv.to_vec::<i32>()?.into_iter().map(|v| v as f64).collect()
+        }
+        other => bail!("literal_to_f64: unsupported element type {other:?}"),
+    })
+}
+
+/// Read a scalar literal as f64.
+pub fn literal_scalar_f64(lit: &xla::Literal) -> Result<f64> {
+    Ok(literal_to_f64(lit)?[0])
+}

@@ -1,0 +1,216 @@
+//! High-level artifact handles.
+//!
+//! [`NutsStep`] is the paper's architecture: the entire NUTS transition
+//! is ONE compiled executable; the coordinator calls it once per draw.
+//! Dataset tensors are uploaded to the device a single time at
+//! construction and stay resident — per-draw marshalling is O(dim).
+//!
+//! [`PjrtPotential`] is the Pyro-architecture comparator: only
+//! `potential_and_grad` is compiled, and the host-side tree builder
+//! ([`crate::mcmc::nuts_recursive`]) pays one dispatch per leapfrog —
+//! exactly the overhead §3.1 of the paper attributes to Pyro.
+
+use anyhow::{bail, Context, Result};
+
+use crate::mcmc::{Potential, Transition};
+use crate::runtime::engine::{literal_scalar_f64, literal_to_f64, Engine, HostTensor};
+use crate::runtime::manifest::DType;
+
+use std::rc::Rc;
+
+use super::engine::Executable;
+
+fn upload_data(
+    engine: &Engine,
+    exe: &Executable,
+    skip: usize,
+    data: &[HostTensor],
+) -> Result<Vec<xla::PjRtBuffer>> {
+    let expected = exe.entry.inputs.len() - skip;
+    if data.len() != expected {
+        bail!(
+            "artifact {} expects {} data inputs, got {}",
+            exe.entry.name,
+            expected,
+            data.len()
+        );
+    }
+    data.iter().map(|t| engine.upload(t)).collect()
+}
+
+/// Fused end-to-end NUTS transition (the paper's headline).
+pub struct NutsStep {
+    client: xla::PjRtClient,
+    exe: Rc<Executable>,
+    data_bufs: Vec<xla::PjRtBuffer>,
+    pub dim: usize,
+    dtype: DType,
+    /// PJRT dispatches so far (one per draw — the benchmark's point).
+    pub dispatches: u64,
+    // §Perf: step size and inverse mass change only at adaptation
+    // boundaries; cache their device buffers between draws.
+    eps_cache: Option<(f64, xla::PjRtBuffer)>,
+    mass_cache: Option<(Vec<f64>, xla::PjRtBuffer)>,
+}
+
+impl NutsStep {
+    /// `name` is a manifest key of kind `nuts_step` (or `nuts_step_vmap`).
+    pub fn new(engine: &Engine, name: &str, data: &[HostTensor]) -> Result<NutsStep> {
+        let exe = engine.executable(name)?;
+        if !exe.entry.kind.starts_with("nuts_step") {
+            bail!("artifact {name} has kind {}, want nuts_step*", exe.entry.kind);
+        }
+        let data_bufs = upload_data(engine, &exe, 4, data)?;
+        let dtype = exe.entry.inputs[1].dtype;
+        let dim = exe.entry.dim;
+        Ok(NutsStep {
+            client: engine.client.clone(),
+            exe,
+            data_bufs,
+            dim,
+            dtype,
+            dispatches: 0,
+            eps_cache: None,
+            mass_cache: None,
+        })
+    }
+
+    pub fn entry(&self) -> &super::manifest::ArtifactEntry {
+        &self.exe.entry
+    }
+
+    /// One NUTS draw: `(key, z, step_size, inv_mass)` -> transition.
+    pub fn step(
+        &mut self,
+        key: [u32; 2],
+        z: &[f64],
+        step_size: f64,
+        inv_mass: &[f64],
+    ) -> Result<Transition> {
+        debug_assert_eq!(z.len(), self.dim);
+        let key_b = HostTensor::U32(key.to_vec(), vec![2]).to_buffer(&self.client)?;
+        let z_b = HostTensor::from_f64(z, &[self.dim], self.dtype)?.to_buffer(&self.client)?;
+        if !matches!(&self.eps_cache, Some((e, _)) if *e == step_size) {
+            let buf = HostTensor::from_f64(&[step_size], &[], self.dtype)?
+                .to_buffer(&self.client)?;
+            self.eps_cache = Some((step_size, buf));
+        }
+        if !matches!(&self.mass_cache, Some((m, _)) if m == inv_mass) {
+            let buf = HostTensor::from_f64(inv_mass, &[self.dim], self.dtype)?
+                .to_buffer(&self.client)?;
+            self.mass_cache = Some((inv_mass.to_vec(), buf));
+        }
+        let eps_b = &self.eps_cache.as_ref().unwrap().1;
+        let mass_b = &self.mass_cache.as_ref().unwrap().1;
+
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&key_b, &z_b, eps_b, mass_b];
+        args.extend(self.data_bufs.iter());
+        self.dispatches += 1;
+        let outs = self.exe.run_buffers(&args)?;
+        parse_transition(&outs, 0, self.dim)
+    }
+
+    /// Vmapped multi-chain draw (artifact kind `nuts_step_vmap`):
+    /// all per-chain states advance in one dispatch (§3.2, E7).
+    pub fn step_vmap(
+        &mut self,
+        keys: &[[u32; 2]],
+        zs: &[f64],
+        step_sizes: &[f64],
+        inv_masses: &[f64],
+    ) -> Result<Vec<Transition>> {
+        let k = keys.len();
+        debug_assert_eq!(zs.len(), k * self.dim);
+        let keys_flat: Vec<u32> = keys.iter().flat_map(|k| k.iter().copied()).collect();
+        let keys_b = HostTensor::U32(keys_flat, vec![k, 2]).to_buffer(&self.client)?;
+        let z_b =
+            HostTensor::from_f64(zs, &[k, self.dim], self.dtype)?.to_buffer(&self.client)?;
+        let eps_b = HostTensor::from_f64(step_sizes, &[k], self.dtype)?.to_buffer(&self.client)?;
+        let mass_b = HostTensor::from_f64(inv_masses, &[k, self.dim], self.dtype)?
+            .to_buffer(&self.client)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&keys_b, &z_b, &eps_b, &mass_b];
+        args.extend(self.data_bufs.iter());
+        self.dispatches += 1;
+        let outs = self.exe.run_buffers(&args)?;
+        (0..k).map(|c| parse_transition(&outs, c, self.dim)).collect()
+    }
+}
+
+fn parse_transition(outs: &[xla::Literal], chain: usize, dim: usize) -> Result<Transition> {
+    let z_all = literal_to_f64(&outs[0])?;
+    let z = z_all[chain * dim..(chain + 1) * dim].to_vec();
+    let pick = |lit: &xla::Literal| -> Result<f64> {
+        let v = literal_to_f64(lit)?;
+        Ok(v[chain.min(v.len() - 1)])
+    };
+    Ok(Transition {
+        z,
+        accept_prob: pick(&outs[1])?,
+        num_leapfrog: pick(&outs[2])? as u32,
+        potential: pick(&outs[3])?,
+        diverging: pick(&outs[4])? != 0.0,
+        depth: pick(&outs[5])? as u32,
+    })
+}
+
+/// Pyro-architecture comparator: potential + gradient as the only
+/// compiled callable, dispatched once per leapfrog by the host-side
+/// tree builder.
+pub struct PjrtPotential {
+    client: xla::PjRtClient,
+    exe: Rc<Executable>,
+    data_bufs: Vec<xla::PjRtBuffer>,
+    pub dim: usize,
+    dtype: DType,
+    evals: u64,
+}
+
+impl PjrtPotential {
+    pub fn new(engine: &Engine, name: &str, data: &[HostTensor]) -> Result<PjrtPotential> {
+        let exe = engine.executable(name)?;
+        if exe.entry.kind != "potential_and_grad" {
+            bail!(
+                "artifact {name} has kind {}, want potential_and_grad",
+                exe.entry.kind
+            );
+        }
+        let data_bufs = upload_data(engine, &exe, 1, data)?;
+        let dtype = exe.entry.inputs[0].dtype;
+        let dim = exe.entry.dim;
+        Ok(PjrtPotential {
+            client: engine.client.clone(),
+            exe,
+            data_bufs,
+            dim,
+            dtype,
+            evals: 0,
+        })
+    }
+
+    pub fn eval(&mut self, z: &[f64], grad: &mut [f64]) -> Result<f64> {
+        let z_b = HostTensor::from_f64(z, &[self.dim], self.dtype)?.to_buffer(&self.client)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&z_b];
+        args.extend(self.data_bufs.iter());
+        self.evals += 1;
+        let outs = self.exe.run_buffers(&args)?;
+        let g = literal_to_f64(&outs[1])?;
+        grad.copy_from_slice(&g);
+        literal_scalar_f64(&outs[0])
+    }
+}
+
+impl Potential for PjrtPotential {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+        self.eval(z, grad)
+            .context("PJRT potential dispatch failed")
+            .unwrap()
+    }
+
+    fn num_evals(&self) -> u64 {
+        self.evals
+    }
+}

@@ -1,0 +1,226 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` (writer)
+//! and the Rust runtime (reader).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+    U32,
+    Bool,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "float64" => DType::F64,
+            "int32" => DType::I32,
+            "uint32" => DType::U32,
+            "bool" => DType::Bool,
+            other => bail!("unsupported dtype in manifest: {other}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One latent site's span in the flat unconstrained vector.
+#[derive(Debug, Clone)]
+pub struct ParamSpan {
+    pub site: String,
+    pub offset: usize,
+    pub size: usize,
+    pub unconstrained_shape: Vec<usize>,
+    pub constrained_shape: Vec<usize>,
+    pub support: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// "f32" | "f64"
+    pub dtype: String,
+    /// "nuts_step" | "potential_and_grad" | "nuts_step_vmap" | ...
+    pub kind: String,
+    pub model: String,
+    pub dim: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub param_layout: Vec<ParamSpan>,
+    /// remaining metadata (n, p, seq_len, chains, ...)
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactEntry {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|j| j.as_usize())
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensor specs"))?
+        .iter()
+        .map(|e| {
+            Ok(TensorSpec {
+                name: e
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("tensor spec missing name"))?
+                    .to_string(),
+                dtype: DType::parse(
+                    e.get("dtype")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("tensor spec missing dtype"))?,
+                )?,
+                shape: e
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect()
+}
+
+fn param_layout(j: Option<&Json>) -> Result<Vec<ParamSpan>> {
+    let Some(j) = j else {
+        return Ok(Vec::new());
+    };
+    j.as_arr()
+        .ok_or_else(|| anyhow!("param_layout must be an array"))?
+        .iter()
+        .map(|e| {
+            let shape = |key: &str| -> Vec<usize> {
+                e.get(key)
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+                    .unwrap_or_default()
+            };
+            Ok(ParamSpan {
+                site: e
+                    .get("site")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("param span missing site"))?
+                    .to_string(),
+                offset: e.get("offset").and_then(|v| v.as_usize()).unwrap_or(0),
+                size: e.get("size").and_then(|v| v.as_usize()).unwrap_or(0),
+                unconstrained_shape: shape("unconstrained_shape"),
+                constrained_shape: shape("constrained_shape"),
+                support: e
+                    .get("support")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}; run `make artifacts` first", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let mut entries = BTreeMap::new();
+        for e in root
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let obj = e.as_obj().ok_or_else(|| anyhow!("entry must be object"))?;
+            let get_str = |k: &str| -> Result<String> {
+                obj.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("entry missing '{k}'"))
+            };
+            let known = [
+                "name",
+                "file",
+                "dtype",
+                "kind",
+                "model",
+                "dim",
+                "inputs",
+                "outputs",
+                "param_layout",
+            ];
+            let meta: BTreeMap<String, Json> = obj
+                .iter()
+                .filter(|(k, _)| !known.contains(&k.as_str()))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect();
+            let entry = ArtifactEntry {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                dtype: get_str("dtype")?,
+                kind: get_str("kind").unwrap_or_default(),
+                model: get_str("model").unwrap_or_default(),
+                dim: obj.get("dim").and_then(|v| v.as_usize()).unwrap_or(0),
+                inputs: tensor_specs(obj.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+                outputs: tensor_specs(obj.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
+                param_layout: param_layout(obj.get("param_layout"))?,
+                meta,
+            };
+            entries.insert(entry.name.clone(), entry);
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact '{name}' not in manifest (available: {})",
+                self.entries.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Entry for (model, kind, dtype tag), e.g. ("hmm", "nuts_step", "f32").
+    pub fn find(&self, model: &str, kind: &str, dtype: &str) -> Result<&ArtifactEntry> {
+        self.get(&format!("{model}_{kind}_{dtype}"))
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut models: Vec<String> = self
+            .entries
+            .values()
+            .map(|e| e.model.clone())
+            .filter(|m| !m.is_empty())
+            .collect();
+        models.sort();
+        models.dedup();
+        models
+    }
+}

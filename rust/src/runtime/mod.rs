@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and exposes typed handles to the rest of the
+//! coordinator.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (signatures, param
+//!   layouts, workload metadata); the runtime is entirely
+//!   manifest-driven, no artifact names are hard-coded.
+//! * [`engine`] — PJRT CPU client + compile cache: HLO text ->
+//!   `HloModuleProto` -> compile, once per artifact.
+//! * [`handles`] — high-level wrappers: [`handles::NutsStep`] (the
+//!   paper's fused transition; data uploaded to device once, per-draw
+//!   inputs marshalled per call) and [`handles::PjrtPotential`] (the
+//!   Pyro-architecture baseline: a [`crate::mcmc::Potential`] that pays
+//!   one PJRT dispatch per leapfrog).
+
+pub mod engine;
+pub mod handles;
+pub mod manifest;
+
+pub use engine::{Engine, Executable, HostTensor};
+pub use handles::{NutsStep, PjrtPotential};
+pub use manifest::{ArtifactEntry, DType, Manifest, ParamSpan, TensorSpec};

@@ -1,0 +1,182 @@
+//! Dense linear algebra for the SKIM marginal likelihood: Cholesky,
+//! triangular solves, SPD inverse.  Row-major `n x n` matrices in flat
+//! `Vec<f64>`.
+
+/// In-place lower Cholesky: A (row-major, SPD) -> L with A = L L^T.
+/// Returns Err on a non-positive pivot.
+pub fn cholesky(a: &mut [f64], n: usize) -> Result<(), String> {
+    for j in 0..n {
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            d -= a[j * n + k] * a[j * n + k];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(format!("cholesky: non-PD pivot {d} at {j}"));
+        }
+        let ljj = d.sqrt();
+        a[j * n + j] = ljj;
+        for i in (j + 1)..n {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = s / ljj;
+        }
+        for k in (j + 1)..n {
+            a[j * n + k] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Solve L x = b (lower triangular), in place on `b`.
+pub fn solve_lower(l: &[f64], n: usize, b: &mut [f64]) {
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * b[k];
+        }
+        b[i] = s / l[i * n + i];
+    }
+}
+
+/// Solve L^T x = b (upper triangular via the stored lower factor).
+pub fn solve_lower_t(l: &[f64], n: usize, b: &mut [f64]) {
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..n {
+            s -= l[k * n + i] * b[k];
+        }
+        b[i] = s / l[i * n + i];
+    }
+}
+
+/// SPD inverse from the Cholesky factor: K^{-1} = L^{-T} L^{-1}.
+pub fn spd_inverse_from_chol(l: &[f64], n: usize) -> Vec<f64> {
+    // Solve K x_j = e_j column by column (O(n^3), fine at n = 200).
+    let mut inv = vec![0.0; n * n];
+    let mut col = vec![0.0; n];
+    for j in 0..n {
+        col.iter_mut().for_each(|v| *v = 0.0);
+        col[j] = 1.0;
+        solve_lower(l, n, &mut col);
+        solve_lower_t(l, n, &mut col);
+        for i in 0..n {
+            inv[i * n + j] = col[i];
+        }
+    }
+    inv
+}
+
+/// log |K| from the Cholesky factor.
+pub fn log_det_from_chol(l: &[f64], n: usize) -> f64 {
+    (0..n).map(|i| l[i * n + i].ln()).sum::<f64>() * 2.0
+}
+
+/// C = A * B^T for (n x p) row-major A, B — the Gram pattern.
+pub fn gram(a: &[f64], b: &[f64], n: usize, p: usize, out: &mut [f64]) {
+    for i in 0..n {
+        let ai = &a[i * p..(i + 1) * p];
+        for j in 0..n {
+            let bj = &b[j * p..(j + 1) * p];
+            out[i * n + j] = ai.iter().zip(bj).map(|(x, y)| x * y).sum();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Vec<f64> {
+        let mut b = vec![0.0; n * n];
+        rng.fill_normal(&mut b);
+        let mut a = vec![0.0; n * n];
+        // A = B B^T + n I
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(3);
+        let n = 12;
+        let a = random_spd(&mut rng, n);
+        let mut l = a.clone();
+        cholesky(&mut l, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += l[i * n + k] * l[j * n + k];
+                }
+                assert!((s - a[i * n + j]).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn solves_match_direct() {
+        let mut rng = Rng::new(4);
+        let n = 8;
+        let a = random_spd(&mut rng, n);
+        let mut l = a.clone();
+        cholesky(&mut l, n).unwrap();
+        let mut b = vec![0.0; n];
+        rng.fill_normal(&mut b);
+        let mut x = b.clone();
+        solve_lower(&l, n, &mut x);
+        solve_lower_t(&l, n, &mut x);
+        // check A x == b
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += a[i * n + j] * x[j];
+            }
+            assert!((s - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let mut rng = Rng::new(5);
+        let n = 6;
+        let a = random_spd(&mut rng, n);
+        let mut l = a.clone();
+        cholesky(&mut l, n).unwrap();
+        let inv = spd_inverse_from_chol(&l, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += a[i * n + k] * inv[k * n + j];
+                }
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((s - expect).abs() < 1e-8, "({i},{j}): {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        let mut a = vec![4.0, 2.0, 2.0, 3.0];
+        let det: f64 = 4.0 * 3.0 - 2.0 * 2.0;
+        cholesky(&mut a, 2).unwrap();
+        assert!((log_det_from_chol(&a, 2) - det.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_non_pd() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // indefinite
+        assert!(cholesky(&mut a, 2).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-built substrates: JSON (no serde in the offline crate
+//! set), timing helpers, and a shrink-free property-testing driver used
+//! by the test suite.
+
+pub mod json;
+pub mod linalg;
+pub mod npy;
+pub mod prop;
+pub mod timer;

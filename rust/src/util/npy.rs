@@ -1,0 +1,148 @@
+//! Minimal NumPy `.npy` (format version 1.0) writer/reader for f64
+//! arrays — posterior samples saved by `fugue run --out` load directly
+//! with `numpy.load`, closing the loop back to the Python side.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Write a little-endian f64 C-order array.
+pub fn write_f64(path: impl AsRef<Path>, data: &[f64], shape: &[usize]) -> Result<()> {
+    let elements: usize = shape.iter().product();
+    if elements != data.len() {
+        bail!("npy: shape {:?} != data length {}", shape, data.len());
+    }
+    let shape_str = match shape.len() {
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f8', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad so that magic(6) + version(2) + len(2) + header is 64-aligned
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&[1, 0])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for v in data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read back a little-endian f64 C-order array written by [`write_f64`]
+/// (or by numpy.save of such an array).
+pub fn read_f64(path: impl AsRef<Path>) -> Result<(Vec<f64>, Vec<usize>)> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic[..6] != MAGIC {
+        bail!("not an npy file");
+    }
+    let mut len_bytes = [0u8; 2];
+    f.read_exact(&mut len_bytes)?;
+    let header_len = u16::from_le_bytes(len_bytes) as usize;
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8(header).context("npy header not utf-8")?;
+    if !header.contains("'<f8'") {
+        bail!("npy: only <f8 supported, header: {header}");
+    }
+    if header.contains("'fortran_order': True") {
+        bail!("npy: fortran order not supported");
+    }
+    let shape_part = header
+        .split("'shape':")
+        .nth(1)
+        .and_then(|s| s.split('(').nth(1))
+        .and_then(|s| s.split(')').next())
+        .context("npy: malformed shape")?;
+    let shape: Vec<usize> = shape_part
+        .split(',')
+        .filter_map(|t| {
+            let t = t.trim();
+            if t.is_empty() {
+                None
+            } else {
+                t.parse().ok()
+            }
+        })
+        .collect();
+    let elements: usize = shape.iter().product();
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    if bytes.len() < elements * 8 {
+        bail!("npy: truncated data");
+    }
+    let data = bytes[..elements * 8]
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((data, shape))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_2d() {
+        let dir = std::env::temp_dir().join("fugue_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.npy");
+        let data: Vec<f64> = (0..12).map(|i| i as f64 * 0.5).collect();
+        write_f64(&path, &data, &[3, 4]).unwrap();
+        let (back, shape) = read_f64(&path).unwrap();
+        assert_eq!(shape, vec![3, 4]);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let dir = std::env::temp_dir().join("fugue_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.npy");
+        write_f64(&path, &[1.5, -2.5], &[2]).unwrap();
+        let (back, shape) = read_f64(&path).unwrap();
+        assert_eq!(shape, vec![2]);
+        assert_eq!(back, vec![1.5, -2.5]);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let dir = std::env::temp_dir().join("fugue_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(write_f64(dir.join("c.npy"), &[1.0], &[2]).is_err());
+    }
+
+    #[test]
+    fn header_is_64_aligned() {
+        let dir = std::env::temp_dir().join("fugue_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d.npy");
+        write_f64(&path, &[0.0; 7], &[7]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // data starts at a multiple of 64
+        assert_eq!((bytes.len() - 7 * 8) % 64, 0);
+    }
+}

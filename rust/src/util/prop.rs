@@ -1,0 +1,42 @@
+//! Shrink-free property-testing driver (the offline crate set has no
+//! `proptest`).  Properties run against many seeded random cases; on
+//! failure the seed and case index are reported so the case replays
+//! deterministically.
+
+use crate::rng::Rng;
+
+/// Run `prop` on `cases` random cases.  Panics with the failing seed on
+/// the first violation.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, cases: u64, mut prop: F) {
+    let base = 0x5EED_u64;
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert |a - b| <= atol + rtol * |b| with a labelled error.
+pub fn close(a: f64, b: f64, atol: f64, rtol: f64, label: &str) -> Result<(), String> {
+    if !a.is_finite() || !b.is_finite() {
+        return Err(format!("{label}: non-finite ({a} vs {b})"));
+    }
+    let tol = atol + rtol * b.abs();
+    if (a - b).abs() > tol {
+        return Err(format!("{label}: {a} vs {b} (|diff| = {} > {tol})", (a - b).abs()));
+    }
+    Ok(())
+}
+
+/// Elementwise [`close`] over slices.
+pub fn all_close(a: &[f64], b: &[f64], atol: f64, rtol: f64, label: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{label}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        close(*x, *y, atol, rtol, &format!("{label}[{i}]"))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Timing helpers for the benchmark harness (no `criterion` in the
+//! offline crate set): warmup + repeated timed runs with simple robust
+//! statistics.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub reps: usize,
+}
+
+impl Timing {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn median_ms(&self) -> f64 {
+        self.median_s * 1e3
+    }
+}
+
+/// Time `f` after `warmup` unmeasured calls; `reps` measured calls.
+pub fn bench<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&samples)
+}
+
+/// Run `f` once, returning (elapsed seconds, result).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
+pub fn summarize(samples: &[f64]) -> Timing {
+    assert!(!samples.is_empty());
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Timing {
+        mean_s: mean,
+        median_s: sorted[sorted.len() / 2],
+        min_s: sorted[0],
+        max_s: *sorted.last().unwrap(),
+        reps: samples.len(),
+    }
+}

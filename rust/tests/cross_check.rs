@@ -1,0 +1,107 @@
+//! Cross-language agreement: the native Rust (autodiff) potentials and
+//! the AOT-compiled (JAX/minippl) potentials are the SAME density —
+//! values and gradients agree at random unconstrained points, on the
+//! same data.  This pins the whole reproduction together: Table 2a's
+//! backends differ only in architecture, never in math.
+//!
+//! Requires `make artifacts` (skips gracefully when absent).
+
+use fugue::harness::builders::Workload;
+use fugue::rng::Rng;
+use fugue::runtime::engine::Engine;
+use fugue::runtime::PjrtPotential;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Engine::new("artifacts").expect("engine"))
+}
+
+fn check_model(engine: &Engine, model: &str, tol_val: f64, tol_grad: f64) {
+    let name = format!("{model}_potential_and_grad_f64");
+    let Ok(entry) = engine.manifest.get(&name) else {
+        eprintln!("skipping {model}: no f64 artifact");
+        return;
+    };
+    let dim = entry.dim;
+    let workload = Workload::for_model(engine, model, 20191222).expect("workload");
+    let dt = entry.inputs[0].dtype;
+    let mut pjrt =
+        PjrtPotential::new(engine, &name, &workload.tensors(dt).unwrap()).expect("pjrt potential");
+    let mut native = workload.native_potential().expect("native potential");
+    assert_eq!(native.dim(), dim, "{model}: dim mismatch");
+
+    let mut rng = Rng::new(7);
+    for case in 0..5 {
+        let z: Vec<f64> = (0..dim).map(|_| rng.uniform_in(-1.5, 1.5)).collect();
+        let mut g_pjrt = vec![0.0; dim];
+        let mut g_native = vec![0.0; dim];
+        let u_pjrt = pjrt.eval(&z, &mut g_pjrt).expect("pjrt eval");
+        let u_native = native.value_and_grad(&z, &mut g_native);
+        let vdiff = (u_pjrt - u_native).abs() / (1.0 + u_native.abs());
+        assert!(
+            vdiff < tol_val,
+            "{model} case {case}: potential {u_native} (native) vs {u_pjrt} (pjrt)"
+        );
+        for i in 0..dim {
+            let gdiff = (g_pjrt[i] - g_native[i]).abs() / (1.0 + g_native[i].abs());
+            assert!(
+                gdiff < tol_grad,
+                "{model} case {case}: grad[{i}] {} (native) vs {} (pjrt)",
+                g_native[i],
+                g_pjrt[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn logistic_potentials_agree() {
+    let Some(engine) = engine() else { return };
+    check_model(&engine, "covtype_small", 1e-8, 1e-6);
+}
+
+#[test]
+fn hmm_potentials_agree() {
+    let Some(engine) = engine() else { return };
+    check_model(&engine, "hmm", 1e-8, 1e-6);
+}
+
+#[test]
+fn skim_potentials_agree() {
+    let Some(engine) = engine() else { return };
+    check_model(&engine, "skim_p25", 1e-6, 1e-4);
+}
+
+#[test]
+fn fused_step_advances_from_native_point() {
+    // The fused artifact and native sampler explore the same surface:
+    // starting from the same z, a fused draw lands at finite potential
+    // that the native potential reproduces.
+    let Some(engine) = engine() else { return };
+    let model = "hmm";
+    let workload = Workload::for_model(&engine, model, 20191222).unwrap();
+    let entry = engine.manifest.find(model, "nuts_step", "f64").unwrap();
+    let dt = entry.inputs[1].dtype;
+    let mut step = fugue::runtime::NutsStep::new(
+        &engine,
+        &format!("{model}_nuts_step_f64"),
+        &workload.tensors(dt).unwrap(),
+    )
+    .unwrap();
+    let dim = entry.dim;
+    let z0 = vec![0.1; dim];
+    let tr = step.step([3, 4], &z0, 0.05, &vec![1.0; dim]).unwrap();
+    assert!(tr.num_leapfrog > 0);
+    let mut native = workload.native_potential().unwrap();
+    let mut g = vec![0.0; dim];
+    let u_native = native.value_and_grad(&tr.z, &mut g);
+    assert!(
+        (u_native - tr.potential).abs() / (1.0 + u_native.abs()) < 1e-8,
+        "fused landed at U={} but native says {}",
+        tr.potential,
+        u_native
+    );
+}

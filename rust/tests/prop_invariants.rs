@@ -1,0 +1,234 @@
+//! Property tests (self-built driver, `fugue::util::prop`) on the
+//! coordinator-side invariants: the Appendix A bit-twiddling and storage
+//! scheme, Welford moments, dual-averaging behaviour, transforms,
+//! autodiff vs finite differences, ESS sanity, JSON round-trips.
+
+use fugue::autodiff::{finite_diff, Tape, Var};
+use fugue::mcmc::nuts_iterative::{bit_count, candidate_range, trailing_ones};
+use fugue::mcmc::{DualAverage, Welford};
+use fugue::ppl::transforms::{stick_breaking, stick_breaking_inverse};
+use fugue::util::json::Json;
+use fugue::util::prop::{all_close, check, close};
+
+/// Oracle: C(n) by progressively clearing trailing 1-bits (Appendix A).
+fn candidate_set(n: u32) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut m = n;
+    for _ in 0..trailing_ones(n) {
+        m &= m - 1;
+        out.push(m);
+    }
+    out
+}
+
+#[test]
+fn prop_iterative_storage_always_holds_candidates() {
+    // Replay the S[BitCount(k)] storage scheme over whole trees and
+    // assert that at every odd n the storage rows [i_min, i_max] hold
+    // exactly C(n) — the memory-efficiency claim of Appendix A.
+    check("storage holds C(n)", 64, |rng| {
+        let depth = 1 + rng.below(10) as u32;
+        let mut storage: Vec<Option<u32>> = vec![None; depth.max(1) as usize + 1];
+        for n in 0..(1u32 << depth) {
+            if n % 2 == 0 {
+                storage[bit_count(n) as usize] = Some(n);
+            } else {
+                let (i_min, i_max) = candidate_range(n);
+                let got: Vec<u32> = (i_min..=i_max)
+                    .map(|k| storage[k as usize].ok_or(format!("S[{k}] empty at n={n}")))
+                    .collect::<Result<_, _>>()?;
+                let mut expect = candidate_set(n);
+                expect.sort_unstable();
+                let mut got_sorted = got.clone();
+                got_sorted.sort_unstable();
+                if got_sorted != expect {
+                    return Err(format!("n={n}: got {got_sorted:?}, want {expect:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_recursive_and_iterative_checks_coincide() {
+    // Pair set (left leaf, right leaf) checked by Algorithm 1 ==
+    // pairs checked by Algorithm 2 via C(n), for all depths.
+    fn recursive_checks(base: u32, depth: u32, out: &mut Vec<(u32, u32)>) {
+        if depth == 0 {
+            return;
+        }
+        let half = 1 << (depth - 1);
+        recursive_checks(base, depth - 1, out);
+        recursive_checks(base + half, depth - 1, out);
+        out.push((base, base + (1 << depth) - 1));
+    }
+    for depth in 1..=10u32 {
+        let mut rec = Vec::new();
+        recursive_checks(0, depth, &mut rec);
+        let mut iter = Vec::new();
+        for n in 0..(1u32 << depth) {
+            if n % 2 == 1 {
+                for m in candidate_set(n) {
+                    iter.push((m, n));
+                }
+            }
+        }
+        rec.sort_unstable();
+        iter.sort_unstable();
+        assert_eq!(rec, iter, "depth {depth}");
+    }
+}
+
+#[test]
+fn prop_bitcount_bounds_storage_index() {
+    // max BitCount of even n < 2^d is d-1 => storage of size d suffices
+    check("bitcount bound", 200, |rng| {
+        let d = 1 + rng.below(20) as u32;
+        let n = (rng.next_u64() as u32) & ((1u32 << d) - 1) & !1; // even < 2^d
+        if bit_count(n) > d.saturating_sub(1) {
+            return Err(format!("even n={n} < 2^{d} has bitcount {}", bit_count(n)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_welford_matches_two_pass() {
+    check("welford == two-pass", 50, |rng| {
+        let n = 2 + rng.below(300);
+        let dim = 1 + rng.below(8);
+        let xs: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal() * 3.0 + 1.0).collect())
+            .collect();
+        let mut w = Welford::new(dim);
+        for x in &xs {
+            w.update(x);
+        }
+        for d in 0..dim {
+            let mean = xs.iter().map(|x| x[d]).sum::<f64>() / n as f64;
+            let var =
+                xs.iter().map(|x| (x[d] - mean).powi(2)).sum::<f64>() / (n as f64 - 1.0);
+            close(w.mean[d], mean, 1e-10, 1e-10, "mean")?;
+            close(w.variance()[d], var, 1e-9, 1e-9, "var")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dual_averaging_fixed_point() {
+    // For any smooth monotone accept(eps) crossing the target, dual
+    // averaging settles where accept ~= target.
+    check("dual averaging converges", 20, |rng| {
+        let eps_star = 0.05 + rng.uniform() * 2.0;
+        let sharp = 2.0 + rng.uniform() * 6.0;
+        let target = 0.6 + rng.uniform() * 0.3;
+        let accept = |eps: f64| (-(sharp) * (eps - eps_star)).exp().min(1.0);
+        let mut da = DualAverage::new(1.0, target);
+        for _ in 0..20_000 {
+            let a = accept(da.step_size());
+            da.update(a);
+        }
+        let final_accept = accept(da.final_step_size());
+        close(final_accept, target, 0.15, 0.0, "final accept")
+    });
+}
+
+#[test]
+fn prop_stick_breaking_roundtrip_and_simplex() {
+    check("stick breaking", 100, |rng| {
+        let k = 2 + rng.below(12);
+        let x: Vec<f64> = (0..k - 1).map(|_| rng.normal() * 2.0).collect();
+        let (y, _ladj) = stick_breaking(&x);
+        let sum: f64 = y.iter().sum();
+        close(sum, 1.0, 1e-9, 0.0, "sum")?;
+        if y.iter().any(|&v| v <= 0.0) {
+            return Err("non-positive simplex coordinate".to_string());
+        }
+        let x2 = stick_breaking_inverse(&y);
+        all_close(&x, &x2, 1e-6, 1e-6, "roundtrip")
+    });
+}
+
+#[test]
+fn prop_tape_gradients_match_finite_diff() {
+    check("tape vs finite diff", 60, |rng| {
+        let n = 2 + rng.below(6);
+        let x: Vec<f64> = (0..n).map(|_| 0.2 + rng.uniform() * 2.0).collect();
+        let build = |t: &mut Tape, v: &[Var]| {
+            // mixed expression touching every op family
+            let s = t.sum(v);
+            let lse = t.logsumexp(v);
+            let p = t.mul(v[0], v[1 % v.len()]);
+            let e = t.exp(v[0]);
+            let sq = t.sqrt(v[1 % v.len()]);
+            let l = t.ln(s);
+            let sp = t.softplus(p);
+            let a = t.add(lse, l);
+            let b = t.add(e, sq);
+            let c = t.add(sp, b);
+            let d = t.sub(a, c);
+            let sg = t.sigmoid(d);
+            t.mul(sg, s)
+        };
+        let eval = |xs: &[f64]| {
+            let mut t = Tape::new();
+            let vars: Vec<Var> = xs.iter().map(|&v| t.input(v)).collect();
+            let out = build(&mut t, &vars);
+            t.value(out)
+        };
+        let mut t = Tape::new();
+        let vars: Vec<Var> = x.iter().map(|&v| t.input(v)).collect();
+        let out = build(&mut t, &vars);
+        let adj = t.grad(out);
+        let grads: Vec<f64> = vars.iter().map(|v| adj[v.0 as usize]).collect();
+        let fd = finite_diff(&x, eval, 1e-7);
+        all_close(&grads, &fd, 1e-5, 1e-4, "grad")
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json roundtrip", 100, |rng| {
+        // random JSON value
+        fn gen(rng: &mut fugue::rng::Rng, depth: usize) -> Json {
+            match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.bernoulli(0.5)),
+                2 => Json::Num((rng.normal() * 100.0).round()),
+                3 => Json::Str(format!("s{}-\"q\"\n", rng.below(1000))),
+                4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(4))
+                        .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen(rng, 0);
+        let text = v.to_string_pretty();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        if back != v {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ess_bounded_by_total_draws() {
+    check("ess <= total", 30, |rng| {
+        let n = 64 + rng.below(512);
+        let rho = rng.uniform() * 0.9;
+        let mut x = vec![0.0; n];
+        for i in 1..n {
+            x[i] = rho * x[i - 1] + rng.normal();
+        }
+        let ess = fugue::diagnostics::effective_sample_size(&[x]);
+        if !(ess > 0.0 && ess <= n as f64 + 1e-9) {
+            return Err(format!("ess {ess} out of (0, {n}]"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,183 @@
+//! Integration tests over the PJRT runtime with real artifacts:
+//! manifest-driven loading, buffer reuse, fused + vmapped transitions,
+//! stepwise potential, predict/loglik/ELBO executables.
+//!
+//! All tests skip gracefully when `artifacts/` is absent.
+
+use fugue::harness::builders::Workload;
+use fugue::runtime::engine::{literal_to_f64, Engine, HostTensor};
+use fugue::runtime::{NutsStep, PjrtPotential};
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Engine::new("artifacts").expect("engine"))
+}
+
+#[test]
+fn manifest_lists_every_model_bundle() {
+    let Some(engine) = engine() else { return };
+    let models = engine.manifest.models();
+    for expected in ["hmm", "covtype_small"] {
+        assert!(
+            models.iter().any(|m| m == expected),
+            "manifest missing {expected}: {models:?}"
+        );
+    }
+    // every nuts_step has a matching potential_and_grad with equal dim
+    for e in engine.manifest.entries.values() {
+        if e.kind == "nuts_step" {
+            let pot = engine
+                .manifest
+                .find(&e.model, "potential_and_grad", &e.dtype)
+                .expect("missing potential for nuts_step");
+            assert_eq!(pot.dim, e.dim, "{}: dim mismatch", e.name);
+        }
+    }
+}
+
+#[test]
+fn executable_cache_returns_same_instance() {
+    let Some(engine) = engine() else { return };
+    let a = engine.executable("hmm_potential_and_grad_f32").unwrap();
+    let b = engine.executable("hmm_potential_and_grad_f32").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn fused_step_is_deterministic_in_key() {
+    let Some(engine) = engine() else { return };
+    let workload = Workload::for_model(&engine, "hmm", 1).unwrap();
+    let entry = engine.manifest.find("hmm", "nuts_step", "f32").unwrap();
+    let dt = entry.inputs[1].dtype;
+    let mut step =
+        NutsStep::new(&engine, "hmm_nuts_step_f32", &workload.tensors(dt).unwrap()).unwrap();
+    let dim = entry.dim;
+    let z = vec![0.3; dim];
+    let a = step.step([7, 9], &z, 0.05, &vec![1.0; dim]).unwrap();
+    let b = step.step([7, 9], &z, 0.05, &vec![1.0; dim]).unwrap();
+    assert_eq!(a.z, b.z);
+    assert_eq!(a.num_leapfrog, b.num_leapfrog);
+    let c = step.step([7, 10], &z, 0.05, &vec![1.0; dim]).unwrap();
+    assert_ne!(a.z, c.z, "different key must give different draw");
+}
+
+#[test]
+fn fused_step_respects_max_tree_depth_budget() {
+    let Some(engine) = engine() else { return };
+    let workload = Workload::for_model(&engine, "hmm", 1).unwrap();
+    let entry = engine.manifest.find("hmm", "nuts_step", "f32").unwrap();
+    let dt = entry.inputs[1].dtype;
+    let mut step =
+        NutsStep::new(&engine, "hmm_nuts_step_f32", &workload.tensors(dt).unwrap()).unwrap();
+    let dim = entry.dim;
+    // tiny step size -> deep tree, still bounded by 2^max_depth
+    let tr = step.step([1, 1], &vec![0.0; dim], 1e-4, &vec![1.0; dim]).unwrap();
+    let max_leaves = 1u32 << entry.meta_usize("max_tree_depth").unwrap_or(10);
+    assert!(tr.num_leapfrog <= max_leaves, "{} > {}", tr.num_leapfrog, max_leaves);
+    assert!(tr.depth as usize <= entry.meta_usize("max_tree_depth").unwrap_or(10));
+}
+
+#[test]
+fn vmap_step_matches_per_chain_shapes() {
+    let Some(engine) = engine() else { return };
+    let name = "hmm_nuts_step_vmap4_f32";
+    if engine.manifest.get(name).is_err() {
+        return;
+    }
+    let workload = Workload::for_model(&engine, "hmm", 1).unwrap();
+    let entry = engine.manifest.get(name).unwrap().clone();
+    let dt = entry.inputs[1].dtype;
+    let mut step = NutsStep::new(&engine, name, &workload.tensors(dt).unwrap()).unwrap();
+    let k = entry.meta_usize("chains").unwrap();
+    let dim = entry.dim;
+    let keys: Vec<[u32; 2]> = (0..k as u32).map(|i| [i, 100 + i]).collect();
+    let trs = step
+        .step_vmap(&keys, &vec![0.2; k * dim], &vec![0.05; k], &vec![1.0; k * dim])
+        .unwrap();
+    assert_eq!(trs.len(), k);
+    for tr in &trs {
+        assert_eq!(tr.z.len(), dim);
+        assert!(tr.potential.is_finite());
+    }
+    // different keys -> chains decorrelate
+    assert_ne!(trs[0].z, trs[1].z);
+}
+
+#[test]
+fn stepwise_potential_counts_dispatches() {
+    let Some(engine) = engine() else { return };
+    let workload = Workload::for_model(&engine, "covtype_small", 1).unwrap();
+    let entry = engine
+        .manifest
+        .find("covtype_small", "potential_and_grad", "f32")
+        .unwrap();
+    let dt = entry.inputs[0].dtype;
+    let mut pot = PjrtPotential::new(
+        &engine,
+        "covtype_small_potential_and_grad_f32",
+        &workload.tensors(dt).unwrap(),
+    )
+    .unwrap();
+    let dim = entry.dim;
+    let mut g = vec![0.0; dim];
+    use fugue::mcmc::Potential;
+    for i in 0..5 {
+        let u = pot.value_and_grad(&vec![0.01 * i as f64; dim], &mut g);
+        assert!(u.is_finite());
+    }
+    assert_eq!(pot.num_evals(), 5);
+}
+
+#[test]
+fn f32_and_f64_artifacts_agree_on_potential() {
+    let Some(engine) = engine() else { return };
+    let workload = Workload::for_model(&engine, "hmm", 3).unwrap();
+    let mut pots = Vec::new();
+    for dtype in ["f32", "f64"] {
+        let name = format!("hmm_potential_and_grad_{dtype}");
+        let entry = engine.manifest.get(&name).unwrap();
+        let dt = entry.inputs[0].dtype;
+        pots.push((
+            PjrtPotential::new(&engine, &name, &workload.tensors(dt).unwrap()).unwrap(),
+            entry.dim,
+        ));
+    }
+    let dim = pots[0].1;
+    let z = vec![0.25; dim];
+    let mut g32 = vec![0.0; dim];
+    let mut g64 = vec![0.0; dim];
+    let u32v = pots[0].0.eval(&z, &mut g32).unwrap();
+    let u64v = pots[1].0.eval(&z, &mut g64).unwrap();
+    assert!(
+        (u32v - u64v).abs() / (1.0 + u64v.abs()) < 1e-4,
+        "f32 {u32v} vs f64 {u64v}"
+    );
+}
+
+#[test]
+fn predict_artifact_produces_binary_labels() {
+    let Some(engine) = engine() else { return };
+    let Ok(exe) = engine.executable("covtype_predict_f32") else {
+        return;
+    };
+    let entry = exe.entry.clone();
+    let s = entry.meta_usize("num_samples").unwrap();
+    let x_spec = &entry.inputs[3];
+    let (n, d) = (x_spec.shape[0], x_spec.shape[1]);
+    let keys = HostTensor::U32((0..2 * s as u32).collect(), vec![s, 2]);
+    let ms = HostTensor::F32(vec![0.1; s * d], vec![s, d]);
+    let bs = HostTensor::F32(vec![0.0; s], vec![s]);
+    let x = HostTensor::F32(vec![0.5; n * d], vec![n, d]);
+    let bufs: Vec<_> = [keys, ms, bs, x]
+        .iter()
+        .map(|t| engine.upload(t).unwrap())
+        .collect();
+    let arg_refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    let outs = exe.run_buffers(&arg_refs).unwrap();
+    let y = literal_to_f64(&outs[0]).unwrap();
+    assert_eq!(y.len(), s * n);
+    assert!(y.iter().all(|&v| v == 0.0 || v == 1.0));
+}

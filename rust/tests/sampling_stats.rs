@@ -1,0 +1,235 @@
+//! Statistical end-to-end tests: the samplers (all three architectures)
+//! recover known posteriors.
+//!
+//! * Native (analytic potentials): conjugate-Gaussian posterior
+//!   moments, funnel-free banana sanity, recursive == iterative in
+//!   distribution (two-sample moment comparison).
+//! * Fused artifacts (needs `artifacts/`): logistic posterior recovers
+//!   the generating weights' signs; HMM posterior concentrates near the
+//!   true sticky transition structure.
+
+use fugue::coordinator::{run_chain, NativeSampler, NutsOptions, TreeAlgorithm};
+use fugue::diagnostics::summary::summarize;
+use fugue::harness::builders::{build_sampler, init_z, Backend, Workload};
+use fugue::mcmc::Potential;
+use fugue::runtime::engine::Engine;
+
+/// Gaussian with known diagonal covariance.
+struct DiagGauss {
+    var: Vec<f64>,
+}
+
+impl Potential for DiagGauss {
+    fn dim(&self) -> usize {
+        self.var.len()
+    }
+    fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+        let mut u = 0.0;
+        for i in 0..z.len() {
+            grad[i] = z[i] / self.var[i];
+            u += 0.5 * z[i] * z[i] / self.var[i];
+        }
+        u
+    }
+}
+
+fn moments(samples: &[f64], dim: usize) -> (Vec<f64>, Vec<f64>) {
+    let n = (samples.len() / dim) as f64;
+    let mut mean = vec![0.0; dim];
+    for row in samples.chunks(dim) {
+        for (m, v) in mean.iter_mut().zip(row) {
+            *m += v;
+        }
+    }
+    mean.iter_mut().for_each(|m| *m /= n);
+    let mut var = vec![0.0; dim];
+    for row in samples.chunks(dim) {
+        for i in 0..dim {
+            var[i] += (row[i] - mean[i]).powi(2);
+        }
+    }
+    var.iter_mut().for_each(|v| *v /= n - 1.0);
+    (mean, var)
+}
+
+fn run_native(alg: TreeAlgorithm, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let var = vec![4.0, 1.0, 0.25, 9.0];
+    let mut sampler = NativeSampler::new(DiagGauss { var: var.clone() }, alg, 10);
+    let opts = NutsOptions {
+        num_warmup: 400,
+        num_samples: 2500,
+        seed,
+        ..Default::default()
+    };
+    let res = run_chain(&mut sampler, &[0.5; 4], &opts).unwrap();
+    moments(&res.samples, 4)
+}
+
+#[test]
+fn iterative_recovers_anisotropic_gaussian() {
+    let (mean, var) = run_native(TreeAlgorithm::Iterative, 11);
+    let expect: [f64; 4] = [4.0, 1.0, 0.25, 9.0];
+    for d in 0..4 {
+        assert!(mean[d].abs() < 0.35 * expect[d].sqrt(), "mean[{d}] = {}", mean[d]);
+        assert!(
+            (var[d] - expect[d]).abs() < 0.3 * expect[d],
+            "var[{d}] = {} want {}",
+            var[d],
+            expect[d]
+        );
+    }
+}
+
+#[test]
+fn recursive_and_iterative_agree_in_distribution() {
+    let (m1, v1) = run_native(TreeAlgorithm::Iterative, 21);
+    let (m2, v2) = run_native(TreeAlgorithm::Recursive, 22);
+    for d in 0..4 {
+        let scale = v1[d].sqrt();
+        assert!(
+            (m1[d] - m2[d]).abs() < 0.3 * scale,
+            "means differ at {d}: {} vs {}",
+            m1[d],
+            m2[d]
+        );
+        assert!(
+            (v1[d] / v2[d]).ln().abs() < 0.5,
+            "vars differ at {d}: {} vs {}",
+            v1[d],
+            v2[d]
+        );
+    }
+}
+
+#[test]
+fn adaptation_learns_the_scale() {
+    // After warmup the inverse mass approximates the target variances.
+    let var = vec![25.0, 0.04];
+    let mut sampler = NativeSampler::new(DiagGauss { var: var.clone() }, TreeAlgorithm::Iterative, 10);
+    let opts = NutsOptions {
+        num_warmup: 600,
+        num_samples: 10,
+        seed: 5,
+        ..Default::default()
+    };
+    let res = run_chain(&mut sampler, &[1.0, 0.1], &opts).unwrap();
+    let ratio = res.inv_mass[0] / res.inv_mass[1];
+    let expect = var[0] / var[1];
+    assert!(
+        (ratio / expect).ln().abs() < 1.2,
+        "inv mass ratio {ratio} want ~{expect}"
+    );
+}
+
+#[test]
+fn nuts_beats_mistuned_hmc_per_leapfrog() {
+    // The paper's §3.1 motivation: NUTS adapts trajectory length, HMC
+    // with a mistuned static trajectory wastes leapfrogs. Compare ESS
+    // per leapfrog on an anisotropic Gaussian.
+    use fugue::mcmc::hmc::HmcSampler;
+
+    let var = vec![9.0, 1.0, 0.1];
+    let opts = NutsOptions {
+        num_warmup: 300,
+        num_samples: 1200,
+        seed: 33,
+        ..Default::default()
+    };
+    // mistuned HMC: 64 leapfrogs per draw, way past the turnaround
+    let mut hmc = HmcSampler {
+        potential: DiagGauss { var: var.clone() },
+        num_steps: 64,
+    };
+    let hmc_res = run_chain(&mut hmc, &[1.0, 1.0, 0.1], &opts).unwrap();
+    let mut nuts = NativeSampler::new(DiagGauss { var }, TreeAlgorithm::Iterative, 10);
+    let nuts_res = run_chain(&mut nuts, &[1.0, 1.0, 0.1], &opts).unwrap();
+
+    let ess_per_lf = |res: &fugue::coordinator::ChainResult| {
+        let rows = summarize(&[res.samples.clone()], 3, &[]);
+        rows.iter().map(|r| r.ess).fold(f64::INFINITY, f64::min)
+            / res.sample_leapfrogs as f64
+    };
+    let e_hmc = ess_per_lf(&hmc_res);
+    let e_nuts = ess_per_lf(&nuts_res);
+    assert!(
+        e_nuts > 1.5 * e_hmc,
+        "NUTS {e_nuts:.4} vs mistuned HMC {e_hmc:.4} ESS/leapfrog"
+    );
+}
+
+// ---- artifact-backed statistical tests ----
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Engine::new("artifacts").expect("engine"))
+}
+
+#[test]
+fn fused_logistic_recovers_generating_signal() {
+    let Some(engine) = engine() else { return };
+    let model = "covtype_small";
+    let seed = 20191222;
+    let workload = Workload::for_model(&engine, model, seed).unwrap();
+    let mut sampler = build_sampler(&engine, model, Backend::Fused, "f32", &workload, 10).unwrap();
+    let dim = sampler.dim();
+    let opts = NutsOptions {
+        num_warmup: 300,
+        num_samples: 300,
+        seed,
+        ..Default::default()
+    };
+    let res = run_chain(&mut sampler, &init_z(dim, seed), &opts).unwrap();
+    let (mean, _) = moments(&res.samples, dim);
+    let w_true = match &workload {
+        Workload::Logistic(l) => l.w_true.clone(),
+        _ => unreachable!(),
+    };
+    // posterior mean of m correlates strongly with the truth
+    let m = &mean[1..];
+    let dot: f64 = m.iter().zip(&w_true).map(|(a, b)| a * b).sum();
+    let na: f64 = m.iter().map(|a| a * a).sum::<f64>().sqrt();
+    let nb: f64 = w_true.iter().map(|a| a * a).sum::<f64>().sqrt();
+    let corr = dot / (na * nb);
+    assert!(corr > 0.8, "corr(posterior mean, truth) = {corr}");
+    // rhat-ish sanity on a single chain
+    let rows = summarize(&[res.samples.clone()], dim, &[]);
+    let bad = rows.iter().filter(|r| r.rhat > 1.2).count();
+    assert!(bad < dim / 4, "{bad} of {dim} params have split-rhat > 1.2");
+}
+
+#[test]
+fn fused_hmm_identifies_sticky_transitions() {
+    let Some(engine) = engine() else { return };
+    let seed = 20191222;
+    let workload = Workload::for_model(&engine, "hmm", seed).unwrap();
+    let mut sampler = build_sampler(&engine, "hmm", Backend::Fused, "f32", &workload, 10).unwrap();
+    let dim = sampler.dim();
+    let opts = NutsOptions {
+        num_warmup: 300,
+        num_samples: 300,
+        seed,
+        ..Default::default()
+    };
+    let res = run_chain(&mut sampler, &init_z(dim, seed), &opts).unwrap();
+    let (mean_u, _) = moments(&res.samples, dim);
+    // theta sticks live after the phi block: layout [phi (27), theta (6)]
+    let theta_sticks = &mean_u[27..33];
+    // map back through stick-breaking per row and compare to truth
+    let truth = match &workload {
+        Workload::Hmm(h) => h.theta_true.clone(),
+        _ => unreachable!(),
+    };
+    let mut err = 0.0;
+    for row in 0..3 {
+        let (simplex, _) =
+            fugue::ppl::transforms::stick_breaking(&theta_sticks[row * 2..(row + 1) * 2]);
+        for j in 0..3 {
+            err += (simplex[j] - truth[row * 3 + j]).abs();
+        }
+    }
+    err /= 9.0;
+    assert!(err < 0.12, "mean |theta - truth| = {err}");
+}
