@@ -13,14 +13,23 @@
 //!   Stan's fused math-library rev rules.
 //!
 //! The native NUTS sampler ([`crate::mcmc`]) consumes this through the
-//! [`crate::mcmc::Potential`] trait; every evaluation builds a fresh
-//! tape (like Stan's per-leapfrog nested autodiff region).
+//! [`crate::mcmc::Potential`] trait.  The tape is *reusable* across
+//! evaluations (Stan's nested autodiff region with a recovered memory
+//! arena): [`Tape::reset`] clears the node list, the composite arena
+//! and the adjoint scratch while keeping their capacity, so the steady
+//! state of a sampling run performs **zero heap allocations** per
+//! gradient evaluation.  Composite parents/partials live in one shared
+//! arena (two flat `Vec`s indexed by `(start, len)`) instead of a boxed
+//! slice per node, and the reverse sweep writes into an adjoint buffer
+//! owned by the tape.
 
 /// Handle to a node on a [`Tape`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Var(pub u32);
 
-#[derive(Debug)]
+/// Node operation.  `Copy`, with composite parents/partials stored
+/// out-of-line in the tape's arena so the op list is a flat `Vec`.
+#[derive(Debug, Clone, Copy)]
 enum Op {
     /// Leaf (input or constant): no parents.
     Leaf,
@@ -41,52 +50,89 @@ enum Op {
     Scale(u32, f64),
     /// value = parent + c
     Offset(u32),
-    /// Scalar-valued fused primitive with precomputed partials.
-    Composite {
-        parents: Box<[u32]>,
-        partials: Box<[f64]>,
-    },
-}
-
-struct Node {
-    op: Op,
-    value: f64,
+    /// Scalar-valued fused primitive; parents/partials at
+    /// `arena[start..start+len]`.
+    Composite { start: u32, len: u32 },
 }
 
 /// Reverse-mode tape. Build the expression with the `Tape` methods, then
-/// call [`Tape::grad`] on the output.
+/// call [`Tape::grad`] on the output.  Call [`Tape::reset`] between
+/// evaluations to reuse all storage.
 pub struct Tape {
-    nodes: Vec<Node>,
+    ops: Vec<Op>,
+    values: Vec<f64>,
+    arena_parents: Vec<u32>,
+    arena_partials: Vec<f64>,
+    /// adjoint scratch for the reverse sweep (sized lazily in `grad`)
+    adj: Vec<f64>,
 }
 
 impl Default for Tape {
+    /// Cheap empty tape — **no allocation**.  This is the placeholder
+    /// `std::mem::take` installs while a potential temporarily moves
+    /// its tape out for an evaluation, so it must not touch the heap
+    /// (the zero-allocation steady state depends on it).  Use
+    /// [`Tape::new`] for a working tape with pre-sized buffers.
     fn default() -> Self {
-        Self::new()
+        Tape {
+            ops: Vec::new(),
+            values: Vec::new(),
+            arena_parents: Vec::new(),
+            arena_partials: Vec::new(),
+            adj: Vec::new(),
+        }
     }
 }
 
 impl Tape {
     pub fn new() -> Self {
         Tape {
-            nodes: Vec::with_capacity(1024),
+            ops: Vec::with_capacity(1024),
+            values: Vec::with_capacity(1024),
+            arena_parents: Vec::with_capacity(1024),
+            arena_partials: Vec::with_capacity(1024),
+            adj: Vec::new(),
         }
     }
 
+    /// Clear the tape for the next evaluation, keeping every buffer's
+    /// capacity (the zero-allocation steady state).
+    pub fn reset(&mut self) {
+        self.ops.clear();
+        self.values.clear();
+        self.arena_parents.clear();
+        self.arena_partials.clear();
+    }
+
     pub fn len(&self) -> usize {
-        self.nodes.len()
+        self.ops.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.nodes.is_empty()
+        self.ops.is_empty()
     }
 
+    /// Node-storage capacity watermark (regression guard for tape
+    /// reuse: must not grow across steady-state evaluations).
+    pub fn node_capacity(&self) -> usize {
+        self.values.capacity()
+    }
+
+    /// Composite-arena capacity watermark.
+    pub fn arena_capacity(&self) -> usize {
+        self.arena_partials.capacity()
+    }
+
+    #[inline]
     pub fn value(&self, v: Var) -> f64 {
-        self.nodes[v.0 as usize].value
+        self.values[v.0 as usize]
     }
 
+    #[inline]
     fn push(&mut self, op: Op, value: f64) -> Var {
-        let idx = self.nodes.len() as u32;
-        self.nodes.push(Node { op, value });
+        let idx = self.ops.len() as u32;
+        self.ops.push(op);
+        self.values.push(value);
         Var(idx)
     }
 
@@ -195,8 +241,17 @@ impl Tape {
 
     pub fn sum(&mut self, xs: &[Var]) -> Var {
         let value: f64 = xs.iter().map(|v| self.value(*v)).sum();
-        let partials = vec![1.0; xs.len()];
-        self.composite(xs, &partials, value)
+        let start = self.arena_parents.len() as u32;
+        self.arena_parents.extend(xs.iter().map(|v| v.0));
+        self.arena_partials
+            .resize(self.arena_partials.len() + xs.len(), 1.0);
+        self.push(
+            Op::Composite {
+                start,
+                len: xs.len() as u32,
+            },
+            value,
+        )
     }
 
     /// dot(w, c) for constant coefficients c.
@@ -208,94 +263,124 @@ impl Tape {
 
     /// Numerically-stable logsumexp with exact partials (softmax).
     pub fn logsumexp(&mut self, xs: &[Var]) -> Var {
-        let vals: Vec<f64> = xs.iter().map(|v| self.value(*v)).collect();
-        let m = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut m = f64::NEG_INFINITY;
+        for v in xs {
+            m = m.max(self.value(*v));
+        }
         if m == f64::NEG_INFINITY {
             return self.constant(f64::NEG_INFINITY);
         }
-        let sum: f64 = vals.iter().map(|v| (v - m).exp()).sum();
+        let mut sum = 0.0;
+        for v in xs {
+            sum += (self.value(*v) - m).exp();
+        }
         let value = m + sum.ln();
-        let partials: Vec<f64> = vals.iter().map(|v| (v - m).exp() / sum).collect();
-        self.composite(xs, &partials, value)
+        let start = self.arena_parents.len() as u32;
+        for v in xs {
+            let p = (self.value(*v) - m).exp() / sum;
+            self.arena_parents.push(v.0);
+            self.arena_partials.push(p);
+        }
+        self.push(
+            Op::Composite {
+                start,
+                len: xs.len() as u32,
+            },
+            value,
+        )
     }
 
     /// Scalar-valued fused primitive: `value` with `partials[i] =
     /// d value / d parents[i]` computed by the caller (the Stan
-    /// math-library pattern).
+    /// math-library pattern).  Parents/partials are copied into the
+    /// tape's shared arena.
     pub fn composite(&mut self, parents: &[Var], partials: &[f64], value: f64) -> Var {
         assert_eq!(parents.len(), partials.len());
-        let parents: Box<[u32]> = parents.iter().map(|v| v.0).collect();
+        let start = self.arena_parents.len() as u32;
+        self.arena_parents.extend(parents.iter().map(|v| v.0));
+        self.arena_partials.extend_from_slice(partials);
         self.push(
             Op::Composite {
-                parents,
-                partials: partials.into(),
+                start,
+                len: parents.len() as u32,
             },
             value,
         )
     }
 
     /// Reverse sweep from `output`; returns the adjoint of every node
-    /// (index with `Var.0`).
-    pub fn grad(&self, output: Var) -> Vec<f64> {
-        let mut adj = vec![0.0; self.nodes.len()];
-        adj[output.0 as usize] = 1.0;
-        for i in (0..self.nodes.len()).rev() {
+    /// (index with `Var.0`).  The returned slice borrows the tape's own
+    /// scratch buffer — copy out what you need before the next tape
+    /// operation.
+    pub fn grad(&mut self, output: Var) -> &[f64] {
+        let n = self.ops.len();
+        self.adj.clear();
+        self.adj.resize(n, 0.0);
+        self.adj[output.0 as usize] = 1.0;
+        let Tape {
+            ops,
+            values,
+            arena_parents,
+            arena_partials,
+            adj,
+        } = self;
+        for i in (0..n).rev() {
             let a = adj[i];
             if a == 0.0 {
                 continue;
             }
-            let node = &self.nodes[i];
-            match &node.op {
+            match ops[i] {
                 Op::Leaf => {}
                 Op::Add(x, y) => {
-                    adj[*x as usize] += a;
-                    adj[*y as usize] += a;
+                    adj[x as usize] += a;
+                    adj[y as usize] += a;
                 }
                 Op::Sub(x, y) => {
-                    adj[*x as usize] += a;
-                    adj[*y as usize] -= a;
+                    adj[x as usize] += a;
+                    adj[y as usize] -= a;
                 }
                 Op::Mul(x, y) => {
-                    let (vx, vy) = (self.nodes[*x as usize].value, self.nodes[*y as usize].value);
-                    adj[*x as usize] += a * vy;
-                    adj[*y as usize] += a * vx;
+                    let (vx, vy) = (values[x as usize], values[y as usize]);
+                    adj[x as usize] += a * vy;
+                    adj[y as usize] += a * vx;
                 }
                 Op::Div(x, y) => {
-                    let (vx, vy) = (self.nodes[*x as usize].value, self.nodes[*y as usize].value);
-                    adj[*x as usize] += a / vy;
-                    adj[*y as usize] -= a * vx / (vy * vy);
+                    let (vx, vy) = (values[x as usize], values[y as usize]);
+                    adj[x as usize] += a / vy;
+                    adj[y as usize] -= a * vx / (vy * vy);
                 }
-                Op::Neg(x) => adj[*x as usize] -= a,
-                Op::Exp(x) => adj[*x as usize] += a * node.value,
-                Op::Ln(x) => adj[*x as usize] += a / self.nodes[*x as usize].value,
-                Op::Log1p(x) => adj[*x as usize] += a / (1.0 + self.nodes[*x as usize].value),
-                Op::Sqrt(x) => adj[*x as usize] += a * 0.5 / node.value,
-                Op::Sigmoid(x) => adj[*x as usize] += a * node.value * (1.0 - node.value),
+                Op::Neg(x) => adj[x as usize] -= a,
+                Op::Exp(x) => adj[x as usize] += a * values[i],
+                Op::Ln(x) => adj[x as usize] += a / values[x as usize],
+                Op::Log1p(x) => adj[x as usize] += a / (1.0 + values[x as usize]),
+                Op::Sqrt(x) => adj[x as usize] += a * 0.5 / values[i],
+                Op::Sigmoid(x) => adj[x as usize] += a * values[i] * (1.0 - values[i]),
                 Op::Softplus(x) => {
-                    let xv = self.nodes[*x as usize].value;
+                    let xv = values[x as usize];
                     let s = if xv >= 0.0 {
                         1.0 / (1.0 + (-xv).exp())
                     } else {
                         let e = xv.exp();
                         e / (1.0 + e)
                     };
-                    adj[*x as usize] += a * s;
+                    adj[x as usize] += a * s;
                 }
-                Op::Tanh(x) => adj[*x as usize] += a * (1.0 - node.value * node.value),
+                Op::Tanh(x) => adj[x as usize] += a * (1.0 - values[i] * values[i]),
                 Op::Powi(x, n) => {
-                    let xv = self.nodes[*x as usize].value;
-                    adj[*x as usize] += a * (*n as f64) * xv.powi(n - 1);
+                    let xv = values[x as usize];
+                    adj[x as usize] += a * (n as f64) * xv.powi(n - 1);
                 }
-                Op::Scale(x, c) => adj[*x as usize] += a * c,
-                Op::Offset(x) => adj[*x as usize] += a,
-                Op::Composite { parents, partials } => {
-                    for (p, g) in parents.iter().zip(partials.iter()) {
-                        adj[*p as usize] += a * g;
+                Op::Scale(x, c) => adj[x as usize] += a * c,
+                Op::Offset(x) => adj[x as usize] += a,
+                Op::Composite { start, len } => {
+                    let (s, l) = (start as usize, len as usize);
+                    for k in s..s + l {
+                        adj[arena_parents[k] as usize] += a * arena_partials[k];
                     }
                 }
             }
         }
-        adj
+        &self.adj
     }
 }
 
@@ -323,8 +408,9 @@ mod tests {
         let mut t = Tape::new();
         let vars: Vec<Var> = x.iter().map(|&v| t.input(v)).collect();
         let out = build(&mut t, &vars);
+        let val = t.value(out);
         let adj = t.grad(out);
-        (t.value(out), vars.iter().map(|v| adj[v.0 as usize]).collect())
+        (val, vars.iter().map(|v| adj[v.0 as usize]).collect())
     }
 
     #[test]
@@ -399,5 +485,60 @@ mod tests {
         let (v, g) = grad_of(&[2.0], |t, v| t.powi(v[0], -2));
         assert!((v - 0.25).abs() < 1e-15);
         assert!((g[0] + 0.25).abs() < 1e-12);
+    }
+
+    fn build_mixed(t: &mut Tape, x: &[f64]) -> (Vec<Var>, Var) {
+        let vars: Vec<Var> = x.iter().map(|&v| t.input(v)).collect();
+        let lse = t.logsumexp(&vars);
+        let s = t.sum(&vars);
+        let d = t.dot_const(&vars, &[0.5, -1.5, 2.0]);
+        let m = t.mul(lse, s);
+        let out = t.add(m, d);
+        (vars, out)
+    }
+
+    #[test]
+    fn reset_matches_fresh_tape_bitwise() {
+        let x = [0.3, -1.2, 0.9];
+
+        let mut fresh = Tape::new();
+        let (fvars, fout) = build_mixed(&mut fresh, &x);
+        let fval = fresh.value(fout);
+        let fgrad: Vec<f64> = {
+            let adj = fresh.grad(fout);
+            fvars.iter().map(|v| adj[v.0 as usize]).collect()
+        };
+
+        let mut reused = Tape::new();
+        // pollute with an unrelated expression, then reset
+        let a = reused.input(9.0);
+        let b = reused.exp(a);
+        let c = reused.mul(a, b);
+        let _ = reused.grad(c);
+        reused.reset();
+
+        let (rvars, rout) = build_mixed(&mut reused, &x);
+        assert_eq!(reused.len(), fresh.len());
+        assert_eq!(reused.value(rout), fval);
+        let adj = reused.grad(rout);
+        let rgrad: Vec<f64> = rvars.iter().map(|v| adj[v.0 as usize]).collect();
+        assert_eq!(rgrad, fgrad);
+    }
+
+    #[test]
+    fn reset_keeps_capacity_watermark() {
+        let mut t = Tape::new();
+        let x = [0.1, 0.2, 0.3];
+        // establish the steady state with one evaluation
+        let (_, out) = build_mixed(&mut t, &x);
+        let _ = t.grad(out);
+        let (nodes, arena) = (t.node_capacity(), t.arena_capacity());
+        for _ in 0..10 {
+            t.reset();
+            let (_, out) = build_mixed(&mut t, &x);
+            let _ = t.grad(out);
+            assert_eq!(t.node_capacity(), nodes);
+            assert_eq!(t.arena_capacity(), arena);
+        }
     }
 }

@@ -89,7 +89,13 @@ pub fn run_chain<S: Sampler>(
     let mut step_size = opts.fixed_step_size.unwrap_or(opts.init_step_size);
     let mut welford = Welford::new(dim);
 
+    let total = opts.num_warmup + opts.num_samples;
     let mut stats = ChainStats::default();
+    stats.accept_prob.reserve(total);
+    stats.num_leapfrog.reserve(total);
+    stats.potential.reserve(total);
+    stats.diverging.reserve(total);
+    stats.depth.reserve(total);
     let mut samples = Vec::with_capacity(opts.num_samples * dim);
     let mut sample_leapfrogs: u64 = 0;
     let mut total_leapfrogs: u64 = 0;
@@ -98,9 +104,9 @@ pub fn run_chain<S: Sampler>(
     let t_warm = std::time::Instant::now();
     let mut warmup_secs = 0.0;
 
-    for i in 0..opts.num_warmup + opts.num_samples {
+    for i in 0..total {
         let tr = sampler.draw(&mut rng, &z, step_size, &inv_mass)?;
-        z = tr.z.clone();
+        z.copy_from_slice(&tr.z);
         total_leapfrogs += tr.num_leapfrog as u64;
         if tr.diverging {
             divergences += 1;
@@ -157,6 +163,20 @@ pub fn run_chain<S: Sampler>(
     })
 }
 
+/// Deterministic per-chain start: chain `c` draws its uniform(-2,2)
+/// initialization from the split stream `seed ^ (0xC0FFEE + c)` and
+/// samples with seed `seed + 1 + c`.  Shared by the sequential
+/// [`run_chains`] and the parallel
+/// [`crate::coordinator::ParallelChainRunner`], so the two produce
+/// bitwise-identical chains for the same options.
+pub fn chain_start(dim: usize, opts: &NutsOptions, c: usize) -> (Vec<f64>, NutsOptions) {
+    let mut init_rng = Rng::new(opts.seed ^ (0xC0FFEE + c as u64));
+    let init_z: Vec<f64> = (0..dim).map(|_| init_rng.uniform_in(-2.0, 2.0)).collect();
+    let mut o = opts.clone();
+    o.seed = opts.seed.wrapping_add(1 + c as u64);
+    (init_z, o)
+}
+
 /// Run several chains sequentially with derived seeds and random
 /// uniform(-2,2) initializations (NumPyro's init_to_uniform).
 pub fn run_chains<S: Sampler>(
@@ -167,10 +187,7 @@ pub fn run_chains<S: Sampler>(
     let dim = sampler.dim();
     let mut results = Vec::with_capacity(num_chains);
     for c in 0..num_chains {
-        let mut init_rng = Rng::new(opts.seed ^ (0xC0FFEE + c as u64));
-        let init_z: Vec<f64> = (0..dim).map(|_| init_rng.uniform_in(-2.0, 2.0)).collect();
-        let mut o = opts.clone();
-        o.seed = opts.seed.wrapping_add(1 + c as u64);
+        let (init_z, o) = chain_start(dim, opts, c);
         results.push(run_chain(sampler, &init_z, &o)?);
     }
     Ok(results)

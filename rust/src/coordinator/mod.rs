@@ -8,9 +8,11 @@
 //! (DESIGN.md §2).
 
 pub mod chain;
+pub mod parallel;
 pub mod sampler;
 pub mod warmup;
 
-pub use chain::{run_chain, run_chains, ChainResult, ChainStats, NutsOptions};
+pub use chain::{chain_start, run_chain, run_chains, ChainResult, ChainStats, NutsOptions};
+pub use parallel::{run_chains_parallel, ParallelChainRunner};
 pub use sampler::{FusedSampler, NativeSampler, Sampler, TreeAlgorithm};
 pub use warmup::WarmupSchedule;

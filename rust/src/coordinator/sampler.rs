@@ -98,10 +98,16 @@ impl Sampler for FusedSampler {
 
 /// Host-side tree building over any [`Potential`] (native autodiff =
 /// Stan architecture; PJRT potential = Pyro architecture).
+///
+/// For the iterative algorithm the sampler owns a persistent
+/// [`nuts_iterative::TreeWorkspace`], so its per-draw hot path is
+/// allocation-free (one proposal-vector allocation per draw to fill the
+/// returned [`Transition`]).
 pub struct NativeSampler<P: Potential> {
     pub potential: P,
     pub algorithm: TreeAlgorithm,
     pub max_tree_depth: u32,
+    workspace: Option<nuts_iterative::TreeWorkspace>,
 }
 
 impl<P: Potential> NativeSampler<P> {
@@ -110,6 +116,7 @@ impl<P: Potential> NativeSampler<P> {
             potential,
             algorithm,
             max_tree_depth,
+            workspace: None,
         }
     }
 }
@@ -135,14 +142,30 @@ impl<P: Potential> Sampler for NativeSampler<P> {
                 inv_mass,
                 self.max_tree_depth,
             ),
-            TreeAlgorithm::Iterative => nuts_iterative::draw(
-                &mut self.potential,
-                rng,
-                z,
-                step_size,
-                inv_mass,
-                self.max_tree_depth,
-            ),
+            TreeAlgorithm::Iterative => {
+                let dim = self.potential.dim();
+                let max_depth = self.max_tree_depth;
+                // recreate the workspace if it was sized for a smaller
+                // tree depth (max_tree_depth is a pub field) or another
+                // dimension
+                let stale = match &self.workspace {
+                    Some(w) => w.dim() != dim || w.max_depth() < max_depth,
+                    None => true,
+                };
+                if stale {
+                    self.workspace = Some(nuts_iterative::TreeWorkspace::new(dim, max_depth));
+                }
+                let ws = self.workspace.as_mut().expect("workspace just ensured");
+                nuts_iterative::draw_with(
+                    &mut self.potential,
+                    rng,
+                    ws,
+                    z,
+                    step_size,
+                    inv_mass,
+                    max_depth,
+                )
+            }
         })
     }
 

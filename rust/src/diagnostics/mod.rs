@@ -7,4 +7,4 @@ pub mod ess;
 pub mod summary;
 
 pub use ess::{effective_sample_size, split_rhat};
-pub use summary::{summarize, ParamSummary};
+pub use summary::{cross_chain_rhat, max_cross_chain_rhat, summarize, ParamSummary};

@@ -78,6 +78,30 @@ pub fn render_table(rows: &[ParamSummary]) -> String {
     out
 }
 
+/// Cross-chain split-R̂ per parameter over pooled multi-chain results:
+/// `chains[c]` is chain c's (draws x dim) row-major sample matrix (the
+/// layout of [`crate::coordinator::ChainResult::samples`]).
+pub fn cross_chain_rhat(chains: &[Vec<f64>], dim: usize) -> Vec<f64> {
+    (0..dim)
+        .map(|d| {
+            let per_chain: Vec<Vec<f64>> = chains
+                .iter()
+                .map(|c| c.chunks(dim).map(|row| row[d]).collect())
+                .collect();
+            split_rhat(&per_chain)
+        })
+        .collect()
+}
+
+/// Worst (largest) cross-chain split-R̂ across parameters — the single
+/// convergence number the bench harness and CLI report.
+pub fn max_cross_chain_rhat(chains: &[Vec<f64>], dim: usize) -> f64 {
+    cross_chain_rhat(chains, dim)
+        .into_iter()
+        .filter(|r| r.is_finite())
+        .fold(f64::NAN, f64::max)
+}
+
 /// Min ESS across parameters (the Fig 2b denominator).
 pub fn min_ess(rows: &[ParamSummary]) -> f64 {
     rows.iter().map(|r| r.ess).fold(f64::INFINITY, f64::min)
@@ -92,6 +116,27 @@ pub fn mean_ess(rows: &[ParamSummary]) -> f64 {
 mod tests {
     use super::*;
     use crate::rng::Rng;
+
+    #[test]
+    fn cross_chain_rhat_flags_disagreeing_chains() {
+        let mut rng = Rng::new(1);
+        let dim = 2;
+        let draws = 1000;
+        let mk = |rng: &mut Rng, shift: f64| -> Vec<f64> {
+            (0..draws)
+                .flat_map(|_| vec![rng.normal() + shift, rng.normal()])
+                .collect()
+        };
+        let good = [mk(&mut rng, 0.0), mk(&mut rng, 0.0), mk(&mut rng, 0.0)];
+        let rhats = cross_chain_rhat(&good, dim);
+        assert!(rhats.iter().all(|r| (r - 1.0).abs() < 0.02), "{rhats:?}");
+
+        let bad = [mk(&mut rng, 0.0), mk(&mut rng, 4.0)];
+        let rhats = cross_chain_rhat(&bad, dim);
+        assert!(rhats[0] > 1.5, "first param should diverge: {rhats:?}");
+        assert!((rhats[1] - 1.0).abs() < 0.05, "{rhats:?}");
+        assert!(max_cross_chain_rhat(&bad, dim) > 1.5);
+    }
 
     #[test]
     fn summary_of_known_gaussian() {

@@ -1,0 +1,487 @@
+//! `fugue bench` — the native-substrate performance baseline.
+//!
+//! Times the zero-allocation NUTS hot path on the three native models
+//! (logistic / HMM / SKIM) without needing artifacts or PJRT:
+//!
+//! 1. **ms per leapfrog** at a small fixed step size (full-depth trees,
+//!    so the measurement is dominated by `value_and_grad` + tree
+//!    bookkeeping, not by U-turn luck).  For the logistic model the
+//!    same run also times a faithful *pre-optimization baseline*
+//!    (fresh tape per gradient, separate sigmoid/softplus exps, serial
+//!    dot product, per-draw workspace allocation — the seed code), so
+//!    every future PR has a like-for-like speedup number.
+//! 2. **multi-chain scaling** 1..K chains through
+//!    [`ParallelChainRunner`], reporting wall-clock, draws/sec,
+//!    parallel efficiency and the cross-chain split-R̂ of the pooled
+//!    results, plus a bitwise reproducibility check (two identical
+//!    K-chain runs must agree exactly).
+//!
+//! Results are written as machine-readable JSON (`BENCH_native.json` at
+//! the repo root by default) so the perf trajectory is diffable across
+//! PRs.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::autodiff::{Tape, Var};
+use crate::config::Settings;
+use crate::coordinator::{
+    run_chain, ChainResult, NativeSampler, NutsOptions, ParallelChainRunner, Sampler,
+    TreeAlgorithm,
+};
+use crate::data;
+use crate::diagnostics::summary::max_cross_chain_rhat;
+use crate::mcmc::{nuts_iterative, Potential, Transition};
+use crate::models::skim::SkimHypers;
+use crate::models::{HmmNative, LogisticNative, SkimNative};
+use crate::ppl::special::{sigmoid, softplus, LN_2PI};
+use crate::rng::Rng;
+use crate::util::json::Json;
+
+/// Tree-depth cap for the fixed-eps timing runs: a small step size then
+/// yields full 2^depth-leaf trees, so leapfrog counts are stable.
+const TIMING_DEPTH: u32 = 6;
+
+// ---------------------------------------------------------------------------
+// pre-optimization baseline (seed replica)
+// ---------------------------------------------------------------------------
+
+/// The seed's logistic potential, kept verbatim as the measured
+/// baseline: a fresh tape + fresh `Vec`s every evaluation, a dead
+/// `z_buf` write, separate sigmoid/softplus (two `exp`s per row) and a
+/// serial dot product.
+struct BaselineLogistic {
+    x: Vec<f64>,
+    y: Vec<f64>,
+    n: usize,
+    d: usize,
+    z_buf: Vec<f64>,
+    evals: u64,
+}
+
+impl BaselineLogistic {
+    fn new(x: Vec<f64>, y: Vec<f64>, n: usize, d: usize) -> Self {
+        BaselineLogistic {
+            x,
+            y,
+            n,
+            d,
+            z_buf: vec![0.0; n],
+            evals: 0,
+        }
+    }
+}
+
+impl Potential for BaselineLogistic {
+    fn dim(&self) -> usize {
+        self.d + 1
+    }
+
+    fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+        self.evals += 1;
+        let d = self.d;
+        let b_val = z[0];
+        let m_vals = &z[1..];
+
+        let mut t = Tape::new();
+        let b = t.input(b_val);
+        let m: Vec<Var> = m_vals.iter().map(|&v| t.input(v)).collect();
+
+        let mut prior_terms = Vec::with_capacity(d + 1);
+        for &v in std::iter::once(&b).chain(m.iter()) {
+            let sq = t.square(v);
+            let half = t.scale(sq, -0.5);
+            prior_terms.push(t.offset(half, -0.5 * LN_2PI));
+        }
+        let log_prior = t.sum(&prior_terms);
+
+        let mut partials = vec![0.0; d + 1];
+        let mut value = 0.0;
+        for i in 0..self.n {
+            let xi = &self.x[i * d..(i + 1) * d];
+            let mut zl = b_val;
+            for j in 0..d {
+                zl += xi[j] * m_vals[j];
+            }
+            self.z_buf[i] = zl; // the seed's dead write
+            value += self.y[i] * zl - softplus(zl);
+            let r = self.y[i] - sigmoid(zl);
+            for j in 0..d {
+                partials[j] += r * xi[j];
+            }
+            partials[d] += r;
+        }
+        let mut parents: Vec<Var> = m.clone();
+        parents.push(b);
+        let log_lik = t.composite(&parents, &partials, value);
+
+        let logp = t.add(log_prior, log_lik);
+        let u = t.neg(logp);
+        let uval = t.value(u);
+        let adj = t.grad(u);
+        grad[0] = adj[b.0 as usize];
+        for j in 0..d {
+            grad[1 + j] = adj[m[j].0 as usize];
+        }
+        uval
+    }
+
+    fn num_evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+/// Seed-style iterative sampler: a fresh tree workspace allocated every
+/// draw (the pre-optimization behaviour of `nuts_iterative::draw`).
+struct AllocatingIterativeSampler<P: Potential> {
+    potential: P,
+    max_tree_depth: u32,
+}
+
+impl<P: Potential> Sampler for AllocatingIterativeSampler<P> {
+    fn dim(&self) -> usize {
+        self.potential.dim()
+    }
+
+    fn draw(
+        &mut self,
+        rng: &mut Rng,
+        z: &[f64],
+        step_size: f64,
+        inv_mass: &[f64],
+    ) -> Result<Transition> {
+        Ok(nuts_iterative::draw(
+            &mut self.potential,
+            rng,
+            z,
+            step_size,
+            inv_mass,
+            self.max_tree_depth,
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// measurement helpers
+// ---------------------------------------------------------------------------
+
+/// Fixed-eps, unit-mass, no-warmup run; returns (ms/leapfrog, leapfrogs).
+fn time_fixed_eps<S: Sampler>(
+    sampler: &mut S,
+    eps: f64,
+    draws: usize,
+    seed: u64,
+) -> Result<(f64, u64)> {
+    let dim = sampler.dim();
+    let opts = NutsOptions {
+        num_warmup: 0,
+        num_samples: draws,
+        target_accept: 0.8,
+        init_step_size: eps,
+        fixed_step_size: Some(eps),
+        adapt_mass: false,
+        seed,
+    };
+    let init = vec![0.1; dim];
+    let res = run_chain(sampler, &init, &opts)?;
+    Ok((res.ms_per_leapfrog(), res.sample_leapfrogs))
+}
+
+fn run_parallel<F>(
+    make_pot: &F,
+    chains: usize,
+    max_depth: u32,
+    opts: &NutsOptions,
+) -> Result<(Vec<ChainResult>, f64)>
+where
+    F: Fn() -> Box<dyn Potential> + Sync,
+{
+    let factory =
+        |_c: usize| Ok(NativeSampler::new(make_pot(), TreeAlgorithm::Iterative, max_depth));
+    let t0 = std::time::Instant::now();
+    let results = ParallelChainRunner::new(chains).run(factory, opts)?;
+    Ok((results, t0.elapsed().as_secs_f64()))
+}
+
+fn jnum(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn jobj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<String, Json>>(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// per-model bench
+// ---------------------------------------------------------------------------
+
+struct ModelBench {
+    json: Json,
+    text: String,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bench_model<F>(
+    name: &str,
+    meta: Vec<(&str, Json)>,
+    make_pot: F,
+    eps: f64,
+    timing_draws: usize,
+    chain_counts: &[usize],
+    settings: &Settings,
+    baseline_ms: Option<f64>,
+    chain_budget: (usize, usize),
+    chain_depth: u32,
+) -> Result<ModelBench>
+where
+    F: Fn() -> Box<dyn Potential> + Sync,
+{
+    let dim = make_pot().dim();
+    let mut text = String::new();
+    text.push_str(&format!("== {name} (dim {dim}) ==\n"));
+
+    // 1. ms per leapfrog, optimized hot path
+    let mut sampler = NativeSampler::new(make_pot(), TreeAlgorithm::Iterative, TIMING_DEPTH);
+    let (ms_opt, leapfrogs) = time_fixed_eps(&mut sampler, eps, timing_draws, settings.seed)?;
+    text.push_str(&format!(
+        "  optimized: {ms_opt:.5} ms/leapfrog ({leapfrogs} leapfrogs @ eps={eps})\n"
+    ));
+    let mut fields: Vec<(&str, Json)> = meta;
+    fields.push(("dim", jnum(dim as f64)));
+    fields.push(("eps", jnum(eps)));
+    fields.push(("timing_leapfrogs", jnum(leapfrogs as f64)));
+    fields.push(("ms_per_leapfrog", jnum(ms_opt)));
+    if let Some(base) = baseline_ms {
+        let speedup = base / ms_opt;
+        text.push_str(&format!(
+            "  baseline (seed replica): {base:.5} ms/leapfrog -> speedup {speedup:.2}x\n"
+        ));
+        fields.push(("baseline_ms_per_leapfrog", jnum(base)));
+        fields.push(("speedup_vs_baseline", jnum(speedup)));
+    }
+
+    // 2. multi-chain scaling with adaptation on
+    let (warmup, samples) = settings.budget(chain_budget.0, chain_budget.1);
+    let opts = NutsOptions {
+        num_warmup: warmup,
+        num_samples: samples,
+        seed: settings.seed,
+        ..Default::default()
+    };
+    let mut chain_json: Vec<Json> = Vec::new();
+    let mut last_results: Option<Vec<ChainResult>> = None;
+    let mut first_wall: Option<f64> = None;
+    let mut last_wall = 0.0;
+    for &k in chain_counts {
+        let (results, wall_s) = run_parallel(&make_pot, k, chain_depth, &opts)?;
+        let pooled: Vec<Vec<f64>> = results.iter().map(|r| r.samples.clone()).collect();
+        let max_rhat = if k > 1 {
+            max_cross_chain_rhat(&pooled, dim)
+        } else {
+            f64::NAN
+        };
+        // wall_s spans warmup + sampling, so count every draw
+        let draws_per_sec = (k * (warmup + samples)) as f64 / wall_s.max(1e-12);
+        text.push_str(&format!(
+            "  {k} chain(s): {wall_s:.3}s wall, {draws_per_sec:.0} draws/s{}\n",
+            if max_rhat.is_finite() {
+                format!(", max split-Rhat {max_rhat:.3}")
+            } else {
+                String::new()
+            }
+        ));
+        let mut cj = vec![
+            ("chains", jnum(k as f64)),
+            ("wall_s", jnum(wall_s)),
+            ("draws_per_sec", jnum(draws_per_sec)),
+        ];
+        if max_rhat.is_finite() {
+            cj.push(("max_split_rhat", jnum(max_rhat)));
+        }
+        chain_json.push(jobj(cj));
+        first_wall.get_or_insert(wall_s);
+        last_wall = wall_s;
+        if k == *chain_counts.last().unwrap() {
+            last_results = Some(results);
+        }
+    }
+
+    // parallel efficiency: K-chain wall vs 1-chain wall
+    let max_k = *chain_counts.last().unwrap();
+    if let Some(one) = first_wall {
+        if max_k > chain_counts[0] {
+            let ratio = last_wall / one;
+            text.push_str(&format!(
+                "  {max_k}-chain wall-clock = {ratio:.2}x single-chain (ideal 1.0)\n"
+            ));
+            fields.push(("wall_ratio_max_chains_vs_1", jnum(ratio)));
+        }
+    }
+
+    // 3. bitwise reproducibility of the parallel runner
+    let (rerun, _) = run_parallel(&make_pot, max_k, chain_depth, &opts)?;
+    let reproducible = match &last_results {
+        Some(prev) => prev
+            .iter()
+            .zip(&rerun)
+            .all(|(a, b)| a.samples == b.samples && a.step_size == b.step_size),
+        None => false,
+    };
+    text.push_str(&format!(
+        "  reproducible across reruns: {reproducible}\n"
+    ));
+    fields.push(("reproducible", Json::Bool(reproducible)));
+    fields.push(("chains", Json::Arr(chain_json)));
+
+    Ok(ModelBench {
+        json: jobj(fields),
+        text,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// entry point
+// ---------------------------------------------------------------------------
+
+/// Run the native bench suite and write `out_path` (JSON).  Returns the
+/// human-readable report.
+pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<String> {
+    let mut report = String::new();
+    report.push_str("fugue bench — native NUTS hot path (no artifacts needed)\n\n");
+
+    let timing_draws = if settings.quick { 12 } else { 40 };
+    let mut chain_counts: Vec<usize> = vec![1, 2, 4]
+        .into_iter()
+        .filter(|&k| k <= max_chains)
+        .collect();
+    if chain_counts.last() != Some(&max_chains) {
+        chain_counts.push(max_chains);
+    }
+
+    let mut models = BTreeMap::new();
+
+    // --- logistic (the acceptance workload: n=5000, d=16) ---
+    {
+        let (n, d) = if settings.quick { (2000, 16) } else { (5000, 16) };
+        let dset = data::make_covtype_like(settings.seed, n, d);
+        let (x, y) = (dset.x, dset.y);
+
+        // pre-optimization baseline, measured in this same run
+        let mut base_sampler = AllocatingIterativeSampler {
+            potential: BaselineLogistic::new(x.clone(), y.clone(), n, d),
+            max_tree_depth: TIMING_DEPTH,
+        };
+        let (base_ms, _) = time_fixed_eps(&mut base_sampler, 1e-3, timing_draws, settings.seed)?;
+
+        let make = move || -> Box<dyn Potential> {
+            Box::new(LogisticNative::new(x.clone(), y.clone(), n, d))
+        };
+        let bench = bench_model(
+            "logistic",
+            vec![("n", jnum(n as f64)), ("d", jnum(d as f64))],
+            make,
+            1e-3,
+            timing_draws,
+            &chain_counts,
+            settings,
+            Some(base_ms),
+            (150, 300),
+            10,
+        )?;
+        report.push_str(&bench.text);
+        report.push('\n');
+        models.insert("logistic".to_string(), bench.json);
+    }
+
+    // --- hmm (T=600, 100 supervised, K=3, V=10) ---
+    {
+        let (t_len, t_sup) = if settings.quick { (200, 40) } else { (600, 100) };
+        let dset = data::make_hmm(settings.seed, t_len, t_sup, 3, 10);
+        let (obs, sup) = (dset.obs, dset.sup_states);
+        let make = move || -> Box<dyn Potential> {
+            Box::new(HmmNative::new(obs.clone(), sup.clone(), 3, 10))
+        };
+        let bench = bench_model(
+            "hmm",
+            vec![("seq_len", jnum(t_len as f64)), ("num_supervised", jnum(t_sup as f64))],
+            make,
+            1e-2,
+            timing_draws,
+            &chain_counts,
+            settings,
+            None,
+            (150, 300),
+            10,
+        )?;
+        report.push_str(&bench.text);
+        report.push('\n');
+        models.insert("hmm".to_string(), bench.json);
+    }
+
+    // --- skim (kept small: the marginal is O(n^3) per gradient) ---
+    {
+        let (n, p) = if settings.quick { (30, 6) } else { (50, 10) };
+        let dset = data::make_skim(settings.seed, n, p, 2);
+        let (x, y) = (dset.x, dset.y);
+        let make = move || -> Box<dyn Potential> {
+            Box::new(SkimNative::new(x.clone(), y.clone(), n, p, SkimHypers::default()))
+        };
+        let bench = bench_model(
+            "skim",
+            vec![("n", jnum(n as f64)), ("p", jnum(p as f64))],
+            make,
+            5e-3,
+            timing_draws,
+            &chain_counts,
+            settings,
+            None,
+            (80, 120),
+            7,
+        )?;
+        report.push_str(&bench.text);
+        report.push('\n');
+        models.insert("skim".to_string(), bench.json);
+    }
+
+    let root = Json::Obj(
+        [
+            ("schema".to_string(), Json::Str("fugue-bench-native/v1".to_string())),
+            ("seed".to_string(), jnum(settings.seed as f64)),
+            ("quick".to_string(), Json::Bool(settings.quick)),
+            ("max_chains".to_string(), jnum(max_chains as f64)),
+            ("models".to_string(), Json::Obj(models)),
+        ]
+        .into_iter()
+        .collect::<BTreeMap<String, Json>>(),
+    );
+    std::fs::write(out_path, root.to_string_pretty())?;
+    report.push_str(&format!("[saved {out_path}]\n"));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_logistic_matches_optimized_density() {
+        let dset = data::make_covtype_like(3, 60, 4);
+        let mut base = BaselineLogistic::new(dset.x.clone(), dset.y.clone(), 60, 4);
+        let mut opt = LogisticNative::new(dset.x, dset.y, 60, 4);
+        let z = [0.2, -0.4, 0.7, 0.05, -0.3];
+        let mut gb = vec![0.0; 5];
+        let mut go = vec![0.0; 5];
+        let ub = base.value_and_grad(&z, &mut gb);
+        let uo = opt.value_and_grad(&z, &mut go);
+        assert!((ub - uo).abs() < 1e-9 * (1.0 + ub.abs()), "{ub} vs {uo}");
+        for i in 0..5 {
+            assert!((gb[i] - go[i]).abs() < 1e-9 * (1.0 + gb[i].abs()));
+        }
+    }
+}

@@ -26,6 +26,11 @@ fugue — composable effects + end-to-end-compiled iterative NUTS (paper reprodu
 USAGE: fugue <subcommand> [flags]
 
 SUBCOMMANDS
+  bench                     native NUTS perf baseline: ms/leapfrog (optimized vs
+                            seed baseline) + parallel multi-chain scaling; writes
+                            machine-readable BENCH_native.json (--out FILE,
+                            --chains K for the max chain count, --quick).
+                            Needs no artifacts and no pjrt feature.
   info                      list models/artifacts in the manifest
   run                       sample a model and print posterior summary
                             (--model NAME --backend fused|stepwise|native
@@ -48,6 +53,10 @@ FLAGS
   --seed N          base RNG seed
   --quick           ~10x smaller workloads (CI/smoke)
   --full            paper-scale workloads
+
+The default build stubs out the PJRT runtime; `bench` and `diagnose`
+work everywhere, the artifact-backed subcommands need `--features pjrt`
+plus `make artifacts`.
 ";
 
 fn cmd_info(engine: &Engine) -> Result<()> {
@@ -279,15 +288,36 @@ fn main() -> Result<()> {
     }
     let settings = Settings::from_args(&args)?;
     let sub = args.subcommand()?;
+    // `bench` and `diagnose` are native-only: no artifact manifest, no
+    // PJRT engine — they must work on a fresh clone with the default
+    // (stub) feature set.
+    match sub {
+        "bench" => return cmd_bench(&args, &settings),
+        "diagnose" => return cmd_diagnose(&args, &settings),
+        _ => {}
+    }
     let engine = Engine::new(&settings.artifacts_dir)?;
     match sub {
         "info" => cmd_info(&engine),
         "run" => cmd_run(&engine, &args, &settings),
         "experiment" => cmd_experiment(&engine, &args, &settings),
         "artifacts-check" => cmd_artifacts_check(&engine, &settings),
-        "diagnose" => cmd_diagnose(&args, &settings),
         other => bail!("unknown subcommand '{other}'; run `fugue help`"),
     }
+}
+
+/// `fugue bench [--chains K] [--out FILE] [--quick]` — time the native
+/// hot path and the parallel chain runner; emit BENCH_native.json.
+fn cmd_bench(args: &Args, settings: &Settings) -> Result<()> {
+    // honor an explicit --chains exactly; default to a 4-chain sweep
+    let max_chains = match args.get_usize("chains")? {
+        Some(k) => k.max(1),
+        None => 4,
+    };
+    let out = args.get("out").unwrap_or("BENCH_native.json");
+    let report = fugue::harness::bench_native::run(settings, max_chains, out)?;
+    print!("{report}");
+    Ok(())
 }
 
 /// `fugue diagnose <posterior.npy> [--chains K]` — summaries + ESS/R-hat

@@ -37,6 +37,20 @@ pub trait Potential {
     }
 }
 
+impl Potential for Box<dyn Potential> {
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+
+    fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+        (**self).value_and_grad(z, grad)
+    }
+
+    fn num_evals(&self) -> u64 {
+        (**self).num_evals()
+    }
+}
+
 /// Position + momentum + cached potential/gradient.
 #[derive(Debug, Clone)]
 pub struct PhaseState {
@@ -47,6 +61,24 @@ pub struct PhaseState {
 }
 
 impl PhaseState {
+    /// Zero-initialized state of dimension `dim` (workspace slot).
+    pub fn zeros(dim: usize) -> PhaseState {
+        PhaseState {
+            z: vec![0.0; dim],
+            r: vec![0.0; dim],
+            potential: 0.0,
+            grad: vec![0.0; dim],
+        }
+    }
+
+    /// Allocation-free copy (the derived `clone_from` would reallocate).
+    pub fn copy_from(&mut self, other: &PhaseState) {
+        self.z.copy_from_slice(&other.z);
+        self.r.copy_from_slice(&other.r);
+        self.grad.copy_from_slice(&other.grad);
+        self.potential = other.potential;
+    }
+
     pub fn energy(&self, inv_mass: &[f64]) -> f64 {
         self.potential + kinetic(&self.r, inv_mass)
     }
@@ -90,6 +122,30 @@ pub fn leapfrog<P: Potential + ?Sized>(
     }
 }
 
+/// In-place velocity-Verlet step with signed step size: the
+/// allocation-free hot-path variant of [`leapfrog`].  Updates momentum,
+/// position, cached gradient and potential of `s` without touching the
+/// heap — the same arithmetic, in the same order, as [`leapfrog`], so
+/// the two produce bitwise-identical trajectories.
+pub fn leapfrog_inplace<P: Potential + ?Sized>(
+    pot: &mut P,
+    s: &mut PhaseState,
+    eps: f64,
+    inv_mass: &[f64],
+) {
+    let dim = s.z.len();
+    for i in 0..dim {
+        s.r[i] -= 0.5 * eps * s.grad[i];
+    }
+    for i in 0..dim {
+        s.z[i] += eps * inv_mass[i] * s.r[i];
+    }
+    s.potential = pot.value_and_grad(&s.z, &mut s.grad);
+    for i in 0..dim {
+        s.r[i] -= 0.5 * eps * s.grad[i];
+    }
+}
+
 /// Hoffman-Gelman U-turn criterion across a chord (in trajectory order).
 pub fn is_u_turn(
     z_left: &[f64],
@@ -115,6 +171,18 @@ pub const MAX_DELTA_ENERGY: f64 = 1000.0;
 #[derive(Debug, Clone)]
 pub struct Transition {
     pub z: Vec<f64>,
+    pub accept_prob: f64,
+    pub num_leapfrog: u32,
+    pub potential: f64,
+    pub diverging: bool,
+    pub depth: u32,
+}
+
+/// [`Transition`] minus the proposal vector: the `Copy` result of the
+/// zero-allocation draw path ([`nuts_iterative::draw_in_workspace`]),
+/// whose proposal stays in the caller's workspace buffer.
+#[derive(Debug, Clone, Copy)]
+pub struct DrawStats {
     pub accept_prob: f64,
     pub num_leapfrog: u32,
     pub potential: f64,
@@ -182,6 +250,31 @@ mod tests {
             s = leapfrog(&mut pot, &s, 0.01, &inv_mass);
         }
         assert!((s.energy(&inv_mass) - e0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn leapfrog_inplace_matches_allocating_leapfrog() {
+        let mut pot = Quadratic;
+        let mut grad = vec![0.0; 2];
+        let z = vec![0.8, -1.1];
+        let u = pot.value_and_grad(&z, &mut grad);
+        let s0 = PhaseState {
+            z,
+            r: vec![0.4, -0.2],
+            potential: u,
+            grad,
+        };
+        let inv_mass = [0.9, 1.3];
+        let mut inplace = s0.clone();
+        let mut reference = s0;
+        for _ in 0..50 {
+            reference = leapfrog(&mut pot, &reference, 0.05, &inv_mass);
+            leapfrog_inplace(&mut pot, &mut inplace, 0.05, &inv_mass);
+            assert_eq!(inplace.z, reference.z);
+            assert_eq!(inplace.r, reference.r);
+            assert_eq!(inplace.grad, reference.grad);
+            assert_eq!(inplace.potential, reference.potential);
+        }
     }
 
     #[test]

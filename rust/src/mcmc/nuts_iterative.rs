@@ -10,13 +10,20 @@
 //! model (compiled native code, no per-leapfrog dispatch); the contrast
 //! with [`super::nuts_recursive`] isolates the iterative-formulation
 //! overhead that the paper reports as "insignificant" (E8).
+//!
+//! All per-draw scratch — the `S[BitCount(n)]` slot arrays, the
+//! integration state, the subtree/draw proposal buffers and the
+//! trajectory endpoints — lives in a [`TreeWorkspace`] that the caller
+//! reuses across draws, so a steady-state draw through
+//! [`draw_in_workspace`] performs **zero heap allocations** (the
+//! gradient evaluations are allocation-free too once the native
+//! potentials' tapes have warmed up).
 
 use crate::mcmc::{
-    is_u_turn, kinetic, leapfrog, PhaseState, Potential, Transition, MAX_DELTA_ENERGY,
+    is_u_turn, kinetic, leapfrog_inplace, DrawStats, PhaseState, Potential, Transition,
+    MAX_DELTA_ENERGY,
 };
 use crate::rng::Rng;
-
-use super::nuts_recursive::Subtree;
 
 #[inline]
 pub fn bit_count(n: u32) -> u32 {
@@ -36,27 +43,87 @@ pub fn candidate_range(n: u32) -> (u32, u32) {
     (i_min, i_max)
 }
 
-/// Build 2^depth leaves iteratively from `edge` (Algorithm 2), with
-/// early exit on U-turn / divergence.
-fn build_subtree<P: Potential + ?Sized>(
+/// Reusable per-draw storage for the iterative tree builder.  Create it
+/// once per (chain, model) with the target dimension and the *maximum*
+/// tree depth you will ever pass to [`draw_in_workspace`].
+pub struct TreeWorkspace {
+    dim: usize,
+    max_depth: u32,
+    /// S[i] stores the even node with BitCount == i: positions
+    s_z: Vec<f64>,
+    /// ... and momenta
+    s_r: Vec<f64>,
+    /// current integration state (the subtree's `last` after a build)
+    state: PhaseState,
+    /// proposal within the current subtree
+    sub_z_prop: Vec<f64>,
+    /// trajectory endpoints for the outer doubling loop
+    left: PhaseState,
+    right: PhaseState,
+    /// draw-level proposal (the result of [`draw_in_workspace`])
+    z_prop: Vec<f64>,
+}
+
+impl TreeWorkspace {
+    pub fn new(dim: usize, max_depth: u32) -> TreeWorkspace {
+        let slots = max_depth.max(1) as usize;
+        TreeWorkspace {
+            dim,
+            max_depth,
+            s_z: vec![0.0; slots * dim],
+            s_r: vec![0.0; slots * dim],
+            state: PhaseState::zeros(dim),
+            sub_z_prop: vec![0.0; dim],
+            left: PhaseState::zeros(dim),
+            right: PhaseState::zeros(dim),
+            z_prop: vec![0.0; dim],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn max_depth(&self) -> u32 {
+        self.max_depth
+    }
+
+    /// The proposal left behind by the last [`draw_in_workspace`] call.
+    pub fn proposal(&self) -> &[f64] {
+        &self.z_prop
+    }
+}
+
+/// Subtree summary of the iterative builder (proposal lives in
+/// `ws.sub_z_prop`, the `last` state in `ws.state`).
+#[derive(Debug, Clone, Copy)]
+struct SubtreeStats {
+    u_prop: f64,
+    /// log sum of exp(-H) over leaves
+    weight: f64,
+    turning: bool,
+    diverging: bool,
+    sum_accept: f64,
+    n_leapfrog: u32,
+}
+
+/// Build 2^depth leaves iteratively (Algorithm 2) starting from the
+/// edge state the caller placed in `ws.state`, with early exit on
+/// U-turn / divergence.  On return `ws.state` is the subtree's last
+/// state and `ws.sub_z_prop` its multinomial proposal.
+fn build_subtree_ws<P: Potential + ?Sized>(
     pot: &mut P,
     rng: &mut Rng,
-    edge: &PhaseState,
+    ws: &mut TreeWorkspace,
     depth: u32,
     eps: f64,
     inv_mass: &[f64],
     energy_0: f64,
-    max_depth: u32,
-) -> Subtree {
-    let dim = edge.z.len();
+) -> SubtreeStats {
+    let dim = ws.dim;
     let num_leaves: u32 = 1 << depth;
-    // S[i] stores the even node with BitCount == i (positions + momenta)
-    let slots = max_depth.max(1) as usize;
-    let mut s_z = vec![0.0f64; slots * dim];
-    let mut s_r = vec![0.0f64; slots * dim];
 
-    let mut state = edge.clone();
-    let mut z_prop: Vec<f64> = edge.z.clone();
+    ws.sub_z_prop.copy_from_slice(&ws.state.z);
     let mut u_prop = f64::INFINITY;
     let mut weight = f64::NEG_INFINITY;
     let mut sum_accept = 0.0;
@@ -65,8 +132,8 @@ fn build_subtree<P: Potential + ?Sized>(
     let mut n: u32 = 0;
 
     while n < num_leaves && !turning && !diverging {
-        state = leapfrog(pot, &state, eps, inv_mass);
-        let mut energy = state.potential + kinetic(&state.r, inv_mass);
+        leapfrog_inplace(pot, &mut ws.state, eps, inv_mass);
+        let mut energy = ws.state.potential + kinetic(&ws.state.r, inv_mass);
         if energy.is_nan() {
             energy = f64::INFINITY;
         }
@@ -78,26 +145,26 @@ fn build_subtree<P: Potential + ?Sized>(
         let leaf_w = -energy;
         let new_weight = log_add_exp(weight, leaf_w);
         if rng.uniform().ln() < leaf_w - new_weight {
-            z_prop.copy_from_slice(&state.z);
-            u_prop = state.potential;
+            ws.sub_z_prop.copy_from_slice(&ws.state.z);
+            u_prop = ws.state.potential;
         }
         weight = new_weight;
 
         if n % 2 == 0 {
             let i = bit_count(n) as usize;
-            s_z[i * dim..(i + 1) * dim].copy_from_slice(&state.z);
-            s_r[i * dim..(i + 1) * dim].copy_from_slice(&state.r);
+            ws.s_z[i * dim..(i + 1) * dim].copy_from_slice(&ws.state.z);
+            ws.s_r[i * dim..(i + 1) * dim].copy_from_slice(&ws.state.r);
         } else {
             let (i_min, i_max) = candidate_range(n);
             for k in i_min..=i_max {
                 let k = k as usize;
-                let cand_z = &s_z[k * dim..(k + 1) * dim];
-                let cand_r = &s_r[k * dim..(k + 1) * dim];
+                let cand_z = &ws.s_z[k * dim..(k + 1) * dim];
+                let cand_r = &ws.s_r[k * dim..(k + 1) * dim];
                 // candidate precedes `state` in integration order
                 let t = if eps > 0.0 {
-                    is_u_turn(cand_z, &state.z, cand_r, &state.r, inv_mass)
+                    is_u_turn(cand_z, &ws.state.z, cand_r, &ws.state.r, inv_mass)
                 } else {
-                    is_u_turn(&state.z, cand_z, &state.r, cand_r, inv_mass)
+                    is_u_turn(&ws.state.z, cand_z, &ws.state.r, cand_r, inv_mass)
                 };
                 if t {
                     turning = true;
@@ -108,9 +175,7 @@ fn build_subtree<P: Potential + ?Sized>(
         n += 1;
     }
 
-    Subtree {
-        last: state,
-        z_prop,
+    SubtreeStats {
         u_prop,
         weight,
         turning,
@@ -128,35 +193,39 @@ fn log_add_exp(a: f64, b: f64) -> f64 {
     m + ((a - m).exp() + (b - m).exp()).ln()
 }
 
-/// One NUTS transition using the iterative tree builder.  The outer
-/// doubling loop is the same biased-progressive scheme as the recursive
-/// version; only the subtree construction differs.
-pub fn draw<P: Potential + ?Sized>(
+/// One NUTS transition with **zero heap allocations**: every buffer
+/// comes from `ws`, and the proposal is left in `ws.z_prop` (read it
+/// via [`TreeWorkspace::proposal`]).  The outer doubling loop is the
+/// same biased-progressive scheme as the recursive version; only the
+/// subtree construction differs.
+pub fn draw_in_workspace<P: Potential + ?Sized>(
     pot: &mut P,
     rng: &mut Rng,
+    ws: &mut TreeWorkspace,
     z0: &[f64],
     step_size: f64,
     inv_mass: &[f64],
     max_depth: u32,
-) -> Transition {
+) -> DrawStats {
     let dim = z0.len();
-    let mut grad = vec![0.0; dim];
-    let potential_0 = pot.value_and_grad(z0, &mut grad);
-    let mut r0 = vec![0.0; dim];
-    for i in 0..dim {
-        r0[i] = rng.normal() / inv_mass[i].sqrt();
-    }
-    let init = PhaseState {
-        z: z0.to_vec(),
-        r: r0,
-        potential: potential_0,
-        grad,
-    };
-    let energy_0 = init.energy(inv_mass);
+    assert_eq!(dim, ws.dim, "workspace dimension mismatch");
+    assert!(
+        max_depth <= ws.max_depth,
+        "workspace sized for max_depth {} < {}",
+        ws.max_depth,
+        max_depth
+    );
 
-    let mut left = init.clone();
-    let mut right = init;
-    let mut z_prop = z0.to_vec();
+    ws.left.z.copy_from_slice(z0);
+    ws.left.potential = pot.value_and_grad(z0, &mut ws.left.grad);
+    for i in 0..dim {
+        ws.left.r[i] = rng.normal() / inv_mass[i].sqrt();
+    }
+    ws.right.copy_from(&ws.left);
+    let energy_0 = ws.left.energy(inv_mass);
+    let potential_0 = ws.left.potential;
+
+    ws.z_prop.copy_from_slice(z0);
     let mut u_prop = potential_0;
     let mut weight = -energy_0;
     let mut sum_accept = 0.0;
@@ -167,23 +236,25 @@ pub fn draw<P: Potential + ?Sized>(
     while depth < max_depth {
         let going_right = rng.bernoulli(0.5);
         let eps = if going_right { step_size } else { -step_size };
-        let edge = if going_right { &right } else { &left };
-        let sub = build_subtree(
-            pot, rng, edge, depth, eps, inv_mass, energy_0, max_depth,
-        );
+        if going_right {
+            ws.state.copy_from(&ws.right);
+        } else {
+            ws.state.copy_from(&ws.left);
+        }
+        let sub = build_subtree_ws(pot, rng, ws, depth, eps, inv_mass, energy_0);
         sum_accept += sub.sum_accept;
         n_leapfrog += sub.n_leapfrog;
         let complete = !sub.turning && !sub.diverging;
         diverging = sub.diverging;
 
         if going_right {
-            right = sub.last.clone();
+            ws.right.copy_from(&ws.state);
         } else {
-            left = sub.last.clone();
+            ws.left.copy_from(&ws.state);
         }
         if complete {
             if rng.uniform().ln() < sub.weight - weight {
-                z_prop = sub.z_prop;
+                ws.z_prop.copy_from_slice(&ws.sub_z_prop);
                 u_prop = sub.u_prop;
             }
             weight = log_add_exp(weight, sub.weight);
@@ -191,13 +262,12 @@ pub fn draw<P: Potential + ?Sized>(
             break;
         }
         depth += 1;
-        if is_u_turn(&left.z, &right.z, &left.r, &right.r, inv_mass) {
+        if is_u_turn(&ws.left.z, &ws.right.z, &ws.left.r, &ws.right.r, inv_mass) {
             break;
         }
     }
 
-    Transition {
-        z: z_prop,
+    DrawStats {
         accept_prob: sum_accept / (n_leapfrog.max(1) as f64),
         num_leapfrog: n_leapfrog,
         potential: u_prop,
@@ -206,9 +276,47 @@ pub fn draw<P: Potential + ?Sized>(
     }
 }
 
+/// [`draw_in_workspace`] packaged as a [`Transition`] (one proposal-
+/// vector allocation per draw — everything else reuses `ws`).
+pub fn draw_with<P: Potential + ?Sized>(
+    pot: &mut P,
+    rng: &mut Rng,
+    ws: &mut TreeWorkspace,
+    z0: &[f64],
+    step_size: f64,
+    inv_mass: &[f64],
+    max_depth: u32,
+) -> Transition {
+    let stats = draw_in_workspace(pot, rng, ws, z0, step_size, inv_mass, max_depth);
+    Transition {
+        z: ws.z_prop.clone(),
+        accept_prob: stats.accept_prob,
+        num_leapfrog: stats.num_leapfrog,
+        potential: stats.potential,
+        diverging: stats.diverging,
+        depth: stats.depth,
+    }
+}
+
+/// One NUTS transition with a throwaway workspace (compatibility entry
+/// point; persistent callers should hold a [`TreeWorkspace`] and use
+/// [`draw_with`] / [`draw_in_workspace`]).
+pub fn draw<P: Potential + ?Sized>(
+    pot: &mut P,
+    rng: &mut Rng,
+    z0: &[f64],
+    step_size: f64,
+    inv_mass: &[f64],
+    max_depth: u32,
+) -> Transition {
+    let mut ws = TreeWorkspace::new(z0.len(), max_depth);
+    draw_with(pot, rng, &mut ws, z0, step_size, inv_mass, max_depth)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mcmc::nuts_recursive;
 
     #[test]
     fn bit_helpers_match_paper_example() {
@@ -226,5 +334,107 @@ mod tests {
         assert_eq!(trailing_ones(3), 2);
         assert_eq!(trailing_ones(7), 3);
         assert_eq!(trailing_ones(8), 0);
+    }
+
+    /// Anisotropic quadratic bowl: U-turns happen within a few doublings.
+    struct Bowl;
+    impl Potential for Bowl {
+        fn dim(&self) -> usize {
+            3
+        }
+        fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+            let scale = [1.0, 4.0, 0.25];
+            let mut u = 0.0;
+            for i in 0..3 {
+                grad[i] = z[i] / scale[i];
+                u += 0.5 * z[i] * z[i] / scale[i];
+            }
+            u
+        }
+    }
+
+    fn initial_state(pot: &mut Bowl) -> PhaseState {
+        let mut grad = vec![0.0; 3];
+        let z = vec![0.9, -0.4, 0.3];
+        let potential = pot.value_and_grad(&z, &mut grad);
+        PhaseState {
+            z,
+            r: vec![0.7, 0.2, -1.1],
+            potential,
+            grad,
+        }
+    }
+
+    /// The iterative subtree builder and the recursive Algorithm-1
+    /// builder walk the exact same trajectory: identical last state
+    /// (bitwise — same leapfrog arithmetic), leapfrog counts, stopping
+    /// flags, and (up to summation order) total weight and accept sums.
+    #[test]
+    fn iterative_and_recursive_subtrees_trace_identical_trajectories() {
+        let inv_mass = [1.0, 0.5, 2.0];
+        for &eps in &[0.1, -0.1, 0.25] {
+            for depth in 0..=6u32 {
+                let mut pot_a = Bowl;
+                let mut pot_b = Bowl;
+                let edge = initial_state(&mut pot_a);
+                let energy_0 = edge.energy(&inv_mass);
+
+                let mut ws = TreeWorkspace::new(3, 8);
+                ws.state.copy_from(&edge);
+                // separate RNG clones: only the RNG-free fields compare
+                let mut rng_a = Rng::new(42);
+                let sub_it =
+                    build_subtree_ws(&mut pot_a, &mut rng_a, &mut ws, depth, eps, &inv_mass, energy_0);
+
+                let mut rng_b = Rng::new(42);
+                let (sub_rec, _first) = nuts_recursive::build_tree(
+                    &mut pot_b, &mut rng_b, &edge, depth, eps, &inv_mass, energy_0,
+                );
+
+                assert_eq!(sub_it.n_leapfrog, sub_rec.n_leapfrog, "depth {depth} eps {eps}");
+                assert_eq!(sub_it.turning, sub_rec.turning, "depth {depth} eps {eps}");
+                assert_eq!(sub_it.diverging, sub_rec.diverging, "depth {depth} eps {eps}");
+                assert_eq!(ws.state.z, sub_rec.last.z, "depth {depth} eps {eps}");
+                assert_eq!(ws.state.r, sub_rec.last.r, "depth {depth} eps {eps}");
+                // weights/accept sums differ only by summation order
+                assert!(
+                    (sub_it.weight - sub_rec.weight).abs() < 1e-9 * (1.0 + sub_rec.weight.abs()),
+                    "depth {depth} eps {eps}: {} vs {}",
+                    sub_it.weight,
+                    sub_rec.weight
+                );
+                assert!(
+                    (sub_it.sum_accept - sub_rec.sum_accept).abs() < 1e-9,
+                    "depth {depth} eps {eps}: {} vs {}",
+                    sub_it.sum_accept,
+                    sub_rec.sum_accept
+                );
+            }
+        }
+    }
+
+    /// Workspace reuse must not change anything: a fresh workspace per
+    /// draw and one long-lived workspace produce bitwise-equal chains.
+    #[test]
+    fn workspace_reuse_is_bitwise_deterministic() {
+        let inv_mass = [1.0, 0.5, 2.0];
+        let mut rng_fresh = Rng::new(7);
+        let mut rng_reuse = Rng::new(7);
+        let mut pot_a = Bowl;
+        let mut pot_b = Bowl;
+        let mut ws = TreeWorkspace::new(3, 10);
+        let mut z_fresh = vec![0.3, -0.8, 1.2];
+        let mut z_reuse = z_fresh.clone();
+        for _ in 0..25 {
+            let a = draw(&mut pot_a, &mut rng_fresh, &z_fresh, 0.2, &inv_mass, 10);
+            let b = draw_with(&mut pot_b, &mut rng_reuse, &mut ws, &z_reuse, 0.2, &inv_mass, 10);
+            assert_eq!(a.z, b.z);
+            assert_eq!(a.num_leapfrog, b.num_leapfrog);
+            assert_eq!(a.accept_prob, b.accept_prob);
+            assert_eq!(a.potential, b.potential);
+            assert_eq!(a.depth, b.depth);
+            z_fresh = a.z;
+            z_reuse = b.z;
+        }
     }
 }

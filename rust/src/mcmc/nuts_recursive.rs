@@ -60,8 +60,9 @@ fn log_add_exp(a: f64, b: f64) -> f64 {
 
 /// Recursive BuildTree: builds 2^depth leaves from `edge` in the
 /// direction of `eps`'s sign, tracking the subtree's first state for
-/// internal U-turn checks.
-fn build_tree<P: Potential + ?Sized>(
+/// internal U-turn checks.  `pub(crate)` so the iterative builder's
+/// tests can cross-check both algorithms subtree-by-subtree.
+pub(crate) fn build_tree<P: Potential + ?Sized>(
     pot: &mut P,
     rng: &mut Rng,
     edge: &PhaseState,

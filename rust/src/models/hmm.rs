@@ -8,13 +8,17 @@
 //! partials come from the exact reverse recursion (stored alphas), the
 //! Stan-style rev rule for an HMM marginal.
 //!
+//! Every per-evaluation buffer (tape, alphas, adjoint scratch, `Var`
+//! lists, composite partials) is owned by the struct and reused, so
+//! steady-state evaluations perform no heap allocation.
+//!
 //! Unconstrained layout (sorted site names, matching `ravel_pytree`):
 //! `[phi sticks (K*(V-1)) row-major, theta sticks (K*(K-1))]`.
 
 use crate::autodiff::{Tape, Var};
 use crate::mcmc::Potential;
 use crate::ppl::special::{ln_gamma, log_sum_exp};
-use crate::ppl::transforms::stick_breaking_t;
+use crate::ppl::transforms::stick_breaking_t_into;
 
 pub struct HmmNative {
     pub num_states: usize,
@@ -28,6 +32,25 @@ pub struct HmmNative {
     evals: u64,
     /// stored forward alphas for the composite backward (T_u x K)
     alphas: Vec<f64>,
+    // ---- reusable hot-path scratch ----
+    tape: Tape,
+    /// log theta values (K x K) for the fused marginal
+    la_vals: Vec<f64>,
+    /// log phi values (K x V) for the fused marginal
+    lb_vals: Vec<f64>,
+    /// fused-marginal partials wrt (la, lb)
+    partials: Vec<f64>,
+    scores: Vec<f64>,
+    abar: Vec<f64>,
+    abar_prev: Vec<f64>,
+    inputs: Vec<Var>,
+    log_phi: Vec<Var>,
+    log_theta: Vec<Var>,
+    ladjs: Vec<Var>,
+    sb_out: Vec<Var>,
+    sb_scratch: Vec<Var>,
+    sup_terms: Vec<Var>,
+    parents: Vec<Var>,
 }
 
 impl HmmNative {
@@ -51,26 +74,52 @@ impl HmmNative {
             emis_counts,
             evals: 0,
             alphas: vec![0.0; t_unsup * k],
+            tape: Tape::new(),
+            la_vals: vec![0.0; k * k],
+            lb_vals: vec![0.0; k * v],
+            partials: vec![0.0; k * k + k * v],
+            scores: vec![0.0; k],
+            abar: vec![0.0; k],
+            abar_prev: vec![0.0; k],
+            inputs: Vec::with_capacity(k * (v - 1) + k * (k - 1)),
+            log_phi: Vec::with_capacity(k * v),
+            log_theta: Vec::with_capacity(k * k),
+            ladjs: Vec::with_capacity(2 * k),
+            sb_out: Vec::with_capacity(v),
+            sb_scratch: Vec::with_capacity(v),
+            sup_terms: Vec::with_capacity(k * (k + v)),
+            parents: Vec::with_capacity(k * k + k * v),
         }
     }
 
-    /// Fused forward-algorithm marginal: given la (K*K) and lb (K*V)
-    /// values, returns log p(y_unsup) and writes partials wrt la then lb
-    /// into `partials` (length K*K + K*V).
-    fn forward_marginal(&mut self, la: &[f64], lb: &[f64], partials: &mut [f64]) -> f64 {
+    /// Fused forward-algorithm marginal over `self.la_vals` (log theta,
+    /// K*K) and `self.lb_vals` (log phi, K*V): returns log p(y_unsup)
+    /// and writes partials wrt la then lb into `self.partials`.
+    fn forward_marginal(&mut self) -> f64 {
         let k = self.num_states;
         let v = self.num_categories;
         let t_sup = self.sup_states.len();
-        let unsup = &self.obs[t_sup..];
-        let t_u = unsup.len();
         let s_last = *self.sup_states.last().unwrap();
+        let HmmNative {
+            obs,
+            alphas,
+            la_vals,
+            lb_vals,
+            partials,
+            scores,
+            abar,
+            abar_prev,
+            ..
+        } = self;
+        let la = &la_vals[..];
+        let lb = &lb_vals[..];
+        let unsup = &obs[t_sup..];
+        let t_u = unsup.len();
 
         // forward pass, storing alphas
-        let alphas = &mut self.alphas;
         for j in 0..k {
             alphas[j] = la[s_last * k + j] + lb[j * v + unsup[0]];
         }
-        let mut scores = vec![0.0; k];
         for t in 1..t_u {
             let (prev, cur) = alphas.split_at_mut(t * k);
             let prev = &prev[(t - 1) * k..];
@@ -78,7 +127,7 @@ impl HmmNative {
                 for i in 0..k {
                     scores[i] = prev[i] + la[i * k + j];
                 }
-                cur[j] = log_sum_exp(&scores) + lb[j * v + unsup[t]];
+                cur[j] = log_sum_exp(scores) + lb[j * v + unsup[t]];
             }
         }
         let last = &alphas[(t_u - 1) * k..t_u * k];
@@ -89,8 +138,9 @@ impl HmmNative {
             *p = 0.0;
         }
         let (gla, glb) = partials.split_at_mut(k * k);
-        let mut abar: Vec<f64> = last.iter().map(|a| (a - value).exp()).collect();
-        let mut abar_prev = vec![0.0; k];
+        for (dst, a) in abar.iter_mut().zip(last) {
+            *dst = (a - value).exp();
+        }
         for t in (1..t_u).rev() {
             let prev = &alphas[(t - 1) * k..t * k];
             let cur = &alphas[t * k..(t + 1) * k];
@@ -108,7 +158,7 @@ impl HmmNative {
                     abar_prev[i] += aj * w;
                 }
             }
-            std::mem::swap(&mut abar, &mut abar_prev);
+            std::mem::swap(abar, abar_prev);
         }
         // t = 0: alpha0_j = la[s_last, j] + lb[j, y_0]
         for j in 0..k {
@@ -130,71 +180,94 @@ impl Potential for HmmNative {
         let (k, v) = (self.num_states, self.num_categories);
         let n_phi = k * (v - 1);
 
-        let mut t = Tape::new();
-        let inputs: Vec<Var> = z.iter().map(|&x| t.input(x)).collect();
+        let mut t = std::mem::take(&mut self.tape);
+        t.reset();
+        self.inputs.clear();
+        for &x in z {
+            self.inputs.push(t.input(x));
+        }
 
         // phi rows via stick-breaking
-        let mut log_phi: Vec<Var> = Vec::with_capacity(k * v);
-        let mut ladjs: Vec<Var> = Vec::new();
+        self.log_phi.clear();
+        self.log_theta.clear();
+        self.ladjs.clear();
         for row in 0..k {
-            let sticks = &inputs[row * (v - 1)..(row + 1) * (v - 1)];
-            let (simplex, ladj) = stick_breaking_t(&mut t, sticks);
-            ladjs.push(ladj);
-            for y in simplex {
-                log_phi.push(t.ln(y));
+            self.sb_out.clear();
+            let ladj = stick_breaking_t_into(
+                &mut t,
+                &self.inputs[row * (v - 1)..(row + 1) * (v - 1)],
+                &mut self.sb_out,
+                &mut self.sb_scratch,
+            );
+            self.ladjs.push(ladj);
+            for &y in &self.sb_out {
+                self.log_phi.push(t.ln(y));
             }
         }
         // theta rows
-        let mut log_theta: Vec<Var> = Vec::with_capacity(k * k);
         for row in 0..k {
             let base = n_phi + row * (k - 1);
-            let sticks = &inputs[base..base + (k - 1)];
-            let (simplex, ladj) = stick_breaking_t(&mut t, sticks);
-            ladjs.push(ladj);
-            for y in simplex {
-                log_theta.push(t.ln(y));
+            self.sb_out.clear();
+            let ladj = stick_breaking_t_into(
+                &mut t,
+                &self.inputs[base..base + (k - 1)],
+                &mut self.sb_out,
+                &mut self.sb_scratch,
+            );
+            self.ladjs.push(ladj);
+            for &y in &self.sb_out {
+                self.log_theta.push(t.ln(y));
             }
         }
-        let ladj = t.sum(&ladjs);
+        let ladj = t.sum(&self.ladjs);
 
         // Dirichlet(1) priors contribute the normalizing constants only
         let prior_const = k as f64 * (ln_gamma(v as f64) + ln_gamma(k as f64));
 
         // supervised sufficient statistics
-        let mut sup_terms: Vec<Var> = Vec::new();
+        self.sup_terms.clear();
         for i in 0..k {
             for j in 0..k {
                 let c = self.trans_counts[i * k + j];
                 if c != 0.0 {
-                    sup_terms.push(t.scale(log_theta[i * k + j], c));
+                    let lv = self.log_theta[i * k + j];
+                    self.sup_terms.push(t.scale(lv, c));
                 }
             }
             for w in 0..v {
                 let c = self.emis_counts[i * v + w];
                 if c != 0.0 {
-                    sup_terms.push(t.scale(log_phi[i * v + w], c));
+                    let lv = self.log_phi[i * v + w];
+                    self.sup_terms.push(t.scale(lv, c));
                 }
             }
         }
-        let sup_ll = t.sum(&sup_terms);
+        let sup_ll = t.sum(&self.sup_terms);
 
         // unsupervised tail: fused forward-algorithm composite
-        let la_vals: Vec<f64> = log_theta.iter().map(|v| t.value(*v)).collect();
-        let lb_vals: Vec<f64> = log_phi.iter().map(|v| t.value(*v)).collect();
-        let mut partials = vec![0.0; k * k + k * v];
-        let marg = self.forward_marginal(&la_vals, &lb_vals, &mut partials);
-        let parents: Vec<Var> = log_theta.iter().chain(log_phi.iter()).copied().collect();
-        let unsup_ll = t.composite(&parents, &partials, marg);
+        for (dst, lv) in self.la_vals.iter_mut().zip(&self.log_theta) {
+            *dst = t.value(*lv);
+        }
+        for (dst, lv) in self.lb_vals.iter_mut().zip(&self.log_phi) {
+            *dst = t.value(*lv);
+        }
+        let marg = self.forward_marginal();
+        self.parents.clear();
+        self.parents.extend_from_slice(&self.log_theta);
+        self.parents.extend_from_slice(&self.log_phi);
+        let unsup_ll = t.composite(&self.parents, &self.partials, marg);
 
         let mut logp = t.add(sup_ll, unsup_ll);
         logp = t.add(logp, ladj);
         logp = t.offset(logp, prior_const);
         let u = t.neg(logp);
+        let uval = t.value(u);
         let adj = t.grad(u);
-        for (i, v_in) in inputs.iter().enumerate() {
+        for (i, v_in) in self.inputs.iter().enumerate() {
             grad[i] = adj[v_in.0 as usize];
         }
-        t.value(u)
+        self.tape = t;
+        uval
     }
 
     fn num_evals(&self) -> u64 {
@@ -249,8 +322,9 @@ mod tests {
         let phi: [[f64; 2]; 2] = [[0.2, 0.8], [0.9, 0.1]];
         let la: Vec<f64> = theta.iter().flatten().map(|p| p.ln()).collect();
         let lb: Vec<f64> = phi.iter().flatten().map(|p| p.ln()).collect();
-        let mut partials = vec![0.0; 4 + 4];
-        let got = pot.forward_marginal(&la, &lb, &mut partials);
+        pot.la_vals.copy_from_slice(&la);
+        pot.lb_vals.copy_from_slice(&lb);
+        let got = pot.forward_marginal();
 
         // brute force over z_1, z_2, z_3 given z_0 = 1
         let unsup = &obs[1..];
@@ -269,6 +343,23 @@ mod tests {
         }
         assert!((got - total.ln()).abs() < 1e-12, "{got} vs {}", total.ln());
         // partials sum: d logp / d la rows: each abar distributes; sanity
-        assert!(partials.iter().all(|p| p.is_finite()));
+        assert!(pot.partials.iter().all(|p| p.is_finite()));
+    }
+
+    #[test]
+    fn tape_reuse_is_bitwise_stable() {
+        let mut pot = toy();
+        let dim = pot.dim();
+        let mut rng = Rng::new(2);
+        let z: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.4).collect();
+        let mut g0 = vec![0.0; dim];
+        let u0 = pot.value_and_grad(&z, &mut g0);
+        let mut tmp = vec![0.0; dim];
+        let z2: Vec<f64> = z.iter().map(|v| v + 0.3).collect();
+        let _ = pot.value_and_grad(&z2, &mut tmp);
+        let mut g1 = vec![0.0; dim];
+        let u1 = pot.value_and_grad(&z, &mut g1);
+        assert_eq!(u0, u1);
+        assert_eq!(g0, g1);
     }
 }

@@ -11,13 +11,21 @@
 //! beta = K^{-1} y and contracts analytically to the parameter partials
 //! (see DESIGN.md §2 and the derivation in this file).
 //!
+//! All O(N^2)/O(NP) work buffers (kernel, Gram matrices, Cholesky
+//! factor, Kbar, contraction scratch) plus the tape live in
+//! [`SkimScratch`] on the struct and are reused across evaluations —
+//! the hot path is allocation free and Kbar/Gbar overwrite their
+//! source buffers in place.
+//!
 //! Unconstrained layout (sorted site names): [eta1, lambda (p), msq,
 //! sigma, xisq], all positive -> exp transform.
 
 use crate::autodiff::{Tape, Var};
 use crate::mcmc::Potential;
 use crate::ppl::special::LN_2PI;
-use crate::util::linalg::{cholesky, log_det_from_chol, solve_lower, solve_lower_t, spd_inverse_from_chol};
+use crate::util::linalg::{
+    cholesky, gram, log_det_from_chol, solve_lower, solve_lower_t, spd_inverse_from_chol_into,
+};
 
 pub struct SkimHypers {
     pub expected_sparsity: f64,
@@ -45,6 +53,45 @@ impl Default for SkimHypers {
     }
 }
 
+/// Reusable per-evaluation work buffers for the fused marginal.
+struct SkimScratch {
+    /// kappa-scaled design kX (n x p)
+    kx: Vec<f64>,
+    /// elementwise square of kX (n x p)
+    kx2: Vec<f64>,
+    /// G = kX kX^T (n x n); overwritten by Gbar in the backward pass
+    g: Vec<f64>,
+    /// G2 = kX^2 (kX^2)^T (n x n)
+    g2: Vec<f64>,
+    /// kernel K, factorized in place to its Cholesky factor L
+    l: Vec<f64>,
+    /// L^{-1} y, then K^{-1} y
+    beta: Vec<f64>,
+    /// K^{-1}, overwritten by Kbar = 0.5 (beta beta^T - K^{-1})
+    kbar: Vec<f64>,
+    /// column scratch for the SPD inverse
+    col: Vec<f64>,
+    m_buf: Vec<f64>,
+    m2_buf: Vec<f64>,
+}
+
+impl SkimScratch {
+    fn new(n: usize, p: usize) -> Self {
+        SkimScratch {
+            kx: vec![0.0; n * p],
+            kx2: vec![0.0; n * p],
+            g: vec![0.0; n * n],
+            g2: vec![0.0; n * n],
+            l: vec![0.0; n * n],
+            beta: vec![0.0; n],
+            kbar: vec![0.0; n * n],
+            col: vec![0.0; n],
+            m_buf: vec![0.0; n * p],
+            m2_buf: vec![0.0; n * p],
+        }
+    }
+}
+
 pub struct SkimNative {
     /// row-major (n, p)
     pub x: Vec<f64>,
@@ -53,6 +100,17 @@ pub struct SkimNative {
     pub p: usize,
     pub hypers: SkimHypers,
     evals: u64,
+    scratch: SkimScratch,
+    tape: Tape,
+    /// fused-marginal partials wrt (kappa_0..kappa_{p-1}, e1sq, e2sq, sigsq)
+    partials: Vec<f64>,
+    kappa_vals: Vec<f64>,
+    inputs: Vec<Var>,
+    lam_vars: Vec<Var>,
+    kappa_vars: Vec<Var>,
+    ladj_parents: Vec<Var>,
+    p_lam_terms: Vec<Var>,
+    parents: Vec<Var>,
 }
 
 impl SkimNative {
@@ -66,67 +124,88 @@ impl SkimNative {
             p,
             hypers,
             evals: 0,
+            scratch: SkimScratch::new(n, p),
+            tape: Tape::new(),
+            partials: vec![0.0; p + 3],
+            kappa_vals: vec![0.0; p],
+            inputs: Vec::with_capacity(p + 4),
+            lam_vars: Vec::with_capacity(p),
+            kappa_vars: Vec::with_capacity(p),
+            ladj_parents: Vec::with_capacity(p + 4),
+            p_lam_terms: Vec::with_capacity(p),
+            parents: Vec::with_capacity(p + 3),
         }
     }
 
-    /// Fused marginal: value = log MVN(y | 0, K + (sigma^2 + jitter) I)
-    /// and partials wrt (kappa_0..kappa_{p-1}, eta1sq, eta2sq, sigma_sq).
-    #[allow(clippy::too_many_arguments)]
-    fn marginal(
-        &self,
-        kappa: &[f64],
-        eta1sq: f64,
-        eta2sq: f64,
-        sigma_sq: f64,
-        partials: &mut [f64],
-    ) -> Result<f64, String> {
+    /// Fused marginal over `self.kappa_vals`: value = log MVN(y | 0,
+    /// K + (sigma^2 + jitter) I); writes partials wrt (kappa_0..
+    /// kappa_{p-1}, eta1sq, eta2sq, sigma_sq) into `self.partials`.
+    fn marginal(&mut self, eta1sq: f64, eta2sq: f64, sigma_sq: f64) -> Result<f64, String> {
         let (n, p) = (self.n, self.p);
         let csq = self.hypers.c * self.hypers.c;
+        let jitter = self.hypers.jitter;
+        let SkimNative {
+            x,
+            y,
+            kappa_vals,
+            partials,
+            scratch,
+            ..
+        } = self;
+        let x = &x[..];
+        let kappa = &kappa_vals[..];
+        let SkimScratch {
+            kx,
+            kx2,
+            g,
+            g2,
+            l,
+            beta,
+            kbar,
+            col,
+            m_buf,
+            m2_buf,
+        } = scratch;
 
         // kX and kX^2
-        let mut kx = vec![0.0; n * p];
-        let mut kx2 = vec![0.0; n * p];
         for i in 0..n {
             for d in 0..p {
-                let v = kappa[d] * self.x[i * p + d];
+                let v = kappa[d] * x[i * p + d];
                 kx[i * p + d] = v;
                 kx2[i * p + d] = v * v;
             }
         }
         // G = kX kX^T, G2 = kX^2 (kX^2)^T
-        let mut g = vec![0.0; n * n];
-        let mut g2 = vec![0.0; n * n];
-        crate::util::linalg::gram(&kx, &kx, n, p, &mut g);
-        crate::util::linalg::gram(&kx2, &kx2, n, p, &mut g2);
+        let kx = &kx[..];
+        let kx2 = &kx2[..];
+        gram(kx, kx, n, p, g);
+        gram(kx2, kx2, n, p, g2);
 
         // K = 0.5 e2 (1+G)^2 - 0.5 e2 G2 + (e1 - e2) G + (c^2 - 0.5 e2)
-        //     + (sigma^2 + jitter) I
-        let mut k_mat = vec![0.0; n * n];
+        //     + (sigma^2 + jitter) I    (built into l, factorized there)
         for i in 0..n * n {
             let gi = g[i];
-            k_mat[i] = 0.5 * eta2sq * (1.0 + gi) * (1.0 + gi) - 0.5 * eta2sq * g2[i]
+            l[i] = 0.5 * eta2sq * (1.0 + gi) * (1.0 + gi) - 0.5 * eta2sq * g2[i]
                 + (eta1sq - eta2sq) * gi
                 + (csq - 0.5 * eta2sq);
         }
         for i in 0..n {
-            k_mat[i * n + i] += sigma_sq + self.hypers.jitter;
+            l[i * n + i] += sigma_sq + jitter;
         }
 
         // factorize + marginal
-        let mut l = k_mat;
-        cholesky(&mut l, n)?;
-        let mut beta = self.y.clone();
-        solve_lower(&l, n, &mut beta);
+        cholesky(l, n)?;
+        beta.copy_from_slice(y);
+        solve_lower(l, n, beta);
         let quad: f64 = beta.iter().map(|b| b * b).sum();
-        let value = -0.5 * quad - 0.5 * log_det_from_chol(&l, n) - 0.5 * n as f64 * LN_2PI;
-        solve_lower_t(&l, n, &mut beta); // now beta = K^{-1} y
+        let value = -0.5 * quad - 0.5 * log_det_from_chol(l, n) - 0.5 * n as f64 * LN_2PI;
+        solve_lower_t(l, n, beta); // now beta = K^{-1} y
 
-        // Kbar = 0.5 (beta beta^T - K^{-1})
-        let kinv = spd_inverse_from_chol(&l, n);
-        let mut kbar = vec![0.0; n * n];
+        // Kbar = 0.5 (beta beta^T - K^{-1}), overwriting K^{-1} in place
+        spd_inverse_from_chol_into(l, n, kbar, col);
         for i in 0..n {
             for j in 0..n {
-                kbar[i * n + j] = 0.5 * (beta[i] * beta[j] - kinv[i * n + j]);
+                kbar[i * n + j] = 0.5 * (beta[i] * beta[j] - kbar[i * n + j]);
             }
         }
 
@@ -144,21 +223,22 @@ impl SkimNative {
             d_sig += kbar[i * n + i];
         }
 
-        // partials wrt kappa: Gbar = Kbar * dK/dG, G2bar = -0.5 e2 Kbar;
+        // partials wrt kappa: Gbar = Kbar * dK/dG (overwrites G in
+        // place), G2bar = -0.5 e2 Kbar;
         // grad_kappa_d = 2 kappa_d (X^T Gbar X)_dd + 4 kappa_d^3 (X2^T G2bar X2)_dd
-        let mut gbar = vec![0.0; n * n];
         for i in 0..n * n {
-            gbar[i] = kbar[i] * (eta2sq * (1.0 + g[i]) + eta1sq - eta2sq);
+            g[i] = kbar[i] * (eta2sq * (1.0 + g[i]) + eta1sq - eta2sq);
         }
+        let gbar = &g[..];
         // M = Gbar X (n x p); diag_d = sum_i x_id M_id
-        let mut m_buf = vec![0.0; n * p];
+        m_buf.iter_mut().for_each(|v| *v = 0.0);
         for i in 0..n {
             for j in 0..n {
                 let gb = gbar[i * n + j];
                 if gb == 0.0 {
                     continue;
                 }
-                let xj = &self.x[j * p..(j + 1) * p];
+                let xj = &x[j * p..(j + 1) * p];
                 let mi = &mut m_buf[i * p..(i + 1) * p];
                 for d in 0..p {
                     mi[d] += gb * xj[d];
@@ -168,16 +248,16 @@ impl SkimNative {
         for d in 0..p {
             let mut acc = 0.0;
             for i in 0..n {
-                acc += self.x[i * p + d] * m_buf[i * p + d];
+                acc += x[i * p + d] * m_buf[i * p + d];
             }
             partials[d] = 2.0 * kappa[d] * acc;
         }
         // second term with X2 = X o X and G2bar
-        let mut m2_buf = vec![0.0; n * p];
+        m2_buf.iter_mut().for_each(|v| *v = 0.0);
         for i in 0..n {
             for j in 0..n {
                 let g2b = -0.5 * eta2sq * kbar[i * n + j];
-                let xj = &self.x[j * p..(j + 1) * p];
+                let xj = &x[j * p..(j + 1) * p];
                 let mi = &mut m2_buf[i * p..(i + 1) * p];
                 for d in 0..p {
                     mi[d] += g2b * xj[d] * xj[d];
@@ -187,7 +267,7 @@ impl SkimNative {
         for d in 0..p {
             let mut acc = 0.0;
             for i in 0..n {
-                let xi = self.x[i * p + d];
+                let xi = x[i * p + d];
                 acc += xi * xi * m2_buf[i * p + d];
             }
             partials[d] += 4.0 * kappa[d].powi(3) * acc;
@@ -219,36 +299,48 @@ impl Potential for SkimNative {
         self.evals += 1;
         let p = self.p;
         let h = &self.hypers;
-        let mut t = Tape::new();
-        let inputs: Vec<Var> = z.iter().map(|&v| t.input(v)).collect();
+        let phi_coef =
+            (h.expected_sparsity / (self.n as f64).sqrt()) / (p as f64 - h.expected_sparsity);
+        let (alpha1, beta1, alpha2, beta2, alpha3) =
+            (h.alpha1, h.beta1, h.alpha2, h.beta2, h.alpha3);
+
+        let mut t = std::mem::take(&mut self.tape);
+        t.reset();
+        self.inputs.clear();
+        for &v in z {
+            self.inputs.push(t.input(v));
+        }
         // layout (sorted): eta1, lambda[p], msq, sigma, xisq
-        let u_eta1 = inputs[0];
-        let u_lam = &inputs[1..1 + p];
-        let u_msq = inputs[1 + p];
-        let u_sigma = inputs[2 + p];
-        let u_xisq = inputs[3 + p];
+        let u_eta1 = self.inputs[0];
+        let u_msq = self.inputs[1 + p];
+        let u_sigma = self.inputs[2 + p];
+        let u_xisq = self.inputs[3 + p];
 
         // exp transforms; ladj = sum of unconstrained values
         let eta1 = t.exp(u_eta1);
-        let lam: Vec<Var> = u_lam.iter().map(|&u| t.exp(u)).collect();
+        self.lam_vars.clear();
+        for i in 0..p {
+            let u = self.inputs[1 + i];
+            self.lam_vars.push(t.exp(u));
+        }
         let msq = t.exp(u_msq);
         let sigma = t.exp(u_sigma);
         let xisq = t.exp(u_xisq);
-        let mut ladj_parents = vec![u_eta1, u_msq, u_sigma, u_xisq];
-        ladj_parents.extend_from_slice(u_lam);
-        let ladj = t.sum(&ladj_parents);
+        self.ladj_parents.clear();
+        self.ladj_parents.push(u_eta1);
+        self.ladj_parents.push(u_msq);
+        self.ladj_parents.push(u_sigma);
+        self.ladj_parents.push(u_xisq);
+        self.ladj_parents.extend_from_slice(&self.inputs[1..1 + p]);
+        let ladj = t.sum(&self.ladj_parents);
 
         // priors
         // sigma ~ HalfNormal(alpha3)
-        let zsig = t.scale(sigma, 1.0 / h.alpha3);
+        let zsig = t.scale(sigma, 1.0 / alpha3);
         let zsig2 = t.square(zsig);
         let p_sigma_core = t.scale(zsig2, -0.5);
-        let p_sigma = t.offset(
-            p_sigma_core,
-            2f64.ln() - h.alpha3.ln() - 0.5 * LN_2PI,
-        );
+        let p_sigma = t.offset(p_sigma_core, 2f64.ln() - alpha3.ln() - 0.5 * LN_2PI);
         // eta1 ~ HalfCauchy(phi), phi = sigma * S/sqrt(N) / (P - S)
-        let phi_coef = (h.expected_sparsity / (self.n as f64).sqrt()) / (p as f64 - h.expected_sparsity);
         let phi = t.scale(sigma, phi_coef);
         let p_eta1 = half_cauchy_lpdf(&mut t, eta1, phi);
         // msq ~ InverseGamma(a1, b1); xisq ~ InverseGamma(a2, b2)
@@ -259,17 +351,17 @@ impl Potential for SkimNative {
             let diff = t.sub(term1, inv);
             t.offset(diff, a * b.ln() - crate::ppl::special::ln_gamma(a))
         };
-        let p_msq = ig(&mut t, msq, h.alpha1, h.beta1);
-        let p_xisq = ig(&mut t, xisq, h.alpha2, h.beta2);
+        let p_msq = ig(&mut t, msq, alpha1, beta1);
+        let p_xisq = ig(&mut t, xisq, alpha2, beta2);
         // lambda_d ~ HalfCauchy(1)
-        let mut p_lam_terms = Vec::with_capacity(p);
-        for &l in &lam {
+        self.p_lam_terms.clear();
+        for &l in &self.lam_vars {
             let l2 = t.square(l);
             let l1p = t.log1p(l2);
             let neg = t.neg(l1p);
-            p_lam_terms.push(t.offset(neg, (2.0 / std::f64::consts::PI).ln()));
+            self.p_lam_terms.push(t.offset(neg, (2.0 / std::f64::consts::PI).ln()));
         }
-        let p_lam = t.sum(&p_lam_terms);
+        let p_lam = t.sum(&self.p_lam_terms);
 
         // derived quantities
         let eta1sq = t.square(eta1);
@@ -280,43 +372,50 @@ impl Potential for SkimNative {
         let eta2sq = t.div(num, msq2);
         // kappa_d = sqrt(msq) lam / sqrt(msq + (eta1 lam)^2)
         let sqrt_msq = t.sqrt(msq);
-        let mut kappa: Vec<Var> = Vec::with_capacity(p);
-        for &l in &lam {
+        self.kappa_vars.clear();
+        for &l in &self.lam_vars {
             let el = t.mul(eta1, l);
             let el2 = t.square(el);
             let denom_in = t.add(msq, el2);
             let denom = t.sqrt(denom_in);
             let num_l = t.mul(sqrt_msq, l);
-            kappa.push(t.div(num_l, denom));
+            self.kappa_vars.push(t.div(num_l, denom));
         }
         let sigma_sq = t.square(sigma);
 
         // fused marginal composite
-        let kappa_vals: Vec<f64> = kappa.iter().map(|&v| t.value(v)).collect();
-        let mut partials = vec![0.0; p + 3];
-        let marg = self
-            .marginal(
-                &kappa_vals,
-                t.value(eta1sq),
-                t.value(eta2sq),
-                t.value(sigma_sq),
-                &mut partials,
-            )
-            .unwrap_or(f64::NEG_INFINITY);
-        let mut parents = kappa.clone();
-        parents.push(eta1sq);
-        parents.push(eta2sq);
-        parents.push(sigma_sq);
-        let lik = t.composite(&parents, &partials, marg);
+        for (dst, kv) in self.kappa_vals.iter_mut().zip(&self.kappa_vars) {
+            *dst = t.value(*kv);
+        }
+        let (e1v, e2v, ssv) = (t.value(eta1sq), t.value(eta2sq), t.value(sigma_sq));
+        let marg = match self.marginal(e1v, e2v, ssv) {
+            Ok(v) => v,
+            Err(_) => {
+                // non-PD kernel: zero the partials so no stale gradient
+                // leaks through the composite (seed semantics)
+                for q in self.partials.iter_mut() {
+                    *q = 0.0;
+                }
+                f64::NEG_INFINITY
+            }
+        };
+        self.parents.clear();
+        self.parents.extend_from_slice(&self.kappa_vars);
+        self.parents.push(eta1sq);
+        self.parents.push(eta2sq);
+        self.parents.push(sigma_sq);
+        let lik = t.composite(&self.parents, &self.partials, marg);
 
         let prior_terms = [p_sigma, p_eta1, p_msq, p_xisq, p_lam, lik, ladj];
         let logp = t.sum(&prior_terms);
         let u = t.neg(logp);
+        let uval = t.value(u);
         let adj = t.grad(u);
-        for (i, v_in) in inputs.iter().enumerate() {
+        for (i, v_in) in self.inputs.iter().enumerate() {
             grad[i] = adj[v_in.0 as usize];
         }
-        t.value(u)
+        self.tape = t;
+        uval
     }
 
     fn num_evals(&self) -> u64 {
@@ -367,5 +466,22 @@ mod tests {
         let u = pot.value_and_grad(&z, &mut g);
         assert!(u.is_finite());
         assert!(g.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn tape_reuse_is_bitwise_stable() {
+        let mut pot = toy(12, 3);
+        let dim = pot.dim();
+        let mut rng = Rng::new(4);
+        let z: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.3).collect();
+        let mut g0 = vec![0.0; dim];
+        let u0 = pot.value_and_grad(&z, &mut g0);
+        let z2: Vec<f64> = z.iter().map(|v| v - 0.2).collect();
+        let mut tmp = vec![0.0; dim];
+        let _ = pot.value_and_grad(&z2, &mut tmp);
+        let mut g1 = vec![0.0; dim];
+        let u1 = pot.value_and_grad(&z, &mut g1);
+        assert_eq!(u0, u1);
+        assert_eq!(g0, g1);
     }
 }

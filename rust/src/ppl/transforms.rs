@@ -75,11 +75,25 @@ pub fn exp_transform_t(t: &mut Tape, x: Var) -> (Var, Var) {
 /// Stick-breaking on tape: maps K-1 vars to K simplex vars; returns
 /// (simplex, ladj).
 pub fn stick_breaking_t(t: &mut Tape, x: &[Var]) -> (Vec<Var>, Var) {
+    let mut ys = Vec::with_capacity(x.len() + 1);
+    let mut scratch = Vec::with_capacity(x.len());
+    let ladj = stick_breaking_t_into(t, x, &mut ys, &mut scratch);
+    (ys, ladj)
+}
+
+/// Allocation-free [`stick_breaking_t`]: appends the K simplex vars to
+/// `ys` (not cleared — callers batch several rows into one buffer) and
+/// uses `scratch` for the per-stick ladj terms.  Returns ladj.
+pub fn stick_breaking_t_into(
+    t: &mut Tape,
+    x: &[Var],
+    ys: &mut Vec<Var>,
+    scratch: &mut Vec<Var>,
+) -> Var {
+    scratch.clear();
     let km1 = x.len();
     let one = t.constant(1.0);
     let mut rem = one;
-    let mut ys = Vec::with_capacity(km1 + 1);
-    let mut ladj_terms = Vec::with_capacity(km1);
     for (i, &xi) in x.iter().enumerate() {
         let offset = ((km1 - i) as f64).ln();
         let zs = t.offset(xi, -offset);
@@ -91,15 +105,14 @@ pub fn stick_breaking_t(t: &mut Tape, x: &[Var]) -> (Vec<Var>, Var) {
         let log_rem = t.ln(rem);
         let sp_sum = t.add(sp_pos, sp_neg);
         let term = t.sub(log_rem, sp_sum);
-        ladj_terms.push(term);
+        scratch.push(term);
         let y = t.mul(z, rem);
         ys.push(y);
         let one_minus_z = t.sub(one, z);
         rem = t.mul(rem, one_minus_z);
     }
     ys.push(rem);
-    let ladj = t.sum(&ladj_terms);
-    (ys, ladj)
+    t.sum(scratch)
 }
 
 /// Transform an unconstrained tape var onto `support`; returns

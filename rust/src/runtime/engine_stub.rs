@@ -1,0 +1,96 @@
+//! Offline stub for the PJRT engine, compiled when the `pjrt` feature
+//! is **off** (the default).  API-identical to `engine.rs` so the
+//! coordinator, harness, examples and tests build without the `xla`
+//! bindings: the manifest loads normally (native workloads need its
+//! static shapes), but anything touching a device — compiling an
+//! executable, uploading a buffer, reading a literal — returns a
+//! descriptive error.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use super::manifest::{ArtifactEntry, DType, Manifest};
+
+const NO_PJRT: &str = "fugue was built without the `pjrt` feature; \
+     rebuild with `cargo build --features pjrt` (requires the xla \
+     bindings and libxla — see README.md)";
+
+/// Opaque placeholder for a device buffer (never constructible: every
+/// path that would produce one errors first).
+pub struct PjrtBuffer {
+    _private: (),
+}
+
+/// Opaque placeholder for a host literal.
+pub struct Literal {
+    _private: (),
+}
+
+/// Host-side tensor for marshalling executable inputs.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    F64(Vec<f64>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    U32(Vec<u32>, Vec<usize>),
+}
+
+impl HostTensor {
+    /// Cast an f64 slice to the dtype the artifact expects.
+    pub fn from_f64(data: &[f64], shape: &[usize], dtype: DType) -> Result<HostTensor> {
+        Ok(match dtype {
+            DType::F32 => {
+                HostTensor::F32(data.iter().map(|&v| v as f32).collect(), shape.to_vec())
+            }
+            DType::F64 => HostTensor::F64(data.to_vec(), shape.to_vec()),
+            DType::I32 => {
+                HostTensor::I32(data.iter().map(|&v| v as i32).collect(), shape.to_vec())
+            }
+            other => bail!("from_f64: unsupported target dtype {other:?}"),
+        })
+    }
+}
+
+/// A compiled artifact plus its manifest entry (stub: never built).
+pub struct Executable {
+    pub entry: ArtifactEntry,
+}
+
+impl Executable {
+    pub fn run_buffers(&self, _args: &[&PjrtBuffer]) -> Result<Vec<Literal>> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Manifest-only engine: artifact metadata without a PJRT client.
+pub struct Engine {
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        Ok(Engine { manifest })
+    }
+
+    /// Load + compile an artifact by manifest name.
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        bail!("artifact '{}': {}", name, NO_PJRT)
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload(&self, _t: &HostTensor) -> Result<PjrtBuffer> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Read a literal's contents as f64 regardless of its element type.
+pub fn literal_to_f64(_lit: &Literal) -> Result<Vec<f64>> {
+    bail!(NO_PJRT)
+}
+
+/// Read a scalar literal as f64.
+pub fn literal_scalar_f64(_lit: &Literal) -> Result<f64> {
+    bail!(NO_PJRT)
+}

@@ -1,0 +1,82 @@
+//! Offline stubs for the PJRT artifact handles, compiled when the
+//! `pjrt` feature is **off** (the default).  Constructors return a
+//! descriptive error, so these types can never actually exist at
+//! runtime — they only satisfy the type graph of the coordinator,
+//! harness, benches and examples.
+
+use anyhow::{bail, Result};
+
+use crate::mcmc::{Potential, Transition};
+
+use super::engine::{Engine, HostTensor};
+use super::manifest::ArtifactEntry;
+
+const NO_PJRT: &str = "fugue was built without the `pjrt` feature; \
+     rebuild with `cargo build --features pjrt` (see README.md)";
+
+/// Fused end-to-end NUTS transition (stub: never constructible).
+pub struct NutsStep {
+    pub dim: usize,
+    /// PJRT dispatches so far (one per draw — the benchmark's point).
+    pub dispatches: u64,
+}
+
+impl NutsStep {
+    pub fn new(_engine: &Engine, name: &str, _data: &[HostTensor]) -> Result<NutsStep> {
+        bail!("artifact '{}': {}", name, NO_PJRT)
+    }
+
+    pub fn entry(&self) -> &ArtifactEntry {
+        unreachable!("stub NutsStep cannot be constructed")
+    }
+
+    pub fn step(
+        &mut self,
+        _key: [u32; 2],
+        _z: &[f64],
+        _step_size: f64,
+        _inv_mass: &[f64],
+    ) -> Result<Transition> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn step_vmap(
+        &mut self,
+        _keys: &[[u32; 2]],
+        _zs: &[f64],
+        _step_sizes: &[f64],
+        _inv_masses: &[f64],
+    ) -> Result<Vec<Transition>> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Pyro-architecture comparator (stub: never constructible).
+pub struct PjrtPotential {
+    pub dim: usize,
+    evals: u64,
+}
+
+impl PjrtPotential {
+    pub fn new(_engine: &Engine, name: &str, _data: &[HostTensor]) -> Result<PjrtPotential> {
+        bail!("artifact '{}': {}", name, NO_PJRT)
+    }
+
+    pub fn eval(&mut self, _z: &[f64], _grad: &mut [f64]) -> Result<f64> {
+        bail!(NO_PJRT)
+    }
+}
+
+impl Potential for PjrtPotential {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn value_and_grad(&mut self, _z: &[f64], _grad: &mut [f64]) -> f64 {
+        unreachable!("stub PjrtPotential cannot be constructed")
+    }
+
+    fn num_evals(&self) -> u64 {
+        self.evals
+    }
+}

@@ -12,10 +12,29 @@
 //!   inputs marshalled per call) and [`handles::PjrtPotential`] (the
 //!   Pyro-architecture baseline: a [`crate::mcmc::Potential`] that pays
 //!   one PJRT dispatch per leapfrog).
+//!
+//! The real engine/handles need the `xla` bindings and a libxla
+//! install, so they are gated behind the non-default **`pjrt`** cargo
+//! feature.  The default build substitutes API-identical stubs
+//! (`engine_stub.rs` / `handles_stub.rs`): the manifest still loads and
+//! every native (Stan-architecture) code path works, while constructing
+//! a PJRT executable/buffer returns a descriptive error.  This keeps
+//! `cargo build && cargo test` fully offline-green on machines without
+//! libxla.
 
-pub mod engine;
-pub mod handles;
 pub mod manifest;
+
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(feature = "pjrt")]
+pub mod handles;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "handles_stub.rs"]
+pub mod handles;
 
 pub use engine::{Engine, Executable, HostTensor};
 pub use handles::{NutsStep, PjrtPotential};

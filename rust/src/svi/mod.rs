@@ -73,8 +73,10 @@ pub fn run_svi(
     }
     let dtype = exe.entry.inputs[1].dtype;
     let dim = exe.entry.inputs[1].elements();
-    let data_bufs: Vec<xla::PjRtBuffer> =
-        data.iter().map(|t| engine.upload(t)).collect::<Result<_, _>>()?;
+    let data_bufs = data
+        .iter()
+        .map(|t| engine.upload(t))
+        .collect::<Result<Vec<_>, _>>()?;
 
     let mut rng = Rng::new(seed);
     let mut loc = vec![0.0; dim];
@@ -89,10 +91,10 @@ pub fn run_svi(
             (rng.next_u64() >> 32) as u32,
             (rng.next_u64() & 0xFFFF_FFFF) as u32,
         ];
-        let key_b = HostTensor::U32(key.to_vec(), vec![2]).to_buffer(&engine.client)?;
-        let loc_b = HostTensor::from_f64(&loc, &[dim], dtype)?.to_buffer(&engine.client)?;
-        let ls_b = HostTensor::from_f64(&log_scale, &[dim], dtype)?.to_buffer(&engine.client)?;
-        let mut args: Vec<&xla::PjRtBuffer> = vec![&key_b, &loc_b, &ls_b];
+        let key_b = engine.upload(&HostTensor::U32(key.to_vec(), vec![2]))?;
+        let loc_b = engine.upload(&HostTensor::from_f64(&loc, &[dim], dtype)?)?;
+        let ls_b = engine.upload(&HostTensor::from_f64(&log_scale, &[dim], dtype)?)?;
+        let mut args = vec![&key_b, &loc_b, &ls_b];
         args.extend(data_bufs.iter());
         let outs = exe.run_buffers(&args)?;
         let elbo = literal_scalar_f64(&outs[0])?;

@@ -53,19 +53,25 @@ pub fn solve_lower_t(l: &[f64], n: usize, b: &mut [f64]) {
 
 /// SPD inverse from the Cholesky factor: K^{-1} = L^{-T} L^{-1}.
 pub fn spd_inverse_from_chol(l: &[f64], n: usize) -> Vec<f64> {
-    // Solve K x_j = e_j column by column (O(n^3), fine at n = 200).
     let mut inv = vec![0.0; n * n];
     let mut col = vec![0.0; n];
+    spd_inverse_from_chol_into(l, n, &mut inv, &mut col);
+    inv
+}
+
+/// Allocation-free [`spd_inverse_from_chol`]: writes K^{-1} into `inv`
+/// (n*n) using `col` (n) as scratch.
+pub fn spd_inverse_from_chol_into(l: &[f64], n: usize, inv: &mut [f64], col: &mut [f64]) {
+    // Solve K x_j = e_j column by column (O(n^3), fine at n = 200).
     for j in 0..n {
         col.iter_mut().for_each(|v| *v = 0.0);
         col[j] = 1.0;
-        solve_lower(l, n, &mut col);
-        solve_lower_t(l, n, &mut col);
+        solve_lower(l, n, col);
+        solve_lower_t(l, n, col);
         for i in 0..n {
             inv[i * n + j] = col[i];
         }
     }
-    inv
 }
 
 /// log |K| from the Cholesky factor.

@@ -1,0 +1,105 @@
+//! Zero-allocation regression for the NUTS hot path: once the tape and
+//! tree workspace have warmed up, a full draw via
+//! `nuts_iterative::draw_in_workspace` over each native potential must
+//! perform **zero** heap allocations.
+//!
+//! Counted with a thread-local tally inside a wrapping global
+//! allocator, so the libtest harness threads cannot pollute the
+//! measurement.  This file intentionally contains a single #[test].
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use fugue::data;
+use fugue::mcmc::nuts_iterative::{draw_in_workspace, TreeWorkspace};
+use fugue::mcmc::Potential;
+use fugue::models::skim::SkimHypers;
+use fugue::models::{HmmNative, LogisticNative, SkimNative};
+use fugue::rng::Rng;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates to System; the counter is a plain thread-local Cell
+// of a Drop-free type (no TLS destructor, const-initialized, so it is
+// accessible from any allocation site on this thread).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocation_count() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+fn assert_draws_alloc_free<P: Potential>(name: &str, mut pot: P, eps: f64, seed: u64) {
+    let dim = pot.dim();
+    let max_depth = 6;
+    let mut ws = TreeWorkspace::new(dim, max_depth);
+    let mut rng = Rng::new(seed);
+    let mut z = vec![0.05; dim];
+    let inv_mass = vec![1.0; dim];
+
+    // warm-up: establish tape/arena/workspace capacity watermarks
+    for _ in 0..5 {
+        let _ = draw_in_workspace(&mut pot, &mut rng, &mut ws, &z, eps, &inv_mass, max_depth);
+        z.copy_from_slice(ws.proposal());
+    }
+
+    let before = allocation_count();
+    for _ in 0..15 {
+        let _ = draw_in_workspace(&mut pot, &mut rng, &mut ws, &z, eps, &inv_mass, max_depth);
+        z.copy_from_slice(ws.proposal());
+    }
+    let after = allocation_count();
+    assert_eq!(
+        after - before,
+        0,
+        "{name}: steady-state draws performed {} heap allocations",
+        after - before
+    );
+}
+
+#[test]
+fn steady_state_draws_are_allocation_free() {
+    let l = data::make_covtype_like(0, 500, 8);
+    assert_draws_alloc_free(
+        "logistic",
+        LogisticNative::new(l.x, l.y, 500, 8),
+        1e-2,
+        1,
+    );
+
+    let h = data::make_hmm(0, 80, 20, 3, 10);
+    assert_draws_alloc_free("hmm", HmmNative::new(h.obs, h.sup_states, 3, 10), 1e-2, 2);
+
+    let s = data::make_skim(0, 24, 5, 2);
+    assert_draws_alloc_free(
+        "skim",
+        SkimNative::new(s.x, s.y, 24, 5, SkimHypers::default()),
+        5e-3,
+        3,
+    );
+}

@@ -4,7 +4,10 @@
 //! same data.  This pins the whole reproduction together: Table 2a's
 //! backends differ only in architecture, never in math.
 //!
-//! Requires `make artifacts` (skips gracefully when absent).
+//! Requires `make artifacts` (skips gracefully when absent) and the
+//! `pjrt` feature (the default build substitutes stub handles that
+//! cannot evaluate artifacts).
+#![cfg(feature = "pjrt")]
 
 use fugue::harness::builders::Workload;
 use fugue::rng::Rng;

@@ -81,6 +81,48 @@ fn prop_recursive_and_iterative_checks_coincide() {
 }
 
 #[test]
+fn prop_candidate_range_reproduces_appendix_a_sets() {
+    // For every odd n: |C(n)| == TrailingOnes(n), i_max == BitCount(n-1),
+    // and the candidates' bit counts tile [i_min, i_max] exactly — i.e.
+    // candidate_range addresses precisely the storage rows holding C(n).
+    check("candidate_range == C(n)", 300, |rng| {
+        let n = ((rng.next_u64() as u32) & ((1 << 24) - 1)) | 1; // odd
+        let set = candidate_set(n);
+        if set.len() != trailing_ones(n) as usize {
+            return Err(format!(
+                "n={n}: |C(n)| = {} but trailing_ones = {}",
+                set.len(),
+                trailing_ones(n)
+            ));
+        }
+        let (i_min, i_max) = candidate_range(n);
+        if i_max != bit_count(n - 1) {
+            return Err(format!("n={n}: i_max {} != BitCount(n-1) {}", i_max, bit_count(n - 1)));
+        }
+        let mut bcs: Vec<u32> = set.iter().map(|m| bit_count(*m)).collect();
+        bcs.sort_unstable();
+        let expect: Vec<u32> = (i_min..=i_max).collect();
+        if bcs != expect {
+            return Err(format!("n={n}: candidate bitcounts {bcs:?} != rows {expect:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn appendix_a_worked_examples() {
+    // the paper's worked example: n = 11 = 0b1011, C(11) = {10, 8}
+    assert_eq!(candidate_set(11), vec![10, 8]);
+    assert_eq!(candidate_range(11), (1, 2));
+    // n = 7 = 0b111: C(7) = {6, 4, 0}
+    assert_eq!(candidate_set(7), vec![6, 4, 0]);
+    assert_eq!(candidate_range(7), (0, 2));
+    // n = 5 = 0b101: C(5) = {4}
+    assert_eq!(candidate_set(5), vec![4]);
+    assert_eq!(candidate_range(5), (1, 1));
+}
+
+#[test]
 fn prop_bitcount_bounds_storage_index() {
     // max BitCount of even n < 2^d is d-1 => storage of size d suffices
     check("bitcount bound", 200, |rng| {

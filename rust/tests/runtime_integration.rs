@@ -2,7 +2,9 @@
 //! manifest-driven loading, buffer reuse, fused + vmapped transitions,
 //! stepwise potential, predict/loglik/ELBO executables.
 //!
-//! All tests skip gracefully when `artifacts/` is absent.
+//! Only built with `--features pjrt` (the default build substitutes
+//! stub handles); all tests skip gracefully when `artifacts/` is absent.
+#![cfg(feature = "pjrt")]
 
 use fugue::harness::builders::Workload;
 use fugue::runtime::engine::{literal_to_f64, Engine, HostTensor};

@@ -1,0 +1,87 @@
+//! Tape-reuse regression suite: for every native model, gradients
+//! computed on a *reused* tape (after many intervening evaluations at
+//! other points) must be bitwise identical to a fresh potential's
+//! first evaluation, and must match central finite differences.
+
+use fugue::autodiff::finite_diff;
+use fugue::data;
+use fugue::mcmc::Potential;
+use fugue::models::skim::SkimHypers;
+use fugue::models::{HmmNative, LogisticNative, SkimNative};
+use fugue::rng::Rng;
+
+fn check_reuse<P, F>(make: F, scale: f64, tol: f64, seed: u64)
+where
+    P: Potential,
+    F: Fn() -> P,
+{
+    let mut fresh = make();
+    let dim = fresh.dim();
+    let mut rng = Rng::new(seed);
+    let z: Vec<f64> = (0..dim).map(|_| rng.normal() * scale).collect();
+    let mut g_ref = vec![0.0; dim];
+    let u_ref = fresh.value_and_grad(&z, &mut g_ref);
+
+    // reused potential: pollute the tape at other points first
+    let mut reused = make();
+    let mut tmp = vec![0.0; dim];
+    for k in 0..5 {
+        let zk: Vec<f64> = z.iter().map(|v| v + 0.1 * (k as f64 + 1.0)).collect();
+        let _ = reused.value_and_grad(&zk, &mut tmp);
+    }
+    let mut g = vec![0.0; dim];
+    let u = reused.value_and_grad(&z, &mut g);
+    assert_eq!(u, u_ref, "reused tape changed the value");
+    assert_eq!(g, g_ref, "reused tape changed the gradient");
+
+    // and the reused gradient still matches finite differences
+    let fd = finite_diff(
+        &z,
+        |zz| {
+            let mut t = vec![0.0; dim];
+            reused.value_and_grad(zz, &mut t)
+        },
+        1e-6,
+    );
+    for i in 0..dim {
+        assert!(
+            (g[i] - fd[i]).abs() < tol * (1.0 + fd[i].abs()),
+            "grad[{i}] {} vs fd {}",
+            g[i],
+            fd[i]
+        );
+    }
+}
+
+#[test]
+fn logistic_tape_reuse() {
+    let d = data::make_covtype_like(11, 80, 5);
+    check_reuse(
+        move || LogisticNative::new(d.x.clone(), d.y.clone(), 80, 5),
+        0.5,
+        1e-5,
+        1,
+    );
+}
+
+#[test]
+fn hmm_tape_reuse() {
+    let d = data::make_hmm(12, 80, 20, 3, 10);
+    check_reuse(
+        move || HmmNative::new(d.obs.clone(), d.sup_states.clone(), 3, 10),
+        0.4,
+        1e-4,
+        2,
+    );
+}
+
+#[test]
+fn skim_tape_reuse() {
+    let d = data::make_skim(13, 25, 6, 2);
+    check_reuse(
+        move || SkimNative::new(d.x.clone(), d.y.clone(), 25, 6, SkimHypers::default()),
+        0.3,
+        2e-4,
+        3,
+    );
+}
