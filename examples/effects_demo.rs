@@ -5,7 +5,9 @@
 //!
 //!     cargo run --release --example effects_demo
 
-use fugue::effects::{log_density, traced, Condition, Interp, Replay, Seed, Substitute, TraceH};
+use fugue::effects::{
+    log_density, traced, Condition, Interp, Plate, Replay, Seed, Substitute, TraceH,
+};
 use fugue::ppl::Dist;
 
 /// A tiny hierarchical model: mu ~ N(0,1); y_i ~ N(mu, 0.5), i < 3.
@@ -45,7 +47,7 @@ fn main() {
         .map(|k| (format!("y{k}"), vec![0.8]))
         .collect();
     let mut s = Seed::new(7);
-    let mut c = Condition { data };
+    let mut c = Condition::new(data);
     let mut t = TraceH::default();
     {
         let mut interp = Interp::new(vec![&mut s, &mut c, &mut t]);
@@ -60,12 +62,8 @@ fn main() {
     // substitute: evaluate the joint at a chosen latent (HMC's view)
     for mu in [-1.0, 0.0, 0.76, 2.0] {
         let mut s = Seed::new(7);
-        let mut sub = Substitute {
-            data: [("mu".to_string(), vec![mu])].into_iter().collect(),
-        };
-        let mut c = Condition {
-            data: (0..3).map(|k| (format!("y{k}"), vec![0.8])).collect(),
-        };
+        let mut sub = Substitute::new([("mu".to_string(), vec![mu])].into_iter().collect());
+        let mut c = Condition::new((0..3).map(|k| (format!("y{k}"), vec![0.8])).collect());
         let mut t = TraceH::default();
         {
             let mut interp = Interp::new(vec![&mut s, &mut sub, &mut c, &mut t]);
@@ -76,9 +74,7 @@ fn main() {
 
     // replay: re-execute against a recorded trace
     let mut s = Seed::new(999);
-    let mut r = Replay {
-        guide_trace: tr.clone(),
-    };
+    let mut r = Replay::new(&tr);
     let mut t = TraceH::default();
     {
         let mut interp = Interp::new(vec![&mut s, &mut r, &mut t]);
@@ -86,4 +82,24 @@ fn main() {
     }
     assert_eq!(t.trace["mu"].value, tr["mu"].value);
     println!("\nreplay reproduces mu = {:+.3} under a different seed", t.trace["mu"].value[0]);
+
+    // plate: one vectorized site holding a batch of iid draws
+    let mut s = Seed::new(11);
+    let mut t = TraceH::default();
+    let mut p = Plate { size: 4 };
+    {
+        let mut interp = Interp::new(vec![&mut s, &mut t, &mut p]);
+        interp.sample(
+            "x",
+            Dist::Normal {
+                loc: 0.0,
+                scale: 1.0,
+            },
+        );
+    }
+    println!(
+        "plate(4): one site, {} iid draws, summed log_prob {:+.3}",
+        t.trace["x"].value.len(),
+        t.trace["x"].log_prob
+    );
 }

@@ -1,0 +1,54 @@
+//! Sparse regression with the horseshoe prior, compiled from pure
+//! `sample`/`observe` source: global-local shrinkage recovers the two
+//! true signals and crushes the noise coordinates — a model the seed
+//! repo could not express without hand-deriving a gradient.
+//!
+//!     cargo run --release --example horseshoe
+
+use fugue::compile::zoo::Horseshoe;
+use fugue::coordinator::{run_compiled_chains, NutsOptions};
+
+fn main() -> anyhow::Result<()> {
+    let (n, p, signals) = (100, 10, 3);
+    let model = Horseshoe::synthetic(7, n, p, signals);
+    println!(
+        "horseshoe regression: n={n} p={p}, true beta = [2.0 x {signals}, 0.0 x {}]",
+        p - signals
+    );
+
+    let opts = NutsOptions {
+        num_warmup: 600,
+        num_samples: 1200,
+        seed: 11,
+        target_accept: 0.9,
+        ..Default::default()
+    };
+    let (layout, results) = run_compiled_chains(&model, 2, 10, &opts)?;
+
+    // reconstruct beta_j = tau * lambda_j * z_j from constrained draws
+    let dim = layout.dim;
+    let lam_off = layout.latent("lambda").unwrap().offset;
+    let tau_off = layout.latent("tau").unwrap().offset;
+    let z_off = layout.latent("z").unwrap().offset;
+    let mut beta_mean = vec![0.0f64; p];
+    let mut draws = 0usize;
+    for r in &results {
+        for row in r.samples.chunks(dim) {
+            let tau = row[tau_off].exp();
+            for (j, bm) in beta_mean.iter_mut().enumerate() {
+                *bm += tau * row[lam_off + j].exp() * row[z_off + j];
+            }
+            draws += 1;
+        }
+    }
+    println!("\nposterior mean beta ({draws} draws):");
+    for (j, bm) in beta_mean.iter_mut().enumerate() {
+        *bm /= draws as f64;
+        let truth = if j < signals { 2.0 } else { 0.0 };
+        println!("  beta[{j}] = {bm:+.3}   (truth {truth:+.1})");
+    }
+
+    let divergences: u64 = results.iter().map(|r| r.divergences).sum();
+    println!("\n{divergences} divergences");
+    Ok(())
+}

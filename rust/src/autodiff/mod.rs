@@ -384,6 +384,173 @@ impl Tape {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Scalar algebra abstraction (the model compiler's value domain)
+// ---------------------------------------------------------------------------
+
+/// Scalar algebra that generic model code can be evaluated over.
+///
+/// The model compiler ([`crate::compile`]) runs the *same* probabilistic
+/// program in two value domains: plain `f64` ([`F64Alg`], used by the
+/// trace pass that discovers sites and shapes) and tape nodes (`impl
+/// Alg for Tape`, used by the evaluation pass so the joint log-density
+/// comes out differentiable).  Every operation threads through `&mut
+/// self` because the tape instance records each node.
+///
+/// Implementations must agree numerically: for any program `p`,
+/// evaluating `p` over [`F64Alg`] and reading [`Alg::val`] of the result
+/// over a [`Tape`] must produce the same floating-point values (the
+/// tape ops are defined in terms of the identical `f64` arithmetic).
+pub trait Alg {
+    /// Value handle: `f64` itself, or a [`Var`] on a tape.
+    type V: Copy + std::fmt::Debug;
+
+    /// Embed a constant.
+    fn lit(&mut self, x: f64) -> Self::V;
+    /// Primal (forward) value of `v`.
+    fn val(&self, v: Self::V) -> f64;
+
+    fn add(&mut self, a: Self::V, b: Self::V) -> Self::V;
+    fn sub(&mut self, a: Self::V, b: Self::V) -> Self::V;
+    fn mul(&mut self, a: Self::V, b: Self::V) -> Self::V;
+    fn div(&mut self, a: Self::V, b: Self::V) -> Self::V;
+    fn neg(&mut self, a: Self::V) -> Self::V;
+    fn exp(&mut self, a: Self::V) -> Self::V;
+    fn ln(&mut self, a: Self::V) -> Self::V;
+    /// ln(1 + a).
+    fn log1p(&mut self, a: Self::V) -> Self::V;
+    fn sqrt(&mut self, a: Self::V) -> Self::V;
+    /// log(1 + e^a), overflow-safe.
+    fn softplus(&mut self, a: Self::V) -> Self::V;
+    fn powi(&mut self, a: Self::V, n: i32) -> Self::V;
+    /// c * a for a constant c.
+    fn scale(&mut self, a: Self::V, c: f64) -> Self::V;
+    /// a + c for a constant c.
+    fn offset(&mut self, a: Self::V, c: f64) -> Self::V;
+
+    fn square(&mut self, a: Self::V) -> Self::V {
+        self.powi(a, 2)
+    }
+}
+
+/// Plain-`f64` instance of [`Alg`]: zero-sized, no recording.  The
+/// model compiler's trace pass and any prior-simulation path run over
+/// this algebra.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct F64Alg;
+
+impl Alg for F64Alg {
+    type V = f64;
+
+    fn lit(&mut self, x: f64) -> f64 {
+        x
+    }
+    fn val(&self, v: f64) -> f64 {
+        v
+    }
+    fn add(&mut self, a: f64, b: f64) -> f64 {
+        a + b
+    }
+    fn sub(&mut self, a: f64, b: f64) -> f64 {
+        a - b
+    }
+    fn mul(&mut self, a: f64, b: f64) -> f64 {
+        a * b
+    }
+    fn div(&mut self, a: f64, b: f64) -> f64 {
+        a / b
+    }
+    fn neg(&mut self, a: f64) -> f64 {
+        -a
+    }
+    fn exp(&mut self, a: f64) -> f64 {
+        a.exp()
+    }
+    fn ln(&mut self, a: f64) -> f64 {
+        a.ln()
+    }
+    fn log1p(&mut self, a: f64) -> f64 {
+        a.ln_1p()
+    }
+    fn sqrt(&mut self, a: f64) -> f64 {
+        a.sqrt()
+    }
+    fn softplus(&mut self, a: f64) -> f64 {
+        // same branch structure as [`Tape::softplus`] so the two value
+        // domains agree bitwise
+        if a > 30.0 {
+            a
+        } else {
+            a.exp().ln_1p()
+        }
+    }
+    fn powi(&mut self, a: f64, n: i32) -> f64 {
+        a.powi(n)
+    }
+    fn scale(&mut self, a: f64, c: f64) -> f64 {
+        c * a
+    }
+    fn offset(&mut self, a: f64, c: f64) -> f64 {
+        a + c
+    }
+}
+
+/// The tape itself is the differentiable instance of [`Alg`]: each
+/// operation appends a node, so a program evaluated through this impl
+/// leaves a complete reverse-mode graph behind.
+impl Alg for Tape {
+    type V = Var;
+
+    fn lit(&mut self, x: f64) -> Var {
+        Tape::constant(self, x)
+    }
+    fn val(&self, v: Var) -> f64 {
+        Tape::value(self, v)
+    }
+    fn add(&mut self, a: Var, b: Var) -> Var {
+        Tape::add(self, a, b)
+    }
+    fn sub(&mut self, a: Var, b: Var) -> Var {
+        Tape::sub(self, a, b)
+    }
+    fn mul(&mut self, a: Var, b: Var) -> Var {
+        Tape::mul(self, a, b)
+    }
+    fn div(&mut self, a: Var, b: Var) -> Var {
+        Tape::div(self, a, b)
+    }
+    fn neg(&mut self, a: Var) -> Var {
+        Tape::neg(self, a)
+    }
+    fn exp(&mut self, a: Var) -> Var {
+        Tape::exp(self, a)
+    }
+    fn ln(&mut self, a: Var) -> Var {
+        Tape::ln(self, a)
+    }
+    fn log1p(&mut self, a: Var) -> Var {
+        Tape::log1p(self, a)
+    }
+    fn sqrt(&mut self, a: Var) -> Var {
+        Tape::sqrt(self, a)
+    }
+    fn softplus(&mut self, a: Var) -> Var {
+        Tape::softplus(self, a)
+    }
+    fn powi(&mut self, a: Var, n: i32) -> Var {
+        Tape::powi(self, a, n)
+    }
+    fn scale(&mut self, a: Var, c: f64) -> Var {
+        Tape::scale(self, a, c)
+    }
+    fn offset(&mut self, a: Var, c: f64) -> Var {
+        Tape::offset(self, a, c)
+    }
+    fn square(&mut self, a: Var) -> Var {
+        Tape::square(self, a)
+    }
+}
+
 /// Gradient of `f` at `x` by central finite differences (test utility).
 pub fn finite_diff<F: FnMut(&[f64]) -> f64>(x: &[f64], mut f: F, h: f64) -> Vec<f64> {
     let mut g = vec![0.0; x.len()];
@@ -523,6 +690,39 @@ mod tests {
         let adj = reused.grad(rout);
         let rgrad: Vec<f64> = rvars.iter().map(|v| adj[v.0 as usize]).collect();
         assert_eq!(rgrad, fgrad);
+    }
+
+    /// The same generic program evaluated over F64Alg and over a tape
+    /// must agree bitwise (the model compiler's correctness hinge).
+    fn alg_program<A: Alg>(a: &mut A, x: A::V, y: A::V) -> A::V {
+        let s = a.add(x, y);
+        let e = a.exp(s);
+        let l = a.log1p(e);
+        let q = a.square(x);
+        let sc = a.scale(q, -0.5);
+        let sp = a.softplus(y);
+        let d = a.div(sc, sp);
+        let m = a.mul(l, d);
+        let sq = a.sqrt(e);
+        let n = a.neg(sq);
+        let o = a.offset(m, 0.25);
+        let p = a.powi(y, 3);
+        let t = a.sub(o, n);
+        let ln = a.ln(e);
+        let u = a.add(t, p);
+        a.add(u, ln)
+    }
+
+    #[test]
+    fn alg_domains_agree_bitwise() {
+        for &(x, y) in &[(0.3, -1.2), (2.0, 0.5), (-0.7, 31.5)] {
+            let mut fa = F64Alg;
+            let plain = alg_program(&mut fa, x, y);
+            let mut t = Tape::new();
+            let (vx, vy) = (t.input(x), t.input(y));
+            let out = alg_program(&mut t, vx, vy);
+            assert_eq!(t.value(out), plain, "x={x} y={y}");
+        }
     }
 
     #[test]

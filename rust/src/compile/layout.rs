@@ -1,0 +1,422 @@
+//! The compiler's discovery pass: run the program once over the `f64`
+//! algebra with prior draws (a `trace` + `substitute` composition in
+//! the paper's vocabulary), record every site, and assign the flat
+//! unconstrained parameter layout.
+//!
+//! # Layout invariant
+//!
+//! Latent sites are packed in **sorted site-name order** — the JAX
+//! `ravel_pytree` convention the whole repo shares (see
+//! `ARCHITECTURE.md`): the logistic model's flat vector is
+//! `[b, m_0..m_{D-1}]` because `"b" < "m"`.  Observed sites occupy no
+//! span.  Every site also remembers the program *visit order*, which
+//! the evaluation pass uses to replay the program without any string
+//! lookups (an O(1) cursor + pre-hashed key check per site).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::autodiff::F64Alg;
+use crate::compile::{pool_take, DistV, EffModel, ProbCtx};
+use crate::effects::site_key;
+use crate::ppl::dist::Support;
+use crate::ppl::special::sigmoid;
+use crate::rng::Rng;
+use crate::runtime::ParamSpan;
+
+/// Unconstraining bijection of one latent site (applied elementwise).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SiteTransform {
+    /// Real support: identity, no Jacobian term.
+    Identity,
+    /// Positive support: `y = exp(u)`, `log|J| = u`.
+    Exp,
+    /// Bounded support: `y = low + (high-low)·σ(u)`,
+    /// `log|J| = ln(high-low) - softplus(u) - softplus(-u)`.
+    Interval { low: f64, high: f64 },
+}
+
+impl SiteTransform {
+    fn for_latent(support: Support, interval: Option<(f64, f64)>) -> Result<SiteTransform> {
+        Ok(match support {
+            Support::Real => SiteTransform::Identity,
+            Support::Positive => SiteTransform::Exp,
+            Support::UnitInterval => {
+                let (low, high) = interval.unwrap_or((0.0, 1.0));
+                SiteTransform::Interval { low, high }
+            }
+            Support::Simplex => {
+                bail!("simplex-supported latent sites are not compilable yet")
+            }
+            Support::Discrete => {
+                bail!("discrete latent sites cannot be sampled by NUTS (marginalize or observe them)")
+            }
+        })
+    }
+
+    /// Map one unconstrained coordinate onto the site's support (plain
+    /// `f64`; used for reporting draws in the constrained space).
+    pub fn constrain(&self, u: f64) -> f64 {
+        match *self {
+            SiteTransform::Identity => u,
+            SiteTransform::Exp => u.exp(),
+            SiteTransform::Interval { low, high } => low + (high - low) * sigmoid(u),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SiteTransform::Identity => "real",
+            SiteTransform::Exp => "positive",
+            SiteTransform::Interval { .. } => "interval",
+        }
+    }
+}
+
+/// One site discovered by the trace pass.
+#[derive(Debug, Clone)]
+pub struct SiteSpec {
+    pub name: String,
+    /// Pre-hashed [`site_key`] of `name` (the evaluation pass matches
+    /// sites by this key — no string hashing in the hot loop).
+    pub key: u64,
+    /// Number of scalar events at the site.
+    pub event_len: usize,
+    /// Span start in the flat unconstrained vector (latent sites only).
+    pub offset: usize,
+    pub observed: bool,
+    pub transform: SiteTransform,
+}
+
+/// The compiled parameter layout: all sites in sorted-name order plus
+/// the program visit order and the total unconstrained dimension.
+#[derive(Debug, Clone)]
+pub struct SiteLayout {
+    /// All sites, sorted by name (the `[b, m...]` invariant).
+    pub sites: Vec<SiteSpec>,
+    /// Program visit order → index into [`SiteLayout::sites`].
+    pub visit: Vec<usize>,
+    /// Total unconstrained dimension (sum of latent spans).
+    pub dim: usize,
+}
+
+impl SiteLayout {
+    /// Run the discovery pass over `model` and build its layout.
+    pub fn trace<M: EffModel>(model: &M, seed: u64) -> Result<SiteLayout> {
+        let mut ctx = TraceCtx::new(seed);
+        model.run(&mut ctx);
+        SiteLayout::build(ctx.recs)
+    }
+
+    fn build(recs: Vec<TraceRec>) -> Result<SiteLayout> {
+        let mut order: Vec<usize> = (0..recs.len()).collect();
+        order.sort_by(|&a, &b| recs[a].name.cmp(&recs[b].name));
+        for w in order.windows(2) {
+            if recs[w[0]].name == recs[w[1]].name {
+                bail!("duplicate site '{}'", recs[w[0]].name);
+            }
+        }
+        let mut sites = Vec::with_capacity(recs.len());
+        let mut visit = vec![0usize; recs.len()];
+        let mut dim = 0usize;
+        for (pos, &ri) in order.iter().enumerate() {
+            let r = &recs[ri];
+            let transform = if r.observed {
+                SiteTransform::Identity
+            } else {
+                SiteTransform::for_latent(r.support, r.interval)
+                    .map_err(|e| anyhow!("site '{}': {e}", r.name))?
+            };
+            let offset = if r.observed {
+                0
+            } else {
+                let o = dim;
+                dim += r.event_len;
+                o
+            };
+            visit[ri] = pos;
+            sites.push(SiteSpec {
+                name: r.name.clone(),
+                key: r.key,
+                event_len: r.event_len,
+                offset,
+                observed: r.observed,
+                transform,
+            });
+        }
+        if dim == 0 {
+            bail!("model has no latent sites (nothing for NUTS to sample)");
+        }
+        Ok(SiteLayout { sites, visit, dim })
+    }
+
+    /// Latent-site spans in flat order, as manifest-style
+    /// [`ParamSpan`]s (labels for posterior summaries).
+    pub fn param_spans(&self) -> Vec<ParamSpan> {
+        self.sites
+            .iter()
+            .filter(|s| !s.observed)
+            .map(|s| ParamSpan {
+                site: s.name.clone(),
+                offset: s.offset,
+                size: s.event_len,
+                unconstrained_shape: vec![s.event_len],
+                constrained_shape: vec![s.event_len],
+                support: s.transform.name().to_string(),
+            })
+            .collect()
+    }
+
+    /// Apply each latent site's constraining transform elementwise to a
+    /// flat unconstrained row (to report draws in the constrained
+    /// space).
+    pub fn constrain_row(&self, row: &mut [f64]) {
+        assert_eq!(row.len(), self.dim, "constrain_row: dimension mismatch");
+        for s in self.sites.iter().filter(|s| !s.observed) {
+            for u in &mut row[s.offset..s.offset + s.event_len] {
+                *u = s.transform.constrain(*u);
+            }
+        }
+    }
+
+    /// The latent site named `name`, if any.
+    pub fn latent(&self, name: &str) -> Option<&SiteSpec> {
+        self.sites.iter().find(|s| !s.observed && s.name == name)
+    }
+}
+
+/// One record of the discovery pass, in program visit order.
+pub(crate) struct TraceRec {
+    name: String,
+    key: u64,
+    event_len: usize,
+    observed: bool,
+    support: Support,
+    interval: Option<(f64, f64)>,
+}
+
+/// The discovery interpreter: `f64` algebra, prior draws for latent
+/// values (their numeric values are discarded — only the site metadata
+/// survives into the layout).
+pub(crate) struct TraceCtx {
+    alg: F64Alg,
+    rng: Rng,
+    pool: Vec<Vec<f64>>,
+    pub(crate) recs: Vec<TraceRec>,
+}
+
+impl TraceCtx {
+    pub(crate) fn new(seed: u64) -> TraceCtx {
+        TraceCtx {
+            alg: F64Alg,
+            rng: Rng::new(seed),
+            pool: Vec::new(),
+            recs: Vec::new(),
+        }
+    }
+
+    fn record_latent(&mut self, name: &str, d: &DistV<f64>, event_len: usize) {
+        self.recs.push(TraceRec {
+            name: name.to_string(),
+            key: site_key(name),
+            event_len,
+            observed: false,
+            support: d.support(),
+            interval: d.interval(),
+        });
+    }
+
+    fn record_obs(&mut self, name: &str, event_len: usize) {
+        self.recs.push(TraceRec {
+            name: name.to_string(),
+            key: site_key(name),
+            event_len,
+            observed: true,
+            support: Support::Real,
+            interval: None,
+        });
+    }
+
+    fn draw(&mut self, d: &DistV<f64>) -> f64 {
+        let mut sub = self.rng.split(0);
+        d.to_dist().sample(&mut sub)[0]
+    }
+}
+
+impl ProbCtx for TraceCtx {
+    type V = f64;
+    type A = F64Alg;
+
+    fn alg(&mut self) -> &mut F64Alg {
+        &mut self.alg
+    }
+
+    fn sample(&mut self, name: &str, d: DistV<f64>) -> f64 {
+        self.record_latent(name, &d, 1);
+        self.draw(&d)
+    }
+
+    fn sample_vec(&mut self, name: &str, d: DistV<f64>, n: usize, out: &mut Vec<f64>) {
+        self.record_latent(name, &d, n);
+        for _ in 0..n {
+            let v = self.draw(&d);
+            out.push(v);
+        }
+    }
+
+    fn observe(&mut self, name: &str, _d: DistV<f64>, _y: f64) {
+        self.record_obs(name, 1);
+    }
+
+    fn observe_iid(&mut self, name: &str, _d: DistV<f64>, ys: &[f64]) {
+        self.record_obs(name, ys.len());
+    }
+
+    fn observe_normal(&mut self, name: &str, locs: &[f64], _scale: f64, ys: &[f64]) {
+        assert_eq!(
+            locs.len(),
+            ys.len(),
+            "site '{name}': locations/observations length mismatch"
+        );
+        self.record_obs(name, ys.len());
+    }
+
+    fn observe_normal_fixed(&mut self, name: &str, locs: &[f64], sigmas: &[f64], ys: &[f64]) {
+        assert_eq!(
+            locs.len(),
+            ys.len(),
+            "site '{name}': locations/observations length mismatch"
+        );
+        assert_eq!(
+            sigmas.len(),
+            ys.len(),
+            "site '{name}': scales/observations length mismatch"
+        );
+        self.record_obs(name, ys.len());
+    }
+
+    fn observe_bernoulli_logits(&mut self, name: &str, logits: &[f64], ys: &[f64]) {
+        assert_eq!(
+            logits.len(),
+            ys.len(),
+            "site '{name}': logits/observations length mismatch"
+        );
+        self.record_obs(name, ys.len());
+    }
+
+    fn vec_take(&mut self) -> Vec<f64> {
+        pool_take(&mut self.pool)
+    }
+
+    fn vec_put(&mut self, buf: Vec<f64>) {
+        self.pool.push(buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compile::zoo::{EightSchools, Horseshoe, LogisticModel};
+    use crate::data;
+
+    #[test]
+    fn eight_schools_layout_is_sorted() {
+        let layout = SiteLayout::trace(&EightSchools::classic(), 0).unwrap();
+        // sorted names: mu < tau < theta (y is observed, no span)
+        assert_eq!(layout.dim, 10);
+        let mu = layout.latent("mu").unwrap();
+        let tau = layout.latent("tau").unwrap();
+        let theta = layout.latent("theta").unwrap();
+        assert_eq!((mu.offset, mu.event_len), (0, 1));
+        assert_eq!((tau.offset, tau.event_len), (1, 1));
+        assert_eq!((theta.offset, theta.event_len), (2, 8));
+        assert_eq!(mu.transform, SiteTransform::Identity);
+        assert_eq!(tau.transform, SiteTransform::Exp);
+        assert!(layout.latent("y").is_none());
+    }
+
+    #[test]
+    fn logistic_layout_matches_ravel_pytree_invariant() {
+        let d = data::make_covtype_like(0, 20, 3);
+        let m = LogisticModel {
+            x: d.x,
+            y: d.y,
+            n: 20,
+            d: 3,
+        };
+        let layout = SiteLayout::trace(&m, 0).unwrap();
+        // "b" < "m": intercept first, then weights — [b, m...]
+        assert_eq!(layout.dim, 4);
+        assert_eq!(layout.latent("b").unwrap().offset, 0);
+        assert_eq!(layout.latent("m").unwrap().offset, 1);
+    }
+
+    #[test]
+    fn horseshoe_layout() {
+        let m = Horseshoe::synthetic(0, 12, 4, 2);
+        let layout = SiteLayout::trace(&m, 0).unwrap();
+        // lambda(4) < sigma < tau < z(4)
+        assert_eq!(layout.dim, 10);
+        assert_eq!(layout.latent("lambda").unwrap().offset, 0);
+        assert_eq!(layout.latent("sigma").unwrap().offset, 4);
+        assert_eq!(layout.latent("tau").unwrap().offset, 5);
+        assert_eq!(layout.latent("z").unwrap().offset, 6);
+        let spans = layout.param_spans();
+        assert_eq!(spans.len(), 4);
+        assert_eq!(spans[0].site, "lambda");
+        assert_eq!(spans[0].support, "positive");
+    }
+
+    struct DupSite;
+    impl EffModel for DupSite {
+        fn run<C: ProbCtx>(&self, c: &mut C) {
+            let d = c.normal(0.0, 1.0);
+            c.sample("x", d);
+            let d = c.normal(0.0, 1.0);
+            c.sample("x", d);
+        }
+    }
+
+    #[test]
+    fn duplicate_sites_are_rejected() {
+        let err = SiteLayout::trace(&DupSite, 0).unwrap_err();
+        assert!(err.to_string().contains("duplicate site"));
+    }
+
+    struct DiscreteLatent;
+    impl EffModel for DiscreteLatent {
+        fn run<C: ProbCtx>(&self, c: &mut C) {
+            let l = c.lit(0.3);
+            c.sample("k", DistV::BernoulliLogits { logits: l });
+        }
+    }
+
+    #[test]
+    fn discrete_latents_are_rejected() {
+        let err = SiteLayout::trace(&DiscreteLatent, 0).unwrap_err();
+        assert!(err.to_string().contains("discrete"), "{err}");
+    }
+
+    struct NoLatents;
+    impl EffModel for NoLatents {
+        fn run<C: ProbCtx>(&self, c: &mut C) {
+            let d = c.normal(0.0, 1.0);
+            c.observe("y", d, 0.5);
+        }
+    }
+
+    #[test]
+    fn models_without_latents_are_rejected() {
+        let err = SiteLayout::trace(&NoLatents, 0).unwrap_err();
+        assert!(err.to_string().contains("no latent sites"));
+    }
+
+    #[test]
+    fn constrain_row_applies_transforms() {
+        let layout = SiteLayout::trace(&EightSchools::classic(), 0).unwrap();
+        let mut row = vec![0.5; 10];
+        layout.constrain_row(&mut row);
+        assert_eq!(row[0], 0.5); // mu: identity
+        assert!((row[1] - 0.5f64.exp()).abs() < 1e-15); // tau: exp
+        assert_eq!(row[2], 0.5); // theta: identity
+    }
+}

@@ -13,6 +13,6 @@ pub mod sampler;
 pub mod warmup;
 
 pub use chain::{chain_start, run_chain, run_chains, ChainResult, ChainStats, NutsOptions};
-pub use parallel::{run_chains_parallel, ParallelChainRunner};
+pub use parallel::{run_chains_parallel, run_compiled_chains, ParallelChainRunner};
 pub use sampler::{FusedSampler, NativeSampler, Sampler, TreeAlgorithm};
 pub use warmup::WarmupSchedule;

@@ -11,8 +11,9 @@
 
 use anyhow::Result;
 
+use crate::compile::{CompiledModel, EffModel, SiteLayout};
 use crate::coordinator::chain::{chain_start, run_chain, ChainResult, NutsOptions};
-use crate::coordinator::sampler::Sampler;
+use crate::coordinator::sampler::{NativeSampler, Sampler, TreeAlgorithm};
 
 /// Runs N chains across scoped worker threads.
 pub struct ParallelChainRunner {
@@ -81,6 +82,38 @@ where
     let mut sampler = make_sampler(c)?;
     let (init_z, chain_opts) = chain_start(sampler.dim(), opts, c);
     run_chain(&mut sampler, &init_z, &chain_opts)
+}
+
+/// Compile an effect-handler program and run `num_chains` parallel
+/// iterative-NUTS chains over it — model source to posterior draws in
+/// one call, no hand-written gradients anywhere.
+///
+/// The discovery pass runs exactly once; each worker thread then gets
+/// its own [`CompiledModel`] over the shared layout (potentials own
+/// mutable tape/scratch state, so they cannot be shared), keeping
+/// chains fully independent and the results bitwise identical to a
+/// sequential run with the same options.  Returns the compiled
+/// [`SiteLayout`] (for labeling and constraining draws) alongside the
+/// per-chain results.
+pub fn run_compiled_chains<M: EffModel + Clone + Sync>(
+    model: &M,
+    num_chains: usize,
+    max_tree_depth: u32,
+    opts: &NutsOptions,
+) -> Result<(SiteLayout, Vec<ChainResult>)> {
+    let layout = SiteLayout::trace(model, opts.seed)?;
+    let runner = ParallelChainRunner::new(num_chains);
+    let results = runner.run(
+        |_c| {
+            Ok(NativeSampler::new(
+                CompiledModel::new(model.clone(), layout.clone()),
+                TreeAlgorithm::Iterative,
+                max_tree_depth,
+            ))
+        },
+        opts,
+    )?;
+    Ok((layout, results))
 }
 
 /// Convenience wrapper: run `num_chains` chains in parallel with the

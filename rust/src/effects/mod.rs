@@ -13,23 +13,58 @@
 //! | [`Condition`]  | sample         | fixes values, marks observed             |
 //! | [`Substitute`] | sample, param  | fixes values, stays unobserved           |
 //! | [`Replay`]     | sample         | replays values from a recorded trace     |
+//! | [`Block`]      | all            | hides matching sites from outer handlers |
+//! | [`Plate`]      | sample         | broadcasts sites to i.i.d. batches       |
+//!
+//! Sites are addressed by name, but every [`Msg`] also carries a
+//! pre-hashed [`Msg::key`] ([`site_key`]), and the value-substituting
+//! handlers ([`Condition`], [`Substitute`], [`Replay`]) look sites up
+//! by that interned key — a binary search over a sorted `(key, value)`
+//! table, so the lookup itself does no string hashing or map traversal.
+//! (Message construction still allocates the site name and matched
+//! values are cloned; the truly allocation-free hot loop is the model
+//! compiler's replay pass, which bypasses messages entirely.)
 //!
 //! The native models in [`crate::models`] use these for data generation
-//! and prior/posterior predictive checks; the Rust test-suite asserts
-//! handler semantics match the Python implementation site-for-site.
+//! and prior/posterior predictive checks; the model compiler in
+//! [`crate::compile`] turns the same `sample`/`observe` vocabulary into
+//! differentiable NUTS potentials.  The Rust test-suite asserts handler
+//! semantics match the Python implementation site-for-site.
 
 use std::collections::BTreeMap;
 
 use crate::ppl::dist::Dist;
 use crate::rng::Rng;
 
+/// FNV-1a hash of a site name: the interned key carried by [`Msg::key`]
+/// and used by the value-substituting handlers.  Stable across runs (no
+/// randomized state), allocation-free, and collision-safe in practice
+/// for model-sized site sets (64-bit FNV).
+pub fn site_key(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Message passed through the handler stack for every primitive site.
 #[derive(Debug, Clone)]
 pub struct Msg {
     pub name: String,
+    /// Pre-hashed [`site_key`] of `name`, computed once per message so
+    /// every handler on the stack can match sites without touching the
+    /// string again.
+    pub key: u64,
     pub dist: Option<Dist>,
     pub value: Option<Vec<f64>>,
     pub is_observed: bool,
+    /// `Some(n)`: the site is a vectorized batch of `n` i.i.d. draws
+    /// from `dist` (one message for the whole batch instead of `n`
+    /// per-scalar messages).  Set by [`Interp::sample_plate`] /
+    /// [`Interp::observe_plate`] or broadcast by a [`Plate`] handler.
+    pub plate: Option<usize>,
     pub stop: bool,
 }
 
@@ -50,7 +85,35 @@ pub trait Handler {
     fn postprocess(&mut self, _msg: &mut Msg) {}
 }
 
+/// Sorted `(site_key, value)` table shared by the value-substituting
+/// handlers.
+fn intern(data: BTreeMap<String, Vec<f64>>) -> Vec<(u64, Vec<f64>)> {
+    let mut entries: Vec<(u64, Vec<f64>)> = data
+        .into_iter()
+        .map(|(name, value)| (site_key(&name), value))
+        .collect();
+    entries.sort_by_key(|e| e.0);
+    entries
+}
+
+fn lookup(entries: &[(u64, Vec<f64>)], key: u64) -> Option<&Vec<f64>> {
+    entries
+        .binary_search_by_key(&key, |e| e.0)
+        .ok()
+        .map(|i| &entries[i].1)
+}
+
 /// Seeds sample statements with an RNG, splitting per site.
+///
+/// ```
+/// use fugue::effects::{Interp, Seed};
+/// use fugue::ppl::Dist;
+///
+/// let mut s = Seed::new(7);
+/// let mut i = Interp::new(vec![&mut s]);
+/// let x = i.sample("x", Dist::Normal { loc: 0.0, scale: 1.0 });
+/// assert!(x[0].is_finite());
+/// ```
 pub struct Seed {
     rng: Rng,
 }
@@ -68,13 +131,39 @@ impl Handler for Seed {
         if msg.value.is_none() {
             if let Some(d) = &msg.dist {
                 let mut sub = self.rng.split(0);
-                msg.value = Some(d.sample(&mut sub));
+                let value = match msg.plate {
+                    None => d.sample(&mut sub),
+                    Some(n) => {
+                        let mut v = Vec::with_capacity(n * d.event_len());
+                        for _ in 0..n {
+                            v.extend(d.sample(&mut sub));
+                        }
+                        v
+                    }
+                };
+                msg.value = Some(value);
             }
         }
     }
 }
 
 /// Records every site into a [`Trace`].
+///
+/// ```
+/// use fugue::effects::{Interp, Seed, TraceH};
+/// use fugue::ppl::Dist;
+///
+/// let mut s = Seed::new(0);
+/// let mut t = TraceH::default();
+/// {
+///     let mut i = Interp::new(vec![&mut s, &mut t]);
+///     let m = i.sample("m", Dist::Normal { loc: 0.0, scale: 1.0 });
+///     i.observe("y", Dist::Normal { loc: m[0], scale: 0.5 }, vec![0.3]);
+/// }
+/// assert_eq!(t.trace.len(), 2);
+/// assert!(!t.trace["m"].is_observed);
+/// assert!(t.trace["y"].is_observed);
+/// ```
 #[derive(Default)]
 pub struct TraceH {
     pub trace: Trace,
@@ -83,11 +172,18 @@ pub struct TraceH {
 impl Handler for TraceH {
     fn postprocess(&mut self, msg: &mut Msg) {
         let value = msg.value.clone().expect("traced site must have a value");
-        let log_prob = msg
-            .dist
-            .as_ref()
-            .map(|d| d.log_prob(&value))
-            .unwrap_or(0.0);
+        let log_prob = match &msg.dist {
+            Some(d) => {
+                if msg.plate.is_some() {
+                    // vectorized site: sum over the i.i.d. events
+                    let el = d.event_len().max(1);
+                    value.chunks(el).map(|ev| d.log_prob(ev)).sum()
+                } else {
+                    d.log_prob(&value)
+                }
+            }
+            None => 0.0,
+        };
         let prev = self.trace.insert(
             msg.name.clone(),
             Site {
@@ -102,13 +198,36 @@ impl Handler for TraceH {
 }
 
 /// Conditions matching sites to observed values.
+///
+/// ```
+/// use fugue::effects::{Condition, Interp, Seed, TraceH};
+/// use fugue::ppl::Dist;
+///
+/// let mut s = Seed::new(0);
+/// let mut c = Condition::new([("m".to_string(), vec![1.5])].into_iter().collect());
+/// let mut t = TraceH::default();
+/// {
+///     let mut i = Interp::new(vec![&mut s, &mut c, &mut t]);
+///     i.sample("m", Dist::Normal { loc: 0.0, scale: 1.0 });
+/// }
+/// assert_eq!(t.trace["m"].value, vec![1.5]);
+/// assert!(t.trace["m"].is_observed);
+/// ```
 pub struct Condition {
-    pub data: BTreeMap<String, Vec<f64>>,
+    entries: Vec<(u64, Vec<f64>)>,
+}
+
+impl Condition {
+    pub fn new(data: BTreeMap<String, Vec<f64>>) -> Condition {
+        Condition {
+            entries: intern(data),
+        }
+    }
 }
 
 impl Handler for Condition {
     fn process(&mut self, msg: &mut Msg) {
-        if let Some(v) = self.data.get(&msg.name) {
+        if let Some(v) = lookup(&self.entries, msg.key) {
             assert!(
                 !msg.is_observed,
                 "cannot condition already-observed site '{}'",
@@ -121,21 +240,75 @@ impl Handler for Condition {
 }
 
 /// Substitutes values without marking observed (HMC/SVI plumbing).
+///
+/// ```
+/// use fugue::effects::{Interp, Seed, Substitute, TraceH};
+/// use fugue::ppl::Dist;
+///
+/// let mut s = Seed::new(0);
+/// let mut sub = Substitute::new([("m".to_string(), vec![-1.5])].into_iter().collect());
+/// let mut t = TraceH::default();
+/// {
+///     let mut i = Interp::new(vec![&mut s, &mut sub, &mut t]);
+///     i.sample("m", Dist::Normal { loc: 0.0, scale: 1.0 });
+/// }
+/// assert_eq!(t.trace["m"].value, vec![-1.5]);
+/// assert!(!t.trace["m"].is_observed);
+/// ```
 pub struct Substitute {
-    pub data: BTreeMap<String, Vec<f64>>,
+    entries: Vec<(u64, Vec<f64>)>,
+}
+
+impl Substitute {
+    pub fn new(data: BTreeMap<String, Vec<f64>>) -> Substitute {
+        Substitute {
+            entries: intern(data),
+        }
+    }
 }
 
 impl Handler for Substitute {
     fn process(&mut self, msg: &mut Msg) {
-        if let Some(v) = self.data.get(&msg.name) {
+        if let Some(v) = lookup(&self.entries, msg.key) {
             msg.value = Some(v.clone());
         }
     }
 }
 
 /// Replays sample sites from a recorded trace.
+///
+/// ```
+/// use fugue::effects::{traced, Interp, Replay, Seed, TraceH};
+/// use fugue::ppl::Dist;
+///
+/// fn model(i: &mut Interp) {
+///     i.sample("m", Dist::Normal { loc: 0.0, scale: 1.0 });
+/// }
+///
+/// let first = traced(model, 3);
+/// let mut s = Seed::new(99); // a different seed ...
+/// let mut r = Replay::new(&first);
+/// let mut t = TraceH::default();
+/// {
+///     let mut i = Interp::new(vec![&mut s, &mut r, &mut t]);
+///     model(&mut i);
+/// }
+/// // ... yet the replayed value matches the recorded one
+/// assert_eq!(t.trace["m"].value, first["m"].value);
+/// ```
 pub struct Replay {
-    pub guide_trace: Trace,
+    entries: Vec<(u64, Vec<f64>)>,
+}
+
+impl Replay {
+    pub fn new(guide_trace: &Trace) -> Replay {
+        let mut entries: Vec<(u64, Vec<f64>)> = guide_trace
+            .iter()
+            .map(|(name, site)| (site_key(name), site.value.clone()))
+            .collect();
+        entries.sort_by_key(|e| e.0);
+        Replay { entries }
+    }
 }
 
 impl Handler for Replay {
@@ -143,13 +316,30 @@ impl Handler for Replay {
         if msg.is_observed {
             return;
         }
-        if let Some(site) = self.guide_trace.get(&msg.name) {
-            msg.value = Some(site.value.clone());
+        if let Some(v) = lookup(&self.entries, msg.key) {
+            msg.value = Some(v.clone());
         }
     }
 }
 
 /// Hides matching sites from outer handlers.
+///
+/// ```
+/// use fugue::effects::{Block, Interp, Msg, Seed, TraceH};
+/// use fugue::ppl::Dist;
+///
+/// let mut t = TraceH::default();
+/// let mut b = Block { hide: |m: &Msg| m.name == "m" };
+/// let mut s = Seed::new(1);
+/// {
+///     // seed innermost so hidden sites still get values
+///     let mut i = Interp::new(vec![&mut t, &mut b, &mut s]);
+///     i.sample("m", Dist::Normal { loc: 0.0, scale: 1.0 });
+///     i.sample("y", Dist::Normal { loc: 0.0, scale: 1.0 });
+/// }
+/// assert!(!t.trace.contains_key("m")); // blocked from the outer trace
+/// assert!(t.trace.contains_key("y"));
+/// ```
 pub struct Block<F: Fn(&Msg) -> bool> {
     pub hide: F,
 }
@@ -158,6 +348,41 @@ impl<F: Fn(&Msg) -> bool> Handler for Block<F> {
     fn process(&mut self, msg: &mut Msg) {
         if (self.hide)(msg) {
             msg.stop = true;
+        }
+    }
+}
+
+/// Broadcasts enclosed sites to vectorized batches of `size` i.i.d.
+/// draws: one message per site for the whole batch, instead of
+/// per-scalar messages (the batched fast path the model compiler uses
+/// for observation sites).
+///
+/// ```
+/// use fugue::effects::{Interp, Plate, Seed, TraceH};
+/// use fugue::ppl::Dist;
+///
+/// let mut s = Seed::new(0);
+/// let mut t = TraceH::default();
+/// let mut p = Plate { size: 3 };
+/// {
+///     let mut i = Interp::new(vec![&mut s, &mut t, &mut p]);
+///     let draws = i.sample("x", Dist::Normal { loc: 0.0, scale: 1.0 });
+///     assert_eq!(draws.len(), 3); // one site, three i.i.d. draws
+/// }
+/// assert_eq!(t.trace["x"].value.len(), 3);
+/// assert!(t.trace["x"].log_prob.is_finite()); // summed over the batch
+/// ```
+pub struct Plate {
+    pub size: usize,
+}
+
+impl Handler for Plate {
+    fn process(&mut self, msg: &mut Msg) {
+        // broadcast only value-less sample sites: observed sites and
+        // params already carry their (fixed-size) values, and nested
+        // plates keep the innermost size
+        if msg.plate.is_none() && msg.value.is_none() && msg.dist.is_some() {
+            msg.plate = Some(self.size);
         }
     }
 }
@@ -195,39 +420,57 @@ impl<'a> Interp<'a> {
         msg
     }
 
+    fn msg(name: &str, dist: Option<Dist>, value: Option<Vec<f64>>, observed: bool) -> Msg {
+        Msg {
+            key: site_key(name),
+            name: name.to_string(),
+            dist,
+            value,
+            is_observed: observed,
+            plate: None,
+            stop: false,
+        }
+    }
+
     /// `sample(name, dist)` primitive; returns the site value.
     pub fn sample(&mut self, name: &str, dist: Dist) -> Vec<f64> {
-        let msg = Msg {
-            name: name.to_string(),
-            dist: Some(dist),
-            value: None,
-            is_observed: false,
-            stop: false,
-        };
+        let msg = Self::msg(name, Some(dist), None, false);
         self.apply(msg).value.unwrap()
     }
 
     /// `sample(name, dist, obs)` — observed site.
     pub fn observe(&mut self, name: &str, dist: Dist, obs: Vec<f64>) -> Vec<f64> {
-        let msg = Msg {
-            name: name.to_string(),
-            dist: Some(dist),
-            value: Some(obs),
-            is_observed: true,
-            stop: false,
-        };
+        let msg = Self::msg(name, Some(dist), Some(obs), true);
         self.apply(msg).value.unwrap()
     }
 
     /// `param(name, init)` primitive.
     pub fn param(&mut self, name: &str, init: Vec<f64>) -> Vec<f64> {
-        let msg = Msg {
-            name: name.to_string(),
-            dist: None,
-            value: Some(init),
-            is_observed: false,
-            stop: false,
-        };
+        let msg = Self::msg(name, None, Some(init), false);
+        self.apply(msg).value.unwrap()
+    }
+
+    /// Vectorized `sample`: one site holding `n` i.i.d. draws from
+    /// `dist` (a single message for the whole batch).
+    pub fn sample_plate(&mut self, name: &str, dist: Dist, n: usize) -> Vec<f64> {
+        let mut msg = Self::msg(name, Some(dist), None, false);
+        msg.plate = Some(n);
+        self.apply(msg).value.unwrap()
+    }
+
+    /// Vectorized `observe`: one site holding a batch of i.i.d.
+    /// observations (`obs` concatenates the per-event values).
+    pub fn observe_plate(&mut self, name: &str, dist: Dist, obs: &[f64]) -> Vec<f64> {
+        let el = dist.event_len().max(1);
+        assert_eq!(
+            obs.len() % el,
+            0,
+            "site '{name}': observation length {} is not a multiple of the event length {el}",
+            obs.len()
+        );
+        let n = obs.len() / el;
+        let mut msg = Self::msg(name, Some(dist), Some(obs.to_vec()), true);
+        msg.plate = Some(n);
         self.apply(msg).value.unwrap()
     }
 }
@@ -293,9 +536,7 @@ mod tests {
     #[test]
     fn condition_marks_observed() {
         let mut s = Seed::new(1);
-        let mut c = Condition {
-            data: [("m".to_string(), vec![2.0])].into_iter().collect(),
-        };
+        let mut c = Condition::new([("m".to_string(), vec![2.0])].into_iter().collect());
         let mut t = TraceH::default();
         {
             let mut interp = Interp::new(vec![&mut s, &mut c, &mut t]);
@@ -311,9 +552,7 @@ mod tests {
     #[test]
     fn substitute_stays_unobserved() {
         let mut s = Seed::new(1);
-        let mut sub = Substitute {
-            data: [("m".to_string(), vec![-1.5])].into_iter().collect(),
-        };
+        let mut sub = Substitute::new([("m".to_string(), vec![-1.5])].into_iter().collect());
         let mut t = TraceH::default();
         {
             let mut interp = Interp::new(vec![&mut s, &mut sub, &mut t]);
@@ -327,9 +566,7 @@ mod tests {
     fn replay_reuses_trace_values() {
         let first = traced(toy_model, 3);
         let mut s = Seed::new(99);
-        let mut r = Replay {
-            guide_trace: first.clone(),
-        };
+        let mut r = Replay::new(&first);
         let mut t = TraceH::default();
         {
             let mut interp = Interp::new(vec![&mut s, &mut r, &mut t]);
@@ -354,5 +591,91 @@ mod tests {
         }
         assert!(!t.trace.contains_key("m"));
         assert!(t.trace.contains_key("y"));
+    }
+
+    #[test]
+    fn site_key_is_stable_and_distinct() {
+        assert_eq!(site_key("mu"), site_key("mu"));
+        assert_ne!(site_key("mu"), site_key("tau"));
+        assert_ne!(site_key(""), site_key("a"));
+    }
+
+    #[test]
+    fn plate_batches_iid_draws() {
+        let d = Dist::Normal {
+            loc: 0.0,
+            scale: 1.0,
+        };
+        let mut s = Seed::new(5);
+        let mut t = TraceH::default();
+        {
+            let mut interp = Interp::new(vec![&mut s, &mut t]);
+            let v = interp.sample_plate("x", d.clone(), 4);
+            assert_eq!(v.len(), 4);
+        }
+        let site = &t.trace["x"];
+        assert_eq!(site.value.len(), 4);
+        // summed log-prob over the batch
+        let expect: f64 = site.value.iter().map(|&x| d.log_prob(&[x])).sum();
+        assert!((site.log_prob - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observe_plate_sums_likelihood() {
+        let d = Dist::Normal {
+            loc: 1.0,
+            scale: 2.0,
+        };
+        let obs = [0.5, 1.5, -0.2];
+        let mut s = Seed::new(0);
+        let mut t = TraceH::default();
+        {
+            let mut interp = Interp::new(vec![&mut s, &mut t]);
+            interp.observe_plate("y", d.clone(), &obs);
+        }
+        let site = &t.trace["y"];
+        assert!(site.is_observed);
+        let expect: f64 = obs.iter().map(|&x| d.log_prob(&[x])).sum();
+        assert!((site.log_prob - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plate_handler_broadcasts_size() {
+        let mut s = Seed::new(2);
+        let mut t = TraceH::default();
+        let mut p = Plate { size: 5 };
+        {
+            let mut interp = Interp::new(vec![&mut s, &mut t, &mut p]);
+            let v = interp.sample(
+                "x",
+                Dist::Normal {
+                    loc: 0.0,
+                    scale: 1.0,
+                },
+            );
+            assert_eq!(v.len(), 5);
+        }
+        assert_eq!(t.trace["x"].value.len(), 5);
+    }
+
+    #[test]
+    fn condition_applies_to_plate_site() {
+        let d = Dist::Normal {
+            loc: 0.0,
+            scale: 1.0,
+        };
+        let mut s = Seed::new(0);
+        let mut c = Condition::new(
+            [("x".to_string(), vec![0.1, 0.2, 0.3])]
+                .into_iter()
+                .collect(),
+        );
+        let mut t = TraceH::default();
+        {
+            let mut interp = Interp::new(vec![&mut s, &mut c, &mut t]);
+            interp.sample_plate("x", d, 3);
+        }
+        assert_eq!(t.trace["x"].value, vec![0.1, 0.2, 0.3]);
+        assert!(t.trace["x"].is_observed);
     }
 }

@@ -9,7 +9,11 @@
 //!    same run also times a faithful *pre-optimization baseline*
 //!    (fresh tape per gradient, separate sigmoid/softplus exps, serial
 //!    dot product, per-draw workspace allocation — the seed code), so
-//!    every future PR has a like-for-like speedup number.
+//!    every future PR has a like-for-like speedup number, plus the
+//!    [`crate::compile`] **model-compiler** version of the same density
+//!    (`compiled_ms_per_leapfrog` / `compiled_overhead_vs_hand`): the
+//!    price of sampling a pure `sample`/`observe` program instead of a
+//!    hand-fused potential.
 //! 2. **multi-chain scaling** 1..K chains through
 //!    [`ParallelChainRunner`], reporting wall-clock, draws/sec,
 //!    parallel efficiency and the cross-chain split-R̂ of the pooled
@@ -25,6 +29,7 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::autodiff::{Tape, Var};
+use crate::compile::{compile, zoo::LogisticModel};
 use crate::config::Settings;
 use crate::coordinator::{
     run_chain, ChainResult, NativeSampler, NutsOptions, ParallelChainRunner, Sampler,
@@ -379,10 +384,13 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
         };
         let (base_ms, _) = time_fixed_eps(&mut base_sampler, 1e-3, timing_draws, settings.seed)?;
 
+        // keep a copy for the model-compiler comparison below (x/y move
+        // into the `make` closure)
+        let (cx, cy) = (x.clone(), y.clone());
         let make = move || -> Box<dyn Potential> {
             Box::new(LogisticNative::new(x.clone(), y.clone(), n, d))
         };
-        let bench = bench_model(
+        let mut bench = bench_model(
             "logistic",
             vec![("n", jnum(n as f64)), ("d", jnum(d as f64))],
             make,
@@ -394,6 +402,37 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
             (150, 300),
             10,
         )?;
+
+        // model-compiler comparison: the same density compiled from a
+        // pure sample/observe program (no hand-written gradient) — the
+        // overhead ratio is the price of generality
+        let mut comp_sampler = NativeSampler::new(
+            compile(
+                LogisticModel {
+                    x: cx,
+                    y: cy,
+                    n,
+                    d,
+                },
+                settings.seed,
+            )?,
+            TreeAlgorithm::Iterative,
+            TIMING_DEPTH,
+        );
+        let (comp_ms, _) = time_fixed_eps(&mut comp_sampler, 1e-3, timing_draws, settings.seed)?;
+        if let Json::Obj(map) = &mut bench.json {
+            let overhead = match map.get("ms_per_leapfrog") {
+                Some(Json::Num(opt_ms)) if *opt_ms > 0.0 => comp_ms / opt_ms,
+                _ => f64::NAN,
+            };
+            bench.text.push_str(&format!(
+                "  compiled (model compiler): {comp_ms:.5} ms/leapfrog -> {overhead:.2}x hand-fused\n"
+            ));
+            map.insert("compiled_ms_per_leapfrog".to_string(), jnum(comp_ms));
+            if overhead.is_finite() {
+                map.insert("compiled_overhead_vs_hand".to_string(), jnum(overhead));
+            }
+        }
         report.push_str(&bench.text);
         report.push('\n');
         models.insert("logistic".to_string(), bench.json);

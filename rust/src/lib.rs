@@ -19,11 +19,20 @@
 //! library ([`ppl`]), Table 1's effect handlers over a Rust model trait
 //! ([`effects`]), and pure-Rust recursive + iterative NUTS ([`mcmc`]).
 //!
+//! The [`compile`] module closes the loop between the two halves: it
+//! compiles any effect-handler program (`sample`/`observe` only — no
+//! hand-written density or gradient) into a differentiable
+//! [`mcmc::Potential`] via a trace/condition/transform/differentiate
+//! pipeline, so the native NUTS engine samples arbitrary models, not
+//! just the three hand-fused benchmarks.  See `ARCHITECTURE.md` for the
+//! paper-to-module map and the compiler dataflow.
+//!
 //! Python never runs on the request path: after `make artifacts`, the
 //! `fugue` binary is self-contained.
 
 pub mod autodiff;
 pub mod cli;
+pub mod compile;
 pub mod config;
 pub mod coordinator;
 pub mod data;

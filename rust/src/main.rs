@@ -35,6 +35,11 @@ SUBCOMMANDS
   run                       sample a model and print posterior summary
                             (--model NAME --backend fused|stepwise|native
                              --dtype f32|f64 --warmup N --samples N --chains N)
+  sample-model              compile an effect-handler model (no hand-written
+                            gradient) and sample it with native iterative NUTS:
+                            --model eight-schools|horseshoe|logistic
+                            (--chains K --warmup N --samples N --out FILE).
+                            Needs no artifacts and no pjrt feature.
   experiment table2a        Table 2a: ms/leapfrog across architectures (--model hmm|covtype)
   experiment fig2b          Fig 2b: SKIM ms/effective-sample vs p
   experiment footnote6      footnote 6: HMM ESS across seeds, f32 vs f64
@@ -74,6 +79,27 @@ fn cmd_info(engine: &Engine) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Shared [`NutsOptions`] assembly for the sampling subcommands
+/// (`run`, `sample-model`): a fixed `--step-size` disables both
+/// step-size and mass adaptation.
+fn nuts_options(
+    args: &Args,
+    settings: &Settings,
+    warmup: usize,
+    samples: usize,
+) -> Result<NutsOptions> {
+    let fixed = args.get_f64("step-size")?;
+    Ok(NutsOptions {
+        num_warmup: warmup,
+        num_samples: samples,
+        target_accept: settings.target_accept,
+        adapt_mass: fixed.is_none(),
+        fixed_step_size: fixed,
+        init_step_size: 0.1,
+        seed: settings.seed,
+    })
 }
 
 fn cmd_run(engine: &Engine, args: &Args, settings: &Settings) -> Result<()> {
@@ -119,15 +145,7 @@ fn cmd_run(engine: &Engine, args: &Args, settings: &Settings) -> Result<()> {
             )?
         };
     let dim = sampler.dim();
-    let opts = NutsOptions {
-        num_warmup: warmup,
-        num_samples: samples,
-        target_accept: settings.target_accept,
-        fixed_step_size: args.get_f64("step-size")?,
-        adapt_mass: args.get_f64("step-size")?.is_none(),
-        init_step_size: 0.1,
-        seed: settings.seed,
-    };
+    let opts = nuts_options(args, settings, warmup, samples)?;
     let t0 = std::time::Instant::now();
     let results = run_chains(&mut sampler, settings.num_chains, &opts)?;
     let total = t0.elapsed().as_secs_f64();
@@ -288,11 +306,12 @@ fn main() -> Result<()> {
     }
     let settings = Settings::from_args(&args)?;
     let sub = args.subcommand()?;
-    // `bench` and `diagnose` are native-only: no artifact manifest, no
-    // PJRT engine — they must work on a fresh clone with the default
-    // (stub) feature set.
+    // `bench`, `sample-model` and `diagnose` are native-only: no
+    // artifact manifest, no PJRT engine — they must work on a fresh
+    // clone with the default (stub) feature set.
     match sub {
         "bench" => return cmd_bench(&args, &settings),
+        "sample-model" => return cmd_sample_model(&args, &settings),
         "diagnose" => return cmd_diagnose(&args, &settings),
         _ => {}
     }
@@ -317,6 +336,89 @@ fn cmd_bench(args: &Args, settings: &Settings) -> Result<()> {
     let out = args.get("out").unwrap_or("BENCH_native.json");
     let report = fugue::harness::bench_native::run(settings, max_chains, out)?;
     print!("{report}");
+    Ok(())
+}
+
+/// `fugue sample-model --model NAME` — compile an effect-handler
+/// program (pure sample/observe, no hand-written gradient) and sample
+/// it end-to-end with the native iterative NUTS engine across parallel
+/// chains.  Draws are reported in the *constrained* space.
+fn cmd_sample_model(args: &Args, settings: &Settings) -> Result<()> {
+    use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel};
+    use fugue::coordinator::run_compiled_chains;
+
+    let name = args.get("model").unwrap_or("eight-schools");
+    let (warmup, samples) = settings.budget(1000, 1000);
+    let chains = settings.num_chains;
+    let opts = nuts_options(args, settings, warmup, samples)?;
+    println!(
+        "compiled model={name} warmup={warmup} samples={samples} chains={chains} seed={}",
+        settings.seed
+    );
+
+    let t0 = std::time::Instant::now();
+    let (layout, results) = match name {
+        "eight-schools" => run_compiled_chains(
+            &EightSchools::classic(),
+            chains,
+            settings.max_tree_depth,
+            &opts,
+        )?,
+        "horseshoe" => {
+            let model = Horseshoe::synthetic(settings.seed, 100, 10, 3);
+            run_compiled_chains(&model, chains, settings.max_tree_depth, &opts)?
+        }
+        "logistic" => {
+            let (n, d) = (500, 8);
+            let dset = fugue::data::make_covtype_like(settings.seed, n, d);
+            let model = LogisticModel {
+                x: dset.x,
+                y: dset.y,
+                n,
+                d,
+            };
+            run_compiled_chains(&model, chains, settings.max_tree_depth, &opts)?
+        }
+        other => bail!("unknown compiled model '{other}' (eight-schools|horseshoe|logistic)"),
+    };
+    let total = t0.elapsed().as_secs_f64();
+
+    // report draws in the constrained space, labeled by site
+    let dim = layout.dim;
+    let constrained: Vec<Vec<f64>> = results
+        .iter()
+        .map(|r| {
+            let mut draws = r.samples.clone();
+            for row in draws.chunks_mut(dim) {
+                layout.constrain_row(row);
+            }
+            draws
+        })
+        .collect();
+    let spans = layout.param_spans();
+    let rows = summarize(&constrained, dim, &spans);
+    println!("{}", render_table(&rows));
+
+    if let Some(out) = args.get("out") {
+        let all: Vec<f64> = constrained.concat();
+        let draws = all.len() / dim;
+        fugue::util::npy::write_f64(out, &all, &[draws, dim])?;
+        println!("constrained posterior saved to {out} ({draws} x {dim}, numpy .npy)");
+    }
+
+    let leapfrogs: u64 = results.iter().map(|r| r.sample_leapfrogs).sum();
+    let sample_secs: f64 = results.iter().map(|r| r.sample_secs).sum();
+    let divergences: u64 = results.iter().map(|r| r.divergences).sum();
+    println!(
+        "total {total:.2}s | {leapfrogs} leapfrogs | {:.4} ms/leapfrog | {} divergences | step sizes: {}",
+        1e3 * sample_secs / leapfrogs.max(1) as f64,
+        divergences,
+        results
+            .iter()
+            .map(|r| format!("{:.4}", r.step_size))
+            .collect::<Vec<_>>()
+            .join(",")
+    );
     Ok(())
 }
 

@@ -24,6 +24,12 @@ pub use dual_avg::DualAverage;
 pub use welford::Welford;
 
 /// A differentiable potential energy U(z) = -log p(z, data).
+///
+/// Implemented by the hand-fused benchmark models in [`crate::models`],
+/// the PJRT-dispatched artifact potential, and — for *arbitrary*
+/// effect-handler programs — by [`crate::compile::CompiledModel`],
+/// which derives U and ∇U from `sample`/`observe` source via the
+/// reusable autodiff tape.
 pub trait Potential {
     fn dim(&self) -> usize;
 

@@ -23,7 +23,7 @@
 
 use crate::autodiff::{Tape, Var};
 use crate::mcmc::Potential;
-use crate::ppl::special::LN_2PI;
+use crate::ppl::special::{softplus_sigmoid, LN_2PI};
 
 /// Rows per cache block of the fused likelihood sweep.
 const BLOCK: usize = 64;
@@ -115,13 +115,7 @@ impl LogisticNative {
             for i in start..end {
                 let xi = &x[i * d..(i + 1) * d];
                 let zl = b + dot4(xi, m);
-                let (sp, sig) = if zl >= 0.0 {
-                    let e = (-zl).exp();
-                    (zl + e.ln_1p(), 1.0 / (1.0 + e))
-                } else {
-                    let e = zl.exp();
-                    (e.ln_1p(), e / (1.0 + e))
-                };
+                let (sp, sig) = softplus_sigmoid(zl);
                 value += y[i] * zl - sp;
                 z_buf[i] = y[i] - sig;
             }

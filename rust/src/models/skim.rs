@@ -13,7 +13,7 @@
 //!
 //! All O(N^2)/O(NP) work buffers (kernel, Gram matrices, Cholesky
 //! factor, Kbar, contraction scratch) plus the tape live in
-//! [`SkimScratch`] on the struct and are reused across evaluations —
+//! `SkimScratch` on the struct and are reused across evaluations —
 //! the hot path is allocation free and Kbar/Gbar overwrite their
 //! source buffers in place.
 //!

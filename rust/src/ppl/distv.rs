@@ -1,0 +1,290 @@
+//! Distributions over a generic scalar algebra — the model compiler's
+//! counterpart of [`crate::ppl::dist::Dist`].
+//!
+//! A [`DistV<V>`] carries its parameters as algebra values `V`
+//! ([`f64`] in the trace pass, [`crate::autodiff::Var`] in the
+//! evaluation pass), so a latent scale parameter feeding a downstream
+//! likelihood stays differentiable end-to-end.  Shape-like parameters
+//! whose log-normalizers need `ln Γ` (Gamma/InverseGamma concentration,
+//! Beta exponents) are plain `f64` constants: they cannot be latent,
+//! which matches what the tape can differentiate.
+//!
+//! `log_prob` is written purely in terms of [`Alg`] operations, so the
+//! two value domains agree bitwise; `rust/tests/compiled_model.rs`
+//! cross-checks the `f64` instantiation against [`Dist::log_prob`].
+
+use crate::autodiff::Alg;
+use crate::ppl::dist::{Dist, Support};
+use crate::ppl::special::{ln_beta, ln_gamma, LN_2PI};
+
+/// A distribution with algebra-valued parameters.  `V` is `f64` during
+/// tracing and a tape [`crate::autodiff::Var`] during potential
+/// evaluation.
+#[derive(Debug, Clone, Copy)]
+pub enum DistV<V> {
+    Normal { loc: V, scale: V },
+    HalfNormal { scale: V },
+    Cauchy { loc: V, scale: V },
+    HalfCauchy { scale: V },
+    Exponential { rate: V },
+    LogNormal { loc: V, scale: V },
+    Uniform { low: f64, high: f64 },
+    Gamma { concentration: f64, rate: V },
+    InverseGamma { concentration: f64, rate: V },
+    Beta { a: f64, b: f64 },
+    BernoulliLogits { logits: V },
+}
+
+impl<V: Copy + std::fmt::Debug> DistV<V> {
+    /// Support declaration; drives the site's unconstraining transform.
+    pub fn support(&self) -> Support {
+        use DistV::*;
+        match self {
+            Normal { .. } | Cauchy { .. } => Support::Real,
+            HalfNormal { .. }
+            | HalfCauchy { .. }
+            | Exponential { .. }
+            | LogNormal { .. }
+            | Gamma { .. }
+            | InverseGamma { .. } => Support::Positive,
+            Uniform { .. } | Beta { .. } => Support::UnitInterval,
+            BernoulliLogits { .. } => Support::Discrete,
+        }
+    }
+
+    /// Bounds when the support is a bounded interval (drives the
+    /// affine-sigmoid transform for `Uniform`).
+    pub fn interval(&self) -> Option<(f64, f64)> {
+        match self {
+            DistV::Uniform { low, high } => Some((*low, *high)),
+            DistV::Beta { .. } => Some((0.0, 1.0)),
+            _ => None,
+        }
+    }
+
+    /// Log-density at `x`, evaluated over the algebra `alg`.  `x` must
+    /// lie in the support (the compiler guarantees this by construction:
+    /// latent values come out of the constraining transform, observed
+    /// values are validated data).
+    pub fn log_prob<A: Alg<V = V>>(&self, alg: &mut A, x: V) -> V {
+        use DistV::*;
+        match *self {
+            Normal { loc, scale } => {
+                let d = alg.sub(x, loc);
+                let z = alg.div(d, scale);
+                let z2 = alg.square(z);
+                let t = alg.scale(z2, -0.5);
+                let ls = alg.ln(scale);
+                let t2 = alg.sub(t, ls);
+                alg.offset(t2, -0.5 * LN_2PI)
+            }
+            HalfNormal { scale } => {
+                let z = alg.div(x, scale);
+                let z2 = alg.square(z);
+                let t = alg.scale(z2, -0.5);
+                let ls = alg.ln(scale);
+                let t2 = alg.sub(t, ls);
+                alg.offset(t2, std::f64::consts::LN_2 - 0.5 * LN_2PI)
+            }
+            Cauchy { loc, scale } => {
+                let d = alg.sub(x, loc);
+                let z = alg.div(d, scale);
+                let z2 = alg.square(z);
+                let l1 = alg.log1p(z2);
+                let ls = alg.ln(scale);
+                let s = alg.add(l1, ls);
+                let n = alg.neg(s);
+                alg.offset(n, -std::f64::consts::PI.ln())
+            }
+            HalfCauchy { scale } => {
+                let z = alg.div(x, scale);
+                let z2 = alg.square(z);
+                let l1 = alg.log1p(z2);
+                let ls = alg.ln(scale);
+                let s = alg.add(l1, ls);
+                let n = alg.neg(s);
+                alg.offset(n, std::f64::consts::LN_2 - std::f64::consts::PI.ln())
+            }
+            Exponential { rate } => {
+                let lr = alg.ln(rate);
+                let rx = alg.mul(rate, x);
+                alg.sub(lr, rx)
+            }
+            LogNormal { loc, scale } => {
+                let lx = alg.ln(x);
+                let d = alg.sub(lx, loc);
+                let z = alg.div(d, scale);
+                let z2 = alg.square(z);
+                let t = alg.scale(z2, -0.5);
+                let ls = alg.ln(scale);
+                let t1 = alg.sub(t, ls);
+                let t2 = alg.sub(t1, lx);
+                alg.offset(t2, -0.5 * LN_2PI)
+            }
+            Uniform { low, high } => alg.lit(-(high - low).ln()),
+            Gamma {
+                concentration: c,
+                rate,
+            } => {
+                let lr = alg.ln(rate);
+                let t1 = alg.scale(lr, c);
+                let lx = alg.ln(x);
+                let t2 = alg.scale(lx, c - 1.0);
+                let rx = alg.mul(rate, x);
+                let s = alg.add(t1, t2);
+                let s2 = alg.sub(s, rx);
+                alg.offset(s2, -ln_gamma(c))
+            }
+            InverseGamma {
+                concentration: c,
+                rate,
+            } => {
+                let lr = alg.ln(rate);
+                let t1 = alg.scale(lr, c);
+                let lx = alg.ln(x);
+                let t2 = alg.scale(lx, -(c + 1.0));
+                let q = alg.div(rate, x);
+                let s = alg.add(t1, t2);
+                let s2 = alg.sub(s, q);
+                alg.offset(s2, -ln_gamma(c))
+            }
+            Beta { a, b } => {
+                let lx = alg.ln(x);
+                let t1 = alg.scale(lx, a - 1.0);
+                let nx = alg.neg(x);
+                let l1 = alg.log1p(nx);
+                let t2 = alg.scale(l1, b - 1.0);
+                let s = alg.add(t1, t2);
+                alg.offset(s, -ln_beta(a, b))
+            }
+            BernoulliLogits { logits } => {
+                let p = alg.mul(x, logits);
+                let sp = alg.softplus(logits);
+                alg.sub(p, sp)
+            }
+        }
+    }
+}
+
+impl DistV<f64> {
+    /// The plain-`f64` instantiation as a [`Dist`] (sampler + reference
+    /// density): the trace pass draws prior values through this.
+    pub fn to_dist(&self) -> Dist {
+        use DistV::*;
+        match *self {
+            Normal { loc, scale } => Dist::Normal { loc, scale },
+            HalfNormal { scale } => Dist::HalfNormal { scale },
+            Cauchy { loc, scale } => Dist::Cauchy { loc, scale },
+            HalfCauchy { scale } => Dist::HalfCauchy { scale },
+            Exponential { rate } => Dist::Exponential { rate },
+            LogNormal { loc, scale } => Dist::LogNormal { loc, scale },
+            Uniform { low, high } => Dist::Uniform { low, high },
+            Gamma {
+                concentration,
+                rate,
+            } => Dist::Gamma {
+                concentration,
+                rate,
+            },
+            InverseGamma {
+                concentration,
+                rate,
+            } => Dist::InverseGamma {
+                concentration,
+                rate,
+            },
+            Beta { a, b } => Dist::Beta { a, b },
+            BernoulliLogits { logits } => Dist::BernoulliLogits { logits },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::F64Alg;
+
+    /// Every `DistV` density must agree with the reference `Dist`
+    /// density at interior points of the support.
+    #[test]
+    fn matches_reference_densities() {
+        let mut a = F64Alg;
+        let cases: Vec<(DistV<f64>, f64)> = vec![
+            (
+                DistV::Normal {
+                    loc: 0.4,
+                    scale: 1.7,
+                },
+                -0.3,
+            ),
+            (DistV::HalfNormal { scale: 0.8 }, 1.1),
+            (
+                DistV::Cauchy {
+                    loc: -1.0,
+                    scale: 2.0,
+                },
+                0.7,
+            ),
+            (DistV::HalfCauchy { scale: 5.0 }, 3.2),
+            (DistV::Exponential { rate: 1.4 }, 0.9),
+            (
+                DistV::LogNormal {
+                    loc: 0.2,
+                    scale: 0.6,
+                },
+                1.5,
+            ),
+            (
+                DistV::Uniform {
+                    low: -2.0,
+                    high: 3.0,
+                },
+                0.0,
+            ),
+            (
+                DistV::Gamma {
+                    concentration: 3.0,
+                    rate: 2.0,
+                },
+                1.2,
+            ),
+            (
+                DistV::InverseGamma {
+                    concentration: 3.0,
+                    rate: 1.0,
+                },
+                0.4,
+            ),
+            (DistV::Beta { a: 2.5, b: 1.5 }, 0.3),
+            (DistV::BernoulliLogits { logits: 0.7 }, 1.0),
+        ];
+        for (d, x) in cases {
+            let got = d.log_prob(&mut a, x);
+            let want = d.to_dist().log_prob(&[x]);
+            assert!(
+                (got - want).abs() < 1e-12,
+                "{d:?} at {x}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn supports_and_intervals() {
+        let n = DistV::Normal {
+            loc: 0.0f64,
+            scale: 1.0,
+        };
+        assert_eq!(n.support(), Support::Real);
+        assert_eq!(n.interval(), None);
+        let u = DistV::<f64>::Uniform {
+            low: -1.0,
+            high: 2.0,
+        };
+        assert_eq!(u.support(), Support::UnitInterval);
+        assert_eq!(u.interval(), Some((-1.0, 2.0)));
+        let b = DistV::<f64>::Beta { a: 2.0, b: 3.0 };
+        assert_eq!(b.interval(), Some((0.0, 1.0)));
+        let hc = DistV::HalfCauchy { scale: 1.0f64 };
+        assert_eq!(hc.support(), Support::Positive);
+    }
+}

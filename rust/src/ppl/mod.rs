@@ -1,10 +1,14 @@
 //! Native-Rust probabilistic-programming substrate: distributions with
-//! densities + samplers ([`dist`]), constraint transforms ([`transforms`])
-//! and special functions ([`special`]).  Together with [`crate::effects`]
-//! this is the Rust-side mirror of the Python `minippl` package.
+//! densities + samplers ([`dist`]), algebra-generic distributions for
+//! the model compiler ([`distv`]), constraint transforms
+//! ([`transforms`]) and special functions ([`special`]).  Together with
+//! [`crate::effects`] this is the Rust-side mirror of the Python
+//! `minippl` package.
 
 pub mod dist;
+pub mod distv;
 pub mod special;
 pub mod transforms;
 
 pub use dist::{Dist, Support};
+pub use distv::DistV;

@@ -45,6 +45,24 @@ pub fn softplus(x: f64) -> f64 {
     }
 }
 
+/// Softplus and sigmoid from a *single* shared `exp` — the fused-GLM
+/// trick used by both the hand-coded logistic potential and the model
+/// compiler's Bernoulli fast paths (keep them on this one
+/// implementation so the golden cross-check stays bitwise-meaningful):
+///
+///   x >= 0: e = exp(-x), softplus = x + ln1p(e), sigmoid = 1/(1+e)
+///   x <  0: e = exp(x),  softplus = ln1p(e),     sigmoid = e/(1+e)
+#[inline(always)]
+pub fn softplus_sigmoid(x: f64) -> (f64, f64) {
+    if x >= 0.0 {
+        let e = (-x).exp();
+        (x + e.ln_1p(), 1.0 / (1.0 + e))
+    } else {
+        let e = x.exp();
+        (e.ln_1p(), e / (1.0 + e))
+    }
+}
+
 pub fn sigmoid(x: f64) -> f64 {
     if x >= 0.0 {
         1.0 / (1.0 + (-x).exp())

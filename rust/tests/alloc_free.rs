@@ -1,15 +1,18 @@
 //! Zero-allocation regression for the NUTS hot path: once the tape and
 //! tree workspace have warmed up, a full draw via
-//! `nuts_iterative::draw_in_workspace` over each native potential must
-//! perform **zero** heap allocations.
+//! `nuts_iterative::draw_in_workspace` over each native potential —
+//! hand-fused *and* compiler-generated — must perform **zero** heap
+//! allocations.
 //!
 //! Counted with a thread-local tally inside a wrapping global
-//! allocator, so the libtest harness threads cannot pollute the
-//! measurement.  This file intentionally contains a single #[test].
+//! allocator (libtest runs each #[test] on its own thread, so the
+//! per-thread counters stay isolated).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
+use fugue::compile::compile;
+use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel};
 use fugue::data;
 use fugue::mcmc::nuts_iterative::{draw_in_workspace, TreeWorkspace};
 use fugue::mcmc::Potential;
@@ -102,4 +105,30 @@ fn steady_state_draws_are_allocation_free() {
         5e-3,
         3,
     );
+}
+
+/// Compiler-generated potentials must hit the same bar as the
+/// hand-fused ones: after warmup, a full compiled-model NUTS draw
+/// performs zero heap allocations (tape, term list, composite scratch
+/// and the model's pooled vectors all reuse their capacity).
+#[test]
+fn compiled_model_draws_are_allocation_free() {
+    let es = compile(EightSchools::classic(), 0).unwrap();
+    assert_draws_alloc_free("compiled eight-schools", es, 1e-2, 4);
+
+    let l = data::make_covtype_like(1, 200, 8);
+    let lm = compile(
+        LogisticModel {
+            x: l.x,
+            y: l.y,
+            n: 200,
+            d: 8,
+        },
+        0,
+    )
+    .unwrap();
+    assert_draws_alloc_free("compiled logistic", lm, 1e-2, 5);
+
+    let hs = compile(Horseshoe::synthetic(2, 60, 6, 2), 0).unwrap();
+    assert_draws_alloc_free("compiled horseshoe", hs, 5e-3, 6);
 }

@@ -1,0 +1,260 @@
+//! End-to-end tests for the model compiler: golden cross-check against
+//! the hand-fused logistic potential, statistical correctness of
+//! compiled-model NUTS (conjugate posterior + eight-schools vs a long
+//! reference run), structural-change detection, and parallel/sequential
+//! equivalence.
+
+use std::cell::Cell;
+
+use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel, NormalMean};
+use fugue::compile::{compile, EffModel, ProbCtx, SiteLayout};
+use fugue::coordinator::{
+    run_chains, run_compiled_chains, ChainResult, NativeSampler, NutsOptions, TreeAlgorithm,
+};
+use fugue::data;
+use fugue::diagnostics::ess::effective_sample_size;
+use fugue::mcmc::Potential;
+use fugue::models::LogisticNative;
+use fugue::rng::Rng;
+
+/// Pooled mean and Monte-Carlo standard error of a *constrained*
+/// scalar latent site.
+fn posterior_stats(results: &[ChainResult], layout: &SiteLayout, site: &str) -> (f64, f64) {
+    let dim = layout.dim;
+    let spec = layout.latent(site).expect("latent site");
+    let (off, tr) = (spec.offset, spec.transform);
+    let per_chain: Vec<Vec<f64>> = results
+        .iter()
+        .map(|r| r.samples.chunks(dim).map(|row| tr.constrain(row[off])).collect())
+        .collect();
+    let all: Vec<f64> = per_chain.iter().flatten().copied().collect();
+    let n = all.len() as f64;
+    let mean = all.iter().sum::<f64>() / n;
+    let sd = (all.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0)).sqrt();
+    let ess = effective_sample_size(&per_chain).max(10.0);
+    (mean, sd / ess.sqrt())
+}
+
+/// The compiled logistic-regression program must reproduce the
+/// hand-fused `models::logistic` potential — same density, same
+/// gradient — to 1e-10 (the only remaining difference is dot-product
+/// summation order).
+#[test]
+fn compiled_logistic_matches_hand_coded_potential() {
+    let (n, d) = (200, 8);
+    let dset = data::make_covtype_like(11, n, d);
+    let mut hand = LogisticNative::new(dset.x.clone(), dset.y.clone(), n, d);
+    let mut comp = compile(
+        LogisticModel {
+            x: dset.x,
+            y: dset.y,
+            n,
+            d,
+        },
+        0,
+    )
+    .unwrap();
+    assert_eq!(comp.dim(), d + 1);
+    assert_eq!(comp.dim(), hand.dim());
+
+    let mut rng = Rng::new(5);
+    for trial in 0..5 {
+        let z: Vec<f64> = (0..d + 1).map(|_| rng.uniform_in(-1.5, 1.5)).collect();
+        let mut gh = vec![0.0; d + 1];
+        let mut gc = vec![0.0; d + 1];
+        let uh = hand.value_and_grad(&z, &mut gh);
+        let uc = comp.value_and_grad(&z, &mut gc);
+        assert!(
+            (uh - uc).abs() < 1e-10,
+            "trial {trial}: value {uh} vs {uc}"
+        );
+        for i in 0..=d {
+            assert!(
+                (gh[i] - gc[i]).abs() < 1e-10,
+                "trial {trial} grad[{i}]: {} vs {}",
+                gh[i],
+                gc[i]
+            );
+        }
+    }
+}
+
+/// Conjugate Normal-Normal: the compiled model's posterior mean and
+/// variance must match the closed form.
+#[test]
+fn compiled_normal_mean_matches_conjugate_posterior() {
+    let y = vec![1.2, 0.8, 1.5, 0.9, 1.1, 1.4];
+    let n = y.len() as f64;
+    let sum: f64 = y.iter().sum();
+    let post_prec = 1.0 + n; // prior N(0,1), sigma = 1
+    let post_mean = sum / post_prec;
+    let model = NormalMean { y, sigma: 1.0 };
+    let opts = NutsOptions {
+        num_warmup: 300,
+        num_samples: 2000,
+        seed: 3,
+        ..Default::default()
+    };
+    let (layout, results) = run_compiled_chains(&model, 2, 10, &opts).unwrap();
+    assert_eq!(layout.dim, 1);
+    let all: Vec<f64> = results
+        .iter()
+        .flat_map(|r| r.samples.iter().copied())
+        .collect();
+    let m = all.iter().sum::<f64>() / all.len() as f64;
+    let v = all.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (all.len() as f64 - 1.0);
+    assert!((m - post_mean).abs() < 0.05, "mean {m} vs {post_mean}");
+    assert!(
+        (v - 1.0 / post_prec).abs() < 0.05,
+        "var {v} vs {}",
+        1.0 / post_prec
+    );
+}
+
+/// The acceptance gate: a model written only with sample/observe (no
+/// hand-written gradient anywhere) sampled end-to-end by iterative
+/// NUTS; its posterior mean on eight-schools matches a longer
+/// independent reference run within Monte-Carlo standard error.
+#[test]
+fn eight_schools_end_to_end_matches_long_reference() {
+    let model = EightSchools::classic();
+    let short_opts = NutsOptions {
+        num_warmup: 500,
+        num_samples: 1500,
+        seed: 7,
+        ..Default::default()
+    };
+    let (layout, short) = run_compiled_chains(&model, 2, 10, &short_opts).unwrap();
+    let long_opts = NutsOptions {
+        num_warmup: 800,
+        num_samples: 6000,
+        seed: 1234,
+        ..Default::default()
+    };
+    let (_, long) = run_compiled_chains(&model, 1, 10, &long_opts).unwrap();
+
+    for site in ["mu", "tau"] {
+        let (m_short, se_short) = posterior_stats(&short, &layout, site);
+        let (m_long, se_long) = posterior_stats(&long, &layout, site);
+        let tol = 5.0 * (se_short * se_short + se_long * se_long).sqrt() + 0.3;
+        assert!(
+            (m_short - m_long).abs() < tol,
+            "{site}: short {m_short} vs long {m_long} (tol {tol})"
+        );
+    }
+    // sanity band around the literature values for this prior
+    // (mu ~ N(0,5), tau ~ HalfCauchy(5), non-centered)
+    let (mu, _) = posterior_stats(&long, &layout, "mu");
+    let (tau, _) = posterior_stats(&long, &layout, "tau");
+    assert!((1.5..9.0).contains(&mu), "posterior mean mu {mu}");
+    assert!((0.5..10.0).contains(&tau), "posterior mean tau {tau}");
+    let divergences: u64 = long.iter().map(|r| r.divergences).sum();
+    assert!(
+        divergences < 300,
+        "too many divergences for non-centered eight-schools: {divergences}"
+    );
+}
+
+/// Horseshoe shrinkage: posterior |beta| on true-signal coordinates
+/// must dominate the noise coordinates (beta_j = tau·lambda_j·z_j is
+/// reconstructed from the constrained draws).
+#[test]
+fn horseshoe_separates_signals_from_noise() {
+    let (n, p, signals) = (60, 6, 2);
+    let model = Horseshoe::synthetic(9, n, p, signals);
+    let opts = NutsOptions {
+        num_warmup: 400,
+        num_samples: 800,
+        seed: 17,
+        target_accept: 0.9,
+        ..Default::default()
+    };
+    let (layout, results) = run_compiled_chains(&model, 1, 10, &opts).unwrap();
+    let dim = layout.dim;
+    let lam_off = layout.latent("lambda").unwrap().offset;
+    let tau_off = layout.latent("tau").unwrap().offset;
+    let z_off = layout.latent("z").unwrap().offset;
+    let mut abs_beta = vec![0.0f64; p];
+    let mut draws = 0usize;
+    for r in &results {
+        for row in r.samples.chunks(dim) {
+            let tau = row[tau_off].exp();
+            for (j, ab) in abs_beta.iter_mut().enumerate() {
+                *ab += (tau * row[lam_off + j].exp() * row[z_off + j]).abs();
+            }
+            draws += 1;
+        }
+    }
+    for ab in abs_beta.iter_mut() {
+        *ab /= draws as f64;
+    }
+    let signal_mean = abs_beta[..signals].iter().sum::<f64>() / signals as f64;
+    let noise_mean = abs_beta[signals..].iter().sum::<f64>() / (p - signals) as f64;
+    assert!(
+        signal_mean > 2.0 * noise_mean,
+        "no shrinkage separation: signal {signal_mean} vs noise {noise_mean} ({abs_beta:?})"
+    );
+    assert!(signal_mean > 0.8, "signal coefficients not recovered: {abs_beta:?}");
+}
+
+/// Parallel compiled chains are bitwise identical to a sequential run
+/// over the same compiled model.
+#[test]
+fn compiled_chains_parallel_matches_sequential() {
+    let model = NormalMean {
+        y: vec![0.2, 1.1, -0.4, 0.9],
+        sigma: 1.0,
+    };
+    let opts = NutsOptions {
+        num_warmup: 150,
+        num_samples: 300,
+        seed: 21,
+        ..Default::default()
+    };
+    let (_, par) = run_compiled_chains(&model, 3, 10, &opts).unwrap();
+    let mut sampler = NativeSampler::new(
+        compile(model.clone(), opts.seed).unwrap(),
+        TreeAlgorithm::Iterative,
+        10,
+    );
+    let seq = run_chains(&mut sampler, 3, &opts).unwrap();
+    assert_eq!(par.len(), seq.len());
+    for (p, s) in par.iter().zip(&seq) {
+        assert_eq!(p.samples, s.samples);
+        assert_eq!(p.step_size, s.step_size);
+    }
+}
+
+/// A program whose site structure depends on evaluation count violates
+/// the static-structure contract and must be caught, not silently
+/// mis-sampled.
+struct Flaky {
+    calls: Cell<usize>,
+}
+
+impl EffModel for Flaky {
+    fn run<C: ProbCtx>(&self, c: &mut C) {
+        let k = self.calls.get();
+        self.calls.set(k + 1);
+        let prior = c.normal(0.0, 1.0);
+        if k == 0 {
+            c.sample("a", prior);
+        } else {
+            c.sample("b", prior);
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "static structure")]
+fn structure_change_is_detected() {
+    let mut pot = compile(
+        Flaky {
+            calls: Cell::new(0),
+        },
+        0,
+    )
+    .unwrap();
+    let mut g = vec![0.0];
+    let _ = pot.value_and_grad(&[0.1], &mut g);
+}
