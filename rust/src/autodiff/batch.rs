@@ -1,0 +1,807 @@
+//! Multi-lane (struct-of-arrays) reverse-mode tape: the autodiff
+//! substrate of the **vectorized chain engine**.
+//!
+//! A [`BatchTape`] is the K-lane generalization of [`crate::autodiff::Tape`]:
+//! every node holds `lanes` primal values laid out contiguously
+//! (`values[node * lanes + k]` is lane `k`), and one reverse sweep
+//! produces `lanes` independent gradients.  This is NumPyro's
+//! `vmap`-over-`potential_fn` trick done natively: the op list — the
+//! expensive interpretive part of taped autodiff — is recorded **once**
+//! per evaluation, while the per-op arithmetic runs over short
+//! contiguous f64 arrays that the autovectorizer turns into SIMD
+//! (4/8-wide on AVX2/AVX-512).
+//!
+//! # Lane semantics
+//!
+//! Each lane is an *independent* scalar evaluation: lane `k` of every
+//! node is a pure function of lane `k` of the leaf inputs, with the
+//! exact same operation sequence, branch structure and accumulation
+//! order as the scalar [`crate::autodiff::Tape`].  Consequently a
+//! program replayed on a
+//! `BatchTape` produces, per lane, **bitwise-identical** values and
+//! gradients to the same program replayed on a scalar tape — the
+//! invariant the cross-method golden tests
+//! (`rust/tests/chain_methods.rs`) pin down.  The reverse sweep
+//! preserves even the scalar tape's zero-adjoint skip per lane (a lane
+//! whose adjoint is exactly `0.0` receives no `+=` at all, so signed
+//! zeros and non-finite partials propagate identically).
+//!
+//! Like the scalar tape, all storage is reused across evaluations:
+//! [`BatchTape::reset`] keeps every buffer's capacity, so steady-state
+//! batched gradient evaluations perform zero heap allocations
+//! (`rust/tests/alloc_free.rs` proves it with a counting allocator).
+
+use crate::autodiff::{Alg, Var};
+
+/// Node operation of the batched tape.  Mirrors the scalar tape's op
+/// set; composite partials live out-of-line in one of two arenas:
+/// per-lane (`Composite`, used by fused likelihoods whose partials
+/// differ per chain) or shared-across-lanes (`CompositeShared`, used by
+/// `sum`/`dot_const` whose partials are data constants).
+#[derive(Debug, Clone, Copy)]
+enum BOp {
+    Leaf,
+    Add(u32, u32),
+    Sub(u32, u32),
+    Mul(u32, u32),
+    Div(u32, u32),
+    Neg(u32),
+    Exp(u32),
+    Ln(u32),
+    Log1p(u32),
+    Sqrt(u32),
+    Sigmoid(u32),
+    Softplus(u32),
+    Powi(u32, i32),
+    Scale(u32, f64),
+    Offset(u32),
+    /// Parents at `arena_parents[pstart..pstart+len]`, per-lane partials
+    /// at `arena_partials[(xstart + j) * lanes + k]`.
+    Composite { pstart: u32, xstart: u32, len: u32 },
+    /// Parents at `arena_parents[pstart..pstart+len]`, lane-shared
+    /// partials at `arena_shared[sstart + j]`.
+    CompositeShared { pstart: u32, sstart: u32, len: u32 },
+}
+
+/// K-lane reverse-mode tape (see the module docs).  Build the
+/// expression with the `BatchTape` methods (or generically through its
+/// [`Alg`] impl), then call [`BatchTape::grad`] on the output node.
+pub struct BatchTape {
+    lanes: usize,
+    ops: Vec<BOp>,
+    /// node-major, lane-minor: `values[node * lanes + k]`
+    values: Vec<f64>,
+    arena_parents: Vec<u32>,
+    /// per-lane composite partials, parent-slot-major lane-minor
+    arena_partials: Vec<f64>,
+    /// lane-shared composite partials
+    arena_shared: Vec<f64>,
+    /// adjoint scratch for the reverse sweep
+    adj: Vec<f64>,
+    /// lane-sized accumulator scratch for `sum` / `dot_const`
+    scratch: Vec<f64>,
+}
+
+impl BatchTape {
+    pub fn new(lanes: usize) -> BatchTape {
+        assert!(lanes > 0, "BatchTape needs at least one lane");
+        BatchTape {
+            lanes,
+            ops: Vec::with_capacity(1024),
+            values: Vec::with_capacity(1024 * lanes),
+            arena_parents: Vec::with_capacity(1024),
+            arena_partials: Vec::with_capacity(1024),
+            arena_shared: Vec::with_capacity(1024),
+            adj: Vec::new(),
+            scratch: vec![0.0; lanes],
+        }
+    }
+
+    /// Number of independent evaluation lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Clear the tape for the next evaluation, keeping every buffer's
+    /// capacity (the zero-allocation steady state).
+    pub fn reset(&mut self) {
+        self.ops.clear();
+        self.values.clear();
+        self.arena_parents.clear();
+        self.arena_partials.clear();
+        self.arena_shared.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Node-storage capacity watermark (regression guard for reuse).
+    pub fn node_capacity(&self) -> usize {
+        self.values.capacity()
+    }
+
+    /// Per-lane composite-arena capacity watermark.
+    pub fn arena_capacity(&self) -> usize {
+        self.arena_partials.capacity()
+    }
+
+    /// All `lanes` primal values of node `v`.
+    #[inline]
+    pub fn lane_values(&self, v: Var) -> &[f64] {
+        let s = v.0 as usize * self.lanes;
+        &self.values[s..s + self.lanes]
+    }
+
+    /// Primal value of node `v` in lane `k`.
+    #[inline]
+    pub fn value_at(&self, v: Var, k: usize) -> f64 {
+        self.values[v.0 as usize * self.lanes + k]
+    }
+
+    /// Differentiable input leaf with per-lane values.
+    pub fn input(&mut self, vals: &[f64]) -> Var {
+        assert_eq!(vals.len(), self.lanes, "input: lane-count mismatch");
+        let idx = self.ops.len() as u32;
+        self.ops.push(BOp::Leaf);
+        self.values.extend_from_slice(vals);
+        Var(idx)
+    }
+
+    /// Constant leaf, broadcast to every lane.
+    pub fn constant(&mut self, c: f64) -> Var {
+        let idx = self.ops.len() as u32;
+        self.ops.push(BOp::Leaf);
+        self.values.resize(self.values.len() + self.lanes, c);
+        Var(idx)
+    }
+
+    /// Push a unary node computing `f` lane-wise from parent `a`.
+    #[inline]
+    fn unary(&mut self, op: BOp, a: Var, f: impl Fn(f64) -> f64) -> Var {
+        let l = self.lanes;
+        let idx = self.ops.len();
+        self.ops.push(op);
+        self.values.resize((idx + 1) * l, 0.0);
+        let (src, dst) = self.values.split_at_mut(idx * l);
+        let pa = &src[a.0 as usize * l..a.0 as usize * l + l];
+        for k in 0..l {
+            dst[k] = f(pa[k]);
+        }
+        Var(idx as u32)
+    }
+
+    /// Push a binary node computing `f` lane-wise from parents `a`, `b`.
+    #[inline]
+    fn binary(&mut self, op: BOp, a: Var, b: Var, f: impl Fn(f64, f64) -> f64) -> Var {
+        let l = self.lanes;
+        let idx = self.ops.len();
+        self.ops.push(op);
+        self.values.resize((idx + 1) * l, 0.0);
+        let (src, dst) = self.values.split_at_mut(idx * l);
+        let pa = &src[a.0 as usize * l..a.0 as usize * l + l];
+        let pb = &src[b.0 as usize * l..b.0 as usize * l + l];
+        for k in 0..l {
+            dst[k] = f(pa[k], pb[k]);
+        }
+        Var(idx as u32)
+    }
+
+    pub fn add(&mut self, a: Var, b: Var) -> Var {
+        self.binary(BOp::Add(a.0, b.0), a, b, |x, y| x + y)
+    }
+
+    pub fn sub(&mut self, a: Var, b: Var) -> Var {
+        self.binary(BOp::Sub(a.0, b.0), a, b, |x, y| x - y)
+    }
+
+    pub fn mul(&mut self, a: Var, b: Var) -> Var {
+        self.binary(BOp::Mul(a.0, b.0), a, b, |x, y| x * y)
+    }
+
+    pub fn div(&mut self, a: Var, b: Var) -> Var {
+        self.binary(BOp::Div(a.0, b.0), a, b, |x, y| x / y)
+    }
+
+    pub fn neg(&mut self, a: Var) -> Var {
+        self.unary(BOp::Neg(a.0), a, |x| -x)
+    }
+
+    pub fn exp(&mut self, a: Var) -> Var {
+        self.unary(BOp::Exp(a.0), a, f64::exp)
+    }
+
+    pub fn ln(&mut self, a: Var) -> Var {
+        self.unary(BOp::Ln(a.0), a, f64::ln)
+    }
+
+    pub fn log1p(&mut self, a: Var) -> Var {
+        self.unary(BOp::Log1p(a.0), a, f64::ln_1p)
+    }
+
+    pub fn sqrt(&mut self, a: Var) -> Var {
+        self.unary(BOp::Sqrt(a.0), a, f64::sqrt)
+    }
+
+    /// Lane-wise logistic sigmoid — same branch structure as
+    /// [`crate::autodiff::Tape::sigmoid`] so the lanes agree bitwise.
+    pub fn sigmoid(&mut self, a: Var) -> Var {
+        self.unary(BOp::Sigmoid(a.0), a, |x| {
+            if x >= 0.0 {
+                1.0 / (1.0 + (-x).exp())
+            } else {
+                let e = x.exp();
+                e / (1.0 + e)
+            }
+        })
+    }
+
+    /// Lane-wise `log(1 + e^x)` — same branch structure as
+    /// [`crate::autodiff::Tape::softplus`].
+    pub fn softplus(&mut self, a: Var) -> Var {
+        self.unary(BOp::Softplus(a.0), a, |x| {
+            if x > 30.0 {
+                x
+            } else {
+                x.exp().ln_1p()
+            }
+        })
+    }
+
+    pub fn powi(&mut self, a: Var, n: i32) -> Var {
+        self.unary(BOp::Powi(a.0, n), a, |x| x.powi(n))
+    }
+
+    pub fn square(&mut self, a: Var) -> Var {
+        self.powi(a, 2)
+    }
+
+    pub fn scale(&mut self, a: Var, c: f64) -> Var {
+        self.unary(BOp::Scale(a.0, c), a, |x| c * x)
+    }
+
+    pub fn offset(&mut self, a: Var, c: f64) -> Var {
+        self.unary(BOp::Offset(a.0), a, |x| x + c)
+    }
+
+    /// Push a composite node with caller-supplied per-lane `values`
+    /// (length `lanes`) from the tape's scratch-independent buffers.
+    fn push_composite(&mut self, op: BOp, values: &[f64]) -> Var {
+        debug_assert_eq!(values.len(), self.lanes);
+        let idx = self.ops.len() as u32;
+        self.ops.push(op);
+        self.values.extend_from_slice(values);
+        Var(idx)
+    }
+
+    /// Fused primitive with **per-lane** partials: `values[k]` is the
+    /// node's value in lane `k`, `partials[j * lanes + k]` is
+    /// `d value_k / d parents[j]_k`.  The batched counterpart of
+    /// [`crate::autodiff::Tape::composite`].
+    pub fn composite_lanes(&mut self, parents: &[Var], partials: &[f64], values: &[f64]) -> Var {
+        assert_eq!(partials.len(), parents.len() * self.lanes);
+        let pstart = self.arena_parents.len() as u32;
+        let xstart = (self.arena_partials.len() / self.lanes) as u32;
+        self.arena_parents.extend(parents.iter().map(|v| v.0));
+        self.arena_partials.extend_from_slice(partials);
+        self.push_composite(
+            BOp::Composite {
+                pstart,
+                xstart,
+                len: parents.len() as u32,
+            },
+            values,
+        )
+    }
+
+    /// Fused primitive whose partials are the same in every lane
+    /// (data-constant coefficients): `partials[j]` applies to all lanes
+    /// of `parents[j]`.
+    pub fn composite_shared(&mut self, parents: &[Var], partials: &[f64], values: &[f64]) -> Var {
+        assert_eq!(partials.len(), parents.len());
+        let pstart = self.arena_parents.len() as u32;
+        let sstart = self.arena_shared.len() as u32;
+        self.arena_parents.extend(parents.iter().map(|v| v.0));
+        self.arena_shared.extend_from_slice(partials);
+        self.push_composite(
+            BOp::CompositeShared {
+                pstart,
+                sstart,
+                len: parents.len() as u32,
+            },
+            values,
+        )
+    }
+
+    /// Lane-wise sum over `xs`, accumulated in slice order per lane —
+    /// the same order as [`crate::autodiff::Tape::sum`], so each lane
+    /// matches the scalar tape bitwise.
+    pub fn sum(&mut self, xs: &[Var]) -> Var {
+        let l = self.lanes;
+        self.scratch.clear();
+        self.scratch.resize(l, 0.0);
+        for v in xs {
+            let s = v.0 as usize * l;
+            for k in 0..l {
+                self.scratch[k] += self.values[s + k];
+            }
+        }
+        let pstart = self.arena_parents.len() as u32;
+        let sstart = self.arena_shared.len() as u32;
+        self.arena_parents.extend(xs.iter().map(|v| v.0));
+        self.arena_shared
+            .resize(self.arena_shared.len() + xs.len(), 1.0);
+        let op = BOp::CompositeShared {
+            pstart,
+            sstart,
+            len: xs.len() as u32,
+        };
+        let idx = self.ops.len() as u32;
+        self.ops.push(op);
+        // move scratch into the value store without re-borrowing self
+        let start = self.values.len();
+        self.values.resize(start + l, 0.0);
+        self.values[start..start + l].copy_from_slice(&self.scratch);
+        Var(idx)
+    }
+
+    /// Lane-wise `dot(ws, cs)` for constant coefficients `cs`,
+    /// accumulated in slice order per lane (matches
+    /// [`crate::autodiff::Tape::dot_const`] bitwise per lane).
+    pub fn dot_const(&mut self, ws: &[Var], cs: &[f64]) -> Var {
+        assert_eq!(ws.len(), cs.len());
+        let l = self.lanes;
+        self.scratch.clear();
+        self.scratch.resize(l, 0.0);
+        for (v, &c) in ws.iter().zip(cs) {
+            let s = v.0 as usize * l;
+            for k in 0..l {
+                self.scratch[k] += self.values[s + k] * c;
+            }
+        }
+        let pstart = self.arena_parents.len() as u32;
+        let sstart = self.arena_shared.len() as u32;
+        self.arena_parents.extend(ws.iter().map(|v| v.0));
+        self.arena_shared.extend_from_slice(cs);
+        let op = BOp::CompositeShared {
+            pstart,
+            sstart,
+            len: ws.len() as u32,
+        };
+        let idx = self.ops.len() as u32;
+        self.ops.push(op);
+        let start = self.values.len();
+        self.values.resize(start + l, 0.0);
+        self.values[start..start + l].copy_from_slice(&self.scratch);
+        Var(idx)
+    }
+
+    /// Reverse sweep from `output`: returns the adjoints of every node,
+    /// node-major lane-minor (`adj[node * lanes + k]`).  Per lane this
+    /// performs exactly the scalar tape's sweep, including the
+    /// zero-adjoint skip, so each lane's gradient is bitwise equal to a
+    /// scalar-tape replay of the same program.
+    pub fn grad(&mut self, output: Var) -> &[f64] {
+        let n = self.ops.len();
+        let l = self.lanes;
+        self.adj.clear();
+        self.adj.resize(n * l, 0.0);
+        {
+            let o = output.0 as usize * l;
+            for a in &mut self.adj[o..o + l] {
+                *a = 1.0;
+            }
+        }
+        let BatchTape {
+            ops,
+            values,
+            arena_parents,
+            arena_partials,
+            arena_shared,
+            adj,
+            ..
+        } = self;
+        for i in (0..n).rev() {
+            let (front, back) = adj.split_at_mut(i * l);
+            let a = &back[..l];
+            if a.iter().all(|&x| x == 0.0) {
+                continue;
+            }
+            let vi = &values[i * l..(i + 1) * l];
+            match ops[i] {
+                BOp::Leaf => {}
+                BOp::Add(x, y) => {
+                    let (xs, ys) = (x as usize * l, y as usize * l);
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[xs + k] += ak;
+                        }
+                    }
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[ys + k] += ak;
+                        }
+                    }
+                }
+                BOp::Sub(x, y) => {
+                    let (xs, ys) = (x as usize * l, y as usize * l);
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[xs + k] += ak;
+                        }
+                    }
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[ys + k] -= ak;
+                        }
+                    }
+                }
+                BOp::Mul(x, y) => {
+                    let (xs, ys) = (x as usize * l, y as usize * l);
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[xs + k] += ak * values[ys + k];
+                        }
+                    }
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[ys + k] += ak * values[xs + k];
+                        }
+                    }
+                }
+                BOp::Div(x, y) => {
+                    let (xs, ys) = (x as usize * l, y as usize * l);
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[xs + k] += ak / values[ys + k];
+                        }
+                    }
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            let vy = values[ys + k];
+                            front[ys + k] -= ak * values[xs + k] / (vy * vy);
+                        }
+                    }
+                }
+                BOp::Neg(x) => {
+                    let xs = x as usize * l;
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[xs + k] -= ak;
+                        }
+                    }
+                }
+                BOp::Exp(x) => {
+                    let xs = x as usize * l;
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[xs + k] += ak * vi[k];
+                        }
+                    }
+                }
+                BOp::Ln(x) => {
+                    let xs = x as usize * l;
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[xs + k] += ak / values[xs + k];
+                        }
+                    }
+                }
+                BOp::Log1p(x) => {
+                    let xs = x as usize * l;
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[xs + k] += ak / (1.0 + values[xs + k]);
+                        }
+                    }
+                }
+                BOp::Sqrt(x) => {
+                    let xs = x as usize * l;
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[xs + k] += ak * 0.5 / vi[k];
+                        }
+                    }
+                }
+                BOp::Sigmoid(x) => {
+                    let xs = x as usize * l;
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[xs + k] += ak * vi[k] * (1.0 - vi[k]);
+                        }
+                    }
+                }
+                BOp::Softplus(x) => {
+                    let xs = x as usize * l;
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            let xv = values[xs + k];
+                            let s = if xv >= 0.0 {
+                                1.0 / (1.0 + (-xv).exp())
+                            } else {
+                                let e = xv.exp();
+                                e / (1.0 + e)
+                            };
+                            front[xs + k] += ak * s;
+                        }
+                    }
+                }
+                BOp::Powi(x, pn) => {
+                    let xs = x as usize * l;
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            let xv = values[xs + k];
+                            front[xs + k] += ak * (pn as f64) * xv.powi(pn - 1);
+                        }
+                    }
+                }
+                BOp::Scale(x, c) => {
+                    let xs = x as usize * l;
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[xs + k] += ak * c;
+                        }
+                    }
+                }
+                BOp::Offset(x) => {
+                    let xs = x as usize * l;
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[xs + k] += ak;
+                        }
+                    }
+                }
+                BOp::Composite { pstart, xstart, len } => {
+                    for j in 0..len as usize {
+                        let parent = arena_parents[pstart as usize + j] as usize * l;
+                        let ps = (xstart as usize + j) * l;
+                        for k in 0..l {
+                            let ak = a[k];
+                            if ak != 0.0 {
+                                front[parent + k] += ak * arena_partials[ps + k];
+                            }
+                        }
+                    }
+                }
+                BOp::CompositeShared { pstart, sstart, len } => {
+                    for j in 0..len as usize {
+                        let parent = arena_parents[pstart as usize + j] as usize * l;
+                        let p = arena_shared[sstart as usize + j];
+                        for k in 0..l {
+                            let ak = a[k];
+                            if ak != 0.0 {
+                                front[parent + k] += ak * p;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        &self.adj
+    }
+}
+
+/// The batched tape is an [`Alg`] instance: the *same* generic model
+/// code that replays on a scalar [`crate::autodiff::Tape`] replays here
+/// once for all lanes.  [`Alg::lit`] broadcasts a constant to every
+/// lane.  [`Alg::val`] is **not lane-meaningful** with more than one
+/// lane — a node holds K independent primals, so returning any single
+/// one would silently violate the lane-independence contract for model
+/// code that branches on it.  It therefore panics for `lanes > 1`
+/// (models that read primal values must use [`BatchTape::lane_values`]
+/// / [`BatchTape::value_at`], or fall back to
+/// [`crate::mcmc::ScalarLanes`] over the scalar compiler).
+impl Alg for BatchTape {
+    type V = Var;
+
+    fn lit(&mut self, x: f64) -> Var {
+        self.constant(x)
+    }
+    fn val(&self, v: Var) -> f64 {
+        assert!(
+            self.lanes == 1,
+            "Alg::val on a {}-lane BatchTape: a node has one primal per lane; \
+             use lane_values()/value_at() per lane, or sample this model through \
+             ScalarLanes instead of the batched compiler",
+            self.lanes
+        );
+        self.value_at(v, 0)
+    }
+    fn add(&mut self, a: Var, b: Var) -> Var {
+        BatchTape::add(self, a, b)
+    }
+    fn sub(&mut self, a: Var, b: Var) -> Var {
+        BatchTape::sub(self, a, b)
+    }
+    fn mul(&mut self, a: Var, b: Var) -> Var {
+        BatchTape::mul(self, a, b)
+    }
+    fn div(&mut self, a: Var, b: Var) -> Var {
+        BatchTape::div(self, a, b)
+    }
+    fn neg(&mut self, a: Var) -> Var {
+        BatchTape::neg(self, a)
+    }
+    fn exp(&mut self, a: Var) -> Var {
+        BatchTape::exp(self, a)
+    }
+    fn ln(&mut self, a: Var) -> Var {
+        BatchTape::ln(self, a)
+    }
+    fn log1p(&mut self, a: Var) -> Var {
+        BatchTape::log1p(self, a)
+    }
+    fn sqrt(&mut self, a: Var) -> Var {
+        BatchTape::sqrt(self, a)
+    }
+    fn softplus(&mut self, a: Var) -> Var {
+        BatchTape::softplus(self, a)
+    }
+    fn powi(&mut self, a: Var, n: i32) -> Var {
+        BatchTape::powi(self, a, n)
+    }
+    fn scale(&mut self, a: Var, c: f64) -> Var {
+        BatchTape::scale(self, a, c)
+    }
+    fn offset(&mut self, a: Var, c: f64) -> Var {
+        BatchTape::offset(self, a, c)
+    }
+    fn square(&mut self, a: Var) -> Var {
+        BatchTape::square(self, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::Tape;
+
+    /// A program touching every Alg op (shared with the scalar-tape
+    /// bitwise test in `autodiff::tests`).
+    fn alg_program<A: Alg>(a: &mut A, x: A::V, y: A::V) -> A::V {
+        let s = a.add(x, y);
+        let e = a.exp(s);
+        let lg = a.log1p(e);
+        let q = a.square(x);
+        let sc = a.scale(q, -0.5);
+        let sp = a.softplus(y);
+        let d = a.div(sc, sp);
+        let m = a.mul(lg, d);
+        let sq = a.sqrt(e);
+        let ng = a.neg(sq);
+        let o = a.offset(m, 0.25);
+        let p = a.powi(y, 3);
+        let t = a.sub(o, ng);
+        let ln = a.ln(e);
+        let u = a.add(t, p);
+        a.add(u, ln)
+    }
+
+    /// Every lane of the batched tape must agree **bitwise** with a
+    /// scalar-tape evaluation of the same program at that lane's
+    /// inputs, for both primal values and gradients.
+    #[test]
+    fn lanes_match_scalar_tape_bitwise() {
+        let xs = [0.3, 2.0, -0.7, 1.9];
+        let ys = [-1.2, 0.5, 31.5, -0.1];
+        let lanes = xs.len();
+
+        let mut bt = BatchTape::new(lanes);
+        let bx = bt.input(&xs);
+        let by = bt.input(&ys);
+        let bout = alg_program(&mut bt, bx, by);
+        let bvals = bt.lane_values(bout).to_vec();
+        let badj = bt.grad(bout).to_vec();
+
+        for k in 0..lanes {
+            let mut t = Tape::new();
+            let vx = t.input(xs[k]);
+            let vy = t.input(ys[k]);
+            let out = alg_program(&mut t, vx, vy);
+            assert_eq!(t.value(out), bvals[k], "lane {k} primal");
+            let adj = t.grad(out);
+            assert_eq!(
+                adj[vx.0 as usize],
+                badj[bx.0 as usize * lanes + k],
+                "lane {k} d/dx"
+            );
+            assert_eq!(
+                adj[vy.0 as usize],
+                badj[by.0 as usize * lanes + k],
+                "lane {k} d/dy"
+            );
+        }
+    }
+
+    #[test]
+    fn sum_and_dot_const_match_scalar_bitwise() {
+        let rows = [[0.3, -1.2, 0.9], [1.4, 0.2, -0.5]];
+        let coef = [0.5, -1.5, 2.0];
+        let lanes = 2;
+        let mut bt = BatchTape::new(lanes);
+        let vars: Vec<Var> = (0..3)
+            .map(|i| bt.input(&[rows[0][i], rows[1][i]]))
+            .collect();
+        let s = bt.sum(&vars);
+        let d = bt.dot_const(&vars, &coef);
+        let out = bt.mul(s, d);
+        let bvals = bt.lane_values(out).to_vec();
+        let badj = bt.grad(out).to_vec();
+
+        for k in 0..lanes {
+            let mut t = Tape::new();
+            let tv: Vec<Var> = rows[k].iter().map(|&v| t.input(v)).collect();
+            let ts = t.sum(&tv);
+            let td = t.dot_const(&tv, &coef);
+            let tout = t.mul(ts, td);
+            assert_eq!(t.value(tout), bvals[k], "lane {k} primal");
+            let adj = t.grad(tout);
+            for i in 0..3 {
+                assert_eq!(
+                    adj[tv[i].0 as usize],
+                    badj[vars[i].0 as usize * lanes + k],
+                    "lane {k} grad[{i}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn composite_lanes_partials_flow_per_lane() {
+        // lane-dependent fused node: value_k = c_k * x_k with partial c_k
+        let lanes = 3;
+        let xs = [1.5, -2.0, 0.25];
+        let cs = [2.0, 3.0, -4.0];
+        let mut bt = BatchTape::new(lanes);
+        let x = bt.input(&xs);
+        let vals: Vec<f64> = (0..lanes).map(|k| cs[k] * xs[k]).collect();
+        let node = bt.composite_lanes(&[x], &cs, &vals);
+        let adj = bt.grad(node).to_vec();
+        for k in 0..lanes {
+            assert_eq!(adj[x.0 as usize * lanes + k], cs[k]);
+        }
+    }
+
+    #[test]
+    fn reset_keeps_capacity_watermark() {
+        let mut bt = BatchTape::new(4);
+        let xs = [0.1, 0.2, 0.3, 0.4];
+        let ys = [0.5, -0.6, 0.7, -0.8];
+        let x = bt.input(&xs);
+        let y = bt.input(&ys);
+        let out = alg_program(&mut bt, x, y);
+        let _ = bt.grad(out);
+        let (nodes, arena) = (bt.node_capacity(), bt.arena_capacity());
+        for _ in 0..10 {
+            bt.reset();
+            let x = bt.input(&xs);
+            let y = bt.input(&ys);
+            let out = alg_program(&mut bt, x, y);
+            let _ = bt.grad(out);
+            assert_eq!(bt.node_capacity(), nodes);
+            assert_eq!(bt.arena_capacity(), arena);
+        }
+    }
+}

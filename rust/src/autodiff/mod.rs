@@ -23,7 +23,12 @@
 //! slice per node, and the reverse sweep writes into an adjoint buffer
 //! owned by the tape.
 
-/// Handle to a node on a [`Tape`].
+pub mod batch;
+
+pub use batch::BatchTape;
+
+/// Handle to a node on a [`Tape`] (or, lane-wise, on a
+/// [`batch::BatchTape`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Var(pub u32);
 

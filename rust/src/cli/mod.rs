@@ -25,6 +25,7 @@ const VALUE_FLAGS: &[&str] = &[
     "max-tree-depth",
     "model",
     "backend",
+    "chain-method",
     "dtype",
     "step-size",
     "steps",

@@ -1,0 +1,598 @@
+//! The compiler's **batched** evaluation pass: replay an effect-handler
+//! program once on a multi-lane [`BatchTape`] so K chains' joint
+//! log-densities *and* gradients come out of a single fused pass — the
+//! potential side of the vectorized chain engine
+//! ([`crate::mcmc::batch_nuts`]).
+//!
+//! `BatchTapeCtx` is the lane-parallel twin of the scalar `TapeCtx`
+//! ([`crate::compile::potential`]): the same site-cursor replay, the
+//! same constraining bijections, the same fused likelihood composites —
+//! except every tape node now carries `lanes` primal values and the
+//! fused composites carry per-lane partials.  Each lane is an
+//! independent scalar evaluation with identical operation order and
+//! branch structure, so lane `k` of [`BatchedCompiledModel`] is
+//! **bitwise identical** to a scalar [`crate::compile::CompiledModel`]
+//! evaluation at lane `k`'s coordinates (pinned by this module's tests
+//! and `rust/tests/chain_methods.rs`).  What changes is the cost
+//! profile: the op-dispatch/interpretation overhead of the tape replay
+//! is paid once for all K chains, and the per-op arithmetic runs over
+//! contiguous lane arrays the autovectorizer turns into SIMD.
+//!
+//! All scratch (tape, input list, term list, composite parent/partial/
+//! value buffers, pooled vectors) lives on the [`BatchedCompiledModel`]
+//! and is reused, so steady-state batched evaluations — and therefore
+//! steady-state vectorized NUTS draws — perform **zero heap
+//! allocations** (`rust/tests/alloc_free.rs`).
+
+use anyhow::Result;
+
+use crate::autodiff::{BatchTape, Var};
+use crate::compile::layout::{SiteLayout, SiteTransform};
+use crate::compile::{pool_take, DistV, EffModel, ProbCtx};
+use crate::effects::site_key;
+use crate::mcmc::BatchPotential;
+use crate::ppl::special::{softplus_sigmoid, LN_2PI};
+
+/// A compiled effect-handler program evaluated over `lanes` chains at
+/// once: caches the site layout and every evaluation buffer, and
+/// implements [`BatchPotential`] by replaying the program on a
+/// multi-lane [`BatchTape`].  Build one with [`compile_batched`].
+pub struct BatchedCompiledModel<M: EffModel> {
+    model: M,
+    layout: SiteLayout,
+    lanes: usize,
+    tape: BatchTape,
+    /// one input Var per flat unconstrained coordinate (all lanes)
+    z_vars: Vec<Var>,
+    /// accumulated log-density terms (priors, likelihoods, Jacobians)
+    terms: Vec<Var>,
+    /// composite parent scratch
+    parents: Vec<Var>,
+    /// composite per-lane partial scratch (parent-slot-major lane-minor)
+    partials: Vec<f64>,
+    /// per-lane composite value accumulator
+    vals: Vec<f64>,
+    /// per-lane accumulator scratch (residual sums)
+    acc_a: Vec<f64>,
+    /// per-lane hoisted-constant scratch (e.g. 1/sigma^2)
+    acc_b: Vec<f64>,
+    /// pooled scratch vectors handed to the model via `vec_take`
+    pool: Vec<Vec<Var>>,
+    evals: u64,
+}
+
+impl<M: EffModel> BatchedCompiledModel<M> {
+    pub(crate) fn new(model: M, layout: SiteLayout, lanes: usize) -> BatchedCompiledModel<M> {
+        let dim = layout.dim;
+        BatchedCompiledModel {
+            model,
+            layout,
+            lanes,
+            tape: BatchTape::new(lanes),
+            z_vars: Vec::with_capacity(dim),
+            terms: Vec::new(),
+            parents: Vec::new(),
+            partials: Vec::new(),
+            vals: vec![0.0; lanes],
+            acc_a: vec![0.0; lanes],
+            acc_b: vec![0.0; lanes],
+            pool: Vec::new(),
+            evals: 0,
+        }
+    }
+
+    /// The compiled parameter layout (site spans, transforms, labels).
+    pub fn layout(&self) -> &SiteLayout {
+        &self.layout
+    }
+
+    /// The underlying program.
+    pub fn model(&self) -> &M {
+        &self.model
+    }
+}
+
+impl<M: EffModel> BatchPotential for BatchedCompiledModel<M> {
+    fn dim(&self) -> usize {
+        self.layout.dim
+    }
+
+    fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    fn value_and_grad_batch(&mut self, z: &[f64], u: &mut [f64], grad: &mut [f64]) {
+        self.evals += 1;
+        let BatchedCompiledModel {
+            model,
+            layout,
+            lanes,
+            tape,
+            z_vars,
+            terms,
+            parents,
+            partials,
+            vals,
+            acc_a,
+            acc_b,
+            pool,
+            ..
+        } = self;
+        let l = *lanes;
+        let dim = layout.dim;
+        assert_eq!(z.len(), dim * l, "batched model: z must be dim x lanes");
+        assert_eq!(u.len(), l, "batched model: u must have one slot per lane");
+        assert_eq!(grad.len(), dim * l, "batched model: grad must be dim x lanes");
+        tape.reset();
+        z_vars.clear();
+        for i in 0..dim {
+            z_vars.push(tape.input(&z[i * l..(i + 1) * l]));
+        }
+        terms.clear();
+        {
+            let mut ctx = BatchTapeCtx {
+                tape: &mut *tape,
+                layout: &*layout,
+                z_vars: z_vars.as_slice(),
+                cursor: 0,
+                terms: &mut *terms,
+                parents: &mut *parents,
+                partials: &mut *partials,
+                vals: &mut *vals,
+                acc_a: &mut *acc_a,
+                acc_b: &mut *acc_b,
+                pool: &mut *pool,
+            };
+            model.run(&mut ctx);
+            assert_eq!(
+                ctx.cursor,
+                layout.visit.len(),
+                "model visited fewer sites than the compile-time trace — compiled models require static structure"
+            );
+        }
+        let logp = tape.sum(&terms[..]);
+        let un = tape.neg(logp);
+        u.copy_from_slice(tape.lane_values(un));
+        let adj = tape.grad(un);
+        for (i, v) in z_vars.iter().enumerate() {
+            let s = v.0 as usize * l;
+            grad[i * l..(i + 1) * l].copy_from_slice(&adj[s..s + l]);
+        }
+    }
+
+    fn num_evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+/// The batched evaluation interpreter: value domain = multi-lane tape
+/// [`Var`]s.  Site matching is the same cursor-over-visit-order scheme
+/// as the scalar `TapeCtx` — no string lookups, no allocation.
+struct BatchTapeCtx<'a> {
+    tape: &'a mut BatchTape,
+    layout: &'a SiteLayout,
+    z_vars: &'a [Var],
+    cursor: usize,
+    terms: &'a mut Vec<Var>,
+    parents: &'a mut Vec<Var>,
+    partials: &'a mut Vec<f64>,
+    vals: &'a mut Vec<f64>,
+    acc_a: &'a mut Vec<f64>,
+    acc_b: &'a mut Vec<f64>,
+    pool: &'a mut Vec<Vec<Var>>,
+}
+
+impl BatchTapeCtx<'_> {
+    /// Advance the visit cursor to the next site, checking that the
+    /// program's structure still matches the compile-time trace.
+    fn next_site(&mut self, name: &str, observed: bool, event_len: usize) -> (usize, SiteTransform) {
+        let idx = match self.layout.visit.get(self.cursor) {
+            Some(&i) => i,
+            None => panic!(
+                "site '{name}': model visited more sites than the compile-time trace — \
+                 compiled models require static structure"
+            ),
+        };
+        self.cursor += 1;
+        let site = &self.layout.sites[idx];
+        assert!(
+            site.key == site_key(name),
+            "site '{name}' visited where '{}' was traced — compiled models require static structure",
+            site.name
+        );
+        assert!(
+            site.observed == observed,
+            "site '{name}': latent/observed role changed since the compile-time trace"
+        );
+        assert!(
+            site.event_len == event_len,
+            "site '{name}': event length changed since the compile-time trace ({} -> {event_len})",
+            site.event_len
+        );
+        (site.offset, site.transform)
+    }
+
+    /// Apply the site's constraining bijection lane-wise (identical op
+    /// sequence to the scalar `TapeCtx::constrain`, so every lane's
+    /// log-|det J| matches bitwise).
+    fn constrain(&mut self, u: Var, tr: SiteTransform) -> Var {
+        match tr {
+            SiteTransform::Identity => u,
+            SiteTransform::Exp => {
+                let y = self.tape.exp(u);
+                self.terms.push(u); // log|d exp(u)/du| = u
+                y
+            }
+            SiteTransform::Interval { low, high } => {
+                let s = self.tape.sigmoid(u);
+                let scaled = self.tape.scale(s, high - low);
+                let y = self.tape.offset(scaled, low);
+                let sp = self.tape.softplus(u);
+                let nu = self.tape.neg(u);
+                let sn = self.tape.softplus(nu);
+                let both = self.tape.add(sp, sn);
+                let neg = self.tape.neg(both);
+                let ladj = self.tape.offset(neg, (high - low).ln());
+                self.terms.push(ladj);
+                y
+            }
+        }
+    }
+}
+
+impl ProbCtx for BatchTapeCtx<'_> {
+    type V = Var;
+    type A = BatchTape;
+
+    fn alg(&mut self) -> &mut BatchTape {
+        &mut *self.tape
+    }
+
+    fn sample(&mut self, name: &str, d: DistV<Var>) -> Var {
+        let (offset, tr) = self.next_site(name, false, 1);
+        let u = self.z_vars[offset];
+        let y = self.constrain(u, tr);
+        let lp = d.log_prob(self.tape, y);
+        self.terms.push(lp);
+        y
+    }
+
+    fn sample_vec(&mut self, name: &str, d: DistV<Var>, n: usize, out: &mut Vec<Var>) {
+        let (offset, tr) = self.next_site(name, false, n);
+        for j in 0..n {
+            let u = self.z_vars[offset + j];
+            let y = self.constrain(u, tr);
+            let lp = d.log_prob(self.tape, y);
+            self.terms.push(lp);
+            out.push(y);
+        }
+    }
+
+    fn observe(&mut self, name: &str, d: DistV<Var>, y: f64) {
+        let _ = self.next_site(name, true, 1);
+        let x = self.tape.constant(y);
+        let lp = d.log_prob(self.tape, x);
+        self.terms.push(lp);
+    }
+
+    fn observe_iid(&mut self, name: &str, d: DistV<Var>, ys: &[f64]) {
+        let _ = self.next_site(name, true, ys.len());
+        let l = self.tape.lanes();
+        let n = ys.len() as f64;
+        match d {
+            DistV::Normal { loc, scale } => {
+                // fused composite, lane-wise: value_k + partials wrt
+                // (loc_k, scale_k) — same accumulation order per lane
+                // as the scalar TapeCtx
+                self.vals.clear();
+                self.vals.resize(l, 0.0);
+                self.partials.clear();
+                self.partials.resize(2 * l, 0.0);
+                for k in 0..l {
+                    let lv = self.tape.value_at(loc, k);
+                    let sv = self.tape.value_at(scale, k);
+                    let inv2 = 1.0 / (sv * sv);
+                    let mut value = 0.0;
+                    let mut sr = 0.0;
+                    let mut sr2 = 0.0;
+                    for &y in ys {
+                        let r = y - lv;
+                        value += -0.5 * r * r * inv2;
+                        sr += r;
+                        sr2 += r * r;
+                    }
+                    value += -n * sv.ln() - 0.5 * n * LN_2PI;
+                    self.vals[k] = value;
+                    self.partials[k] = sr * inv2;
+                    self.partials[l + k] = sr2 / (sv * sv * sv) - n / sv;
+                }
+                self.parents.clear();
+                self.parents.push(loc);
+                self.parents.push(scale);
+                let node =
+                    self.tape
+                        .composite_lanes(&self.parents[..], &self.partials[..], &self.vals[..]);
+                self.terms.push(node);
+            }
+            DistV::BernoulliLogits { logits } => {
+                let sum_y: f64 = ys.iter().sum();
+                self.vals.clear();
+                self.vals.resize(l, 0.0);
+                self.partials.clear();
+                self.partials.resize(l, 0.0);
+                for k in 0..l {
+                    let zl = self.tape.value_at(logits, k);
+                    let (sp, sig) = softplus_sigmoid(zl);
+                    self.vals[k] = sum_y * zl - n * sp;
+                    self.partials[k] = sum_y - n * sig;
+                }
+                self.parents.clear();
+                self.parents.push(logits);
+                let node =
+                    self.tape
+                        .composite_lanes(&self.parents[..], &self.partials[..], &self.vals[..]);
+                self.terms.push(node);
+            }
+            _ => {
+                // generic fallback: per-element log-probs on the tape
+                // (lane-wise through the Alg ops)
+                for &y in ys {
+                    let x = self.tape.constant(y);
+                    let lp = d.log_prob(self.tape, x);
+                    self.terms.push(lp);
+                }
+            }
+        }
+    }
+
+    fn observe_normal(&mut self, name: &str, locs: &[Var], scale: Var, ys: &[f64]) {
+        assert_eq!(
+            locs.len(),
+            ys.len(),
+            "site '{name}': locations/observations length mismatch"
+        );
+        let _ = self.next_site(name, true, ys.len());
+        let l = self.tape.lanes();
+        let n = ys.len() as f64;
+        self.parents.clear();
+        self.partials.clear();
+        self.partials.resize((ys.len() + 1) * l, 0.0);
+        self.vals.clear();
+        self.vals.resize(l, 0.0);
+        // per-lane running sum of squared residuals ...
+        self.acc_a.clear();
+        self.acc_a.resize(l, 0.0);
+        // ... and per-lane 1/sigma^2, hoisted out of the element loop
+        // (same value the scalar TapeCtx computes once per evaluation)
+        self.acc_b.clear();
+        self.acc_b.resize(l, 0.0);
+        for k in 0..l {
+            let sv = self.tape.value_at(scale, k);
+            self.acc_b[k] = 1.0 / (sv * sv);
+        }
+        for (i, &y) in ys.iter().enumerate() {
+            self.parents.push(locs[i]);
+            for k in 0..l {
+                let inv2 = self.acc_b[k];
+                let lv = self.tape.value_at(locs[i], k);
+                let r = y - lv;
+                self.vals[k] += -0.5 * r * r * inv2;
+                self.acc_a[k] += r * r;
+                self.partials[i * l + k] = r * inv2;
+            }
+        }
+        self.parents.push(scale);
+        for k in 0..l {
+            let sv = self.tape.value_at(scale, k);
+            self.vals[k] += -n * sv.ln() - 0.5 * n * LN_2PI;
+            self.partials[ys.len() * l + k] = self.acc_a[k] / (sv * sv * sv) - n / sv;
+        }
+        let node = self
+            .tape
+            .composite_lanes(&self.parents[..], &self.partials[..], &self.vals[..]);
+        self.terms.push(node);
+    }
+
+    fn observe_normal_fixed(&mut self, name: &str, locs: &[Var], sigmas: &[f64], ys: &[f64]) {
+        assert_eq!(
+            locs.len(),
+            ys.len(),
+            "site '{name}': locations/observations length mismatch"
+        );
+        assert_eq!(
+            sigmas.len(),
+            ys.len(),
+            "site '{name}': scales/observations length mismatch"
+        );
+        let _ = self.next_site(name, true, ys.len());
+        let l = self.tape.lanes();
+        self.parents.clear();
+        self.partials.clear();
+        self.partials.resize(ys.len() * l, 0.0);
+        self.vals.clear();
+        self.vals.resize(l, 0.0);
+        for (i, &y) in ys.iter().enumerate() {
+            let s = sigmas[i];
+            let inv2 = 1.0 / (s * s);
+            self.parents.push(locs[i]);
+            for k in 0..l {
+                let lv = self.tape.value_at(locs[i], k);
+                let r = y - lv;
+                self.vals[k] += -0.5 * r * r * inv2 - s.ln() - 0.5 * LN_2PI;
+                self.partials[i * l + k] = r * inv2;
+            }
+        }
+        let node = self
+            .tape
+            .composite_lanes(&self.parents[..], &self.partials[..], &self.vals[..]);
+        self.terms.push(node);
+    }
+
+    fn observe_bernoulli_logits(&mut self, name: &str, logits: &[Var], ys: &[f64]) {
+        assert_eq!(
+            logits.len(),
+            ys.len(),
+            "site '{name}': logits/observations length mismatch"
+        );
+        let _ = self.next_site(name, true, ys.len());
+        let l = self.tape.lanes();
+        self.parents.clear();
+        self.partials.clear();
+        self.partials.resize(ys.len() * l, 0.0);
+        self.vals.clear();
+        self.vals.resize(l, 0.0);
+        for (i, &y) in ys.iter().enumerate() {
+            self.parents.push(logits[i]);
+            for k in 0..l {
+                let zl = self.tape.value_at(logits[i], k);
+                let (sp, sig) = softplus_sigmoid(zl);
+                self.vals[k] += y * zl - sp;
+                self.partials[i * l + k] = y - sig;
+            }
+        }
+        let node = self
+            .tape
+            .composite_lanes(&self.parents[..], &self.partials[..], &self.vals[..]);
+        self.terms.push(node);
+    }
+
+    fn dot(&mut self, ws: &[Var], xs: &[f64]) -> Var {
+        self.tape.dot_const(ws, xs)
+    }
+
+    fn vec_take(&mut self) -> Vec<Var> {
+        pool_take(&mut self.pool)
+    }
+
+    fn vec_put(&mut self, buf: Vec<Var>) {
+        self.pool.push(buf);
+    }
+}
+
+/// Compile an effect-handler program into a [`BatchedCompiledModel`]
+/// evaluating `lanes` chains per call: runs the discovery pass once
+/// (same validation as [`crate::compile::compile`]) and caches the
+/// layout plus all batched evaluation scratch.
+pub fn compile_batched<M: EffModel>(
+    model: M,
+    seed: u64,
+    lanes: usize,
+) -> Result<BatchedCompiledModel<M>> {
+    let layout = SiteLayout::trace(&model, seed)?;
+    Ok(BatchedCompiledModel::new(model, layout, lanes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compile::compile;
+    use crate::compile::zoo::{EightSchools, Horseshoe, LogisticModel, NormalMean};
+    use crate::data;
+    use crate::mcmc::Potential;
+    use crate::rng::Rng;
+
+    /// Every lane of the batched evaluation must be bitwise identical
+    /// to the scalar compiled model at that lane's coordinates — value
+    /// and gradient — across the whole zoo (every fused observe path
+    /// plus the generic fallback is exercised by some model).
+    fn assert_lanes_match_scalar<M: EffModel + Clone>(model: M, dim: usize, seed: u64) {
+        let lanes = 3;
+        let mut rng = Rng::new(seed);
+        let mut z = vec![0.0; dim * lanes];
+        for v in z.iter_mut() {
+            *v = 0.4 * rng.normal();
+        }
+
+        let mut batched = compile_batched(model.clone(), 0, lanes).unwrap();
+        let mut u = vec![0.0; lanes];
+        let mut g = vec![0.0; dim * lanes];
+        batched.value_and_grad_batch(&z, &mut u, &mut g);
+
+        let mut scalar = compile(model, 0).unwrap();
+        let mut zk = vec![0.0; dim];
+        let mut gk = vec![0.0; dim];
+        for k in 0..lanes {
+            for i in 0..dim {
+                zk[i] = z[i * lanes + k];
+            }
+            let uk = scalar.value_and_grad(&zk, &mut gk);
+            assert_eq!(u[k], uk, "lane {k} potential");
+            for i in 0..dim {
+                assert_eq!(g[i * lanes + k], gk[i], "lane {k} grad[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn eight_schools_lanes_match_scalar_bitwise() {
+        assert_lanes_match_scalar(EightSchools::classic(), 10, 1);
+    }
+
+    #[test]
+    fn logistic_lanes_match_scalar_bitwise() {
+        let d = data::make_covtype_like(2, 40, 3);
+        let m = LogisticModel {
+            x: d.x,
+            y: d.y,
+            n: 40,
+            d: 3,
+        };
+        assert_lanes_match_scalar(m, 4, 2);
+    }
+
+    #[test]
+    fn horseshoe_lanes_match_scalar_bitwise() {
+        assert_lanes_match_scalar(Horseshoe::synthetic(3, 15, 3, 1), 8, 3);
+    }
+
+    #[test]
+    fn normal_mean_lanes_match_scalar_bitwise() {
+        let m = NormalMean {
+            y: vec![0.4, -0.9, 1.3],
+            sigma: 1.5,
+        };
+        assert_lanes_match_scalar(m, 1, 4);
+    }
+
+    /// Exercises the generic (non-fused) observe_iid fallback, which
+    /// runs lane-wise through the Alg ops.
+    #[derive(Clone)]
+    struct ExpObs {
+        y: Vec<f64>,
+    }
+    impl EffModel for ExpObs {
+        fn run<C: ProbCtx>(&self, c: &mut C) {
+            let d = c.half_normal(1.0);
+            let rate = c.sample("rate", d);
+            c.observe_iid("y", DistV::Exponential { rate }, &self.y);
+        }
+    }
+
+    #[test]
+    fn generic_observe_iid_fallback_lanes_match_scalar_bitwise() {
+        assert_lanes_match_scalar(
+            ExpObs {
+                y: vec![0.5, 1.2, 0.1],
+            },
+            1,
+            5,
+        );
+    }
+
+    #[test]
+    fn tape_capacity_stabilizes_after_first_batched_evaluation() {
+        let mut pot = compile_batched(EightSchools::classic(), 0, 4).unwrap();
+        let dim = pot.dim();
+        let z = vec![0.1; dim * 4];
+        let mut u = vec![0.0; 4];
+        let mut g = vec![0.0; dim * 4];
+        pot.value_and_grad_batch(&z, &mut u, &mut g);
+        let nodes = pot.tape.node_capacity();
+        let arena = pot.tape.arena_capacity();
+        for _ in 0..10 {
+            pot.value_and_grad_batch(&z, &mut u, &mut g);
+            assert_eq!(pot.tape.node_capacity(), nodes);
+            assert_eq!(pot.tape.arena_capacity(), arena);
+        }
+    }
+}

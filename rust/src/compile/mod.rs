@@ -71,6 +71,7 @@
 //! [`crate::coordinator::run_compiled_chains`], the `fugue
 //! sample-model` CLI, and the `eight_schools` / `horseshoe` examples.
 
+pub mod batch_potential;
 pub mod handler_ctx;
 pub mod layout;
 pub mod potential;
@@ -82,6 +83,7 @@ use crate::autodiff::Alg;
 
 pub use crate::ppl::distv::DistV;
 
+pub use batch_potential::{compile_batched, BatchedCompiledModel};
 pub use handler_ctx::HandlerCtx;
 pub use layout::{SiteLayout, SiteSpec, SiteTransform};
 pub use potential::CompiledModel;

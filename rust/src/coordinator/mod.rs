@@ -10,9 +10,11 @@
 pub mod chain;
 pub mod parallel;
 pub mod sampler;
+pub mod vectorized;
 pub mod warmup;
 
 pub use chain::{chain_start, run_chain, run_chains, ChainResult, ChainStats, NutsOptions};
 pub use parallel::{run_chains_parallel, run_compiled_chains, ParallelChainRunner};
 pub use sampler::{FusedSampler, NativeSampler, Sampler, TreeAlgorithm};
+pub use vectorized::{run_chains_vectorized, run_compiled_chains_method, ChainMethod};
 pub use warmup::WarmupSchedule;

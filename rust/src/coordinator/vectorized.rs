@@ -1,0 +1,357 @@
+//! The vectorized chain engine: K chains sampled **in lock-step**
+//! through the batched NUTS kernel ([`crate::mcmc::batch_nuts`]), with
+//! one fused [`BatchPotential`] gradient evaluation shared by every
+//! chain per leapfrog — the native reproduction of NumPyro's
+//! `chain_method="vectorized"` (`vmap` over the sampler, paper E7).
+//!
+//! Each lane keeps its **own** warmup state — dual-averaged step size,
+//! Welford mass-matrix window, RNG stream — updated by exactly the
+//! same schedule as the sequential [`crate::coordinator::run_chain`]
+//! loop, and every lane derives its seed/init from the shared
+//! [`chain_start`].  Chain `k` of
+//! a vectorized run is therefore **bitwise identical** to chain `k` of
+//! a sequential or thread-parallel run with the same options (pinned by
+//! this module's tests and `rust/tests/chain_methods.rs`): the three
+//! [`ChainMethod`]s are pure execution strategies, invisible to the
+//! model and to the statistics.
+//!
+//! The lane trade-off: per draw, every chain waits for the longest
+//! lane's trajectory (masked lanes still occupy SIMD width), but each
+//! leapfrog costs one batched evaluation instead of K scalar ones.
+//! `fugue bench` quantifies the exchange as
+//! `vectorized_speedup_vs_parallel` / `vectorized_speedup_vs_sequential`
+//! per chain count in `BENCH_native.json`.
+
+use anyhow::{bail, Result};
+
+use crate::compile::{BatchedCompiledModel, CompiledModel, EffModel, SiteLayout};
+use crate::coordinator::chain::{chain_start, run_chains, ChainResult, ChainStats, NutsOptions};
+use crate::coordinator::parallel::run_compiled_chains;
+use crate::coordinator::sampler::{NativeSampler, TreeAlgorithm};
+use crate::coordinator::warmup::WarmupSchedule;
+use crate::mcmc::batch_nuts::{draw_batch, BatchTreeWorkspace};
+use crate::mcmc::{BatchPotential, DrawStats, DualAverage, Welford};
+use crate::rng::Rng;
+
+/// Multi-chain execution strategy (NumPyro's `chain_method`):
+/// same statistics, different schedulers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChainMethod {
+    /// One chain after another on the calling thread.
+    Sequential,
+    /// One OS thread per chain ([`crate::coordinator::ParallelChainRunner`]).
+    Parallel,
+    /// All chains in lock-step through the batched NUTS kernel with a
+    /// fused multi-lane potential ([`run_chains_vectorized`]).
+    Vectorized,
+}
+
+impl ChainMethod {
+    pub fn parse(s: &str) -> Result<ChainMethod> {
+        Ok(match s {
+            "sequential" => ChainMethod::Sequential,
+            "parallel" => ChainMethod::Parallel,
+            "vectorized" => ChainMethod::Vectorized,
+            other => bail!("unknown chain method '{other}' (sequential|parallel|vectorized)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChainMethod::Sequential => "sequential",
+            ChainMethod::Parallel => "parallel",
+            ChainMethod::Vectorized => "vectorized",
+        }
+    }
+}
+
+/// Run `pot.lanes()` chains in lock-step through the batched NUTS
+/// kernel: Stan-style warmup (per-lane dual averaging + Welford
+/// windows) then sampling, mirroring the sequential [`run_chain`]
+/// bookkeeping statement-for-statement per lane.
+///
+/// Returns one [`ChainResult`] per lane, in chain order.  The per-phase
+/// wall-clock fields (`warmup_secs` / `sample_secs`) are shared across
+/// lanes — the lanes advance together, so per-chain timing is the
+/// engine timing.
+///
+/// [`run_chain`]: crate::coordinator::run_chain
+pub fn run_chains_vectorized<BP: BatchPotential + ?Sized>(
+    pot: &mut BP,
+    opts: &NutsOptions,
+    max_tree_depth: u32,
+) -> Result<Vec<ChainResult>> {
+    let dim = pot.dim();
+    let l = pot.lanes();
+    if l == 0 {
+        return Ok(Vec::new());
+    }
+    let schedule = WarmupSchedule::build(opts.num_warmup);
+    let closes = schedule.window_closes();
+
+    // per-lane seeds/inits from the shared derivation — chain k here
+    // IS chain k of run_chains / ParallelChainRunner
+    let mut rngs: Vec<Rng> = Vec::with_capacity(l);
+    let mut z = vec![0.0; dim * l];
+    for k in 0..l {
+        let (init_z, chain_opts) = chain_start(dim, opts, k);
+        rngs.push(Rng::new(chain_opts.seed));
+        for i in 0..dim {
+            z[i * l + k] = init_z[i];
+        }
+    }
+
+    let init_step = opts.fixed_step_size.unwrap_or(opts.init_step_size);
+    let mut das: Vec<DualAverage> = (0..l)
+        .map(|_| DualAverage::new(init_step, opts.target_accept))
+        .collect();
+    let mut steps = vec![init_step; l];
+    let mut welfords: Vec<Welford> = (0..l).map(|_| Welford::new(dim)).collect();
+    let mut inv_mass = vec![1.0; dim * l];
+
+    let total = opts.num_warmup + opts.num_samples;
+    let mut stats: Vec<ChainStats> = (0..l).map(|_| ChainStats::default()).collect();
+    for s in &mut stats {
+        s.accept_prob.reserve(total);
+        s.num_leapfrog.reserve(total);
+        s.potential.reserve(total);
+        s.diverging.reserve(total);
+        s.depth.reserve(total);
+    }
+    let mut samples: Vec<Vec<f64>> = (0..l)
+        .map(|_| Vec::with_capacity(opts.num_samples * dim))
+        .collect();
+    let mut sample_leapfrogs = vec![0u64; l];
+    let mut total_leapfrogs = vec![0u64; l];
+    let mut divergences = vec![0u64; l];
+
+    let mut ws = BatchTreeWorkspace::new(dim, l, max_tree_depth);
+    let mut draw_stats = vec![
+        DrawStats {
+            accept_prob: 0.0,
+            num_leapfrog: 0,
+            potential: 0.0,
+            diverging: false,
+            depth: 0,
+        };
+        l
+    ];
+    let mut zrow = vec![0.0; dim];
+
+    let t_warm = std::time::Instant::now();
+    let mut warmup_secs = 0.0;
+
+    for i in 0..total {
+        draw_batch(
+            pot,
+            &mut rngs,
+            &mut ws,
+            &z,
+            &steps,
+            &inv_mass,
+            max_tree_depth,
+            &mut draw_stats,
+        );
+        z.copy_from_slice(ws.proposal());
+        for k in 0..l {
+            let st = draw_stats[k];
+            total_leapfrogs[k] += st.num_leapfrog as u64;
+            if st.diverging {
+                divergences[k] += 1;
+            }
+            stats[k].accept_prob.push(st.accept_prob);
+            stats[k].num_leapfrog.push(st.num_leapfrog);
+            stats[k].potential.push(st.potential);
+            stats[k].diverging.push(st.diverging);
+            stats[k].depth.push(st.depth);
+
+            if i < opts.num_warmup {
+                if opts.fixed_step_size.is_none() {
+                    das[k].update(st.accept_prob);
+                    steps[k] = das[k].step_size();
+                }
+                if opts.adapt_mass && schedule.in_slow(i) {
+                    ws.proposal_lane(k, &mut zrow);
+                    welfords[k].update(&zrow);
+                    if closes.contains(&i) {
+                        let v = welfords[k].regularized_variance();
+                        for (d, vd) in v.iter().enumerate() {
+                            inv_mass[d * l + k] = *vd;
+                        }
+                        welfords[k].reset();
+                        if opts.fixed_step_size.is_none() {
+                            das[k].restart(das[k].step_size());
+                            steps[k] = das[k].step_size();
+                        }
+                    }
+                }
+                if i + 1 == opts.num_warmup && opts.fixed_step_size.is_none() {
+                    steps[k] = das[k].final_step_size();
+                }
+            } else {
+                ws.proposal_lane(k, &mut zrow);
+                samples[k].extend_from_slice(&zrow);
+                sample_leapfrogs[k] += st.num_leapfrog as u64;
+            }
+        }
+        if i + 1 == opts.num_warmup {
+            warmup_secs = t_warm.elapsed().as_secs_f64();
+        }
+    }
+    if opts.num_warmup == 0 {
+        warmup_secs = 0.0;
+    }
+    let sample_secs = t_warm.elapsed().as_secs_f64() - warmup_secs;
+
+    let mut results = Vec::with_capacity(l);
+    for k in 0..l {
+        let mut im = vec![0.0; dim];
+        for (i, m) in im.iter_mut().enumerate() {
+            *m = inv_mass[i * l + k];
+        }
+        results.push(ChainResult {
+            samples: std::mem::take(&mut samples[k]),
+            dim,
+            stats: std::mem::take(&mut stats[k]),
+            step_size: steps[k],
+            inv_mass: im,
+            warmup_secs,
+            sample_secs,
+            sample_leapfrogs: sample_leapfrogs[k],
+            total_leapfrogs: total_leapfrogs[k],
+            divergences: divergences[k],
+        });
+    }
+    Ok(results)
+}
+
+/// Compile an effect-handler program and run `num_chains` NUTS chains
+/// with the chosen execution strategy — the one entry point behind the
+/// `fugue sample-model --chain-method` CLI.  All three methods produce
+/// bitwise-identical per-chain results for the same options.
+///
+/// `Vectorized` evaluates the model through the batched compiler
+/// ([`BatchedCompiledModel`]), which supports every `ProbCtx` operation
+/// **except** reading primal values via `ProbCtx::val` with more than
+/// one lane (a multi-lane node has one primal per chain; the batch
+/// tape panics with a descriptive message rather than silently using
+/// lane 0).  All zoo models qualify.  A `val`-reading model can still
+/// run lock-step by composing the pieces directly: compile one scalar
+/// [`crate::compile::CompiledModel`] per chain and pass
+/// `ScalarLanes::new(pots)` to [`run_chains_vectorized`]
+/// (see [`crate::mcmc::ScalarLanes`]).
+pub fn run_compiled_chains_method<M: EffModel + Clone + Sync>(
+    model: &M,
+    method: ChainMethod,
+    num_chains: usize,
+    max_tree_depth: u32,
+    opts: &NutsOptions,
+) -> Result<(SiteLayout, Vec<ChainResult>)> {
+    match method {
+        ChainMethod::Parallel => run_compiled_chains(model, num_chains, max_tree_depth, opts),
+        ChainMethod::Sequential => {
+            let layout = SiteLayout::trace(model, opts.seed)?;
+            let mut sampler = NativeSampler::new(
+                CompiledModel::new(model.clone(), layout.clone()),
+                TreeAlgorithm::Iterative,
+                max_tree_depth,
+            );
+            let results = run_chains(&mut sampler, num_chains, opts)?;
+            Ok((layout, results))
+        }
+        ChainMethod::Vectorized => {
+            let layout = SiteLayout::trace(model, opts.seed)?;
+            if num_chains == 0 {
+                return Ok((layout, Vec::new()));
+            }
+            let mut pot = BatchedCompiledModel::new(model.clone(), layout.clone(), num_chains);
+            let results = run_chains_vectorized(&mut pot, opts, max_tree_depth)?;
+            Ok((layout, results))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcmc::{Potential, ScalarLanes};
+
+    #[derive(Clone)]
+    struct Gauss;
+    impl Potential for Gauss {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+            grad.copy_from_slice(z);
+            0.5 * (z[0] * z[0] + z[1] * z[1])
+        }
+    }
+
+    fn opts() -> NutsOptions {
+        NutsOptions {
+            num_warmup: 120,
+            num_samples: 150,
+            seed: 99,
+            ..Default::default()
+        }
+    }
+
+    /// The full vectorized runner — warmup adaptation included — must
+    /// reproduce the sequential chains bitwise, lane for lane.
+    #[test]
+    fn vectorized_matches_sequential_bitwise() {
+        let mut pot = ScalarLanes::new(vec![Gauss; 4]);
+        let vec_res = run_chains_vectorized(&mut pot, &opts(), 10).unwrap();
+
+        let mut sampler = NativeSampler::new(Gauss, TreeAlgorithm::Iterative, 10);
+        let seq_res = run_chains(&mut sampler, 4, &opts()).unwrap();
+
+        assert_eq!(vec_res.len(), seq_res.len());
+        for (v, s) in vec_res.iter().zip(&seq_res) {
+            assert_eq!(v.samples, s.samples);
+            assert_eq!(v.step_size, s.step_size);
+            assert_eq!(v.inv_mass, s.inv_mass);
+            assert_eq!(v.divergences, s.divergences);
+            assert_eq!(v.stats.accept_prob, s.stats.accept_prob);
+            assert_eq!(v.stats.num_leapfrog, s.stats.num_leapfrog);
+            assert_eq!(v.total_leapfrogs, s.total_leapfrogs);
+        }
+    }
+
+    /// Fixed step size disables adaptation in both engines identically.
+    #[test]
+    fn vectorized_fixed_step_matches_sequential() {
+        let o = NutsOptions {
+            num_warmup: 40,
+            num_samples: 60,
+            fixed_step_size: Some(0.25),
+            adapt_mass: false,
+            seed: 5,
+            ..Default::default()
+        };
+        let mut pot = ScalarLanes::new(vec![Gauss; 3]);
+        let vec_res = run_chains_vectorized(&mut pot, &o, 8).unwrap();
+        let mut sampler = NativeSampler::new(Gauss, TreeAlgorithm::Iterative, 8);
+        let seq_res = run_chains(&mut sampler, 3, &o).unwrap();
+        for (v, s) in vec_res.iter().zip(&seq_res) {
+            assert_eq!(v.samples, s.samples);
+            assert_eq!(v.step_size, s.step_size);
+        }
+    }
+
+    #[test]
+    fn chain_method_parses() {
+        assert_eq!(
+            ChainMethod::parse("sequential").unwrap(),
+            ChainMethod::Sequential
+        );
+        assert_eq!(ChainMethod::parse("parallel").unwrap(), ChainMethod::Parallel);
+        assert_eq!(
+            ChainMethod::parse("vectorized").unwrap(),
+            ChainMethod::Vectorized
+        );
+        assert!(ChainMethod::parse("warp").is_err());
+        assert_eq!(ChainMethod::Vectorized.name(), "vectorized");
+    }
+}

@@ -19,6 +19,12 @@
 //!    parallel efficiency and the cross-chain split-R̂ of the pooled
 //!    results, plus a bitwise reproducibility check (two identical
 //!    K-chain runs must agree exactly).
+//! 3. **chain-method comparison** on the compiled logistic model:
+//!    sequential vs thread-parallel vs the SIMD-lane **vectorized**
+//!    engine ([`crate::coordinator::run_chains_vectorized`]) at every
+//!    chain count, recording `vectorized_speedup_vs_parallel` /
+//!    `vectorized_speedup_vs_sequential` and asserting the three
+//!    methods' chains are bitwise equal.
 //!
 //! Results are written as machine-readable JSON (`BENCH_native.json` at
 //! the repo root by default) so the perf trajectory is diffable across
@@ -32,8 +38,8 @@ use crate::autodiff::{Tape, Var};
 use crate::compile::{compile, zoo::LogisticModel};
 use crate::config::Settings;
 use crate::coordinator::{
-    run_chain, ChainResult, NativeSampler, NutsOptions, ParallelChainRunner, Sampler,
-    TreeAlgorithm,
+    run_chain, run_compiled_chains_method, ChainMethod, ChainResult, NativeSampler, NutsOptions,
+    ParallelChainRunner, Sampler, TreeAlgorithm,
 };
 use crate::data;
 use crate::diagnostics::summary::max_cross_chain_rhat;
@@ -431,6 +437,91 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
             map.insert("compiled_ms_per_leapfrog".to_string(), jnum(comp_ms));
             if overhead.is_finite() {
                 map.insert("compiled_overhead_vs_hand".to_string(), jnum(overhead));
+            }
+        }
+
+        // vectorized chain engine: the same compiled logistic density
+        // run sequential vs thread-parallel vs SIMD-lane vectorized at
+        // each chain count — the cross-method perf datapoint
+        // (`vectorized_speedup_vs_parallel`).  All three methods
+        // produce bitwise-identical chains, which the bench asserts.
+        {
+            let (vn, vd) = if settings.quick { (800, 16) } else { (2000, 16) };
+            let dset = data::make_covtype_like(settings.seed ^ 0x51D, vn, vd);
+            let model = LogisticModel {
+                x: dset.x,
+                y: dset.y,
+                n: vn,
+                d: vd,
+            };
+            let (vwarm, vsamp) = settings.budget(100, 200);
+            let vopts = NutsOptions {
+                num_warmup: vwarm,
+                num_samples: vsamp,
+                seed: settings.seed,
+                ..Default::default()
+            };
+            bench.text.push_str(&format!(
+                "  vectorized chain engine (compiled logistic n={vn} d={vd}, {vwarm}+{vsamp} draws):\n"
+            ));
+            let mut rows: Vec<Json> = Vec::new();
+            let mut final_vs_par = f64::NAN;
+            let mut final_vs_seq = f64::NAN;
+            for &k in &chain_counts {
+                let t0 = std::time::Instant::now();
+                let (_, seq) =
+                    run_compiled_chains_method(&model, ChainMethod::Sequential, k, 10, &vopts)?;
+                let seq_wall = t0.elapsed().as_secs_f64();
+                let t0 = std::time::Instant::now();
+                let (_, par) =
+                    run_compiled_chains_method(&model, ChainMethod::Parallel, k, 10, &vopts)?;
+                let par_wall = t0.elapsed().as_secs_f64();
+                let t0 = std::time::Instant::now();
+                let (_, vec_res) =
+                    run_compiled_chains_method(&model, ChainMethod::Vectorized, k, 10, &vopts)?;
+                let vec_wall = t0.elapsed().as_secs_f64();
+                let equal = seq
+                    .iter()
+                    .zip(&par)
+                    .zip(&vec_res)
+                    .all(|((s, p), v)| s.samples == p.samples && s.samples == v.samples);
+                anyhow::ensure!(
+                    equal,
+                    "chain methods diverged bitwise at {k} chains on the compiled logistic — \
+                     sequential/parallel/vectorized must produce identical chains"
+                );
+                let vs_par = par_wall / vec_wall.max(1e-12);
+                let vs_seq = seq_wall / vec_wall.max(1e-12);
+                bench.text.push_str(&format!(
+                    "    {k} chain(s): seq {seq_wall:.3}s | par {par_wall:.3}s | vec {vec_wall:.3}s \
+                     -> {vs_par:.2}x vs parallel, {vs_seq:.2}x vs sequential (bitwise equal: {equal})\n"
+                ));
+                rows.push(jobj(vec![
+                    ("chains", jnum(k as f64)),
+                    ("sequential_wall_s", jnum(seq_wall)),
+                    ("parallel_wall_s", jnum(par_wall)),
+                    ("vectorized_wall_s", jnum(vec_wall)),
+                    ("vectorized_speedup_vs_parallel", jnum(vs_par)),
+                    ("vectorized_speedup_vs_sequential", jnum(vs_seq)),
+                    ("methods_bitwise_equal", Json::Bool(equal)),
+                ]));
+                final_vs_par = vs_par;
+                final_vs_seq = vs_seq;
+            }
+            if let Json::Obj(map) = &mut bench.json {
+                map.insert("vectorized_chain_engine".to_string(), Json::Arr(rows));
+                if final_vs_par.is_finite() {
+                    map.insert(
+                        "vectorized_speedup_vs_parallel".to_string(),
+                        jnum(final_vs_par),
+                    );
+                }
+                if final_vs_seq.is_finite() {
+                    map.insert(
+                        "vectorized_speedup_vs_sequential".to_string(),
+                        jnum(final_vs_seq),
+                    );
+                }
             }
         }
         report.push_str(&bench.text);

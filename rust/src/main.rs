@@ -27,10 +27,12 @@ USAGE: fugue <subcommand> [flags]
 
 SUBCOMMANDS
   bench                     native NUTS perf baseline: ms/leapfrog (optimized vs
-                            seed baseline) + parallel multi-chain scaling; writes
-                            machine-readable BENCH_native.json (--out FILE,
-                            --chains K for the max chain count, --quick).
-                            Needs no artifacts and no pjrt feature.
+                            seed baseline), parallel multi-chain scaling, and the
+                            sequential-vs-parallel-vs-vectorized chain-engine
+                            comparison (vectorized_speedup_vs_parallel per chain
+                            count); writes machine-readable BENCH_native.json
+                            (--out FILE, --chains K for the max chain count,
+                            --quick).  Needs no artifacts and no pjrt feature.
   info                      list models/artifacts in the manifest
   run                       sample a model and print posterior summary
                             (--model NAME --backend fused|stepwise|native
@@ -38,7 +40,11 @@ SUBCOMMANDS
   sample-model              compile an effect-handler model (no hand-written
                             gradient) and sample it with native iterative NUTS:
                             --model eight-schools|horseshoe|logistic
-                            (--chains K --warmup N --samples N --out FILE).
+                            (--chains K --warmup N --samples N --out FILE
+                             --chain-method sequential|parallel|vectorized;
+                             all three produce bitwise-identical chains —
+                             vectorized runs them lock-step over a fused
+                             multi-lane potential).
                             Needs no artifacts and no pjrt feature.
   experiment table2a        Table 2a: ms/leapfrog across architectures (--model hmm|covtype)
   experiment fig2b          Fig 2b: SKIM ms/effective-sample vs p
@@ -345,28 +351,31 @@ fn cmd_bench(args: &Args, settings: &Settings) -> Result<()> {
 /// chains.  Draws are reported in the *constrained* space.
 fn cmd_sample_model(args: &Args, settings: &Settings) -> Result<()> {
     use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel};
-    use fugue::coordinator::run_compiled_chains;
+    use fugue::coordinator::{run_compiled_chains_method, ChainMethod};
 
     let name = args.get("model").unwrap_or("eight-schools");
+    let method = ChainMethod::parse(args.get("chain-method").unwrap_or("parallel"))?;
     let (warmup, samples) = settings.budget(1000, 1000);
     let chains = settings.num_chains;
     let opts = nuts_options(args, settings, warmup, samples)?;
     println!(
-        "compiled model={name} warmup={warmup} samples={samples} chains={chains} seed={}",
+        "compiled model={name} warmup={warmup} samples={samples} chains={chains} method={} seed={}",
+        method.name(),
         settings.seed
     );
 
     let t0 = std::time::Instant::now();
     let (layout, results) = match name {
-        "eight-schools" => run_compiled_chains(
+        "eight-schools" => run_compiled_chains_method(
             &EightSchools::classic(),
+            method,
             chains,
             settings.max_tree_depth,
             &opts,
         )?,
         "horseshoe" => {
             let model = Horseshoe::synthetic(settings.seed, 100, 10, 3);
-            run_compiled_chains(&model, chains, settings.max_tree_depth, &opts)?
+            run_compiled_chains_method(&model, method, chains, settings.max_tree_depth, &opts)?
         }
         "logistic" => {
             let (n, d) = (500, 8);
@@ -377,7 +386,7 @@ fn cmd_sample_model(args: &Args, settings: &Settings) -> Result<()> {
                 n,
                 d,
             };
-            run_compiled_chains(&model, chains, settings.max_tree_depth, &opts)?
+            run_compiled_chains_method(&model, method, chains, settings.max_tree_depth, &opts)?
         }
         other => bail!("unknown compiled model '{other}' (eight-schools|horseshoe|logistic)"),
     };

@@ -1,0 +1,694 @@
+//! Lane-masked batched iterative NUTS: K chains advance through
+//! Algorithm 2 (`IterativeBuildTree`) in lock-step, sharing one fused
+//! [`BatchPotential`] gradient evaluation per leapfrog — NumPyro's
+//! `vmap`-over-`while_loop` trick (paper §3, E7) reproduced natively.
+//!
+//! # How the lock-step works
+//!
+//! Every chain (lane) runs the *exact* per-lane logic of
+//! [`crate::mcmc::nuts_iterative::draw_in_workspace`], re-expressed as
+//! a state machine: between gradient evaluations a lane is either
+//! *waiting for its next leapfrog* or *done with the draw*.  The global
+//! loop alternates
+//!
+//! 1. one **batched leapfrog** over all lanes (momentum half-kick,
+//!    position drift, one `value_and_grad_batch`, half-kick — all
+//!    lane-minor SIMD loops), with finished lanes **masked** by forcing
+//!    their step size to `0.0` so their phase-space state is frozen
+//!    while the SIMD lanes stay full;
+//! 2. scalar per-lane tree bookkeeping (multinomial leaf sampling,
+//!    `S[BitCount(n)]` slot updates, U-turn checks, doubling-loop
+//!    transitions), during which a lane may finish its subtree, start
+//!    the next doubling, or finish the draw and go inactive.
+//!
+//! Because each lane consumes its own [`Rng`] stream in exactly the
+//! order the sequential engine would, and the batched potential is
+//! lane-wise bitwise-faithful, **every lane reproduces its sequential
+//! chain bit-for-bit** — trajectories, proposals, acceptance
+//! statistics, divergences (pinned by this module's tests and by
+//! `rust/tests/chain_methods.rs`).  The speedup comes from amortizing
+//! the tape-replay dispatch across lanes and from SIMD over the
+//! lane-minor arrays; the price is that a draw lasts as many leapfrogs
+//! as its *longest* lane (masked lanes still occupy SIMD width).
+//!
+//! All storage lives in a [`BatchTreeWorkspace`] reused across draws:
+//! a steady-state [`draw_batch`] performs **zero heap allocations**
+//! (`rust/tests/alloc_free.rs`).
+
+use crate::mcmc::nuts_iterative::{bit_count, candidate_range};
+use crate::mcmc::{log_add_exp, BatchPotential, DrawStats, MAX_DELTA_ENERGY};
+use crate::rng::Rng;
+
+/// Per-lane control block of the lock-step state machine.  Mirrors the
+/// locals of the sequential `draw_in_workspace` + `build_subtree_ws`.
+#[derive(Debug, Clone, Copy, Default)]
+struct LaneCtl {
+    /// lane finished its draw (masked out of further leapfrogs)
+    done: bool,
+    /// direction of the current subtree
+    going_right: bool,
+    /// signed step size of the current subtree
+    eps: f64,
+    energy_0: f64,
+    // -- outer doubling loop --
+    depth: u32,
+    weight: f64,
+    u_prop: f64,
+    sum_accept: f64,
+    n_leapfrog: u32,
+    diverging: bool,
+    // -- current subtree --
+    n: u32,
+    num_leaves: u32,
+    sub_weight: f64,
+    sub_u_prop: f64,
+    sub_sum_accept: f64,
+    turning: bool,
+    sub_diverging: bool,
+}
+
+/// Reusable storage for [`draw_batch`]: the batched phase states
+/// (lane-minor `dim x lanes` arrays), the per-lane `S[BitCount(n)]`
+/// slot stores, the proposal buffers and the lane control blocks.
+/// Create once per (model, chain-count) with the maximum tree depth.
+pub struct BatchTreeWorkspace {
+    dim: usize,
+    lanes: usize,
+    max_depth: u32,
+    // current integration state (all lane-minor)
+    state_z: Vec<f64>,
+    state_r: Vec<f64>,
+    state_grad: Vec<f64>,
+    state_u: Vec<f64>,
+    // trajectory endpoints
+    left_z: Vec<f64>,
+    left_r: Vec<f64>,
+    left_grad: Vec<f64>,
+    left_u: Vec<f64>,
+    right_z: Vec<f64>,
+    right_r: Vec<f64>,
+    right_grad: Vec<f64>,
+    right_u: Vec<f64>,
+    /// even-node slot stores: `s_z[(slot * dim + i) * lanes + k]`
+    s_z: Vec<f64>,
+    s_r: Vec<f64>,
+    /// per-subtree multinomial proposal
+    sub_z_prop: Vec<f64>,
+    /// draw-level proposal (the result of [`draw_batch`])
+    z_prop: Vec<f64>,
+    /// per-lane masked step size for the current global leapfrog
+    eps: Vec<f64>,
+    ctl: Vec<LaneCtl>,
+}
+
+impl BatchTreeWorkspace {
+    pub fn new(dim: usize, lanes: usize, max_depth: u32) -> BatchTreeWorkspace {
+        assert!(lanes > 0, "BatchTreeWorkspace needs at least one lane");
+        let slots = max_depth.max(1) as usize;
+        let dl = dim * lanes;
+        BatchTreeWorkspace {
+            dim,
+            lanes,
+            max_depth,
+            state_z: vec![0.0; dl],
+            state_r: vec![0.0; dl],
+            state_grad: vec![0.0; dl],
+            state_u: vec![0.0; lanes],
+            left_z: vec![0.0; dl],
+            left_r: vec![0.0; dl],
+            left_grad: vec![0.0; dl],
+            left_u: vec![0.0; lanes],
+            right_z: vec![0.0; dl],
+            right_r: vec![0.0; dl],
+            right_grad: vec![0.0; dl],
+            right_u: vec![0.0; lanes],
+            s_z: vec![0.0; slots * dl],
+            s_r: vec![0.0; slots * dl],
+            sub_z_prop: vec![0.0; dl],
+            z_prop: vec![0.0; dl],
+            eps: vec![0.0; lanes],
+            ctl: vec![LaneCtl::default(); lanes],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn max_depth(&self) -> u32 {
+        self.max_depth
+    }
+
+    /// The proposals left behind by the last [`draw_batch`] call,
+    /// lane-minor (`z[i * lanes + k]`).
+    pub fn proposal(&self) -> &[f64] {
+        &self.z_prop
+    }
+
+    /// Copy lane `k`'s proposal into `out` (length `dim`).
+    pub fn proposal_lane(&self, k: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.dim);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.z_prop[i * self.lanes + k];
+        }
+    }
+}
+
+/// Kinetic energy of lane `k` — same accumulation order as the scalar
+/// [`crate::mcmc::kinetic`], so the lane matches bitwise.
+#[inline]
+fn kinetic_lane(r: &[f64], inv_mass: &[f64], dim: usize, l: usize, k: usize) -> f64 {
+    let mut s = 0.0;
+    for i in 0..dim {
+        let ri = r[i * l + k];
+        s += ri * ri * inv_mass[i * l + k];
+    }
+    0.5 * s
+}
+
+/// Lane-`k` U-turn criterion across a chord (same accumulation order
+/// as the scalar [`crate::mcmc::is_u_turn`]).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn is_u_turn_lane(
+    z_left: &[f64],
+    z_right: &[f64],
+    r_left: &[f64],
+    r_right: &[f64],
+    inv_mass: &[f64],
+    dim: usize,
+    l: usize,
+    k: usize,
+) -> bool {
+    let mut dot_l = 0.0;
+    let mut dot_r = 0.0;
+    for i in 0..dim {
+        let idx = i * l + k;
+        let dz = z_right[idx] - z_left[idx];
+        dot_l += dz * inv_mass[idx] * r_left[idx];
+        dot_r += dz * inv_mass[idx] * r_right[idx];
+    }
+    dot_l <= 0.0 || dot_r <= 0.0
+}
+
+/// Begin lane `k`'s next subtree: sample the doubling direction from
+/// the lane's own RNG, copy the corresponding trajectory endpoint into
+/// the integration state, and reset the subtree accumulators — the
+/// per-lane equivalent of the sequential outer-loop prologue plus
+/// `build_subtree_ws`'s entry.
+fn start_subtree(ws: &mut BatchTreeWorkspace, rngs: &mut [Rng], step_sizes: &[f64], k: usize) {
+    let (dim, l) = (ws.dim, ws.lanes);
+    let going_right = rngs[k].bernoulli(0.5);
+    {
+        let c = &mut ws.ctl[k];
+        c.going_right = going_right;
+        c.eps = if going_right {
+            step_sizes[k]
+        } else {
+            -step_sizes[k]
+        };
+        c.n = 0;
+        c.num_leaves = 1 << c.depth;
+        c.sub_weight = f64::NEG_INFINITY;
+        c.sub_u_prop = f64::INFINITY;
+        c.sub_sum_accept = 0.0;
+        c.turning = false;
+        c.sub_diverging = false;
+    }
+    if going_right {
+        for i in 0..dim {
+            let idx = i * l + k;
+            ws.state_z[idx] = ws.right_z[idx];
+            ws.state_r[idx] = ws.right_r[idx];
+            ws.state_grad[idx] = ws.right_grad[idx];
+        }
+        ws.state_u[k] = ws.right_u[k];
+    } else {
+        for i in 0..dim {
+            let idx = i * l + k;
+            ws.state_z[idx] = ws.left_z[idx];
+            ws.state_r[idx] = ws.left_r[idx];
+            ws.state_grad[idx] = ws.left_grad[idx];
+        }
+        ws.state_u[k] = ws.left_u[k];
+    }
+    // the subtree's multinomial proposal starts at the edge state
+    for i in 0..dim {
+        ws.sub_z_prop[i * l + k] = ws.state_z[i * l + k];
+    }
+}
+
+/// Lane `k`'s bookkeeping after a leapfrog landed on its next leaf:
+/// multinomial progressive sampling, slot store / U-turn checks, and —
+/// when the subtree is complete — the outer doubling-loop transition
+/// (biased proposal swap, endpoint update, overall U-turn check, next
+/// subtree or draw completion).  Mirrors the sequential engine
+/// statement-for-statement per lane, including RNG consumption order.
+fn after_leapfrog(
+    ws: &mut BatchTreeWorkspace,
+    rngs: &mut [Rng],
+    step_sizes: &[f64],
+    inv_mass: &[f64],
+    max_depth: u32,
+    k: usize,
+) {
+    let (dim, l) = (ws.dim, ws.lanes);
+
+    // --- leaf bookkeeping (build_subtree_ws loop body) ---
+    let mut energy = ws.state_u[k] + kinetic_lane(&ws.state_r, inv_mass, dim, l, k);
+    if energy.is_nan() {
+        energy = f64::INFINITY;
+    }
+    let delta = energy - ws.ctl[k].energy_0;
+    ws.ctl[k].sub_diverging = delta > MAX_DELTA_ENERGY;
+    ws.ctl[k].sub_sum_accept += (-delta).exp().min(1.0);
+
+    let leaf_w = -energy;
+    let new_weight = log_add_exp(ws.ctl[k].sub_weight, leaf_w);
+    if rngs[k].uniform().ln() < leaf_w - new_weight {
+        for i in 0..dim {
+            ws.sub_z_prop[i * l + k] = ws.state_z[i * l + k];
+        }
+        ws.ctl[k].sub_u_prop = ws.state_u[k];
+    }
+    ws.ctl[k].sub_weight = new_weight;
+
+    let n = ws.ctl[k].n;
+    if n % 2 == 0 {
+        let slot = bit_count(n) as usize;
+        let base = slot * dim * l;
+        for i in 0..dim {
+            let idx = i * l + k;
+            ws.s_z[base + idx] = ws.state_z[idx];
+            ws.s_r[base + idx] = ws.state_r[idx];
+        }
+    } else {
+        let (i_min, i_max) = candidate_range(n);
+        for slot in i_min..=i_max {
+            let base = (slot as usize) * dim * l;
+            let cand_z = &ws.s_z[base..base + dim * l];
+            let cand_r = &ws.s_r[base..base + dim * l];
+            // candidate precedes `state` in integration order
+            let t = if ws.ctl[k].eps > 0.0 {
+                is_u_turn_lane(
+                    cand_z,
+                    &ws.state_z,
+                    cand_r,
+                    &ws.state_r,
+                    inv_mass,
+                    dim,
+                    l,
+                    k,
+                )
+            } else {
+                is_u_turn_lane(
+                    &ws.state_z,
+                    cand_z,
+                    &ws.state_r,
+                    cand_r,
+                    inv_mass,
+                    dim,
+                    l,
+                    k,
+                )
+            };
+            if t {
+                ws.ctl[k].turning = true;
+                break;
+            }
+        }
+    }
+    ws.ctl[k].n += 1;
+
+    if ws.ctl[k].n < ws.ctl[k].num_leaves && !ws.ctl[k].turning && !ws.ctl[k].sub_diverging {
+        return; // subtree continues: lane takes the next global leapfrog
+    }
+
+    // --- subtree finished: outer doubling-loop bookkeeping ---
+    ws.ctl[k].sum_accept += ws.ctl[k].sub_sum_accept;
+    ws.ctl[k].n_leapfrog += ws.ctl[k].n;
+    let complete = !ws.ctl[k].turning && !ws.ctl[k].sub_diverging;
+    ws.ctl[k].diverging = ws.ctl[k].sub_diverging;
+
+    // trajectory endpoint <- subtree's last state
+    if ws.ctl[k].going_right {
+        for i in 0..dim {
+            let idx = i * l + k;
+            ws.right_z[idx] = ws.state_z[idx];
+            ws.right_r[idx] = ws.state_r[idx];
+            ws.right_grad[idx] = ws.state_grad[idx];
+        }
+        ws.right_u[k] = ws.state_u[k];
+    } else {
+        for i in 0..dim {
+            let idx = i * l + k;
+            ws.left_z[idx] = ws.state_z[idx];
+            ws.left_r[idx] = ws.state_r[idx];
+            ws.left_grad[idx] = ws.state_grad[idx];
+        }
+        ws.left_u[k] = ws.state_u[k];
+    }
+
+    if complete {
+        if rngs[k].uniform().ln() < ws.ctl[k].sub_weight - ws.ctl[k].weight {
+            for i in 0..dim {
+                ws.z_prop[i * l + k] = ws.sub_z_prop[i * l + k];
+            }
+            ws.ctl[k].u_prop = ws.ctl[k].sub_u_prop;
+        }
+        ws.ctl[k].weight = log_add_exp(ws.ctl[k].weight, ws.ctl[k].sub_weight);
+    } else {
+        ws.ctl[k].done = true;
+        return;
+    }
+    ws.ctl[k].depth += 1;
+    if is_u_turn_lane(
+        &ws.left_z,
+        &ws.right_z,
+        &ws.left_r,
+        &ws.right_r,
+        inv_mass,
+        dim,
+        l,
+        k,
+    ) {
+        ws.ctl[k].done = true;
+        return;
+    }
+    if ws.ctl[k].depth >= max_depth {
+        ws.ctl[k].done = true;
+        return;
+    }
+    start_subtree(ws, rngs, step_sizes, k);
+}
+
+/// One NUTS transition for **all lanes at once**, with zero heap
+/// allocations: every buffer comes from `ws`, the proposals are left
+/// in `ws.z_prop` (read via [`BatchTreeWorkspace::proposal`] /
+/// [`BatchTreeWorkspace::proposal_lane`]) and the per-lane statistics
+/// are written into `out`.
+///
+/// Inputs are lane-minor: `z0[i * lanes + k]`, `inv_mass[i * lanes +
+/// k]`; `step_sizes[k]` and `rngs[k]` are per-lane.  Each lane's
+/// transition is bitwise identical to
+/// [`crate::mcmc::nuts_iterative::draw_in_workspace`] run with the same
+/// scalar potential, RNG state, step size and inverse mass.
+#[allow(clippy::too_many_arguments)]
+pub fn draw_batch<BP: BatchPotential + ?Sized>(
+    pot: &mut BP,
+    rngs: &mut [Rng],
+    ws: &mut BatchTreeWorkspace,
+    z0: &[f64],
+    step_sizes: &[f64],
+    inv_mass: &[f64],
+    max_depth: u32,
+    out: &mut [DrawStats],
+) {
+    let dim = ws.dim;
+    let l = ws.lanes;
+    assert_eq!(pot.dim(), dim, "workspace/potential dimension mismatch");
+    assert_eq!(pot.lanes(), l, "workspace/potential lane-count mismatch");
+    assert_eq!(z0.len(), dim * l, "z0 must be dim x lanes (lane-minor)");
+    assert_eq!(step_sizes.len(), l);
+    assert_eq!(inv_mass.len(), dim * l);
+    assert_eq!(rngs.len(), l);
+    assert_eq!(out.len(), l);
+    assert!(
+        max_depth <= ws.max_depth,
+        "workspace sized for max_depth {} < {}",
+        ws.max_depth,
+        max_depth
+    );
+
+    // --- per-lane trajectory initialization at z0 ---
+    ws.left_z.copy_from_slice(z0);
+    pot.value_and_grad_batch(&ws.left_z, &mut ws.left_u, &mut ws.left_grad);
+    for k in 0..l {
+        // same per-lane draw order as the sequential engine: momenta
+        // coordinate-by-coordinate from this lane's own stream
+        for i in 0..dim {
+            let idx = i * l + k;
+            ws.left_r[idx] = rngs[k].normal() / inv_mass[idx].sqrt();
+        }
+    }
+    ws.right_z.copy_from_slice(&ws.left_z);
+    ws.right_r.copy_from_slice(&ws.left_r);
+    ws.right_grad.copy_from_slice(&ws.left_grad);
+    ws.right_u.copy_from_slice(&ws.left_u);
+    ws.z_prop.copy_from_slice(z0);
+
+    for k in 0..l {
+        let energy_0 = ws.left_u[k] + kinetic_lane(&ws.left_r, inv_mass, dim, l, k);
+        ws.ctl[k] = LaneCtl {
+            done: false,
+            going_right: false,
+            eps: 0.0,
+            energy_0,
+            depth: 0,
+            weight: -energy_0,
+            u_prop: ws.left_u[k],
+            sum_accept: 0.0,
+            n_leapfrog: 0,
+            diverging: false,
+            n: 0,
+            num_leaves: 0,
+            sub_weight: f64::NEG_INFINITY,
+            sub_u_prop: f64::INFINITY,
+            sub_sum_accept: 0.0,
+            turning: false,
+            sub_diverging: false,
+        };
+        if max_depth == 0 {
+            ws.ctl[k].done = true;
+        } else {
+            start_subtree(ws, rngs, step_sizes, k);
+        }
+    }
+
+    // --- lock-step doubling: batched leapfrogs + per-lane bookkeeping ---
+    loop {
+        let mut any_active = false;
+        for k in 0..l {
+            let active = !ws.ctl[k].done;
+            // lane mask: a finished lane integrates with eps = 0.0, so
+            // its live state is frozen while the SIMD lanes stay full
+            ws.eps[k] = if active { ws.ctl[k].eps } else { 0.0 };
+            any_active |= active;
+        }
+        if !any_active {
+            break;
+        }
+
+        // batched velocity-Verlet step (same arithmetic, same order
+        // per lane as `leapfrog_inplace`)
+        for i in 0..dim {
+            let base = i * l;
+            for k in 0..l {
+                ws.state_r[base + k] -= 0.5 * ws.eps[k] * ws.state_grad[base + k];
+            }
+        }
+        for i in 0..dim {
+            let base = i * l;
+            for k in 0..l {
+                ws.state_z[base + k] += ws.eps[k] * inv_mass[base + k] * ws.state_r[base + k];
+            }
+        }
+        pot.value_and_grad_batch(&ws.state_z, &mut ws.state_u, &mut ws.state_grad);
+        for i in 0..dim {
+            let base = i * l;
+            for k in 0..l {
+                ws.state_r[base + k] -= 0.5 * ws.eps[k] * ws.state_grad[base + k];
+            }
+        }
+
+        for k in 0..l {
+            if !ws.ctl[k].done {
+                after_leapfrog(ws, rngs, step_sizes, inv_mass, max_depth, k);
+            }
+        }
+    }
+
+    for (k, o) in out.iter_mut().enumerate() {
+        let c = &ws.ctl[k];
+        *o = DrawStats {
+            accept_prob: c.sum_accept / (c.n_leapfrog.max(1) as f64),
+            num_leapfrog: c.n_leapfrog,
+            potential: c.u_prop,
+            diverging: c.diverging,
+            depth: c.depth,
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcmc::nuts_iterative::{draw_in_workspace, TreeWorkspace};
+    use crate::mcmc::{Potential, ScalarLanes};
+
+    /// Anisotropic quadratic bowl (same as the nuts_iterative tests):
+    /// U-turns arrive within a few doublings.
+    #[derive(Clone)]
+    struct Bowl;
+    impl Potential for Bowl {
+        fn dim(&self) -> usize {
+            3
+        }
+        fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+            let scale = [1.0, 4.0, 0.25];
+            let mut u = 0.0;
+            for i in 0..3 {
+                grad[i] = z[i] / scale[i];
+                u += 0.5 * z[i] * z[i] / scale[i];
+            }
+            u
+        }
+    }
+
+    /// Each lane of the batched engine must reproduce its sequential
+    /// counterpart bit-for-bit across chained draws — even with
+    /// per-lane step sizes, seeds and mass matrices, so lanes finish
+    /// their trajectories at different times and the mask is exercised.
+    #[test]
+    fn lanes_match_sequential_draws_bitwise() {
+        let dim = 3;
+        let lanes = 4;
+        let max_depth = 8;
+        let steps = [0.15, 0.3, 0.08, 0.22];
+        let seeds = [11u64, 22, 33, 44];
+        let masses: [[f64; 3]; 4] = [
+            [1.0, 0.5, 2.0],
+            [0.8, 1.1, 0.9],
+            [1.0, 1.0, 1.0],
+            [2.0, 0.3, 1.4],
+        ];
+        let z_init = [0.9, -0.4, 0.3];
+
+        // batched run
+        let mut pot = ScalarLanes::new(vec![Bowl; lanes]);
+        let mut ws = BatchTreeWorkspace::new(dim, lanes, max_depth);
+        let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
+        let mut z = vec![0.0; dim * lanes];
+        let mut inv_mass = vec![0.0; dim * lanes];
+        for k in 0..lanes {
+            for i in 0..dim {
+                z[i * lanes + k] = z_init[i];
+                inv_mass[i * lanes + k] = masses[k][i];
+            }
+        }
+        let mut stats = vec![
+            DrawStats {
+                accept_prob: 0.0,
+                num_leapfrog: 0,
+                potential: 0.0,
+                diverging: false,
+                depth: 0,
+            };
+            lanes
+        ];
+
+        // sequential reference, one engine per lane
+        let mut seq_pots: Vec<Bowl> = vec![Bowl; lanes];
+        let mut seq_ws: Vec<TreeWorkspace> =
+            (0..lanes).map(|_| TreeWorkspace::new(dim, max_depth)).collect();
+        let mut seq_rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
+        let mut seq_z: Vec<Vec<f64>> = (0..lanes).map(|_| z_init.to_vec()).collect();
+
+        for draw in 0..20 {
+            draw_batch(
+                &mut pot,
+                &mut rngs,
+                &mut ws,
+                &z,
+                &steps,
+                &inv_mass,
+                max_depth,
+                &mut stats,
+            );
+            for k in 0..lanes {
+                let st = draw_in_workspace(
+                    &mut seq_pots[k],
+                    &mut seq_rngs[k],
+                    &mut seq_ws[k],
+                    &seq_z[k],
+                    steps[k],
+                    &masses[k],
+                    max_depth,
+                );
+                seq_z[k].copy_from_slice(seq_ws[k].proposal());
+                for i in 0..dim {
+                    assert_eq!(
+                        ws.proposal()[i * lanes + k],
+                        seq_z[k][i],
+                        "draw {draw} lane {k} z[{i}]"
+                    );
+                }
+                assert_eq!(stats[k].accept_prob, st.accept_prob, "draw {draw} lane {k}");
+                assert_eq!(stats[k].num_leapfrog, st.num_leapfrog, "draw {draw} lane {k}");
+                assert_eq!(stats[k].potential, st.potential, "draw {draw} lane {k}");
+                assert_eq!(stats[k].diverging, st.diverging, "draw {draw} lane {k}");
+                assert_eq!(stats[k].depth, st.depth, "draw {draw} lane {k}");
+            }
+            // chain the draws
+            z.copy_from_slice(ws.proposal());
+        }
+    }
+
+    /// A single lane through the batched engine is just sequential NUTS.
+    #[test]
+    fn single_lane_matches_sequential() {
+        let dim = 3;
+        let max_depth = 10;
+        let mut pot = ScalarLanes::new(vec![Bowl]);
+        let mut ws = BatchTreeWorkspace::new(dim, 1, max_depth);
+        let mut rngs = vec![Rng::new(7)];
+        let mut z = vec![0.3, -0.8, 1.2];
+        let inv_mass = vec![1.0, 0.5, 2.0];
+        let mut stats = vec![
+            DrawStats {
+                accept_prob: 0.0,
+                num_leapfrog: 0,
+                potential: 0.0,
+                diverging: false,
+                depth: 0,
+            };
+            1
+        ];
+
+        let mut seq_pot = Bowl;
+        let mut seq_ws = TreeWorkspace::new(dim, max_depth);
+        let mut seq_rng = Rng::new(7);
+        let mut seq_z = z.clone();
+
+        for _ in 0..25 {
+            draw_batch(
+                &mut pot,
+                &mut rngs,
+                &mut ws,
+                &z,
+                &[0.2],
+                &inv_mass,
+                max_depth,
+                &mut stats,
+            );
+            let st = draw_in_workspace(
+                &mut seq_pot,
+                &mut seq_rng,
+                &mut seq_ws,
+                &seq_z,
+                0.2,
+                &inv_mass,
+                max_depth,
+            );
+            seq_z.copy_from_slice(seq_ws.proposal());
+            assert_eq!(ws.proposal(), seq_z.as_slice());
+            assert_eq!(stats[0].num_leapfrog, st.num_leapfrog);
+            assert_eq!(stats[0].accept_prob, st.accept_prob);
+            z.copy_from_slice(ws.proposal());
+        }
+    }
+}

@@ -14,12 +14,14 @@
 //! Both produce identical U-turn checks (property-tested against the
 //! index-level oracle) and identical statistical behaviour.
 
+pub mod batch_nuts;
 pub mod dual_avg;
 pub mod hmc;
 pub mod nuts_iterative;
 pub mod nuts_recursive;
 pub mod welford;
 
+pub use batch_nuts::BatchTreeWorkspace;
 pub use dual_avg::DualAverage;
 pub use welford::Welford;
 
@@ -55,6 +57,114 @@ impl Potential for Box<dyn Potential> {
     fn num_evals(&self) -> u64 {
         (**self).num_evals()
     }
+}
+
+/// A differentiable potential evaluated over `lanes` independent
+/// chains in one call — the gradient interface of the **vectorized
+/// chain engine** ([`batch_nuts`]).
+///
+/// All batched buffers use the *lane-minor* layout: `z[i * lanes + k]`
+/// is coordinate `i` of lane (chain) `k`, so each coordinate's lanes
+/// are contiguous and every lane-wise inner loop autovectorizes.
+///
+/// Implemented by [`crate::compile::BatchedCompiledModel`] (one fused
+/// multi-lane tape replay per call — the fast path) and by
+/// [`ScalarLanes`] (a lane-by-lane adapter over any scalar
+/// [`Potential`]).  `ScalarLanes` is not wired in automatically —
+/// callers that cannot use the batched compiler (e.g. a model that
+/// reads primal values via `ProbCtx::val`) compose it themselves:
+/// `run_chains_vectorized(&mut ScalarLanes::new(pots), ...)`.
+///
+/// **Lane-independence contract:** lane `k` of the outputs must be a
+/// pure function of lane `k` of `z` — bitwise identical to what a
+/// scalar evaluation at that lane's coordinates would produce.  The
+/// batched NUTS engine relies on this to make each vectorized chain
+/// reproduce its sequential counterpart exactly.
+pub trait BatchPotential {
+    fn dim(&self) -> usize;
+
+    /// Number of chains evaluated per call.
+    fn lanes(&self) -> usize;
+
+    /// Evaluate `U` per lane (into `u`, length `lanes`) and `dU/dz`
+    /// per lane (into `grad`, `dim * lanes` lane-minor).
+    fn value_and_grad_batch(&mut self, z: &[f64], u: &mut [f64], grad: &mut [f64]);
+
+    /// Batched evaluations so far (dispatch accounting).
+    fn num_evals(&self) -> u64 {
+        0
+    }
+}
+
+/// Lane-by-lane [`BatchPotential`] over `lanes` copies of a scalar
+/// [`Potential`]: no SIMD benefit, but bitwise-faithful per lane by
+/// construction.  The generality fallback of the vectorized engine —
+/// and the reference implementation its tests compare against.
+pub struct ScalarLanes<P: Potential> {
+    pots: Vec<P>,
+    z_lane: Vec<f64>,
+    g_lane: Vec<f64>,
+    evals: u64,
+}
+
+impl<P: Potential> ScalarLanes<P> {
+    /// Build from one scalar potential per lane (all must share `dim`).
+    pub fn new(pots: Vec<P>) -> ScalarLanes<P> {
+        assert!(!pots.is_empty(), "ScalarLanes needs at least one lane");
+        let dim = pots[0].dim();
+        assert!(
+            pots.iter().all(|p| p.dim() == dim),
+            "ScalarLanes: potentials disagree on dimension"
+        );
+        ScalarLanes {
+            pots,
+            z_lane: vec![0.0; dim],
+            g_lane: vec![0.0; dim],
+            evals: 0,
+        }
+    }
+}
+
+impl<P: Potential> BatchPotential for ScalarLanes<P> {
+    fn dim(&self) -> usize {
+        self.pots[0].dim()
+    }
+
+    fn lanes(&self) -> usize {
+        self.pots.len()
+    }
+
+    fn value_and_grad_batch(&mut self, z: &[f64], u: &mut [f64], grad: &mut [f64]) {
+        self.evals += 1;
+        let dim = self.pots[0].dim();
+        let l = self.pots.len();
+        debug_assert_eq!(z.len(), dim * l);
+        for (k, pot) in self.pots.iter_mut().enumerate() {
+            for i in 0..dim {
+                self.z_lane[i] = z[i * l + k];
+            }
+            u[k] = pot.value_and_grad(&self.z_lane, &mut self.g_lane);
+            for i in 0..dim {
+                grad[i * l + k] = self.g_lane[i];
+            }
+        }
+    }
+
+    fn num_evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+/// `ln(e^a + e^b)`, the progressive-sampling weight merge shared by
+/// all three tree builders ([`nuts_iterative`], [`nuts_recursive`],
+/// [`batch_nuts`]) — one definition so the engines agree bitwise.
+#[inline]
+pub(crate) fn log_add_exp(a: f64, b: f64) -> f64 {
+    let m = a.max(b);
+    if m == f64::NEG_INFINITY {
+        return m;
+    }
+    m + ((a - m).exp() + (b - m).exp()).ln()
 }
 
 /// Position + momentum + cached potential/gradient.

@@ -20,8 +20,8 @@
 //! potentials' tapes have warmed up).
 
 use crate::mcmc::{
-    is_u_turn, kinetic, leapfrog_inplace, DrawStats, PhaseState, Potential, Transition,
-    MAX_DELTA_ENERGY,
+    is_u_turn, kinetic, leapfrog_inplace, log_add_exp, DrawStats, PhaseState, Potential,
+    Transition, MAX_DELTA_ENERGY,
 };
 use crate::rng::Rng;
 
@@ -183,14 +183,6 @@ fn build_subtree_ws<P: Potential + ?Sized>(
         sum_accept,
         n_leapfrog: n,
     }
-}
-
-fn log_add_exp(a: f64, b: f64) -> f64 {
-    let m = a.max(b);
-    if m == f64::NEG_INFINITY {
-        return m;
-    }
-    m + ((a - m).exp() + (b - m).exp()).ln()
 }
 
 /// One NUTS transition with **zero heap allocations**: every buffer

@@ -7,7 +7,8 @@
 //! tree logic on the host, one compiled dispatch per leapfrog.
 
 use crate::mcmc::{
-    is_u_turn, kinetic, leapfrog, PhaseState, Potential, Transition, MAX_DELTA_ENERGY,
+    is_u_turn, kinetic, leapfrog, log_add_exp, PhaseState, Potential, Transition,
+    MAX_DELTA_ENERGY,
 };
 use crate::rng::Rng;
 
@@ -48,14 +49,6 @@ fn leaf<P: Potential + ?Sized>(
         n_leapfrog: 1,
         last: state,
     }
-}
-
-fn log_add_exp(a: f64, b: f64) -> f64 {
-    let m = a.max(b);
-    if m == f64::NEG_INFINITY {
-        return m;
-    }
-    m + ((a - m).exp() + (b - m).exp()).ln()
 }
 
 /// Recursive BuildTree: builds 2^depth leaves from `edge` in the

@@ -2,7 +2,9 @@
 //! tree workspace have warmed up, a full draw via
 //! `nuts_iterative::draw_in_workspace` over each native potential —
 //! hand-fused *and* compiler-generated — must perform **zero** heap
-//! allocations.
+//! allocations.  The same bar applies to the vectorized chain engine:
+//! a K-lane `batch_nuts::draw_batch` over a `BatchedCompiledModel` is
+//! allocation-free per batched draw.
 //!
 //! Counted with a thread-local tally inside a wrapping global
 //! allocator (libtest runs each #[test] on its own thread, so the
@@ -11,11 +13,12 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
-use fugue::compile::compile;
 use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel};
+use fugue::compile::{compile, compile_batched};
 use fugue::data;
+use fugue::mcmc::batch_nuts::{draw_batch, BatchTreeWorkspace};
 use fugue::mcmc::nuts_iterative::{draw_in_workspace, TreeWorkspace};
-use fugue::mcmc::Potential;
+use fugue::mcmc::{BatchPotential, DrawStats, Potential};
 use fugue::models::skim::SkimHypers;
 use fugue::models::{HmmNative, LogisticNative, SkimNative};
 use fugue::rng::Rng;
@@ -105,6 +108,80 @@ fn steady_state_draws_are_allocation_free() {
         5e-3,
         3,
     );
+}
+
+/// Steady-state check for the **vectorized chain engine**: once the
+/// multi-lane tape and the batched tree workspace have warmed up, a
+/// full K-lane `draw_batch` — one fused gradient per leapfrog for all
+/// chains, plus every lane's tree bookkeeping — must perform zero heap
+/// allocations.
+fn assert_batch_draws_alloc_free<BP: BatchPotential>(name: &str, mut pot: BP, eps: f64, seed: u64) {
+    let dim = pot.dim();
+    let lanes = pot.lanes();
+    let max_depth = 6;
+    let mut ws = BatchTreeWorkspace::new(dim, lanes, max_depth);
+    let mut rngs: Vec<Rng> = (0..lanes).map(|k| Rng::new(seed + k as u64)).collect();
+    let mut z = vec![0.05; dim * lanes];
+    let inv_mass = vec![1.0; dim * lanes];
+    let steps = vec![eps; lanes];
+    let mut stats = vec![
+        DrawStats {
+            accept_prob: 0.0,
+            num_leapfrog: 0,
+            potential: 0.0,
+            diverging: false,
+            depth: 0,
+        };
+        lanes
+    ];
+
+    // warm-up: establish tape/arena/workspace capacity watermarks
+    for _ in 0..5 {
+        draw_batch(
+            &mut pot, &mut rngs, &mut ws, &z, &steps, &inv_mass, max_depth, &mut stats,
+        );
+        z.copy_from_slice(ws.proposal());
+    }
+
+    let before = allocation_count();
+    for _ in 0..15 {
+        draw_batch(
+            &mut pot, &mut rngs, &mut ws, &z, &steps, &inv_mass, max_depth, &mut stats,
+        );
+        z.copy_from_slice(ws.proposal());
+    }
+    let after = allocation_count();
+    assert_eq!(
+        after - before,
+        0,
+        "{name}: steady-state batched draws performed {} heap allocations",
+        after - before
+    );
+}
+
+/// The vectorized engine's batched draws hit the same zero-allocation
+/// bar as the scalar hot path, across lane counts and models.
+#[test]
+fn vectorized_batched_draws_are_allocation_free() {
+    let es = compile_batched(EightSchools::classic(), 0, 4).unwrap();
+    assert_batch_draws_alloc_free("batched eight-schools x4", es, 1e-2, 7);
+
+    let l = data::make_covtype_like(4, 200, 8);
+    let lm = compile_batched(
+        LogisticModel {
+            x: l.x,
+            y: l.y,
+            n: 200,
+            d: 8,
+        },
+        0,
+        8,
+    )
+    .unwrap();
+    assert_batch_draws_alloc_free("batched logistic x8", lm, 1e-2, 8);
+
+    let hs = compile_batched(Horseshoe::synthetic(5, 60, 6, 2), 0, 3).unwrap();
+    assert_batch_draws_alloc_free("batched horseshoe x3", hs, 5e-3, 9);
 }
 
 /// Compiler-generated potentials must hit the same bar as the

@@ -1,0 +1,180 @@
+//! Golden cross-method tests for the three chain execution strategies
+//! (`Sequential` / `Parallel` / `Vectorized`): the execution strategy
+//! must be statistically — and, with shared RNG streams, **bitwise** —
+//! invisible.
+//!
+//! Two layers of evidence on the eight-schools and logistic zoo models:
+//!
+//! 1. **Bitwise**: all three methods derive chain `k`'s seed and init
+//!    from the shared `chain_start`, so with identical options every
+//!    per-chain sample trajectory, adapted step size, mass matrix and
+//!    divergence count must agree exactly.
+//! 2. **Statistical**: runs seeded *differently* must still estimate
+//!    the same posterior — per-parameter means agree within a few
+//!    Monte-Carlo standard errors (MCSE = sd / sqrt(ESS)).
+
+use fugue::compile::zoo::{EightSchools, LogisticModel};
+use fugue::compile::EffModel;
+use fugue::coordinator::{run_compiled_chains_method, ChainMethod, ChainResult, NutsOptions};
+use fugue::data;
+use fugue::diagnostics::effective_sample_size;
+
+fn run<M: EffModel + Clone + Sync>(
+    model: &M,
+    method: ChainMethod,
+    chains: usize,
+    opts: &NutsOptions,
+) -> Vec<ChainResult> {
+    let (_, results) = run_compiled_chains_method(model, method, chains, 10, opts).unwrap();
+    results
+}
+
+fn assert_bitwise_equal(a: &[ChainResult], b: &[ChainResult], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: chain count");
+    for (c, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.samples, y.samples, "{label}: chain {c} samples");
+        assert_eq!(x.step_size, y.step_size, "{label}: chain {c} step size");
+        assert_eq!(x.inv_mass, y.inv_mass, "{label}: chain {c} mass matrix");
+        assert_eq!(x.divergences, y.divergences, "{label}: chain {c} divergences");
+        assert_eq!(
+            x.stats.accept_prob, y.stats.accept_prob,
+            "{label}: chain {c} accept stats"
+        );
+        assert_eq!(
+            x.total_leapfrogs, y.total_leapfrogs,
+            "{label}: chain {c} leapfrogs"
+        );
+    }
+}
+
+/// Per-parameter draws of one parameter across chains.
+fn param_chains(results: &[ChainResult], dim: usize, d: usize) -> Vec<Vec<f64>> {
+    results
+        .iter()
+        .map(|r| r.samples.chunks(dim).map(|row| row[d]).collect())
+        .collect()
+}
+
+/// Pooled mean and MCSE (sd / sqrt(ESS)) of one parameter.
+fn mean_and_mcse(results: &[ChainResult], dim: usize, d: usize) -> (f64, f64) {
+    let chains = param_chains(results, dim, d);
+    let all: Vec<f64> = chains.iter().flatten().copied().collect();
+    let n = all.len() as f64;
+    let mean = all.iter().sum::<f64>() / n;
+    let var = all.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    let ess = effective_sample_size(&chains).max(4.0);
+    (mean, (var / ess).sqrt())
+}
+
+fn assert_posteriors_agree(
+    a: &[ChainResult],
+    b: &[ChainResult],
+    dim: usize,
+    label: &str,
+) {
+    for d in 0..dim {
+        let (ma, sa) = mean_and_mcse(a, dim, d);
+        let (mb, sb) = mean_and_mcse(b, dim, d);
+        let tol = 6.0 * (sa * sa + sb * sb).sqrt() + 1e-3;
+        assert!(
+            (ma - mb).abs() < tol,
+            "{label}: param {d} means {ma:.4} vs {mb:.4} differ beyond {tol:.4} \
+             (MCSE {sa:.4} / {sb:.4})"
+        );
+    }
+}
+
+fn eight_schools_opts(seed: u64) -> NutsOptions {
+    NutsOptions {
+        num_warmup: 300,
+        num_samples: 500,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn logistic_model(seed: u64) -> LogisticModel {
+    let (n, d) = (120, 3);
+    let dset = data::make_covtype_like(seed, n, d);
+    LogisticModel {
+        x: dset.x,
+        y: dset.y,
+        n,
+        d,
+    }
+}
+
+fn logistic_opts(seed: u64) -> NutsOptions {
+    NutsOptions {
+        num_warmup: 200,
+        num_samples: 400,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// With the same options, every chain method must produce the exact
+/// same chains on eight-schools — the vectorized lanes use the same
+/// RNG streams as their sequential counterparts, so agreement is
+/// bitwise, not just statistical.
+#[test]
+fn eight_schools_methods_agree_bitwise() {
+    let model = EightSchools::classic();
+    let opts = eight_schools_opts(42);
+    let seq = run(&model, ChainMethod::Sequential, 3, &opts);
+    let par = run(&model, ChainMethod::Parallel, 3, &opts);
+    let vec_ = run(&model, ChainMethod::Vectorized, 3, &opts);
+    assert_bitwise_equal(&seq, &par, "eight-schools seq vs par");
+    assert_bitwise_equal(&seq, &vec_, "eight-schools seq vs vec");
+}
+
+#[test]
+fn logistic_methods_agree_bitwise() {
+    let model = logistic_model(7);
+    let opts = logistic_opts(11);
+    let seq = run(&model, ChainMethod::Sequential, 4, &opts);
+    let par = run(&model, ChainMethod::Parallel, 4, &opts);
+    let vec_ = run(&model, ChainMethod::Vectorized, 4, &opts);
+    assert_bitwise_equal(&seq, &par, "logistic seq vs par");
+    assert_bitwise_equal(&seq, &vec_, "logistic seq vs vec");
+}
+
+/// Differently-seeded runs across methods must still agree within
+/// MCSE — the statistical half of the golden check (the bitwise tests
+/// above would pass even if both engines were wrong in the same way;
+/// this one ties them to the actual posterior).
+#[test]
+fn eight_schools_posteriors_agree_within_mcse() {
+    let model = EightSchools::classic();
+    let dim = 10;
+    let seq = run(&model, ChainMethod::Sequential, 4, &eight_schools_opts(1001));
+    let vec_ = run(&model, ChainMethod::Vectorized, 4, &eight_schools_opts(2002));
+    let par = run(&model, ChainMethod::Parallel, 4, &eight_schools_opts(3003));
+    assert_posteriors_agree(&seq, &vec_, dim, "eight-schools seq vs vec");
+    assert_posteriors_agree(&seq, &par, dim, "eight-schools seq vs par");
+}
+
+#[test]
+fn logistic_posteriors_agree_within_mcse() {
+    let model = logistic_model(3);
+    let dim = 4;
+    let seq = run(&model, ChainMethod::Sequential, 4, &logistic_opts(17));
+    let vec_ = run(&model, ChainMethod::Vectorized, 4, &logistic_opts(29));
+    assert_posteriors_agree(&seq, &vec_, dim, "logistic seq vs vec");
+}
+
+/// Chain count 1 must also agree across methods (the vectorized
+/// engine with a single lane is just sequential NUTS).
+#[test]
+fn single_chain_methods_agree_bitwise() {
+    let model = EightSchools::classic();
+    let opts = NutsOptions {
+        num_warmup: 150,
+        num_samples: 200,
+        seed: 5,
+        ..Default::default()
+    };
+    let seq = run(&model, ChainMethod::Sequential, 1, &opts);
+    let vec_ = run(&model, ChainMethod::Vectorized, 1, &opts);
+    assert_bitwise_equal(&seq, &vec_, "single-chain seq vs vec");
+}

@@ -1,0 +1,140 @@
+//! Statistical validation of the convergence diagnostics against
+//! analytic ground truth: ESS on synthetic AR(1) chains with known
+//! autocorrelation, and split R-hat behaviour on iid, shifted and
+//! trending chains.
+
+use fugue::diagnostics::{effective_sample_size, split_rhat};
+use fugue::rng::Rng;
+
+/// Stationary AR(1) with lag-1 correlation `rho` and unit marginal
+/// variance: `x_t = rho x_{t-1} + sqrt(1-rho^2) eps_t`.
+fn ar1(rng: &mut Rng, n: usize, rho: f64) -> Vec<f64> {
+    let mut x = vec![0.0; n];
+    x[0] = rng.normal();
+    let sd = (1.0 - rho * rho).sqrt();
+    for i in 1..n {
+        x[i] = rho * x[i - 1] + sd * rng.normal();
+    }
+    x
+}
+
+/// For AR(1), the integrated autocorrelation time is
+/// `tau = (1+rho)/(1-rho)`, so `ESS/N -> (1-rho)/(1+rho)`.
+fn ar1_ess_fraction(rho: f64) -> f64 {
+    (1.0 - rho) / (1.0 + rho)
+}
+
+#[test]
+fn ess_matches_analytic_across_autocorrelations() {
+    for (i, &rho) in [0.3, 0.6, 0.9].iter().enumerate() {
+        let mut rng = Rng::new(100 + i as u64);
+        let n = if rho < 0.8 { 8_000 } else { 24_000 };
+        let chain = ar1(&mut rng, n, rho);
+        let ess = effective_sample_size(&[chain]);
+        let expect = n as f64 * ar1_ess_fraction(rho);
+        assert!(
+            (ess - expect).abs() < 0.3 * expect,
+            "rho {rho}: ess {ess:.0} vs analytic {expect:.0}"
+        );
+    }
+}
+
+#[test]
+fn ess_matches_analytic_with_multiple_chains() {
+    let rho = 0.5;
+    let m = 4;
+    let n = 4_000;
+    let mut rng = Rng::new(7);
+    let chains: Vec<Vec<f64>> = (0..m).map(|_| ar1(&mut rng, n, rho)).collect();
+    let ess = effective_sample_size(&chains);
+    let expect = (m * n) as f64 * ar1_ess_fraction(rho);
+    assert!(
+        (ess - expect).abs() < 0.3 * expect,
+        "ess {ess:.0} vs analytic {expect:.0}"
+    );
+}
+
+#[test]
+fn ess_of_iid_draws_is_near_n_and_clamped() {
+    let mut rng = Rng::new(8);
+    let n = 6_000;
+    let chain: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let ess = effective_sample_size(&[chain]);
+    assert!(ess > 0.75 * n as f64, "iid ess {ess:.0} too low");
+    assert!(ess <= n as f64 + 1e-9, "iid ess {ess:.0} exceeds draw count");
+}
+
+/// Heavier autocorrelation must monotonically cost effective samples.
+#[test]
+fn ess_decreases_with_autocorrelation() {
+    let n = 8_000;
+    let mut prev = f64::INFINITY;
+    for (i, &rho) in [0.2, 0.5, 0.8].iter().enumerate() {
+        let mut rng = Rng::new(300 + i as u64);
+        let ess = effective_sample_size(&[ar1(&mut rng, n, rho)]);
+        assert!(
+            ess < prev,
+            "rho {rho}: ess {ess:.0} did not decrease (prev {prev:.0})"
+        );
+        prev = ess;
+    }
+}
+
+#[test]
+fn split_rhat_is_one_for_iid_chains() {
+    let mut rng = Rng::new(21);
+    let chains: Vec<Vec<f64>> = (0..4)
+        .map(|_| (0..3_000).map(|_| rng.normal()).collect())
+        .collect();
+    let r = split_rhat(&chains);
+    assert!((r - 1.0).abs() < 0.02, "iid rhat {r}");
+}
+
+#[test]
+fn split_rhat_flags_shifted_chains() {
+    let mut rng = Rng::new(22);
+    let a: Vec<f64> = (0..2_000).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..2_000).map(|_| rng.normal() + 4.0).collect();
+    let c: Vec<f64> = (0..2_000).map(|_| rng.normal()).collect();
+    let r = split_rhat(&[a, b, c]);
+    assert!(r > 1.5, "shifted-chain rhat {r} should be >> 1");
+}
+
+/// The *split* in split-R-hat: a single chain whose halves live in
+/// different places (a trend / non-stationarity) must be flagged even
+/// though plain multi-chain R-hat would never see it.
+#[test]
+fn split_rhat_flags_within_chain_trend() {
+    let mut rng = Rng::new(23);
+    let n = 2_000;
+    let trending: Vec<f64> = (0..n)
+        .map(|i| rng.normal() + if i < n / 2 { 0.0 } else { 3.0 })
+        .collect();
+    let r = split_rhat(&[trending]);
+    assert!(r > 1.5, "trending-chain split rhat {r} should be >> 1");
+}
+
+/// Scale invariance: diagnostics must not depend on the parameter's
+/// units.
+#[test]
+fn diagnostics_are_scale_invariant() {
+    let mut rng = Rng::new(24);
+    let base: Vec<Vec<f64>> = (0..2).map(|_| ar1(&mut rng, 4_000, 0.4)).collect();
+    let scaled: Vec<Vec<f64>> = base
+        .iter()
+        .map(|c| c.iter().map(|x| 1e6 * x + 5.0e3).collect())
+        .collect();
+    let (e1, e2) = (
+        effective_sample_size(&base),
+        effective_sample_size(&scaled),
+    );
+    assert!(
+        (e1 - e2).abs() < 1e-6 * e1.abs().max(1.0) + 1.0,
+        "ess not scale invariant: {e1} vs {e2}"
+    );
+    let (r1, r2) = (split_rhat(&base), split_rhat(&scaled));
+    assert!(
+        (r1 - r2).abs() < 1e-6,
+        "rhat not scale invariant: {r1} vs {r2}"
+    );
+}

@@ -1,0 +1,177 @@
+//! Unit tests for the warmup internals: dual-averaged step-size
+//! adaptation must actually land at the target acceptance rate on a
+//! model with a known geometry, and the streaming Welford moments must
+//! match a closed-form two-pass reference to near machine precision.
+
+use fugue::coordinator::{run_chain, NativeSampler, NutsOptions, TreeAlgorithm};
+use fugue::mcmc::{DualAverage, Potential, Welford};
+use fugue::rng::Rng;
+
+/// Standard d-dimensional Gaussian: U(z) = 0.5 |z|^2.
+struct StdGauss {
+    dim: usize,
+}
+
+impl Potential for StdGauss {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+        grad.copy_from_slice(z);
+        0.5 * z.iter().map(|v| v * v).sum::<f64>()
+    }
+}
+
+/// Mean acceptance probability over the sampling phase of a NUTS run
+/// on a known Gaussian, for a given dual-averaging target.
+fn sampled_accept(target: f64, seed: u64) -> f64 {
+    let dim = 5;
+    let mut sampler = NativeSampler::new(StdGauss { dim }, TreeAlgorithm::Iterative, 10);
+    let opts = NutsOptions {
+        num_warmup: 800,
+        num_samples: 800,
+        target_accept: target,
+        seed,
+        ..Default::default()
+    };
+    let init = vec![0.5; dim];
+    let res = run_chain(&mut sampler, &init, &opts).unwrap();
+    let accepts = &res.stats.accept_prob[opts.num_warmup..];
+    accepts.iter().sum::<f64>() / accepts.len() as f64
+}
+
+/// Dual averaging must converge to the requested acceptance target on
+/// a standard Gaussian — for the default 0.8 and a loose 0.6 target.
+#[test]
+fn dual_averaging_reaches_target_accept_on_gaussian() {
+    let a80 = sampled_accept(0.8, 42);
+    assert!(
+        (a80 - 0.8).abs() < 0.1,
+        "target 0.8: sampled accept {a80:.3}"
+    );
+    let a60 = sampled_accept(0.6, 43);
+    assert!(
+        (a60 - 0.6).abs() < 0.15,
+        "target 0.6: sampled accept {a60:.3}"
+    );
+    // higher target must adapt to a smaller step size / higher accept
+    assert!(a80 > a60 - 0.05, "targets not ordered: {a80:.3} vs {a60:.3}");
+}
+
+/// The dual-averaging iterate itself (no sampler in the loop) finds
+/// the fixed point of a synthetic accept-vs-step curve for several
+/// targets.
+#[test]
+fn dual_averaging_fixed_point_tracks_target() {
+    for &target in &[0.6, 0.8, 0.95] {
+        let mut da = DualAverage::new(1.0, target);
+        for _ in 0..3000 {
+            let eps = da.step_size();
+            // accept falls smoothly with step size
+            let accept = (-2.0 * eps).exp();
+            da.update(accept);
+        }
+        let eps = da.final_step_size();
+        let accept = (-2.0 * eps).exp();
+        assert!(
+            (accept - target).abs() < 0.03,
+            "target {target}: converged accept {accept:.3} at eps {eps:.4}"
+        );
+    }
+}
+
+/// Streaming Welford moments vs the closed-form two-pass reference on
+/// the same data: agreement to 1e-12 (relative), for mean and
+/// variance, including after interleaved resets.
+#[test]
+fn welford_matches_two_pass_reference_to_1e12() {
+    let dim = 3;
+    let n = 2000;
+    let mut rng = Rng::new(123);
+    let data: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            (0..dim)
+                .map(|d| 3.0 * rng.normal() + d as f64 * 10.0)
+                .collect()
+        })
+        .collect();
+
+    let mut w = Welford::new(dim);
+    for x in &data {
+        w.update(x);
+    }
+
+    for d in 0..dim {
+        let mean_ref = data.iter().map(|x| x[d]).sum::<f64>() / n as f64;
+        let var_ref = data
+            .iter()
+            .map(|x| (x[d] - mean_ref) * (x[d] - mean_ref))
+            .sum::<f64>()
+            / (n as f64 - 1.0);
+        let tol_m = 1e-12 * (1.0 + mean_ref.abs());
+        let tol_v = 1e-12 * (1.0 + var_ref.abs());
+        assert!(
+            (w.mean[d] - mean_ref).abs() < tol_m,
+            "dim {d}: mean {} vs {}",
+            w.mean[d],
+            mean_ref
+        );
+        assert!(
+            (w.variance()[d] - var_ref).abs() < tol_v,
+            "dim {d}: var {} vs {}",
+            w.variance()[d],
+            var_ref
+        );
+    }
+}
+
+/// The Stan-style regularized variance must equal its closed form
+/// `w * var + 1e-3 * 5/(n+5)` with `w = n/(n+5)` exactly (same
+/// arithmetic), and shrink toward 1e-3 for tiny samples.
+#[test]
+fn welford_regularization_matches_closed_form() {
+    let mut w = Welford::new(1);
+    let xs = [2.0, 2.5, 1.5, 2.2, 1.8, 2.6, 1.4];
+    for &x in &xs {
+        w.update(&[x]);
+    }
+    let n = xs.len() as f64;
+    let var = w.variance()[0];
+    let expect = n / (n + 5.0) * var + 1e-3 * (5.0 / (n + 5.0));
+    let got = w.regularized_variance()[0];
+    assert!(
+        (got - expect).abs() < 1e-15,
+        "regularized {got} vs closed form {expect}"
+    );
+
+    // tiny sample: the shrinkage prior dominates
+    let mut w2 = Welford::new(1);
+    w2.update(&[100.0]);
+    assert!(w2.regularized_variance()[0] < 0.01);
+}
+
+/// Welford reset must restore the exact fresh-estimator state.
+#[test]
+fn welford_reset_matches_fresh() {
+    let mut rng = Rng::new(9);
+    let a: Vec<Vec<f64>> = (0..50).map(|_| vec![rng.normal(), rng.normal()]).collect();
+    let b: Vec<Vec<f64>> = (0..50).map(|_| vec![rng.normal(), rng.normal()]).collect();
+
+    let mut reused = Welford::new(2);
+    for x in &a {
+        reused.update(x);
+    }
+    reused.reset();
+    for x in &b {
+        reused.update(x);
+    }
+
+    let mut fresh = Welford::new(2);
+    for x in &b {
+        fresh.update(x);
+    }
+
+    assert_eq!(reused.mean, fresh.mean);
+    assert_eq!(reused.variance(), fresh.variance());
+    assert_eq!(reused.count, fresh.count);
+}
