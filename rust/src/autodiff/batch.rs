@@ -30,8 +30,23 @@
 //! [`BatchTape::reset`] keeps every buffer's capacity, so steady-state
 //! batched gradient evaluations perform zero heap allocations
 //! (`rust/tests/alloc_free.rs` proves it with a counting allocator).
+//!
+//! # Record once, replay many
+//!
+//! Mirroring the scalar tape, the batched tape is split into a recorded
+//! topology (`BTopology`) and per-evaluation value/adjoint storage,
+//! and [`BatchTape::freeze`] snapshots the recorded program into a
+//! [`BatchTapeProgram`]: a flat instruction stream whose lane-minor
+//! [`BatchTapeProgram::forward`] sweep is a plain auto-vectorizable
+//! loop with **no per-node interpretation** — fused observation
+//! composites re-run the *same* kernel functions the record path used,
+//! so per lane the frozen program is bitwise identical to a batched (or
+//! scalar) tape replay.  Raw [`BatchTape::composite_lanes`] /
+//! [`BatchTape::composite_shared`] nodes carry caller-computed partials
+//! and cannot be frozen.
 
-use crate::autodiff::{Alg, Var};
+use crate::autodiff::{sigmoid_val, softplus_val, Alg, CompKind, Var};
+use crate::ppl::special::{softplus_sigmoid, LN_2PI};
 
 /// Node operation of the batched tape.  Mirrors the scalar tape's op
 /// set; composite partials live out-of-line in one of two arenas:
@@ -40,7 +55,10 @@ use crate::autodiff::{Alg, Var};
 /// `sum`/`dot_const` whose partials are data constants).
 #[derive(Debug, Clone, Copy)]
 enum BOp {
+    /// Constant leaf: lane values fixed at record time.
     Leaf,
+    /// Differentiable input leaf: lane values rebound on frozen replay.
+    Input,
     Add(u32, u32),
     Sub(u32, u32),
     Mul(u32, u32),
@@ -54,7 +72,7 @@ enum BOp {
     Softplus(u32),
     Powi(u32, i32),
     Scale(u32, f64),
-    Offset(u32),
+    Offset(u32, f64),
     /// Parents at `arena_parents[pstart..pstart+len]`, per-lane partials
     /// at `arena_partials[(xstart + j) * lanes + k]`.
     Composite { pstart: u32, xstart: u32, len: u32 },
@@ -63,23 +81,377 @@ enum BOp {
     CompositeShared { pstart: u32, sstart: u32, len: u32 },
 }
 
+/// The recorded half of a batched tape: op kinds, argument node ids,
+/// composite parents, lane-shared constant partials, kernel descriptors
+/// and observation constants — identical across evaluations of a
+/// static-structure program.  [`BatchTape::freeze`] clones this into a
+/// [`BatchTapeProgram`].
+#[derive(Debug, Clone, Default)]
+struct BTopology {
+    ops: Vec<BOp>,
+    arena_parents: Vec<u32>,
+    /// lane-shared composite partials (data constants)
+    arena_shared: Vec<f64>,
+    /// kernel descriptor per composite node, in node order
+    comp_kinds: Vec<CompKind>,
+    /// fused-kernel constant data (observations, known scales)
+    consts: Vec<f64>,
+    /// node ids of input leaves, in record order
+    inputs: Vec<u32>,
+}
+
 /// K-lane reverse-mode tape (see the module docs).  Build the
 /// expression with the `BatchTape` methods (or generically through its
 /// [`Alg`] impl), then call [`BatchTape::grad`] on the output node.
 pub struct BatchTape {
     lanes: usize,
-    ops: Vec<BOp>,
+    topo: BTopology,
     /// node-major, lane-minor: `values[node * lanes + k]`
     values: Vec<f64>,
-    arena_parents: Vec<u32>,
     /// per-lane composite partials, parent-slot-major lane-minor
     arena_partials: Vec<f64>,
-    /// lane-shared composite partials
-    arena_shared: Vec<f64>,
     /// adjoint scratch for the reverse sweep
     adj: Vec<f64>,
-    /// lane-sized accumulator scratch for `sum` / `dot_const`
+    /// lane-sized accumulator scratch (`sum` / `dot_const` / fused vals)
     scratch: Vec<f64>,
+    /// lane-sized fused-kernel scratch (residual sums)
+    scratch_a: Vec<f64>,
+    /// lane-sized fused-kernel scratch (hoisted 1/sigma^2)
+    scratch_b: Vec<f64>,
+}
+
+/// Recompute one batched composite's lane values and per-lane partials
+/// from fresh parent values — the **one** kernel implementation shared
+/// by the record-time builders and [`BatchTapeProgram::forward`], which
+/// makes frozen batched replays bitwise identical to tape replays.
+///
+/// `values` holds every node *before* this composite (node-major,
+/// lane-minor); this composite's per-lane partial span starts at
+/// `xstart * lanes`.  Lane values are written to `vals` (length
+/// `lanes`); `acc_a`/`acc_b` are lane-sized scratch.
+#[allow(clippy::too_many_arguments)]
+fn batch_composite_forward(
+    kind: CompKind,
+    lanes: usize,
+    pstart: usize,
+    xstart: usize,
+    parents: &[u32],
+    consts: &[f64],
+    values: &[f64],
+    partials: &mut [f64],
+    vals: &mut [f64],
+    acc_a: &mut [f64],
+    acc_b: &mut [f64],
+) {
+    let l = lanes;
+    for v in vals.iter_mut() {
+        *v = 0.0;
+    }
+    match kind {
+        CompKind::Opaque | CompKind::Affine | CompKind::LogSumExp => {
+            unreachable!("not a fused batched composite kind")
+        }
+        CompKind::NormalIid { c, n } => {
+            let ys = &consts[c as usize..c as usize + n as usize];
+            let nf = n as f64;
+            let loc = parents[pstart] as usize * l;
+            let scale = parents[pstart + 1] as usize * l;
+            for k in 0..l {
+                let lv = values[loc + k];
+                let sv = values[scale + k];
+                let inv2 = 1.0 / (sv * sv);
+                let mut value = 0.0;
+                let mut sr = 0.0;
+                let mut sr2 = 0.0;
+                for &y in ys {
+                    let r = y - lv;
+                    value += -0.5 * r * r * inv2;
+                    sr += r;
+                    sr2 += r * r;
+                }
+                value += -nf * sv.ln() - 0.5 * nf * LN_2PI;
+                vals[k] = value;
+                partials[xstart * l + k] = sr * inv2;
+                partials[(xstart + 1) * l + k] = sr2 / (sv * sv * sv) - nf / sv;
+            }
+        }
+        CompKind::BernoulliIid { c, n } => {
+            let ys = &consts[c as usize..c as usize + n as usize];
+            let nf = n as f64;
+            let logits = parents[pstart] as usize * l;
+            let sum_y: f64 = ys.iter().sum();
+            for k in 0..l {
+                let zl = values[logits + k];
+                let (sp, sig) = softplus_sigmoid(zl);
+                vals[k] = sum_y * zl - nf * sp;
+                partials[xstart * l + k] = sum_y - nf * sig;
+            }
+        }
+        CompKind::NormalPlate { c, n } => {
+            let nn = n as usize;
+            let ys = &consts[c as usize..c as usize + nn];
+            let nf = n as f64;
+            let scale = parents[pstart + nn] as usize * l;
+            // per-lane running sum of squared residuals ...
+            for a in acc_a.iter_mut() {
+                *a = 0.0;
+            }
+            // ... and per-lane 1/sigma^2, hoisted out of the element
+            // loop (same value the scalar kernel computes once)
+            for k in 0..l {
+                let sv = values[scale + k];
+                acc_b[k] = 1.0 / (sv * sv);
+            }
+            for (i, &y) in ys.iter().enumerate() {
+                let loc = parents[pstart + i] as usize * l;
+                for k in 0..l {
+                    let inv2 = acc_b[k];
+                    let lv = values[loc + k];
+                    let r = y - lv;
+                    vals[k] += -0.5 * r * r * inv2;
+                    acc_a[k] += r * r;
+                    partials[(xstart + i) * l + k] = r * inv2;
+                }
+            }
+            for k in 0..l {
+                let sv = values[scale + k];
+                vals[k] += -nf * sv.ln() - 0.5 * nf * LN_2PI;
+                partials[(xstart + nn) * l + k] = acc_a[k] / (sv * sv * sv) - nf / sv;
+            }
+        }
+        CompKind::NormalFixedPlate { c, n } => {
+            let nn = n as usize;
+            let sy = &consts[c as usize..c as usize + 2 * nn];
+            for i in 0..nn {
+                let s = sy[2 * i];
+                let y = sy[2 * i + 1];
+                let inv2 = 1.0 / (s * s);
+                let loc = parents[pstart + i] as usize * l;
+                for k in 0..l {
+                    let lv = values[loc + k];
+                    let r = y - lv;
+                    vals[k] += -0.5 * r * r * inv2 - s.ln() - 0.5 * LN_2PI;
+                    partials[(xstart + i) * l + k] = r * inv2;
+                }
+            }
+        }
+        CompKind::BernoulliPlate { c, n } => {
+            let ys = &consts[c as usize..c as usize + n as usize];
+            for (i, &y) in ys.iter().enumerate() {
+                let logits = parents[pstart + i] as usize * l;
+                for k in 0..l {
+                    let zl = values[logits + k];
+                    let (sp, sig) = softplus_sigmoid(zl);
+                    vals[k] += y * zl - sp;
+                    partials[(xstart + i) * l + k] = y - sig;
+                }
+            }
+        }
+    }
+}
+
+/// The lane-minor reverse sweep over a flat batched op stream — shared
+/// by [`BatchTape::grad`] and [`BatchTapeProgram::backward`] so the two
+/// are bitwise identical by construction (including the per-lane
+/// zero-adjoint skip).
+fn batch_reverse_sweep(
+    ops: &[BOp],
+    values: &[f64],
+    arena_parents: &[u32],
+    arena_partials: &[f64],
+    arena_shared: &[f64],
+    adj: &mut [f64],
+    lanes: usize,
+) {
+    let l = lanes;
+    for i in (0..ops.len()).rev() {
+        let (front, back) = adj.split_at_mut(i * l);
+        let a = &back[..l];
+        if a.iter().all(|&x| x == 0.0) {
+            continue;
+        }
+        let vi = &values[i * l..(i + 1) * l];
+        match ops[i] {
+            BOp::Leaf | BOp::Input => {}
+            BOp::Add(x, y) => {
+                let (xs, ys) = (x as usize * l, y as usize * l);
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[xs + k] += ak;
+                    }
+                }
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[ys + k] += ak;
+                    }
+                }
+            }
+            BOp::Sub(x, y) => {
+                let (xs, ys) = (x as usize * l, y as usize * l);
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[xs + k] += ak;
+                    }
+                }
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[ys + k] -= ak;
+                    }
+                }
+            }
+            BOp::Mul(x, y) => {
+                let (xs, ys) = (x as usize * l, y as usize * l);
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[xs + k] += ak * values[ys + k];
+                    }
+                }
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[ys + k] += ak * values[xs + k];
+                    }
+                }
+            }
+            BOp::Div(x, y) => {
+                let (xs, ys) = (x as usize * l, y as usize * l);
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[xs + k] += ak / values[ys + k];
+                    }
+                }
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        let vy = values[ys + k];
+                        front[ys + k] -= ak * values[xs + k] / (vy * vy);
+                    }
+                }
+            }
+            BOp::Neg(x) => {
+                let xs = x as usize * l;
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[xs + k] -= ak;
+                    }
+                }
+            }
+            BOp::Exp(x) => {
+                let xs = x as usize * l;
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[xs + k] += ak * vi[k];
+                    }
+                }
+            }
+            BOp::Ln(x) => {
+                let xs = x as usize * l;
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[xs + k] += ak / values[xs + k];
+                    }
+                }
+            }
+            BOp::Log1p(x) => {
+                let xs = x as usize * l;
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[xs + k] += ak / (1.0 + values[xs + k]);
+                    }
+                }
+            }
+            BOp::Sqrt(x) => {
+                let xs = x as usize * l;
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[xs + k] += ak * 0.5 / vi[k];
+                    }
+                }
+            }
+            BOp::Sigmoid(x) => {
+                let xs = x as usize * l;
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[xs + k] += ak * vi[k] * (1.0 - vi[k]);
+                    }
+                }
+            }
+            BOp::Softplus(x) => {
+                let xs = x as usize * l;
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        let s = sigmoid_val(values[xs + k]);
+                        front[xs + k] += ak * s;
+                    }
+                }
+            }
+            BOp::Powi(x, pn) => {
+                let xs = x as usize * l;
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        let xv = values[xs + k];
+                        front[xs + k] += ak * (pn as f64) * xv.powi(pn - 1);
+                    }
+                }
+            }
+            BOp::Scale(x, c) => {
+                let xs = x as usize * l;
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[xs + k] += ak * c;
+                    }
+                }
+            }
+            BOp::Offset(x, _) => {
+                let xs = x as usize * l;
+                for k in 0..l {
+                    let ak = a[k];
+                    if ak != 0.0 {
+                        front[xs + k] += ak;
+                    }
+                }
+            }
+            BOp::Composite { pstart, xstart, len } => {
+                for j in 0..len as usize {
+                    let parent = arena_parents[pstart as usize + j] as usize * l;
+                    let ps = (xstart as usize + j) * l;
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[parent + k] += ak * arena_partials[ps + k];
+                        }
+                    }
+                }
+            }
+            BOp::CompositeShared { pstart, sstart, len } => {
+                for j in 0..len as usize {
+                    let parent = arena_parents[pstart as usize + j] as usize * l;
+                    let p = arena_shared[sstart as usize + j];
+                    for k in 0..l {
+                        let ak = a[k];
+                        if ak != 0.0 {
+                            front[parent + k] += ak * p;
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl BatchTape {
@@ -87,13 +459,20 @@ impl BatchTape {
         assert!(lanes > 0, "BatchTape needs at least one lane");
         BatchTape {
             lanes,
-            ops: Vec::with_capacity(1024),
+            topo: BTopology {
+                ops: Vec::with_capacity(1024),
+                arena_parents: Vec::with_capacity(1024),
+                arena_shared: Vec::with_capacity(1024),
+                comp_kinds: Vec::with_capacity(64),
+                consts: Vec::with_capacity(256),
+                inputs: Vec::with_capacity(64),
+            },
             values: Vec::with_capacity(1024 * lanes),
-            arena_parents: Vec::with_capacity(1024),
             arena_partials: Vec::with_capacity(1024),
-            arena_shared: Vec::with_capacity(1024),
             adj: Vec::new(),
             scratch: vec![0.0; lanes],
+            scratch_a: vec![0.0; lanes],
+            scratch_b: vec![0.0; lanes],
         }
     }
 
@@ -102,22 +481,42 @@ impl BatchTape {
         self.lanes
     }
 
+    /// Clear the tape *and* release its backing storage (see
+    /// [`crate::autodiff::Tape::clear_and_shrink`]) — used by frozen
+    /// batched models in release builds, where the recording tape is
+    /// never consulted again.
+    pub fn clear_and_shrink(&mut self) {
+        self.reset();
+        self.topo.ops.shrink_to_fit();
+        self.topo.arena_parents.shrink_to_fit();
+        self.topo.arena_shared.shrink_to_fit();
+        self.topo.comp_kinds.shrink_to_fit();
+        self.topo.consts.shrink_to_fit();
+        self.topo.inputs.shrink_to_fit();
+        self.values.shrink_to_fit();
+        self.arena_partials.shrink_to_fit();
+        self.adj = Vec::new();
+    }
+
     /// Clear the tape for the next evaluation, keeping every buffer's
     /// capacity (the zero-allocation steady state).
     pub fn reset(&mut self) {
-        self.ops.clear();
+        self.topo.ops.clear();
+        self.topo.arena_parents.clear();
+        self.topo.arena_shared.clear();
+        self.topo.comp_kinds.clear();
+        self.topo.consts.clear();
+        self.topo.inputs.clear();
         self.values.clear();
-        self.arena_parents.clear();
         self.arena_partials.clear();
-        self.arena_shared.clear();
     }
 
     pub fn len(&self) -> usize {
-        self.ops.len()
+        self.topo.ops.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.ops.is_empty()
+        self.topo.ops.is_empty()
     }
 
     /// Node-storage capacity watermark (regression guard for reuse).
@@ -143,19 +542,22 @@ impl BatchTape {
         self.values[v.0 as usize * self.lanes + k]
     }
 
-    /// Differentiable input leaf with per-lane values.
+    /// Differentiable input leaf with per-lane values.  Inputs are
+    /// remembered in record order: they are the slots
+    /// [`BatchTapeProgram::forward`] rebinds.
     pub fn input(&mut self, vals: &[f64]) -> Var {
         assert_eq!(vals.len(), self.lanes, "input: lane-count mismatch");
-        let idx = self.ops.len() as u32;
-        self.ops.push(BOp::Leaf);
+        let idx = self.topo.ops.len() as u32;
+        self.topo.inputs.push(idx);
+        self.topo.ops.push(BOp::Input);
         self.values.extend_from_slice(vals);
         Var(idx)
     }
 
     /// Constant leaf, broadcast to every lane.
     pub fn constant(&mut self, c: f64) -> Var {
-        let idx = self.ops.len() as u32;
-        self.ops.push(BOp::Leaf);
+        let idx = self.topo.ops.len() as u32;
+        self.topo.ops.push(BOp::Leaf);
         self.values.resize(self.values.len() + self.lanes, c);
         Var(idx)
     }
@@ -164,8 +566,8 @@ impl BatchTape {
     #[inline]
     fn unary(&mut self, op: BOp, a: Var, f: impl Fn(f64) -> f64) -> Var {
         let l = self.lanes;
-        let idx = self.ops.len();
-        self.ops.push(op);
+        let idx = self.topo.ops.len();
+        self.topo.ops.push(op);
         self.values.resize((idx + 1) * l, 0.0);
         let (src, dst) = self.values.split_at_mut(idx * l);
         let pa = &src[a.0 as usize * l..a.0 as usize * l + l];
@@ -179,8 +581,8 @@ impl BatchTape {
     #[inline]
     fn binary(&mut self, op: BOp, a: Var, b: Var, f: impl Fn(f64, f64) -> f64) -> Var {
         let l = self.lanes;
-        let idx = self.ops.len();
-        self.ops.push(op);
+        let idx = self.topo.ops.len();
+        self.topo.ops.push(op);
         self.values.resize((idx + 1) * l, 0.0);
         let (src, dst) = self.values.split_at_mut(idx * l);
         let pa = &src[a.0 as usize * l..a.0 as usize * l + l];
@@ -230,26 +632,13 @@ impl BatchTape {
     /// Lane-wise logistic sigmoid — same branch structure as
     /// [`crate::autodiff::Tape::sigmoid`] so the lanes agree bitwise.
     pub fn sigmoid(&mut self, a: Var) -> Var {
-        self.unary(BOp::Sigmoid(a.0), a, |x| {
-            if x >= 0.0 {
-                1.0 / (1.0 + (-x).exp())
-            } else {
-                let e = x.exp();
-                e / (1.0 + e)
-            }
-        })
+        self.unary(BOp::Sigmoid(a.0), a, sigmoid_val)
     }
 
     /// Lane-wise `log(1 + e^x)` — same branch structure as
     /// [`crate::autodiff::Tape::softplus`].
     pub fn softplus(&mut self, a: Var) -> Var {
-        self.unary(BOp::Softplus(a.0), a, |x| {
-            if x > 30.0 {
-                x
-            } else {
-                x.exp().ln_1p()
-            }
-        })
+        self.unary(BOp::Softplus(a.0), a, softplus_val)
     }
 
     pub fn powi(&mut self, a: Var, n: i32) -> Var {
@@ -265,15 +654,15 @@ impl BatchTape {
     }
 
     pub fn offset(&mut self, a: Var, c: f64) -> Var {
-        self.unary(BOp::Offset(a.0), a, |x| x + c)
+        self.unary(BOp::Offset(a.0, c), a, |x| x + c)
     }
 
     /// Push a composite node with caller-supplied per-lane `values`
     /// (length `lanes`) from the tape's scratch-independent buffers.
     fn push_composite(&mut self, op: BOp, values: &[f64]) -> Var {
         debug_assert_eq!(values.len(), self.lanes);
-        let idx = self.ops.len() as u32;
-        self.ops.push(op);
+        let idx = self.topo.ops.len() as u32;
+        self.topo.ops.push(op);
         self.values.extend_from_slice(values);
         Var(idx)
     }
@@ -281,13 +670,15 @@ impl BatchTape {
     /// Fused primitive with **per-lane** partials: `values[k]` is the
     /// node's value in lane `k`, `partials[j * lanes + k]` is
     /// `d value_k / d parents[j]_k`.  The batched counterpart of
-    /// [`crate::autodiff::Tape::composite`].
+    /// [`crate::autodiff::Tape::composite`] — and like it, **not
+    /// freezable** (caller-computed partials cannot be recomputed).
     pub fn composite_lanes(&mut self, parents: &[Var], partials: &[f64], values: &[f64]) -> Var {
         assert_eq!(partials.len(), parents.len() * self.lanes);
-        let pstart = self.arena_parents.len() as u32;
+        let pstart = self.topo.arena_parents.len() as u32;
         let xstart = (self.arena_partials.len() / self.lanes) as u32;
-        self.arena_parents.extend(parents.iter().map(|v| v.0));
+        self.topo.arena_parents.extend(parents.iter().map(|v| v.0));
         self.arena_partials.extend_from_slice(partials);
+        self.topo.comp_kinds.push(CompKind::Opaque);
         self.push_composite(
             BOp::Composite {
                 pstart,
@@ -300,13 +691,14 @@ impl BatchTape {
 
     /// Fused primitive whose partials are the same in every lane
     /// (data-constant coefficients): `partials[j]` applies to all lanes
-    /// of `parents[j]`.
+    /// of `parents[j]`.  Not freezable (see [`BatchTape::composite_lanes`]).
     pub fn composite_shared(&mut self, parents: &[Var], partials: &[f64], values: &[f64]) -> Var {
         assert_eq!(partials.len(), parents.len());
-        let pstart = self.arena_parents.len() as u32;
-        let sstart = self.arena_shared.len() as u32;
-        self.arena_parents.extend(parents.iter().map(|v| v.0));
-        self.arena_shared.extend_from_slice(partials);
+        let pstart = self.topo.arena_parents.len() as u32;
+        let sstart = self.topo.arena_shared.len() as u32;
+        self.topo.arena_parents.extend(parents.iter().map(|v| v.0));
+        self.topo.arena_shared.extend_from_slice(partials);
+        self.topo.comp_kinds.push(CompKind::Opaque);
         self.push_composite(
             BOp::CompositeShared {
                 pstart,
@@ -330,18 +722,20 @@ impl BatchTape {
                 self.scratch[k] += self.values[s + k];
             }
         }
-        let pstart = self.arena_parents.len() as u32;
-        let sstart = self.arena_shared.len() as u32;
-        self.arena_parents.extend(xs.iter().map(|v| v.0));
-        self.arena_shared
-            .resize(self.arena_shared.len() + xs.len(), 1.0);
+        let pstart = self.topo.arena_parents.len() as u32;
+        let sstart = self.topo.arena_shared.len() as u32;
+        self.topo.arena_parents.extend(xs.iter().map(|v| v.0));
+        self.topo
+            .arena_shared
+            .resize(self.topo.arena_shared.len() + xs.len(), 1.0);
+        self.topo.comp_kinds.push(CompKind::Affine);
         let op = BOp::CompositeShared {
             pstart,
             sstart,
             len: xs.len() as u32,
         };
-        let idx = self.ops.len() as u32;
-        self.ops.push(op);
+        let idx = self.topo.ops.len() as u32;
+        self.topo.ops.push(op);
         // move scratch into the value store without re-borrowing self
         let start = self.values.len();
         self.values.resize(start + l, 0.0);
@@ -363,21 +757,135 @@ impl BatchTape {
                 self.scratch[k] += self.values[s + k] * c;
             }
         }
-        let pstart = self.arena_parents.len() as u32;
-        let sstart = self.arena_shared.len() as u32;
-        self.arena_parents.extend(ws.iter().map(|v| v.0));
-        self.arena_shared.extend_from_slice(cs);
+        let pstart = self.topo.arena_parents.len() as u32;
+        let sstart = self.topo.arena_shared.len() as u32;
+        self.topo.arena_parents.extend(ws.iter().map(|v| v.0));
+        self.topo.arena_shared.extend_from_slice(cs);
+        self.topo.comp_kinds.push(CompKind::Affine);
         let op = BOp::CompositeShared {
             pstart,
             sstart,
             len: ws.len() as u32,
         };
-        let idx = self.ops.len() as u32;
-        self.ops.push(op);
+        let idx = self.topo.ops.len() as u32;
+        self.topo.ops.push(op);
         let start = self.values.len();
         self.values.resize(start + l, 0.0);
         self.values[start..start + l].copy_from_slice(&self.scratch);
         Var(idx)
+    }
+
+    /// Record a replayable fused composite whose parents were just
+    /// pushed onto the parent arena: reserve the per-lane partial span,
+    /// run the shared kernel, and push the node.
+    fn fused_lanes(&mut self, kind: CompKind, num_parents: usize) -> Var {
+        let l = self.lanes;
+        self.topo.comp_kinds.push(kind);
+        let pstart = self.topo.arena_parents.len() - num_parents;
+        let xstart = self.arena_partials.len() / l;
+        self.arena_partials.resize((xstart + num_parents) * l, 0.0);
+        let BatchTape {
+            topo,
+            values,
+            arena_partials,
+            scratch,
+            scratch_a,
+            scratch_b,
+            ..
+        } = self;
+        batch_composite_forward(
+            kind,
+            l,
+            pstart,
+            xstart,
+            &topo.arena_parents,
+            &topo.consts,
+            values,
+            arena_partials,
+            scratch,
+            scratch_a,
+            scratch_b,
+        );
+        let op = BOp::Composite {
+            pstart: pstart as u32,
+            xstart: xstart as u32,
+            len: num_parents as u32,
+        };
+        let idx = self.topo.ops.len() as u32;
+        self.topo.ops.push(op);
+        let start = self.values.len();
+        self.values.resize(start + l, 0.0);
+        self.values[start..start + l].copy_from_slice(&self.scratch);
+        Var(idx)
+    }
+
+    /// Fused i.i.d. Normal observation plate, lane-wise (see
+    /// [`crate::autodiff::Tape::normal_iid_obs`]).
+    pub fn normal_iid_obs(&mut self, loc: Var, scale: Var, ys: &[f64]) -> Var {
+        let kind = CompKind::NormalIid {
+            c: self.topo.consts.len() as u32,
+            n: ys.len() as u32,
+        };
+        self.topo.consts.extend_from_slice(ys);
+        self.topo.arena_parents.push(loc.0);
+        self.topo.arena_parents.push(scale.0);
+        self.fused_lanes(kind, 2)
+    }
+
+    /// Fused i.i.d. Bernoulli observation plate with one shared latent
+    /// logit, lane-wise.
+    pub fn bernoulli_logits_iid_obs(&mut self, logits: Var, ys: &[f64]) -> Var {
+        let kind = CompKind::BernoulliIid {
+            c: self.topo.consts.len() as u32,
+            n: ys.len() as u32,
+        };
+        self.topo.consts.extend_from_slice(ys);
+        self.topo.arena_parents.push(logits.0);
+        self.fused_lanes(kind, 1)
+    }
+
+    /// Fused Normal observation plate with per-element latent locations
+    /// and a shared latent scale, lane-wise.
+    pub fn normal_plate_obs(&mut self, locs: &[Var], scale: Var, ys: &[f64]) -> Var {
+        assert_eq!(locs.len(), ys.len());
+        let kind = CompKind::NormalPlate {
+            c: self.topo.consts.len() as u32,
+            n: ys.len() as u32,
+        };
+        self.topo.consts.extend_from_slice(ys);
+        self.topo.arena_parents.extend(locs.iter().map(|v| v.0));
+        self.topo.arena_parents.push(scale.0);
+        self.fused_lanes(kind, locs.len() + 1)
+    }
+
+    /// Fused Normal observation plate with per-element latent locations
+    /// and *known* per-element scales, lane-wise.
+    pub fn normal_fixed_plate_obs(&mut self, locs: &[Var], sigmas: &[f64], ys: &[f64]) -> Var {
+        assert_eq!(locs.len(), ys.len());
+        assert_eq!(sigmas.len(), ys.len());
+        let kind = CompKind::NormalFixedPlate {
+            c: self.topo.consts.len() as u32,
+            n: ys.len() as u32,
+        };
+        for (s, y) in sigmas.iter().zip(ys) {
+            self.topo.consts.push(*s);
+            self.topo.consts.push(*y);
+        }
+        self.topo.arena_parents.extend(locs.iter().map(|v| v.0));
+        self.fused_lanes(kind, locs.len())
+    }
+
+    /// Fused Bernoulli observation plate with per-element latent
+    /// logits, lane-wise.
+    pub fn bernoulli_logits_plate_obs(&mut self, logits: &[Var], ys: &[f64]) -> Var {
+        assert_eq!(logits.len(), ys.len());
+        let kind = CompKind::BernoulliPlate {
+            c: self.topo.consts.len() as u32,
+            n: ys.len() as u32,
+        };
+        self.topo.consts.extend_from_slice(ys);
+        self.topo.arena_parents.extend(logits.iter().map(|v| v.0));
+        self.fused_lanes(kind, logits.len())
     }
 
     /// Reverse sweep from `output`: returns the adjoints of every node,
@@ -386,7 +894,7 @@ impl BatchTape {
     /// zero-adjoint skip, so each lane's gradient is bitwise equal to a
     /// scalar-tape replay of the same program.
     pub fn grad(&mut self, output: Var) -> &[f64] {
-        let n = self.ops.len();
+        let n = self.topo.ops.len();
         let l = self.lanes;
         self.adj.clear();
         self.adj.resize(n * l, 0.0);
@@ -396,210 +904,245 @@ impl BatchTape {
                 *a = 1.0;
             }
         }
-        let BatchTape {
+        batch_reverse_sweep(
+            &self.topo.ops,
+            &self.values,
+            &self.topo.arena_parents,
+            &self.arena_partials,
+            &self.topo.arena_shared,
+            &mut self.adj,
+            l,
+        );
+        &self.adj
+    }
+
+    /// Snapshot the recorded program into a [`BatchTapeProgram`] whose
+    /// lane-minor forward/backward sweeps are bitwise identical (per
+    /// lane) to replaying the same program on this tape, with `output`
+    /// as the differentiated node.  Panics if the tape contains a raw
+    /// (non-replayable) composite.
+    pub fn freeze(&self, output: Var) -> BatchTapeProgram {
+        assert!(
+            (output.0 as usize) < self.topo.ops.len(),
+            "freeze: output node out of range"
+        );
+        assert!(
+            !self
+                .topo
+                .comp_kinds
+                .iter()
+                .any(|&k| matches!(k, CompKind::Opaque)),
+            "BatchTape::freeze: tape contains a raw composite_lanes/composite_shared node \
+             whose caller-computed partials cannot be recomputed; record fused likelihoods \
+             through the replayable builders (normal_iid_obs, normal_plate_obs, ...) instead"
+        );
+        BatchTapeProgram {
+            lanes: self.lanes,
+            topo: self.topo.clone(),
+            output: output.0,
+            values: self.values.clone(),
+            partials: self.arena_partials.clone(),
+            adj: vec![0.0; self.topo.ops.len() * self.lanes],
+            vals: vec![0.0; self.lanes],
+            acc_a: vec![0.0; self.lanes],
+            acc_b: vec![0.0; self.lanes],
+        }
+    }
+}
+
+/// A frozen batched tape: the recorded topology plus per-eval
+/// lane-minor value/partial/adjoint storage.  The forward sweep is a
+/// flat loop over op codes with contiguous lane inner loops (the
+/// autovectorizer's favourite shape) and **no interpretation** — the
+/// batched analog of `jax.jit` staging out the traced program.  Per
+/// lane, forward/backward are bitwise identical to a batched (and
+/// therefore scalar) tape replay of the same program.
+pub struct BatchTapeProgram {
+    lanes: usize,
+    topo: BTopology,
+    output: u32,
+    values: Vec<f64>,
+    partials: Vec<f64>,
+    adj: Vec<f64>,
+    vals: Vec<f64>,
+    acc_a: Vec<f64>,
+    acc_b: Vec<f64>,
+}
+
+impl BatchTapeProgram {
+    /// Number of independent evaluation lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Number of input slots ([`BatchTape::input`] calls at record time).
+    pub fn num_inputs(&self) -> usize {
+        self.topo.inputs.len()
+    }
+
+    /// Number of instructions in the frozen stream.
+    pub fn len(&self) -> usize {
+        self.topo.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.topo.ops.is_empty()
+    }
+
+    /// Lane values of the output node after the last [`forward`].
+    ///
+    /// [`forward`]: BatchTapeProgram::forward
+    pub fn output_values(&self) -> &[f64] {
+        let s = self.output as usize * self.lanes;
+        &self.values[s..s + self.lanes]
+    }
+
+    /// Rebind the inputs (input-major, lane-minor: `inputs[k * lanes ..
+    /// (k+1) * lanes]` are the lanes of input slot `k`) and run the
+    /// lane-minor forward sweep.  Zero allocations, no interpretation.
+    pub fn forward(&mut self, inputs: &[f64]) {
+        let l = self.lanes;
+        assert_eq!(
+            inputs.len(),
+            self.topo.inputs.len() * l,
+            "BatchTapeProgram::forward: input length mismatch"
+        );
+        for (k, &id) in self.topo.inputs.iter().enumerate() {
+            let s = id as usize * l;
+            self.values[s..s + l].copy_from_slice(&inputs[k * l..(k + 1) * l]);
+        }
+        let BTopology {
             ops,
-            values,
             arena_parents,
-            arena_partials,
             arena_shared,
-            adj,
+            comp_kinds,
+            consts,
             ..
-        } = self;
-        for i in (0..n).rev() {
-            let (front, back) = adj.split_at_mut(i * l);
-            let a = &back[..l];
-            if a.iter().all(|&x| x == 0.0) {
-                continue;
-            }
-            let vi = &values[i * l..(i + 1) * l];
+        } = &self.topo;
+        let values = &mut self.values;
+        let partials = &mut self.partials;
+        let vals = &mut self.vals;
+        let acc_a = &mut self.acc_a;
+        let acc_b = &mut self.acc_b;
+        let mut ci = 0usize;
+        for i in 0..ops.len() {
             match ops[i] {
-                BOp::Leaf => {}
-                BOp::Add(x, y) => {
-                    let (xs, ys) = (x as usize * l, y as usize * l);
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[xs + k] += ak;
-                        }
-                    }
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[ys + k] += ak;
-                        }
-                    }
-                }
-                BOp::Sub(x, y) => {
-                    let (xs, ys) = (x as usize * l, y as usize * l);
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[xs + k] += ak;
-                        }
-                    }
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[ys + k] -= ak;
-                        }
-                    }
-                }
-                BOp::Mul(x, y) => {
-                    let (xs, ys) = (x as usize * l, y as usize * l);
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[xs + k] += ak * values[ys + k];
-                        }
-                    }
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[ys + k] += ak * values[xs + k];
-                        }
-                    }
-                }
-                BOp::Div(x, y) => {
-                    let (xs, ys) = (x as usize * l, y as usize * l);
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[xs + k] += ak / values[ys + k];
-                        }
-                    }
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            let vy = values[ys + k];
-                            front[ys + k] -= ak * values[xs + k] / (vy * vy);
-                        }
-                    }
-                }
-                BOp::Neg(x) => {
-                    let xs = x as usize * l;
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[xs + k] -= ak;
-                        }
-                    }
-                }
-                BOp::Exp(x) => {
-                    let xs = x as usize * l;
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[xs + k] += ak * vi[k];
-                        }
-                    }
-                }
-                BOp::Ln(x) => {
-                    let xs = x as usize * l;
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[xs + k] += ak / values[xs + k];
-                        }
-                    }
-                }
-                BOp::Log1p(x) => {
-                    let xs = x as usize * l;
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[xs + k] += ak / (1.0 + values[xs + k]);
-                        }
-                    }
-                }
-                BOp::Sqrt(x) => {
-                    let xs = x as usize * l;
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[xs + k] += ak * 0.5 / vi[k];
-                        }
-                    }
-                }
-                BOp::Sigmoid(x) => {
-                    let xs = x as usize * l;
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[xs + k] += ak * vi[k] * (1.0 - vi[k]);
-                        }
-                    }
-                }
-                BOp::Softplus(x) => {
-                    let xs = x as usize * l;
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            let xv = values[xs + k];
-                            let s = if xv >= 0.0 {
-                                1.0 / (1.0 + (-xv).exp())
-                            } else {
-                                let e = xv.exp();
-                                e / (1.0 + e)
-                            };
-                            front[xs + k] += ak * s;
-                        }
-                    }
-                }
-                BOp::Powi(x, pn) => {
-                    let xs = x as usize * l;
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            let xv = values[xs + k];
-                            front[xs + k] += ak * (pn as f64) * xv.powi(pn - 1);
-                        }
-                    }
-                }
-                BOp::Scale(x, c) => {
-                    let xs = x as usize * l;
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[xs + k] += ak * c;
-                        }
-                    }
-                }
-                BOp::Offset(x) => {
-                    let xs = x as usize * l;
-                    for k in 0..l {
-                        let ak = a[k];
-                        if ak != 0.0 {
-                            front[xs + k] += ak;
-                        }
-                    }
-                }
-                BOp::Composite { pstart, xstart, len } => {
-                    for j in 0..len as usize {
-                        let parent = arena_parents[pstart as usize + j] as usize * l;
-                        let ps = (xstart as usize + j) * l;
-                        for k in 0..l {
-                            let ak = a[k];
-                            if ak != 0.0 {
-                                front[parent + k] += ak * arena_partials[ps + k];
-                            }
-                        }
-                    }
+                BOp::Leaf | BOp::Input => {}
+                BOp::Add(x, y) => binary_sweep(values, i, x, y, l, |a, b| a + b),
+                BOp::Sub(x, y) => binary_sweep(values, i, x, y, l, |a, b| a - b),
+                BOp::Mul(x, y) => binary_sweep(values, i, x, y, l, |a, b| a * b),
+                BOp::Div(x, y) => binary_sweep(values, i, x, y, l, |a, b| a / b),
+                BOp::Neg(x) => unary_sweep(values, i, x, l, |a| -a),
+                BOp::Exp(x) => unary_sweep(values, i, x, l, f64::exp),
+                BOp::Ln(x) => unary_sweep(values, i, x, l, f64::ln),
+                BOp::Log1p(x) => unary_sweep(values, i, x, l, f64::ln_1p),
+                BOp::Sqrt(x) => unary_sweep(values, i, x, l, f64::sqrt),
+                BOp::Sigmoid(x) => unary_sweep(values, i, x, l, sigmoid_val),
+                BOp::Softplus(x) => unary_sweep(values, i, x, l, softplus_val),
+                BOp::Powi(x, n) => unary_sweep(values, i, x, l, |a| a.powi(n)),
+                BOp::Scale(x, c) => unary_sweep(values, i, x, l, |a| c * a),
+                BOp::Offset(x, c) => unary_sweep(values, i, x, l, |a| a + c),
+                BOp::Composite { pstart, xstart, .. } => {
+                    let kind = comp_kinds[ci];
+                    ci += 1;
+                    let (src, dst) = values.split_at_mut(i * l);
+                    batch_composite_forward(
+                        kind,
+                        l,
+                        pstart as usize,
+                        xstart as usize,
+                        arena_parents,
+                        consts,
+                        src,
+                        partials,
+                        vals,
+                        acc_a,
+                        acc_b,
+                    );
+                    dst[..l].copy_from_slice(vals);
                 }
                 BOp::CompositeShared { pstart, sstart, len } => {
+                    debug_assert!(matches!(comp_kinds[ci], CompKind::Affine));
+                    ci += 1;
+                    let (src, dst) = values.split_at_mut(i * l);
+                    for v in vals.iter_mut() {
+                        *v = 0.0;
+                    }
                     for j in 0..len as usize {
-                        let parent = arena_parents[pstart as usize + j] as usize * l;
                         let p = arena_shared[sstart as usize + j];
+                        let s = arena_parents[pstart as usize + j] as usize * l;
                         for k in 0..l {
-                            let ak = a[k];
-                            if ak != 0.0 {
-                                front[parent + k] += ak * p;
-                            }
+                            vals[k] += p * src[s + k];
                         }
                     }
+                    dst[..l].copy_from_slice(vals);
                 }
             }
         }
-        &self.adj
+    }
+
+    /// Reverse sweep seeded at the output (adjoint 1.0 in every lane),
+    /// using the values and composite partials left by the last
+    /// [`forward`].
+    ///
+    /// [`forward`]: BatchTapeProgram::forward
+    pub fn backward(&mut self) {
+        let l = self.lanes;
+        self.adj.iter_mut().for_each(|a| *a = 0.0);
+        let o = self.output as usize * l;
+        for a in &mut self.adj[o..o + l] {
+            *a = 1.0;
+        }
+        batch_reverse_sweep(
+            &self.topo.ops,
+            &self.values,
+            &self.topo.arena_parents,
+            &self.partials,
+            &self.topo.arena_shared,
+            &mut self.adj,
+            l,
+        );
+    }
+
+    /// Copy the adjoints of the input slots into `grad` (input-major,
+    /// lane-minor, same layout as [`forward`]'s `inputs`) after a
+    /// [`backward`] sweep.
+    ///
+    /// [`forward`]: BatchTapeProgram::forward
+    /// [`backward`]: BatchTapeProgram::backward
+    pub fn input_adjoints(&self, grad: &mut [f64]) {
+        let l = self.lanes;
+        for (k, &id) in self.topo.inputs.iter().enumerate() {
+            let s = id as usize * l;
+            grad[k * l..(k + 1) * l].copy_from_slice(&self.adj[s..s + l]);
+        }
+    }
+}
+
+/// Lane-minor unary forward step shared by the frozen sweep.
+#[inline]
+fn unary_sweep(values: &mut [f64], i: usize, x: u32, l: usize, f: impl Fn(f64) -> f64) {
+    let (src, dst) = values.split_at_mut(i * l);
+    let xs = x as usize * l;
+    for k in 0..l {
+        dst[k] = f(src[xs + k]);
+    }
+}
+
+/// Lane-minor binary forward step shared by the frozen sweep.
+#[inline]
+fn binary_sweep(
+    values: &mut [f64],
+    i: usize,
+    x: u32,
+    y: u32,
+    l: usize,
+    f: impl Fn(f64, f64) -> f64,
+) {
+    let (src, dst) = values.split_at_mut(i * l);
+    let (xs, ys) = (x as usize * l, y as usize * l);
+    for k in 0..l {
+        dst[k] = f(src[xs + k], src[ys + k]);
     }
 }
 
@@ -803,5 +1346,148 @@ mod tests {
             assert_eq!(bt.node_capacity(), nodes);
             assert_eq!(bt.arena_capacity(), arena);
         }
+    }
+
+    /// A freezable batched program hitting the primitives, the shared
+    /// composites and every fused observation kernel.
+    fn build_freezable(bt: &mut BatchTape, xs: &[f64], ys: &[f64]) -> (Var, Var, Var) {
+        let x = bt.input(xs);
+        let y = bt.input(ys);
+        let base = alg_program(bt, x, y);
+        let s = bt.sum(&[x, y, base]);
+        let d = bt.dot_const(&[x, y], &[0.75, -0.25]);
+        let sg = bt.sigmoid(x);
+        let scale = bt.exp(y);
+        let n1 = bt.normal_iid_obs(sg, scale, &[0.4, -0.2, 1.1]);
+        let n2 = bt.bernoulli_logits_iid_obs(base, &[1.0, 0.0, 1.0]);
+        let n3 = bt.normal_plate_obs(&[x, y], scale, &[0.9, -0.7]);
+        let n4 = bt.normal_fixed_plate_obs(&[x, y], &[1.5, 0.7], &[0.2, 0.3]);
+        let n5 = bt.bernoulli_logits_plate_obs(&[x, y], &[0.0, 1.0]);
+        let t1 = bt.add(s, d);
+        let t2 = bt.add(t1, n1);
+        let t3 = bt.add(t2, n2);
+        let t4 = bt.add(t3, n3);
+        let t5 = bt.add(t4, n4);
+        let out = bt.add(t5, n5);
+        (x, y, out)
+    }
+
+    /// The frozen batched program must bitwise-equal a batched tape
+    /// replay at *different* input points, per lane, for values and
+    /// input adjoints.
+    #[test]
+    fn frozen_batch_program_matches_replay_bitwise() {
+        let lanes = 3;
+        let xs0 = [0.3, -0.7, 1.1];
+        let ys0 = [-1.2, 0.5, 0.02];
+        let mut bt = BatchTape::new(lanes);
+        let (_x, _y, out) = build_freezable(&mut bt, &xs0, &ys0);
+        let mut prog = bt.freeze(out);
+        assert_eq!(prog.lanes(), lanes);
+        assert_eq!(prog.num_inputs(), 2);
+        assert!(!prog.is_empty());
+
+        let points = [
+            ([0.3, -0.7, 1.1], [-1.2, 0.5, 0.02]),
+            ([1.9, 0.01, -2.4], [0.6, 31.5, -0.3]),
+            ([-0.5, 2.2, 0.7], [1.4, -0.9, 0.25]),
+        ];
+        for (px, py) in &points {
+            let mut rt = BatchTape::new(lanes);
+            let (rx, ry, rout) = build_freezable(&mut rt, px, py);
+            let rvals = rt.lane_values(rout).to_vec();
+            let radj = rt.grad(rout).to_vec();
+
+            let mut inputs = Vec::new();
+            inputs.extend_from_slice(px);
+            inputs.extend_from_slice(py);
+            prog.forward(&inputs);
+            for k in 0..lanes {
+                assert_eq!(
+                    prog.output_values()[k].to_bits(),
+                    rvals[k].to_bits(),
+                    "lane {k} value"
+                );
+            }
+            prog.backward();
+            let mut grads = vec![0.0; 2 * lanes];
+            prog.input_adjoints(&mut grads);
+            for k in 0..lanes {
+                assert_eq!(
+                    grads[k].to_bits(),
+                    radj[rx.0 as usize * lanes + k].to_bits(),
+                    "lane {k} d/dx"
+                );
+                assert_eq!(
+                    grads[lanes + k].to_bits(),
+                    radj[ry.0 as usize * lanes + k].to_bits(),
+                    "lane {k} d/dy"
+                );
+            }
+        }
+    }
+
+    /// The scalar twin of [`build_freezable`]: the same op sequence on
+    /// a one-lane-equivalent scalar tape.
+    fn build_freezable_scalar(t: &mut Tape, xv: f64, yv: f64) -> Var {
+        let x = t.input(xv);
+        let y = t.input(yv);
+        let base = alg_program(t, x, y);
+        let s = t.sum(&[x, y, base]);
+        let d = t.dot_const(&[x, y], &[0.75, -0.25]);
+        let sg = t.sigmoid(x);
+        let scale = t.exp(y);
+        let n1 = t.normal_iid_obs(sg, scale, &[0.4, -0.2, 1.1]);
+        let n2 = t.bernoulli_logits_iid_obs(base, &[1.0, 0.0, 1.0]);
+        let n3 = t.normal_plate_obs(&[x, y], scale, &[0.9, -0.7]);
+        let n4 = t.normal_fixed_plate_obs(&[x, y], &[1.5, 0.7], &[0.2, 0.3]);
+        let n5 = t.bernoulli_logits_plate_obs(&[x, y], &[0.0, 1.0]);
+        let t1 = t.add(s, d);
+        let t2 = t.add(t1, n1);
+        let t3 = t.add(t2, n2);
+        let t4 = t.add(t3, n3);
+        let t5 = t.add(t4, n4);
+        t.add(t5, n5)
+    }
+
+    /// Each lane of the frozen batched fused kernels must also match a
+    /// *scalar* frozen program at that lane's inputs.
+    #[test]
+    fn frozen_batch_lanes_match_scalar_frozen() {
+        let lanes = 2;
+        let xs = [0.4, -1.3];
+        let ys = [0.9, 0.15];
+        let mut bt = BatchTape::new(lanes);
+        let (_, _, bout) = build_freezable(&mut bt, &xs, &ys);
+        let mut bprog = bt.freeze(bout);
+        let mut inputs = Vec::new();
+        inputs.extend_from_slice(&xs);
+        inputs.extend_from_slice(&ys);
+        bprog.forward(&inputs);
+        bprog.backward();
+        let mut bgrads = vec![0.0; 2 * lanes];
+        bprog.input_adjoints(&mut bgrads);
+
+        for k in 0..lanes {
+            let mut t = Tape::new();
+            let out = build_freezable_scalar(&mut t, xs[k], ys[k]);
+            let mut sprog = t.freeze(out);
+            let v = sprog.forward(&[xs[k], ys[k]]);
+            assert_eq!(v.to_bits(), bprog.output_values()[k].to_bits(), "lane {k}");
+            sprog.backward();
+            let mut g = vec![0.0; 2];
+            sprog.input_adjoints(&mut g);
+            assert_eq!(g[0].to_bits(), bgrads[k].to_bits(), "lane {k} d/dx");
+            assert_eq!(g[1].to_bits(), bgrads[lanes + k].to_bits(), "lane {k} d/dy");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "composite_lanes/composite_shared")]
+    fn freeze_rejects_raw_composites() {
+        let mut bt = BatchTape::new(2);
+        let x = bt.input(&[1.0, 2.0]);
+        let node = bt.composite_lanes(&[x], &[3.0, 4.0], &[3.0, 8.0]);
+        let _ = bt.freeze(node);
     }
 }

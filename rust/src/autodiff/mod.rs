@@ -22,10 +22,33 @@
 //! arena (two flat `Vec`s indexed by `(start, len)`) instead of a boxed
 //! slice per node, and the reverse sweep writes into an adjoint buffer
 //! owned by the tape.
+//!
+//! # Record once, replay many
+//!
+//! The tape is split into a **recorded topology** (`Topology`: op
+//! kinds, argument node ids, the composite parent arena, composite
+//! *kernel descriptors* and their constant data) and **per-evaluation
+//! value/adjoint storage**.  For programs with static structure the
+//! topology is identical on every evaluation, so re-interpreting the
+//! program through the tape builder per gradient is pure overhead.
+//! [`Tape::freeze`] snapshots the topology into a [`TapeProgram`]: a
+//! flat instruction stream whose [`TapeProgram::forward`] /
+//! [`TapeProgram::backward`] sweeps recompute every value, composite
+//! partial and adjoint directly from the stored op codes — no [`Alg`]
+//! dispatch, no interpreter, no allocation.  Composite nodes re-run
+//! their fused likelihood kernels (the *same* kernel functions the
+//! record path uses, so frozen results are **bitwise identical** to a
+//! fresh tape replay — `rust/tests/frozen_tape.rs` pins this on every
+//! zoo model).  Only the raw [`Tape::composite`] escape hatch — whose
+//! partials are caller-computed and therefore not recomputable — cannot
+//! be frozen; [`Tape::freeze`] panics with a descriptive message if one
+//! is present.
 
 pub mod batch;
 
-pub use batch::BatchTape;
+pub use batch::{BatchTape, BatchTapeProgram};
+
+use crate::ppl::special::{softplus_sigmoid, LN_2PI};
 
 /// Handle to a node on a [`Tape`] (or, lane-wise, on a
 /// [`batch::BatchTape`]).
@@ -34,10 +57,16 @@ pub struct Var(pub u32);
 
 /// Node operation.  `Copy`, with composite parents/partials stored
 /// out-of-line in the tape's arena so the op list is a flat `Vec`.
+/// Every op carries enough constant data to *recompute* its value from
+/// its parents' values — the frozen-program forward sweep depends on
+/// this (which is why [`Op::Offset`] stores its constant even though
+/// the reverse sweep never needs it).
 #[derive(Debug, Clone, Copy)]
 enum Op {
-    /// Leaf (input or constant): no parents.
+    /// Constant leaf: value fixed at record time.
     Leaf,
+    /// Differentiable input leaf: value rebound on every frozen replay.
+    Input,
     Add(u32, u32),
     Sub(u32, u32),
     Mul(u32, u32),
@@ -54,19 +83,73 @@ enum Op {
     /// value = c * parent
     Scale(u32, f64),
     /// value = parent + c
-    Offset(u32),
+    Offset(u32, f64),
     /// Scalar-valued fused primitive; parents/partials at
-    /// `arena[start..start+len]`.
+    /// `arena[start..start+len]`, kernel descriptor in
+    /// `Topology::comp_kinds` (one entry per composite, in node order).
     Composite { start: u32, len: u32 },
+}
+
+/// How a composite node recomputes its value and partials from fresh
+/// parent values — the kernel descriptor recorded next to each
+/// composite so a frozen program can re-run the fused math instead of
+/// replaying the model.  Shared by the scalar and batched tapes.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum CompKind {
+    /// Raw [`Tape::composite`]: partials were computed by the caller
+    /// and cannot be recomputed — blocks [`Tape::freeze`].
+    Opaque,
+    /// value = Σ partials[j] · parents[j] with *constant* partials
+    /// (`sum`, `dot_const`).
+    Affine,
+    /// Numerically-stable logsumexp with softmax partials.
+    LogSumExp,
+    /// i.i.d. Normal plate with shared latent (loc, scale) parents;
+    /// observations at `consts[c..c+n]`.
+    NormalIid { c: u32, n: u32 },
+    /// i.i.d. Bernoulli-logits plate with one shared latent logit;
+    /// observations at `consts[c..c+n]`.
+    BernoulliIid { c: u32, n: u32 },
+    /// Normal plate with per-element latent locations and a shared
+    /// latent scale (parents `[locs; n, scale]`); observations at
+    /// `consts[c..c+n]`.
+    NormalPlate { c: u32, n: u32 },
+    /// Normal plate with per-element latent locations and *known*
+    /// per-element scales; `consts[c..c+2n]` interleaves
+    /// `[sigma_0, y_0, sigma_1, y_1, ...]`.
+    NormalFixedPlate { c: u32, n: u32 },
+    /// Bernoulli plate with per-element latent logits; observations at
+    /// `consts[c..c+n]`.
+    BernoulliPlate { c: u32, n: u32 },
+}
+
+/// The recorded half of a tape: everything that is a pure function of
+/// the *program structure* (op kinds, argument node ids, composite
+/// parents, kernel descriptors, observation constants, input slots) and
+/// therefore identical across evaluations of a static-structure model.
+/// [`Tape::freeze`] clones this into a [`TapeProgram`].
+#[derive(Debug, Clone, Default)]
+struct Topology {
+    ops: Vec<Op>,
+    arena_parents: Vec<u32>,
+    /// kernel descriptor per composite node, in node order
+    comp_kinds: Vec<CompKind>,
+    /// fused-kernel constant data (observations, known scales)
+    consts: Vec<f64>,
+    /// node ids of [`Op::Input`] leaves, in record order
+    inputs: Vec<u32>,
 }
 
 /// Reverse-mode tape. Build the expression with the `Tape` methods, then
 /// call [`Tape::grad`] on the output.  Call [`Tape::reset`] between
-/// evaluations to reuse all storage.
+/// evaluations to reuse all storage, or [`Tape::freeze`] the recorded
+/// program once and replay it without the builder.
 pub struct Tape {
-    ops: Vec<Op>,
+    topo: Topology,
+    /// per-eval primal values, one per node
     values: Vec<f64>,
-    arena_parents: Vec<u32>,
+    /// recorded composite partials (constant for `Affine`/`Opaque`,
+    /// recomputed in-place by the fused kernels)
     arena_partials: Vec<f64>,
     /// adjoint scratch for the reverse sweep (sized lazily in `grad`)
     adj: Vec<f64>,
@@ -80,11 +163,160 @@ impl Default for Tape {
     /// [`Tape::new`] for a working tape with pre-sized buffers.
     fn default() -> Self {
         Tape {
-            ops: Vec::new(),
+            topo: Topology::default(),
             values: Vec::new(),
-            arena_parents: Vec::new(),
             arena_partials: Vec::new(),
             adj: Vec::new(),
+        }
+    }
+}
+
+/// Logistic sigmoid with the tape's branch structure — delegates to
+/// the crate's one canonical implementation
+/// ([`crate::ppl::special::sigmoid`]) so the record path, the frozen
+/// forward sweep, the batched tape and every ppl-side consumer agree
+/// bitwise by construction.
+#[inline(always)]
+pub(crate) fn sigmoid_val(x: f64) -> f64 {
+    crate::ppl::special::sigmoid(x)
+}
+
+/// Overflow-safe `log(1 + e^x)` with the tape's branch structure
+/// (shared like [`sigmoid_val`]).
+#[inline(always)]
+pub(crate) fn softplus_val(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Recompute a composite node's value and (for recomputing kinds) its
+/// partials from fresh parent values — the **one** kernel
+/// implementation shared by the record-time builders and
+/// [`TapeProgram::forward`], which is what makes frozen replays bitwise
+/// identical to tape replays.
+///
+/// `parents`/`partials` are the full arenas; this composite's span is
+/// `[start, start + len)`.  Returns the node value.
+fn scalar_composite_forward(
+    kind: CompKind,
+    start: usize,
+    len: usize,
+    parents: &[u32],
+    consts: &[f64],
+    values: &[f64],
+    partials: &mut [f64],
+) -> f64 {
+    match kind {
+        CompKind::Opaque => {
+            unreachable!("opaque composites cannot be recomputed (freeze() rejects them)")
+        }
+        CompKind::Affine => {
+            let mut acc = 0.0;
+            for k in start..start + len {
+                acc += partials[k] * values[parents[k] as usize];
+            }
+            acc
+        }
+        CompKind::LogSumExp => {
+            let mut m = f64::NEG_INFINITY;
+            for k in start..start + len {
+                m = m.max(values[parents[k] as usize]);
+            }
+            if m == f64::NEG_INFINITY {
+                // mirror Tape::logsumexp's all-(-inf) early return: the
+                // record path emits a -inf constant (no gradient flow),
+                // so the frozen recompute must yield -inf with zero
+                // partials rather than exp(-inf - -inf) = NaN
+                for k in start..start + len {
+                    partials[k] = 0.0;
+                }
+                return f64::NEG_INFINITY;
+            }
+            let mut sum = 0.0;
+            for k in start..start + len {
+                sum += (values[parents[k] as usize] - m).exp();
+            }
+            for k in start..start + len {
+                partials[k] = (values[parents[k] as usize] - m).exp() / sum;
+            }
+            m + sum.ln()
+        }
+        CompKind::NormalIid { c, n } => {
+            let ys = &consts[c as usize..c as usize + n as usize];
+            let nf = n as f64;
+            let lv = values[parents[start] as usize];
+            let sv = values[parents[start + 1] as usize];
+            let inv2 = 1.0 / (sv * sv);
+            let mut value = 0.0;
+            let mut sr = 0.0;
+            let mut sr2 = 0.0;
+            for &y in ys {
+                let r = y - lv;
+                value += -0.5 * r * r * inv2;
+                sr += r;
+                sr2 += r * r;
+            }
+            value += -nf * sv.ln() - 0.5 * nf * LN_2PI;
+            partials[start] = sr * inv2;
+            partials[start + 1] = sr2 / (sv * sv * sv) - nf / sv;
+            value
+        }
+        CompKind::BernoulliIid { c, n } => {
+            let ys = &consts[c as usize..c as usize + n as usize];
+            let nf = n as f64;
+            let zl = values[parents[start] as usize];
+            let (sp, sig) = softplus_sigmoid(zl);
+            let sum_y: f64 = ys.iter().sum();
+            partials[start] = sum_y - nf * sig;
+            sum_y * zl - nf * sp
+        }
+        CompKind::NormalPlate { c, n } => {
+            let nn = n as usize;
+            let ys = &consts[c as usize..c as usize + nn];
+            let nf = n as f64;
+            let sv = values[parents[start + nn] as usize];
+            let inv2 = 1.0 / (sv * sv);
+            let mut value = 0.0;
+            let mut sr2 = 0.0;
+            for (i, &y) in ys.iter().enumerate() {
+                let lv = values[parents[start + i] as usize];
+                let r = y - lv;
+                value += -0.5 * r * r * inv2;
+                sr2 += r * r;
+                partials[start + i] = r * inv2;
+            }
+            value += -nf * sv.ln() - 0.5 * nf * LN_2PI;
+            partials[start + nn] = sr2 / (sv * sv * sv) - nf / sv;
+            value
+        }
+        CompKind::NormalFixedPlate { c, n } => {
+            let nn = n as usize;
+            let sy = &consts[c as usize..c as usize + 2 * nn];
+            let mut value = 0.0;
+            for i in 0..nn {
+                let s = sy[2 * i];
+                let y = sy[2 * i + 1];
+                let inv2 = 1.0 / (s * s);
+                let lv = values[parents[start + i] as usize];
+                let r = y - lv;
+                value += -0.5 * r * r * inv2 - s.ln() - 0.5 * LN_2PI;
+                partials[start + i] = r * inv2;
+            }
+            value
+        }
+        CompKind::BernoulliPlate { c, n } => {
+            let ys = &consts[c as usize..c as usize + n as usize];
+            let mut value = 0.0;
+            for (i, &y) in ys.iter().enumerate() {
+                let zl = values[parents[start + i] as usize];
+                let (sp, sig) = softplus_sigmoid(zl);
+                value += y * zl - sp;
+                partials[start + i] = y - sig;
+            }
+            value
         }
     }
 }
@@ -92,29 +324,56 @@ impl Default for Tape {
 impl Tape {
     pub fn new() -> Self {
         Tape {
-            ops: Vec::with_capacity(1024),
+            topo: Topology {
+                ops: Vec::with_capacity(1024),
+                arena_parents: Vec::with_capacity(1024),
+                comp_kinds: Vec::with_capacity(64),
+                consts: Vec::with_capacity(256),
+                inputs: Vec::with_capacity(64),
+            },
             values: Vec::with_capacity(1024),
-            arena_parents: Vec::with_capacity(1024),
             arena_partials: Vec::with_capacity(1024),
             adj: Vec::new(),
         }
     }
 
+    /// Clear the tape *and* release its backing storage.  For owners
+    /// that froze the recorded program and will not interpret again
+    /// (release builds of compiled models): the frozen
+    /// [`TapeProgram`] carries its own copies, so keeping the
+    /// recording buffers alive would roughly double steady-state
+    /// memory.  A later replay (e.g. after `set_frozen(false)`)
+    /// simply regrows the buffers.
+    pub fn clear_and_shrink(&mut self) {
+        self.reset();
+        self.topo.ops.shrink_to_fit();
+        self.topo.arena_parents.shrink_to_fit();
+        self.topo.comp_kinds.shrink_to_fit();
+        self.topo.consts.shrink_to_fit();
+        self.topo.inputs.shrink_to_fit();
+        self.values.shrink_to_fit();
+        self.arena_partials.shrink_to_fit();
+        self.adj = Vec::new();
+    }
+
     /// Clear the tape for the next evaluation, keeping every buffer's
     /// capacity (the zero-allocation steady state).
     pub fn reset(&mut self) {
-        self.ops.clear();
+        self.topo.ops.clear();
+        self.topo.arena_parents.clear();
+        self.topo.comp_kinds.clear();
+        self.topo.consts.clear();
+        self.topo.inputs.clear();
         self.values.clear();
-        self.arena_parents.clear();
         self.arena_partials.clear();
     }
 
     pub fn len(&self) -> usize {
-        self.ops.len()
+        self.topo.ops.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.ops.is_empty()
+        self.topo.ops.is_empty()
     }
 
     /// Node-storage capacity watermark (regression guard for tape
@@ -135,15 +394,18 @@ impl Tape {
 
     #[inline]
     fn push(&mut self, op: Op, value: f64) -> Var {
-        let idx = self.ops.len() as u32;
-        self.ops.push(op);
+        let idx = self.topo.ops.len() as u32;
+        self.topo.ops.push(op);
         self.values.push(value);
         Var(idx)
     }
 
-    /// Differentiable input leaf.
+    /// Differentiable input leaf.  Inputs are remembered in record
+    /// order: they are the slots [`TapeProgram::forward`] rebinds.
     pub fn input(&mut self, value: f64) -> Var {
-        self.push(Op::Leaf, value)
+        let idx = self.topo.ops.len() as u32;
+        self.topo.inputs.push(idx);
+        self.push(Op::Input, value)
     }
 
     /// Constant leaf (gradient is computed but conventionally unused).
@@ -197,20 +459,13 @@ impl Tape {
     }
 
     pub fn sigmoid(&mut self, a: Var) -> Var {
-        let x = self.value(a);
-        let v = if x >= 0.0 {
-            1.0 / (1.0 + (-x).exp())
-        } else {
-            let e = x.exp();
-            e / (1.0 + e)
-        };
+        let v = sigmoid_val(self.value(a));
         self.push(Op::Sigmoid(a.0), v)
     }
 
     /// log(1 + e^x), overflow-safe.
     pub fn softplus(&mut self, a: Var) -> Var {
-        let x = self.value(a);
-        let v = if x > 30.0 { x } else { x.exp().ln_1p() };
+        let v = softplus_val(self.value(a));
         self.push(Op::Softplus(a.0), v)
     }
 
@@ -241,15 +496,16 @@ impl Tape {
 
     pub fn offset(&mut self, a: Var, c: f64) -> Var {
         let v = self.value(a) + c;
-        self.push(Op::Offset(a.0), v)
+        self.push(Op::Offset(a.0, c), v)
     }
 
     pub fn sum(&mut self, xs: &[Var]) -> Var {
         let value: f64 = xs.iter().map(|v| self.value(*v)).sum();
-        let start = self.arena_parents.len() as u32;
-        self.arena_parents.extend(xs.iter().map(|v| v.0));
+        let start = self.topo.arena_parents.len() as u32;
+        self.topo.arena_parents.extend(xs.iter().map(|v| v.0));
         self.arena_partials
             .resize(self.arena_partials.len() + xs.len(), 1.0);
+        self.topo.comp_kinds.push(CompKind::Affine);
         self.push(
             Op::Composite {
                 start,
@@ -263,10 +519,28 @@ impl Tape {
     pub fn dot_const(&mut self, w: &[Var], c: &[f64]) -> Var {
         assert_eq!(w.len(), c.len());
         let value: f64 = w.iter().zip(c).map(|(v, x)| self.value(*v) * x).sum();
-        self.composite(w, c, value)
+        let start = self.topo.arena_parents.len() as u32;
+        self.topo.arena_parents.extend(w.iter().map(|v| v.0));
+        self.arena_partials.extend_from_slice(c);
+        self.topo.comp_kinds.push(CompKind::Affine);
+        self.push(
+            Op::Composite {
+                start,
+                len: w.len() as u32,
+            },
+            value,
+        )
     }
 
     /// Numerically-stable logsumexp with exact partials (softmax).
+    ///
+    /// Freezing caveat: if *every* argument is `-inf` at record time
+    /// the node degenerates to a `-inf` constant (no composite is
+    /// recorded), so a frozen program would keep returning `-inf` at
+    /// other inputs — record at a point where the node is live.  The
+    /// frozen kernel mirrors the early return for points where all
+    /// arguments underflow *after* freezing (value `-inf`, zero
+    /// partials, no NaN).
     pub fn logsumexp(&mut self, xs: &[Var]) -> Var {
         let mut m = f64::NEG_INFINITY;
         for v in xs {
@@ -280,12 +554,13 @@ impl Tape {
             sum += (self.value(*v) - m).exp();
         }
         let value = m + sum.ln();
-        let start = self.arena_parents.len() as u32;
+        let start = self.topo.arena_parents.len() as u32;
         for v in xs {
             let p = (self.value(*v) - m).exp() / sum;
-            self.arena_parents.push(v.0);
+            self.topo.arena_parents.push(v.0);
             self.arena_partials.push(p);
         }
+        self.topo.comp_kinds.push(CompKind::LogSumExp);
         self.push(
             Op::Composite {
                 start,
@@ -298,12 +573,16 @@ impl Tape {
     /// Scalar-valued fused primitive: `value` with `partials[i] =
     /// d value / d parents[i]` computed by the caller (the Stan
     /// math-library pattern).  Parents/partials are copied into the
-    /// tape's shared arena.
+    /// tape's shared arena.  **Not freezable**: the tape cannot
+    /// recompute caller-side partials, so [`Tape::freeze`] rejects
+    /// tapes containing these nodes (the hand-fused model potentials
+    /// rebuild their tape per evaluation and never freeze).
     pub fn composite(&mut self, parents: &[Var], partials: &[f64], value: f64) -> Var {
         assert_eq!(parents.len(), partials.len());
-        let start = self.arena_parents.len() as u32;
-        self.arena_parents.extend(parents.iter().map(|v| v.0));
+        let start = self.topo.arena_parents.len() as u32;
+        self.topo.arena_parents.extend(parents.iter().map(|v| v.0));
         self.arena_partials.extend_from_slice(partials);
+        self.topo.comp_kinds.push(CompKind::Opaque);
         self.push(
             Op::Composite {
                 start,
@@ -313,79 +592,349 @@ impl Tape {
         )
     }
 
+    /// Record a replayable fused composite: reserve the arena span,
+    /// stash constants + kernel descriptor, then run the shared kernel
+    /// to fill value and partials.
+    fn fused(&mut self, kind: CompKind, num_parents: usize) -> Var {
+        self.topo.comp_kinds.push(kind);
+        let start = self.topo.arena_parents.len() - num_parents;
+        self.arena_partials
+            .resize(self.topo.arena_parents.len(), 0.0);
+        let Tape {
+            topo,
+            values,
+            arena_partials,
+            ..
+        } = self;
+        let value = scalar_composite_forward(
+            kind,
+            start,
+            num_parents,
+            &topo.arena_parents,
+            &topo.consts,
+            values,
+            arena_partials,
+        );
+        self.push(
+            Op::Composite {
+                start: start as u32,
+                len: num_parents as u32,
+            },
+            value,
+        )
+    }
+
+    /// Fused i.i.d. Normal observation plate: `ys[i] ~ N(loc, scale)`
+    /// with shared latent parameters.  One replayable composite node.
+    pub fn normal_iid_obs(&mut self, loc: Var, scale: Var, ys: &[f64]) -> Var {
+        let kind = CompKind::NormalIid {
+            c: self.topo.consts.len() as u32,
+            n: ys.len() as u32,
+        };
+        self.topo.consts.extend_from_slice(ys);
+        self.topo.arena_parents.push(loc.0);
+        self.topo.arena_parents.push(scale.0);
+        self.fused(kind, 2)
+    }
+
+    /// Fused i.i.d. Bernoulli observation plate with one shared latent
+    /// logit.  One replayable composite node.
+    pub fn bernoulli_logits_iid_obs(&mut self, logits: Var, ys: &[f64]) -> Var {
+        let kind = CompKind::BernoulliIid {
+            c: self.topo.consts.len() as u32,
+            n: ys.len() as u32,
+        };
+        self.topo.consts.extend_from_slice(ys);
+        self.topo.arena_parents.push(logits.0);
+        self.fused(kind, 1)
+    }
+
+    /// Fused Normal observation plate with per-element latent locations
+    /// and a shared latent scale: `ys[i] ~ N(locs[i], scale)`.
+    pub fn normal_plate_obs(&mut self, locs: &[Var], scale: Var, ys: &[f64]) -> Var {
+        assert_eq!(locs.len(), ys.len());
+        let kind = CompKind::NormalPlate {
+            c: self.topo.consts.len() as u32,
+            n: ys.len() as u32,
+        };
+        self.topo.consts.extend_from_slice(ys);
+        self.topo.arena_parents.extend(locs.iter().map(|v| v.0));
+        self.topo.arena_parents.push(scale.0);
+        self.fused(kind, locs.len() + 1)
+    }
+
+    /// Fused Normal observation plate with per-element latent locations
+    /// and *known* per-element scales: `ys[i] ~ N(locs[i], sigmas[i])`.
+    pub fn normal_fixed_plate_obs(&mut self, locs: &[Var], sigmas: &[f64], ys: &[f64]) -> Var {
+        assert_eq!(locs.len(), ys.len());
+        assert_eq!(sigmas.len(), ys.len());
+        let kind = CompKind::NormalFixedPlate {
+            c: self.topo.consts.len() as u32,
+            n: ys.len() as u32,
+        };
+        for (s, y) in sigmas.iter().zip(ys) {
+            self.topo.consts.push(*s);
+            self.topo.consts.push(*y);
+        }
+        self.topo.arena_parents.extend(locs.iter().map(|v| v.0));
+        self.fused(kind, locs.len())
+    }
+
+    /// Fused Bernoulli observation plate with per-element latent logits
+    /// (the GLM fast path: partials `y_i - σ(z_i)`).
+    pub fn bernoulli_logits_plate_obs(&mut self, logits: &[Var], ys: &[f64]) -> Var {
+        assert_eq!(logits.len(), ys.len());
+        let kind = CompKind::BernoulliPlate {
+            c: self.topo.consts.len() as u32,
+            n: ys.len() as u32,
+        };
+        self.topo.consts.extend_from_slice(ys);
+        self.topo.arena_parents.extend(logits.iter().map(|v| v.0));
+        self.fused(kind, logits.len())
+    }
+
     /// Reverse sweep from `output`; returns the adjoint of every node
     /// (index with `Var.0`).  The returned slice borrows the tape's own
     /// scratch buffer — copy out what you need before the next tape
     /// operation.
     pub fn grad(&mut self, output: Var) -> &[f64] {
-        let n = self.ops.len();
+        let n = self.topo.ops.len();
         self.adj.clear();
         self.adj.resize(n, 0.0);
         self.adj[output.0 as usize] = 1.0;
-        let Tape {
-            ops,
-            values,
-            arena_parents,
-            arena_partials,
-            adj,
-        } = self;
-        for i in (0..n).rev() {
-            let a = adj[i];
-            if a == 0.0 {
-                continue;
+        reverse_sweep(
+            &self.topo.ops,
+            &self.values,
+            &self.topo.arena_parents,
+            &self.arena_partials,
+            &mut self.adj,
+        );
+        &self.adj
+    }
+
+    /// Snapshot the recorded program into a [`TapeProgram`] whose
+    /// forward/backward sweeps are bitwise-identical to replaying the
+    /// same program on this tape, with `output` as the differentiated
+    /// node.  Panics if the tape contains a raw (non-replayable)
+    /// [`Tape::composite`] node.
+    pub fn freeze(&self, output: Var) -> TapeProgram {
+        assert!(
+            (output.0 as usize) < self.topo.ops.len(),
+            "freeze: output node out of range"
+        );
+        assert!(
+            !self
+                .topo
+                .comp_kinds
+                .iter()
+                .any(|&k| matches!(k, CompKind::Opaque)),
+            "Tape::freeze: tape contains a raw Tape::composite node whose caller-computed \
+             partials cannot be recomputed; record fused likelihoods through the replayable \
+             builders (normal_iid_obs, normal_plate_obs, ...) instead"
+        );
+        TapeProgram {
+            topo: self.topo.clone(),
+            output: output.0,
+            values: self.values.clone(),
+            partials: self.arena_partials.clone(),
+            adj: vec![0.0; self.topo.ops.len()],
+        }
+    }
+}
+
+/// The reverse sweep over a flat op stream — shared by [`Tape::grad`]
+/// and [`TapeProgram::backward`] so the two are bitwise identical by
+/// construction (including the zero-adjoint skip).
+fn reverse_sweep(
+    ops: &[Op],
+    values: &[f64],
+    arena_parents: &[u32],
+    arena_partials: &[f64],
+    adj: &mut [f64],
+) {
+    for i in (0..ops.len()).rev() {
+        let a = adj[i];
+        if a == 0.0 {
+            continue;
+        }
+        match ops[i] {
+            Op::Leaf | Op::Input => {}
+            Op::Add(x, y) => {
+                adj[x as usize] += a;
+                adj[y as usize] += a;
             }
-            match ops[i] {
-                Op::Leaf => {}
-                Op::Add(x, y) => {
-                    adj[x as usize] += a;
-                    adj[y as usize] += a;
-                }
-                Op::Sub(x, y) => {
-                    adj[x as usize] += a;
-                    adj[y as usize] -= a;
-                }
-                Op::Mul(x, y) => {
-                    let (vx, vy) = (values[x as usize], values[y as usize]);
-                    adj[x as usize] += a * vy;
-                    adj[y as usize] += a * vx;
-                }
-                Op::Div(x, y) => {
-                    let (vx, vy) = (values[x as usize], values[y as usize]);
-                    adj[x as usize] += a / vy;
-                    adj[y as usize] -= a * vx / (vy * vy);
-                }
-                Op::Neg(x) => adj[x as usize] -= a,
-                Op::Exp(x) => adj[x as usize] += a * values[i],
-                Op::Ln(x) => adj[x as usize] += a / values[x as usize],
-                Op::Log1p(x) => adj[x as usize] += a / (1.0 + values[x as usize]),
-                Op::Sqrt(x) => adj[x as usize] += a * 0.5 / values[i],
-                Op::Sigmoid(x) => adj[x as usize] += a * values[i] * (1.0 - values[i]),
-                Op::Softplus(x) => {
-                    let xv = values[x as usize];
-                    let s = if xv >= 0.0 {
-                        1.0 / (1.0 + (-xv).exp())
-                    } else {
-                        let e = xv.exp();
-                        e / (1.0 + e)
-                    };
-                    adj[x as usize] += a * s;
-                }
-                Op::Tanh(x) => adj[x as usize] += a * (1.0 - values[i] * values[i]),
-                Op::Powi(x, n) => {
-                    let xv = values[x as usize];
-                    adj[x as usize] += a * (n as f64) * xv.powi(n - 1);
-                }
-                Op::Scale(x, c) => adj[x as usize] += a * c,
-                Op::Offset(x) => adj[x as usize] += a,
-                Op::Composite { start, len } => {
-                    let (s, l) = (start as usize, len as usize);
-                    for k in s..s + l {
-                        adj[arena_parents[k] as usize] += a * arena_partials[k];
-                    }
+            Op::Sub(x, y) => {
+                adj[x as usize] += a;
+                adj[y as usize] -= a;
+            }
+            Op::Mul(x, y) => {
+                let (vx, vy) = (values[x as usize], values[y as usize]);
+                adj[x as usize] += a * vy;
+                adj[y as usize] += a * vx;
+            }
+            Op::Div(x, y) => {
+                let (vx, vy) = (values[x as usize], values[y as usize]);
+                adj[x as usize] += a / vy;
+                adj[y as usize] -= a * vx / (vy * vy);
+            }
+            Op::Neg(x) => adj[x as usize] -= a,
+            Op::Exp(x) => adj[x as usize] += a * values[i],
+            Op::Ln(x) => adj[x as usize] += a / values[x as usize],
+            Op::Log1p(x) => adj[x as usize] += a / (1.0 + values[x as usize]),
+            Op::Sqrt(x) => adj[x as usize] += a * 0.5 / values[i],
+            Op::Sigmoid(x) => adj[x as usize] += a * values[i] * (1.0 - values[i]),
+            Op::Softplus(x) => {
+                let s = sigmoid_val(values[x as usize]);
+                adj[x as usize] += a * s;
+            }
+            Op::Tanh(x) => adj[x as usize] += a * (1.0 - values[i] * values[i]),
+            Op::Powi(x, n) => {
+                let xv = values[x as usize];
+                adj[x as usize] += a * (n as f64) * xv.powi(n - 1);
+            }
+            Op::Scale(x, c) => adj[x as usize] += a * c,
+            Op::Offset(x, _) => adj[x as usize] += a,
+            Op::Composite { start, len } => {
+                let (s, l) = (start as usize, len as usize);
+                for k in s..s + l {
+                    adj[arena_parents[k] as usize] += a * arena_partials[k];
                 }
             }
         }
-        &self.adj
+    }
+}
+
+/// A frozen tape: the recorded topology plus private per-evaluation
+/// value/partial/adjoint storage.  [`TapeProgram::forward`] rebinds the
+/// input leaves and sweeps the flat instruction stream (recomputing
+/// fused-composite values *and* partials from the stored kernel
+/// descriptors); [`TapeProgram::backward`] runs the reverse sweep.
+/// Both are allocation-free and dispatch-free — no [`Alg`] trait, no
+/// model interpretation — and bitwise-identical to replaying the same
+/// program on a fresh [`Tape`].
+pub struct TapeProgram {
+    topo: Topology,
+    output: u32,
+    values: Vec<f64>,
+    partials: Vec<f64>,
+    adj: Vec<f64>,
+}
+
+impl TapeProgram {
+    /// Number of input slots ([`Tape::input`] calls at record time).
+    pub fn num_inputs(&self) -> usize {
+        self.topo.inputs.len()
+    }
+
+    /// Number of instructions in the frozen stream.
+    pub fn len(&self) -> usize {
+        self.topo.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.topo.ops.is_empty()
+    }
+
+    /// Primal value of the output node after the last [`forward`].
+    ///
+    /// [`forward`]: TapeProgram::forward
+    pub fn output_value(&self) -> f64 {
+        self.values[self.output as usize]
+    }
+
+    /// Rebind the inputs and run the forward sweep; returns the output
+    /// value.  Zero allocations, no interpretation: one pass over the
+    /// flat op stream, with composite nodes re-running their fused
+    /// kernels against the new values.
+    pub fn forward(&mut self, inputs: &[f64]) -> f64 {
+        assert_eq!(
+            inputs.len(),
+            self.topo.inputs.len(),
+            "TapeProgram::forward: input count mismatch"
+        );
+        for (k, &id) in self.topo.inputs.iter().enumerate() {
+            self.values[id as usize] = inputs[k];
+        }
+        let Topology {
+            ops,
+            arena_parents,
+            comp_kinds,
+            consts,
+            ..
+        } = &self.topo;
+        let values = &mut self.values;
+        let partials = &mut self.partials;
+        let mut ci = 0usize;
+        for i in 0..ops.len() {
+            match ops[i] {
+                // constants keep their recorded values, inputs were
+                // rebound above
+                Op::Leaf | Op::Input => {}
+                Op::Add(x, y) => values[i] = values[x as usize] + values[y as usize],
+                Op::Sub(x, y) => values[i] = values[x as usize] - values[y as usize],
+                Op::Mul(x, y) => values[i] = values[x as usize] * values[y as usize],
+                Op::Div(x, y) => values[i] = values[x as usize] / values[y as usize],
+                Op::Neg(x) => values[i] = -values[x as usize],
+                Op::Exp(x) => values[i] = values[x as usize].exp(),
+                Op::Ln(x) => values[i] = values[x as usize].ln(),
+                Op::Log1p(x) => values[i] = values[x as usize].ln_1p(),
+                Op::Sqrt(x) => values[i] = values[x as usize].sqrt(),
+                Op::Sigmoid(x) => values[i] = sigmoid_val(values[x as usize]),
+                Op::Softplus(x) => values[i] = softplus_val(values[x as usize]),
+                Op::Tanh(x) => values[i] = values[x as usize].tanh(),
+                Op::Powi(x, n) => values[i] = values[x as usize].powi(n),
+                Op::Scale(x, c) => values[i] = c * values[x as usize],
+                Op::Offset(x, c) => values[i] = values[x as usize] + c,
+                Op::Composite { start, len } => {
+                    let kind = comp_kinds[ci];
+                    ci += 1;
+                    let v = scalar_composite_forward(
+                        kind,
+                        start as usize,
+                        len as usize,
+                        arena_parents,
+                        consts,
+                        values,
+                        partials,
+                    );
+                    values[i] = v;
+                }
+            }
+        }
+        self.values[self.output as usize]
+    }
+
+    /// Reverse sweep seeded at the output (adjoint 1.0), using the
+    /// values and composite partials left by the last [`forward`].
+    ///
+    /// [`forward`]: TapeProgram::forward
+    pub fn backward(&mut self) {
+        self.adj.iter_mut().for_each(|a| *a = 0.0);
+        self.adj[self.output as usize] = 1.0;
+        reverse_sweep(
+            &self.topo.ops,
+            &self.values,
+            &self.topo.arena_parents,
+            &self.partials,
+            &mut self.adj,
+        );
+    }
+
+    /// Copy the adjoints of the input slots (in record order) into
+    /// `grad` after a [`backward`] sweep.
+    ///
+    /// [`backward`]: TapeProgram::backward
+    pub fn input_adjoints(&self, grad: &mut [f64]) {
+        for (g, &id) in grad.iter_mut().zip(self.topo.inputs.iter()) {
+            *g = self.adj[id as usize];
+        }
+    }
+
+    /// Adjoint of an arbitrary node after [`backward`].
+    ///
+    /// [`backward`]: TapeProgram::backward
+    pub fn adjoint(&self, v: Var) -> f64 {
+        self.adj[v.0 as usize]
     }
 }
 
@@ -483,11 +1032,7 @@ impl Alg for F64Alg {
     fn softplus(&mut self, a: f64) -> f64 {
         // same branch structure as [`Tape::softplus`] so the two value
         // domains agree bitwise
-        if a > 30.0 {
-            a
-        } else {
-            a.exp().ln_1p()
-        }
+        softplus_val(a)
     }
     fn powi(&mut self, a: f64, n: i32) -> f64 {
         a.powi(n)
@@ -744,6 +1289,116 @@ mod tests {
             let _ = t.grad(out);
             assert_eq!(t.node_capacity(), nodes);
             assert_eq!(t.arena_capacity(), arena);
+        }
+    }
+
+    /// A program hitting every primitive op plus every replayable
+    /// composite kind, for the freeze cross-checks.
+    fn build_freezable(t: &mut Tape, x: &[f64]) -> (Vec<Var>, Var) {
+        let vars: Vec<Var> = x.iter().map(|&v| t.input(v)).collect();
+        let (mixed_vars, mixed) = {
+            let lse = t.logsumexp(&vars);
+            let s = t.sum(&vars);
+            let d = t.dot_const(&vars, &[0.5, -1.5, 2.0]);
+            let m = t.mul(lse, s);
+            (vars.clone(), t.add(m, d))
+        };
+        let sp0 = t.softplus(mixed_vars[0]);
+        let sg1 = t.sigmoid(mixed_vars[1]);
+        let th2 = t.tanh(mixed_vars[2]);
+        let scale = t.exp(sp0);
+        let n1 = t.normal_iid_obs(sg1, scale, &[0.4, -0.2, 1.1]);
+        let n2 = t.bernoulli_logits_iid_obs(th2, &[1.0, 0.0, 1.0, 1.0]);
+        let locs = [mixed_vars[0], mixed_vars[1]];
+        let n3 = t.normal_plate_obs(&locs, scale, &[0.9, -0.7]);
+        let n4 = t.normal_fixed_plate_obs(&locs, &[1.5, 0.7], &[0.2, 0.3]);
+        let n5 = t.bernoulli_logits_plate_obs(&locs, &[0.0, 1.0]);
+        let off = t.offset(mixed, -0.125);
+        let s1 = t.add(off, n1);
+        let s2 = t.add(s1, n2);
+        let s3 = t.add(s2, n3);
+        let s4 = t.add(s3, n4);
+        let out = t.add(s4, n5);
+        (mixed_vars, out)
+    }
+
+    /// The frozen program's forward/backward must bitwise-equal a tape
+    /// replay of the same program at *different* input points (values
+    /// and all input adjoints).
+    #[test]
+    fn frozen_program_matches_replay_bitwise() {
+        let x0 = [0.3, -1.2, 0.9];
+        let mut t = Tape::new();
+        let (vars, out) = build_freezable(&mut t, &x0);
+        let mut prog = t.freeze(out);
+        assert_eq!(prog.num_inputs(), 3);
+        assert!(!prog.is_empty());
+
+        let points = [
+            [0.3, -1.2, 0.9],
+            [1.7, 0.2, -0.6],
+            [-2.0, 3.1, 0.01],
+            [31.5, -0.4, 2.2],
+        ];
+        for p in &points {
+            // replay on a fresh tape
+            let mut rt = Tape::new();
+            let (rvars, rout) = build_freezable(&mut rt, p);
+            let rval = rt.value(rout);
+            let radj = rt.grad(rout).to_vec();
+
+            let fval = prog.forward(p);
+            assert_eq!(fval.to_bits(), rval.to_bits(), "value at {p:?}");
+            assert_eq!(prog.output_value().to_bits(), rval.to_bits());
+            prog.backward();
+            let mut g = vec![0.0; 3];
+            prog.input_adjoints(&mut g);
+            for (i, v) in rvars.iter().enumerate() {
+                assert_eq!(
+                    g[i].to_bits(),
+                    radj[v.0 as usize].to_bits(),
+                    "grad[{i}] at {p:?}"
+                );
+                assert_eq!(prog.adjoint(vars[i]).to_bits(), radj[v.0 as usize].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "raw Tape::composite")]
+    fn freeze_rejects_opaque_composites() {
+        let mut t = Tape::new();
+        let x = t.input(1.0);
+        let c = t.composite(&[x], &[2.0], 2.0);
+        let _ = t.freeze(c);
+    }
+
+    /// Fused observation builders must match the per-element generic
+    /// construction to floating-point roundoff (gradients via fd).
+    #[test]
+    fn fused_builders_match_finite_diff() {
+        let ys = [0.4, -0.2, 1.1, 0.6];
+        let f = |t: &mut Tape, v: &[Var]| {
+            let scale = t.exp(v[1]);
+            t.normal_iid_obs(v[0], scale, &ys)
+        };
+        let x = [0.3, -0.4];
+        let (_, g) = grad_of(&x, f);
+        let fd = finite_diff(
+            &x,
+            |z| {
+                let (loc, scale) = (z[0], z[1].exp());
+                ys.iter()
+                    .map(|y| {
+                        let r = (y - loc) / scale;
+                        -0.5 * r * r - scale.ln() - 0.5 * LN_2PI
+                    })
+                    .sum()
+            },
+            1e-6,
+        );
+        for i in 0..2 {
+            assert!((g[i] - fd[i]).abs() < 1e-5, "grad[{i}] {} vs {}", g[i], fd[i]);
         }
     }
 }

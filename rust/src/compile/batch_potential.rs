@@ -13,30 +13,43 @@
 //! branch structure, so lane `k` of [`BatchedCompiledModel`] is
 //! **bitwise identical** to a scalar [`crate::compile::CompiledModel`]
 //! evaluation at lane `k`'s coordinates (pinned by this module's tests
-//! and `rust/tests/chain_methods.rs`).  What changes is the cost
-//! profile: the op-dispatch/interpretation overhead of the tape replay
-//! is paid once for all K chains, and the per-op arithmetic runs over
-//! contiguous lane arrays the autovectorizer turns into SIMD.
+//! and `rust/tests/chain_methods.rs`).
 //!
-//! All scratch (tape, input list, term list, composite parent/partial/
-//! value buffers, pooled vectors) lives on the [`BatchedCompiledModel`]
-//! and is reused, so steady-state batched evaluations — and therefore
-//! steady-state vectorized NUTS draws — perform **zero heap
-//! allocations** (`rust/tests/alloc_free.rs`).
+//! # Record once, replay many
+//!
+//! Like the scalar [`crate::compile::CompiledModel`], the batched model
+//! records its (static-structure) program on the **first** evaluation
+//! and freezes the multi-lane tape into a
+//! [`crate::autodiff::BatchTapeProgram`]; every later evaluation is a
+//! lane-minor forward/backward sweep over the frozen flat op stream —
+//! no model interpretation, no site matching, no node pushing, with
+//! contiguous per-lane inner loops the autovectorizer turns into SIMD.
+//! Frozen results are bitwise identical to the interpreter path (same
+//! kernel functions), and debug builds re-replay every
+//! [`crate::compile::potential::REPLAY_CHECK_PERIOD`]-th evaluation to
+//! assert it.
+//!
+//! All scratch (tape, frozen program, input list, term list, pooled
+//! vectors) lives on the [`BatchedCompiledModel`] and is reused, so
+//! steady-state batched evaluations — and therefore steady-state
+//! vectorized NUTS draws — perform **zero heap allocations**
+//! (`rust/tests/alloc_free.rs`).
 
 use anyhow::Result;
 
-use crate::autodiff::{BatchTape, Var};
+use crate::autodiff::{BatchTape, BatchTapeProgram, Var};
 use crate::compile::layout::{SiteLayout, SiteTransform};
+#[cfg(debug_assertions)]
+use crate::compile::potential::REPLAY_CHECK_PERIOD;
 use crate::compile::{pool_take, DistV, EffModel, ProbCtx};
 use crate::effects::site_key;
 use crate::mcmc::BatchPotential;
-use crate::ppl::special::{softplus_sigmoid, LN_2PI};
 
 /// A compiled effect-handler program evaluated over `lanes` chains at
-/// once: caches the site layout and every evaluation buffer, and
-/// implements [`BatchPotential`] by replaying the program on a
-/// multi-lane [`BatchTape`].  Build one with [`compile_batched`].
+/// once: caches the site layout and every evaluation buffer, records
+/// the program on the multi-lane [`BatchTape`] once, and serves all
+/// later [`BatchPotential`] calls from the frozen
+/// [`BatchTapeProgram`].  Build one with [`compile_batched`].
 pub struct BatchedCompiledModel<M: EffModel> {
     model: M,
     layout: SiteLayout,
@@ -46,18 +59,17 @@ pub struct BatchedCompiledModel<M: EffModel> {
     z_vars: Vec<Var>,
     /// accumulated log-density terms (priors, likelihoods, Jacobians)
     terms: Vec<Var>,
-    /// composite parent scratch
-    parents: Vec<Var>,
-    /// composite per-lane partial scratch (parent-slot-major lane-minor)
-    partials: Vec<f64>,
-    /// per-lane composite value accumulator
-    vals: Vec<f64>,
-    /// per-lane accumulator scratch (residual sums)
-    acc_a: Vec<f64>,
-    /// per-lane hoisted-constant scratch (e.g. 1/sigma^2)
-    acc_b: Vec<f64>,
     /// pooled scratch vectors handed to the model via `vec_take`
     pool: Vec<Vec<Var>>,
+    /// the frozen program (recorded on the first evaluation)
+    program: Option<BatchTapeProgram>,
+    /// false = always interpret (benchmark / cross-check mode)
+    frozen_enabled: bool,
+    /// scratch for the debug re-replay audit
+    #[cfg(debug_assertions)]
+    check_u: Vec<f64>,
+    #[cfg(debug_assertions)]
+    check_grad: Vec<f64>,
     evals: u64,
 }
 
@@ -71,12 +83,13 @@ impl<M: EffModel> BatchedCompiledModel<M> {
             tape: BatchTape::new(lanes),
             z_vars: Vec::with_capacity(dim),
             terms: Vec::new(),
-            parents: Vec::new(),
-            partials: Vec::new(),
-            vals: vec![0.0; lanes],
-            acc_a: vec![0.0; lanes],
-            acc_b: vec![0.0; lanes],
             pool: Vec::new(),
+            program: None,
+            frozen_enabled: true,
+            #[cfg(debug_assertions)]
+            check_u: vec![0.0; lanes],
+            #[cfg(debug_assertions)]
+            check_grad: vec![0.0; dim * lanes],
             evals: 0,
         }
     }
@@ -90,19 +103,25 @@ impl<M: EffModel> BatchedCompiledModel<M> {
     pub fn model(&self) -> &M {
         &self.model
     }
-}
 
-impl<M: EffModel> BatchPotential for BatchedCompiledModel<M> {
-    fn dim(&self) -> usize {
-        self.layout.dim
+    /// Enable/disable the frozen-program fast path (enabled by
+    /// default); see [`crate::compile::CompiledModel::set_frozen`].
+    pub fn set_frozen(&mut self, enabled: bool) {
+        self.frozen_enabled = enabled;
+        if !enabled {
+            self.program = None;
+        }
     }
 
-    fn lanes(&self) -> usize {
-        self.lanes
+    /// Whether a frozen program has been recorded and is serving
+    /// evaluations.
+    pub fn is_frozen(&self) -> bool {
+        self.program.is_some()
     }
 
-    fn value_and_grad_batch(&mut self, z: &[f64], u: &mut [f64], grad: &mut [f64]) {
-        self.evals += 1;
+    /// One full interpreter replay on the multi-lane tape.  Returns the
+    /// output node (for freezing).
+    fn replay(&mut self, z: &[f64], u: &mut [f64], grad: &mut [f64]) -> Var {
         let BatchedCompiledModel {
             model,
             layout,
@@ -110,11 +129,6 @@ impl<M: EffModel> BatchPotential for BatchedCompiledModel<M> {
             tape,
             z_vars,
             terms,
-            parents,
-            partials,
-            vals,
-            acc_a,
-            acc_b,
             pool,
             ..
         } = self;
@@ -136,11 +150,6 @@ impl<M: EffModel> BatchPotential for BatchedCompiledModel<M> {
                 z_vars: z_vars.as_slice(),
                 cursor: 0,
                 terms: &mut *terms,
-                parents: &mut *parents,
-                partials: &mut *partials,
-                vals: &mut *vals,
-                acc_a: &mut *acc_a,
-                acc_b: &mut *acc_b,
                 pool: &mut *pool,
             };
             model.run(&mut ctx);
@@ -158,6 +167,71 @@ impl<M: EffModel> BatchPotential for BatchedCompiledModel<M> {
             let s = v.0 as usize * l;
             grad[i * l..(i + 1) * l].copy_from_slice(&adj[s..s + l]);
         }
+        un
+    }
+
+    /// Debug-only audit: re-replay the interpreter path and assert it
+    /// agrees bitwise with the frozen result just served.
+    #[cfg(debug_assertions)]
+    fn audit_frozen(&mut self, z: &[f64], u: &[f64], grad: &[f64]) {
+        let mut cu = std::mem::take(&mut self.check_u);
+        let mut cg = std::mem::take(&mut self.check_grad);
+        let _ = self.replay(z, &mut cu, &mut cg);
+        for (k, (a, b)) in u.iter().zip(cu.iter()).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "frozen batched program diverged from replay at u[{k}]: {a} vs {b} — \
+                 the model's structure or data changed after compilation"
+            );
+        }
+        for (i, (a, b)) in grad.iter().zip(cg.iter()).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "frozen batched program diverged from replay at grad[{i}]: {a} vs {b} — \
+                 the model's structure or data changed after compilation"
+            );
+        }
+        self.check_u = cu;
+        self.check_grad = cg;
+    }
+}
+
+impl<M: EffModel> BatchPotential for BatchedCompiledModel<M> {
+    fn dim(&self) -> usize {
+        self.layout.dim
+    }
+
+    fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    fn value_and_grad_batch(&mut self, z: &[f64], u: &mut [f64], grad: &mut [f64]) {
+        self.evals += 1;
+        if !self.frozen_enabled {
+            let _ = self.replay(z, u, grad);
+            return;
+        }
+        if self.program.is_none() {
+            let out = self.replay(z, u, grad);
+            self.program = Some(self.tape.freeze(out));
+            // release builds never interpret again (no periodic audit),
+            // so drop the recording buffers — the frozen program holds
+            // its own copies; debug builds keep them warm for the audit
+            #[cfg(not(debug_assertions))]
+            self.tape.clear_and_shrink();
+            return;
+        }
+        let prog = self.program.as_mut().expect("frozen program present");
+        prog.forward(z);
+        u.copy_from_slice(prog.output_values());
+        prog.backward();
+        prog.input_adjoints(grad);
+        #[cfg(debug_assertions)]
+        {
+            if self.evals % REPLAY_CHECK_PERIOD == 0 {
+                self.audit_frozen(z, u, grad);
+            }
+        }
     }
 
     fn num_evals(&self) -> u64 {
@@ -167,18 +241,15 @@ impl<M: EffModel> BatchPotential for BatchedCompiledModel<M> {
 
 /// The batched evaluation interpreter: value domain = multi-lane tape
 /// [`Var`]s.  Site matching is the same cursor-over-visit-order scheme
-/// as the scalar `TapeCtx` — no string lookups, no allocation.
+/// as the scalar `TapeCtx` — no string lookups, no allocation.  Fused
+/// observation sites are recorded through the batched tape's
+/// *replayable* composite builders so the finished tape can be frozen.
 struct BatchTapeCtx<'a> {
     tape: &'a mut BatchTape,
     layout: &'a SiteLayout,
     z_vars: &'a [Var],
     cursor: usize,
     terms: &'a mut Vec<Var>,
-    parents: &'a mut Vec<Var>,
-    partials: &'a mut Vec<f64>,
-    vals: &'a mut Vec<f64>,
-    acc_a: &'a mut Vec<f64>,
-    acc_b: &'a mut Vec<f64>,
     pool: &'a mut Vec<Vec<Var>>,
 }
 
@@ -277,60 +348,13 @@ impl ProbCtx for BatchTapeCtx<'_> {
 
     fn observe_iid(&mut self, name: &str, d: DistV<Var>, ys: &[f64]) {
         let _ = self.next_site(name, true, ys.len());
-        let l = self.tape.lanes();
-        let n = ys.len() as f64;
         match d {
             DistV::Normal { loc, scale } => {
-                // fused composite, lane-wise: value_k + partials wrt
-                // (loc_k, scale_k) — same accumulation order per lane
-                // as the scalar TapeCtx
-                self.vals.clear();
-                self.vals.resize(l, 0.0);
-                self.partials.clear();
-                self.partials.resize(2 * l, 0.0);
-                for k in 0..l {
-                    let lv = self.tape.value_at(loc, k);
-                    let sv = self.tape.value_at(scale, k);
-                    let inv2 = 1.0 / (sv * sv);
-                    let mut value = 0.0;
-                    let mut sr = 0.0;
-                    let mut sr2 = 0.0;
-                    for &y in ys {
-                        let r = y - lv;
-                        value += -0.5 * r * r * inv2;
-                        sr += r;
-                        sr2 += r * r;
-                    }
-                    value += -n * sv.ln() - 0.5 * n * LN_2PI;
-                    self.vals[k] = value;
-                    self.partials[k] = sr * inv2;
-                    self.partials[l + k] = sr2 / (sv * sv * sv) - n / sv;
-                }
-                self.parents.clear();
-                self.parents.push(loc);
-                self.parents.push(scale);
-                let node =
-                    self.tape
-                        .composite_lanes(&self.parents[..], &self.partials[..], &self.vals[..]);
+                let node = self.tape.normal_iid_obs(loc, scale, ys);
                 self.terms.push(node);
             }
             DistV::BernoulliLogits { logits } => {
-                let sum_y: f64 = ys.iter().sum();
-                self.vals.clear();
-                self.vals.resize(l, 0.0);
-                self.partials.clear();
-                self.partials.resize(l, 0.0);
-                for k in 0..l {
-                    let zl = self.tape.value_at(logits, k);
-                    let (sp, sig) = softplus_sigmoid(zl);
-                    self.vals[k] = sum_y * zl - n * sp;
-                    self.partials[k] = sum_y - n * sig;
-                }
-                self.parents.clear();
-                self.parents.push(logits);
-                let node =
-                    self.tape
-                        .composite_lanes(&self.parents[..], &self.partials[..], &self.vals[..]);
+                let node = self.tape.bernoulli_logits_iid_obs(logits, ys);
                 self.terms.push(node);
             }
             _ => {
@@ -352,44 +376,7 @@ impl ProbCtx for BatchTapeCtx<'_> {
             "site '{name}': locations/observations length mismatch"
         );
         let _ = self.next_site(name, true, ys.len());
-        let l = self.tape.lanes();
-        let n = ys.len() as f64;
-        self.parents.clear();
-        self.partials.clear();
-        self.partials.resize((ys.len() + 1) * l, 0.0);
-        self.vals.clear();
-        self.vals.resize(l, 0.0);
-        // per-lane running sum of squared residuals ...
-        self.acc_a.clear();
-        self.acc_a.resize(l, 0.0);
-        // ... and per-lane 1/sigma^2, hoisted out of the element loop
-        // (same value the scalar TapeCtx computes once per evaluation)
-        self.acc_b.clear();
-        self.acc_b.resize(l, 0.0);
-        for k in 0..l {
-            let sv = self.tape.value_at(scale, k);
-            self.acc_b[k] = 1.0 / (sv * sv);
-        }
-        for (i, &y) in ys.iter().enumerate() {
-            self.parents.push(locs[i]);
-            for k in 0..l {
-                let inv2 = self.acc_b[k];
-                let lv = self.tape.value_at(locs[i], k);
-                let r = y - lv;
-                self.vals[k] += -0.5 * r * r * inv2;
-                self.acc_a[k] += r * r;
-                self.partials[i * l + k] = r * inv2;
-            }
-        }
-        self.parents.push(scale);
-        for k in 0..l {
-            let sv = self.tape.value_at(scale, k);
-            self.vals[k] += -n * sv.ln() - 0.5 * n * LN_2PI;
-            self.partials[ys.len() * l + k] = self.acc_a[k] / (sv * sv * sv) - n / sv;
-        }
-        let node = self
-            .tape
-            .composite_lanes(&self.parents[..], &self.partials[..], &self.vals[..]);
+        let node = self.tape.normal_plate_obs(locs, scale, ys);
         self.terms.push(node);
     }
 
@@ -405,26 +392,7 @@ impl ProbCtx for BatchTapeCtx<'_> {
             "site '{name}': scales/observations length mismatch"
         );
         let _ = self.next_site(name, true, ys.len());
-        let l = self.tape.lanes();
-        self.parents.clear();
-        self.partials.clear();
-        self.partials.resize(ys.len() * l, 0.0);
-        self.vals.clear();
-        self.vals.resize(l, 0.0);
-        for (i, &y) in ys.iter().enumerate() {
-            let s = sigmas[i];
-            let inv2 = 1.0 / (s * s);
-            self.parents.push(locs[i]);
-            for k in 0..l {
-                let lv = self.tape.value_at(locs[i], k);
-                let r = y - lv;
-                self.vals[k] += -0.5 * r * r * inv2 - s.ln() - 0.5 * LN_2PI;
-                self.partials[i * l + k] = r * inv2;
-            }
-        }
-        let node = self
-            .tape
-            .composite_lanes(&self.parents[..], &self.partials[..], &self.vals[..]);
+        let node = self.tape.normal_fixed_plate_obs(locs, sigmas, ys);
         self.terms.push(node);
     }
 
@@ -435,24 +403,7 @@ impl ProbCtx for BatchTapeCtx<'_> {
             "site '{name}': logits/observations length mismatch"
         );
         let _ = self.next_site(name, true, ys.len());
-        let l = self.tape.lanes();
-        self.parents.clear();
-        self.partials.clear();
-        self.partials.resize(ys.len() * l, 0.0);
-        self.vals.clear();
-        self.vals.resize(l, 0.0);
-        for (i, &y) in ys.iter().enumerate() {
-            self.parents.push(logits[i]);
-            for k in 0..l {
-                let zl = self.tape.value_at(logits[i], k);
-                let (sp, sig) = softplus_sigmoid(zl);
-                self.vals[k] += y * zl - sp;
-                self.partials[i * l + k] = y - sig;
-            }
-        }
-        let node = self
-            .tape
-            .composite_lanes(&self.parents[..], &self.partials[..], &self.vals[..]);
+        let node = self.tape.bernoulli_logits_plate_obs(logits, ys);
         self.terms.push(node);
     }
 
@@ -577,6 +528,35 @@ mod tests {
             1,
             5,
         );
+    }
+
+    /// The frozen batched fast path and the interpreter path must agree
+    /// bitwise at arbitrary points (per lane, values and gradients).
+    #[test]
+    fn frozen_batched_path_matches_interpreter_path_bitwise() {
+        let lanes = 4;
+        let mut frozen = compile_batched(EightSchools::classic(), 0, lanes).unwrap();
+        let mut replay = compile_batched(EightSchools::classic(), 0, lanes).unwrap();
+        replay.set_frozen(false);
+        let dim = frozen.dim();
+        let mut rng = Rng::new(11);
+        let mut uf = vec![0.0; lanes];
+        let mut ur = vec![0.0; lanes];
+        let mut gf = vec![0.0; dim * lanes];
+        let mut gr = vec![0.0; dim * lanes];
+        for _ in 0..10 {
+            let z: Vec<f64> = (0..dim * lanes).map(|_| 0.6 * rng.normal()).collect();
+            frozen.value_and_grad_batch(&z, &mut uf, &mut gf);
+            replay.value_and_grad_batch(&z, &mut ur, &mut gr);
+            for k in 0..lanes {
+                assert_eq!(uf[k].to_bits(), ur[k].to_bits(), "lane {k} potential");
+            }
+            for i in 0..dim * lanes {
+                assert_eq!(gf[i].to_bits(), gr[i].to_bits(), "grad[{i}]");
+            }
+        }
+        assert!(frozen.is_frozen());
+        assert!(!replay.is_frozen());
     }
 
     #[test]

@@ -2,37 +2,54 @@
 //! reusable autodiff [`Tape`], turning it into a
 //! [`crate::mcmc::Potential`] the NUTS engines can sample.
 //!
-//! Per evaluation of `U(z) = -log p(z, data)`:
+//! # Record once, replay many
 //!
-//! 1. reset the tape (capacity kept) and create one input [`Var`] per
-//!    flat unconstrained coordinate;
-//! 2. replay the program under the tape interpreter (`TapeCtx`): each
-//!    latent site reads its
-//!    span, applies its [`SiteTransform`] bijection (log-|det J|
-//!    recorded as an extra log-density term), and contributes its prior
-//!    log-prob; vectorized observation sites become *fused composite
-//!    nodes* with precomputed partials (the Stan math-library pattern)
-//!    instead of per-scalar tape nodes;
-//! 3. sum the terms, negate, and run the reverse sweep — the gradient
-//!    of the joint falls out of the tape.
+//! Compiled models have **static structure** (the site sequence cannot
+//! depend on sampled values — violated structure panics), so the tape
+//! recorded on the *first* evaluation is the tape of *every*
+//! evaluation.  [`CompiledModel`] therefore records once and freezes:
 //!
-//! All scratch (tape, input list, term list, composite parent/partial
-//! buffers, the model's pooled vectors) lives on the [`CompiledModel`]
-//! and is reused, so steady-state evaluations — and therefore
-//! steady-state NUTS draws — perform **zero heap allocations**
+//! 1. **First evaluation** — replay the program under the tape
+//!    interpreter (`TapeCtx`): each latent site reads its span, applies
+//!    its [`SiteTransform`] bijection (log-|det J| recorded as an extra
+//!    log-density term) and contributes its prior log-prob; vectorized
+//!    observation sites become *fused composite nodes* recorded through
+//!    the tape's replayable builders (the Stan math-library pattern).
+//!    The finished tape is then frozen into a
+//!    [`crate::autodiff::TapeProgram`].
+//! 2. **Every later evaluation** — `forward`/`backward` sweeps over the
+//!    frozen flat op stream: no `EffModel::run`, no site matching, no
+//!    `Alg` dispatch, no node pushing — just arithmetic.  The frozen
+//!    kernels are the *same functions* the record path ran, so frozen
+//!    results are **bitwise identical** to a fresh replay
+//!    (`rust/tests/frozen_tape.rs`), and in debug builds every
+//!    [`REPLAY_CHECK_PERIOD`]-th evaluation re-replays the interpreter
+//!    path and asserts bitwise agreement (which also re-checks the
+//!    static-structure contract).
+//!
+//! All scratch (tape, frozen program, input list, term list, the
+//! model's pooled vectors) lives on the [`CompiledModel`] and is
+//! reused, so steady-state evaluations — and therefore steady-state
+//! NUTS draws — perform **zero heap allocations**
 //! (`rust/tests/alloc_free.rs` enforces this with a counting
 //! allocator).
 
-use crate::autodiff::{Tape, Var};
+use crate::autodiff::{Tape, TapeProgram, Var};
 use crate::compile::layout::{SiteLayout, SiteTransform};
 use crate::compile::{pool_take, DistV, EffModel, ProbCtx};
 use crate::effects::site_key;
 use crate::mcmc::Potential;
-use crate::ppl::special::{softplus_sigmoid, LN_2PI};
+
+/// In debug builds, every N-th frozen evaluation re-runs the
+/// interpreter path and asserts the frozen program still agrees
+/// bitwise (a cheap continuous audit of the record-once assumption).
+pub const REPLAY_CHECK_PERIOD: u64 = 64;
 
 /// A compiled effect-handler program: caches the site layout and every
-/// evaluation buffer, and implements [`Potential`] by replaying the
-/// program on the tape.  Build one with [`crate::compile::compile`].
+/// evaluation buffer, and implements [`Potential`] by recording the
+/// program on the tape once, then serving all later evaluations from
+/// the frozen [`TapeProgram`].  Build one with
+/// [`crate::compile::compile`].
 pub struct CompiledModel<M: EffModel> {
     model: M,
     layout: SiteLayout,
@@ -41,12 +58,16 @@ pub struct CompiledModel<M: EffModel> {
     z_vars: Vec<Var>,
     /// accumulated log-density terms (priors, likelihoods, Jacobians)
     terms: Vec<Var>,
-    /// composite parent scratch
-    parents: Vec<Var>,
-    /// composite partial scratch
-    partials: Vec<f64>,
     /// pooled scratch vectors handed to the model via `vec_take`
     pool: Vec<Vec<Var>>,
+    /// the frozen program (recorded on the first evaluation)
+    program: Option<TapeProgram>,
+    /// false = always interpret (the pre-freeze behaviour, kept for
+    /// benchmarking and the bitwise cross-checks)
+    frozen_enabled: bool,
+    /// gradient scratch for the debug re-replay audit
+    #[cfg(debug_assertions)]
+    check_grad: Vec<f64>,
     evals: u64,
 }
 
@@ -59,9 +80,11 @@ impl<M: EffModel> CompiledModel<M> {
             tape: Tape::new(),
             z_vars: Vec::with_capacity(dim),
             terms: Vec::new(),
-            parents: Vec::new(),
-            partials: Vec::new(),
             pool: Vec::new(),
+            program: None,
+            frozen_enabled: true,
+            #[cfg(debug_assertions)]
+            check_grad: vec![0.0; dim],
             evals: 0,
         }
     }
@@ -75,23 +98,37 @@ impl<M: EffModel> CompiledModel<M> {
     pub fn model(&self) -> &M {
         &self.model
     }
-}
 
-impl<M: EffModel> Potential for CompiledModel<M> {
-    fn dim(&self) -> usize {
-        self.layout.dim
+    /// Enable/disable the frozen-program fast path (enabled by
+    /// default).  Disabling drops any recorded program and re-runs the
+    /// tape interpreter on every evaluation — the pre-freeze cost
+    /// model, kept so `fugue bench` can measure
+    /// `frozen_speedup_vs_replay` and the property tests can compare
+    /// the two paths bitwise.
+    pub fn set_frozen(&mut self, enabled: bool) {
+        self.frozen_enabled = enabled;
+        if !enabled {
+            self.program = None;
+        }
     }
 
-    fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
-        self.evals += 1;
+    /// Whether a frozen program has been recorded and is serving
+    /// evaluations.
+    pub fn is_frozen(&self) -> bool {
+        self.program.is_some()
+    }
+
+    /// One full interpreter replay: reset the tape, rebuild the graph
+    /// by running the model through `TapeCtx`, sweep, and write the
+    /// gradient.  Returns the potential value and the output node (for
+    /// freezing).
+    fn replay(&mut self, z: &[f64], grad: &mut [f64]) -> (f64, Var) {
         let CompiledModel {
             model,
             layout,
             tape,
             z_vars,
             terms,
-            parents,
-            partials,
             pool,
             ..
         } = self;
@@ -109,8 +146,6 @@ impl<M: EffModel> Potential for CompiledModel<M> {
                 z_vars: z_vars.as_slice(),
                 cursor: 0,
                 terms: &mut *terms,
-                parents: &mut *parents,
-                partials: &mut *partials,
                 pool: &mut *pool,
             };
             model.run(&mut ctx);
@@ -127,7 +162,64 @@ impl<M: EffModel> Potential for CompiledModel<M> {
         for (g, v) in grad.iter_mut().zip(z_vars.iter()) {
             *g = adj[v.0 as usize];
         }
-        uval
+        (uval, u)
+    }
+
+    /// Debug-only audit: re-replay the interpreter path and assert it
+    /// agrees bitwise with the frozen result just served.
+    #[cfg(debug_assertions)]
+    fn audit_frozen(&mut self, z: &[f64], u: f64, grad: &[f64]) {
+        let mut cg = std::mem::take(&mut self.check_grad);
+        let (u2, _) = self.replay(z, &mut cg);
+        assert!(
+            u.to_bits() == u2.to_bits(),
+            "frozen program diverged from replay: U {u} vs {u2} — \
+             the model's structure or data changed after compilation"
+        );
+        for (i, (a, b)) in grad.iter().zip(cg.iter()).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "frozen program diverged from replay at grad[{i}]: {a} vs {b} — \
+                 the model's structure or data changed after compilation"
+            );
+        }
+        self.check_grad = cg;
+    }
+}
+
+impl<M: EffModel> Potential for CompiledModel<M> {
+    fn dim(&self) -> usize {
+        self.layout.dim
+    }
+
+    fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+        self.evals += 1;
+        if !self.frozen_enabled {
+            return self.replay(z, grad).0;
+        }
+        if self.program.is_none() {
+            // record once: the first evaluation both answers the query
+            // and leaves the complete graph behind to freeze
+            let (u, out) = self.replay(z, grad);
+            self.program = Some(self.tape.freeze(out));
+            // release builds never interpret again (no periodic audit),
+            // so drop the recording buffers — the frozen program holds
+            // its own copies; debug builds keep them warm for the audit
+            #[cfg(not(debug_assertions))]
+            self.tape.clear_and_shrink();
+            return u;
+        }
+        let prog = self.program.as_mut().expect("frozen program present");
+        let u = prog.forward(z);
+        prog.backward();
+        prog.input_adjoints(grad);
+        #[cfg(debug_assertions)]
+        {
+            if self.evals % REPLAY_CHECK_PERIOD == 0 {
+                self.audit_frozen(z, u, grad);
+            }
+        }
+        u
     }
 
     fn num_evals(&self) -> u64 {
@@ -138,15 +230,15 @@ impl<M: EffModel> Potential for CompiledModel<M> {
 /// The evaluation interpreter: value domain = tape [`Var`]s.  Matches
 /// program sites to the compiled layout with a cursor over the recorded
 /// visit order plus a pre-hashed key check — no string lookups, no
-/// allocation.
+/// allocation.  Fused observation sites are recorded through the
+/// tape's *replayable* composite builders so the finished tape can be
+/// frozen.
 struct TapeCtx<'a> {
     tape: &'a mut Tape,
     layout: &'a SiteLayout,
     z_vars: &'a [Var],
     cursor: usize,
     terms: &'a mut Vec<Var>,
-    parents: &'a mut Vec<Var>,
-    partials: &'a mut Vec<f64>,
     pool: &'a mut Vec<Vec<Var>>,
 }
 
@@ -244,46 +336,13 @@ impl ProbCtx for TapeCtx<'_> {
 
     fn observe_iid(&mut self, name: &str, d: DistV<Var>, ys: &[f64]) {
         let _ = self.next_site(name, true, ys.len());
-        let n = ys.len() as f64;
         match d {
             DistV::Normal { loc, scale } => {
-                // fused composite: value + partials wrt (loc, scale)
-                let lv = self.tape.value(loc);
-                let sv = self.tape.value(scale);
-                let inv2 = 1.0 / (sv * sv);
-                let mut value = 0.0;
-                let mut sr = 0.0;
-                let mut sr2 = 0.0;
-                for &y in ys {
-                    let r = y - lv;
-                    value += -0.5 * r * r * inv2;
-                    sr += r;
-                    sr2 += r * r;
-                }
-                value += -n * sv.ln() - 0.5 * n * LN_2PI;
-                self.parents.clear();
-                self.parents.push(loc);
-                self.parents.push(scale);
-                self.partials.clear();
-                self.partials.push(sr * inv2);
-                self.partials.push(sr2 / (sv * sv * sv) - n / sv);
-                let node = self
-                    .tape
-                    .composite(&self.parents[..], &self.partials[..], value);
+                let node = self.tape.normal_iid_obs(loc, scale, ys);
                 self.terms.push(node);
             }
             DistV::BernoulliLogits { logits } => {
-                let zl = self.tape.value(logits);
-                let (sp, sig) = softplus_sigmoid(zl);
-                let sum_y: f64 = ys.iter().sum();
-                let value = sum_y * zl - n * sp;
-                self.parents.clear();
-                self.parents.push(logits);
-                self.partials.clear();
-                self.partials.push(sum_y - n * sig);
-                let node = self
-                    .tape
-                    .composite(&self.parents[..], &self.partials[..], value);
+                let node = self.tape.bernoulli_logits_iid_obs(logits, ys);
                 self.terms.push(node);
             }
             _ => {
@@ -304,27 +363,7 @@ impl ProbCtx for TapeCtx<'_> {
             "site '{name}': locations/observations length mismatch"
         );
         let _ = self.next_site(name, true, ys.len());
-        let n = ys.len() as f64;
-        let sv = self.tape.value(scale);
-        let inv2 = 1.0 / (sv * sv);
-        self.parents.clear();
-        self.partials.clear();
-        let mut value = 0.0;
-        let mut sr2 = 0.0;
-        for (i, &y) in ys.iter().enumerate() {
-            let lv = self.tape.value(locs[i]);
-            let r = y - lv;
-            value += -0.5 * r * r * inv2;
-            sr2 += r * r;
-            self.parents.push(locs[i]);
-            self.partials.push(r * inv2);
-        }
-        value += -n * sv.ln() - 0.5 * n * LN_2PI;
-        self.parents.push(scale);
-        self.partials.push(sr2 / (sv * sv * sv) - n / sv);
-        let node = self
-            .tape
-            .composite(&self.parents[..], &self.partials[..], value);
+        let node = self.tape.normal_plate_obs(locs, scale, ys);
         self.terms.push(node);
     }
 
@@ -340,21 +379,7 @@ impl ProbCtx for TapeCtx<'_> {
             "site '{name}': scales/observations length mismatch"
         );
         let _ = self.next_site(name, true, ys.len());
-        self.parents.clear();
-        self.partials.clear();
-        let mut value = 0.0;
-        for (i, &y) in ys.iter().enumerate() {
-            let lv = self.tape.value(locs[i]);
-            let s = sigmas[i];
-            let inv2 = 1.0 / (s * s);
-            let r = y - lv;
-            value += -0.5 * r * r * inv2 - s.ln() - 0.5 * LN_2PI;
-            self.parents.push(locs[i]);
-            self.partials.push(r * inv2);
-        }
-        let node = self
-            .tape
-            .composite(&self.parents[..], &self.partials[..], value);
+        let node = self.tape.normal_fixed_plate_obs(locs, sigmas, ys);
         self.terms.push(node);
     }
 
@@ -365,19 +390,7 @@ impl ProbCtx for TapeCtx<'_> {
             "site '{name}': logits/observations length mismatch"
         );
         let _ = self.next_site(name, true, ys.len());
-        self.parents.clear();
-        self.partials.clear();
-        let mut value = 0.0;
-        for (i, &y) in ys.iter().enumerate() {
-            let zl = self.tape.value(logits[i]);
-            let (sp, sig) = softplus_sigmoid(zl);
-            value += y * zl - sp;
-            self.parents.push(logits[i]);
-            self.partials.push(y - sig);
-        }
-        let node = self
-            .tape
-            .composite(&self.parents[..], &self.partials[..], value);
+        let node = self.tape.bernoulli_logits_plate_obs(logits, ys);
         self.terms.push(node);
     }
 
@@ -399,6 +412,7 @@ mod tests {
     use super::*;
     use crate::autodiff::finite_diff;
     use crate::compile::compile;
+    use crate::ppl::special::LN_2PI;
 
     /// mu ~ N(0,1); tau ~ HalfCauchy(2); p ~ Uniform(-1, 2);
     /// y_i ~ N(mu * p, tau)  — exercises all three transforms and the
@@ -496,6 +510,34 @@ mod tests {
         let u1 = pot.value_and_grad(&z, &mut g1);
         assert_eq!(u0, u1);
         assert_eq!(g0, g1);
+    }
+
+    /// The frozen fast path (default) and the interpreter path
+    /// (`set_frozen(false)`) must agree bitwise, value and gradient, at
+    /// arbitrary points — the record-once contract.
+    #[test]
+    fn frozen_path_matches_interpreter_path_bitwise() {
+        let mut frozen = compile(mixed(), 0).unwrap();
+        let mut replay = compile(mixed(), 0).unwrap();
+        replay.set_frozen(false);
+        let mut gf = vec![0.0; 3];
+        let mut gr = vec![0.0; 3];
+        let points = [
+            [0.3, -0.7, 0.4],
+            [-1.5, 2.2, 0.05],
+            [4.0, -3.0, 1.7],
+            [0.0, 0.0, 0.0],
+        ];
+        for z in &points {
+            let uf = frozen.value_and_grad(z, &mut gf);
+            let ur = replay.value_and_grad(z, &mut gr);
+            assert_eq!(uf.to_bits(), ur.to_bits(), "value at {z:?}");
+            for i in 0..3 {
+                assert_eq!(gf[i].to_bits(), gr[i].to_bits(), "grad[{i}] at {z:?}");
+            }
+        }
+        assert!(frozen.is_frozen());
+        assert!(!replay.is_frozen());
     }
 
     #[test]

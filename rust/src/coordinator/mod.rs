@@ -6,6 +6,19 @@
 //! takes step size and inverse mass matrix as *inputs*, so all
 //! adaptation happens host-side between dispatches without recompiling
 //! (DESIGN.md §2).
+//!
+//! When the potential is a compiled effect-handler program, all three
+//! chain methods ([`ChainMethod`]: sequential, parallel, vectorized)
+//! run on **frozen tape programs**: the model is interpreted once on
+//! the first gradient evaluation and every later leapfrog is a flat
+//! forward/backward sweep with no handler/`Alg` interpretation (see
+//! [`crate::compile::CompiledModel`] /
+//! [`crate::compile::BatchedCompiledModel`] and the "Record once,
+//! replay many" section of ARCHITECTURE.md).  Freezing is invisible to
+//! this layer — frozen and interpreted gradients are bitwise equal —
+//! so warmup adaptation, chain scheduling and the cross-method bitwise
+//! guarantees are unchanged; `fugue bench` reports the payoff as
+//! `frozen_speedup_vs_replay`.
 
 pub mod chain;
 pub mod parallel;

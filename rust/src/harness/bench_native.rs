@@ -25,6 +25,11 @@
 //!    chain count, recording `vectorized_speedup_vs_parallel` /
 //!    `vectorized_speedup_vs_sequential` and asserting the three
 //!    methods' chains are bitwise equal.
+//! 4. **frozen-program speedups** per compiled zoo model
+//!    (eight-schools / horseshoe / normal-mean / logistic): the
+//!    record-once / replay-many fast path vs the tape-interpreter
+//!    replay, recorded as `frozen_vs_replay` rows plus a
+//!    `frozen_speedup_vs_replay` field on the logistic model.
 //!
 //! Results are written as machine-readable JSON (`BENCH_native.json` at
 //! the repo root by default) so the perf trajectory is diffable across
@@ -35,7 +40,8 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::autodiff::{Tape, Var};
-use crate::compile::{compile, zoo::LogisticModel};
+use crate::compile::zoo::{EightSchools, Horseshoe, LogisticModel, NormalMean};
+use crate::compile::{compile, EffModel};
 use crate::config::Settings;
 use crate::coordinator::{
     run_chain, run_compiled_chains_method, ChainMethod, ChainResult, NativeSampler, NutsOptions,
@@ -217,6 +223,53 @@ where
 
 fn jnum(v: f64) -> Json {
     Json::Num(v)
+}
+
+/// ms/leapfrog of a compiled zoo model with the frozen fast path on or
+/// off (`frozen = false` re-runs the tape interpreter per gradient —
+/// the pre-freeze cost model).
+fn time_compiled_frozen<M: EffModel + Clone>(
+    model: &M,
+    frozen: bool,
+    eps: f64,
+    draws: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut pot = compile(model.clone(), seed)?;
+    pot.set_frozen(frozen);
+    let mut sampler = NativeSampler::new(pot, TreeAlgorithm::Iterative, TIMING_DEPTH);
+    let (ms, _) = time_fixed_eps(&mut sampler, eps, draws, seed)?;
+    Ok(ms)
+}
+
+/// Time one zoo model frozen-vs-replay, append the report line, and
+/// record the JSON row.  Returns the speedup.
+#[allow(clippy::too_many_arguments)]
+fn bench_frozen_vs_replay<M: EffModel + Clone>(
+    name: &str,
+    model: &M,
+    eps: f64,
+    draws: usize,
+    seed: u64,
+    report: &mut String,
+    rows: &mut BTreeMap<String, Json>,
+) -> Result<f64> {
+    let frozen_ms = time_compiled_frozen(model, true, eps, draws, seed)?;
+    let replay_ms = time_compiled_frozen(model, false, eps, draws, seed)?;
+    let speedup = replay_ms / frozen_ms.max(1e-12);
+    report.push_str(&format!(
+        "  {name}: frozen {frozen_ms:.5} ms/leapfrog | replay {replay_ms:.5} ms/leapfrog \
+         -> {speedup:.2}x\n"
+    ));
+    rows.insert(
+        name.to_string(),
+        jobj(vec![
+            ("frozen_ms_per_leapfrog", jnum(frozen_ms)),
+            ("replay_ms_per_leapfrog", jnum(replay_ms)),
+            ("frozen_speedup_vs_replay", jnum(speedup)),
+        ]),
+    );
+    Ok(speedup)
 }
 
 fn jobj(fields: Vec<(&str, Json)>) -> Json {
@@ -579,12 +632,87 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
         models.insert("skim".to_string(), bench.json);
     }
 
+    // --- frozen tape programs: record once, replay many ---
+    // Per zoo model: ms/leapfrog with the frozen fast path (the
+    // default) vs the interpreter-replay path (`set_frozen(false)`,
+    // the pre-freeze cost model).  The logistic speedup is also
+    // mirrored into models.logistic as `frozen_speedup_vs_replay` —
+    // the acceptance datapoint for the record-once refactor.
+    let mut frozen_rows: BTreeMap<String, Json> = BTreeMap::new();
+    {
+        report.push_str("== frozen tape programs (record once, replay many) ==\n");
+        let draws = timing_draws;
+        bench_frozen_vs_replay(
+            "eight_schools",
+            &EightSchools::classic(),
+            1e-2,
+            draws,
+            settings.seed,
+            &mut report,
+            &mut frozen_rows,
+        )?;
+        bench_frozen_vs_replay(
+            "horseshoe",
+            &Horseshoe::synthetic(settings.seed, 60, 8, 2),
+            5e-3,
+            draws,
+            settings.seed,
+            &mut report,
+            &mut frozen_rows,
+        )?;
+        let mut nm_rng = Rng::new(settings.seed ^ 0xF0F0);
+        let nm = NormalMean {
+            y: (0..64).map(|_| 0.4 + nm_rng.normal()).collect(),
+            sigma: 1.2,
+        };
+        bench_frozen_vs_replay(
+            "normal_mean",
+            &nm,
+            2e-2,
+            draws,
+            settings.seed,
+            &mut report,
+            &mut frozen_rows,
+        )?;
+        let (fn_, fd_) = if settings.quick { (800, 16) } else { (2000, 16) };
+        let dset = data::make_covtype_like(settings.seed ^ 0xF42, fn_, fd_);
+        let lm = LogisticModel {
+            x: dset.x,
+            y: dset.y,
+            n: fn_,
+            d: fd_,
+        };
+        let logi_speedup = bench_frozen_vs_replay(
+            "logistic",
+            &lm,
+            1e-3,
+            draws,
+            settings.seed,
+            &mut report,
+            &mut frozen_rows,
+        )?;
+        if let Some(Json::Obj(map)) = models.get_mut("logistic") {
+            map.insert("frozen_speedup_vs_replay".to_string(), jnum(logi_speedup));
+        }
+        // the acceptance bar is > 1.0; timing ratios are too noisy for
+        // a hard abort, so flag regressions loudly in the report and
+        // let the JSON artifact carry the number
+        if logi_speedup <= 1.0 {
+            report.push_str(&format!(
+                "  WARNING: logistic frozen_speedup_vs_replay = {logi_speedup:.2} <= 1.0 — \
+                 the frozen fast path regressed below the interpreter replay\n"
+            ));
+        }
+        report.push('\n');
+    }
+
     let root = Json::Obj(
         [
             ("schema".to_string(), Json::Str("fugue-bench-native/v1".to_string())),
             ("seed".to_string(), jnum(settings.seed as f64)),
             ("quick".to_string(), Json::Bool(settings.quick)),
             ("max_chains".to_string(), jnum(max_chains as f64)),
+            ("frozen_vs_replay".to_string(), Json::Obj(frozen_rows)),
             ("models".to_string(), Json::Obj(models)),
         ]
         .into_iter()

@@ -136,10 +136,10 @@ fn cmd_run(engine: &Engine, args: &Args, settings: &Settings) -> Result<()> {
                     self.0.value_and_grad(z, grad)
                 }
             }
-            Box::new(fugue::mcmc::hmc::HmcSampler {
-                potential: BoxedPotential(workload.native_potential()?),
-                num_steps: steps as u32,
-            })
+            Box::new(fugue::mcmc::hmc::HmcSampler::new(
+                BoxedPotential(workload.native_potential()?),
+                steps as u32,
+            ))
         } else {
             builders::build_sampler(
                 engine,

@@ -5,41 +5,82 @@
 //! HMC with a poorly-chosen `num_steps` wastes leapfrogs or mixes
 //! slowly, NUTS finds the turnaround automatically (see
 //! `rust/tests/sampling_stats.rs::nuts_beats_mistuned_hmc_per_leapfrog`).
+//!
+//! Like the NUTS engine, the hot path follows the workspace/scratch
+//! idiom of [`crate::mcmc::nuts_iterative::draw_in_workspace`]: all
+//! per-draw state lives in a caller-held [`HmcWorkspace`], integration
+//! runs through [`crate::mcmc::leapfrog_inplace`], and a steady-state
+//! [`draw_in_workspace`] performs **zero heap allocations**
+//! (`rust/tests/alloc_free.rs`).
 
-use crate::mcmc::{kinetic, leapfrog, PhaseState, Potential, Transition, MAX_DELTA_ENERGY};
+use crate::mcmc::{
+    kinetic, leapfrog_inplace, DrawStats, PhaseState, Potential, Transition, MAX_DELTA_ENERGY,
+};
 use crate::rng::Rng;
 
-/// One Metropolis-adjusted HMC transition with `num_steps` leapfrogs.
-pub fn draw<P: Potential + ?Sized>(
+/// Reusable per-draw storage for the static-trajectory HMC sampler:
+/// one phase-space state (position, momentum, cached potential and
+/// gradient) plus the proposal buffer the accepted/rejected position is
+/// left in.
+pub struct HmcWorkspace {
+    dim: usize,
+    /// integration state
+    state: PhaseState,
+    /// draw-level proposal (the result of [`draw_in_workspace`])
+    z_prop: Vec<f64>,
+}
+
+impl HmcWorkspace {
+    pub fn new(dim: usize) -> HmcWorkspace {
+        HmcWorkspace {
+            dim,
+            state: PhaseState::zeros(dim),
+            z_prop: vec![0.0; dim],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The proposal left behind by the last [`draw_in_workspace`] call.
+    pub fn proposal(&self) -> &[f64] {
+        &self.z_prop
+    }
+}
+
+/// One Metropolis-adjusted HMC transition with `num_steps` leapfrogs
+/// and **zero heap allocations**: every buffer comes from `ws`, the
+/// integrator is the in-place velocity Verlet, and the proposal is
+/// left in `ws.z_prop` (read it via [`HmcWorkspace::proposal`]).
+/// Bitwise-identical to the allocating [`draw`] wrapper (same
+/// arithmetic, same RNG consumption order).
+pub fn draw_in_workspace<P: Potential + ?Sized>(
     pot: &mut P,
     rng: &mut Rng,
+    ws: &mut HmcWorkspace,
     z0: &[f64],
     step_size: f64,
     inv_mass: &[f64],
     num_steps: u32,
-) -> Transition {
+) -> DrawStats {
     let dim = z0.len();
-    let mut grad = vec![0.0; dim];
-    let potential_0 = pot.value_and_grad(z0, &mut grad);
-    let mut r0 = vec![0.0; dim];
-    for i in 0..dim {
-        r0[i] = rng.normal() / inv_mass[i].sqrt();
-    }
-    let init = PhaseState {
-        z: z0.to_vec(),
-        r: r0,
-        potential: potential_0,
-        grad,
-    };
-    let energy_0 = init.energy(inv_mass);
+    assert_eq!(dim, ws.dim, "workspace dimension mismatch");
 
-    let mut state = init;
+    ws.state.z.copy_from_slice(z0);
+    ws.state.potential = pot.value_and_grad(z0, &mut ws.state.grad);
+    for i in 0..dim {
+        ws.state.r[i] = rng.normal() / inv_mass[i].sqrt();
+    }
+    let potential_0 = ws.state.potential;
+    let energy_0 = ws.state.energy(inv_mass);
+
     let mut diverging = false;
     let mut steps_taken = 0u32;
     for _ in 0..num_steps {
-        state = leapfrog(pot, &state, step_size, inv_mass);
+        leapfrog_inplace(pot, &mut ws.state, step_size, inv_mass);
         steps_taken += 1;
-        let mut energy = state.potential + kinetic(&state.r, inv_mass);
+        let mut energy = ws.state.potential + kinetic(&ws.state.r, inv_mass);
         if energy.is_nan() {
             energy = f64::INFINITY;
         }
@@ -48,23 +89,78 @@ pub fn draw<P: Potential + ?Sized>(
             break;
         }
     }
-    let energy_new = state.potential + kinetic(&state.r, inv_mass);
+    let energy_new = ws.state.potential + kinetic(&ws.state.r, inv_mass);
     let accept_prob = (energy_0 - energy_new).exp().min(1.0);
     let accepted = !diverging && rng.uniform() < accept_prob;
-    Transition {
-        z: if accepted { state.z } else { z0.to_vec() },
+    if accepted {
+        ws.z_prop.copy_from_slice(&ws.state.z);
+    } else {
+        ws.z_prop.copy_from_slice(z0);
+    }
+    DrawStats {
         accept_prob: if diverging { 0.0 } else { accept_prob },
         num_leapfrog: steps_taken,
-        potential: if accepted { state.potential } else { potential_0 },
+        potential: if accepted { ws.state.potential } else { potential_0 },
         diverging,
         depth: 0,
     }
 }
 
-/// [`crate::coordinator::Sampler`]-compatible wrapper.
+/// [`draw_in_workspace`] packaged as a [`Transition`] (one proposal-
+/// vector allocation per draw — everything else reuses `ws`).
+pub fn draw_with<P: Potential + ?Sized>(
+    pot: &mut P,
+    rng: &mut Rng,
+    ws: &mut HmcWorkspace,
+    z0: &[f64],
+    step_size: f64,
+    inv_mass: &[f64],
+    num_steps: u32,
+) -> Transition {
+    let stats = draw_in_workspace(pot, rng, ws, z0, step_size, inv_mass, num_steps);
+    Transition {
+        z: ws.z_prop.clone(),
+        accept_prob: stats.accept_prob,
+        num_leapfrog: stats.num_leapfrog,
+        potential: stats.potential,
+        diverging: stats.diverging,
+        depth: stats.depth,
+    }
+}
+
+/// One HMC transition with a throwaway workspace (compatibility entry
+/// point; persistent callers should hold an [`HmcWorkspace`] and use
+/// [`draw_with`] / [`draw_in_workspace`]).
+pub fn draw<P: Potential + ?Sized>(
+    pot: &mut P,
+    rng: &mut Rng,
+    z0: &[f64],
+    step_size: f64,
+    inv_mass: &[f64],
+    num_steps: u32,
+) -> Transition {
+    let mut ws = HmcWorkspace::new(z0.len());
+    draw_with(pot, rng, &mut ws, z0, step_size, inv_mass, num_steps)
+}
+
+/// [`crate::coordinator::Sampler`]-compatible wrapper holding a
+/// persistent [`HmcWorkspace`], so its per-draw hot path is
+/// allocation-free (one proposal-vector allocation per draw to fill
+/// the returned [`Transition`]).
 pub struct HmcSampler<P: Potential> {
     pub potential: P,
     pub num_steps: u32,
+    workspace: Option<HmcWorkspace>,
+}
+
+impl<P: Potential> HmcSampler<P> {
+    pub fn new(potential: P, num_steps: u32) -> HmcSampler<P> {
+        HmcSampler {
+            potential,
+            num_steps,
+            workspace: None,
+        }
+    }
 }
 
 impl<P: Potential> crate::coordinator::sampler::Sampler for HmcSampler<P> {
@@ -79,9 +175,19 @@ impl<P: Potential> crate::coordinator::sampler::Sampler for HmcSampler<P> {
         step_size: f64,
         inv_mass: &[f64],
     ) -> anyhow::Result<Transition> {
-        Ok(draw(
+        let dim = self.potential.dim();
+        let stale = match &self.workspace {
+            Some(w) => w.dim() != dim,
+            None => true,
+        };
+        if stale {
+            self.workspace = Some(HmcWorkspace::new(dim));
+        }
+        let ws = self.workspace.as_mut().expect("workspace just ensured");
+        Ok(draw_with(
             &mut self.potential,
             rng,
+            ws,
             z,
             step_size,
             inv_mass,
@@ -151,5 +257,29 @@ mod tests {
         let mut rng = Rng::new(1);
         let tr = draw(&mut pot, &mut rng, &[0.5, 0.5], 1e-4, &[1.0, 1.0], 5);
         assert!(tr.accept_prob > 0.999);
+    }
+
+    /// Workspace reuse must not change anything: a fresh workspace per
+    /// draw and one long-lived workspace produce bitwise-equal chains.
+    #[test]
+    fn hmc_workspace_reuse_is_bitwise_deterministic() {
+        let mut rng_fresh = Rng::new(7);
+        let mut rng_reuse = Rng::new(7);
+        let mut pot_a = Gauss;
+        let mut pot_b = Gauss;
+        let mut ws = HmcWorkspace::new(2);
+        let inv_mass = [0.9, 1.3];
+        let mut z_fresh = vec![0.3, -0.8];
+        let mut z_reuse = z_fresh.clone();
+        for _ in 0..25 {
+            let a = draw(&mut pot_a, &mut rng_fresh, &z_fresh, 0.2, &inv_mass, 6);
+            let b = draw_with(&mut pot_b, &mut rng_reuse, &mut ws, &z_reuse, 0.2, &inv_mass, 6);
+            assert_eq!(a.z, b.z);
+            assert_eq!(a.num_leapfrog, b.num_leapfrog);
+            assert_eq!(a.accept_prob, b.accept_prob);
+            assert_eq!(a.potential, b.potential);
+            z_fresh = a.z;
+            z_reuse = b.z;
+        }
     }
 }

@@ -23,6 +23,7 @@ pub mod welford;
 
 pub use batch_nuts::BatchTreeWorkspace;
 pub use dual_avg::DualAverage;
+pub use hmc::HmcWorkspace;
 pub use welford::Welford;
 
 /// A differentiable potential energy U(z) = -log p(z, data).

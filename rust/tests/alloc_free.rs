@@ -17,6 +17,7 @@ use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel};
 use fugue::compile::{compile, compile_batched};
 use fugue::data;
 use fugue::mcmc::batch_nuts::{draw_batch, BatchTreeWorkspace};
+use fugue::mcmc::hmc::{draw_in_workspace as hmc_draw_in_workspace, HmcWorkspace};
 use fugue::mcmc::nuts_iterative::{draw_in_workspace, TreeWorkspace};
 use fugue::mcmc::{BatchPotential, DrawStats, Potential};
 use fugue::models::skim::SkimHypers;
@@ -186,8 +187,10 @@ fn vectorized_batched_draws_are_allocation_free() {
 
 /// Compiler-generated potentials must hit the same bar as the
 /// hand-fused ones: after warmup, a full compiled-model NUTS draw
-/// performs zero heap allocations (tape, term list, composite scratch
-/// and the model's pooled vectors all reuse their capacity).
+/// performs zero heap allocations.  Since PR 4 the steady state of a
+/// compiled model is the **frozen tape program** (recorded on the
+/// first evaluation), so these cases prove the frozen path's scalar
+/// draws are allocation-free on eight-schools, logistic and horseshoe.
 #[test]
 fn compiled_model_draws_are_allocation_free() {
     let es = compile(EightSchools::classic(), 0).unwrap();
@@ -208,4 +211,171 @@ fn compiled_model_draws_are_allocation_free() {
 
     let hs = compile(Horseshoe::synthetic(2, 60, 6, 2), 0).unwrap();
     assert_draws_alloc_free("compiled horseshoe", hs, 5e-3, 6);
+}
+
+/// Frozen-path steady state at the *potential* level: after the first
+/// (recording) evaluation, scalar `value_and_grad` must be a pure
+/// forward/backward sweep over the frozen program — zero allocations —
+/// including the debug builds' periodic re-replay audit.
+fn assert_frozen_evals_alloc_free<P: Potential>(name: &str, mut pot: P, seed: u64) {
+    let dim = pot.dim();
+    let mut rng = Rng::new(seed);
+    let mut z = vec![0.0; dim];
+    let mut g = vec![0.0; dim];
+    // warm-up: the first eval records + freezes, a few more settle
+    // every buffer's capacity
+    for _ in 0..3 {
+        for v in z.iter_mut() {
+            *v = 0.3 * rng.normal();
+        }
+        let _ = pot.value_and_grad(&z, &mut g);
+    }
+    let before = allocation_count();
+    for _ in 0..200 {
+        for v in z.iter_mut() {
+            *v = 0.3 * rng.normal();
+        }
+        let _ = pot.value_and_grad(&z, &mut g);
+    }
+    let after = allocation_count();
+    assert_eq!(
+        after - before,
+        0,
+        "{name}: frozen-path evaluations performed {} heap allocations",
+        after - before
+    );
+}
+
+/// Batched twin of [`assert_frozen_evals_alloc_free`].
+fn assert_frozen_batch_evals_alloc_free<BP: BatchPotential>(name: &str, mut pot: BP, seed: u64) {
+    let dim = pot.dim();
+    let lanes = pot.lanes();
+    let mut rng = Rng::new(seed);
+    let mut z = vec![0.0; dim * lanes];
+    let mut u = vec![0.0; lanes];
+    let mut g = vec![0.0; dim * lanes];
+    for _ in 0..3 {
+        for v in z.iter_mut() {
+            *v = 0.3 * rng.normal();
+        }
+        pot.value_and_grad_batch(&z, &mut u, &mut g);
+    }
+    let before = allocation_count();
+    for _ in 0..200 {
+        for v in z.iter_mut() {
+            *v = 0.3 * rng.normal();
+        }
+        pot.value_and_grad_batch(&z, &mut u, &mut g);
+    }
+    let after = allocation_count();
+    assert_eq!(
+        after - before,
+        0,
+        "{name}: frozen-path batched evaluations performed {} heap allocations",
+        after - before
+    );
+}
+
+/// The frozen program serves every post-recording gradient without
+/// touching the heap, scalar and batched, across the zoo models the
+/// chain engines sample.
+#[test]
+fn frozen_program_evaluations_are_allocation_free() {
+    assert_frozen_evals_alloc_free(
+        "frozen eight-schools",
+        compile(EightSchools::classic(), 0).unwrap(),
+        21,
+    );
+    let l = data::make_covtype_like(6, 200, 8);
+    assert_frozen_evals_alloc_free(
+        "frozen logistic",
+        compile(
+            LogisticModel {
+                x: l.x.clone(),
+                y: l.y.clone(),
+                n: 200,
+                d: 8,
+            },
+            0,
+        )
+        .unwrap(),
+        22,
+    );
+    assert_frozen_evals_alloc_free(
+        "frozen horseshoe",
+        compile(Horseshoe::synthetic(7, 60, 6, 2), 0).unwrap(),
+        23,
+    );
+
+    assert_frozen_batch_evals_alloc_free(
+        "frozen batched eight-schools x4",
+        compile_batched(EightSchools::classic(), 0, 4).unwrap(),
+        24,
+    );
+    assert_frozen_batch_evals_alloc_free(
+        "frozen batched logistic x8",
+        compile_batched(
+            LogisticModel {
+                x: l.x,
+                y: l.y,
+                n: 200,
+                d: 8,
+            },
+            0,
+            8,
+        )
+        .unwrap(),
+        25,
+    );
+    assert_frozen_batch_evals_alloc_free(
+        "frozen batched horseshoe x3",
+        compile_batched(Horseshoe::synthetic(7, 60, 6, 2), 0, 3).unwrap(),
+        26,
+    );
+}
+
+/// Static-trajectory HMC now follows the same workspace idiom as the
+/// NUTS hot path: a steady-state `hmc::draw_in_workspace` over a warm
+/// potential performs zero heap allocations.
+fn assert_hmc_draws_alloc_free<P: Potential>(name: &str, mut pot: P, eps: f64, seed: u64) {
+    let dim = pot.dim();
+    let mut ws = HmcWorkspace::new(dim);
+    let mut rng = Rng::new(seed);
+    let mut z = vec![0.05; dim];
+    let inv_mass = vec![1.0; dim];
+
+    for _ in 0..5 {
+        let _ = hmc_draw_in_workspace(&mut pot, &mut rng, &mut ws, &z, eps, &inv_mass, 8);
+        z.copy_from_slice(ws.proposal());
+    }
+
+    let before = allocation_count();
+    for _ in 0..15 {
+        let _ = hmc_draw_in_workspace(&mut pot, &mut rng, &mut ws, &z, eps, &inv_mass, 8);
+        z.copy_from_slice(ws.proposal());
+    }
+    let after = allocation_count();
+    assert_eq!(
+        after - before,
+        0,
+        "{name}: steady-state HMC draws performed {} heap allocations",
+        after - before
+    );
+}
+
+#[test]
+fn hmc_draws_are_allocation_free() {
+    let l = data::make_covtype_like(3, 300, 8);
+    assert_hmc_draws_alloc_free(
+        "hmc logistic (hand-fused)",
+        LogisticNative::new(l.x, l.y, 300, 8),
+        1e-2,
+        31,
+    );
+    assert_hmc_draws_alloc_free(
+        "hmc eight-schools (compiled, frozen)",
+        compile(EightSchools::classic(), 0).unwrap(),
+        1e-2,
+        32,
+    );
 }

@@ -1,0 +1,131 @@
+//! Frozen-program property suite: for every `compile/zoo.rs` model,
+//! the record-once / replay-many fast path must be **bitwise
+//! indistinguishable** from the tape-interpreter path — potential
+//! values and *all* input adjoints — at 100 random points, for the
+//! scalar compiler and for the batched compiler at K ∈ {1, 4} lanes.
+//!
+//! Comparisons use `f64::to_bits` so non-finite excursions (overflowed
+//! scales far in the tails) must match bit-for-bit too, not just
+//! compare-equal.
+
+use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel, NormalMean};
+use fugue::compile::{compile, compile_batched, EffModel};
+use fugue::data;
+use fugue::mcmc::{BatchPotential, Potential};
+use fugue::rng::Rng;
+
+const POINTS: usize = 100;
+
+/// Scalar: a frozen-path model and a replay-only model must agree
+/// bitwise at every point.
+fn check_scalar<M: EffModel + Clone>(model: M, seed: u64) {
+    let mut frozen = compile(model.clone(), 0).unwrap();
+    let mut replay = compile(model, 0).unwrap();
+    replay.set_frozen(false);
+    let dim = frozen.dim();
+    let mut rng = Rng::new(seed);
+    let mut gf = vec![0.0; dim];
+    let mut gr = vec![0.0; dim];
+    let mut z = vec![0.0; dim];
+    for it in 0..POINTS {
+        for v in z.iter_mut() {
+            *v = 0.8 * rng.normal();
+        }
+        let uf = frozen.value_and_grad(&z, &mut gf);
+        let ur = replay.value_and_grad(&z, &mut gr);
+        assert_eq!(uf.to_bits(), ur.to_bits(), "point {it}: U {uf} vs {ur}");
+        for i in 0..dim {
+            assert_eq!(
+                gf[i].to_bits(),
+                gr[i].to_bits(),
+                "point {it}: grad[{i}] {} vs {}",
+                gf[i],
+                gr[i]
+            );
+        }
+    }
+    assert!(frozen.is_frozen(), "frozen model never recorded a program");
+}
+
+/// Batched: per lane count, frozen vs replay-only batched models must
+/// agree bitwise (every lane's value and every input adjoint).
+fn check_batched<M: EffModel + Clone>(model: M, lanes: usize, seed: u64) {
+    let mut frozen = compile_batched(model.clone(), 0, lanes).unwrap();
+    let mut replay = compile_batched(model, 0, lanes).unwrap();
+    replay.set_frozen(false);
+    let dim = frozen.dim();
+    let mut rng = Rng::new(seed);
+    let mut uf = vec![0.0; lanes];
+    let mut ur = vec![0.0; lanes];
+    let mut gf = vec![0.0; dim * lanes];
+    let mut gr = vec![0.0; dim * lanes];
+    let mut z = vec![0.0; dim * lanes];
+    for it in 0..POINTS {
+        for v in z.iter_mut() {
+            *v = 0.8 * rng.normal();
+        }
+        frozen.value_and_grad_batch(&z, &mut uf, &mut gf);
+        replay.value_and_grad_batch(&z, &mut ur, &mut gr);
+        for k in 0..lanes {
+            assert_eq!(
+                uf[k].to_bits(),
+                ur[k].to_bits(),
+                "point {it}: lane {k} U {} vs {}",
+                uf[k],
+                ur[k]
+            );
+        }
+        for i in 0..dim * lanes {
+            assert_eq!(
+                gf[i].to_bits(),
+                gr[i].to_bits(),
+                "point {it}: grad[{i}] {} vs {}",
+                gf[i],
+                gr[i]
+            );
+        }
+    }
+    assert!(frozen.is_frozen(), "frozen model never recorded a program");
+}
+
+fn check_model<M: EffModel + Clone>(model: M, seed: u64) {
+    check_scalar(model.clone(), seed);
+    for (j, &lanes) in [1usize, 4].iter().enumerate() {
+        check_batched(model.clone(), lanes, seed ^ (0xB0 + j as u64));
+    }
+}
+
+#[test]
+fn eight_schools_frozen_equals_replay() {
+    check_model(EightSchools::classic(), 101);
+}
+
+#[test]
+fn horseshoe_frozen_equals_replay() {
+    check_model(Horseshoe::synthetic(4, 25, 4, 2), 102);
+}
+
+#[test]
+fn logistic_frozen_equals_replay() {
+    let d = data::make_covtype_like(5, 50, 4);
+    check_model(
+        LogisticModel {
+            x: d.x,
+            y: d.y,
+            n: 50,
+            d: 4,
+        },
+        103,
+    );
+}
+
+#[test]
+fn normal_mean_frozen_equals_replay() {
+    check_model(
+        NormalMean {
+            y: vec![0.4, -0.9, 1.3, 0.7],
+            sigma: 1.5,
+        },
+        104,
+    );
+}

@@ -134,10 +134,7 @@ fn nuts_beats_mistuned_hmc_per_leapfrog() {
         ..Default::default()
     };
     // mistuned HMC: 64 leapfrogs per draw, way past the turnaround
-    let mut hmc = HmcSampler {
-        potential: DiagGauss { var: var.clone() },
-        num_steps: 64,
-    };
+    let mut hmc = HmcSampler::new(DiagGauss { var: var.clone() }, 64);
     let hmc_res = run_chain(&mut hmc, &[1.0, 1.0, 0.1], &opts).unwrap();
     let mut nuts = NativeSampler::new(DiagGauss { var }, TreeAlgorithm::Iterative, 10);
     let nuts_res = run_chain(&mut nuts, &[1.0, 1.0, 0.1], &opts).unwrap();
