@@ -1,0 +1,74 @@
+//! Native SVI end-to-end, fully offline (no artifacts, no pjrt):
+//! reparameterized ADVI on the eight-schools model, with the 8 ELBO
+//! particles evaluated as one fused multi-lane sweep of the frozen tape
+//! per step, followed by posterior-predictive replay through the
+//! `Substitute` handler.
+//!
+//!     cargo run --release --example svi_native
+
+use anyhow::Result;
+use fugue::compile::zoo::EightSchools;
+use fugue::compile::SiteLayout;
+use fugue::coordinator::run_svi_native;
+use fugue::diagnostics::summary::{render_table, summarize};
+use fugue::rng::Rng;
+use fugue::svi::{posterior_predictive_draws, Convergence, StepSchedule, SviOptions};
+
+fn main() -> Result<()> {
+    let model = EightSchools::classic();
+    let steps = 2000;
+    let opts = SviOptions {
+        num_steps: steps,
+        num_particles: 8,
+        lr: 0.05,
+        seed: 42,
+        schedule: StepSchedule::ExponentialDecay {
+            rate: 0.05,
+            over: steps,
+        },
+        convergence: Some(Convergence {
+            window: 200,
+            rel_tol: 1e-5,
+        }),
+        ..Default::default()
+    };
+    let (layout, fit) = run_svi_native(&model, &opts)?;
+
+    let chunk = (fit.steps / 8).max(1);
+    for (i, c) in fit.elbo_trace.chunks(chunk).enumerate() {
+        let mean = c.iter().sum::<f64>() / c.len() as f64;
+        println!(
+            "steps {:>4}-{:>4}: mean ELBO {:>10.3}",
+            i * chunk,
+            i * chunk + c.len(),
+            mean
+        );
+    }
+    println!(
+        "\n{} steps in {:.2}s{} | final ELBO {:.3}",
+        fit.steps,
+        fit.secs,
+        if fit.converged { " (converged)" } else { "" },
+        fit.final_elbo(100)
+    );
+
+    // variational posterior, constrained space, labeled by site
+    let mut rng = Rng::new(7);
+    let draws = fit.guide.posterior_draws(&layout, &mut rng, 2000);
+    let rows = summarize(&[draws], layout.dim, &layout.param_spans());
+    println!("{}", render_table(&rows));
+
+    // posterior predictive for each school via Substitute-handler replay
+    let pred = posterior_predictive_draws(&model, &layout, &fit.guide, 11, 500);
+    println!("posterior predictive (500 replicates):");
+    for (site, vals) in &pred {
+        let m = vals.iter().sum::<f64>() / vals.len() as f64;
+        let v = vals.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / vals.len() as f64;
+        println!("  {site:<6} mean {m:>8.2}  sd {:>7.2}", v.sqrt());
+    }
+
+    // sanity: the same layout the NUTS engines use
+    let check = SiteLayout::trace(&model, 0)?;
+    assert_eq!(check.dim, layout.dim);
+    Ok(())
+}

@@ -32,6 +32,9 @@ const VALUE_FLAGS: &[&str] = &[
     "lr",
     "out",
     "hmc-steps",
+    "particles",
+    "optimizer",
+    "predictive",
 ];
 
 impl Args {

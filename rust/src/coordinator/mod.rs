@@ -19,15 +19,23 @@
 //! so warmup adaptation, chain scheduling and the cross-method bitwise
 //! guarantees are unchanged; `fugue bench` reports the payoff as
 //! `frozen_speedup_vs_replay`.
+//!
+//! The same compiled pieces also serve the second inference engine:
+//! [`run_svi_native`] fits a mean-field ADVI posterior by driving the
+//! frozen gradients through the reparameterized ELBO
+//! ([`crate::svi`]), with the K particles mapped onto the batched
+//! compiler's lanes exactly like vectorized chains.
 
 pub mod chain;
 pub mod parallel;
 pub mod sampler;
+pub mod svi;
 pub mod vectorized;
 pub mod warmup;
 
 pub use chain::{chain_start, run_chain, run_chains, ChainResult, ChainStats, NutsOptions};
 pub use parallel::{run_chains_parallel, run_compiled_chains, ParallelChainRunner};
 pub use sampler::{FusedSampler, NativeSampler, Sampler, TreeAlgorithm};
+pub use svi::run_svi_native;
 pub use vectorized::{run_chains_vectorized, run_compiled_chains_method, ChainMethod};
 pub use warmup::WarmupSchedule;

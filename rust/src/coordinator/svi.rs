@@ -1,0 +1,76 @@
+//! Native SVI coordination: compile an effect-handler program once,
+//! pick the particle backend, and run reparameterized ADVI — the SVI
+//! twin of [`crate::coordinator::run_compiled_chains_method`].
+//!
+//! With `vectorize_particles` (the default) the K ELBO particles ride
+//! the **same** batched compiler the vectorized chain engine uses
+//! ([`BatchedCompiledModel`], K lanes = K particles, one fused frozen
+//! [`crate::autodiff::BatchTapeProgram`] sweep per SVI step); otherwise
+//! each particle is a scalar [`CompiledModel`] evaluation.  Both paths
+//! are bitwise identical under the same seed — only wall-clock differs
+//! (`svi_particle_batch_speedup` in BENCH_native.json).
+
+use anyhow::{ensure, Result};
+
+use crate::compile::{BatchedCompiledModel, CompiledModel, EffModel, SiteLayout};
+use crate::svi::native::{BatchedParticles, NativeSvi, NativeSviResult, ScalarParticles, SviOptions};
+
+/// Compile `model` and fit a mean-field ADVI posterior with the native
+/// engine — the entry point behind the `fugue svi-model` CLI.  Returns
+/// the compiled layout (for constrained-space reporting and predictive
+/// replay) alongside the fitted guide and ELBO trace.
+pub fn run_svi_native<M: EffModel + Clone>(
+    model: &M,
+    opts: &SviOptions,
+) -> Result<(SiteLayout, NativeSviResult)> {
+    ensure!(opts.num_particles > 0, "SVI needs at least one ELBO particle");
+    let layout = SiteLayout::trace(model, opts.seed)?;
+    let result = if opts.vectorize_particles && opts.num_particles > 1 {
+        let pot = BatchedCompiledModel::new(model.clone(), layout.clone(), opts.num_particles);
+        NativeSvi::new(BatchedParticles::new(pot), opts)?.run()
+    } else {
+        let pot = CompiledModel::new(model.clone(), layout.clone());
+        NativeSvi::new(ScalarParticles::new(pot, opts.num_particles), opts)?.run()
+    };
+    Ok((layout, result))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compile::zoo::NormalMean;
+
+    fn toy() -> NormalMean {
+        NormalMean {
+            y: vec![1.0, 2.0, 3.0],
+            sigma: 2.0,
+        }
+    }
+
+    /// Scalar-particle and fused-lane runs with the same options and
+    /// seed must be bitwise identical end-to-end — the backend is an
+    /// execution strategy, invisible to the statistics.
+    #[test]
+    fn particle_backends_are_bitwise_identical() {
+        let base = SviOptions {
+            num_steps: 120,
+            num_particles: 4,
+            lr: 0.05,
+            seed: 9,
+            ..Default::default()
+        };
+        let scalar = SviOptions {
+            vectorize_particles: false,
+            ..base.clone()
+        };
+        let (_, a) = run_svi_native(&toy(), &base).unwrap();
+        let (_, b) = run_svi_native(&toy(), &scalar).unwrap();
+        assert_eq!(a.steps, b.steps);
+        for (x, y) in a.elbo_trace.iter().zip(&b.elbo_trace) {
+            assert_eq!(x.to_bits(), y.to_bits(), "ELBO trace diverged");
+        }
+        for (x, y) in a.guide.params().iter().zip(b.guide.params()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "guide params diverged");
+        }
+    }
+}

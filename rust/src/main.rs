@@ -46,6 +46,14 @@ SUBCOMMANDS
                              vectorized runs them lock-step over a fused
                              multi-lane potential).
                             Needs no artifacts and no pjrt feature.
+  svi-model                 fit a compiled effect-handler model with the native
+                            SVI engine (reparameterized ADVI, mean-field normal
+                            guide, frozen-tape gradients):
+                            --model eight-schools|horseshoe|logistic
+                            (--steps N --particles K --lr X --optimizer adam|sgd
+                             --predictive N --out FILE; K particles run as one
+                             fused multi-lane gradient sweep per step).
+                            Needs no artifacts and no pjrt feature.
   experiment table2a        Table 2a: ms/leapfrog across architectures (--model hmm|covtype)
   experiment fig2b          Fig 2b: SKIM ms/effective-sample vs p
   experiment footnote6      footnote 6: HMM ESS across seeds, f32 vs f64
@@ -312,12 +320,13 @@ fn main() -> Result<()> {
     }
     let settings = Settings::from_args(&args)?;
     let sub = args.subcommand()?;
-    // `bench`, `sample-model` and `diagnose` are native-only: no
-    // artifact manifest, no PJRT engine — they must work on a fresh
-    // clone with the default (stub) feature set.
+    // `bench`, `sample-model`, `svi-model` and `diagnose` are
+    // native-only: no artifact manifest, no PJRT engine — they must
+    // work on a fresh clone with the default (stub) feature set.
     match sub {
         "bench" => return cmd_bench(&args, &settings),
         "sample-model" => return cmd_sample_model(&args, &settings),
+        "svi-model" => return cmd_svi_model(&args, &settings),
         "diagnose" => return cmd_diagnose(&args, &settings),
         _ => {}
     }
@@ -428,6 +437,128 @@ fn cmd_sample_model(args: &Args, settings: &Settings) -> Result<()> {
             .collect::<Vec<_>>()
             .join(",")
     );
+    Ok(())
+}
+
+/// `fugue svi-model --model NAME` — compile an effect-handler program
+/// and fit it with the native SVI engine: reparameterized ADVI with a
+/// mean-field normal guide over the model's unconstrained layout, K
+/// ELBO particles per step evaluated as one fused multi-lane sweep of
+/// the frozen tape program.  Fully offline — no artifacts, no pjrt.
+fn cmd_svi_model(args: &Args, settings: &Settings) -> Result<()> {
+    use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel};
+    use fugue::svi::{Convergence, OptimKind, StepSchedule, SviOptions};
+
+    let name = args.get("model").unwrap_or("eight-schools");
+    let steps = args
+        .get_usize("steps")?
+        .unwrap_or(if settings.quick { 300 } else { 2000 });
+    let particles = args.get_usize("particles")?.unwrap_or(8).max(1);
+    let lr = args.get_f64("lr")?.unwrap_or(0.05);
+    let optimizer = OptimKind::parse(args.get("optimizer").unwrap_or("adam"))?;
+    let opts = SviOptions {
+        num_steps: steps,
+        num_particles: particles,
+        lr,
+        seed: settings.seed,
+        optimizer,
+        // anneal to lr/10 over the run: converged guides stop wobbling
+        schedule: StepSchedule::ExponentialDecay {
+            rate: 0.1,
+            over: steps,
+        },
+        vectorize_particles: !args.has("no-vectorize-particles"),
+        convergence: Some(Convergence {
+            window: (steps / 10).max(25),
+            rel_tol: 1e-5,
+        }),
+        tail_average: 0.25,
+    };
+    println!(
+        "native SVI model={name} steps={steps} particles={particles} lr={lr} optimizer={} seed={}",
+        optimizer.name(),
+        settings.seed
+    );
+    match name {
+        "eight-schools" => svi_fit_and_report(&EightSchools::classic(), &opts, args, settings),
+        "horseshoe" => {
+            let model = Horseshoe::synthetic(settings.seed, 100, 10, 3);
+            svi_fit_and_report(&model, &opts, args, settings)
+        }
+        "logistic" => {
+            let (n, d) = (500, 8);
+            let dset = fugue::data::make_covtype_like(settings.seed, n, d);
+            let model = LogisticModel {
+                x: dset.x,
+                y: dset.y,
+                n,
+                d,
+            };
+            svi_fit_and_report(&model, &opts, args, settings)
+        }
+        other => bail!("unknown compiled model '{other}' (eight-schools|horseshoe|logistic)"),
+    }
+}
+
+/// Shared fit/report body of `svi-model`, generic over the program.
+fn svi_fit_and_report<M: fugue::compile::EffModel + Clone>(
+    model: &M,
+    opts: &fugue::svi::SviOptions,
+    args: &Args,
+    settings: &Settings,
+) -> Result<()> {
+    use fugue::coordinator::run_svi_native;
+    use fugue::svi::posterior_predictive_draws;
+
+    let (layout, result) = run_svi_native(model, opts)?;
+    let chunk = (result.steps / 6).max(1);
+    for (i, c) in result.elbo_trace.chunks(chunk).enumerate() {
+        let mean = c.iter().sum::<f64>() / c.len() as f64;
+        println!(
+            "steps {:>5}-{:>5}: mean ELBO {:>14.4}",
+            i * chunk,
+            i * chunk + c.len(),
+            mean
+        );
+    }
+    println!(
+        "{} steps in {:.2}s{}",
+        result.steps,
+        result.secs,
+        if result.converged {
+            " (converged early)"
+        } else {
+            ""
+        }
+    );
+
+    // posterior summary from the fitted guide, in the constrained space
+    let dim = layout.dim;
+    let mut rng = fugue::rng::Rng::new(settings.seed ^ 0x5A17);
+    let draws = result.guide.posterior_draws(&layout, &mut rng, 2000);
+    let spans = layout.param_spans();
+    let rows = summarize(std::slice::from_ref(&draws), dim, &spans);
+    println!("{}", render_table(&rows));
+
+    if let Some(n) = args.get_usize("predictive")? {
+        let pred = posterior_predictive_draws(model, &layout, &result.guide, settings.seed, n);
+        println!("posterior predictive ({n} replicates per observation site):");
+        for (i, (site, vals)) in pred.iter().enumerate() {
+            if i == 8 {
+                println!("  ... ({} more sites)", pred.len() - 8);
+                break;
+            }
+            let m = vals.iter().sum::<f64>() / vals.len() as f64;
+            let v = vals.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / vals.len() as f64;
+            println!("  {site:<12} mean {m:>10.4}  sd {:>10.4}", v.sqrt());
+        }
+    }
+
+    if let Some(out) = args.get("out") {
+        let n_draws = draws.len() / dim;
+        fugue::util::npy::write_f64(out, &draws, &[n_draws, dim])?;
+        println!("constrained guide draws saved to {out} ({n_draws} x {dim}, numpy .npy)");
+    }
     Ok(())
 }
 

@@ -1,0 +1,317 @@
+//! The reparameterized multi-particle ELBO over a compiled model's
+//! **frozen tape** potential — the gradient core of the native SVI
+//! engine.
+//!
+//! # Dataflow
+//!
+//! With the mean-field guide `q(z) = N(loc, sigma^2)`, `sigma =
+//! exp(log_scale)`, and the reparameterization `z = loc + sigma * eps`,
+//! the K-particle ELBO estimate is
+//!
+//! ```text
+//!   ELBO ~= (1/K) sum_k log p(z_k, data)  +  H(q)
+//! ```
+//!
+//! where `log p` is the compiled model's **unconstrained-space** joint
+//! (priors + likelihood + log|det J| of the constraining bijections) —
+//! exactly `-U` from the frozen [`TapeProgram`] the NUTS engines
+//! already evaluate — and `H(q)` is the guide's closed-form entropy.
+//! The chain rule then gives the variational gradients *host-side*,
+//! with no extra tape passes:
+//!
+//! ```text
+//!   dELBO/dloc_i       = (1/K) sum_k dlogp/dz_i(z_k)
+//!   dELBO/dlog_scale_i = (1/K) sum_k dlogp/dz_i(z_k) * eps_ki * sigma_i  +  1
+//! ```
+//!
+//! (the `+1` is `dH/dlog_scale_i`).  Since `dlogp/dz = -dU/dz`, every
+//! piece comes straight out of the potentials the MCMC stack compiled —
+//! SVI adds **zero** new autodiff machinery.
+//!
+//! # Particle lanes
+//!
+//! The K particles are embarrassingly parallel, so they map exactly
+//! onto the vectorized chain engine's lanes: the batched path issues
+//! **one** [`BatchPotential::value_and_grad_batch`] sweep per step —
+//! all K particle gradients in a single fused lane-minor pass over the
+//! frozen [`crate::autodiff::BatchTapeProgram`] — where the scalar path
+//! loops K scalar evaluations.  Both paths draw `eps` in the same
+//! particle-major order and share the same host-side accumulation
+//! ([`ReparamElbo`] stores everything lane-minor), and lane `k` of a
+//! batched evaluation is bitwise equal to the scalar evaluation at lane
+//! `k`'s coordinates, so **scalar and batched ELBO steps agree
+//! bitwise** — pinned by `rust/tests/svi_native.rs`.  `fugue bench`
+//! reports the payoff as `svi_particle_batch_speedup`.
+//!
+//! All scratch lives on [`ReparamElbo`] and is sized at construction:
+//! steady-state ELBO steps perform zero heap allocations
+//! (`rust/tests/alloc_free.rs`).
+//!
+//! [`TapeProgram`]: crate::autodiff::TapeProgram
+//! [`BatchPotential::value_and_grad_batch`]: crate::mcmc::BatchPotential::value_and_grad_batch
+
+use crate::mcmc::{BatchPotential, Potential};
+use crate::ppl::special::LN_2PI;
+use crate::rng::Rng;
+
+/// Reusable state for reparameterized K-particle ELBO evaluations:
+/// noise draws, particle coordinates, per-particle potentials and
+/// gradients, all in the lane-minor layout the batched compiler uses
+/// (`buf[i * particles + k]` = coordinate `i` of particle `k`).
+pub struct ReparamElbo {
+    dim: usize,
+    particles: usize,
+    /// `exp(log_scale)`, refreshed every evaluation
+    sigma: Vec<f64>,
+    /// standard-normal noise, lane-minor `dim x K`
+    eps: Vec<f64>,
+    /// particle coordinates `z = loc + sigma * eps`, lane-minor
+    z: Vec<f64>,
+    /// per-particle potential `U(z_k) = -log p(z_k, data)`
+    u: Vec<f64>,
+    /// per-particle `dU/dz`, lane-minor
+    grad_z: Vec<f64>,
+    /// scalar-path scratch: one particle's coordinates / gradient
+    zk: Vec<f64>,
+    gk: Vec<f64>,
+}
+
+impl ReparamElbo {
+    pub fn new(dim: usize, particles: usize) -> ReparamElbo {
+        assert!(particles > 0, "ELBO needs at least one particle");
+        ReparamElbo {
+            dim,
+            particles,
+            sigma: vec![0.0; dim],
+            eps: vec![0.0; dim * particles],
+            z: vec![0.0; dim * particles],
+            u: vec![0.0; particles],
+            grad_z: vec![0.0; dim * particles],
+            zk: vec![0.0; dim],
+            gk: vec![0.0; dim],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn particles(&self) -> usize {
+        self.particles
+    }
+
+    /// Draw fresh reparameterization noise: particle-major consumption
+    /// order (particle 0's coordinates first), lane-minor storage —
+    /// so the scalar loop and the batched sweep see identical noise.
+    pub fn draw_eps(&mut self, rng: &mut Rng) {
+        let k_lanes = self.particles;
+        for k in 0..k_lanes {
+            for i in 0..self.dim {
+                self.eps[i * k_lanes + k] = rng.normal();
+            }
+        }
+    }
+
+    /// Override the noise (lane-minor `dim x K`) — deterministic ELBO
+    /// evaluations for the finite-difference gradient tests.
+    pub fn set_eps(&mut self, eps: &[f64]) {
+        assert_eq!(eps.len(), self.eps.len(), "eps: want dim x particles");
+        self.eps.copy_from_slice(eps);
+    }
+
+    /// The current noise (lane-minor).
+    pub fn eps(&self) -> &[f64] {
+        &self.eps
+    }
+
+    /// ELBO and its gradient with **fresh** noise, particles evaluated
+    /// one scalar [`Potential`] call at a time.  Writes
+    /// `[dELBO/dloc..., dELBO/dlog_scale...]` into `grad` (length
+    /// `2*dim`), returns the ELBO estimate.
+    pub fn value_and_grad_scalar<P: Potential>(
+        &mut self,
+        pot: &mut P,
+        loc: &[f64],
+        log_scale: &[f64],
+        rng: &mut Rng,
+        grad: &mut [f64],
+    ) -> f64 {
+        self.draw_eps(rng);
+        self.eval_scalar(pot, loc, log_scale, grad)
+    }
+
+    /// ELBO and its gradient with **fresh** noise, all K particles in
+    /// one fused [`BatchPotential`] sweep (requires `pot.lanes() ==
+    /// self.particles()`).  Bitwise equal to the scalar path under the
+    /// same RNG state.
+    pub fn value_and_grad_batched<BP: BatchPotential>(
+        &mut self,
+        pot: &mut BP,
+        loc: &[f64],
+        log_scale: &[f64],
+        rng: &mut Rng,
+        grad: &mut [f64],
+    ) -> f64 {
+        self.draw_eps(rng);
+        self.eval_batched(pot, loc, log_scale, grad)
+    }
+
+    /// Deterministic scalar-path evaluation at the *current* noise
+    /// (`draw_eps`/`set_eps` first).
+    pub fn eval_scalar<P: Potential>(
+        &mut self,
+        pot: &mut P,
+        loc: &[f64],
+        log_scale: &[f64],
+        grad: &mut [f64],
+    ) -> f64 {
+        assert_eq!(pot.dim(), self.dim, "potential/ELBO dimension mismatch");
+        self.reparameterize(loc, log_scale);
+        let k_lanes = self.particles;
+        for k in 0..k_lanes {
+            for i in 0..self.dim {
+                self.zk[i] = self.z[i * k_lanes + k];
+            }
+            self.u[k] = pot.value_and_grad(&self.zk, &mut self.gk);
+            for i in 0..self.dim {
+                self.grad_z[i * k_lanes + k] = self.gk[i];
+            }
+        }
+        self.finish(log_scale, grad)
+    }
+
+    /// Deterministic batched-path evaluation at the *current* noise.
+    pub fn eval_batched<BP: BatchPotential>(
+        &mut self,
+        pot: &mut BP,
+        loc: &[f64],
+        log_scale: &[f64],
+        grad: &mut [f64],
+    ) -> f64 {
+        assert_eq!(pot.dim(), self.dim, "potential/ELBO dimension mismatch");
+        assert_eq!(
+            pot.lanes(),
+            self.particles,
+            "batched ELBO: potential lanes must equal the particle count"
+        );
+        self.reparameterize(loc, log_scale);
+        pot.value_and_grad_batch(&self.z, &mut self.u, &mut self.grad_z);
+        self.finish(log_scale, grad)
+    }
+
+    /// `sigma = exp(log_scale)`; `z[i,k] = loc[i] + sigma[i] * eps[i,k]`.
+    fn reparameterize(&mut self, loc: &[f64], log_scale: &[f64]) {
+        assert_eq!(loc.len(), self.dim, "loc/ELBO dimension mismatch");
+        assert_eq!(log_scale.len(), self.dim, "log_scale/ELBO dimension mismatch");
+        let k_lanes = self.particles;
+        for i in 0..self.dim {
+            self.sigma[i] = log_scale[i].exp();
+            let s = self.sigma[i];
+            let l = loc[i];
+            let row = &mut self.z[i * k_lanes..(i + 1) * k_lanes];
+            let eps = &self.eps[i * k_lanes..(i + 1) * k_lanes];
+            for (zv, &e) in row.iter_mut().zip(eps) {
+                *zv = l + s * e;
+            }
+        }
+    }
+
+    /// Shared host-side accumulation: both evaluation paths land here
+    /// with bitwise-identical `u`/`grad_z`, so the ELBO value and
+    /// gradients agree bitwise by construction.
+    fn finish(&mut self, log_scale: &[f64], grad: &mut [f64]) -> f64 {
+        assert_eq!(grad.len(), 2 * self.dim, "grad: want [loc..., log_scale...]");
+        let k_lanes = self.particles;
+        let inv_k = 1.0 / k_lanes as f64;
+
+        // E_q[log p]: mean of -U over the particles
+        let mut sum_logp = 0.0;
+        for &uk in &self.u {
+            sum_logp += -uk;
+        }
+
+        // closed-form entropy of the mean-field guide
+        let mut entropy = 0.5 * self.dim as f64 * (1.0 + LN_2PI);
+        for &ls in log_scale {
+            entropy += ls;
+        }
+
+        let (g_loc, g_ls) = grad.split_at_mut(self.dim);
+        for i in 0..self.dim {
+            let row = &self.grad_z[i * k_lanes..(i + 1) * k_lanes];
+            let eps = &self.eps[i * k_lanes..(i + 1) * k_lanes];
+            let mut s_loc = 0.0;
+            let mut s_eps = 0.0;
+            for k in 0..k_lanes {
+                let dlogp = -row[k];
+                s_loc += dlogp;
+                s_eps += dlogp * eps[k];
+            }
+            g_loc[i] = s_loc * inv_k;
+            g_ls[i] = s_eps * self.sigma[i] * inv_k + 1.0;
+        }
+
+        sum_logp * inv_k + entropy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compile::zoo::NormalMean;
+    use crate::compile::{compile, compile_batched};
+
+    fn toy() -> NormalMean {
+        NormalMean {
+            y: vec![0.4, -0.9, 1.3],
+            sigma: 1.5,
+        }
+    }
+
+    /// With sigma -> 0 and one particle at eps = 0, the ELBO collapses
+    /// to `log p(loc) + H(q)` exactly.
+    #[test]
+    fn elbo_at_zero_noise_is_logp_plus_entropy() {
+        let mut pot = compile(toy(), 0).unwrap();
+        let mut elbo = ReparamElbo::new(1, 1);
+        elbo.set_eps(&[0.0]);
+        let (loc, ls) = ([0.3], [-3.0]);
+        let mut grad = [0.0; 2];
+        let e = elbo.eval_scalar(&mut pot, &loc, &ls, &mut grad);
+
+        use crate::mcmc::Potential;
+        let mut g1 = [0.0];
+        let u = pot.value_and_grad(&[0.3], &mut g1);
+        let entropy = -3.0 + 0.5 * (1.0 + LN_2PI);
+        assert!((e - (-u + entropy)).abs() < 1e-12, "{e} vs {}", -u + entropy);
+        // dELBO/dloc = dlogp/dz at the single particle
+        assert!((grad[0] - (-g1[0])).abs() < 1e-12);
+        // dELBO/dlog_scale = 0 * sigma + 1 at eps = 0
+        assert!((grad[1] - 1.0).abs() < 1e-12);
+    }
+
+    /// The batched path must agree bitwise with the scalar loop under
+    /// identical noise — the particle-lane contract.
+    #[test]
+    fn scalar_and_batched_particles_agree_bitwise() {
+        for lanes in [1usize, 4] {
+            let mut spot = compile(toy(), 0).unwrap();
+            let mut bpot = compile_batched(toy(), 0, lanes).unwrap();
+            let mut es = ReparamElbo::new(1, lanes);
+            let mut eb = ReparamElbo::new(1, lanes);
+            let mut rng_s = Rng::new(7);
+            let mut rng_b = Rng::new(7);
+            let (loc, ls) = ([0.2], [-1.0]);
+            let mut gs = [0.0; 2];
+            let mut gb = [0.0; 2];
+            for _ in 0..20 {
+                let vs = es.value_and_grad_scalar(&mut spot, &loc, &ls, &mut rng_s, &mut gs);
+                let vb = eb.value_and_grad_batched(&mut bpot, &loc, &ls, &mut rng_b, &mut gb);
+                assert_eq!(vs.to_bits(), vb.to_bits(), "{lanes} lanes: ELBO");
+                for i in 0..2 {
+                    assert_eq!(gs[i].to_bits(), gb[i].to_bits(), "{lanes} lanes: grad[{i}]");
+                }
+            }
+        }
+    }
+}

@@ -1,53 +1,50 @@
-//! Stochastic Variational Inference driver (Appendix D, E6).
+//! Stochastic Variational Inference — the second native inference
+//! engine (Appendix D, E6).
 //!
-//! The vectorized-ELBO gradient (mean-field normal guide, vmapped over
-//! particles) is compiled into the `*_elbo_and_grad` artifact; this
-//! module supplies the host-side optimizer loop — a from-scratch Adam —
-//! mirroring how NumPyro pairs `jit(ELBO.loss)` with a Python optimizer.
+//! Two backends share this subsystem:
+//!
+//! * **Native** (default build, no artifacts): reparameterized ADVI
+//!   over any compiled effect-handler model.  The mean-field guide
+//!   ([`guide`]) is laid out over the model's unconstrained
+//!   [`crate::compile::SiteLayout`]; the K-particle ELBO gradient
+//!   ([`elbo`]) reuses the **frozen tape** potentials the NUTS engines
+//!   already run — one fused [`crate::mcmc::BatchPotential`] lane sweep
+//!   per step — and the chain rule to the variational parameters is
+//!   closed-form host arithmetic.  The driver ([`native`]) adds
+//!   Adam/SGD with schedules ([`optim`]), an ELBO trace, a convergence
+//!   window and tail averaging, at zero steady-state allocations per
+//!   step.  Entry points: [`crate::coordinator::run_svi_native`] and
+//!   `fugue svi-model`.
+//! * **PJRT artifact** ([`run_svi`], `--features pjrt` + `make
+//!   artifacts`): the vectorized-particle ELBO gradient compiled by
+//!   `aot.py`, with the same host-side optimizer loop.
+//!
+//! Both ascend with the **same** [`optim::Adam`] (the artifact loop's
+//! Adam moved into [`optim`] so the native engine does not duplicate
+//! it), and both report posteriors through the fitted
+//! [`MeanFieldGuide`] — posterior-predictive replay composes the guide
+//! with the existing [`crate::effects::Substitute`] handler
+//! ([`predictive`]).
+
+pub mod elbo;
+pub mod guide;
+pub mod native;
+pub mod optim;
+pub mod predictive;
+
+pub use elbo::ReparamElbo;
+pub use guide::MeanFieldGuide;
+pub use native::{
+    BatchedParticles, Convergence, ElboEngine, NativeSvi, NativeSviResult, ScalarParticles,
+    SviOptions,
+};
+pub use optim::{Adam, OptimKind, Optimizer, SgdMomentum, StepSchedule};
+pub use predictive::{posterior_predictive_draws, posterior_predictive_trace, StripObserved};
 
 use anyhow::{bail, Result};
 
 use crate::rng::Rng;
 use crate::runtime::engine::{literal_scalar_f64, literal_to_f64, Engine, HostTensor};
-/// Adam optimizer (Kingma & Ba), matching `numpyro.optim.Adam` defaults.
-pub struct Adam {
-    pub lr: f64,
-    pub beta1: f64,
-    pub beta2: f64,
-    pub eps: f64,
-    m: Vec<f64>,
-    v: Vec<f64>,
-    t: u64,
-}
-
-impl Adam {
-    pub fn new(dim: usize, lr: f64) -> Self {
-        Adam {
-            lr,
-            beta1: 0.9,
-            beta2: 0.999,
-            eps: 1e-8,
-            m: vec![0.0; dim],
-            v: vec![0.0; dim],
-            t: 0,
-        }
-    }
-
-    /// Gradient-ascent step (we maximize the ELBO).
-    pub fn step_ascent(&mut self, params: &mut [f64], grad: &[f64]) {
-        self.t += 1;
-        let t = self.t as f64;
-        let bc1 = 1.0 - self.beta1.powf(t);
-        let bc2 = 1.0 - self.beta2.powf(t);
-        for i in 0..params.len() {
-            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
-            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
-            let mhat = self.m[i] / bc1;
-            let vhat = self.v[i] / bc2;
-            params[i] += self.lr * mhat / (vhat.sqrt() + self.eps);
-        }
-    }
-}
 
 #[derive(Debug, Clone)]
 pub struct SviResult {
@@ -80,8 +77,7 @@ pub fn run_svi(
 
     let mut rng = Rng::new(seed);
     let mut loc = vec![0.0; dim];
-    // exp(-2) initial guide scale
-    let mut log_scale = vec![-2.0; dim];
+    let mut log_scale = vec![guide::INIT_LOG_SCALE; dim];
     let mut adam = Adam::new(2 * dim, lr);
     let mut elbo_trace = Vec::with_capacity(num_steps);
 
@@ -118,30 +114,4 @@ pub fn run_svi(
         steps: num_steps,
         secs: t0.elapsed().as_secs_f64(),
     })
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn adam_minimizes_quadratic() {
-        // maximize -(x-3)^2 => x -> 3
-        let mut adam = Adam::new(1, 0.05);
-        let mut x = vec![0.0];
-        for _ in 0..2000 {
-            let g = vec![-2.0 * (x[0] - 3.0)];
-            adam.step_ascent(&mut x, &g);
-        }
-        assert!((x[0] - 3.0).abs() < 1e-3, "x {}", x[0]);
-    }
-
-    #[test]
-    fn adam_bias_correction_first_step() {
-        let mut adam = Adam::new(1, 0.1);
-        let mut x = vec![0.0];
-        adam.step_ascent(&mut x, &[1.0]);
-        // first step magnitude ~ lr regardless of gradient scale
-        assert!((x[0] - 0.1).abs() < 1e-6, "x {}", x[0]);
-    }
 }

@@ -1,0 +1,410 @@
+//! The native SVI driver: reparameterized ADVI steps over a compiled
+//! model, host-side Adam/SGD, ELBO trace, convergence window, tail
+//! (Polyak) averaging — the second inference engine next to NUTS, built
+//! from the exact same compiled pieces.
+//!
+//! A step is: draw `eps`, evaluate the K-particle ELBO gradient through
+//! the frozen tape ([`ReparamElbo`], one fused [`BatchPotential`] sweep
+//! when `vectorize_particles`), take an optimizer ascent step on the
+//! guide's flat `[loc..., log_scale...]` vector, record the ELBO.  All
+//! buffers are sized at construction, so steady-state steps perform
+//! **zero heap allocations** (`rust/tests/alloc_free.rs`).
+//!
+//! Entry points: [`crate::coordinator::run_svi_native`] (compiles the
+//! model and picks the particle backend) and the `fugue svi-model` CLI.
+
+use anyhow::{ensure, Result};
+
+use crate::mcmc::{BatchPotential, Potential};
+use crate::rng::Rng;
+use crate::svi::elbo::ReparamElbo;
+use crate::svi::guide::MeanFieldGuide;
+use crate::svi::optim::{OptimKind, Optimizer, StepSchedule};
+
+/// One K-particle ELBO gradient engine: the scalar-loop and
+/// fused-lane backends behind [`NativeSvi`].
+pub trait ElboEngine {
+    fn dim(&self) -> usize;
+    fn particles(&self) -> usize;
+    /// Fresh-noise ELBO + gradient into `grad` (`2*dim`,
+    /// `[dloc..., dlog_scale...]`).
+    fn elbo_and_grad(
+        &mut self,
+        loc: &[f64],
+        log_scale: &[f64],
+        rng: &mut Rng,
+        grad: &mut [f64],
+    ) -> f64;
+}
+
+/// K particles evaluated one scalar [`Potential`] call at a time —
+/// the reference backend (and the `--no-vectorize-particles` path).
+pub struct ScalarParticles<P: Potential> {
+    pot: P,
+    elbo: ReparamElbo,
+}
+
+impl<P: Potential> ScalarParticles<P> {
+    pub fn new(pot: P, particles: usize) -> ScalarParticles<P> {
+        let dim = pot.dim();
+        ScalarParticles {
+            pot,
+            elbo: ReparamElbo::new(dim, particles),
+        }
+    }
+}
+
+impl<P: Potential> ElboEngine for ScalarParticles<P> {
+    fn dim(&self) -> usize {
+        self.elbo.dim()
+    }
+
+    fn particles(&self) -> usize {
+        self.elbo.particles()
+    }
+
+    fn elbo_and_grad(
+        &mut self,
+        loc: &[f64],
+        log_scale: &[f64],
+        rng: &mut Rng,
+        grad: &mut [f64],
+    ) -> f64 {
+        self.elbo
+            .value_and_grad_scalar(&mut self.pot, loc, log_scale, rng, grad)
+    }
+}
+
+/// All K particles in one fused lane-minor [`BatchPotential`] sweep per
+/// step — the fast path (`svi_particle_batch_speedup` in
+/// BENCH_native.json), bitwise equal to [`ScalarParticles`] under the
+/// same RNG stream.
+pub struct BatchedParticles<BP: BatchPotential> {
+    pot: BP,
+    elbo: ReparamElbo,
+}
+
+impl<BP: BatchPotential> BatchedParticles<BP> {
+    pub fn new(pot: BP) -> BatchedParticles<BP> {
+        let (dim, lanes) = (pot.dim(), pot.lanes());
+        BatchedParticles {
+            pot,
+            elbo: ReparamElbo::new(dim, lanes),
+        }
+    }
+}
+
+impl<BP: BatchPotential> ElboEngine for BatchedParticles<BP> {
+    fn dim(&self) -> usize {
+        self.elbo.dim()
+    }
+
+    fn particles(&self) -> usize {
+        self.elbo.particles()
+    }
+
+    fn elbo_and_grad(
+        &mut self,
+        loc: &[f64],
+        log_scale: &[f64],
+        rng: &mut Rng,
+        grad: &mut [f64],
+    ) -> f64 {
+        self.elbo
+            .value_and_grad_batched(&mut self.pot, loc, log_scale, rng, grad)
+    }
+}
+
+/// Early-stopping rule: every `window` steps, compare the mean ELBO of
+/// the last window against the window before it and stop when the
+/// relative improvement falls below `rel_tol`.
+#[derive(Debug, Clone, Copy)]
+pub struct Convergence {
+    pub window: usize,
+    pub rel_tol: f64,
+}
+
+/// Options for a native SVI run.
+#[derive(Debug, Clone)]
+pub struct SviOptions {
+    pub num_steps: usize,
+    pub num_particles: usize,
+    /// Base learning rate (modulated per step by `schedule`).
+    pub lr: f64,
+    pub seed: u64,
+    pub optimizer: OptimKind,
+    pub schedule: StepSchedule,
+    /// Evaluate the K particles as one fused `BatchPotential` sweep
+    /// (default) instead of a scalar-potential loop.
+    pub vectorize_particles: bool,
+    /// `Some`: stop early once the windowed ELBO stops improving.
+    pub convergence: Option<Convergence>,
+    /// Average the guide parameters over the final `tail_average`
+    /// fraction of the run (Polyak tail averaging, `0.0` disables):
+    /// smooths the stochastic-gradient wobble out of the reported
+    /// posterior without touching the optimization itself.
+    pub tail_average: f64,
+}
+
+impl Default for SviOptions {
+    fn default() -> Self {
+        SviOptions {
+            num_steps: 1000,
+            num_particles: 4,
+            lr: 0.05,
+            seed: 0,
+            optimizer: OptimKind::Adam,
+            schedule: StepSchedule::Constant,
+            vectorize_particles: true,
+            convergence: None,
+            tail_average: 0.25,
+        }
+    }
+}
+
+/// Result of a native SVI run: the fitted guide (tail-averaged when
+/// enabled), the raw final-state guide, and the ELBO trajectory.
+#[derive(Debug, Clone)]
+pub struct NativeSviResult {
+    /// The fitted variational posterior.
+    pub guide: MeanFieldGuide,
+    /// Per-step ELBO estimates (length = steps actually run).
+    pub elbo_trace: Vec<f64>,
+    /// Steps actually run (< `num_steps` when converged early).
+    pub steps: usize,
+    /// Whether the convergence window triggered the early stop.
+    pub converged: bool,
+    pub secs: f64,
+}
+
+impl NativeSviResult {
+    /// Mean ELBO over the final `window` recorded steps.
+    pub fn final_elbo(&self, window: usize) -> f64 {
+        let n = self.elbo_trace.len();
+        let w = window.clamp(1, n.max(1));
+        self.elbo_trace[n - w..].iter().sum::<f64>() / w as f64
+    }
+}
+
+/// The SVI step loop over any [`ElboEngine`].  Owns the guide, the
+/// optimizer and every scratch buffer; [`NativeSvi::step`] is the
+/// zero-allocation unit the alloc-free tests pin.
+pub struct NativeSvi<E: ElboEngine> {
+    engine: E,
+    guide: MeanFieldGuide,
+    opt: Box<dyn Optimizer>,
+    schedule: StepSchedule,
+    base_lr: f64,
+    rng: Rng,
+    grad: Vec<f64>,
+    elbo_trace: Vec<f64>,
+    num_steps: usize,
+    convergence: Option<Convergence>,
+    /// running sum of guide params over the averaged tail
+    avg_params: Vec<f64>,
+    avg_count: u64,
+    avg_from: usize,
+}
+
+impl<E: ElboEngine> NativeSvi<E> {
+    pub fn new(engine: E, opts: &SviOptions) -> Result<NativeSvi<E>> {
+        ensure!(opts.num_steps > 0, "SVI needs at least one step");
+        ensure!(
+            opts.num_particles == engine.particles(),
+            "engine evaluates {} particles, options ask for {}",
+            engine.particles(),
+            opts.num_particles
+        );
+        ensure!(
+            (0.0..=1.0).contains(&opts.tail_average),
+            "tail_average must be in [0, 1]"
+        );
+        if let Some(c) = &opts.convergence {
+            ensure!(c.window > 0, "convergence window must be positive");
+        }
+        let dim = engine.dim();
+        let guide = MeanFieldGuide::new(dim);
+        let avg_from = if opts.tail_average > 0.0 {
+            (opts.num_steps as f64 * (1.0 - opts.tail_average)).floor() as usize
+        } else {
+            opts.num_steps
+        };
+        Ok(NativeSvi {
+            engine,
+            guide,
+            opt: opts.optimizer.build(2 * dim, opts.lr),
+            schedule: opts.schedule,
+            base_lr: opts.lr,
+            rng: Rng::new(opts.seed),
+            grad: vec![0.0; 2 * dim],
+            elbo_trace: Vec::with_capacity(opts.num_steps),
+            num_steps: opts.num_steps,
+            convergence: opts.convergence,
+            avg_params: vec![0.0; 2 * dim],
+            avg_count: 0,
+            avg_from,
+        })
+    }
+
+    /// The guide in its current (raw, non-averaged) state.
+    pub fn guide(&self) -> &MeanFieldGuide {
+        &self.guide
+    }
+
+    /// ELBO estimates recorded so far.
+    pub fn elbo_trace(&self) -> &[f64] {
+        &self.elbo_trace
+    }
+
+    /// One SVI step: ELBO gradient through the frozen tape, scheduled
+    /// optimizer ascent, trace bookkeeping.  Returns the step's ELBO
+    /// estimate.  Allocation-free in the steady state.
+    pub fn step(&mut self) -> f64 {
+        let t = self.elbo_trace.len();
+        let lr = self.schedule.lr_at(self.base_lr, t);
+        let dim = self.guide.dim();
+        let NativeSvi {
+            engine,
+            guide,
+            opt,
+            rng,
+            grad,
+            elbo_trace,
+            avg_params,
+            avg_count,
+            avg_from,
+            ..
+        } = self;
+        opt.set_lr(lr);
+        let params = guide.params_mut();
+        let elbo = {
+            let (loc, log_scale) = params.split_at(dim);
+            engine.elbo_and_grad(loc, log_scale, rng, grad)
+        };
+        opt.step_ascent(params, grad);
+        if t >= *avg_from {
+            for (a, p) in avg_params.iter_mut().zip(params.iter()) {
+                *a += *p;
+            }
+            *avg_count += 1;
+        }
+        // capacity was reserved for num_steps up front; steady-state
+        // pushes never reallocate
+        elbo_trace.push(elbo);
+        elbo
+    }
+
+    /// Whether the convergence rule fires at the current trace length.
+    fn converged_now(&self) -> bool {
+        let c = match self.convergence {
+            Some(c) => c,
+            None => return false,
+        };
+        let n = self.elbo_trace.len();
+        if n < 2 * c.window || n % c.window != 0 {
+            return false;
+        }
+        let recent: f64 =
+            self.elbo_trace[n - c.window..].iter().sum::<f64>() / c.window as f64;
+        let prev: f64 = self.elbo_trace[n - 2 * c.window..n - c.window]
+            .iter()
+            .sum::<f64>()
+            / c.window as f64;
+        (recent - prev).abs() <= c.rel_tol * (1.0 + prev.abs())
+    }
+
+    /// Run to `num_steps` (or early convergence) and package the
+    /// result.  The reported guide is the tail average when at least
+    /// one averaged step ran, else the raw final state.
+    pub fn run(mut self) -> NativeSviResult {
+        let t0 = std::time::Instant::now();
+        let mut converged = false;
+        while self.elbo_trace.len() < self.num_steps {
+            self.step();
+            if self.converged_now() {
+                converged = true;
+                break;
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let steps = self.elbo_trace.len();
+        let mut guide = self.guide;
+        if self.avg_count > 0 {
+            let inv = 1.0 / self.avg_count as f64;
+            for (p, a) in guide.params_mut().iter_mut().zip(&self.avg_params) {
+                *p = *a * inv;
+            }
+        }
+        NativeSviResult {
+            guide,
+            elbo_trace: self.elbo_trace,
+            steps,
+            converged,
+            secs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compile::zoo::NormalMean;
+    use crate::compile::{compile, compile_batched};
+
+    fn toy() -> NormalMean {
+        NormalMean {
+            y: vec![1.0, 2.0, 0.5, 1.5],
+            sigma: 1.0,
+        }
+    }
+
+    #[test]
+    fn elbo_increases_on_conjugate_model() {
+        let pot = compile(toy(), 0).unwrap();
+        let opts = SviOptions {
+            num_steps: 400,
+            num_particles: 2,
+            lr: 0.05,
+            seed: 3,
+            vectorize_particles: false,
+            tail_average: 0.0,
+            ..Default::default()
+        };
+        let svi = NativeSvi::new(ScalarParticles::new(pot, 2), &opts).unwrap();
+        let res = svi.run();
+        assert_eq!(res.steps, 400);
+        let early: f64 = res.elbo_trace[..50].iter().sum::<f64>() / 50.0;
+        let late = res.final_elbo(50);
+        assert!(late > early, "ELBO did not increase: {early} -> {late}");
+    }
+
+    #[test]
+    fn convergence_window_stops_early() {
+        let pot = compile_batched(toy(), 0, 4).unwrap();
+        let opts = SviOptions {
+            num_steps: 5000,
+            num_particles: 4,
+            lr: 0.05,
+            seed: 1,
+            convergence: Some(Convergence {
+                window: 100,
+                rel_tol: 0.02,
+            }),
+            ..Default::default()
+        };
+        let svi = NativeSvi::new(BatchedParticles::new(pot), &opts).unwrap();
+        let res = svi.run();
+        assert!(res.converged, "conjugate model should converge");
+        assert!(res.steps < 5000, "ran all {} steps", res.steps);
+    }
+
+    #[test]
+    fn particle_count_mismatch_is_rejected() {
+        let pot = compile(toy(), 0).unwrap();
+        let opts = SviOptions {
+            num_particles: 8,
+            ..Default::default()
+        };
+        assert!(NativeSvi::new(ScalarParticles::new(pot, 4), &opts).is_err());
+    }
+}

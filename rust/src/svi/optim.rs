@@ -1,0 +1,247 @@
+//! First-order ascent optimizers shared by **both** SVI backends: the
+//! native reparameterized-ADVI engine ([`crate::svi::NativeSvi`]) and
+//! the PJRT artifact path ([`crate::svi::run_svi`]).
+//!
+//! The Adam implementation here is the one the artifact loop has used
+//! since the seed (same Kingma & Ba defaults as `numpyro.optim.Adam`);
+//! it moved out of `svi/mod.rs` so the native engine does not duplicate
+//! it.  Everything operates on a flat `params` slice — for the
+//! mean-field guide that is `[loc..., log_scale...]`
+//! ([`crate::svi::MeanFieldGuide`]) — and **ascends** (SVI maximizes
+//! the ELBO).
+//!
+//! All state (first/second moment vectors, velocity) is allocated at
+//! construction, so steady-state steps are allocation-free — the same
+//! bar as the rest of the hot path (`rust/tests/alloc_free.rs`).
+
+use anyhow::{bail, Result};
+
+/// A stateful first-order optimizer over a flat parameter vector.
+///
+/// `step_ascent` moves `params` **uphill** along `grad`; schedules
+/// retune the learning rate between steps via [`Optimizer::set_lr`].
+pub trait Optimizer {
+    /// Gradient-ascent step (SVI maximizes the ELBO).
+    fn step_ascent(&mut self, params: &mut [f64], grad: &[f64]);
+
+    /// Retune the learning rate (used by [`StepSchedule`]s).
+    fn set_lr(&mut self, lr: f64);
+
+    /// Current learning rate.
+    fn lr(&self) -> f64;
+}
+
+/// Adam optimizer (Kingma & Ba), matching `numpyro.optim.Adam` defaults
+/// (`beta1` 0.9, `beta2` 0.999, `eps` 1e-8).
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(dim: usize, lr: f64) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step_ascent(&mut self, params: &mut [f64], grad: &[f64]) {
+        self.t += 1;
+        let t = self.t as f64;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] += self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+}
+
+/// SGD with classical momentum: `v = mu*v + g; params += lr * v`.
+pub struct SgdMomentum {
+    pub lr: f64,
+    pub momentum: f64,
+    v: Vec<f64>,
+}
+
+impl SgdMomentum {
+    pub fn new(dim: usize, lr: f64, momentum: f64) -> Self {
+        SgdMomentum {
+            lr,
+            momentum,
+            v: vec![0.0; dim],
+        }
+    }
+}
+
+impl Optimizer for SgdMomentum {
+    fn step_ascent(&mut self, params: &mut [f64], grad: &[f64]) {
+        for i in 0..params.len() {
+            self.v[i] = self.momentum * self.v[i] + grad[i];
+            params[i] += self.lr * self.v[i];
+        }
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+}
+
+/// Which optimizer an SVI run uses (CLI-facing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimKind {
+    Adam,
+    /// SGD with momentum 0.9.
+    Sgd,
+}
+
+impl OptimKind {
+    pub fn parse(s: &str) -> Result<OptimKind> {
+        Ok(match s {
+            "adam" => OptimKind::Adam,
+            "sgd" => OptimKind::Sgd,
+            other => bail!("unknown optimizer '{other}' (adam|sgd)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimKind::Adam => "adam",
+            OptimKind::Sgd => "sgd",
+        }
+    }
+
+    /// Build the optimizer for a `dim`-element parameter vector.
+    pub fn build(&self, dim: usize, lr: f64) -> Box<dyn Optimizer> {
+        match self {
+            OptimKind::Adam => Box::new(Adam::new(dim, lr)),
+            OptimKind::Sgd => Box::new(SgdMomentum::new(dim, lr, 0.9)),
+        }
+    }
+}
+
+/// Step-size schedule over an SVI run: maps `(base_lr, step)` to the
+/// learning rate applied at that step (step is 0-based).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepSchedule {
+    /// `lr = base_lr` throughout.
+    Constant,
+    /// Smooth exponential decay: `lr = base_lr * rate^(step / over)` —
+    /// reaches `base_lr * rate` after `over` steps.
+    ExponentialDecay { rate: f64, over: usize },
+    /// Linear ramp from `base_lr / steps` up to `base_lr` over the
+    /// first `steps` steps, constant afterwards.
+    Warmup { steps: usize },
+}
+
+impl StepSchedule {
+    pub fn lr_at(&self, base_lr: f64, step: usize) -> f64 {
+        match *self {
+            StepSchedule::Constant => base_lr,
+            StepSchedule::ExponentialDecay { rate, over } => {
+                let frac = step as f64 / over.max(1) as f64;
+                base_lr * rate.powf(frac)
+            }
+            StepSchedule::Warmup { steps } => {
+                if step < steps {
+                    base_lr * (step + 1) as f64 / steps as f64
+                } else {
+                    base_lr
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // maximize -(x-3)^2 => x -> 3
+        let mut adam = Adam::new(1, 0.05);
+        let mut x = vec![0.0];
+        for _ in 0..2000 {
+            let g = vec![-2.0 * (x[0] - 3.0)];
+            adam.step_ascent(&mut x, &g);
+        }
+        assert!((x[0] - 3.0).abs() < 1e-3, "x {}", x[0]);
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step() {
+        let mut adam = Adam::new(1, 0.1);
+        let mut x = vec![0.0];
+        adam.step_ascent(&mut x, &[1.0]);
+        // first step magnitude ~ lr regardless of gradient scale
+        assert!((x[0] - 0.1).abs() < 1e-6, "x {}", x[0]);
+    }
+
+    #[test]
+    fn sgd_momentum_maximizes_quadratic() {
+        let mut sgd = SgdMomentum::new(1, 0.02, 0.9);
+        let mut x = vec![0.0];
+        for _ in 0..2000 {
+            let g = vec![-2.0 * (x[0] - 3.0)];
+            sgd.step_ascent(&mut x, &g);
+        }
+        assert!((x[0] - 3.0).abs() < 1e-3, "x {}", x[0]);
+    }
+
+    #[test]
+    fn schedules_map_steps_to_rates() {
+        let c = StepSchedule::Constant;
+        assert_eq!(c.lr_at(0.1, 0), 0.1);
+        assert_eq!(c.lr_at(0.1, 999), 0.1);
+
+        let d = StepSchedule::ExponentialDecay {
+            rate: 0.1,
+            over: 100,
+        };
+        assert!((d.lr_at(1.0, 0) - 1.0).abs() < 1e-12);
+        assert!((d.lr_at(1.0, 100) - 0.1).abs() < 1e-12);
+        assert!((d.lr_at(1.0, 50) - 0.1f64.sqrt()).abs() < 1e-12);
+
+        let w = StepSchedule::Warmup { steps: 10 };
+        assert!((w.lr_at(1.0, 0) - 0.1).abs() < 1e-12);
+        assert!((w.lr_at(1.0, 9) - 1.0).abs() < 1e-12);
+        assert_eq!(w.lr_at(1.0, 500), 1.0);
+    }
+
+    #[test]
+    fn optim_kind_parses() {
+        assert_eq!(OptimKind::parse("adam").unwrap(), OptimKind::Adam);
+        assert_eq!(OptimKind::parse("sgd").unwrap(), OptimKind::Sgd);
+        assert!(OptimKind::parse("lbfgs").is_err());
+        assert_eq!(OptimKind::Sgd.name(), "sgd");
+    }
+}

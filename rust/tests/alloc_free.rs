@@ -23,6 +23,9 @@ use fugue::mcmc::{BatchPotential, DrawStats, Potential};
 use fugue::models::skim::SkimHypers;
 use fugue::models::{HmmNative, LogisticNative, SkimNative};
 use fugue::rng::Rng;
+use fugue::svi::{
+    BatchedParticles, ElboEngine, NativeSvi, ScalarParticles, StepSchedule, SviOptions,
+};
 
 thread_local! {
     static ALLOCS: Cell<u64> = const { Cell::new(0) };
@@ -332,6 +335,77 @@ fn frozen_program_evaluations_are_allocation_free() {
         compile_batched(Horseshoe::synthetic(7, 60, 6, 2), 0, 3).unwrap(),
         26,
     );
+}
+
+/// Steady-state bar for the **native SVI engine**: once the guide, the
+/// optimizer state, the ELBO scratch and the frozen tape have warmed
+/// up, a full SVI step — noise draw, K-particle ELBO gradient,
+/// scheduled Adam ascent, trace/averaging bookkeeping — performs zero
+/// heap allocations.
+fn assert_svi_steps_alloc_free<E: ElboEngine>(name: &str, engine: E, opts: &SviOptions) {
+    let mut svi = NativeSvi::new(engine, opts).unwrap();
+    // warm-up: the first step records + freezes the tape program and
+    // settles every buffer's capacity
+    for _ in 0..5 {
+        svi.step();
+    }
+    let before = allocation_count();
+    for _ in 0..25 {
+        svi.step();
+    }
+    let after = allocation_count();
+    assert_eq!(
+        after - before,
+        0,
+        "{name}: steady-state SVI steps performed {} heap allocations",
+        after - before
+    );
+}
+
+/// Zero allocations per SVI step, scalar-particle loop and K in {4, 8}
+/// fused particle lanes, with the schedule and tail averaging active.
+#[test]
+fn svi_steps_are_allocation_free() {
+    let opts = |particles: usize| SviOptions {
+        num_steps: 100,
+        num_particles: particles,
+        lr: 0.02,
+        seed: 41,
+        schedule: StepSchedule::ExponentialDecay {
+            rate: 0.1,
+            over: 100,
+        },
+        tail_average: 1.0,
+        ..Default::default()
+    };
+
+    let es = compile(EightSchools::classic(), 0).unwrap();
+    assert_svi_steps_alloc_free(
+        "svi scalar x4 eight-schools",
+        ScalarParticles::new(es, 4),
+        &opts(4),
+    );
+
+    let esb = compile_batched(EightSchools::classic(), 0, 4).unwrap();
+    assert_svi_steps_alloc_free(
+        "svi batched x4 eight-schools",
+        BatchedParticles::new(esb),
+        &opts(4),
+    );
+
+    let l = data::make_covtype_like(8, 200, 8);
+    let lm = compile_batched(
+        LogisticModel {
+            x: l.x,
+            y: l.y,
+            n: 200,
+            d: 8,
+        },
+        0,
+        8,
+    )
+    .unwrap();
+    assert_svi_steps_alloc_free("svi batched x8 logistic", BatchedParticles::new(lm), &opts(8));
 }
 
 /// Static-trajectory HMC now follows the same workspace idiom as the
