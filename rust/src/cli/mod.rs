@@ -35,6 +35,9 @@ const VALUE_FLAGS: &[&str] = &[
     "particles",
     "optimizer",
     "predictive",
+    "checkpoint",
+    "checkpoint-every",
+    "max-seconds",
 ];
 
 impl Args {
@@ -116,6 +119,17 @@ mod tests {
         let a = parse("run --warmup=250 --dtype=f64");
         assert_eq!(a.get_usize("warmup").unwrap(), Some(250));
         assert_eq!(a.get("dtype"), Some("f64"));
+    }
+
+    #[test]
+    fn checkpoint_flags_take_values() {
+        let a = parse(
+            "sample-model --checkpoint ck.json --resume --max-seconds 2.5 --checkpoint-every 100",
+        );
+        assert_eq!(a.get("checkpoint"), Some("ck.json"));
+        assert!(a.has("resume"));
+        assert_eq!(a.get_f64("max-seconds").unwrap(), Some(2.5));
+        assert_eq!(a.get_usize("checkpoint-every").unwrap(), Some(100));
     }
 
     #[test]

@@ -174,6 +174,46 @@ impl EffModel for LogisticModel {
     }
 }
 
+/// Neal's funnel (Neal 2003) — the canonical divergence benchmark:
+///
+/// ```text
+/// v ~ N(0, 3);  x_i ~ N(0, exp(v / 2))      i = 1..dim
+/// ```
+///
+/// The neck of the funnel (`v` very negative) forces step sizes far
+/// below what the warmup-adapted step can track, so a correct NUTS
+/// implementation reports **nonzero divergences** here while staying
+/// divergence-free on well-conditioned models — the statistical
+/// fingerprint the robustness suite pins
+/// (`rust/tests/chaos.rs::funnel_diverges_conjugate_does_not`).
+///
+/// Flat layout (sorted names): `[v, x_0..x_{dim-1}]`, dim + 1 total.
+#[derive(Debug, Clone)]
+pub struct NealsFunnel {
+    /// Number of `x` coordinates (9 in Neal's original).
+    pub dim: usize,
+}
+
+impl NealsFunnel {
+    /// Neal's original 10-dimensional funnel (one `v`, nine `x`).
+    pub fn classic() -> NealsFunnel {
+        NealsFunnel { dim: 9 }
+    }
+}
+
+impl EffModel for NealsFunnel {
+    fn run<C: ProbCtx>(&self, c: &mut C) {
+        let prior = c.normal(0.0, 3.0);
+        let v = c.sample("v", prior);
+        let half_v = c.scale(v, 0.5);
+        let s = c.exp(half_v);
+        let zero = c.lit(0.0);
+        let mut x = c.vec_take();
+        c.sample_vec("x", DistV::Normal { loc: zero, scale: s }, self.dim, &mut x);
+        c.vec_put(x);
+    }
+}
+
 /// A conjugate Normal-Normal toy (known posterior) for statistical
 /// smoke tests: `mu ~ N(0, 1); y_i ~ N(mu, sigma)`.
 #[derive(Debug, Clone)]
@@ -210,6 +250,22 @@ mod tests {
         let u = hs.value_and_grad(&vec![0.05; hs.dim()], &mut g);
         assert!(u.is_finite());
         assert!(g.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn funnel_compiles_and_scale_depends_on_v() {
+        let mut pot = compile(NealsFunnel::classic(), 0).unwrap();
+        assert_eq!(pot.dim(), 10);
+        let mut g = vec![0.0; 10];
+        let u = pot.value_and_grad(&vec![0.1; 10], &mut g);
+        assert!(u.is_finite());
+        assert!(g.iter().all(|x| x.is_finite()));
+        // density must couple v and x: dU/dv changes with x
+        let mut g2 = vec![0.0; 10];
+        let mut z2 = vec![0.1; 10];
+        z2[1] = 3.0;
+        let _ = pot.value_and_grad(&z2, &mut g2);
+        assert!((g[0] - g2[0]).abs() > 1e-9, "funnel decoupled: {} {}", g[0], g2[0]);
     }
 
     #[test]

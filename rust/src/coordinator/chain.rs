@@ -59,6 +59,13 @@ pub struct ChainResult {
     pub sample_leapfrogs: u64,
     pub total_leapfrogs: u64,
     pub divergences: u64,
+    /// Poisoned draws contained by the fault layer: the trajectory's
+    /// starting energy was non-finite, no leapfrog was taken, and the
+    /// chain stayed at its last good position (see
+    /// [`crate::mcmc::DrawStats::poisoned`]).  Always 0 on a healthy
+    /// run; nonzero values are the per-chain health signal the
+    /// diagnostics surface.
+    pub quarantines: u64,
 }
 
 impl ChainResult {
@@ -66,6 +73,150 @@ impl ChainResult {
     pub fn ms_per_leapfrog(&self) -> f64 {
         1e3 * self.sample_secs / self.sample_leapfrogs.max(1) as f64
     }
+}
+
+/// The complete resumable state of one chain between draws: position,
+/// RNG stream (including the cached Box-Muller spare), warmup
+/// adaptation (dual averaging + Welford window), accumulated
+/// samples/statistics and counters.  Draw boundaries are full
+/// checkpoints — the tree workspaces are pure per-draw scratch
+/// re-initialized from `z` each draw — so serializing a cursor
+/// (`crate::coordinator::checkpoint`) and resuming continues the chain
+/// **bitwise-identically**.
+#[derive(Debug, Clone)]
+pub struct ChainCursor {
+    /// Index of the next draw (0-based over warmup + sampling).
+    pub i: usize,
+    pub z: Vec<f64>,
+    pub rng: Rng,
+    pub da: DualAverage,
+    pub welford: Welford,
+    pub step_size: f64,
+    pub inv_mass: Vec<f64>,
+    pub stats: ChainStats,
+    pub samples: Vec<f64>,
+    pub sample_leapfrogs: u64,
+    pub total_leapfrogs: u64,
+    pub divergences: u64,
+    pub quarantines: u64,
+}
+
+impl ChainCursor {
+    /// Fresh cursor at draw 0.  `opts.seed` must already be the
+    /// *chain-level* seed (i.e. [`chain_start`]'s derived options).
+    pub fn new(init_z: &[f64], opts: &NutsOptions) -> ChainCursor {
+        let dim = init_z.len();
+        let total = opts.num_warmup + opts.num_samples;
+        let mut stats = ChainStats::default();
+        stats.accept_prob.reserve(total);
+        stats.num_leapfrog.reserve(total);
+        stats.potential.reserve(total);
+        stats.diverging.reserve(total);
+        stats.depth.reserve(total);
+        ChainCursor {
+            i: 0,
+            z: init_z.to_vec(),
+            rng: Rng::new(opts.seed),
+            da: DualAverage::new(
+                opts.fixed_step_size.unwrap_or(opts.init_step_size),
+                opts.target_accept,
+            ),
+            welford: Welford::new(dim),
+            step_size: opts.fixed_step_size.unwrap_or(opts.init_step_size),
+            inv_mass: vec![1.0; dim],
+            stats,
+            samples: Vec::with_capacity(opts.num_samples * dim),
+            sample_leapfrogs: 0,
+            total_leapfrogs: 0,
+            divergences: 0,
+            quarantines: 0,
+        }
+    }
+
+    /// Package the (possibly partial) accumulated state as a
+    /// [`ChainResult`].  Timing is supplied by the caller — wall-clock
+    /// is outside the bitwise-resume contract.
+    pub fn into_result(self, warmup_secs: f64, sample_secs: f64) -> ChainResult {
+        let dim = self.inv_mass.len();
+        ChainResult {
+            samples: self.samples,
+            dim,
+            stats: self.stats,
+            step_size: self.step_size,
+            inv_mass: self.inv_mass,
+            warmup_secs,
+            sample_secs,
+            sample_leapfrogs: self.sample_leapfrogs,
+            total_leapfrogs: self.total_leapfrogs,
+            divergences: self.divergences,
+            quarantines: self.quarantines,
+        }
+    }
+}
+
+/// Advance one draw: the loop body of [`run_chain`], factored out so
+/// checkpointed/budgeted runners replay the **exact** statement order
+/// (and hence stay bitwise-identical to an uninterrupted run).
+///
+/// Containment: a poisoned transition (non-finite starting energy —
+/// `diverging` with zero leapfrogs) is counted in `quarantines`, and
+/// its `accept_prob`/position are kept **out** of the dual-averaging
+/// and Welford feeds so one faulted evaluation cannot corrupt warmup
+/// adaptation; the chain holds its last good position (the sampler
+/// already proposes the unchanged start).
+pub(crate) fn advance_chain<S: Sampler>(
+    sampler: &mut S,
+    cur: &mut ChainCursor,
+    opts: &NutsOptions,
+    schedule: &WarmupSchedule,
+    closes: &[usize],
+) -> Result<()> {
+    let i = cur.i;
+    let tr = sampler.draw(&mut cur.rng, &cur.z, cur.step_size, &cur.inv_mass)?;
+    let poisoned = tr.diverging && tr.num_leapfrog == 0;
+    cur.z.copy_from_slice(&tr.z);
+    cur.total_leapfrogs += tr.num_leapfrog as u64;
+    if tr.diverging {
+        cur.divergences += 1;
+    }
+    if poisoned {
+        cur.quarantines += 1;
+    }
+    cur.stats.accept_prob.push(tr.accept_prob);
+    cur.stats.num_leapfrog.push(tr.num_leapfrog);
+    cur.stats.potential.push(tr.potential);
+    cur.stats.diverging.push(tr.diverging);
+    cur.stats.depth.push(tr.depth);
+
+    if i < opts.num_warmup {
+        if opts.fixed_step_size.is_none() {
+            if !poisoned {
+                cur.da.update(tr.accept_prob);
+            }
+            cur.step_size = cur.da.step_size();
+        }
+        if opts.adapt_mass && schedule.in_slow(i) {
+            if !poisoned {
+                cur.welford.update(&cur.z);
+            }
+            if closes.contains(&i) {
+                cur.inv_mass = cur.welford.regularized_variance();
+                cur.welford.reset();
+                if opts.fixed_step_size.is_none() {
+                    cur.da.restart(cur.da.step_size());
+                    cur.step_size = cur.da.step_size();
+                }
+            }
+        }
+        if i + 1 == opts.num_warmup && opts.fixed_step_size.is_none() {
+            cur.step_size = cur.da.final_step_size();
+        }
+    } else {
+        cur.samples.extend_from_slice(&cur.z);
+        cur.sample_leapfrogs += tr.num_leapfrog as u64;
+    }
+    cur.i = i + 1;
+    Ok(())
 }
 
 /// Run one chain: Stan-style warmup + sampling.
@@ -76,91 +227,24 @@ pub fn run_chain<S: Sampler>(
 ) -> Result<ChainResult> {
     let dim = sampler.dim();
     assert_eq!(init_z.len(), dim);
-    let mut rng = Rng::new(opts.seed);
     let schedule = WarmupSchedule::build(opts.num_warmup);
     let closes = schedule.window_closes();
-
-    let mut z = init_z.to_vec();
-    let mut inv_mass = vec![1.0; dim];
-    let mut da = DualAverage::new(
-        opts.fixed_step_size.unwrap_or(opts.init_step_size),
-        opts.target_accept,
-    );
-    let mut step_size = opts.fixed_step_size.unwrap_or(opts.init_step_size);
-    let mut welford = Welford::new(dim);
-
     let total = opts.num_warmup + opts.num_samples;
-    let mut stats = ChainStats::default();
-    stats.accept_prob.reserve(total);
-    stats.num_leapfrog.reserve(total);
-    stats.potential.reserve(total);
-    stats.diverging.reserve(total);
-    stats.depth.reserve(total);
-    let mut samples = Vec::with_capacity(opts.num_samples * dim);
-    let mut sample_leapfrogs: u64 = 0;
-    let mut total_leapfrogs: u64 = 0;
-    let mut divergences: u64 = 0;
 
+    let mut cur = ChainCursor::new(init_z, opts);
     let t_warm = std::time::Instant::now();
     let mut warmup_secs = 0.0;
-
-    for i in 0..total {
-        let tr = sampler.draw(&mut rng, &z, step_size, &inv_mass)?;
-        z.copy_from_slice(&tr.z);
-        total_leapfrogs += tr.num_leapfrog as u64;
-        if tr.diverging {
-            divergences += 1;
-        }
-        stats.accept_prob.push(tr.accept_prob);
-        stats.num_leapfrog.push(tr.num_leapfrog);
-        stats.potential.push(tr.potential);
-        stats.diverging.push(tr.diverging);
-        stats.depth.push(tr.depth);
-
-        if i < opts.num_warmup {
-            if opts.fixed_step_size.is_none() {
-                da.update(tr.accept_prob);
-                step_size = da.step_size();
-            }
-            if opts.adapt_mass && schedule.in_slow(i) {
-                welford.update(&z);
-                if closes.contains(&i) {
-                    inv_mass = welford.regularized_variance();
-                    welford.reset();
-                    if opts.fixed_step_size.is_none() {
-                        da.restart(da.step_size());
-                        step_size = da.step_size();
-                    }
-                }
-            }
-            if i + 1 == opts.num_warmup {
-                if opts.fixed_step_size.is_none() {
-                    step_size = da.final_step_size();
-                }
-                warmup_secs = t_warm.elapsed().as_secs_f64();
-            }
-        } else {
-            samples.extend_from_slice(&z);
-            sample_leapfrogs += tr.num_leapfrog as u64;
+    while cur.i < total {
+        advance_chain(sampler, &mut cur, opts, &schedule, &closes)?;
+        if cur.i == opts.num_warmup {
+            warmup_secs = t_warm.elapsed().as_secs_f64();
         }
     }
     if opts.num_warmup == 0 {
         warmup_secs = 0.0;
     }
     let sample_secs = t_warm.elapsed().as_secs_f64() - warmup_secs;
-
-    Ok(ChainResult {
-        samples,
-        dim,
-        stats,
-        step_size,
-        inv_mass,
-        warmup_secs,
-        sample_secs,
-        sample_leapfrogs,
-        total_leapfrogs,
-        divergences,
-    })
+    Ok(cur.into_result(warmup_secs, sample_secs))
 }
 
 /// Deterministic per-chain start: chain `c` draws its uniform(-2,2)

@@ -1,0 +1,788 @@
+//! Checkpoint/resume for both inference engines — the persistence half
+//! of the fault-containment layer.
+//!
+//! A checkpoint is a **draw-boundary snapshot**: the complete resumable
+//! state of every chain ([`ChainCursor`]) or of an SVI fit
+//! ([`SviCursor`]) at the moment all per-draw scratch is dead.  Because
+//! the runners below replay the exact statement order of the
+//! uninterrupted loops ([`advance_chain`] /
+//! [`run_chains_vectorized_from`] / `NativeSvi::run_with`), a run that
+//! is killed, reloaded and resumed produces **bitwise-identical**
+//! samples, statistics and adapted tuning to one that never stopped —
+//! pinned by this module's tests and `rust/tests/chaos.rs`.
+//!
+//! ## Format
+//!
+//! The file is JSON (the crate's own [`crate::util::json`] — no serde
+//! in the offline dependency set) with one deliberate twist: every
+//! `f64` and every `u64` is stored as its 16-hex-digit bit pattern
+//! (`f64::to_bits` / the raw integer), e.g. `"3fe0000000000000"` for
+//! `0.5`.  Decimal round-tripping through a `f64`-backed parser cannot
+//! represent NaN/±Inf and risks last-ulp drift — bit patterns make the
+//! resume contract exact by construction.  Counters small enough to be
+//! exact in a double (`i`, lengths, `num_leapfrog`, `depth`) stay plain
+//! JSON numbers for readability.
+//!
+//! Writes are atomic (temp file + rename), so a kill mid-write leaves
+//! the previous checkpoint intact, never a torn file.
+//!
+//! ## Budgets
+//!
+//! Every runner takes an optional wall-clock deadline
+//! ([`CheckpointConfig::max_seconds`]).  Crossing it is not an error:
+//! the run stops at the next draw/step boundary, saves a final
+//! checkpoint, and returns partial results with `completed = false`
+//! (the CLI surfaces [`crate::error::InferenceError::BudgetExhausted`]
+//! as a warning, not a failure).
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::compile::{BatchedCompiledModel, CompiledModel, EffModel, SiteLayout};
+use crate::coordinator::chain::{
+    advance_chain, chain_start, ChainCursor, ChainResult, ChainStats, NutsOptions,
+};
+use crate::coordinator::sampler::{NativeSampler, Sampler, TreeAlgorithm};
+use crate::coordinator::vectorized::{run_chains_vectorized_from, ChainMethod};
+use crate::coordinator::warmup::WarmupSchedule;
+use crate::error::InferenceError;
+use crate::mcmc::{DualAverage, Welford};
+use crate::rng::Rng;
+use crate::svi::native::{
+    BatchedParticles, NativeSvi, NativeSviResult, ScalarParticles, SviCursor, SviOptions,
+};
+use crate::util::json::Json;
+
+/// How a checkpointed run persists and budgets itself.
+#[derive(Debug, Clone, Default)]
+pub struct CheckpointConfig {
+    /// Checkpoint file (`--checkpoint`).  `None` disables persistence
+    /// (budgets still work — the partial results are just not
+    /// resumable).
+    pub path: Option<PathBuf>,
+    /// Load `path` and continue from it (`--resume`).  Ignored when the
+    /// file does not exist yet, so `--resume` is safe on the first run.
+    pub resume: bool,
+    /// Save every N draws/steps (`--checkpoint-every`, 0 = only the
+    /// final snapshot).
+    pub every: usize,
+    /// Wall-clock budget for this invocation (`--max-seconds`).
+    pub max_seconds: Option<f64>,
+}
+
+impl CheckpointConfig {
+    pub fn deadline(&self) -> Option<Instant> {
+        self.max_seconds
+            .map(|s| Instant::now() + Duration::from_secs_f64(s.max(0.0)))
+    }
+}
+
+// ---------------------------------------------------------------------
+// encoding helpers: exact bit-pattern JSON
+// ---------------------------------------------------------------------
+
+fn enc_f64(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+fn enc_u64(x: u64) -> Json {
+    Json::Str(format!("{:016x}", x))
+}
+
+fn enc_f64s(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| enc_f64(x)).collect())
+}
+
+fn enc_u32s(xs: &[u32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn enc_bools(xs: &[bool]) -> Json {
+    Json::Arr(xs.iter().map(|&b| Json::Bool(b)).collect())
+}
+
+fn ck_err(path: &Path, msg: String) -> anyhow::Error {
+    InferenceError::Checkpoint {
+        path: path.display().to_string(),
+        msg,
+    }
+    .into()
+}
+
+fn dec_u64(j: &Json) -> Option<u64> {
+    let s = j.as_str()?;
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+fn dec_f64(j: &Json) -> Option<f64> {
+    dec_u64(j).map(f64::from_bits)
+}
+
+fn dec_f64s(j: &Json) -> Option<Vec<f64>> {
+    j.as_arr()?.iter().map(dec_f64).collect()
+}
+
+fn dec_u32s(j: &Json) -> Option<Vec<u32>> {
+    j.as_arr()?
+        .iter()
+        .map(|v| v.as_f64().map(|n| n as u32))
+        .collect()
+}
+
+fn dec_bools(j: &Json) -> Option<Vec<bool>> {
+    j.as_arr()?.iter().map(|v| v.as_bool()).collect()
+}
+
+/// Fetch + decode one field of a checkpoint object, with the field name
+/// in the error.
+fn field<T>(
+    obj: &Json,
+    key: &str,
+    path: &Path,
+    dec: impl Fn(&Json) -> Option<T>,
+) -> Result<T> {
+    obj.get(key)
+        .and_then(dec)
+        .ok_or_else(|| ck_err(path, format!("missing or malformed field '{key}'")))
+}
+
+fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, text).map_err(|e| ck_err(&tmp, format!("write failed: {e}")))?;
+    std::fs::rename(&tmp, path).map_err(|e| ck_err(path, format!("rename failed: {e}")))?;
+    Ok(())
+}
+
+fn load_root(path: &Path, format: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| ck_err(path, format!("read failed: {e}")))?;
+    let root = Json::parse(&text).map_err(|e| ck_err(path, format!("parse failed: {e}")))?;
+    let got = root.get("format").and_then(|f| f.as_str()).unwrap_or("?");
+    if got != format {
+        return Err(ck_err(path, format!("format is '{got}', expected '{format}'")));
+    }
+    let version = root.get("version").and_then(|v| v.as_i64()).unwrap_or(-1);
+    if version != 1 {
+        return Err(ck_err(path, format!("unsupported version {version}")));
+    }
+    Ok(root)
+}
+
+/// Validate one header field against the resuming run's configuration.
+fn check_cfg(path: &Path, key: &str, expected: u64, got: Option<u64>) -> Result<()> {
+    match got {
+        Some(g) if g == expected => Ok(()),
+        other => Err(InferenceError::LayoutViolation {
+            expected: format!("{key}={expected}"),
+            got: format!("{key}={other:?}"),
+            context: format!("checkpoint {}", path.display()),
+        }
+        .into()),
+    }
+}
+
+// ---------------------------------------------------------------------
+// chain checkpoints
+// ---------------------------------------------------------------------
+
+fn cursor_to_json(cur: &ChainCursor) -> Json {
+    let (rng_s, rng_spare) = cur.rng.state();
+    let (ls, lsa, gs, t, mu, target) = cur.da.state();
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("i".into(), Json::Num(cur.i as f64));
+    o.insert("z".into(), enc_f64s(&cur.z));
+    o.insert(
+        "rng_s".into(),
+        Json::Arr(rng_s.iter().map(|&w| enc_u64(w)).collect()),
+    );
+    o.insert(
+        "rng_spare".into(),
+        rng_spare.map_or(Json::Null, enc_f64),
+    );
+    o.insert("da".into(), enc_f64s(&[ls, lsa, gs, t, mu, target]));
+    o.insert("wf_mean".into(), enc_f64s(&cur.welford.mean));
+    o.insert("wf_m2".into(), enc_f64s(cur.welford.m2()));
+    o.insert("wf_count".into(), enc_u64(cur.welford.count));
+    o.insert("step_size".into(), enc_f64(cur.step_size));
+    o.insert("inv_mass".into(), enc_f64s(&cur.inv_mass));
+    o.insert("accept_prob".into(), enc_f64s(&cur.stats.accept_prob));
+    o.insert("num_leapfrog".into(), enc_u32s(&cur.stats.num_leapfrog));
+    o.insert("potential".into(), enc_f64s(&cur.stats.potential));
+    o.insert("diverging".into(), enc_bools(&cur.stats.diverging));
+    o.insert("depth".into(), enc_u32s(&cur.stats.depth));
+    o.insert("samples".into(), enc_f64s(&cur.samples));
+    o.insert("sample_leapfrogs".into(), enc_u64(cur.sample_leapfrogs));
+    o.insert("total_leapfrogs".into(), enc_u64(cur.total_leapfrogs));
+    o.insert("divergences".into(), enc_u64(cur.divergences));
+    o.insert("quarantines".into(), enc_u64(cur.quarantines));
+    Json::Obj(o)
+}
+
+fn cursor_from_json(j: &Json, path: &Path, dim: usize) -> Result<ChainCursor> {
+    let i = field(j, "i", path, |v| v.as_usize())?;
+    let z = field(j, "z", path, dec_f64s)?;
+    if z.len() != dim {
+        return Err(InferenceError::LayoutViolation {
+            expected: format!("dim={dim}"),
+            got: format!("dim={}", z.len()),
+            context: format!("checkpoint {}", path.display()),
+        }
+        .into());
+    }
+    let rng_s_v = field(j, "rng_s", path, |v| {
+        v.as_arr()?.iter().map(dec_u64).collect::<Option<Vec<u64>>>()
+    })?;
+    if rng_s_v.len() != 4 {
+        return Err(ck_err(path, "rng_s must have 4 words".into()));
+    }
+    let rng_spare = match j.get("rng_spare") {
+        Some(Json::Null) | None => None,
+        Some(v) => Some(
+            dec_f64(v).ok_or_else(|| ck_err(path, "malformed field 'rng_spare'".into()))?,
+        ),
+    };
+    let da_v = field(j, "da", path, dec_f64s)?;
+    if da_v.len() != 6 {
+        return Err(ck_err(path, "da must have 6 entries".into()));
+    }
+    let wf_mean = field(j, "wf_mean", path, dec_f64s)?;
+    let wf_m2 = field(j, "wf_m2", path, dec_f64s)?;
+    if wf_mean.len() != dim || wf_m2.len() != dim {
+        return Err(ck_err(path, "welford buffers have wrong length".into()));
+    }
+    let stats = ChainStats {
+        accept_prob: field(j, "accept_prob", path, dec_f64s)?,
+        num_leapfrog: field(j, "num_leapfrog", path, dec_u32s)?,
+        potential: field(j, "potential", path, dec_f64s)?,
+        diverging: field(j, "diverging", path, dec_bools)?,
+        depth: field(j, "depth", path, dec_u32s)?,
+    };
+    if stats.accept_prob.len() != i
+        || stats.num_leapfrog.len() != i
+        || stats.potential.len() != i
+        || stats.diverging.len() != i
+        || stats.depth.len() != i
+    {
+        return Err(ck_err(path, format!("stats length disagrees with draw index {i}")));
+    }
+    Ok(ChainCursor {
+        i,
+        z,
+        rng: Rng::from_state([rng_s_v[0], rng_s_v[1], rng_s_v[2], rng_s_v[3]], rng_spare),
+        da: DualAverage::from_state(da_v[0], da_v[1], da_v[2], da_v[3], da_v[4], da_v[5]),
+        welford: Welford::from_state(wf_mean, wf_m2, field(j, "wf_count", path, dec_u64)?),
+        step_size: field(j, "step_size", path, dec_f64)?,
+        inv_mass: field(j, "inv_mass", path, dec_f64s)?,
+        stats,
+        samples: field(j, "samples", path, dec_f64s)?,
+        sample_leapfrogs: field(j, "sample_leapfrogs", path, dec_u64)?,
+        total_leapfrogs: field(j, "total_leapfrogs", path, dec_u64)?,
+        divergences: field(j, "divergences", path, dec_u64)?,
+        quarantines: field(j, "quarantines", path, dec_u64)?,
+    })
+}
+
+/// Serialize every chain's draw-boundary state atomically.
+pub fn save_chain_checkpoint(
+    path: &Path,
+    opts: &NutsOptions,
+    dim: usize,
+    cursors: &[ChainCursor],
+) -> Result<()> {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("format".into(), Json::Str("fugue-chain-checkpoint".into()));
+    o.insert("version".into(), Json::Num(1.0));
+    o.insert("dim".into(), Json::Num(dim as f64));
+    o.insert("num_warmup".into(), Json::Num(opts.num_warmup as f64));
+    o.insert("num_samples".into(), Json::Num(opts.num_samples as f64));
+    o.insert("seed".into(), enc_u64(opts.seed));
+    o.insert("num_chains".into(), Json::Num(cursors.len() as f64));
+    o.insert(
+        "cursors".into(),
+        Json::Arr(cursors.iter().map(cursor_to_json).collect()),
+    );
+    write_atomic(path, &Json::Obj(o).to_string_pretty())
+}
+
+/// Load a chain checkpoint and validate it against the resuming run's
+/// configuration (dimension, draw counts, seed, chain count must all
+/// match — resuming under different options would silently break the
+/// bitwise contract, so it is refused).
+pub fn load_chain_checkpoint(
+    path: &Path,
+    opts: &NutsOptions,
+    num_chains: usize,
+    dim: usize,
+) -> Result<Vec<ChainCursor>> {
+    let root = load_root(path, "fugue-chain-checkpoint")?;
+    check_cfg(path, "dim", dim as u64, root.get("dim").and_then(|v| v.as_f64()).map(|n| n as u64))?;
+    check_cfg(
+        path,
+        "num_warmup",
+        opts.num_warmup as u64,
+        root.get("num_warmup").and_then(|v| v.as_f64()).map(|n| n as u64),
+    )?;
+    check_cfg(
+        path,
+        "num_samples",
+        opts.num_samples as u64,
+        root.get("num_samples").and_then(|v| v.as_f64()).map(|n| n as u64),
+    )?;
+    check_cfg(path, "seed", opts.seed, root.get("seed").and_then(dec_u64))?;
+    check_cfg(
+        path,
+        "num_chains",
+        num_chains as u64,
+        root.get("num_chains").and_then(|v| v.as_f64()).map(|n| n as u64),
+    )?;
+    let arr = root
+        .get("cursors")
+        .and_then(|c| c.as_arr())
+        .ok_or_else(|| ck_err(path, "missing 'cursors' array".into()))?;
+    if arr.len() != num_chains {
+        return Err(ck_err(path, format!("{} cursors for {num_chains} chains", arr.len())));
+    }
+    arr.iter().map(|c| cursor_from_json(c, path, dim)).collect()
+}
+
+/// Sequential chains with checkpoint/resume and a wall-clock budget:
+/// the containment-aware twin of [`crate::coordinator::run_chains`],
+/// bitwise-identical to it (and to an interrupted + resumed invocation
+/// of itself) draw for draw.  Returns `(results, completed)`;
+/// `completed = false` means the budget cut the run short and the
+/// results are partial (resumable from the saved checkpoint).
+pub fn run_chains_checkpointed<S: Sampler>(
+    sampler: &mut S,
+    num_chains: usize,
+    opts: &NutsOptions,
+    cfg: &CheckpointConfig,
+) -> Result<(Vec<ChainResult>, bool)> {
+    let dim = sampler.dim();
+    let total = opts.num_warmup + opts.num_samples;
+    let schedule = WarmupSchedule::build(opts.num_warmup);
+    let closes = schedule.window_closes();
+    let starts: Vec<(Vec<f64>, NutsOptions)> =
+        (0..num_chains).map(|c| chain_start(dim, opts, c)).collect();
+
+    let mut cursors: Vec<ChainCursor> = match &cfg.path {
+        Some(p) if cfg.resume && p.exists() => load_chain_checkpoint(p, opts, num_chains, dim)?,
+        _ => starts.iter().map(|(z, o)| ChainCursor::new(z, o)).collect(),
+    };
+
+    let deadline = cfg.deadline();
+    let mut completed = true;
+    let mut timings = vec![(0.0, 0.0); num_chains];
+    let mut since_save = 0usize;
+    for c in 0..num_chains {
+        if !completed {
+            break;
+        }
+        let t0 = Instant::now();
+        let mut warm = 0.0;
+        while cursors[c].i < total {
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    completed = false;
+                    break;
+                }
+            }
+            advance_chain(sampler, &mut cursors[c], &starts[c].1, &schedule, &closes)?;
+            if cursors[c].i == opts.num_warmup {
+                warm = t0.elapsed().as_secs_f64();
+            }
+            since_save += 1;
+            if cfg.every > 0 && since_save % cfg.every == 0 {
+                if let Some(p) = &cfg.path {
+                    save_chain_checkpoint(p, opts, dim, &cursors)?;
+                }
+            }
+        }
+        timings[c] = (warm, t0.elapsed().as_secs_f64() - warm);
+    }
+    if let Some(p) = &cfg.path {
+        save_chain_checkpoint(p, opts, dim, &cursors)?;
+    }
+    let results = cursors
+        .into_iter()
+        .zip(timings)
+        .map(|(cur, (w, s))| cur.into_result(w, s))
+        .collect();
+    Ok((results, completed))
+}
+
+/// Compile an effect-handler program and run checkpointed/budgeted
+/// chains with the chosen execution strategy — the fault-contained
+/// twin of [`crate::coordinator::run_compiled_chains_method`].
+///
+/// `Sequential` and `Parallel` both run the sequential checkpointed
+/// loop: a global draw-boundary snapshot wants one thread of control,
+/// and the three methods are bitwise-identical anyway, so nothing in
+/// the output changes.  `Vectorized` drives the lock-step engine
+/// through its native checkpoint sink.  A checkpoint written by the
+/// vectorized engine (all chains parked at one draw index) resumes
+/// under any method; a mid-chain sequential checkpoint resumes
+/// sequentially only — the vectorized path refuses it with a
+/// descriptive [`InferenceError::Checkpoint`].
+pub fn run_compiled_chains_checkpointed<M: EffModel + Clone + Sync>(
+    model: &M,
+    method: ChainMethod,
+    num_chains: usize,
+    max_tree_depth: u32,
+    opts: &NutsOptions,
+    cfg: &CheckpointConfig,
+) -> Result<(SiteLayout, Vec<ChainResult>, bool)> {
+    let layout = SiteLayout::trace(model, opts.seed)?;
+    if num_chains == 0 {
+        return Ok((layout, Vec::new(), true));
+    }
+    match method {
+        ChainMethod::Sequential | ChainMethod::Parallel => {
+            let mut sampler = NativeSampler::new(
+                CompiledModel::new(model.clone(), layout.clone()),
+                TreeAlgorithm::Iterative,
+                max_tree_depth,
+            );
+            let (results, completed) =
+                run_chains_checkpointed(&mut sampler, num_chains, opts, cfg)?;
+            Ok((layout, results, completed))
+        }
+        ChainMethod::Vectorized => {
+            let dim = layout.dim;
+            let mut cursors: Vec<ChainCursor> = match &cfg.path {
+                Some(p) if cfg.resume && p.exists() => {
+                    let cs = load_chain_checkpoint(p, opts, num_chains, dim)?;
+                    if cs.iter().any(|c| c.i != cs[0].i) {
+                        return Err(ck_err(
+                            p,
+                            "not a lock-step snapshot (chains at different draw \
+                             indices — written by a sequential run?); resume with \
+                             --chain-method sequential"
+                                .into(),
+                        ));
+                    }
+                    cs
+                }
+                _ => (0..num_chains)
+                    .map(|k| {
+                        let (init_z, chain_opts) = chain_start(dim, opts, k);
+                        ChainCursor::new(&init_z, &chain_opts)
+                    })
+                    .collect(),
+            };
+            let mut pot =
+                BatchedCompiledModel::new(model.clone(), layout.clone(), num_chains);
+            let save_path = cfg.path.clone();
+            let o = opts.clone();
+            let (warmup_secs, sample_secs, completed) = run_chains_vectorized_from(
+                &mut pot,
+                opts,
+                max_tree_depth,
+                &mut cursors,
+                cfg.deadline(),
+                cfg.every,
+                &mut |cs| match &save_path {
+                    Some(p) => save_chain_checkpoint(p, &o, dim, cs),
+                    None => Ok(()),
+                },
+            )?;
+            if let Some(p) = &cfg.path {
+                save_chain_checkpoint(p, opts, dim, &cursors)?;
+            }
+            let results = cursors
+                .into_iter()
+                .map(|c| c.into_result(warmup_secs, sample_secs))
+                .collect();
+            Ok((layout, results, completed))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SVI checkpoints
+// ---------------------------------------------------------------------
+
+/// Serialize an SVI step-boundary snapshot atomically.
+pub fn save_svi_checkpoint(
+    path: &Path,
+    seed: u64,
+    num_steps: usize,
+    cur: &SviCursor,
+) -> Result<()> {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("format".into(), Json::Str("fugue-svi-checkpoint".into()));
+    o.insert("version".into(), Json::Num(1.0));
+    o.insert("dim".into(), Json::Num((cur.params.len() / 2) as f64));
+    o.insert("num_steps".into(), Json::Num(num_steps as f64));
+    o.insert("seed".into(), enc_u64(seed));
+    o.insert("params".into(), enc_f64s(&cur.params));
+    o.insert(
+        "opt_moments".into(),
+        Json::Arr(cur.opt_moments.iter().map(|m| enc_f64s(m)).collect()),
+    );
+    o.insert("opt_t".into(), enc_u64(cur.opt_t));
+    o.insert(
+        "rng_s".into(),
+        Json::Arr(cur.rng_s.iter().map(|&w| enc_u64(w)).collect()),
+    );
+    o.insert("rng_spare".into(), cur.rng_spare.map_or(Json::Null, enc_f64));
+    o.insert("elbo_trace".into(), enc_f64s(&cur.elbo_trace));
+    o.insert("avg_params".into(), enc_f64s(&cur.avg_params));
+    o.insert("avg_count".into(), enc_u64(cur.avg_count));
+    o.insert("backoff".into(), enc_f64(cur.backoff));
+    o.insert("skipped".into(), enc_u64(cur.skipped));
+    write_atomic(path, &Json::Obj(o).to_string_pretty())
+}
+
+/// Load an SVI checkpoint, validating dimension/step-count/seed against
+/// the resuming run.
+pub fn load_svi_checkpoint(
+    path: &Path,
+    seed: u64,
+    num_steps: usize,
+    dim: usize,
+) -> Result<SviCursor> {
+    let root = load_root(path, "fugue-svi-checkpoint")?;
+    check_cfg(path, "dim", dim as u64, root.get("dim").and_then(|v| v.as_f64()).map(|n| n as u64))?;
+    check_cfg(
+        path,
+        "num_steps",
+        num_steps as u64,
+        root.get("num_steps").and_then(|v| v.as_f64()).map(|n| n as u64),
+    )?;
+    check_cfg(path, "seed", seed, root.get("seed").and_then(dec_u64))?;
+    let rng_s_v = field(&root, "rng_s", path, |v| {
+        v.as_arr()?.iter().map(dec_u64).collect::<Option<Vec<u64>>>()
+    })?;
+    if rng_s_v.len() != 4 {
+        return Err(ck_err(path, "rng_s must have 4 words".into()));
+    }
+    let rng_spare = match root.get("rng_spare") {
+        Some(Json::Null) | None => None,
+        Some(v) => Some(
+            dec_f64(v).ok_or_else(|| ck_err(path, "malformed field 'rng_spare'".into()))?,
+        ),
+    };
+    let opt_moments = field(&root, "opt_moments", path, |v| {
+        v.as_arr()?.iter().map(dec_f64s).collect::<Option<Vec<Vec<f64>>>>()
+    })?;
+    Ok(SviCursor {
+        params: field(&root, "params", path, dec_f64s)?,
+        opt_moments,
+        opt_t: field(&root, "opt_t", path, dec_u64)?,
+        rng_s: [rng_s_v[0], rng_s_v[1], rng_s_v[2], rng_s_v[3]],
+        rng_spare,
+        elbo_trace: field(&root, "elbo_trace", path, dec_f64s)?,
+        avg_params: field(&root, "avg_params", path, dec_f64s)?,
+        avg_count: field(&root, "avg_count", path, dec_u64)?,
+        backoff: field(&root, "backoff", path, dec_f64)?,
+        skipped: field(&root, "skipped", path, dec_u64)?,
+    })
+}
+
+/// Compile a model and fit it with the native SVI engine under
+/// checkpoint/resume and a wall-clock budget — the fault-contained twin
+/// of [`crate::coordinator::run_svi_native`], bitwise-identical to it
+/// (and to an interrupted + resumed invocation of itself) step for
+/// step.
+pub fn run_svi_checkpointed<M: EffModel + Clone>(
+    model: &M,
+    opts: &SviOptions,
+    cfg: &CheckpointConfig,
+) -> Result<(SiteLayout, NativeSviResult)> {
+    anyhow::ensure!(opts.num_particles > 0, "SVI needs at least one ELBO particle");
+    let layout = SiteLayout::trace(model, opts.seed)?;
+    let save_path = cfg.path.clone();
+    let (seed, num_steps) = (opts.seed, opts.num_steps);
+    let mut sink = move |cur: &SviCursor| match &save_path {
+        Some(p) => save_svi_checkpoint(p, seed, num_steps, cur),
+        None => Ok(()),
+    };
+    fn restore_into<E: crate::svi::native::ElboEngine>(
+        svi: &mut NativeSvi<E>,
+        cfg: &CheckpointConfig,
+        seed: u64,
+        num_steps: usize,
+        dim: usize,
+    ) -> Result<()> {
+        if let Some(p) = &cfg.path {
+            if cfg.resume && p.exists() {
+                let cur = load_svi_checkpoint(p, seed, num_steps, dim)?;
+                svi.import_cursor(&cur)?;
+            }
+        }
+        Ok(())
+    }
+    let result = if opts.vectorize_particles && opts.num_particles > 1 {
+        let pot = BatchedCompiledModel::new(model.clone(), layout.clone(), opts.num_particles);
+        let mut svi = NativeSvi::new(BatchedParticles::new(pot), opts)?;
+        restore_into(&mut svi, cfg, seed, num_steps, layout.dim)?;
+        svi.run_with(cfg.deadline(), cfg.every, &mut sink)?
+    } else {
+        let pot = CompiledModel::new(model.clone(), layout.clone());
+        let mut svi = NativeSvi::new(ScalarParticles::new(pot, opts.num_particles), opts)?;
+        restore_into(&mut svi, cfg, seed, num_steps, layout.dim)?;
+        svi.run_with(cfg.deadline(), cfg.every, &mut sink)?
+    };
+    Ok((layout, result))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::chain::run_chains;
+    use crate::mcmc::Potential;
+
+    struct Gauss;
+    impl Potential for Gauss {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+            grad.copy_from_slice(z);
+            0.5 * (z[0] * z[0] + z[1] * z[1])
+        }
+    }
+
+    fn opts() -> NutsOptions {
+        NutsOptions {
+            num_warmup: 60,
+            num_samples: 80,
+            seed: 17,
+            ..Default::default()
+        }
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("fugue-ckpt-test-{}-{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn cursor_json_roundtrip_is_bitwise() {
+        let o = opts();
+        let (init_z, chain_opts) = chain_start(2, &o, 0);
+        let mut cur = ChainCursor::new(&init_z, &chain_opts);
+        // dirty the state so the roundtrip covers a non-trivial snapshot
+        cur.i = 7;
+        cur.z = vec![0.25, f64::NAN];
+        cur.rng.normal();
+        cur.da.update(0.7);
+        cur.welford.update(&[1.0, -2.0]);
+        cur.stats.accept_prob = vec![0.5; 7];
+        cur.stats.num_leapfrog = vec![3; 7];
+        cur.stats.potential = vec![f64::INFINITY; 7];
+        cur.stats.diverging = vec![true; 7];
+        cur.stats.depth = vec![2; 7];
+        cur.samples = vec![1.0, 2.0];
+        cur.divergences = 3;
+        cur.quarantines = 1;
+        let j = cursor_to_json(&cur);
+        let back = cursor_from_json(&j, Path::new("test"), 2).unwrap();
+        assert_eq!(back.i, cur.i);
+        assert_eq!(back.z[0].to_bits(), cur.z[0].to_bits());
+        assert!(back.z[1].is_nan());
+        assert_eq!(back.rng.state(), cur.rng.state());
+        assert_eq!(back.da.state(), cur.da.state());
+        assert_eq!(back.welford.mean, cur.welford.mean);
+        assert_eq!(back.welford.count, cur.welford.count);
+        assert_eq!(back.stats.potential[0], f64::INFINITY);
+        assert_eq!(back.divergences, 3);
+        assert_eq!(back.quarantines, 1);
+    }
+
+    #[test]
+    fn checkpointed_run_matches_plain_run_bitwise() {
+        let mut s1 = NativeSampler::new(Gauss, TreeAlgorithm::Iterative, 10);
+        let plain = run_chains(&mut s1, 2, &opts()).unwrap();
+
+        let mut s2 = NativeSampler::new(Gauss, TreeAlgorithm::Iterative, 10);
+        let cfg = CheckpointConfig::default();
+        let (ckpt, completed) = run_chains_checkpointed(&mut s2, 2, &opts(), &cfg).unwrap();
+        assert!(completed);
+        for (a, b) in plain.iter().zip(&ckpt) {
+            assert_eq!(a.samples, b.samples);
+            assert_eq!(a.step_size, b.step_size);
+            assert_eq!(a.inv_mass, b.inv_mass);
+            assert_eq!(a.stats.accept_prob, b.stats.accept_prob);
+        }
+    }
+
+    #[test]
+    fn save_load_resume_is_bitwise_identical() {
+        let path = tmp_path("resume");
+        let o = opts();
+        let mut s1 = NativeSampler::new(Gauss, TreeAlgorithm::Iterative, 10);
+        let plain = run_chains(&mut s1, 2, &o).unwrap();
+
+        // run half the draws, checkpoint, then resume in a fresh runner
+        let half = o.clone();
+        let schedule = WarmupSchedule::build(o.num_warmup);
+        let closes = schedule.window_closes();
+        let mut s2 = NativeSampler::new(Gauss, TreeAlgorithm::Iterative, 10);
+        let starts: Vec<_> = (0..2).map(|c| chain_start(2, &half, c)).collect();
+        let mut cursors: Vec<ChainCursor> =
+            starts.iter().map(|(z, co)| ChainCursor::new(z, co)).collect();
+        for _ in 0..70 {
+            advance_chain(&mut s2, &mut cursors[0], &starts[0].1, &schedule, &closes).unwrap();
+        }
+        save_chain_checkpoint(&path, &o, 2, &cursors).unwrap();
+
+        let mut s3 = NativeSampler::new(Gauss, TreeAlgorithm::Iterative, 10);
+        let cfg = CheckpointConfig {
+            path: Some(path.clone()),
+            resume: true,
+            every: 0,
+            max_seconds: None,
+        };
+        let (resumed, completed) = run_chains_checkpointed(&mut s3, 2, &o, &cfg).unwrap();
+        assert!(completed);
+        for (a, b) in plain.iter().zip(&resumed) {
+            assert_eq!(a.samples, b.samples, "resume broke bitwise identity");
+            assert_eq!(a.step_size, b.step_size);
+            assert_eq!(a.inv_mass, b.inv_mass);
+            assert_eq!(a.stats.accept_prob, b.stats.accept_prob);
+            assert_eq!(a.divergences, b.divergences);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mismatched_config_is_refused() {
+        let path = tmp_path("mismatch");
+        let o = opts();
+        let starts: Vec<_> = (0..2).map(|c| chain_start(2, &o, c)).collect();
+        let cursors: Vec<ChainCursor> =
+            starts.iter().map(|(z, co)| ChainCursor::new(z, co)).collect();
+        save_chain_checkpoint(&path, &o, 2, &cursors).unwrap();
+
+        let other = NutsOptions { seed: 999, ..o.clone() };
+        let err = load_chain_checkpoint(&path, &other, 2, 2).unwrap_err();
+        assert!(format!("{err}").contains("seed"), "{err}");
+        let err = load_chain_checkpoint(&path, &o, 3, 2).unwrap_err();
+        assert!(format!("{err}").contains("num_chains"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn budget_degrades_to_partial_results() {
+        let mut s = NativeSampler::new(Gauss, TreeAlgorithm::Iterative, 10);
+        let cfg = CheckpointConfig {
+            path: None,
+            resume: false,
+            every: 0,
+            max_seconds: Some(0.0),
+        };
+        let (results, completed) = run_chains_checkpointed(&mut s, 2, &opts(), &cfg).unwrap();
+        assert!(!completed, "a zero budget must truncate the run");
+        let total: usize = results.iter().map(|r| r.stats.accept_prob.len()).sum();
+        assert!(total < 2 * (60 + 80), "ran {total} draws on a zero budget");
+    }
+}

@@ -27,15 +27,25 @@
 //! compiler's lanes exactly like vectorized chains.
 
 pub mod chain;
+pub mod checkpoint;
 pub mod parallel;
 pub mod sampler;
 pub mod svi;
 pub mod vectorized;
 pub mod warmup;
 
-pub use chain::{chain_start, run_chain, run_chains, ChainResult, ChainStats, NutsOptions};
+pub use chain::{
+    chain_start, run_chain, run_chains, ChainCursor, ChainResult, ChainStats, NutsOptions,
+};
+pub use checkpoint::{
+    load_chain_checkpoint, load_svi_checkpoint, run_chains_checkpointed,
+    run_compiled_chains_checkpointed, run_svi_checkpointed, save_chain_checkpoint,
+    save_svi_checkpoint, CheckpointConfig,
+};
 pub use parallel::{run_chains_parallel, run_compiled_chains, ParallelChainRunner};
 pub use sampler::{FusedSampler, NativeSampler, Sampler, TreeAlgorithm};
 pub use svi::run_svi_native;
-pub use vectorized::{run_chains_vectorized, run_compiled_chains_method, ChainMethod};
+pub use vectorized::{
+    run_chains_vectorized, run_chains_vectorized_from, run_compiled_chains_method, ChainMethod,
+};
 pub use warmup::WarmupSchedule;

@@ -25,7 +25,9 @@
 use anyhow::{bail, Result};
 
 use crate::compile::{BatchedCompiledModel, CompiledModel, EffModel, SiteLayout};
-use crate::coordinator::chain::{chain_start, run_chains, ChainResult, ChainStats, NutsOptions};
+use crate::coordinator::chain::{
+    chain_start, run_chains, ChainCursor, ChainResult, NutsOptions,
+};
 use crate::coordinator::parallel::run_compiled_chains;
 use crate::coordinator::sampler::{NativeSampler, TreeAlgorithm};
 use crate::coordinator::warmup::WarmupSchedule;
@@ -86,44 +88,111 @@ pub fn run_chains_vectorized<BP: BatchPotential + ?Sized>(
     if l == 0 {
         return Ok(Vec::new());
     }
-    let schedule = WarmupSchedule::build(opts.num_warmup);
-    let closes = schedule.window_closes();
-
     // per-lane seeds/inits from the shared derivation — chain k here
     // IS chain k of run_chains / ParallelChainRunner
-    let mut rngs: Vec<Rng> = Vec::with_capacity(l);
-    let mut z = vec![0.0; dim * l];
-    for k in 0..l {
-        let (init_z, chain_opts) = chain_start(dim, opts, k);
-        rngs.push(Rng::new(chain_opts.seed));
+    let mut cursors: Vec<ChainCursor> = (0..l)
+        .map(|k| {
+            let (init_z, chain_opts) = chain_start(dim, opts, k);
+            ChainCursor::new(&init_z, &chain_opts)
+        })
+        .collect();
+    let (warmup_secs, sample_secs, _completed) = run_chains_vectorized_from(
+        pot,
+        opts,
+        max_tree_depth,
+        &mut cursors,
+        None,
+        0,
+        &mut |_| Ok(()),
+    )?;
+    Ok(cursors
+        .into_iter()
+        .map(|c| c.into_result(warmup_secs, sample_secs))
+        .collect())
+}
+
+/// Copy the lane-local working state back into the per-lane cursors —
+/// called at checkpoint boundaries and on exit so a serialized cursor
+/// set is always a complete draw-boundary snapshot.
+#[allow(clippy::too_many_arguments)]
+fn sync_cursors(
+    cursors: &mut [ChainCursor],
+    rngs: &[Rng],
+    das: &[DualAverage],
+    steps: &[f64],
+    welfords: &[Welford],
+    z: &[f64],
+    inv_mass: &[f64],
+    dim: usize,
+) {
+    let l = cursors.len();
+    for (k, cur) in cursors.iter_mut().enumerate() {
+        cur.rng = rngs[k].clone();
+        cur.da = das[k].clone();
+        cur.step_size = steps[k];
+        cur.welford = welfords[k].clone();
         for i in 0..dim {
-            z[i * l + k] = init_z[i];
+            cur.z[i] = z[i * l + k];
+            cur.inv_mass[i] = inv_mass[i * l + k];
         }
     }
+}
 
-    let init_step = opts.fixed_step_size.unwrap_or(opts.init_step_size);
-    let mut das: Vec<DualAverage> = (0..l)
-        .map(|_| DualAverage::new(init_step, opts.target_accept))
-        .collect();
-    let mut steps = vec![init_step; l];
-    let mut welfords: Vec<Welford> = (0..l).map(|_| Welford::new(dim)).collect();
-    let mut inv_mass = vec![1.0; dim * l];
-
+/// The resumable core of the vectorized engine: advance all lanes in
+/// lock-step from the draw index the `cursors` are parked at (all lanes
+/// share one index — the engine is lock-step by construction), with an
+/// optional wall-clock `deadline` and a checkpoint `sink` invoked with
+/// the synchronized cursor set every `checkpoint_every` draws
+/// (0 = never).
+///
+/// Returns `(warmup_secs, sample_secs, completed)`; `completed` is
+/// false when the deadline cut the run short — the cursors then hold a
+/// complete draw-boundary snapshot ready to serialize and resume
+/// bitwise-identically.
+///
+/// Containment mirrors the sequential
+/// [`crate::coordinator::chain`] loop per lane: a poisoned lane
+/// (non-finite starting energy — already masked to `eps = 0` inside
+/// [`draw_batch`], so sibling lanes are untouched) counts a quarantine,
+/// keeps its fault out of the dual-averaging/Welford feeds, and
+/// restarts the next draw from its last good position (the unchanged
+/// proposal).
+#[allow(clippy::too_many_arguments)]
+pub fn run_chains_vectorized_from<BP: BatchPotential + ?Sized>(
+    pot: &mut BP,
+    opts: &NutsOptions,
+    max_tree_depth: u32,
+    cursors: &mut [ChainCursor],
+    deadline: Option<std::time::Instant>,
+    checkpoint_every: usize,
+    sink: &mut dyn FnMut(&[ChainCursor]) -> Result<()>,
+) -> Result<(f64, f64, bool)> {
+    let dim = pot.dim();
+    let l = pot.lanes();
+    assert_eq!(cursors.len(), l, "one cursor per lane");
+    let schedule = WarmupSchedule::build(opts.num_warmup);
+    let closes = schedule.window_closes();
     let total = opts.num_warmup + opts.num_samples;
-    let mut stats: Vec<ChainStats> = (0..l).map(|_| ChainStats::default()).collect();
-    for s in &mut stats {
-        s.accept_prob.reserve(total);
-        s.num_leapfrog.reserve(total);
-        s.potential.reserve(total);
-        s.diverging.reserve(total);
-        s.depth.reserve(total);
+
+    let i0 = cursors[0].i;
+    debug_assert!(
+        cursors.iter().all(|c| c.i == i0),
+        "vectorized lanes must share one draw index"
+    );
+
+    // lane-local working state, loaded from the cursors
+    let mut rngs: Vec<Rng> = cursors.iter().map(|c| c.rng.clone()).collect();
+    let mut das: Vec<DualAverage> = cursors.iter().map(|c| c.da.clone()).collect();
+    let mut steps: Vec<f64> = cursors.iter().map(|c| c.step_size).collect();
+    let mut welfords: Vec<Welford> = cursors.iter().map(|c| c.welford.clone()).collect();
+    let mut z = vec![0.0; dim * l];
+    let mut inv_mass = vec![0.0; dim * l];
+    for (k, cur) in cursors.iter().enumerate() {
+        for i in 0..dim {
+            z[i * l + k] = cur.z[i];
+            inv_mass[i * l + k] = cur.inv_mass[i];
+        }
     }
-    let mut samples: Vec<Vec<f64>> = (0..l)
-        .map(|_| Vec::with_capacity(opts.num_samples * dim))
-        .collect();
-    let mut sample_leapfrogs = vec![0u64; l];
-    let mut total_leapfrogs = vec![0u64; l];
-    let mut divergences = vec![0u64; l];
 
     let mut ws = BatchTreeWorkspace::new(dim, l, max_tree_depth);
     let mut draw_stats = vec![
@@ -133,6 +202,7 @@ pub fn run_chains_vectorized<BP: BatchPotential + ?Sized>(
             potential: 0.0,
             diverging: false,
             depth: 0,
+            poisoned: false,
         };
         l
     ];
@@ -140,8 +210,15 @@ pub fn run_chains_vectorized<BP: BatchPotential + ?Sized>(
 
     let t_warm = std::time::Instant::now();
     let mut warmup_secs = 0.0;
+    let mut completed = true;
 
-    for i in 0..total {
+    for i in i0..total {
+        if let Some(d) = deadline {
+            if std::time::Instant::now() >= d {
+                completed = false;
+                break;
+            }
+        }
         draw_batch(
             pot,
             &mut rngs,
@@ -155,24 +232,31 @@ pub fn run_chains_vectorized<BP: BatchPotential + ?Sized>(
         z.copy_from_slice(ws.proposal());
         for k in 0..l {
             let st = draw_stats[k];
-            total_leapfrogs[k] += st.num_leapfrog as u64;
+            cursors[k].total_leapfrogs += st.num_leapfrog as u64;
             if st.diverging {
-                divergences[k] += 1;
+                cursors[k].divergences += 1;
             }
-            stats[k].accept_prob.push(st.accept_prob);
-            stats[k].num_leapfrog.push(st.num_leapfrog);
-            stats[k].potential.push(st.potential);
-            stats[k].diverging.push(st.diverging);
-            stats[k].depth.push(st.depth);
+            if st.poisoned {
+                cursors[k].quarantines += 1;
+            }
+            cursors[k].stats.accept_prob.push(st.accept_prob);
+            cursors[k].stats.num_leapfrog.push(st.num_leapfrog);
+            cursors[k].stats.potential.push(st.potential);
+            cursors[k].stats.diverging.push(st.diverging);
+            cursors[k].stats.depth.push(st.depth);
 
             if i < opts.num_warmup {
                 if opts.fixed_step_size.is_none() {
-                    das[k].update(st.accept_prob);
+                    if !st.poisoned {
+                        das[k].update(st.accept_prob);
+                    }
                     steps[k] = das[k].step_size();
                 }
                 if opts.adapt_mass && schedule.in_slow(i) {
-                    ws.proposal_lane(k, &mut zrow);
-                    welfords[k].update(&zrow);
+                    if !st.poisoned {
+                        ws.proposal_lane(k, &mut zrow);
+                        welfords[k].update(&zrow);
+                    }
                     if closes.contains(&i) {
                         let v = welfords[k].regularized_variance();
                         for (d, vd) in v.iter().enumerate() {
@@ -190,12 +274,17 @@ pub fn run_chains_vectorized<BP: BatchPotential + ?Sized>(
                 }
             } else {
                 ws.proposal_lane(k, &mut zrow);
-                samples[k].extend_from_slice(&zrow);
-                sample_leapfrogs[k] += st.num_leapfrog as u64;
+                cursors[k].samples.extend_from_slice(&zrow);
+                cursors[k].sample_leapfrogs += st.num_leapfrog as u64;
             }
+            cursors[k].i = i + 1;
         }
         if i + 1 == opts.num_warmup {
             warmup_secs = t_warm.elapsed().as_secs_f64();
+        }
+        if checkpoint_every > 0 && (i + 1) % checkpoint_every == 0 && i + 1 < total {
+            sync_cursors(cursors, &rngs, &das, &steps, &welfords, &z, &inv_mass, dim);
+            sink(cursors)?;
         }
     }
     if opts.num_warmup == 0 {
@@ -203,26 +292,8 @@ pub fn run_chains_vectorized<BP: BatchPotential + ?Sized>(
     }
     let sample_secs = t_warm.elapsed().as_secs_f64() - warmup_secs;
 
-    let mut results = Vec::with_capacity(l);
-    for k in 0..l {
-        let mut im = vec![0.0; dim];
-        for (i, m) in im.iter_mut().enumerate() {
-            *m = inv_mass[i * l + k];
-        }
-        results.push(ChainResult {
-            samples: std::mem::take(&mut samples[k]),
-            dim,
-            stats: std::mem::take(&mut stats[k]),
-            step_size: steps[k],
-            inv_mass: im,
-            warmup_secs,
-            sample_secs,
-            sample_leapfrogs: sample_leapfrogs[k],
-            total_leapfrogs: total_leapfrogs[k],
-            divergences: divergences[k],
-        });
-    }
-    Ok(results)
+    sync_cursors(cursors, &rngs, &das, &steps, &welfords, &z, &inv_mass, dim);
+    Ok((warmup_secs, sample_secs, completed))
 }
 
 /// Compile an effect-handler program and run `num_chains` NUTS chains

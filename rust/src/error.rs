@@ -1,0 +1,137 @@
+//! The inference-fault taxonomy: every way a run can go wrong that the
+//! runtime *contains* instead of panicking on.
+//!
+//! The hot paths (tape sweeps, leapfrog loops, ELBO steps) never
+//! allocate or early-return through `Result` — a non-finite value there
+//! is folded into the sampler's own control flow (a counted divergence,
+//! a rejected proposal, a skipped SVI step with step-size backoff, a
+//! quarantined batch lane).  `InferenceError` is for the *cold* edges
+//! of the stack: setup validation, checkpoint I/O, wall-clock budgets —
+//! places where failing loudly with context is the robust behavior.
+//!
+//! The crate deliberately avoids `thiserror` (offline dependency set:
+//! `anyhow` only), so `Display`/`Error` are hand-implemented.  All
+//! variants convert into `anyhow::Error` for the CLI surface.
+
+use std::fmt;
+
+/// A contained inference fault.  See the module docs for which faults
+/// surface here versus being absorbed by sampler control flow.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InferenceError {
+    /// The potential evaluated to NaN/±Inf where a finite value is
+    /// required (e.g. at chain initialization — mid-trajectory
+    /// non-finite energies become counted divergences instead).
+    NonFinitePotential {
+        /// Value observed (NaN or ±Inf).
+        value: f64,
+        /// Where it happened ("chain 3 init", "svi step 120", ...).
+        context: String,
+    },
+    /// A gradient entry evaluated to NaN/±Inf where finite values are
+    /// required.
+    NonFiniteGradient {
+        /// First offending coordinate.
+        index: usize,
+        /// Value observed at that coordinate.
+        value: f64,
+        /// Where it happened.
+        context: String,
+    },
+    /// Structural mismatch: a buffer/layout/shape disagreed with what
+    /// the model or checkpoint declares.
+    LayoutViolation {
+        expected: String,
+        got: String,
+        context: String,
+    },
+    /// The per-run wall-clock budget (`--max-seconds`) ran out.  The
+    /// runner degrades to partial results plus a checkpoint; this
+    /// variant reports the cut so callers can distinguish "finished"
+    /// from "truncated".
+    BudgetExhausted {
+        budget_secs: f64,
+        /// Draws/steps completed before the cut.
+        completed: usize,
+        /// Draws/steps the run asked for.
+        requested: usize,
+    },
+    /// A checkpoint file could not be read, parsed, or matched to the
+    /// requested run configuration.
+    Checkpoint { path: String, msg: String },
+}
+
+impl fmt::Display for InferenceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InferenceError::NonFinitePotential { value, context } => {
+                write!(f, "non-finite potential ({value}) at {context}")
+            }
+            InferenceError::NonFiniteGradient {
+                index,
+                value,
+                context,
+            } => write!(
+                f,
+                "non-finite gradient ({value} at coordinate {index}) at {context}"
+            ),
+            InferenceError::LayoutViolation {
+                expected,
+                got,
+                context,
+            } => write!(
+                f,
+                "layout violation at {context}: expected {expected}, got {got}"
+            ),
+            InferenceError::BudgetExhausted {
+                budget_secs,
+                completed,
+                requested,
+            } => write!(
+                f,
+                "wall-clock budget of {budget_secs}s exhausted after {completed}/{requested} iterations"
+            ),
+            InferenceError::Checkpoint { path, msg } => {
+                write!(f, "checkpoint {path}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for InferenceError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_carry_context() {
+        let e = InferenceError::NonFinitePotential {
+            value: f64::NAN,
+            context: "chain 2 init".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("chain 2 init"), "{s}");
+        assert!(s.contains("NaN"), "{s}");
+
+        let e = InferenceError::BudgetExhausted {
+            budget_secs: 1.5,
+            completed: 40,
+            requested: 100,
+        };
+        assert!(e.to_string().contains("40/100"), "{e}");
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn fails() -> anyhow::Result<()> {
+            Err(InferenceError::Checkpoint {
+                path: "x.json".into(),
+                msg: "truncated".into(),
+            }
+            .into())
+        }
+        let err = fails().unwrap_err();
+        assert!(format!("{err}").contains("x.json"));
+    }
+}

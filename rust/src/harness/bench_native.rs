@@ -36,6 +36,14 @@
 //!    bitwise-equality asserted), plus the fitted guide's posterior
 //!    means vs NUTS means on the logistic zoo model (within 6x MCSE) —
 //!    the `svi_native` section.
+//! 6. **robustness overhead**: ms/leapfrog of the plain single-chain
+//!    runner vs the containment-bearing checkpoint runner
+//!    ([`crate::coordinator::run_chains_checkpointed`] with no
+//!    checkpoint path, so only the cursor bookkeeping, finiteness
+//!    guards and budget checks are in the loop) on the compiled
+//!    logistic model — the `robustness_overhead` row
+//!    (`ms_per_eval_raw` / `ms_per_eval_checked` / `overhead_frac`,
+//!    target < 1%).
 //!
 //! Results are written as machine-readable JSON (`BENCH_native.json` at
 //! the repo root by default) so the perf trajectory is diffable across
@@ -50,8 +58,9 @@ use crate::compile::zoo::{EightSchools, Horseshoe, LogisticModel, NormalMean};
 use crate::compile::{compile, compile_batched, EffModel};
 use crate::config::Settings;
 use crate::coordinator::{
-    run_chain, run_compiled_chains_method, run_svi_native, ChainMethod, ChainResult,
-    NativeSampler, NutsOptions, ParallelChainRunner, Sampler, TreeAlgorithm,
+    run_chain, run_chains_checkpointed, run_compiled_chains_method, run_svi_native,
+    ChainMethod, ChainResult, CheckpointConfig, NativeSampler, NutsOptions,
+    ParallelChainRunner, Sampler, TreeAlgorithm,
 };
 use crate::data;
 use crate::diagnostics::summary::{max_cross_chain_rhat, summarize};
@@ -715,6 +724,85 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
         report.push('\n');
     }
 
+    // --- robustness overhead: containment + checkpoint bookkeeping ---
+    // The fault-contained runner threads every draw through a
+    // ChainCursor (divergence quarantine accounting, wall-clock budget
+    // checks, checkpoint cadence counter).  With no checkpoint path
+    // configured there is no I/O in the loop, so the delta vs the plain
+    // runner is exactly the steady-state price of containment — the
+    // acceptance bar is < 1% ms/leapfrog.
+    let robustness_json = {
+        report.push_str("== robustness overhead (containment + checkpoint bookkeeping) ==\n");
+        let (rn, rd) = if settings.quick { (800, 16) } else { (2000, 16) };
+        let dset = data::make_covtype_like(settings.seed ^ 0xB057, rn, rd);
+        let model = LogisticModel {
+            x: dset.x,
+            y: dset.y,
+            n: rn,
+            d: rd,
+        };
+        let eps = 1e-3;
+
+        // raw: the plain single-chain runner (fixed eps, full-depth
+        // trees — same protocol as the ms/leapfrog rows above)
+        let mut raw_sampler = NativeSampler::new(
+            compile(model.clone(), settings.seed)?,
+            TreeAlgorithm::Iterative,
+            TIMING_DEPTH,
+        );
+        let (raw_ms, raw_lf) =
+            time_fixed_eps(&mut raw_sampler, eps, timing_draws, settings.seed)?;
+
+        // checked: identical draw count through the checkpoint-capable
+        // runner; path=None keeps serialization out of the measurement
+        let opts = NutsOptions {
+            num_warmup: 0,
+            num_samples: timing_draws,
+            target_accept: 0.8,
+            init_step_size: eps,
+            fixed_step_size: Some(eps),
+            adapt_mass: false,
+            seed: settings.seed,
+        };
+        let cfg = CheckpointConfig {
+            path: None,
+            resume: false,
+            every: 64,
+            max_seconds: None,
+        };
+        let mut chk_sampler = NativeSampler::new(
+            compile(model.clone(), settings.seed)?,
+            TreeAlgorithm::Iterative,
+            TIMING_DEPTH,
+        );
+        let (chk_res, _) = run_chains_checkpointed(&mut chk_sampler, 1, &opts, &cfg)?;
+        let chk_ms = chk_res[0].ms_per_leapfrog();
+
+        let overhead = chk_ms / raw_ms.max(1e-12) - 1.0;
+        report.push_str(&format!(
+            "  logistic n={rn} d={rd}: raw {raw_ms:.5} ms/leapfrog | checked {chk_ms:.5} \
+             ms/leapfrog -> overhead {:+.2}%\n",
+            100.0 * overhead
+        ));
+        if overhead > 0.01 {
+            report.push_str(&format!(
+                "  WARNING: robustness overhead {:.2}% > 1% — containment checks or \
+                 checkpoint bookkeeping regressed the hot path\n",
+                100.0 * overhead
+            ));
+        }
+        report.push('\n');
+        jobj(vec![
+            ("model", Json::Str("logistic".to_string())),
+            ("n", jnum(rn as f64)),
+            ("d", jnum(rd as f64)),
+            ("timing_leapfrogs", jnum(raw_lf as f64)),
+            ("ms_per_eval_raw", jnum(raw_ms)),
+            ("ms_per_eval_checked", jnum(chk_ms)),
+            ("overhead_frac", jnum(overhead)),
+        ])
+    };
+
     // --- native SVI: reparameterized ADVI over the frozen tape ---
     // 1. ms/step with the K particles evaluated as a scalar-potential
     //    loop vs one fused multi-lane sweep (`svi_particle_batch_speedup`
@@ -892,6 +980,7 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
             ("quick".to_string(), Json::Bool(settings.quick)),
             ("max_chains".to_string(), jnum(max_chains as f64)),
             ("frozen_vs_replay".to_string(), Json::Obj(frozen_rows)),
+            ("robustness_overhead".to_string(), robustness_json),
             ("svi_native".to_string(), svi_json),
             ("models".to_string(), Json::Obj(models)),
         ]

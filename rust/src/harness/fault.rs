@@ -1,0 +1,327 @@
+//! Deterministic fault injection — the adversary half of the
+//! fault-containment layer.
+//!
+//! A [`FaultPlan`] names exactly *which* gradient evaluations get
+//! corrupted and *how*: a forward-sweep fault replaces the returned
+//! potential `U` with NaN/±Inf, an adjoint-sweep fault poisons one
+//! gradient coordinate.  The plan is driven purely by the wrapper's own
+//! evaluation counter, so a given (plan, model, seed) triple injects
+//! the identical fault sequence on every run — the chaos suite
+//! (`rust/tests/chaos.rs`) relies on this to compare faulted runs
+//! against clean ones bitwise.
+//!
+//! The wrappers sit **outside** the tape: [`FaultyPotential`] and
+//! [`FaultyBatchPotential`] decorate any [`Potential`] /
+//! [`BatchPotential`] after its (frozen, audited) sweep has finished.
+//! That exercises the exact containment surface production code has —
+//! a non-finite `U`/gradient arriving at the sampler — without
+//! invalidating the frozen-tape bitwise audit against the interpreter.
+
+use crate::mcmc::{BatchPotential, Potential};
+use crate::rng::Rng;
+
+/// Which half of the gradient evaluation the fault corrupts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Replace the returned potential `U` (forward sweep output).
+    Forward,
+    /// Poison gradient coordinate `index % dim` (adjoint sweep output).
+    Adjoint { index: usize },
+}
+
+/// One scheduled injection.
+#[derive(Debug, Clone)]
+pub struct Fault {
+    /// 0-based index of the `value_and_grad` call to corrupt, counted
+    /// by the wrapper itself.
+    pub at_eval: u64,
+    pub site: FaultSite,
+    /// The corrupting value (NaN, +Inf, -Inf — anything non-finite).
+    pub value: f64,
+    /// Batch wrappers only: restrict the fault to one lane
+    /// (`None` poisons every lane of the targeted evaluation).
+    pub lane: Option<usize>,
+}
+
+/// A deterministic schedule of injections.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// NaN the forward sweep at each listed evaluation.
+    pub fn nan_forward_at(evals: &[u64]) -> FaultPlan {
+        FaultPlan {
+            faults: evals
+                .iter()
+                .map(|&e| Fault {
+                    at_eval: e,
+                    site: FaultSite::Forward,
+                    value: f64::NAN,
+                    lane: None,
+                })
+                .collect(),
+        }
+    }
+
+    /// +Inf the forward sweep at each listed evaluation.
+    pub fn inf_forward_at(evals: &[u64]) -> FaultPlan {
+        FaultPlan {
+            faults: evals
+                .iter()
+                .map(|&e| Fault {
+                    at_eval: e,
+                    site: FaultSite::Forward,
+                    value: f64::INFINITY,
+                    lane: None,
+                })
+                .collect(),
+        }
+    }
+
+    /// NaN one adjoint (gradient) coordinate at each listed evaluation.
+    pub fn nan_adjoint_at(evals: &[u64], index: usize) -> FaultPlan {
+        FaultPlan {
+            faults: evals
+                .iter()
+                .map(|&e| Fault {
+                    at_eval: e,
+                    site: FaultSite::Adjoint { index },
+                    value: f64::NAN,
+                    lane: None,
+                })
+                .collect(),
+        }
+    }
+
+    /// NaN the forward sweep of a single lane at one evaluation — the
+    /// lane-quarantine scenario.
+    pub fn lane_nan_forward(at_eval: u64, lane: usize) -> FaultPlan {
+        FaultPlan {
+            faults: vec![Fault {
+                at_eval,
+                site: FaultSite::Forward,
+                value: f64::NAN,
+                lane: Some(lane),
+            }],
+        }
+    }
+
+    /// `n` seeded, reproducible faults with evaluation indices drawn
+    /// uniformly from `[0, eval_range)`, alternating forward/adjoint
+    /// sites and NaN/+Inf values.  Same seed → same plan, always.
+    pub fn seeded(seed: u64, n: usize, eval_range: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA_017);
+        let faults = (0..n)
+            .map(|i| {
+                let at_eval = rng.next_u64() % eval_range.max(1);
+                let site = if i % 2 == 0 {
+                    FaultSite::Forward
+                } else {
+                    FaultSite::Adjoint {
+                        index: (rng.next_u64() % 64) as usize,
+                    }
+                };
+                Fault {
+                    at_eval,
+                    site,
+                    value: if i % 3 == 0 { f64::INFINITY } else { f64::NAN },
+                    lane: None,
+                }
+            })
+            .collect();
+        FaultPlan { faults }
+    }
+
+    fn fault_for(&self, eval: u64) -> Option<&Fault> {
+        self.faults.iter().find(|f| f.at_eval == eval)
+    }
+}
+
+/// A scalar [`Potential`] with scheduled corruption of its outputs.
+pub struct FaultyPotential<P: Potential> {
+    inner: P,
+    plan: FaultPlan,
+    evals: u64,
+    /// Faults actually delivered so far (assert on this to prove the
+    /// adversary fired).
+    pub injected: u64,
+}
+
+impl<P: Potential> FaultyPotential<P> {
+    pub fn new(inner: P, plan: FaultPlan) -> FaultyPotential<P> {
+        FaultyPotential {
+            inner,
+            plan,
+            evals: 0,
+            injected: 0,
+        }
+    }
+
+    /// Total evaluations routed through the wrapper.
+    pub fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+impl<P: Potential> Potential for FaultyPotential<P> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+        let u = self.inner.value_and_grad(z, grad);
+        let e = self.evals;
+        self.evals += 1;
+        if let Some(f) = self.plan.fault_for(e) {
+            self.injected += 1;
+            match f.site {
+                FaultSite::Forward => return f.value,
+                FaultSite::Adjoint { index } => {
+                    grad[index % grad.len().max(1)] = f.value;
+                }
+            }
+        }
+        u
+    }
+
+    fn num_evals(&self) -> u64 {
+        self.inner.num_evals()
+    }
+}
+
+/// A [`BatchPotential`] with scheduled corruption, optionally scoped to
+/// a single lane — the adversary the lane-quarantine invariants are
+/// proven against.
+pub struct FaultyBatchPotential<BP: BatchPotential> {
+    inner: BP,
+    plan: FaultPlan,
+    evals: u64,
+    pub injected: u64,
+}
+
+impl<BP: BatchPotential> FaultyBatchPotential<BP> {
+    pub fn new(inner: BP, plan: FaultPlan) -> FaultyBatchPotential<BP> {
+        FaultyBatchPotential {
+            inner,
+            plan,
+            evals: 0,
+            injected: 0,
+        }
+    }
+
+    pub fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+impl<BP: BatchPotential> BatchPotential for FaultyBatchPotential<BP> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn lanes(&self) -> usize {
+        self.inner.lanes()
+    }
+
+    fn value_and_grad_batch(&mut self, z: &[f64], u: &mut [f64], grad: &mut [f64]) {
+        self.inner.value_and_grad_batch(z, u, grad);
+        let e = self.evals;
+        self.evals += 1;
+        let (dim, lanes) = (self.inner.dim(), self.inner.lanes());
+        if let Some(f) = self.plan.fault_for(e) {
+            self.injected += 1;
+            let targets: Vec<usize> = match f.lane {
+                Some(k) => vec![k % lanes],
+                None => (0..lanes).collect(),
+            };
+            for k in targets {
+                match f.site {
+                    FaultSite::Forward => u[k] = f.value,
+                    FaultSite::Adjoint { index } => {
+                        grad[(index % dim.max(1)) * lanes + k] = f.value;
+                    }
+                }
+            }
+        }
+    }
+
+    fn num_evals(&self) -> u64 {
+        self.inner.num_evals()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Gauss;
+    impl Potential for Gauss {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+            grad.copy_from_slice(z);
+            0.5 * (z[0] * z[0] + z[1] * z[1])
+        }
+    }
+
+    #[test]
+    fn corrupts_only_configured_evals() {
+        let mut p = FaultyPotential::new(Gauss, FaultPlan::nan_forward_at(&[1]));
+        let mut g = [0.0; 2];
+        assert!(p.value_and_grad(&[1.0, 1.0], &mut g).is_finite());
+        assert!(p.value_and_grad(&[1.0, 1.0], &mut g).is_nan());
+        assert!(p.value_and_grad(&[1.0, 1.0], &mut g).is_finite());
+        assert_eq!(p.injected, 1);
+        assert_eq!(p.evals(), 3);
+        // gradient untouched by a forward fault
+        assert_eq!(g, [1.0, 1.0]);
+    }
+
+    #[test]
+    fn adjoint_fault_poisons_one_coordinate() {
+        let mut p = FaultyPotential::new(Gauss, FaultPlan::nan_adjoint_at(&[0], 1));
+        let mut g = [0.0; 2];
+        let u = p.value_and_grad(&[1.0, 2.0], &mut g);
+        assert!(u.is_finite(), "forward value untouched by adjoint fault");
+        assert_eq!(g[0], 1.0);
+        assert!(g[1].is_nan());
+    }
+
+    #[test]
+    fn lane_fault_leaves_sibling_lanes_untouched() {
+        use crate::mcmc::ScalarLanes;
+        let mut p = FaultyBatchPotential::new(
+            ScalarLanes::new(vec![Gauss, Gauss, Gauss]),
+            FaultPlan::lane_nan_forward(0, 1),
+        );
+        let z = [1.0, 1.0, 1.0, 2.0, 2.0, 2.0]; // lane-minor, dim=2, lanes=3
+        let mut u = [0.0; 3];
+        let mut g = [0.0; 6];
+        p.value_and_grad_batch(&z, &mut u, &mut g);
+        assert!(u[0].is_finite());
+        assert!(u[1].is_nan());
+        assert!(u[2].is_finite());
+        assert!(g.iter().all(|x| x.is_finite()), "gradients untouched");
+        assert_eq!(p.injected, 1);
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible() {
+        let a = FaultPlan::seeded(42, 5, 1000);
+        let b = FaultPlan::seeded(42, 5, 1000);
+        assert_eq!(a.faults.len(), 5);
+        for (x, y) in a.faults.iter().zip(&b.faults) {
+            assert_eq!(x.at_eval, y.at_eval);
+            assert_eq!(x.site, y.site);
+            assert_eq!(x.value.to_bits(), y.value.to_bits());
+        }
+        let c = FaultPlan::seeded(43, 5, 1000);
+        assert!(
+            a.faults.iter().zip(&c.faults).any(|(x, y)| x.at_eval != y.at_eval),
+            "different seeds should differ"
+        );
+    }
+}

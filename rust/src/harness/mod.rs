@@ -18,6 +18,7 @@ pub mod ablations;
 pub mod appendix_d;
 pub mod bench_native;
 pub mod builders;
+pub mod fault;
 pub mod fig1;
 pub mod fig2b;
 pub mod footnote6;

@@ -38,6 +38,7 @@ pub mod coordinator;
 pub mod data;
 pub mod diagnostics;
 pub mod effects;
+pub mod error;
 pub mod harness;
 pub mod mcmc;
 pub mod models;

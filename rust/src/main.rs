@@ -39,12 +39,17 @@ SUBCOMMANDS
                              --dtype f32|f64 --warmup N --samples N --chains N)
   sample-model              compile an effect-handler model (no hand-written
                             gradient) and sample it with native iterative NUTS:
-                            --model eight-schools|horseshoe|logistic
+                            --model eight-schools|horseshoe|logistic|funnel
                             (--chains K --warmup N --samples N --out FILE
                              --chain-method sequential|parallel|vectorized;
                              all three produce bitwise-identical chains —
                              vectorized runs them lock-step over a fused
                              multi-lane potential).
+                            Fault containment: --checkpoint FILE saves a
+                            resumable draw-boundary snapshot (--checkpoint-every
+                            N draws, default 200); --resume continues a saved
+                            run bitwise-identically; --max-seconds S stops at
+                            the budget with partial results + checkpoint.
                             Needs no artifacts and no pjrt feature.
   svi-model                 fit a compiled effect-handler model with the native
                             SVI engine (reparameterized ADVI, mean-field normal
@@ -53,6 +58,10 @@ SUBCOMMANDS
                             (--steps N --particles K --lr X --optimizer adam|sgd
                              --predictive N --out FILE; K particles run as one
                              fused multi-lane gradient sweep per step).
+                            Same fault-containment flags as sample-model
+                            (--checkpoint/--resume/--checkpoint-every/
+                             --max-seconds); non-finite ELBO steps are skipped
+                            with learning-rate backoff, never propagated.
                             Needs no artifacts and no pjrt feature.
   experiment table2a        Table 2a: ms/leapfrog across architectures (--model hmm|covtype)
   experiment fig2b          Fig 2b: SKIM ms/effective-sample vs p
@@ -359,32 +368,65 @@ fn cmd_bench(args: &Args, settings: &Settings) -> Result<()> {
 /// it end-to-end with the native iterative NUTS engine across parallel
 /// chains.  Draws are reported in the *constrained* space.
 fn cmd_sample_model(args: &Args, settings: &Settings) -> Result<()> {
-    use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel};
-    use fugue::coordinator::{run_compiled_chains_method, ChainMethod};
+    use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel, NealsFunnel};
+    use fugue::compile::{EffModel, SiteLayout};
+    use fugue::coordinator::{
+        run_compiled_chains_checkpointed, run_compiled_chains_method, ChainMethod,
+        ChainResult, CheckpointConfig,
+    };
 
     let name = args.get("model").unwrap_or("eight-schools");
     let method = ChainMethod::parse(args.get("chain-method").unwrap_or("parallel"))?;
     let (warmup, samples) = settings.budget(1000, 1000);
     let chains = settings.num_chains;
     let opts = nuts_options(args, settings, warmup, samples)?;
+    let ckpt = CheckpointConfig {
+        path: args.get("checkpoint").map(std::path::PathBuf::from),
+        resume: args.has("resume"),
+        every: args.get_usize("checkpoint-every")?.unwrap_or(200).max(1),
+        max_seconds: args.get_f64("max-seconds")?,
+    };
+    // the containment-aware runner only when its features are requested
+    // — the plain path keeps e.g. true thread-parallel chains
+    let contained = ckpt.path.is_some() || ckpt.max_seconds.is_some();
     println!(
         "compiled model={name} warmup={warmup} samples={samples} chains={chains} method={} seed={}",
         method.name(),
         settings.seed
     );
 
+    fn dispatch<M: EffModel + Clone + Sync>(
+        model: &M,
+        method: ChainMethod,
+        chains: usize,
+        depth: u32,
+        opts: &fugue::coordinator::NutsOptions,
+        ckpt: &CheckpointConfig,
+        contained: bool,
+    ) -> Result<(SiteLayout, Vec<ChainResult>, bool)> {
+        if contained {
+            run_compiled_chains_checkpointed(model, method, chains, depth, opts, ckpt)
+        } else {
+            let (layout, results) =
+                run_compiled_chains_method(model, method, chains, depth, opts)?;
+            Ok((layout, results, true))
+        }
+    }
+
     let t0 = std::time::Instant::now();
-    let (layout, results) = match name {
-        "eight-schools" => run_compiled_chains_method(
+    let (layout, results, completed) = match name {
+        "eight-schools" => dispatch(
             &EightSchools::classic(),
             method,
             chains,
             settings.max_tree_depth,
             &opts,
+            &ckpt,
+            contained,
         )?,
         "horseshoe" => {
             let model = Horseshoe::synthetic(settings.seed, 100, 10, 3);
-            run_compiled_chains_method(&model, method, chains, settings.max_tree_depth, &opts)?
+            dispatch(&model, method, chains, settings.max_tree_depth, &opts, &ckpt, contained)?
         }
         "logistic" => {
             let (n, d) = (500, 8);
@@ -395,9 +437,20 @@ fn cmd_sample_model(args: &Args, settings: &Settings) -> Result<()> {
                 n,
                 d,
             };
-            run_compiled_chains_method(&model, method, chains, settings.max_tree_depth, &opts)?
+            dispatch(&model, method, chains, settings.max_tree_depth, &opts, &ckpt, contained)?
         }
-        other => bail!("unknown compiled model '{other}' (eight-schools|horseshoe|logistic)"),
+        "funnel" => dispatch(
+            &NealsFunnel::classic(),
+            method,
+            chains,
+            settings.max_tree_depth,
+            &opts,
+            &ckpt,
+            contained,
+        )?,
+        other => {
+            bail!("unknown compiled model '{other}' (eight-schools|horseshoe|logistic|funnel)")
+        }
     };
     let total = t0.elapsed().as_secs_f64();
 
@@ -427,16 +480,32 @@ fn cmd_sample_model(args: &Args, settings: &Settings) -> Result<()> {
     let leapfrogs: u64 = results.iter().map(|r| r.sample_leapfrogs).sum();
     let sample_secs: f64 = results.iter().map(|r| r.sample_secs).sum();
     let divergences: u64 = results.iter().map(|r| r.divergences).sum();
+    let quarantines: u64 = results.iter().map(|r| r.quarantines).sum();
     println!(
-        "total {total:.2}s | {leapfrogs} leapfrogs | {:.4} ms/leapfrog | {} divergences | step sizes: {}",
+        "total {total:.2}s | {leapfrogs} leapfrogs | {:.4} ms/leapfrog | {} divergences | {} quarantined draws | step sizes: {}",
         1e3 * sample_secs / leapfrogs.max(1) as f64,
         divergences,
+        quarantines,
         results
             .iter()
             .map(|r| format!("{:.4}", r.step_size))
             .collect::<Vec<_>>()
             .join(",")
     );
+    if !completed {
+        let done: usize = results.first().map(|r| r.samples.len() / dim.max(1)).unwrap_or(0);
+        println!(
+            "WARNING: {}",
+            fugue::error::InferenceError::BudgetExhausted {
+                budget_secs: ckpt.max_seconds.unwrap_or(0.0),
+                completed: done,
+                requested: opts.num_samples,
+            }
+        );
+        if let Some(p) = &ckpt.path {
+            println!("resume with: fugue sample-model --checkpoint {} --resume ...", p.display());
+        }
+    }
     Ok(())
 }
 
@@ -447,6 +516,7 @@ fn cmd_sample_model(args: &Args, settings: &Settings) -> Result<()> {
 /// the frozen tape program.  Fully offline — no artifacts, no pjrt.
 fn cmd_svi_model(args: &Args, settings: &Settings) -> Result<()> {
     use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel};
+    use fugue::coordinator::CheckpointConfig;
     use fugue::svi::{Convergence, OptimKind, StepSchedule, SviOptions};
 
     let name = args.get("model").unwrap_or("eight-schools");
@@ -474,16 +544,24 @@ fn cmd_svi_model(args: &Args, settings: &Settings) -> Result<()> {
         }),
         tail_average: 0.25,
     };
+    let ckpt = CheckpointConfig {
+        path: args.get("checkpoint").map(std::path::PathBuf::from),
+        resume: args.has("resume"),
+        every: args.get_usize("checkpoint-every")?.unwrap_or(200).max(1),
+        max_seconds: args.get_f64("max-seconds")?,
+    };
     println!(
         "native SVI model={name} steps={steps} particles={particles} lr={lr} optimizer={} seed={}",
         optimizer.name(),
         settings.seed
     );
     match name {
-        "eight-schools" => svi_fit_and_report(&EightSchools::classic(), &opts, args, settings),
+        "eight-schools" => {
+            svi_fit_and_report(&EightSchools::classic(), &opts, &ckpt, args, settings)
+        }
         "horseshoe" => {
             let model = Horseshoe::synthetic(settings.seed, 100, 10, 3);
-            svi_fit_and_report(&model, &opts, args, settings)
+            svi_fit_and_report(&model, &opts, &ckpt, args, settings)
         }
         "logistic" => {
             let (n, d) = (500, 8);
@@ -494,7 +572,7 @@ fn cmd_svi_model(args: &Args, settings: &Settings) -> Result<()> {
                 n,
                 d,
             };
-            svi_fit_and_report(&model, &opts, args, settings)
+            svi_fit_and_report(&model, &opts, &ckpt, args, settings)
         }
         other => bail!("unknown compiled model '{other}' (eight-schools|horseshoe|logistic)"),
     }
@@ -504,13 +582,19 @@ fn cmd_svi_model(args: &Args, settings: &Settings) -> Result<()> {
 fn svi_fit_and_report<M: fugue::compile::EffModel + Clone>(
     model: &M,
     opts: &fugue::svi::SviOptions,
+    ckpt: &fugue::coordinator::CheckpointConfig,
     args: &Args,
     settings: &Settings,
 ) -> Result<()> {
-    use fugue::coordinator::run_svi_native;
+    use fugue::coordinator::{run_svi_checkpointed, run_svi_native};
     use fugue::svi::posterior_predictive_draws;
 
-    let (layout, result) = run_svi_native(model, opts)?;
+    let contained = ckpt.path.is_some() || ckpt.max_seconds.is_some();
+    let (layout, result) = if contained {
+        run_svi_checkpointed(model, opts, ckpt)?
+    } else {
+        run_svi_native(model, opts)?
+    };
     let chunk = (result.steps / 6).max(1);
     for (i, c) in result.elbo_trace.chunks(chunk).enumerate() {
         let mean = c.iter().sum::<f64>() / c.len() as f64;
@@ -522,15 +606,33 @@ fn svi_fit_and_report<M: fugue::compile::EffModel + Clone>(
         );
     }
     println!(
-        "{} steps in {:.2}s{}",
+        "{} steps in {:.2}s{}{}",
         result.steps,
         result.secs,
         if result.converged {
             " (converged early)"
         } else {
             ""
+        },
+        if result.skipped > 0 {
+            format!(" | {} non-finite steps skipped (contained)", result.skipped)
+        } else {
+            String::new()
         }
     );
+    if !result.completed {
+        println!(
+            "WARNING: {}",
+            fugue::error::InferenceError::BudgetExhausted {
+                budget_secs: ckpt.max_seconds.unwrap_or(0.0),
+                completed: result.steps,
+                requested: opts.num_steps,
+            }
+        );
+        if let Some(p) = &ckpt.path {
+            println!("resume with: fugue svi-model --checkpoint {} --resume ...", p.display());
+        }
+    }
 
     // posterior summary from the fitted guide, in the constrained space
     let dim = layout.dim;

@@ -65,6 +65,9 @@ struct LaneCtl {
     sub_sum_accept: f64,
     turning: bool,
     sub_diverging: bool,
+    /// lane started the draw with a non-finite energy: no leapfrogs
+    /// taken, proposal = start (see [`crate::mcmc::DrawStats::poisoned`])
+    poisoned: bool,
 }
 
 /// Reusable storage for [`draw_batch`]: the batched phase states
@@ -461,8 +464,22 @@ pub fn draw_batch<BP: BatchPotential + ?Sized>(
             sub_sum_accept: 0.0,
             turning: false,
             sub_diverging: false,
+            poisoned: false,
         };
-        if max_depth == 0 {
+        // Containment: a lane whose starting energy is already
+        // non-finite would NaN-poison every delta comparison for its
+        // whole trajectory.  Quarantine it immediately: mark it done
+        // (its eps mask goes to 0.0, so the batched leapfrogs cannot
+        // disturb sibling lanes through it), count a divergence, and
+        // leave its proposal at the start position.  RNG consumption
+        // matches the sequential poisoned path exactly: momenta only,
+        // no direction bit.
+        if !energy_0.is_finite() {
+            ws.ctl[k].done = true;
+            ws.ctl[k].diverging = true;
+            ws.ctl[k].poisoned = true;
+            ws.ctl[k].u_prop = f64::INFINITY;
+        } else if max_depth == 0 {
             ws.ctl[k].done = true;
         } else {
             start_subtree(ws, rngs, step_sizes, k);
@@ -520,6 +537,7 @@ pub fn draw_batch<BP: BatchPotential + ?Sized>(
             potential: c.u_prop,
             diverging: c.diverging,
             depth: c.depth,
+            poisoned: c.poisoned,
         };
     }
 }
@@ -587,6 +605,7 @@ mod tests {
                 potential: 0.0,
                 diverging: false,
                 depth: 0,
+                poisoned: false,
             };
             lanes
         ];
@@ -655,6 +674,7 @@ mod tests {
                 potential: 0.0,
                 diverging: false,
                 depth: 0,
+                poisoned: false,
             };
             1
         ];

@@ -49,6 +49,40 @@ impl DualAverage {
     pub fn restart(&mut self, step_size: f64) {
         *self = DualAverage::new(step_size, self.target);
     }
+
+    /// Snapshot the adaptation state for checkpointing:
+    /// `(log_step, log_step_avg, grad_sum, t, mu, target)`.  The
+    /// gamma/t0/kappa constants are fixed in [`DualAverage::new`] and
+    /// need no serialization.
+    pub fn state(&self) -> (f64, f64, f64, f64, f64, f64) {
+        (
+            self.log_step,
+            self.log_step_avg,
+            self.grad_sum,
+            self.t,
+            self.mu,
+            self.target,
+        )
+    }
+
+    /// Rebuild from a [`DualAverage::state`] snapshot; subsequent
+    /// updates continue bitwise-identically.
+    pub fn from_state(
+        log_step: f64,
+        log_step_avg: f64,
+        grad_sum: f64,
+        t: f64,
+        mu: f64,
+        target: f64,
+    ) -> Self {
+        let mut da = DualAverage::new(1.0, target);
+        da.log_step = log_step;
+        da.log_step_avg = log_step_avg;
+        da.grad_sum = grad_sum;
+        da.t = t;
+        da.mu = mu;
+        da
+    }
 }
 
 #[cfg(test)]

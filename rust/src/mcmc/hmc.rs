@@ -75,6 +75,22 @@ pub fn draw_in_workspace<P: Potential + ?Sized>(
     let potential_0 = ws.state.potential;
     let energy_0 = ws.state.energy(inv_mass);
 
+    // Containment: with a non-finite starting energy both the
+    // divergence check and the MH ratio below degenerate to NaN
+    // comparisons.  Reject without integrating — a poisoned draw with
+    // the start position as its (unchanged) proposal.
+    if !energy_0.is_finite() {
+        ws.z_prop.copy_from_slice(z0);
+        return DrawStats {
+            accept_prob: 0.0,
+            num_leapfrog: 0,
+            potential: f64::INFINITY,
+            diverging: true,
+            depth: 0,
+            poisoned: true,
+        };
+    }
+
     let mut diverging = false;
     let mut steps_taken = 0u32;
     for _ in 0..num_steps {
@@ -103,6 +119,7 @@ pub fn draw_in_workspace<P: Potential + ?Sized>(
         potential: if accepted { ws.state.potential } else { potential_0 },
         diverging,
         depth: 0,
+        poisoned: false,
     }
 }
 

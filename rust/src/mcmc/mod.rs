@@ -305,6 +305,14 @@ pub struct DrawStats {
     pub potential: f64,
     pub diverging: bool,
     pub depth: u32,
+    /// The draw was *poisoned*: the potential or gradient was already
+    /// non-finite at the trajectory's starting point, so no leapfrog
+    /// could be taken and the proposal is the (unchanged) start
+    /// position.  Distinct from `diverging`, which also covers the
+    /// ordinary mid-trajectory energy blow-ups NUTS handles routinely;
+    /// a poisoned draw always sets `diverging` too.  Coordinators use
+    /// this to quarantine/restart a lane from its last good draw.
+    pub poisoned: bool,
 }
 
 #[cfg(test)]

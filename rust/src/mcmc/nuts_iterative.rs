@@ -218,6 +218,22 @@ pub fn draw_in_workspace<P: Potential + ?Sized>(
     let potential_0 = ws.left.potential;
 
     ws.z_prop.copy_from_slice(z0);
+    // Containment: a non-finite *initial* energy would make every
+    // `delta = energy - energy_0` comparison NaN below, silently
+    // disabling divergence detection for the whole trajectory.  Refuse
+    // to integrate: report a poisoned draw (counted divergence, zero
+    // leapfrogs, proposal = start) and let the coordinator decide
+    // whether to quarantine/restart the chain.
+    if !energy_0.is_finite() {
+        return DrawStats {
+            accept_prob: 0.0,
+            num_leapfrog: 0,
+            potential: f64::INFINITY,
+            diverging: true,
+            depth: 0,
+            poisoned: true,
+        };
+    }
     let mut u_prop = potential_0;
     let mut weight = -energy_0;
     let mut sum_accept = 0.0;
@@ -265,6 +281,7 @@ pub fn draw_in_workspace<P: Potential + ?Sized>(
         potential: u_prop,
         diverging,
         depth,
+        poisoned: false,
     }
 }
 

@@ -50,6 +50,18 @@ impl Welford {
         }
         self.count = 0;
     }
+
+    /// Second central moment accumulator (checkpoint snapshot).
+    pub fn m2(&self) -> &[f64] {
+        &self.m2
+    }
+
+    /// Rebuild from a checkpoint snapshot; subsequent updates continue
+    /// bitwise-identically.
+    pub fn from_state(mean: Vec<f64>, m2: Vec<f64>, count: u64) -> Self {
+        assert_eq!(mean.len(), m2.len());
+        Welford { mean, m2, count }
+    }
 }
 
 #[cfg(test)]

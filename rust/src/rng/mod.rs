@@ -41,6 +41,20 @@ impl Rng {
         }
     }
 
+    /// Snapshot the full generator state for checkpointing: the four
+    /// xoshiro256++ words plus the cached Box-Muller spare (which
+    /// persists *across* draws, so a resumed stream would desync
+    /// without it).
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.spare_normal)
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot; the restored
+    /// stream continues bitwise-identically to the original.
+    pub fn from_state(s: [u64; 4], spare_normal: Option<f64>) -> Rng {
+        Rng { s, spare_normal }
+    }
+
     /// Derive an independent stream (JAX-style key split).
     pub fn split(&mut self, stream: u64) -> Rng {
         let mut sm = self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407);

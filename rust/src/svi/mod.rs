@@ -36,7 +36,7 @@ pub use elbo::ReparamElbo;
 pub use guide::MeanFieldGuide;
 pub use native::{
     BatchedParticles, Convergence, ElboEngine, NativeSvi, NativeSviResult, ScalarParticles,
-    SviOptions,
+    SviCursor, SviOptions, MAX_CONSECUTIVE_SKIPS,
 };
 pub use optim::{Adam, OptimKind, Optimizer, SgdMomentum, StepSchedule};
 pub use predictive::{posterior_predictive_draws, posterior_predictive_trace, StripObserved};

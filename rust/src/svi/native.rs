@@ -175,6 +175,44 @@ pub struct NativeSviResult {
     /// Whether the convergence window triggered the early stop.
     pub converged: bool,
     pub secs: f64,
+    /// Steps whose ELBO or gradient came back non-finite and were
+    /// contained (optimizer step skipped, learning rate backed off).
+    /// Always 0 on a healthy run.
+    pub skipped: u64,
+    /// False when a wall-clock deadline (or a run of
+    /// [`MAX_CONSECUTIVE_SKIPS`] unrecoverable steps) cut the run
+    /// short of `num_steps`/convergence.
+    pub completed: bool,
+}
+
+/// Abort threshold for the containment layer: this many non-finite
+/// steps *in a row* means the ELBO is non-finite at the current
+/// parameters themselves (not a transient noise draw) and retrying
+/// cannot recover — the run stops with `completed = false`.
+pub const MAX_CONSECUTIVE_SKIPS: u32 = 64;
+
+/// The complete resumable state of a native SVI run between steps:
+/// guide parameters, optimizer moments, RNG stream (incl. the cached
+/// Box-Muller spare), ELBO trace, tail-average accumulator and the
+/// containment bookkeeping.  Step boundaries are full checkpoints —
+/// the gradient buffer is pure per-step scratch — so serializing a
+/// cursor ([`crate::coordinator::checkpoint`]) and resuming continues
+/// the fit **bitwise-identically**.
+#[derive(Debug, Clone)]
+pub struct SviCursor {
+    /// Flat `[loc..., log_scale...]` guide parameters.
+    pub params: Vec<f64>,
+    /// Optimizer moment buffers ([`Optimizer::export_state`]).
+    pub opt_moments: Vec<Vec<f64>>,
+    /// Optimizer step counter (Adam bias correction).
+    pub opt_t: u64,
+    pub rng_s: [u64; 4],
+    pub rng_spare: Option<f64>,
+    pub elbo_trace: Vec<f64>,
+    pub avg_params: Vec<f64>,
+    pub avg_count: u64,
+    pub backoff: f64,
+    pub skipped: u64,
 }
 
 impl NativeSviResult {
@@ -204,6 +242,17 @@ pub struct NativeSvi<E: ElboEngine> {
     avg_params: Vec<f64>,
     avg_count: u64,
     avg_from: usize,
+    /// Containment: learning-rate multiplier, 1.0 while healthy
+    /// (`lr * 1.0` is an IEEE identity, so healthy runs are untouched
+    /// bitwise).  Halved on every skipped step, recovered by 1.5x
+    /// (clamped to 1.0) on each healthy step after a fault.
+    backoff: f64,
+    /// Total steps skipped because the ELBO or gradient was non-finite.
+    skipped: u64,
+    /// Current run of consecutive skips (aborts the run at
+    /// [`MAX_CONSECUTIVE_SKIPS`]).  Not checkpointed: a resume starts
+    /// with a clean retry budget.
+    consec_skips: u32,
 }
 
 impl<E: ElboEngine> NativeSvi<E> {
@@ -243,6 +292,9 @@ impl<E: ElboEngine> NativeSvi<E> {
             avg_params: vec![0.0; 2 * dim],
             avg_count: 0,
             avg_from,
+            backoff: 1.0,
+            skipped: 0,
+            consec_skips: 0,
         })
     }
 
@@ -259,9 +311,17 @@ impl<E: ElboEngine> NativeSvi<E> {
     /// One SVI step: ELBO gradient through the frozen tape, scheduled
     /// optimizer ascent, trace bookkeeping.  Returns the step's ELBO
     /// estimate.  Allocation-free in the steady state.
+    ///
+    /// Containment: a non-finite ELBO or any non-finite gradient entry
+    /// is a *skipped* step — the optimizer does not move, nothing is
+    /// recorded in the trace, and the learning rate backs off by half
+    /// for the retry (fresh noise, step index unchanged).  Healthy
+    /// steps after a fault recover the rate by 1.5x up to its scheduled
+    /// value.  A healthy run never skips, and its `backoff` stays 1.0,
+    /// so it is bitwise-unchanged by this layer.
     pub fn step(&mut self) -> f64 {
         let t = self.elbo_trace.len();
-        let lr = self.schedule.lr_at(self.base_lr, t);
+        let lr = self.schedule.lr_at(self.base_lr, t) * self.backoff;
         let dim = self.guide.dim();
         let NativeSvi {
             engine,
@@ -273,6 +333,9 @@ impl<E: ElboEngine> NativeSvi<E> {
             avg_params,
             avg_count,
             avg_from,
+            backoff,
+            skipped,
+            consec_skips,
             ..
         } = self;
         opt.set_lr(lr);
@@ -281,6 +344,16 @@ impl<E: ElboEngine> NativeSvi<E> {
             let (loc, log_scale) = params.split_at(dim);
             engine.elbo_and_grad(loc, log_scale, rng, grad)
         };
+        if !elbo.is_finite() || grad.iter().any(|g| !g.is_finite()) {
+            *skipped += 1;
+            *consec_skips += 1;
+            *backoff *= 0.5;
+            return elbo;
+        }
+        *consec_skips = 0;
+        if *backoff < 1.0 {
+            *backoff = (*backoff * 1.5).min(1.0);
+        }
         opt.step_ascent(params, grad);
         if t >= *avg_from {
             for (a, p) in avg_params.iter_mut().zip(params.iter()) {
@@ -292,6 +365,56 @@ impl<E: ElboEngine> NativeSvi<E> {
         // pushes never reallocate
         elbo_trace.push(elbo);
         elbo
+    }
+
+    /// Snapshot the complete resumable state (see [`SviCursor`]).
+    pub fn export_cursor(&self) -> SviCursor {
+        let (moments, opt_t) = self.opt.export_state();
+        let (rng_s, rng_spare) = self.rng.state();
+        SviCursor {
+            params: self.guide.params().to_vec(),
+            opt_moments: moments,
+            opt_t,
+            rng_s,
+            rng_spare,
+            elbo_trace: self.elbo_trace.clone(),
+            avg_params: self.avg_params.clone(),
+            avg_count: self.avg_count,
+            backoff: self.backoff,
+            skipped: self.skipped,
+        }
+    }
+
+    /// Restore a [`SviCursor`] snapshot; subsequent steps continue
+    /// bitwise-identically to the run the snapshot was taken from.
+    pub fn import_cursor(&mut self, cur: &SviCursor) -> Result<()> {
+        ensure!(
+            cur.params.len() == self.guide.params().len(),
+            "checkpoint has {} guide parameters, model needs {}",
+            cur.params.len(),
+            self.guide.params().len()
+        );
+        ensure!(
+            cur.avg_params.len() == self.avg_params.len(),
+            "checkpoint tail-average buffer has wrong length"
+        );
+        ensure!(
+            cur.elbo_trace.len() <= self.num_steps,
+            "checkpoint already has {} steps, options ask for {}",
+            cur.elbo_trace.len(),
+            self.num_steps
+        );
+        self.guide.params_mut().copy_from_slice(&cur.params);
+        self.opt.import_state(&cur.opt_moments, cur.opt_t);
+        self.rng = Rng::from_state(cur.rng_s, cur.rng_spare);
+        self.elbo_trace = Vec::with_capacity(self.num_steps);
+        self.elbo_trace.extend_from_slice(&cur.elbo_trace);
+        self.avg_params.copy_from_slice(&cur.avg_params);
+        self.avg_count = cur.avg_count;
+        self.backoff = cur.backoff;
+        self.skipped = cur.skipped;
+        self.consec_skips = 0;
+        Ok(())
     }
 
     /// Whether the convergence rule fires at the current trace length.
@@ -316,18 +439,55 @@ impl<E: ElboEngine> NativeSvi<E> {
     /// Run to `num_steps` (or early convergence) and package the
     /// result.  The reported guide is the tail average when at least
     /// one averaged step ran, else the raw final state.
-    pub fn run(mut self) -> NativeSviResult {
+    pub fn run(self) -> NativeSviResult {
+        self.run_with(None, 0, &mut |_| Ok(()))
+            .expect("no-op checkpoint sink cannot fail")
+    }
+
+    /// [`run`](NativeSvi::run) with fault-containment plumbing: an
+    /// optional wall-clock `deadline` (crossed → stop at the next step
+    /// boundary with `completed = false` and partial results), and a
+    /// checkpoint `sink` invoked with a full [`SviCursor`] snapshot
+    /// every `checkpoint_every` recorded steps (0 = never).
+    pub fn run_with(
+        mut self,
+        deadline: Option<std::time::Instant>,
+        checkpoint_every: usize,
+        sink: &mut dyn FnMut(&SviCursor) -> Result<()>,
+    ) -> Result<NativeSviResult> {
         let t0 = std::time::Instant::now();
         let mut converged = false;
+        let mut completed = true;
         while self.elbo_trace.len() < self.num_steps {
+            if let Some(d) = deadline {
+                if std::time::Instant::now() >= d {
+                    completed = false;
+                    break;
+                }
+            }
+            if self.consec_skips >= MAX_CONSECUTIVE_SKIPS {
+                completed = false;
+                break;
+            }
+            let before = self.elbo_trace.len();
             self.step();
+            let n = self.elbo_trace.len();
+            if checkpoint_every > 0 && n > before && n % checkpoint_every == 0 && n < self.num_steps
+            {
+                sink(&self.export_cursor())?;
+            }
             if self.converged_now() {
                 converged = true;
                 break;
             }
         }
+        if !completed {
+            // final snapshot so the interrupted fit is resumable
+            sink(&self.export_cursor())?;
+        }
         let secs = t0.elapsed().as_secs_f64();
         let steps = self.elbo_trace.len();
+        let skipped = self.skipped;
         let mut guide = self.guide;
         if self.avg_count > 0 {
             let inv = 1.0 / self.avg_count as f64;
@@ -335,13 +495,15 @@ impl<E: ElboEngine> NativeSvi<E> {
                 *p = *a * inv;
             }
         }
-        NativeSviResult {
+        Ok(NativeSviResult {
             guide,
             elbo_trace: self.elbo_trace,
             steps,
             converged,
             secs,
-        }
+            skipped,
+            completed,
+        })
     }
 }
 

@@ -77,26 +77,35 @@ pub fn read_f64(path: impl AsRef<Path>) -> Result<(Vec<f64>, Vec<usize>)> {
         .and_then(|s| s.split('(').nth(1))
         .and_then(|s| s.split(')').next())
         .context("npy: malformed shape")?;
-    let shape: Vec<usize> = shape_part
-        .split(',')
-        .filter_map(|t| {
-            let t = t.trim();
-            if t.is_empty() {
-                None
-            } else {
-                t.parse().ok()
-            }
-        })
-        .collect();
+    let mut shape: Vec<usize> = Vec::new();
+    for t in shape_part.split(',') {
+        let t = t.trim();
+        if t.is_empty() {
+            continue;
+        }
+        shape.push(
+            t.parse()
+                .with_context(|| format!("npy: bad shape token '{t}' in header"))?,
+        );
+    }
     let elements: usize = shape.iter().product();
     let mut bytes = Vec::new();
     f.read_to_end(&mut bytes)?;
     if bytes.len() < elements * 8 {
-        bail!("npy: truncated data");
+        bail!(
+            "npy: truncated data in {}: {} bytes for {} elements",
+            path.as_ref().display(),
+            bytes.len(),
+            elements
+        );
     }
     let data = bytes[..elements * 8]
         .chunks_exact(8)
-        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .map(|c| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(c);
+            f64::from_le_bytes(b)
+        })
         .collect();
     Ok((data, shape))
 }

@@ -47,13 +47,15 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (f64, T) {
 pub fn summarize(samples: &[f64]) -> Timing {
     assert!(!samples.is_empty());
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN-safe ordering (a poisoned timing must not panic
+    // the harness; NaNs sort last and show up in max_s)
+    sorted.sort_by(f64::total_cmp);
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     Timing {
         mean_s: mean,
         median_s: sorted[sorted.len() / 2],
         min_s: sorted[0],
-        max_s: *sorted.last().unwrap(),
+        max_s: sorted[sorted.len() - 1],
         reps: samples.len(),
     }
 }

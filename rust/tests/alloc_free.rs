@@ -15,7 +15,11 @@ use std::cell::Cell;
 
 use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel};
 use fugue::compile::{compile, compile_batched};
+use fugue::coordinator::{
+    run_chains_checkpointed, CheckpointConfig, NativeSampler, NutsOptions, TreeAlgorithm,
+};
 use fugue::data;
+use fugue::harness::fault::{Fault, FaultPlan, FaultSite, FaultyBatchPotential, FaultyPotential};
 use fugue::mcmc::batch_nuts::{draw_batch, BatchTreeWorkspace};
 use fugue::mcmc::hmc::{draw_in_workspace as hmc_draw_in_workspace, HmcWorkspace};
 use fugue::mcmc::nuts_iterative::{draw_in_workspace, TreeWorkspace};
@@ -135,6 +139,7 @@ fn assert_batch_draws_alloc_free<BP: BatchPotential>(name: &str, mut pot: BP, ep
             potential: 0.0,
             diverging: false,
             depth: 0,
+            poisoned: false,
         };
         lanes
     ];
@@ -406,6 +411,152 @@ fn svi_steps_are_allocation_free() {
     )
     .unwrap();
     assert_svi_steps_alloc_free("svi batched x8 logistic", BatchedParticles::new(lm), &opts(8));
+}
+
+/// The fault-containment path costs nothing on the heap: draws whose
+/// potential/gradient comes back NaN — the poisoned-energy quarantine
+/// and the ordinary mid-trajectory divergence rejection alike — must be
+/// handled entirely within the pre-sized workspace, scalar and batched.
+#[test]
+fn contained_faulted_draws_are_allocation_free() {
+    // scalar path: NaN every forward sweep from eval 150 on, so the
+    // measured window is dominated by poisoned/diverging draws
+    let evals: Vec<u64> = (150..5000).collect();
+    let mut pot = FaultyPotential::new(
+        compile(EightSchools::classic(), 0).unwrap(),
+        FaultPlan::nan_forward_at(&evals),
+    );
+    let dim = pot.dim();
+    let max_depth = 6;
+    let mut ws = TreeWorkspace::new(dim, max_depth);
+    let mut rng = Rng::new(51);
+    let mut z = vec![0.05; dim];
+    let inv_mass = vec![1.0; dim];
+    for _ in 0..5 {
+        let _ = draw_in_workspace(&mut pot, &mut rng, &mut ws, &z, 1e-2, &inv_mass, max_depth);
+        z.copy_from_slice(ws.proposal());
+    }
+    let before = allocation_count();
+    let mut contained = 0u64;
+    for _ in 0..15 {
+        let st = draw_in_workspace(&mut pot, &mut rng, &mut ws, &z, 1e-2, &inv_mass, max_depth);
+        z.copy_from_slice(ws.proposal());
+        if st.diverging {
+            contained += 1;
+        }
+    }
+    let after = allocation_count();
+    assert_eq!(
+        after - before,
+        0,
+        "scalar containment performed {} heap allocations",
+        after - before
+    );
+    assert!(pot.injected > 0, "adversary never fired");
+    assert!(contained > 0, "faults fired but no draw was contained");
+
+    // batched path: lane 1 poisoned every eval from 150 on — the
+    // quarantine/restart machinery must stay inside the batch workspace
+    let plan = FaultPlan {
+        faults: (150u64..5000)
+            .map(|e| Fault {
+                at_eval: e,
+                site: FaultSite::Forward,
+                value: f64::NAN,
+                lane: Some(1),
+            })
+            .collect(),
+    };
+    let mut bpot = FaultyBatchPotential::new(
+        compile_batched(EightSchools::classic(), 0, 4).unwrap(),
+        plan,
+    );
+    let dim = bpot.dim();
+    let lanes = bpot.lanes();
+    let mut ws = BatchTreeWorkspace::new(dim, lanes, max_depth);
+    let mut rngs: Vec<Rng> = (0..lanes).map(|k| Rng::new(52 + k as u64)).collect();
+    let mut z = vec![0.05; dim * lanes];
+    let inv_mass = vec![1.0; dim * lanes];
+    let steps = vec![1e-2; lanes];
+    let mut stats = vec![
+        DrawStats {
+            accept_prob: 0.0,
+            num_leapfrog: 0,
+            potential: 0.0,
+            diverging: false,
+            depth: 0,
+            poisoned: false,
+        };
+        lanes
+    ];
+    for _ in 0..5 {
+        draw_batch(
+            &mut bpot, &mut rngs, &mut ws, &z, &steps, &inv_mass, max_depth, &mut stats,
+        );
+        z.copy_from_slice(ws.proposal());
+    }
+    let before = allocation_count();
+    let mut lane_contained = 0u64;
+    for _ in 0..15 {
+        draw_batch(
+            &mut bpot, &mut rngs, &mut ws, &z, &steps, &inv_mass, max_depth, &mut stats,
+        );
+        z.copy_from_slice(ws.proposal());
+        if stats[1].diverging {
+            lane_contained += 1;
+        }
+    }
+    let after = allocation_count();
+    assert_eq!(
+        after - before,
+        0,
+        "batched lane containment performed {} heap allocations",
+        after - before
+    );
+    assert!(bpot.injected > 0, "batch adversary never fired");
+    assert!(lane_contained > 0, "lane faults fired but lane 1 was never contained");
+}
+
+/// The checkpoint-capable chain runner's per-draw bookkeeping (deadline
+/// checks, checkpoint cadence, quarantine counters, cursor pushes into
+/// pre-sized buffers) is allocation-free: growing a run by N sampling
+/// draws costs exactly N extra allocations — the one pre-existing
+/// proposal-vector `Transition` allocation per [`Sampler::draw`], and
+/// nothing from the containment/checkpoint layer.
+#[test]
+fn checkpoint_bookkeeping_adds_no_per_draw_allocations() {
+    fn allocs_for(samples: usize) -> u64 {
+        let pot = compile(EightSchools::classic(), 0).unwrap();
+        let mut sampler = NativeSampler::new(pot, TreeAlgorithm::Iterative, 6);
+        let opts = NutsOptions {
+            num_warmup: 50,
+            num_samples: samples,
+            seed: 11,
+            ..Default::default()
+        };
+        let cfg = CheckpointConfig {
+            path: None,
+            resume: false,
+            every: 1_000_000,
+            max_seconds: None,
+        };
+        let before = allocation_count();
+        let (results, completed) =
+            run_chains_checkpointed(&mut sampler, 1, &opts, &cfg).unwrap();
+        assert!(completed);
+        assert_eq!(results[0].samples.len() / results[0].dim, samples);
+        allocation_count() - before
+    }
+
+    let small = allocs_for(100);
+    let large = allocs_for(160);
+    assert_eq!(
+        large - small,
+        60,
+        "60 extra draws cost {} extra allocations (expected exactly 60: \
+         one Transition proposal vector each, zero from bookkeeping)",
+        large - small
+    );
 }
 
 /// Static-trajectory HMC now follows the same workspace idiom as the

@@ -1,0 +1,387 @@
+//! Chaos suite: proves the fault-containment invariants end-to-end by
+//! driving the samplers through the deterministic fault-injection
+//! harness (`fugue::harness::fault`) and the checkpoint/resume runners.
+//!
+//! Invariants pinned here:
+//!
+//! 1. **Containment** — every injected NaN/Inf (forward or adjoint
+//!    sweep) becomes a counted divergence or quarantined draw; no
+//!    non-finite value ever reaches the stored samples, and the chain
+//!    keeps sampling after the fault window passes.
+//! 2. **Lane quarantine** — poisoning one lane of the vectorized
+//!    engine quarantines and restarts that lane only; every sibling
+//!    lane stays **bitwise-equal** to an uninjected run.
+//! 3. **SVI backoff** — non-finite ELBO/gradient steps are skipped
+//!    with learning-rate backoff; the recorded ELBO trace stays finite
+//!    and the fit completes.
+//! 4. **Bitwise resume** — interrupting a run at arbitrary wall-clock
+//!    cuts (checkpoint + `--max-seconds` style budget) and resuming
+//!    until done reproduces the uninterrupted run bitwise, for all
+//!    three chain methods and for SVI.
+//! 5. **Divergence fingerprint** — the divergence counter that all of
+//!    the above routes through is statistically sound: nonzero on
+//!    Neal's funnel, zero on a conjugate normal-mean model.
+
+use std::path::PathBuf;
+
+use fugue::compile::zoo::{EightSchools, NealsFunnel, NormalMean};
+use fugue::compile::{compile, compile_batched};
+use fugue::coordinator::{
+    run_chain, run_chains_vectorized, run_compiled_chains_checkpointed,
+    run_compiled_chains_method, run_svi_checkpointed, run_svi_native, ChainMethod,
+    ChainResult, CheckpointConfig, NativeSampler, NutsOptions, TreeAlgorithm,
+};
+use fugue::harness::fault::{Fault, FaultPlan, FaultSite, FaultyBatchPotential, FaultyPotential};
+use fugue::mcmc::Potential;
+use fugue::svi::{NativeSvi, ScalarParticles, SviOptions};
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fugue_chaos_{}_{}.json", std::process::id(), name))
+}
+
+fn opts(warmup: usize, samples: usize, seed: u64) -> NutsOptions {
+    NutsOptions {
+        num_warmup: warmup,
+        num_samples: samples,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn assert_finite_samples(r: &ChainResult, what: &str) {
+    assert!(
+        r.samples.iter().all(|x| x.is_finite()),
+        "{what}: non-finite value escaped into the stored samples"
+    );
+    assert!(r.step_size.is_finite() && r.step_size > 0.0, "{what}: step size {}", r.step_size);
+    assert!(
+        r.inv_mass.iter().all(|x| x.is_finite() && *x > 0.0),
+        "{what}: non-finite/non-positive inverse mass"
+    );
+}
+
+// ---------------------------------------------------------------------
+// 1. scalar containment
+// ---------------------------------------------------------------------
+
+/// A burst of forward-sweep NaNs long enough to cover several draw
+/// boundaries: some faults land on a trajectory's starting energy
+/// (poisoned draw → quarantine), the rest mid-trajectory (ordinary
+/// counted divergence).  Both are contained; the chain finishes the run
+/// with finite samples and keeps moving after the burst.
+#[test]
+fn scalar_nan_burst_is_contained() {
+    let evals: Vec<u64> = (300..600).collect();
+    let pot = FaultyPotential::new(
+        compile(EightSchools::classic(), 0).unwrap(),
+        FaultPlan::nan_forward_at(&evals),
+    );
+    let dim = pot.dim();
+    let mut sampler = NativeSampler::new(pot, TreeAlgorithm::Iterative, 6);
+    let o = opts(200, 300, 17);
+    let res = run_chain(&mut sampler, &vec![0.1; dim], &o).unwrap();
+
+    assert!(sampler.potential.injected > 0, "adversary never fired");
+    assert!(res.divergences > 0, "faults fired but none was counted as a divergence");
+    assert!(
+        res.quarantines > 0,
+        "a 300-eval burst must poison at least one starting energy"
+    );
+    assert_finite_samples(&res, "scalar NaN burst");
+    // the chain recovered: the last 20 draws are not stuck at one point
+    let tail = &res.samples[res.samples.len() - 20 * dim..];
+    let first = &tail[..dim];
+    assert!(
+        tail.chunks(dim).any(|row| row != first),
+        "chain froze after the fault window"
+    );
+}
+
+/// Same bar for Inf forward faults and NaN adjoint (gradient) faults:
+/// a poisoned gradient NaNs the integrator state, which the energy
+/// accounting maps to an infinite-energy (diverging) leaf that can
+/// never be selected as the proposal.
+#[test]
+fn inf_and_adjoint_faults_are_contained() {
+    let mut faults = FaultPlan::inf_forward_at(&[350, 351, 352, 450]).faults;
+    faults.extend(FaultPlan::nan_adjoint_at(&[500, 501, 502, 601], 3).faults);
+    let pot = FaultyPotential::new(
+        compile(EightSchools::classic(), 0).unwrap(),
+        FaultPlan { faults },
+    );
+    let dim = pot.dim();
+    let mut sampler = NativeSampler::new(pot, TreeAlgorithm::Iterative, 6);
+    let o = opts(150, 200, 23);
+    let res = run_chain(&mut sampler, &vec![0.1; dim], &o).unwrap();
+
+    assert!(sampler.potential.injected > 0, "adversary never fired");
+    assert!(res.divergences > 0, "no containment recorded");
+    assert_finite_samples(&res, "Inf/adjoint faults");
+}
+
+/// Seeded random chaos sweep: a reproducible scatter of NaN/Inf,
+/// forward/adjoint faults across the whole run.  Nothing escapes.
+#[test]
+fn seeded_chaos_sweep_is_contained() {
+    let pot = FaultyPotential::new(
+        compile(EightSchools::classic(), 0).unwrap(),
+        FaultPlan::seeded(7, 40, 4000),
+    );
+    let dim = pot.dim();
+    let mut sampler = NativeSampler::new(pot, TreeAlgorithm::Iterative, 6);
+    let o = opts(200, 300, 29);
+    let res = run_chain(&mut sampler, &vec![0.1; dim], &o).unwrap();
+    assert!(sampler.potential.injected > 0, "adversary never fired");
+    assert_finite_samples(&res, "seeded chaos sweep");
+}
+
+// ---------------------------------------------------------------------
+// 2. lane quarantine
+// ---------------------------------------------------------------------
+
+/// Poisoning lane 1 of a 4-lane vectorized run quarantines and restarts
+/// that lane from its last good draw; lanes 0, 2, 3 must be
+/// **bitwise-identical** to a run with no faults at all.
+#[test]
+fn quarantined_lane_leaves_siblings_bitwise_identical() {
+    let o = opts(120, 150, 41);
+    let lanes = 4;
+
+    let mut clean = compile_batched(EightSchools::classic(), 0, lanes).unwrap();
+    let clean_res = run_chains_vectorized(&mut clean, &o, 6).unwrap();
+
+    let plan = FaultPlan {
+        faults: (300u64..600)
+            .map(|e| Fault {
+                at_eval: e,
+                site: FaultSite::Forward,
+                value: f64::NAN,
+                lane: Some(1),
+            })
+            .collect(),
+    };
+    let mut faulty = FaultyBatchPotential::new(
+        compile_batched(EightSchools::classic(), 0, lanes).unwrap(),
+        plan,
+    );
+    let faulty_res = run_chains_vectorized(&mut faulty, &o, 6).unwrap();
+    assert!(faulty.injected > 0, "lane adversary never fired");
+
+    // the poisoned lane was contained and kept sampling
+    let lane1 = &faulty_res[1];
+    assert!(lane1.quarantines > 0, "no draw was quarantined on the faulted lane");
+    assert!(lane1.divergences >= lane1.quarantines);
+    assert_finite_samples(lane1, "quarantined lane");
+
+    // sibling lanes: bitwise equality with the uninjected run
+    for k in [0usize, 2, 3] {
+        let (c, f) = (&clean_res[k], &faulty_res[k]);
+        assert_eq!(c.samples, f.samples, "lane {k} samples diverged from clean run");
+        assert_eq!(c.step_size.to_bits(), f.step_size.to_bits(), "lane {k} step size");
+        assert_eq!(c.inv_mass, f.inv_mass, "lane {k} inverse mass");
+        assert_eq!(c.divergences, f.divergences, "lane {k} divergences");
+        assert_eq!(c.total_leapfrogs, f.total_leapfrogs, "lane {k} leapfrogs");
+        assert_eq!(c.stats.accept_prob, f.stats.accept_prob, "lane {k} accept probs");
+        assert_eq!(f.quarantines, 0, "healthy lane {k} reported quarantines");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. SVI backoff
+// ---------------------------------------------------------------------
+
+/// Non-finite ELBO/gradient steps (forward and adjoint faults on the
+/// particle potential) are skipped with learning-rate backoff: the
+/// recorded ELBO trace stays finite end to end, the skip counter is
+/// surfaced, and the fit still completes every requested step.
+#[test]
+fn svi_backoff_recovers_finite_elbo_trace() {
+    let particles = 4;
+    // step s consumes particle evals [s*K, s*K+K): poison steps ~100-104
+    // (forward) and ~150-151 (adjoint)
+    let mut faults = FaultPlan::nan_forward_at(&[400, 401, 405, 410, 416]).faults;
+    faults.extend(FaultPlan::nan_adjoint_at(&[600, 604], 2).faults);
+    let engine = ScalarParticles::new(
+        FaultyPotential::new(
+            compile(EightSchools::classic(), 0).unwrap(),
+            FaultPlan { faults },
+        ),
+        particles,
+    );
+    let o = SviOptions {
+        num_steps: 400,
+        num_particles: particles,
+        lr: 0.05,
+        seed: 3,
+        convergence: None,
+        ..Default::default()
+    };
+    let result = NativeSvi::new(engine, &o).unwrap().run();
+
+    assert!(result.skipped > 0, "no step was skipped despite injected faults");
+    assert!(result.completed, "containable faults must not abort the run");
+    assert_eq!(result.steps, o.num_steps, "skipped steps must be retried, not dropped");
+    assert!(
+        result.elbo_trace.iter().all(|e| e.is_finite()),
+        "non-finite ELBO leaked into the trace"
+    );
+    assert!(
+        result.guide.params().iter().all(|p| p.is_finite()),
+        "non-finite guide parameter after contained faults"
+    );
+}
+
+// ---------------------------------------------------------------------
+// 4. bitwise resume under arbitrary interruption
+// ---------------------------------------------------------------------
+
+/// Run the checkpointed runner in small wall-clock slices (budget +
+/// checkpoint + resume) until it completes — an automated
+/// kill-and-resume cycle with arbitrary cut points — and require the
+/// result to be bitwise-identical to one uninterrupted run.
+fn interrupted_until_done(method: ChainMethod, o: &NutsOptions, tag: &str) -> Vec<ChainResult> {
+    let path = tmp_path(tag);
+    let _ = std::fs::remove_file(&path);
+    let cfg = CheckpointConfig {
+        path: Some(path.clone()),
+        resume: true,
+        every: 7,
+        max_seconds: Some(0.02),
+    };
+    let model = EightSchools::classic();
+    let mut slices = 0u32;
+    loop {
+        let (_, results, completed) =
+            run_compiled_chains_checkpointed(&model, method, 2, 6, o, &cfg).unwrap();
+        slices += 1;
+        assert!(slices < 10_000, "budgeted runner made no progress");
+        if completed {
+            let _ = std::fs::remove_file(&path);
+            return results;
+        }
+    }
+}
+
+fn assert_bitwise_equal(a: &[ChainResult], b: &[ChainResult], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: chain count");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.samples, y.samples, "{what}: chain {k} samples");
+        assert_eq!(x.step_size.to_bits(), y.step_size.to_bits(), "{what}: chain {k} step size");
+        assert_eq!(x.inv_mass, y.inv_mass, "{what}: chain {k} inverse mass");
+        assert_eq!(x.divergences, y.divergences, "{what}: chain {k} divergences");
+        assert_eq!(x.quarantines, y.quarantines, "{what}: chain {k} quarantines");
+        assert_eq!(x.total_leapfrogs, y.total_leapfrogs, "{what}: chain {k} leapfrogs");
+        assert_eq!(x.stats.accept_prob, y.stats.accept_prob, "{what}: chain {k} accepts");
+        assert_eq!(x.stats.num_leapfrog, y.stats.num_leapfrog, "{what}: chain {k} stats");
+    }
+}
+
+#[test]
+fn resume_is_bitwise_identical_sequential() {
+    let o = opts(80, 100, 57);
+    let (_, plain) =
+        run_compiled_chains_method(&EightSchools::classic(), ChainMethod::Sequential, 2, 6, &o)
+            .unwrap();
+    let resumed = interrupted_until_done(ChainMethod::Sequential, &o, "seq");
+    assert_bitwise_equal(&plain, &resumed, "sequential kill-and-resume");
+}
+
+#[test]
+fn resume_is_bitwise_identical_parallel() {
+    let o = opts(80, 100, 58);
+    let (_, plain) =
+        run_compiled_chains_method(&EightSchools::classic(), ChainMethod::Parallel, 2, 6, &o)
+            .unwrap();
+    let resumed = interrupted_until_done(ChainMethod::Parallel, &o, "par");
+    assert_bitwise_equal(&plain, &resumed, "parallel kill-and-resume");
+}
+
+#[test]
+fn resume_is_bitwise_identical_vectorized() {
+    let o = opts(80, 100, 59);
+    let (_, plain) =
+        run_compiled_chains_method(&EightSchools::classic(), ChainMethod::Vectorized, 2, 6, &o)
+            .unwrap();
+    let resumed = interrupted_until_done(ChainMethod::Vectorized, &o, "vec");
+    assert_bitwise_equal(&plain, &resumed, "vectorized kill-and-resume");
+}
+
+/// SVI: slice the fit with budget + checkpoint + resume until done and
+/// require the ELBO trace and fitted guide to match an uninterrupted
+/// `run_svi_native` fit bitwise.
+#[test]
+fn svi_resume_is_bitwise_identical() {
+    let o = SviOptions {
+        num_steps: 300,
+        num_particles: 4,
+        lr: 0.05,
+        seed: 61,
+        convergence: None,
+        ..Default::default()
+    };
+    let model = EightSchools::classic();
+    let (_, plain) = run_svi_native(&model, &o).unwrap();
+
+    let path = tmp_path("svi");
+    let _ = std::fs::remove_file(&path);
+    let cfg = CheckpointConfig {
+        path: Some(path.clone()),
+        resume: true,
+        every: 11,
+        max_seconds: Some(0.02),
+    };
+    let mut slices = 0u32;
+    let resumed = loop {
+        let (_, result) = run_svi_checkpointed(&model, &o, &cfg).unwrap();
+        slices += 1;
+        assert!(slices < 10_000, "budgeted SVI made no progress");
+        if result.completed {
+            break result;
+        }
+    };
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(plain.steps, resumed.steps, "SVI resume: step count");
+    assert_eq!(plain.elbo_trace, resumed.elbo_trace, "SVI resume: ELBO trace");
+    assert_eq!(plain.guide.params(), resumed.guide.params(), "SVI resume: guide params");
+    assert_eq!(plain.skipped, resumed.skipped);
+}
+
+// ---------------------------------------------------------------------
+// 5. divergence fingerprint
+// ---------------------------------------------------------------------
+
+/// Statistical soundness of the divergence counter everything above
+/// routes through: Neal's funnel — the canonical pathological geometry —
+/// must produce divergences, while a conjugate normal-mean model must
+/// produce none.  (Referenced from `compile::zoo::NealsFunnel` docs.)
+#[test]
+fn funnel_diverges_conjugate_does_not() {
+    let o = opts(400, 400, 2024);
+    let (_, funnel) =
+        run_compiled_chains_method(&NealsFunnel::classic(), ChainMethod::Sequential, 2, 8, &o)
+            .unwrap();
+    let funnel_div: u64 = funnel.iter().map(|r| r.divergences).sum();
+    assert!(
+        funnel_div > 0,
+        "NUTS reported zero divergences on Neal's funnel — divergence detection is broken"
+    );
+    // funnel divergences are the geometry's fault, not injected faults:
+    // nothing should have been quarantined
+    assert_eq!(funnel.iter().map(|r| r.quarantines).sum::<u64>(), 0);
+
+    let y: Vec<f64> = (0..50).map(|i| 0.3 + 0.01 * i as f64).collect();
+    let (_, conj) = run_compiled_chains_method(
+        &NormalMean { y, sigma: 1.0 },
+        ChainMethod::Sequential,
+        2,
+        8,
+        &o,
+    )
+    .unwrap();
+    let conj_div: u64 = conj.iter().map(|r| r.divergences).sum();
+    assert_eq!(
+        conj_div, 0,
+        "a well-conditioned conjugate model must sample divergence-free"
+    );
+}
