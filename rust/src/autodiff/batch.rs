@@ -1028,11 +1028,11 @@ impl BatchTapeProgram {
         for i in 0..ops.len() {
             match ops[i] {
                 BOp::Leaf | BOp::Input => {}
-                BOp::Add(x, y) => binary_sweep(values, i, x, y, l, |a, b| a + b),
-                BOp::Sub(x, y) => binary_sweep(values, i, x, y, l, |a, b| a - b),
-                BOp::Mul(x, y) => binary_sweep(values, i, x, y, l, |a, b| a * b),
-                BOp::Div(x, y) => binary_sweep(values, i, x, y, l, |a, b| a / b),
-                BOp::Neg(x) => unary_sweep(values, i, x, l, |a| -a),
+                BOp::Add(x, y) => add_sweep(values, i, x, y, l),
+                BOp::Sub(x, y) => sub_sweep(values, i, x, y, l),
+                BOp::Mul(x, y) => mul_sweep(values, i, x, y, l),
+                BOp::Div(x, y) => div_sweep(values, i, x, y, l),
+                BOp::Neg(x) => neg_sweep(values, i, x, l),
                 BOp::Exp(x) => unary_sweep(values, i, x, l, f64::exp),
                 BOp::Ln(x) => unary_sweep(values, i, x, l, f64::ln),
                 BOp::Log1p(x) => unary_sweep(values, i, x, l, f64::ln_1p),
@@ -1040,8 +1040,8 @@ impl BatchTapeProgram {
                 BOp::Sigmoid(x) => unary_sweep(values, i, x, l, sigmoid_val),
                 BOp::Softplus(x) => unary_sweep(values, i, x, l, softplus_val),
                 BOp::Powi(x, n) => unary_sweep(values, i, x, l, |a| a.powi(n)),
-                BOp::Scale(x, c) => unary_sweep(values, i, x, l, |a| c * a),
-                BOp::Offset(x, c) => unary_sweep(values, i, x, l, |a| a + c),
+                BOp::Scale(x, c) => scale_sweep(values, i, x, l, c),
+                BOp::Offset(x, c) => offset_sweep(values, i, x, l, c),
                 BOp::Composite { pstart, xstart, .. } => {
                     let kind = comp_kinds[ci];
                     ci += 1;
@@ -1119,17 +1119,50 @@ impl BatchTapeProgram {
     }
 }
 
-/// Lane-minor unary forward step shared by the frozen sweep.
+/// Micro-lane width of the frozen forward kernels.  Lanes are swept in
+/// fixed-size blocks of `MICRO_LANES`, so the hot inner loop is a
+/// bounds-check-free straight-line body over `[f64; MICRO_LANES]`
+/// arrays — the shape LLVM reliably turns into packed SIMD — with a
+/// scalar remainder loop for ragged widths.  The tiled dispatcher
+/// ([`crate::mcmc::TiledBatchPotential`]) rounds its default tile
+/// widths to a multiple of this so full tiles never touch the
+/// remainder path.
+///
+/// Bitwise contract: every kernel applies the *same* per-lane scalar
+/// function in the same order as a plain `for k in 0..l` sweep, so
+/// micro-lane blocking (and the `simd` feature's explicit `std::simd`
+/// variants of the exactly-rounded arithmetic ops) cannot change any
+/// lane's bits.
+pub const MICRO_LANES: usize = 8;
+
+/// Lane-minor unary forward step shared by the frozen sweep: an
+/// explicit `MICRO_LANES`-wide unrolled micro-lane kernel plus a
+/// scalar remainder.
 #[inline]
 fn unary_sweep(values: &mut [f64], i: usize, x: u32, l: usize, f: impl Fn(f64) -> f64) {
     let (src, dst) = values.split_at_mut(i * l);
     let xs = x as usize * l;
-    for k in 0..l {
-        dst[k] = f(src[xs + k]);
+    let src = &src[xs..xs + l];
+    let dst = &mut dst[..l];
+    let mut sc = src.chunks_exact(MICRO_LANES);
+    let mut dc = dst.chunks_exact_mut(MICRO_LANES);
+    for (d, s) in (&mut dc).zip(&mut sc) {
+        let s: &[f64; MICRO_LANES] = s.try_into().unwrap();
+        let d: &mut [f64; MICRO_LANES] = d.try_into().unwrap();
+        for j in 0..MICRO_LANES {
+            d[j] = f(s[j]);
+        }
+    }
+    for (d, s) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *d = f(*s);
     }
 }
 
-/// Lane-minor binary forward step shared by the frozen sweep.
+/// Lane-minor binary forward step shared by the frozen sweep (same
+/// micro-lane blocking as [`unary_sweep`]).  With `--features simd`
+/// every binary-arith caller dispatches to [`simd_sweep`] instead, so
+/// this kernel is only reachable from the stable build.
+#[cfg_attr(feature = "simd", allow(dead_code))]
 #[inline]
 fn binary_sweep(
     values: &mut [f64],
@@ -1141,9 +1174,154 @@ fn binary_sweep(
 ) {
     let (src, dst) = values.split_at_mut(i * l);
     let (xs, ys) = (x as usize * l, y as usize * l);
-    for k in 0..l {
-        dst[k] = f(src[xs + k], src[ys + k]);
+    let (xv, yv) = (&src[xs..xs + l], &src[ys..ys + l]);
+    let dst = &mut dst[..l];
+    let mut xc = xv.chunks_exact(MICRO_LANES);
+    let mut yc = yv.chunks_exact(MICRO_LANES);
+    let mut dc = dst.chunks_exact_mut(MICRO_LANES);
+    for ((d, a), b) in (&mut dc).zip(&mut xc).zip(&mut yc) {
+        let a: &[f64; MICRO_LANES] = a.try_into().unwrap();
+        let b: &[f64; MICRO_LANES] = b.try_into().unwrap();
+        let d: &mut [f64; MICRO_LANES] = d.try_into().unwrap();
+        for j in 0..MICRO_LANES {
+            d[j] = f(a[j], b[j]);
+        }
     }
+    for ((d, a), b) in dc
+        .into_remainder()
+        .iter_mut()
+        .zip(xc.remainder())
+        .zip(yc.remainder())
+    {
+        *d = f(*a, *b);
+    }
+}
+
+/// Explicit `std::simd` micro-lane kernels for the *exactly-rounded*
+/// IEEE-754 elementwise ops (`+ - * /`, negation, scale, offset).
+/// Because those operations are correctly rounded both as scalars and
+/// as vector lanes, the SIMD results are bitwise identical to the
+/// scalar sweep — transcendental ops (exp, ln, ...) stay on the
+/// unrolled scalar kernels, whose libm calls a vector math library
+/// could not reproduce bit-for-bit.  Off by default (`portable_simd`
+/// is nightly-only); enable with `--features simd`.
+#[cfg(feature = "simd")]
+mod simd_sweep {
+    use super::MICRO_LANES;
+    use std::simd::Simd;
+
+    type F = Simd<f64, MICRO_LANES>;
+
+    #[inline]
+    pub(super) fn binary(
+        dst: &mut [f64],
+        xs: &[f64],
+        ys: &[f64],
+        op: impl Fn(F, F) -> F,
+        scalar: impl Fn(f64, f64) -> f64,
+    ) {
+        let n = dst.len() / MICRO_LANES * MICRO_LANES;
+        let mut k = 0;
+        while k < n {
+            let a = F::from_slice(&xs[k..k + MICRO_LANES]);
+            let b = F::from_slice(&ys[k..k + MICRO_LANES]);
+            op(a, b).copy_to_slice(&mut dst[k..k + MICRO_LANES]);
+            k += MICRO_LANES;
+        }
+        for k in n..dst.len() {
+            dst[k] = scalar(xs[k], ys[k]);
+        }
+    }
+
+    #[inline]
+    pub(super) fn unary(
+        dst: &mut [f64],
+        xs: &[f64],
+        op: impl Fn(F) -> F,
+        scalar: impl Fn(f64) -> f64,
+    ) {
+        let n = dst.len() / MICRO_LANES * MICRO_LANES;
+        let mut k = 0;
+        while k < n {
+            let a = F::from_slice(&xs[k..k + MICRO_LANES]);
+            op(a).copy_to_slice(&mut dst[k..k + MICRO_LANES]);
+            k += MICRO_LANES;
+        }
+        for k in n..dst.len() {
+            dst[k] = scalar(xs[k]);
+        }
+    }
+}
+
+/// Generate the dispatching sweep for one exactly-rounded binary
+/// arithmetic op: `std::simd` kernel under `--features simd`, the
+/// unrolled micro-lane kernel otherwise.  Either way bitwise-equal.
+macro_rules! arith_binary_sweep {
+    ($name:ident, $op:tt) => {
+        #[inline]
+        fn $name(values: &mut [f64], i: usize, x: u32, y: u32, l: usize) {
+            #[cfg(feature = "simd")]
+            {
+                let (src, dst) = values.split_at_mut(i * l);
+                let (xs, ys) = (x as usize * l, y as usize * l);
+                simd_sweep::binary(
+                    &mut dst[..l],
+                    &src[xs..xs + l],
+                    &src[ys..ys + l],
+                    |a, b| a $op b,
+                    |a, b| a $op b,
+                );
+            }
+            #[cfg(not(feature = "simd"))]
+            binary_sweep(values, i, x, y, l, |a, b| a $op b);
+        }
+    };
+}
+
+arith_binary_sweep!(add_sweep, +);
+arith_binary_sweep!(sub_sweep, -);
+arith_binary_sweep!(mul_sweep, *);
+arith_binary_sweep!(div_sweep, /);
+
+/// Negation sweep (exactly rounded: sign-bit flip per lane).
+#[inline]
+fn neg_sweep(values: &mut [f64], i: usize, x: u32, l: usize) {
+    #[cfg(feature = "simd")]
+    {
+        let (src, dst) = values.split_at_mut(i * l);
+        let xs = x as usize * l;
+        simd_sweep::unary(&mut dst[..l], &src[xs..xs + l], |a| -a, |a| -a);
+    }
+    #[cfg(not(feature = "simd"))]
+    unary_sweep(values, i, x, l, |a| -a);
+}
+
+/// Constant-multiply sweep (`c * x`, exactly rounded per lane).
+#[inline]
+fn scale_sweep(values: &mut [f64], i: usize, x: u32, l: usize, c: f64) {
+    #[cfg(feature = "simd")]
+    {
+        let (src, dst) = values.split_at_mut(i * l);
+        let xs = x as usize * l;
+        let cv = std::simd::Simd::splat(c);
+        simd_sweep::unary(&mut dst[..l], &src[xs..xs + l], |a| cv * a, |a| c * a);
+    }
+    #[cfg(not(feature = "simd"))]
+    unary_sweep(values, i, x, l, |a| c * a);
+}
+
+/// Constant-add sweep (`x + c`, exactly rounded per lane).
+#[inline]
+fn offset_sweep(values: &mut [f64], i: usize, x: u32, l: usize, c: f64) {
+    #[cfg(feature = "simd")]
+    {
+        let (src, dst) = values.split_at_mut(i * l);
+        let xs = x as usize * l;
+        let cv = std::simd::Simd::splat(c);
+        simd_sweep::unary(&mut dst[..l], &src[xs..xs + l], |a| a + cv, |a| a + c);
+    }
+    #[cfg(not(feature = "simd"))]
+    unary_sweep(values, i, x, l, |a| a + c);
 }
 
 /// The batched tape is an [`Alg`] instance: the *same* generic model

@@ -46,7 +46,7 @@
 
 pub mod batch;
 
-pub use batch::{BatchTape, BatchTapeProgram};
+pub use batch::{BatchTape, BatchTapeProgram, MICRO_LANES};
 
 use crate::ppl::special::{softplus_sigmoid, LN_2PI};
 

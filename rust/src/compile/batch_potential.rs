@@ -43,7 +43,7 @@ use crate::compile::layout::{SiteLayout, SiteTransform};
 use crate::compile::potential::REPLAY_CHECK_PERIOD;
 use crate::compile::{pool_take, DistV, EffModel, ProbCtx};
 use crate::effects::site_key;
-use crate::mcmc::BatchPotential;
+use crate::mcmc::{tile_partition, BatchPotential, TiledBatchPotential};
 
 /// A compiled effect-handler program evaluated over `lanes` chains at
 /// once: caches the site layout and every evaluation buffer, records
@@ -431,6 +431,42 @@ pub fn compile_batched<M: EffModel>(
 ) -> Result<BatchedCompiledModel<M>> {
     let layout = SiteLayout::trace(&model, seed)?;
     Ok(BatchedCompiledModel::new(model, layout, lanes))
+}
+
+/// Build a [`TiledBatchPotential`] over an already-traced layout: one
+/// [`BatchedCompiledModel`] per tile of at most `tile` lanes (see
+/// [`crate::mcmc::tile_partition`]), each recording and freezing its
+/// own narrow program.  Worker threads default to the machine's
+/// available parallelism; cap with
+/// [`TiledBatchPotential::with_threads`].
+pub fn tiled_from_layout<M: EffModel + Clone + Send>(
+    model: &M,
+    layout: &SiteLayout,
+    lanes: usize,
+    tile: usize,
+) -> TiledBatchPotential<BatchedCompiledModel<M>> {
+    let tiles: Vec<BatchedCompiledModel<M>> = tile_partition(lanes, tile)
+        .into_iter()
+        .map(|w| BatchedCompiledModel::new(model.clone(), layout.clone(), w))
+        .collect();
+    TiledBatchPotential::new(tiles)
+}
+
+/// Compile an effect-handler program into a tiled batched potential
+/// spanning `lanes` lanes in tiles of at most `tile` lanes — the
+/// massive-lane entry point for K far beyond the SIMD width (thousands
+/// of short NUTS chains, hundreds of SVI particles).  Every lane is
+/// bitwise-identical to [`compile_batched`] at the same K, which is
+/// bitwise-identical to the scalar [`crate::compile::compile`]
+/// (`rust/tests/lane_scaling.rs`).
+pub fn compile_tiled<M: EffModel + Clone + Send>(
+    model: M,
+    seed: u64,
+    lanes: usize,
+    tile: usize,
+) -> Result<TiledBatchPotential<BatchedCompiledModel<M>>> {
+    let layout = SiteLayout::trace(&model, seed)?;
+    Ok(tiled_from_layout(&model, &layout, lanes, tile))
 }
 
 #[cfg(test)]

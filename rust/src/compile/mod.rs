@@ -83,7 +83,7 @@ use crate::autodiff::Alg;
 
 pub use crate::ppl::distv::DistV;
 
-pub use batch_potential::{compile_batched, BatchedCompiledModel};
+pub use batch_potential::{compile_batched, compile_tiled, tiled_from_layout, BatchedCompiledModel};
 pub use handler_ctx::HandlerCtx;
 pub use layout::{SiteLayout, SiteSpec, SiteTransform};
 pub use potential::CompiledModel;

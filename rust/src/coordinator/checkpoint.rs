@@ -430,7 +430,7 @@ pub fn run_chains_checkpointed<S: Sampler>(
 /// under any method; a mid-chain sequential checkpoint resumes
 /// sequentially only — the vectorized path refuses it with a
 /// descriptive [`InferenceError::Checkpoint`].
-pub fn run_compiled_chains_checkpointed<M: EffModel + Clone + Sync>(
+pub fn run_compiled_chains_checkpointed<M: EffModel + Clone + Send + Sync>(
     model: &M,
     method: ChainMethod,
     num_chains: usize,
@@ -476,22 +476,45 @@ pub fn run_compiled_chains_checkpointed<M: EffModel + Clone + Sync>(
                     })
                     .collect(),
             };
-            let mut pot =
-                BatchedCompiledModel::new(model.clone(), layout.clone(), num_chains);
             let save_path = cfg.path.clone();
             let o = opts.clone();
-            let (warmup_secs, sample_secs, completed) = run_chains_vectorized_from(
-                &mut pot,
-                opts,
-                max_tree_depth,
-                &mut cursors,
-                cfg.deadline(),
-                cfg.every,
-                &mut |cs| match &save_path {
-                    Some(p) => save_chain_checkpoint(p, &o, dim, cs),
-                    None => Ok(()),
-                },
-            )?;
+            let mut sink = |cs: &[ChainCursor]| match &save_path {
+                Some(p) => save_chain_checkpoint(p, &o, dim, cs),
+                None => Ok(()),
+            };
+            // same engine selection as run_compiled_chains_method: the
+            // tiled massive-lane potential past the lane threshold,
+            // bitwise-identical either way (rust/tests/lane_scaling.rs)
+            let (warmup_secs, sample_secs, completed) =
+                if num_chains > crate::coordinator::TILED_LANE_THRESHOLD {
+                    let threads = std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1);
+                    let tile = crate::mcmc::auto_tile_width(num_chains, threads);
+                    let mut pot =
+                        crate::compile::tiled_from_layout(model, &layout, num_chains, tile);
+                    run_chains_vectorized_from(
+                        &mut pot,
+                        opts,
+                        max_tree_depth,
+                        &mut cursors,
+                        cfg.deadline(),
+                        cfg.every,
+                        &mut sink,
+                    )?
+                } else {
+                    let mut pot =
+                        BatchedCompiledModel::new(model.clone(), layout.clone(), num_chains);
+                    run_chains_vectorized_from(
+                        &mut pot,
+                        opts,
+                        max_tree_depth,
+                        &mut cursors,
+                        cfg.deadline(),
+                        cfg.every,
+                        &mut sink,
+                    )?
+                };
             if let Some(p) = &cfg.path {
                 save_chain_checkpoint(p, opts, dim, &cursors)?;
             }
@@ -591,7 +614,7 @@ pub fn load_svi_checkpoint(
 /// of [`crate::coordinator::run_svi_native`], bitwise-identical to it
 /// (and to an interrupted + resumed invocation of itself) step for
 /// step.
-pub fn run_svi_checkpointed<M: EffModel + Clone>(
+pub fn run_svi_checkpointed<M: EffModel + Clone + Send>(
     model: &M,
     opts: &SviOptions,
     cfg: &CheckpointConfig,
@@ -619,7 +642,20 @@ pub fn run_svi_checkpointed<M: EffModel + Clone>(
         }
         Ok(())
     }
-    let result = if opts.vectorize_particles && opts.num_particles > 1 {
+    let result = if opts.vectorize_particles
+        && opts.num_particles > crate::coordinator::TILED_LANE_THRESHOLD
+    {
+        // engine parity with run_svi_native: tiled massive-lane
+        // particles past the threshold (bitwise-identical either way)
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let tile = crate::mcmc::auto_tile_width(opts.num_particles, threads);
+        let pot = crate::compile::tiled_from_layout(model, &layout, opts.num_particles, tile);
+        let mut svi = NativeSvi::new(BatchedParticles::new(pot), opts)?;
+        restore_into(&mut svi, cfg, seed, num_steps, layout.dim)?;
+        svi.run_with(cfg.deadline(), cfg.every, &mut sink)?
+    } else if opts.vectorize_particles && opts.num_particles > 1 {
         let pot = BatchedCompiledModel::new(model.clone(), layout.clone(), opts.num_particles);
         let mut svi = NativeSvi::new(BatchedParticles::new(pot), opts)?;
         restore_into(&mut svi, cfg, seed, num_steps, layout.dim)?;

@@ -47,5 +47,6 @@ pub use sampler::{FusedSampler, NativeSampler, Sampler, TreeAlgorithm};
 pub use svi::run_svi_native;
 pub use vectorized::{
     run_chains_vectorized, run_chains_vectorized_from, run_compiled_chains_method, ChainMethod,
+    TILED_LANE_THRESHOLD,
 };
 pub use warmup::WarmupSchedule;

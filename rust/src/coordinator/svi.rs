@@ -12,20 +12,36 @@
 
 use anyhow::{ensure, Result};
 
-use crate::compile::{BatchedCompiledModel, CompiledModel, EffModel, SiteLayout};
+use crate::compile::{
+    tiled_from_layout, BatchedCompiledModel, CompiledModel, EffModel, SiteLayout,
+};
+use crate::coordinator::TILED_LANE_THRESHOLD;
+use crate::mcmc::auto_tile_width;
 use crate::svi::native::{BatchedParticles, NativeSvi, NativeSviResult, ScalarParticles, SviOptions};
 
 /// Compile `model` and fit a mean-field ADVI posterior with the native
 /// engine — the entry point behind the `fugue svi-model` CLI.  Returns
 /// the compiled layout (for constrained-space reporting and predictive
 /// replay) alongside the fitted guide and ELBO trace.
-pub fn run_svi_native<M: EffModel + Clone>(
+///
+/// Particle counts past [`TILED_LANE_THRESHOLD`] ride the tiled
+/// massive-lane potential (K=512 particles → tile-per-thread lanes) —
+/// an execution strategy only, bitwise-identical to the single-program
+/// backend per particle.
+pub fn run_svi_native<M: EffModel + Clone + Send>(
     model: &M,
     opts: &SviOptions,
 ) -> Result<(SiteLayout, NativeSviResult)> {
     ensure!(opts.num_particles > 0, "SVI needs at least one ELBO particle");
     let layout = SiteLayout::trace(model, opts.seed)?;
-    let result = if opts.vectorize_particles && opts.num_particles > 1 {
+    let result = if opts.vectorize_particles && opts.num_particles > TILED_LANE_THRESHOLD {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let tile = auto_tile_width(opts.num_particles, threads);
+        let pot = tiled_from_layout(model, &layout, opts.num_particles, tile);
+        NativeSvi::new(BatchedParticles::new(pot), opts)?.run()
+    } else if opts.vectorize_particles && opts.num_particles > 1 {
         let pot = BatchedCompiledModel::new(model.clone(), layout.clone(), opts.num_particles);
         NativeSvi::new(BatchedParticles::new(pot), opts)?.run()
     } else {

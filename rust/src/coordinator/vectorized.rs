@@ -24,7 +24,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::compile::{BatchedCompiledModel, CompiledModel, EffModel, SiteLayout};
+use crate::compile::{
+    tiled_from_layout, BatchedCompiledModel, CompiledModel, EffModel, SiteLayout,
+};
 use crate::coordinator::chain::{
     chain_start, run_chains, ChainCursor, ChainResult, NutsOptions,
 };
@@ -32,8 +34,16 @@ use crate::coordinator::parallel::run_compiled_chains;
 use crate::coordinator::sampler::{NativeSampler, TreeAlgorithm};
 use crate::coordinator::warmup::WarmupSchedule;
 use crate::mcmc::batch_nuts::{draw_batch, BatchTreeWorkspace};
-use crate::mcmc::{BatchPotential, DrawStats, DualAverage, Welford};
+use crate::mcmc::{auto_tile_width, BatchPotential, DrawStats, DualAverage, Welford};
 use crate::rng::Rng;
+
+/// Chain counts above this ride the tiled massive-lane engine
+/// ([`crate::mcmc::TiledBatchPotential`]) instead of one K-wide
+/// program: past this width the lane-minor arrays overflow L1/L2 and
+/// tile-per-thread dispatch wins.  Purely an execution-strategy
+/// switch — the tiled engine is bitwise-identical per lane
+/// (`rust/tests/lane_scaling.rs`), so results do not depend on it.
+pub const TILED_LANE_THRESHOLD: usize = 64;
 
 /// Multi-chain execution strategy (NumPyro's `chain_method`):
 /// same statistics, different schedulers.
@@ -311,7 +321,7 @@ pub fn run_chains_vectorized_from<BP: BatchPotential + ?Sized>(
 /// [`crate::compile::CompiledModel`] per chain and pass
 /// `ScalarLanes::new(pots)` to [`run_chains_vectorized`]
 /// (see [`crate::mcmc::ScalarLanes`]).
-pub fn run_compiled_chains_method<M: EffModel + Clone + Sync>(
+pub fn run_compiled_chains_method<M: EffModel + Clone + Send + Sync>(
     model: &M,
     method: ChainMethod,
     num_chains: usize,
@@ -334,6 +344,18 @@ pub fn run_compiled_chains_method<M: EffModel + Clone + Sync>(
             let layout = SiteLayout::trace(model, opts.seed)?;
             if num_chains == 0 {
                 return Ok((layout, Vec::new()));
+            }
+            if num_chains > TILED_LANE_THRESHOLD {
+                // lane-sharded regime: tile the lanes across worker
+                // threads; every lane stays bitwise-identical to the
+                // single-program engine below (rust/tests/lane_scaling.rs)
+                let threads = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1);
+                let tile = auto_tile_width(num_chains, threads);
+                let mut pot = tiled_from_layout(model, &layout, num_chains, tile);
+                let results = run_chains_vectorized(&mut pot, opts, max_tree_depth)?;
+                return Ok((layout, results));
             }
             let mut pot = BatchedCompiledModel::new(model.clone(), layout.clone(), num_chains);
             let results = run_chains_vectorized(&mut pot, opts, max_tree_depth)?;

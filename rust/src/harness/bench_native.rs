@@ -44,6 +44,13 @@
 //!    logistic model — the `robustness_overhead` row
 //!    (`ms_per_eval_raw` / `ms_per_eval_checked` / `overhead_frac`,
 //!    target < 1%).
+//! 7. **lane scaling** (`lane_scaling`): ms/leapfrog-per-lane of the
+//!    tiled massive-lane engine
+//!    ([`crate::mcmc::TiledBatchPotential`]) on the compiled logistic
+//!    across K ∈ {8, 32, 128, 512, 1024} lanes, each K gated by a
+//!    bitwise-equality `ensure!` against the single-program
+//!    `BatchTape` path (`tiled_bitwise_equal`), plus the per-lane cost
+//!    ratio K=512 vs K=8 (`per_lane_ratio_512_vs_8`, target < 2x).
 //!
 //! Results are written as machine-readable JSON (`BENCH_native.json` at
 //! the repo root by default) so the perf trajectory is diffable across
@@ -55,7 +62,7 @@ use anyhow::Result;
 
 use crate::autodiff::{Tape, Var};
 use crate::compile::zoo::{EightSchools, Horseshoe, LogisticModel, NormalMean};
-use crate::compile::{compile, compile_batched, EffModel};
+use crate::compile::{compile, compile_batched, tiled_from_layout, EffModel, SiteLayout};
 use crate::config::Settings;
 use crate::coordinator::{
     run_chain, run_chains_checkpointed, run_compiled_chains_method, run_svi_native,
@@ -67,7 +74,10 @@ use crate::diagnostics::summary::{max_cross_chain_rhat, summarize};
 use crate::svi::{
     BatchedParticles, NativeSvi, OptimKind, ScalarParticles, StepSchedule, SviOptions,
 };
-use crate::mcmc::{nuts_iterative, Potential, Transition};
+use crate::mcmc::batch_nuts::{draw_batch, BatchTreeWorkspace};
+use crate::mcmc::{
+    auto_tile_width, nuts_iterative, BatchPotential, DrawStats, Potential, Transition,
+};
 use crate::models::skim::SkimHypers;
 use crate::models::{HmmNative, LogisticNative, SkimNative};
 use crate::ppl::special::{sigmoid, softplus, LN_2PI};
@@ -973,6 +983,163 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
         jobj(fields)
     };
 
+    // --- lane scaling: the tiled massive-lane engine ---
+    // ms/leapfrog-per-lane of the two-level (tile-per-thread x
+    // micro-lane SIMD) engine across the K sweep, with a bitwise
+    // equality gate against the single-program BatchTape at every K
+    let lane_scaling_json = {
+        report.push_str("lane scaling — tiled massive-lane engine (compiled logistic)\n");
+        let (ln, ld) = if settings.quick { (400, 8) } else { (1000, 16) };
+        let dset = data::make_covtype_like(settings.seed ^ 0xA4E, ln, ld);
+        let model = LogisticModel {
+            x: dset.x,
+            y: dset.y,
+            n: ln,
+            d: ld,
+        };
+        let layout = SiteLayout::trace(&model, settings.seed)?;
+        let dim = layout.dim;
+        let ks: &[usize] = if settings.quick {
+            &[8, 32, 128]
+        } else {
+            &[8, 32, 128, 512, 1024]
+        };
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let mut rows: Vec<Json> = Vec::new();
+        let mut per_lane: BTreeMap<usize, f64> = BTreeMap::new();
+        for &k in ks {
+            let tile = auto_tile_width(k, threads);
+            let mut tiled = tiled_from_layout(&model, &layout, k, tile);
+            let mut wide = compile_batched(model.clone(), settings.seed, k)?;
+
+            // deterministic lane-minor state shared by both engines
+            let mut zrng = Rng::new(settings.seed ^ 0x1A7E ^ k as u64);
+            let z0: Vec<f64> = (0..dim * k).map(|_| 0.05 * zrng.normal()).collect();
+            let mut u_t = vec![0.0; k];
+            let mut g_t = vec![0.0; dim * k];
+            let mut u_w = vec![0.0; k];
+            let mut g_w = vec![0.0; dim * k];
+            tiled.value_and_grad_batch(&z0, &mut u_t, &mut g_t);
+            wide.value_and_grad_batch(&z0, &mut u_w, &mut g_w);
+            let mut bitwise = u_t
+                .iter()
+                .zip(&u_w)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+                && g_t.iter().zip(&g_w).all(|(a, b)| a.to_bits() == b.to_bits());
+
+            // one full NUTS transition per engine with identical
+            // per-lane RNG streams: the proposals must agree bit for bit
+            let mut ws = BatchTreeWorkspace::new(dim, k, TIMING_DEPTH);
+            let inv_mass = vec![1.0; dim * k];
+            let step_szs = vec![1e-2; k];
+            let mut stats = vec![
+                DrawStats {
+                    accept_prob: 0.0,
+                    num_leapfrog: 0,
+                    potential: 0.0,
+                    diverging: false,
+                    depth: 0,
+                    poisoned: false,
+                };
+                k
+            ];
+            let mut rngs_t: Vec<Rng> =
+                (0..k).map(|j| Rng::new(settings.seed + j as u64)).collect();
+            let mut rngs_w: Vec<Rng> =
+                (0..k).map(|j| Rng::new(settings.seed + j as u64)).collect();
+            draw_batch(
+                &mut tiled,
+                &mut rngs_t,
+                &mut ws,
+                &z0,
+                &step_szs,
+                &inv_mass,
+                TIMING_DEPTH,
+                &mut stats,
+            );
+            let prop_t = ws.proposal().to_vec();
+            draw_batch(
+                &mut wide,
+                &mut rngs_w,
+                &mut ws,
+                &z0,
+                &step_szs,
+                &inv_mass,
+                TIMING_DEPTH,
+                &mut stats,
+            );
+            bitwise &= ws
+                .proposal()
+                .iter()
+                .zip(&prop_t)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            anyhow::ensure!(
+                bitwise,
+                "tiled engine diverged bitwise from the single-program BatchTape at K={k} \
+                 on the compiled logistic — every lane must be exactly a scalar chain"
+            );
+
+            // timed draws through the tiled engine (small fixed eps →
+            // full 2^depth trees, so leapfrog counts are stable)
+            let draws = if settings.quick { 2 } else { 4 };
+            let e0 = tiled.num_evals();
+            let t0 = std::time::Instant::now();
+            for _ in 0..draws {
+                draw_batch(
+                    &mut tiled,
+                    &mut rngs_t,
+                    &mut ws,
+                    &z0,
+                    &step_szs,
+                    &inv_mass,
+                    TIMING_DEPTH,
+                    &mut stats,
+                );
+            }
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let evals = (tiled.num_evals() - e0).max(1);
+            let ms_lf_lane = wall_ms / evals as f64 / k as f64;
+            per_lane.insert(k, ms_lf_lane);
+            report.push_str(&format!(
+                "  K={k:5} tile={tile:4} threads={threads}: {ms_lf_lane:.6} ms/leapfrog/lane \
+                 over {evals} batched leapfrogs (bitwise equal: {bitwise})\n"
+            ));
+            rows.push(jobj(vec![
+                ("k", jnum(k as f64)),
+                ("tile", jnum(tile as f64)),
+                ("threads", jnum(threads as f64)),
+                ("batched_leapfrogs", jnum(evals as f64)),
+                ("ms_per_leapfrog_per_lane", jnum(ms_lf_lane)),
+                ("tiled_bitwise_equal", Json::Bool(bitwise)),
+            ]));
+        }
+        let ratio = match (per_lane.get(&512), per_lane.get(&8)) {
+            (Some(a), Some(b)) if *b > 0.0 => a / b,
+            _ => f64::NAN,
+        };
+        if ratio.is_finite() {
+            report.push_str(&format!(
+                "  per-lane cost ratio K=512 / K=8: {ratio:.2}x (target < 2x)\n"
+            ));
+        }
+        report.push('\n');
+        let mut fields = vec![
+            ("n", jnum(ln as f64)),
+            ("d", jnum(ld as f64)),
+            ("lanes", Json::Arr(rows)),
+            // the per-K ensure! above aborts the bench on any divergence,
+            // and rust/tests/lane_scaling.rs pins the same contract across
+            // random models, seeds, K and tile widths
+            ("tiled_bitwise_equal", Json::Bool(true)),
+        ];
+        if ratio.is_finite() {
+            fields.push(("per_lane_ratio_512_vs_8", jnum(ratio)));
+        }
+        jobj(fields)
+    };
+
     let root = Json::Obj(
         [
             ("schema".to_string(), Json::Str("fugue-bench-native/v1".to_string())),
@@ -982,6 +1149,7 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
             ("frozen_vs_replay".to_string(), Json::Obj(frozen_rows)),
             ("robustness_overhead".to_string(), robustness_json),
             ("svi_native".to_string(), svi_json),
+            ("lane_scaling".to_string(), lane_scaling_json),
             ("models".to_string(), Json::Obj(models)),
         ]
         .into_iter()

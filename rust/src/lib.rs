@@ -1,3 +1,6 @@
+// `std::simd` micro-lane kernels (autodiff/batch.rs) are opt-in and
+// nightly-only; the default build uses unrolled scalar kernels.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # fugue — composable effects + end-to-end-compiled iterative NUTS
 //!
 //! Reproduction of *"Composable Effects for Flexible and Accelerated

@@ -395,7 +395,7 @@ fn cmd_sample_model(args: &Args, settings: &Settings) -> Result<()> {
         settings.seed
     );
 
-    fn dispatch<M: EffModel + Clone + Sync>(
+    fn dispatch<M: EffModel + Clone + Send + Sync>(
         model: &M,
         method: ChainMethod,
         chains: usize,
@@ -579,7 +579,7 @@ fn cmd_svi_model(args: &Args, settings: &Settings) -> Result<()> {
 }
 
 /// Shared fit/report body of `svi-model`, generic over the program.
-fn svi_fit_and_report<M: fugue::compile::EffModel + Clone>(
+fn svi_fit_and_report<M: fugue::compile::EffModel + Clone + Send>(
     model: &M,
     opts: &fugue::svi::SviOptions,
     ckpt: &fugue::coordinator::CheckpointConfig,

@@ -19,11 +19,13 @@ pub mod dual_avg;
 pub mod hmc;
 pub mod nuts_iterative;
 pub mod nuts_recursive;
+pub mod tiled;
 pub mod welford;
 
 pub use batch_nuts::BatchTreeWorkspace;
 pub use dual_avg::DualAverage;
 pub use hmc::HmcWorkspace;
+pub use tiled::{auto_tile_width, tile_partition, TiledBatchPotential};
 pub use welford::Welford;
 
 /// A differentiable potential energy U(z) = -log p(z, data).

@@ -1,0 +1,355 @@
+//! Tile-per-thread dispatch over independent lane tiles: the outer
+//! level of the two-level massive-lane engine (ROADMAP open item 2).
+//!
+//! The lane-minor layout (`values[node * lanes + k]`) interleaves *all*
+//! K lanes at every tape node, so a single K-wide
+//! [`crate::autodiff::BatchTapeProgram`] cannot hand a worker thread a
+//! contiguous sub-range of its storage.  Instead a
+//! [`TiledBatchPotential`] owns one narrow [`BatchPotential`] per
+//! **tile** — each a complete batched program of `tile` lanes in its
+//! own lane-minor arrays — and evaluates them either inline (one tile
+//! after another, the zero-allocation path) or tile-per-thread on
+//! scoped threads (the same chunked-`spawn` idiom as
+//! [`crate::coordinator::ParallelChainRunner`]):
+//!
+//! ```text
+//!   K = 1024 lanes, tile = 128, 8 worker threads
+//!
+//!   z  (dim x 1024, lane-minor)
+//!   │ gather               ┌ thread 0: tile 0  [lanes    0..128 ] ┐
+//!   ├──────────────────────┤ thread 1: tile 1  [lanes  128..256 ] │
+//!   │   per-tile z/u/grad  │   ...        each tile sweeps its    │
+//!   │   (dim x 128 each)   │   micro-lanes 8 wide (MICRO_LANES)   │
+//!   ├──────────────────────┤ thread 7: tile 7  [lanes  896..1024] ┘
+//!   │ scatter
+//!   u (1024), grad (dim x 1024, lane-minor)
+//! ```
+//!
+//! # Bitwise contract
+//!
+//! Lanes are mutually independent in every [`BatchPotential`]
+//! implementation (that is the trait's documented contract), so
+//! evaluating lane `k` inside a narrow tile performs *exactly* the
+//! per-lane operations, in the same order, as evaluating it inside one
+//! K-wide program — which is itself bitwise-identical to the scalar
+//! tape.  Tiling therefore extends the PR-3/PR-4 contract chain by one
+//! more provably-equal link:
+//!
+//! ```text
+//!   scalar Tape == BatchTape == BatchTapeProgram == TiledBatchPotential
+//! ```
+//!
+//! for every K, tile width and thread count — pinned by the property
+//! layer in `rust/tests/lane_scaling.rs`.
+//!
+//! # Allocation discipline
+//!
+//! All gather/scatter staging buffers are preallocated in
+//! [`TiledBatchPotential::new`].  With `threads == 1` an evaluation
+//! performs **zero** heap allocations (`rust/tests/alloc_free.rs` pins
+//! this at K=128 and K=512); the threaded path pays only
+//! `std::thread::scope`'s per-call spawn cost, amortized across the
+//! whole lane sweep.
+
+use crate::autodiff::MICRO_LANES;
+use crate::mcmc::BatchPotential;
+
+/// Split `lanes` into tile widths of at most `tile` lanes each: as
+/// many full tiles as fit, plus one ragged remainder tile.
+///
+/// ```
+/// use fugue::mcmc::tile_partition;
+/// assert_eq!(tile_partition(1024, 128), vec![128; 8]);
+/// assert_eq!(tile_partition(20, 8), vec![8, 8, 4]);
+/// assert_eq!(tile_partition(3, 8), vec![3]);
+/// ```
+pub fn tile_partition(lanes: usize, tile: usize) -> Vec<usize> {
+    assert!(lanes > 0, "tile_partition: need at least one lane");
+    assert!(tile > 0, "tile_partition: tile width must be positive");
+    let mut widths = Vec::with_capacity(lanes.div_ceil(tile));
+    let mut rem = lanes;
+    while rem > 0 {
+        let w = rem.min(tile);
+        widths.push(w);
+        rem -= w;
+    }
+    widths
+}
+
+/// Default tile width for `lanes` lanes on `threads` workers: balance
+/// the lanes across workers, then round up to a multiple of
+/// [`MICRO_LANES`] so full tiles never enter the micro-kernels' scalar
+/// remainder loop.
+///
+/// ```
+/// use fugue::mcmc::auto_tile_width;
+/// assert_eq!(auto_tile_width(1024, 8), 128);
+/// assert_eq!(auto_tile_width(100, 8), 16);   // 13 → rounded up to 16
+/// assert_eq!(auto_tile_width(4, 8), 4);      // never wider than K
+/// ```
+pub fn auto_tile_width(lanes: usize, threads: usize) -> usize {
+    assert!(lanes > 0, "auto_tile_width: need at least one lane");
+    let per = lanes.div_ceil(threads.max(1));
+    (per.div_ceil(MICRO_LANES) * MICRO_LANES).min(lanes)
+}
+
+/// A [`BatchPotential`] spanning `K = Σ tiles[t].lanes()` lanes by
+/// dispatching over per-tile batch potentials (see the module docs for
+/// the layout diagram and the bitwise contract).
+pub struct TiledBatchPotential<BP: BatchPotential + Send> {
+    tiles: Vec<BP>,
+    /// first global lane of each tile
+    starts: Vec<usize>,
+    // per-tile staging buffers, preallocated (lane-minor per tile)
+    tile_z: Vec<Vec<f64>>,
+    tile_u: Vec<Vec<f64>>,
+    tile_g: Vec<Vec<f64>>,
+    dim: usize,
+    lanes: usize,
+    max_threads: usize,
+    evals: u64,
+}
+
+impl<BP: BatchPotential + Send> TiledBatchPotential<BP> {
+    /// Assemble a tiled potential from per-tile batch potentials (all
+    /// of the same dimension; widths may differ).  Worker count
+    /// defaults to the machine's available parallelism, capped by the
+    /// tile count.
+    pub fn new(tiles: Vec<BP>) -> TiledBatchPotential<BP> {
+        assert!(
+            !tiles.is_empty(),
+            "TiledBatchPotential: need at least one tile"
+        );
+        let dim = tiles[0].dim();
+        let mut starts = Vec::with_capacity(tiles.len());
+        let mut lanes = 0usize;
+        for t in &tiles {
+            assert_eq!(
+                t.dim(),
+                dim,
+                "TiledBatchPotential: all tiles must share one dimension"
+            );
+            assert!(
+                t.lanes() > 0,
+                "TiledBatchPotential: every tile needs at least one lane"
+            );
+            starts.push(lanes);
+            lanes += t.lanes();
+        }
+        let tile_z: Vec<Vec<f64>> = tiles.iter().map(|t| vec![0.0; dim * t.lanes()]).collect();
+        let tile_u: Vec<Vec<f64>> = tiles.iter().map(|t| vec![0.0; t.lanes()]).collect();
+        let tile_g = tile_z.clone();
+        let max_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        TiledBatchPotential {
+            tiles,
+            starts,
+            tile_z,
+            tile_u,
+            tile_g,
+            dim,
+            lanes,
+            max_threads,
+            evals: 0,
+        }
+    }
+
+    /// Cap the worker-thread count (builder form).  `1` forces the
+    /// inline zero-allocation path.
+    pub fn with_threads(mut self, threads: usize) -> TiledBatchPotential<BP> {
+        self.set_threads(threads);
+        self
+    }
+
+    /// Cap the worker-thread count.  `1` forces the inline
+    /// zero-allocation path.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.max_threads = threads.max(1);
+    }
+
+    /// Number of lane tiles.
+    pub fn num_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Lane widths of the tiles, in lane order.
+    pub fn tile_widths(&self) -> Vec<usize> {
+        self.tiles.iter().map(|t| t.lanes()).collect()
+    }
+
+    /// Worker threads an evaluation will actually use.
+    pub fn threads(&self) -> usize {
+        self.max_threads.min(self.tiles.len()).max(1)
+    }
+}
+
+/// Copy tile `t`'s lanes out of a lane-minor K-wide array into the
+/// tile's own lane-minor staging buffer.
+#[inline]
+fn gather_tile(z: &[f64], tz: &mut [f64], dim: usize, lanes: usize, start: usize, tl: usize) {
+    for i in 0..dim {
+        tz[i * tl..(i + 1) * tl].copy_from_slice(&z[i * lanes + start..i * lanes + start + tl]);
+    }
+}
+
+impl<BP: BatchPotential + Send> BatchPotential for TiledBatchPotential<BP> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    fn value_and_grad_batch(&mut self, z: &[f64], u: &mut [f64], grad: &mut [f64]) {
+        let (dim, l) = (self.dim, self.lanes);
+        assert_eq!(z.len(), dim * l, "z must be dim x lanes (lane-minor)");
+        assert_eq!(u.len(), l);
+        assert_eq!(grad.len(), dim * l);
+        self.evals += 1;
+
+        let threads = self.threads();
+        if threads == 1 {
+            // inline path: gather + evaluate each tile in turn; no
+            // allocation, no synchronization
+            for t in 0..self.tiles.len() {
+                let tl = self.tiles[t].lanes();
+                gather_tile(z, &mut self.tile_z[t], dim, l, self.starts[t], tl);
+                self.tiles[t].value_and_grad_batch(
+                    &self.tile_z[t],
+                    &mut self.tile_u[t],
+                    &mut self.tile_g[t],
+                );
+            }
+        } else {
+            // tile-per-thread: chunk the tiles (and their staging
+            // buffers) across scoped workers — the ParallelChainRunner
+            // idiom.  Workers read the shared `z` and write only their
+            // own tiles' buffers; the lane-interleaved scatter into
+            // `u`/`grad` happens serially below.
+            let per = self.tiles.len().div_ceil(threads);
+            let starts = &self.starts;
+            std::thread::scope(|scope| {
+                for ((((tiles, tzs), tus), tgs), sts) in self
+                    .tiles
+                    .chunks_mut(per)
+                    .zip(self.tile_z.chunks_mut(per))
+                    .zip(self.tile_u.chunks_mut(per))
+                    .zip(self.tile_g.chunks_mut(per))
+                    .zip(starts.chunks(per))
+                {
+                    scope.spawn(move || {
+                        for ((((bp, tz), tu), tg), &s) in tiles
+                            .iter_mut()
+                            .zip(tzs.iter_mut())
+                            .zip(tus.iter_mut())
+                            .zip(tgs.iter_mut())
+                            .zip(sts)
+                        {
+                            let tl = bp.lanes();
+                            gather_tile(z, tz, dim, l, s, tl);
+                            bp.value_and_grad_batch(tz, tu, tg);
+                        }
+                    });
+                }
+            });
+        }
+
+        // scatter: per-lane values are contiguous per tile in `u`, but
+        // lane-minor-interleaved across tiles in `grad`
+        for t in 0..self.tiles.len() {
+            let (s, tl) = (self.starts[t], self.tiles[t].lanes());
+            u[s..s + tl].copy_from_slice(&self.tile_u[t]);
+            for i in 0..dim {
+                grad[i * l + s..i * l + s + tl]
+                    .copy_from_slice(&self.tile_g[t][i * tl..(i + 1) * tl]);
+            }
+        }
+    }
+
+    fn num_evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcmc::{Potential, ScalarLanes};
+
+    /// Small anisotropic quadratic, distinct per coordinate.
+    #[derive(Clone)]
+    struct Bowl;
+    impl Potential for Bowl {
+        fn dim(&self) -> usize {
+            3
+        }
+        fn value_and_grad(&mut self, z: &[f64], grad: &mut [f64]) -> f64 {
+            let scale = [1.0, 4.0, 0.25];
+            let mut u = 0.0;
+            for i in 0..3 {
+                grad[i] = z[i] / scale[i];
+                u += 0.5 * z[i] * z[i] / scale[i];
+            }
+            u
+        }
+    }
+
+    fn lane_minor_inputs(dim: usize, lanes: usize) -> Vec<f64> {
+        (0..dim * lanes)
+            .map(|j| ((j * 37 + 11) % 101) as f64 * 0.03 - 1.2)
+            .collect()
+    }
+
+    #[test]
+    fn partition_and_auto_width() {
+        assert_eq!(tile_partition(7, 3), vec![3, 3, 1]);
+        assert_eq!(tile_partition(8, 8), vec![8]);
+        assert_eq!(auto_tile_width(64, 4), 16);
+        assert_eq!(auto_tile_width(65, 4), 24); // 17 → next multiple of 8
+        assert_eq!(auto_tile_width(5, 64), 5);
+    }
+
+    /// Every (tile width, thread count) configuration is bitwise-equal
+    /// to one wide untiled potential.
+    #[test]
+    fn tiled_matches_untiled_bitwise() {
+        let dim = 3;
+        let lanes = 29; // ragged on purpose
+        let z = lane_minor_inputs(dim, lanes);
+        let mut u_ref = vec![0.0; lanes];
+        let mut g_ref = vec![0.0; dim * lanes];
+        let mut wide = ScalarLanes::new(vec![Bowl; lanes]);
+        wide.value_and_grad_batch(&z, &mut u_ref, &mut g_ref);
+
+        for tile in [1usize, 4, 7, 8, 16, 29] {
+            for threads in [1usize, 2, 4] {
+                let tiles: Vec<ScalarLanes<Bowl>> = tile_partition(lanes, tile)
+                    .into_iter()
+                    .map(|w| ScalarLanes::new(vec![Bowl; w]))
+                    .collect();
+                let mut pot = TiledBatchPotential::new(tiles).with_threads(threads);
+                assert_eq!(pot.lanes(), lanes);
+                let mut u = vec![0.0; lanes];
+                let mut g = vec![0.0; dim * lanes];
+                pot.value_and_grad_batch(&z, &mut u, &mut g);
+                for k in 0..lanes {
+                    assert_eq!(
+                        u[k].to_bits(),
+                        u_ref[k].to_bits(),
+                        "u lane {k} tile {tile} threads {threads}"
+                    );
+                }
+                for j in 0..dim * lanes {
+                    assert_eq!(
+                        g[j].to_bits(),
+                        g_ref[j].to_bits(),
+                        "grad slot {j} tile {tile} threads {threads}"
+                    );
+                }
+                assert_eq!(pot.num_evals(), 1);
+            }
+        }
+    }
+}

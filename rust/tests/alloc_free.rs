@@ -13,8 +13,8 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
-use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel};
-use fugue::compile::{compile, compile_batched};
+use fugue::compile::zoo::{EightSchools, Horseshoe, LogisticModel, NormalMean};
+use fugue::compile::{compile, compile_batched, compile_tiled};
 use fugue::coordinator::{
     run_chains_checkpointed, CheckpointConfig, NativeSampler, NutsOptions, TreeAlgorithm,
 };
@@ -411,6 +411,84 @@ fn svi_steps_are_allocation_free() {
     )
     .unwrap();
     assert_svi_steps_alloc_free("svi batched x8 logistic", BatchedParticles::new(lm), &opts(8));
+}
+
+/// The **massive-lane tiled engine** hits the same bar: once each
+/// tile's frozen program and the K-lane tree workspace have warmed up,
+/// a full tiled `draw_batch` — gather into per-tile staging, per-tile
+/// frozen sweeps, scatter back — performs zero heap allocations per
+/// steady-state draw at K=128 and K=512.
+///
+/// Measured on the inline (`with_threads(1)`) execution path:
+/// `std::thread::scope` itself allocates per dispatch, so the
+/// threaded path trades a few boxed-closure allocations per *batched
+/// eval* for multicore throughput; the engine's own buffers are
+/// steady-state either way, which is what this test pins.
+#[test]
+fn tiled_batched_draws_are_allocation_free() {
+    let es = compile_tiled(EightSchools::classic(), 0, 128, 32)
+        .unwrap()
+        .with_threads(1);
+    assert_batch_draws_alloc_free("tiled eight-schools K=128 (tile 32)", es, 1e-2, 61);
+
+    let nm = compile_tiled(
+        NormalMean {
+            y: vec![0.4, -0.9, 1.3],
+            sigma: 1.1,
+        },
+        0,
+        512,
+        64,
+    )
+    .unwrap()
+    .with_threads(1);
+    assert_batch_draws_alloc_free("tiled normal-mean K=512 (tile 64)", nm, 5e-2, 62);
+}
+
+/// SVI particle lanes ride the same tiled engine past the lane
+/// threshold: a steady-state SVI step over a `BatchedParticles` wrapped
+/// around a tiled potential — K=128 and K=512 particles — performs
+/// zero heap allocations (inline tile path, as above).
+#[test]
+fn tiled_svi_particle_steps_are_allocation_free() {
+    let opts = |particles: usize| SviOptions {
+        num_steps: 100,
+        num_particles: particles,
+        lr: 0.02,
+        seed: 63,
+        schedule: StepSchedule::ExponentialDecay {
+            rate: 0.1,
+            over: 100,
+        },
+        tail_average: 1.0,
+        ..Default::default()
+    };
+
+    let es = compile_tiled(EightSchools::classic(), 0, 128, 32)
+        .unwrap()
+        .with_threads(1);
+    assert_svi_steps_alloc_free(
+        "svi tiled x128 eight-schools",
+        BatchedParticles::new(es),
+        &opts(128),
+    );
+
+    let nm = compile_tiled(
+        NormalMean {
+            y: vec![0.4, -0.9, 1.3],
+            sigma: 1.1,
+        },
+        0,
+        512,
+        64,
+    )
+    .unwrap()
+    .with_threads(1);
+    assert_svi_steps_alloc_free(
+        "svi tiled x512 normal-mean",
+        BatchedParticles::new(nm),
+        &opts(512),
+    );
 }
 
 /// The fault-containment path costs nothing on the heap: draws whose

@@ -25,7 +25,7 @@
 use std::path::PathBuf;
 
 use fugue::compile::zoo::{EightSchools, NealsFunnel, NormalMean};
-use fugue::compile::{compile, compile_batched};
+use fugue::compile::{compile, compile_batched, compile_tiled};
 use fugue::coordinator::{
     run_chain, run_chains_vectorized, run_compiled_chains_checkpointed,
     run_compiled_chains_method, run_svi_checkpointed, run_svi_native, ChainMethod,
@@ -186,6 +186,54 @@ fn quarantined_lane_leaves_siblings_bitwise_identical() {
     }
 }
 
+/// Same quarantine bar at massive-lane scale, through the **tiled**
+/// engine: poisoning one lane of a 256-lane multi-threaded tiled run
+/// quarantines and restarts that lane only, and all 255 siblings stay
+/// bitwise-identical to a clean *untiled* 256-lane run — so this pins
+/// the fault-containment invariant and the tiled-vs-untiled bitwise
+/// contract in one shot.
+#[test]
+fn quarantined_lane_in_tiled_run_leaves_255_siblings_bitwise_identical() {
+    let o = opts(60, 60, 43);
+    let lanes = 256;
+    let faulted = 137usize;
+
+    let mut clean = compile_batched(EightSchools::classic(), 0, lanes).unwrap();
+    let clean_res = run_chains_vectorized(&mut clean, &o, 6).unwrap();
+
+    let plan = FaultPlan {
+        faults: (300u64..500)
+            .map(|e| Fault {
+                at_eval: e,
+                site: FaultSite::Forward,
+                value: f64::NAN,
+                lane: Some(faulted),
+            })
+            .collect(),
+    };
+    let tiled = compile_tiled(EightSchools::classic(), 0, lanes, 64)
+        .unwrap()
+        .with_threads(2);
+    let mut faulty = FaultyBatchPotential::new(tiled, plan);
+    let faulty_res = run_chains_vectorized(&mut faulty, &o, 6).unwrap();
+    assert!(faulty.injected > 0, "tiled lane adversary never fired");
+
+    let bad = &faulty_res[faulted];
+    assert!(bad.quarantines > 0, "no draw was quarantined on the faulted tiled lane");
+    assert!(bad.divergences >= bad.quarantines);
+    assert_finite_samples(bad, "quarantined tiled lane");
+
+    for k in (0..lanes).filter(|&k| k != faulted) {
+        let (c, f) = (&clean_res[k], &faulty_res[k]);
+        assert_eq!(c.samples, f.samples, "tiled lane {k} samples diverged from clean run");
+        assert_eq!(c.step_size.to_bits(), f.step_size.to_bits(), "tiled lane {k} step size");
+        assert_eq!(c.inv_mass, f.inv_mass, "tiled lane {k} inverse mass");
+        assert_eq!(c.divergences, f.divergences, "tiled lane {k} divergences");
+        assert_eq!(c.total_leapfrogs, f.total_leapfrogs, "tiled lane {k} leapfrogs");
+        assert_eq!(f.quarantines, 0, "healthy tiled lane {k} reported quarantines");
+    }
+}
+
 // ---------------------------------------------------------------------
 // 3. SVI backoff
 // ---------------------------------------------------------------------
@@ -304,6 +352,44 @@ fn resume_is_bitwise_identical_vectorized() {
             .unwrap();
     let resumed = interrupted_until_done(ChainMethod::Vectorized, &o, "vec");
     assert_bitwise_equal(&plain, &resumed, "vectorized kill-and-resume");
+}
+
+/// Kill-and-resume through the **tiled** regime: at 80 chains (past
+/// `TILED_LANE_THRESHOLD`) the checkpointed vectorized runner rides
+/// `TiledBatchPotential`; slicing it at arbitrary wall-clock cuts and
+/// resuming until done must still reproduce the uninterrupted run
+/// bitwise, because checkpoint state is per-lane and the tiled engine
+/// is bitwise-invisible.
+#[test]
+fn tiled_resume_is_bitwise_identical() {
+    use fugue::coordinator::TILED_LANE_THRESHOLD;
+    let chains = TILED_LANE_THRESHOLD + 16;
+    let o = opts(40, 40, 67);
+    let model = EightSchools::classic();
+    let (_, plain) =
+        run_compiled_chains_method(&model, ChainMethod::Vectorized, chains, 6, &o).unwrap();
+
+    let path = tmp_path("tiled_vec");
+    let _ = std::fs::remove_file(&path);
+    let cfg = CheckpointConfig {
+        path: Some(path.clone()),
+        resume: true,
+        every: 7,
+        max_seconds: Some(0.02),
+    };
+    let mut slices = 0u32;
+    let resumed = loop {
+        let (_, results, completed) =
+            run_compiled_chains_checkpointed(&model, ChainMethod::Vectorized, chains, 6, &o, &cfg)
+                .unwrap();
+        slices += 1;
+        assert!(slices < 10_000, "budgeted tiled runner made no progress");
+        if completed {
+            let _ = std::fs::remove_file(&path);
+            break results;
+        }
+    };
+    assert_bitwise_equal(&plain, &resumed, "tiled kill-and-resume");
 }
 
 /// SVI: slice the fit with budget + checkpoint + resume until done and

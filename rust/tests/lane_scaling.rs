@@ -1,0 +1,334 @@
+//! The massive-lane test layer: proof that every lane of the tiled
+//! K-lane engine is *exactly* a scalar chain.
+//!
+//! Three kinds of evidence, mirroring the contract chain
+//! `scalar Tape == BatchTape == BatchTapeProgram == TiledBatchPotential`:
+//!
+//! 1. **Property tests** (shrink-free driver in `fugue::util::prop`):
+//!    for random models, seeds, K ∈ {1..1024}, tile widths and thread
+//!    counts, tiled gradient evaluations and full NUTS transitions are
+//!    bitwise-equal to the untiled `BatchTape` engine and to scalar
+//!    `draw_in_workspace` replays of sampled lanes.
+//! 2. **Exhaustive tile widths** at fixed K: every width 1..=K gives
+//!    bitwise-identical evaluations (including ragged remainder tiles).
+//! 3. **Statistics at scale**: 1024 short eight-schools chains through
+//!    the tiled vectorized engine match a long-chain sequential
+//!    reference within Monte-Carlo standard error, with sane
+//!    cross-chain split-R̂ — the many-short-chains regime the massive
+//!    lane engine exists for.
+
+use fugue::compile::zoo::{EightSchools, LogisticModel, NormalMean};
+use fugue::compile::{compile, compile_batched, compile_tiled, EffModel};
+use fugue::coordinator::{
+    run_chains, run_compiled_chains_method, ChainMethod, NativeSampler, NutsOptions,
+    TreeAlgorithm, TILED_LANE_THRESHOLD,
+};
+use fugue::diagnostics::summary::{max_cross_chain_rhat, summarize};
+use fugue::mcmc::batch_nuts::draw_batch;
+use fugue::mcmc::nuts_iterative::{draw_in_workspace, TreeWorkspace};
+use fugue::mcmc::{
+    auto_tile_width, BatchPotential, BatchTreeWorkspace, DrawStats, Potential,
+    TiledBatchPotential,
+};
+use fugue::rng::Rng;
+use fugue::util::prop::check;
+
+fn zero_stats(lanes: usize) -> Vec<DrawStats> {
+    vec![
+        DrawStats {
+            accept_prob: 0.0,
+            num_leapfrog: 0,
+            potential: 0.0,
+            diverging: false,
+            depth: 0,
+            poisoned: false,
+        };
+        lanes
+    ]
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// One property case: build tiled + untiled engines for `model` at a
+/// random K/tile/threads, compare a gradient evaluation and a chained
+/// pair of NUTS transitions bitwise, then replay sampled lanes through
+/// the scalar engine and require bitwise equality there too.
+fn tiled_case<M: EffModel + Clone + Send>(
+    model: &M,
+    rng: &mut Rng,
+    max_k: usize,
+    eps: f64,
+    depth: u32,
+) -> Result<(), String> {
+    let seed = rng.next_u64();
+    let k = 1 + rng.next_u64() as usize % max_k;
+    let tile = 1 + rng.next_u64() as usize % k;
+    let threads = [1usize, 2, 4][rng.next_u64() as usize % 3];
+
+    let mut tiled = compile_tiled(model.clone(), seed, k, tile)
+        .map_err(|e| format!("compile_tiled: {e}"))?
+        .with_threads(threads);
+    let mut wide =
+        compile_batched(model.clone(), seed, k).map_err(|e| format!("compile_batched: {e}"))?;
+    let dim = tiled.dim();
+    let label = format!("K={k} tile={tile} threads={threads} dim={dim}");
+
+    // gradient evaluation, bitwise
+    let z0: Vec<f64> = (0..dim * k).map(|_| 0.3 * rng.normal()).collect();
+    let mut u_t = vec![0.0; k];
+    let mut g_t = vec![0.0; dim * k];
+    let mut u_w = vec![0.0; k];
+    let mut g_w = vec![0.0; dim * k];
+    tiled.value_and_grad_batch(&z0, &mut u_t, &mut g_t);
+    wide.value_and_grad_batch(&z0, &mut u_w, &mut g_w);
+    if !bits_eq(&u_t, &u_w) {
+        return Err(format!("{label}: tiled U diverged from untiled"));
+    }
+    if !bits_eq(&g_t, &g_w) {
+        return Err(format!("{label}: tiled grad diverged from untiled"));
+    }
+
+    // two chained NUTS transitions, bitwise (proposals + statistics)
+    let inv_mass = vec![1.0; dim * k];
+    let step_szs = vec![eps; k];
+    let mut ws_t = BatchTreeWorkspace::new(dim, k, depth);
+    let mut ws_w = BatchTreeWorkspace::new(dim, k, depth);
+    let mut st_t = zero_stats(k);
+    let mut st_w = zero_stats(k);
+    let mut rngs_t: Vec<Rng> = (0..k).map(|j| Rng::new(seed ^ (j as u64 + 1))).collect();
+    let mut rngs_w: Vec<Rng> = (0..k).map(|j| Rng::new(seed ^ (j as u64 + 1))).collect();
+    let mut z_t = z0.clone();
+    let mut z_w = z0.clone();
+    for draw in 0..2 {
+        draw_batch(
+            &mut tiled, &mut rngs_t, &mut ws_t, &z_t, &step_szs, &inv_mass, depth, &mut st_t,
+        );
+        draw_batch(
+            &mut wide, &mut rngs_w, &mut ws_w, &z_w, &step_szs, &inv_mass, depth, &mut st_w,
+        );
+        if !bits_eq(ws_t.proposal(), ws_w.proposal()) {
+            return Err(format!("{label}: draw {draw} proposals diverged"));
+        }
+        for j in 0..k {
+            let (a, b) = (&st_t[j], &st_w[j]);
+            if a.accept_prob.to_bits() != b.accept_prob.to_bits()
+                || a.num_leapfrog != b.num_leapfrog
+                || a.potential.to_bits() != b.potential.to_bits()
+                || a.diverging != b.diverging
+                || a.depth != b.depth
+            {
+                return Err(format!("{label}: draw {draw} lane {j} stats diverged"));
+            }
+        }
+        z_t.copy_from_slice(ws_t.proposal());
+        z_w.copy_from_slice(ws_w.proposal());
+    }
+
+    // scalar replays of sampled lanes: lane j of the tiled engine IS a
+    // sequential chain
+    let lanes_to_check: Vec<usize> = if k <= 3 {
+        (0..k).collect()
+    } else {
+        vec![0, rng.next_u64() as usize % k, k - 1]
+    };
+    for &j in &lanes_to_check {
+        let mut pot =
+            compile(model.clone(), seed).map_err(|e| format!("scalar compile: {e}"))?;
+        let mut srng = Rng::new(seed ^ (j as u64 + 1));
+        let mut sws = TreeWorkspace::new(dim, depth);
+        let mut z_lane: Vec<f64> = (0..dim).map(|i| z0[i * k + j]).collect();
+        let inv_lane = vec![1.0; dim];
+        let mut zrow = vec![0.0; dim];
+        let mut rngs: Vec<Rng> = (0..k).map(|jj| Rng::new(seed ^ (jj as u64 + 1))).collect();
+        let mut z = z0.clone();
+        let mut st = zero_stats(k);
+        for draw in 0..2 {
+            draw_batch(
+                &mut tiled, &mut rngs, &mut ws_t, &z, &step_szs, &inv_mass, depth, &mut st,
+            );
+            let sstat = draw_in_workspace(
+                &mut pot, &mut srng, &mut sws, &z_lane, eps, &inv_lane, depth,
+            );
+            z_lane.copy_from_slice(sws.proposal());
+            ws_t.proposal_lane(j, &mut zrow);
+            if !bits_eq(&zrow, &z_lane) {
+                return Err(format!("{label}: lane {j} draw {draw} != scalar replay"));
+            }
+            if st[j].num_leapfrog != sstat.num_leapfrog
+                || st[j].accept_prob.to_bits() != sstat.accept_prob.to_bits()
+            {
+                return Err(format!("{label}: lane {j} draw {draw} stats != scalar"));
+            }
+            z.copy_from_slice(ws_t.proposal());
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_tiled_is_bitwise_scalar_normal_mean() {
+    check("tiled == untiled == scalar (normal-mean, K up to 1024)", 6, |rng| {
+        let model = NormalMean {
+            y: (0..4).map(|_| rng.normal()).collect(),
+            sigma: 1.0 + rng.uniform(),
+        };
+        tiled_case(&model, rng, 1024, 0.2, 4)
+    });
+}
+
+#[test]
+fn prop_tiled_is_bitwise_scalar_eight_schools() {
+    check("tiled == untiled == scalar (eight-schools, K up to 256)", 4, |rng| {
+        tiled_case(&EightSchools::classic(), rng, 256, 0.1, 4)
+    });
+}
+
+#[test]
+fn prop_tiled_is_bitwise_scalar_logistic() {
+    check("tiled == untiled == scalar (logistic, K up to 64)", 3, |rng| {
+        let (n, d) = (24, 3);
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            for _ in 0..d {
+                x.push(rng.normal());
+            }
+            y.push(if rng.uniform() < 0.5 { 0.0 } else { 1.0 });
+        }
+        let model = LogisticModel { x, y, n, d };
+        tiled_case(&model, rng, 64, 0.05, 4)
+    });
+}
+
+/// Every tile width 1..=K (ragged remainders included) evaluates
+/// bitwise-identically to the untiled program at that K.
+#[test]
+fn all_tile_widths_are_bitwise_equal() {
+    for k in [29usize, 64] {
+        let model = NormalMean {
+            y: vec![0.7, -1.1, 0.4],
+            sigma: 1.3,
+        };
+        let mut wide = compile_batched(model.clone(), 11, k).unwrap();
+        let dim = wide.dim();
+        let mut rng = Rng::new(0xC0FFEE ^ k as u64);
+        let z: Vec<f64> = (0..dim * k).map(|_| rng.normal()).collect();
+        let mut u_ref = vec![0.0; k];
+        let mut g_ref = vec![0.0; dim * k];
+        wide.value_and_grad_batch(&z, &mut u_ref, &mut g_ref);
+        for tile in 1..=k {
+            let mut tiled = compile_tiled(model.clone(), 11, k, tile)
+                .unwrap()
+                .with_threads(if tile % 2 == 0 { 2 } else { 1 });
+            let mut u = vec![0.0; k];
+            let mut g = vec![0.0; dim * k];
+            tiled.value_and_grad_batch(&z, &mut u, &mut g);
+            assert!(bits_eq(&u, &u_ref), "U diverged at K={k} tile={tile}");
+            assert!(bits_eq(&g, &g_ref), "grad diverged at K={k} tile={tile}");
+        }
+    }
+}
+
+/// The coordinator's lane-sharded regime (K past TILED_LANE_THRESHOLD
+/// rides the tiled engine) stays bitwise-identical to the sequential
+/// method — the threshold is an execution-strategy switch only.
+#[test]
+fn coordinator_tiled_regime_matches_sequential_bitwise() {
+    let chains = TILED_LANE_THRESHOLD + 4;
+    let model = NormalMean {
+        y: vec![1.0, 2.0, 3.0],
+        sigma: 2.0,
+    };
+    let opts = NutsOptions {
+        num_warmup: 40,
+        num_samples: 10,
+        seed: 31,
+        ..Default::default()
+    };
+    let (_, seq) =
+        run_compiled_chains_method(&model, ChainMethod::Sequential, chains, 8, &opts).unwrap();
+    let (_, vec_res) =
+        run_compiled_chains_method(&model, ChainMethod::Vectorized, chains, 8, &opts).unwrap();
+    assert_eq!(seq.len(), chains);
+    assert_eq!(vec_res.len(), chains);
+    for (k, (s, v)) in seq.iter().zip(&vec_res).enumerate() {
+        assert!(bits_eq(&s.samples, &v.samples), "chain {k} samples diverged");
+        assert_eq!(
+            s.step_size.to_bits(),
+            v.step_size.to_bits(),
+            "chain {k} step size diverged"
+        );
+        assert_eq!(s.divergences, v.divergences, "chain {k} divergences");
+    }
+}
+
+/// Many-short-chains statistics: 1024 tiled eight-schools chains x 8
+/// kept draws match a long-chain sequential reference within
+/// Monte-Carlo standard error, and the 1024-chain split-R̂ is sane.
+#[test]
+fn thousand_short_chains_match_long_reference_within_mcse() {
+    let model = EightSchools::classic();
+
+    // long-chain reference: 2 sequential chains, generous warmup
+    let ref_opts = NutsOptions {
+        num_warmup: 300,
+        num_samples: 1200,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut sampler = NativeSampler::new(
+        compile(model.clone(), ref_opts.seed).unwrap(),
+        TreeAlgorithm::Iterative,
+        10,
+    );
+    let reference = run_chains(&mut sampler, 2, &ref_opts).unwrap();
+    let ref_pooled: Vec<Vec<f64>> = reference.iter().map(|r| r.samples.clone()).collect();
+    let dim = compile(model.clone(), 7).unwrap().dim();
+    let ref_rows = summarize(&ref_pooled, dim, &[]);
+
+    // 1024 short chains through the tiled massive-lane engine
+    let k = 1024usize;
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let tile = auto_tile_width(k, threads);
+    let mut tiled: TiledBatchPotential<_> = compile_tiled(model, 7, k, tile).unwrap();
+    assert_eq!(tiled.lanes(), k);
+    let short_opts = NutsOptions {
+        num_warmup: 150,
+        num_samples: 8,
+        seed: 7,
+        ..Default::default()
+    };
+    let results =
+        fugue::coordinator::run_chains_vectorized(&mut tiled, &short_opts, 10).unwrap();
+    assert_eq!(results.len(), k);
+    let pooled: Vec<Vec<f64>> = results.iter().map(|r| r.samples.clone()).collect();
+    let batch_rows = summarize(&pooled, dim, &[]);
+
+    // pooled means agree within combined MCSE (6 sigma + slack)
+    let n_batch = (k * 8) as f64;
+    for d in 0..dim {
+        let mcse_ref = ref_rows[d].sd / ref_rows[d].ess.max(4.0).sqrt();
+        // conservative batch MCSE: treat only every 4th pooled draw as
+        // independent
+        let mcse_batch = batch_rows[d].sd / (n_batch / 4.0).sqrt();
+        let tol = 6.0 * (mcse_ref + mcse_batch) + 0.05;
+        let diff = (batch_rows[d].mean - ref_rows[d].mean).abs();
+        assert!(
+            diff <= tol,
+            "coordinate {d}: |{} - {}| = {diff} > {tol}",
+            batch_rows[d].mean,
+            ref_rows[d].mean
+        );
+    }
+
+    // cross-chain split-R-hat over all 1024 chains stays sane
+    let rhat = max_cross_chain_rhat(&pooled, dim);
+    assert!(rhat.is_finite() && rhat < 1.25, "split-Rhat {rhat} not sane");
+
+    // and the run actually exercised lane-sharded tiling
+    assert!(tiled.num_tiles() > 1, "expected more than one tile at K=1024");
+}
