@@ -45,7 +45,7 @@
 //! [`BatchTape::composite_shared`] nodes carry caller-computed partials
 //! and cannot be frozen.
 
-use crate::autodiff::{sigmoid_val, softplus_val, Alg, CompKind, Var};
+use crate::autodiff::{sigmoid_val, softplus_val, Alg, CompKind, DataSlot, SlotStore, Var};
 use crate::ppl::special::{softplus_sigmoid, LN_2PI};
 
 /// Node operation of the batched tape.  Mirrors the scalar tape's op
@@ -98,6 +98,10 @@ struct BTopology {
     consts: Vec<f64>,
     /// node ids of input leaves, in record order
     inputs: Vec<u32>,
+    /// minibatch-rebindable data spans, in record order
+    data_slots: Vec<DataSlot>,
+    /// node ids referenced by [`SlotStore::Nodes`] slots
+    slot_nodes: Vec<u32>,
 }
 
 /// K-lane reverse-mode tape (see the module docs).  Build the
@@ -118,6 +122,8 @@ pub struct BatchTape {
     scratch_a: Vec<f64>,
     /// lane-sized fused-kernel scratch (hoisted 1/sigma^2)
     scratch_b: Vec<f64>,
+    /// while true, data-bearing builders register rebindable slots
+    data_region: bool,
 }
 
 /// Recompute one batched composite's lane values and per-lane partials
@@ -466,6 +472,8 @@ impl BatchTape {
                 comp_kinds: Vec::with_capacity(64),
                 consts: Vec::with_capacity(256),
                 inputs: Vec::with_capacity(64),
+                data_slots: Vec::new(),
+                slot_nodes: Vec::new(),
             },
             values: Vec::with_capacity(1024 * lanes),
             arena_partials: Vec::with_capacity(1024),
@@ -473,6 +481,7 @@ impl BatchTape {
             scratch: vec![0.0; lanes],
             scratch_a: vec![0.0; lanes],
             scratch_b: vec![0.0; lanes],
+            data_region: false,
         }
     }
 
@@ -493,6 +502,8 @@ impl BatchTape {
         self.topo.comp_kinds.shrink_to_fit();
         self.topo.consts.shrink_to_fit();
         self.topo.inputs.shrink_to_fit();
+        self.topo.data_slots.shrink_to_fit();
+        self.topo.slot_nodes.shrink_to_fit();
         self.values.shrink_to_fit();
         self.arena_partials.shrink_to_fit();
         self.adj = Vec::new();
@@ -507,8 +518,11 @@ impl BatchTape {
         self.topo.comp_kinds.clear();
         self.topo.consts.clear();
         self.topo.inputs.clear();
+        self.topo.data_slots.clear();
+        self.topo.slot_nodes.clear();
         self.values.clear();
         self.arena_partials.clear();
+        self.data_region = false;
     }
 
     pub fn len(&self) -> usize {
@@ -560,6 +574,54 @@ impl BatchTape {
         self.topo.ops.push(BOp::Leaf);
         self.values.resize(self.values.len() + self.lanes, c);
         Var(idx)
+    }
+
+    /// Start a **data region** (see
+    /// [`crate::autodiff::Tape::begin_data_region`]): until
+    /// [`BatchTape::end_data_region`], data-bearing builders register
+    /// rebindable [`DataSlot`]s that
+    /// [`BatchTapeProgram::rebind_data_slot`] can later overwrite with
+    /// a fresh minibatch — lane-uniform, since observation data is
+    /// shared across lanes.
+    pub fn begin_data_region(&mut self) {
+        self.data_region = true;
+    }
+
+    /// End the active data region.
+    pub fn end_data_region(&mut self) {
+        self.data_region = false;
+    }
+
+    /// Number of rebindable data slots recorded so far.
+    pub fn num_data_slots(&self) -> usize {
+        self.topo.data_slots.len()
+    }
+
+    fn register_slot(&mut self, store: SlotStore, start: usize, len: usize) {
+        if self.data_region {
+            self.topo.data_slots.push(DataSlot {
+                store,
+                start: start as u32,
+                len: len as u32,
+            });
+        }
+    }
+
+    /// Register previously pushed (lane-uniform) constant leaves as one
+    /// rebindable node slot — the batched twin of
+    /// [`crate::autodiff::Tape::register_data_nodes`].  No-op outside a
+    /// data region.
+    pub fn register_data_nodes(&mut self, nodes: &[Var]) {
+        if !self.data_region {
+            return;
+        }
+        let start = self.topo.slot_nodes.len();
+        self.topo.slot_nodes.extend(nodes.iter().map(|v| v.0));
+        self.topo.data_slots.push(DataSlot {
+            store: SlotStore::Nodes,
+            start: start as u32,
+            len: nodes.len() as u32,
+        });
     }
 
     /// Push a unary node computing `f` lane-wise from parent `a`.
@@ -759,6 +821,7 @@ impl BatchTape {
         }
         let pstart = self.topo.arena_parents.len() as u32;
         let sstart = self.topo.arena_shared.len() as u32;
+        self.register_slot(SlotStore::Coeffs, sstart as usize, ws.len());
         self.topo.arena_parents.extend(ws.iter().map(|v| v.0));
         self.topo.arena_shared.extend_from_slice(cs);
         self.topo.comp_kinds.push(CompKind::Affine);
@@ -822,10 +885,12 @@ impl BatchTape {
     /// Fused i.i.d. Normal observation plate, lane-wise (see
     /// [`crate::autodiff::Tape::normal_iid_obs`]).
     pub fn normal_iid_obs(&mut self, loc: Var, scale: Var, ys: &[f64]) -> Var {
+        let c = self.topo.consts.len();
         let kind = CompKind::NormalIid {
-            c: self.topo.consts.len() as u32,
+            c: c as u32,
             n: ys.len() as u32,
         };
+        self.register_slot(SlotStore::Consts, c, ys.len());
         self.topo.consts.extend_from_slice(ys);
         self.topo.arena_parents.push(loc.0);
         self.topo.arena_parents.push(scale.0);
@@ -835,10 +900,12 @@ impl BatchTape {
     /// Fused i.i.d. Bernoulli observation plate with one shared latent
     /// logit, lane-wise.
     pub fn bernoulli_logits_iid_obs(&mut self, logits: Var, ys: &[f64]) -> Var {
+        let c = self.topo.consts.len();
         let kind = CompKind::BernoulliIid {
-            c: self.topo.consts.len() as u32,
+            c: c as u32,
             n: ys.len() as u32,
         };
+        self.register_slot(SlotStore::Consts, c, ys.len());
         self.topo.consts.extend_from_slice(ys);
         self.topo.arena_parents.push(logits.0);
         self.fused_lanes(kind, 1)
@@ -848,10 +915,12 @@ impl BatchTape {
     /// and a shared latent scale, lane-wise.
     pub fn normal_plate_obs(&mut self, locs: &[Var], scale: Var, ys: &[f64]) -> Var {
         assert_eq!(locs.len(), ys.len());
+        let c = self.topo.consts.len();
         let kind = CompKind::NormalPlate {
-            c: self.topo.consts.len() as u32,
+            c: c as u32,
             n: ys.len() as u32,
         };
+        self.register_slot(SlotStore::Consts, c, ys.len());
         self.topo.consts.extend_from_slice(ys);
         self.topo.arena_parents.extend(locs.iter().map(|v| v.0));
         self.topo.arena_parents.push(scale.0);
@@ -863,10 +932,13 @@ impl BatchTape {
     pub fn normal_fixed_plate_obs(&mut self, locs: &[Var], sigmas: &[f64], ys: &[f64]) -> Var {
         assert_eq!(locs.len(), ys.len());
         assert_eq!(sigmas.len(), ys.len());
+        let c = self.topo.consts.len();
         let kind = CompKind::NormalFixedPlate {
-            c: self.topo.consts.len() as u32,
+            c: c as u32,
             n: ys.len() as u32,
         };
+        // the slot spans the whole interleaved [sigma_0, y_0, ...] region
+        self.register_slot(SlotStore::Consts, c, 2 * ys.len());
         for (s, y) in sigmas.iter().zip(ys) {
             self.topo.consts.push(*s);
             self.topo.consts.push(*y);
@@ -879,10 +951,12 @@ impl BatchTape {
     /// logits, lane-wise.
     pub fn bernoulli_logits_plate_obs(&mut self, logits: &[Var], ys: &[f64]) -> Var {
         assert_eq!(logits.len(), ys.len());
+        let c = self.topo.consts.len();
         let kind = CompKind::BernoulliPlate {
-            c: self.topo.consts.len() as u32,
+            c: c as u32,
             n: ys.len() as u32,
         };
+        self.register_slot(SlotStore::Consts, c, ys.len());
         self.topo.consts.extend_from_slice(ys);
         self.topo.arena_parents.extend(logits.iter().map(|v| v.0));
         self.fused_lanes(kind, logits.len())
@@ -995,6 +1069,38 @@ impl BatchTapeProgram {
     pub fn output_values(&self) -> &[f64] {
         let s = self.output as usize * self.lanes;
         &self.values[s..s + self.lanes]
+    }
+
+    /// Number of rebindable data slots recorded inside data regions
+    /// (see [`BatchTape::begin_data_region`]).
+    pub fn num_data_slots(&self) -> usize {
+        self.topo.data_slots.len()
+    }
+
+    /// Element count of data slot `slot`.
+    pub fn data_slot_len(&self, slot: usize) -> usize {
+        self.topo.data_slots[slot].len as usize
+    }
+
+    /// Overwrite the (lane-shared) data behind slot `slot` without
+    /// touching the program structure — the batched twin of
+    /// [`crate::autodiff::TapeProgram::rebind_data_slot`].  Node slots
+    /// broadcast each element to every lane.
+    pub fn rebind_data_slot(&mut self, slot: usize, data: &[f64]) {
+        let DataSlot { store, start, len } = self.topo.data_slots[slot];
+        let (s, l) = (start as usize, len as usize);
+        assert_eq!(data.len(), l, "rebind_data_slot: length mismatch");
+        match store {
+            SlotStore::Coeffs => self.topo.arena_shared[s..s + l].copy_from_slice(data),
+            SlotStore::Consts => self.topo.consts[s..s + l].copy_from_slice(data),
+            SlotStore::Nodes => {
+                let lanes = self.lanes;
+                for (j, &id) in self.topo.slot_nodes[s..s + l].iter().enumerate() {
+                    let vs = id as usize * lanes;
+                    self.values[vs..vs + lanes].fill(data[j]);
+                }
+            }
+        }
     }
 
     /// Rebind the inputs (input-major, lane-minor: `inputs[k * lanes ..
@@ -1657,6 +1763,76 @@ mod tests {
             sprog.input_adjoints(&mut g);
             assert_eq!(g[0].to_bits(), bgrads[k].to_bits(), "lane {k} d/dx");
             assert_eq!(g[1].to_bits(), bgrads[lanes + k].to_bits(), "lane {k} d/dy");
+        }
+    }
+
+    /// Rebound data slots on a frozen batched program must match, per
+    /// lane, re-recording against the new data (bitwise) — across the
+    /// coefficient, fused-const and node-leaf stores.
+    #[test]
+    fn rebound_batch_slots_match_rerecord_bitwise() {
+        fn build(bt: &mut BatchTape, xs: &[f64], ys: &[f64], coef: &[f64], obs: &[f64], zs: &[f64]) -> (Var, Var, Var) {
+            let x = bt.input(xs);
+            let y = bt.input(ys);
+            bt.begin_data_region();
+            let d = bt.dot_const(&[x, y], coef);
+            let sg = bt.sigmoid(x);
+            let scale = bt.exp(y);
+            let n = bt.normal_iid_obs(sg, scale, obs);
+            let leaves: Vec<Var> = zs.iter().map(|&z| bt.constant(z)).collect();
+            bt.register_data_nodes(&leaves);
+            let mut acc = d;
+            for &lz in &leaves {
+                let m = bt.mul(lz, x);
+                acc = bt.add(acc, m);
+            }
+            bt.end_data_region();
+            let out = bt.add(acc, n);
+            (x, y, out)
+        }
+        let lanes = 3;
+        let xs = [0.4, -1.3, 0.9];
+        let ys = [0.9, 0.15, -0.6];
+        let (c0, o0, z0) = ([0.5, -1.5], [0.1, 0.9, -0.4], [1.0, 2.0]);
+        let (c1, o1, z1) = ([2.0, 0.25], [-0.6, 0.2, 1.3], [-3.0, 0.5]);
+
+        let mut bt = BatchTape::new(lanes);
+        let (_, _, out) = build(&mut bt, &xs, &ys, &c0, &o0, &z0);
+        assert_eq!(bt.num_data_slots(), 3);
+        let mut prog = bt.freeze(out);
+        assert_eq!(prog.num_data_slots(), 3);
+        assert_eq!(prog.data_slot_len(1), 3);
+        prog.rebind_data_slot(0, &c1);
+        prog.rebind_data_slot(1, &o1);
+        prog.rebind_data_slot(2, &z1);
+        let mut inputs = Vec::new();
+        inputs.extend_from_slice(&xs);
+        inputs.extend_from_slice(&ys);
+        prog.forward(&inputs);
+        prog.backward();
+        let mut grads = vec![0.0; 2 * lanes];
+        prog.input_adjoints(&mut grads);
+
+        let mut rt = BatchTape::new(lanes);
+        let (rx, ry, rout) = build(&mut rt, &xs, &ys, &c1, &o1, &z1);
+        let rvals = rt.lane_values(rout).to_vec();
+        let radj = rt.grad(rout).to_vec();
+        for k in 0..lanes {
+            assert_eq!(
+                prog.output_values()[k].to_bits(),
+                rvals[k].to_bits(),
+                "lane {k} value"
+            );
+            assert_eq!(
+                grads[k].to_bits(),
+                radj[rx.0 as usize * lanes + k].to_bits(),
+                "lane {k} d/dx"
+            );
+            assert_eq!(
+                grads[lanes + k].to_bits(),
+                radj[ry.0 as usize * lanes + k].to_bits(),
+                "lane {k} d/dy"
+            );
         }
     }
 

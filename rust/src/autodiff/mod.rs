@@ -123,6 +123,35 @@ pub(crate) enum CompKind {
     BernoulliPlate { c: u32, n: u32 },
 }
 
+/// Which backing store a [`DataSlot`]'s payload lives in.  The slot
+/// machinery is shared by the scalar and batched tapes; the stores map
+/// onto backend-specific arenas.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum SlotStore {
+    /// Constant composite coefficients (`dot_const`): the scalar tape's
+    /// partial arena (cloned into [`TapeProgram`]) or the batched
+    /// tape's lane-shared arena.
+    Coeffs,
+    /// Fused-observation constants: `consts[start..start+len]`.
+    Consts,
+    /// Per-element constant leaves: node ids at
+    /// `slot_nodes[start..start+len]`; rebinding overwrites the nodes'
+    /// recorded values (lane-uniform on the batched tape).
+    Nodes,
+}
+
+/// One rebindable span of observation data inside a recorded program —
+/// the index-gather view that lets subsampling SVI swap the minibatch
+/// under a frozen [`TapeProgram`] / [`batch::BatchTapeProgram`] without
+/// re-recording or re-freezing.  Slots are registered in record order
+/// while a data region (see [`Tape::begin_data_region`]) is active.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct DataSlot {
+    pub(crate) store: SlotStore,
+    pub(crate) start: u32,
+    pub(crate) len: u32,
+}
+
 /// The recorded half of a tape: everything that is a pure function of
 /// the *program structure* (op kinds, argument node ids, composite
 /// parents, kernel descriptors, observation constants, input slots) and
@@ -138,6 +167,10 @@ struct Topology {
     consts: Vec<f64>,
     /// node ids of [`Op::Input`] leaves, in record order
     inputs: Vec<u32>,
+    /// minibatch-rebindable data spans, in record order
+    data_slots: Vec<DataSlot>,
+    /// node ids referenced by [`SlotStore::Nodes`] slots
+    slot_nodes: Vec<u32>,
 }
 
 /// Reverse-mode tape. Build the expression with the `Tape` methods, then
@@ -153,6 +186,8 @@ pub struct Tape {
     arena_partials: Vec<f64>,
     /// adjoint scratch for the reverse sweep (sized lazily in `grad`)
     adj: Vec<f64>,
+    /// while true, data-bearing builders register rebindable slots
+    data_region: bool,
 }
 
 impl Default for Tape {
@@ -167,6 +202,7 @@ impl Default for Tape {
             values: Vec::new(),
             arena_partials: Vec::new(),
             adj: Vec::new(),
+            data_region: false,
         }
     }
 }
@@ -330,10 +366,13 @@ impl Tape {
                 comp_kinds: Vec::with_capacity(64),
                 consts: Vec::with_capacity(256),
                 inputs: Vec::with_capacity(64),
+                data_slots: Vec::new(),
+                slot_nodes: Vec::new(),
             },
             values: Vec::with_capacity(1024),
             arena_partials: Vec::with_capacity(1024),
             adj: Vec::new(),
+            data_region: false,
         }
     }
 
@@ -351,6 +390,8 @@ impl Tape {
         self.topo.comp_kinds.shrink_to_fit();
         self.topo.consts.shrink_to_fit();
         self.topo.inputs.shrink_to_fit();
+        self.topo.data_slots.shrink_to_fit();
+        self.topo.slot_nodes.shrink_to_fit();
         self.values.shrink_to_fit();
         self.arena_partials.shrink_to_fit();
         self.adj = Vec::new();
@@ -364,8 +405,11 @@ impl Tape {
         self.topo.comp_kinds.clear();
         self.topo.consts.clear();
         self.topo.inputs.clear();
+        self.topo.data_slots.clear();
+        self.topo.slot_nodes.clear();
         self.values.clear();
         self.arena_partials.clear();
+        self.data_region = false;
     }
 
     pub fn len(&self) -> usize {
@@ -411,6 +455,54 @@ impl Tape {
     /// Constant leaf (gradient is computed but conventionally unused).
     pub fn constant(&mut self, value: f64) -> Var {
         self.push(Op::Leaf, value)
+    }
+
+    /// Start a **data region**: until [`Tape::end_data_region`], every
+    /// data-bearing builder (`dot_const`, the fused observation plates,
+    /// [`Tape::register_data_nodes`]) also records a rebindable
+    /// [`DataSlot`] describing where its constant data landed.  After
+    /// [`Tape::freeze`], [`TapeProgram::rebind_data_slot`] can then
+    /// swap that data (a fresh minibatch) without re-recording — the
+    /// index-gather view subsampling SVI rides on.
+    pub fn begin_data_region(&mut self) {
+        self.data_region = true;
+    }
+
+    /// End the active data region (see [`Tape::begin_data_region`]).
+    pub fn end_data_region(&mut self) {
+        self.data_region = false;
+    }
+
+    /// Number of rebindable data slots recorded so far.
+    pub fn num_data_slots(&self) -> usize {
+        self.topo.data_slots.len()
+    }
+
+    fn register_slot(&mut self, store: SlotStore, start: usize, len: usize) {
+        if self.data_region {
+            self.topo.data_slots.push(DataSlot {
+                store,
+                start: start as u32,
+                len: len as u32,
+            });
+        }
+    }
+
+    /// Register previously pushed constant leaves as one rebindable
+    /// node slot (the generic per-element observation fallback, whose
+    /// data lives in node values rather than the const arena).  No-op
+    /// outside a data region.
+    pub fn register_data_nodes(&mut self, nodes: &[Var]) {
+        if !self.data_region {
+            return;
+        }
+        let start = self.topo.slot_nodes.len();
+        self.topo.slot_nodes.extend(nodes.iter().map(|v| v.0));
+        self.topo.data_slots.push(DataSlot {
+            store: SlotStore::Nodes,
+            start: start as u32,
+            len: nodes.len() as u32,
+        });
     }
 
     pub fn add(&mut self, a: Var, b: Var) -> Var {
@@ -520,6 +612,7 @@ impl Tape {
         assert_eq!(w.len(), c.len());
         let value: f64 = w.iter().zip(c).map(|(v, x)| self.value(*v) * x).sum();
         let start = self.topo.arena_parents.len() as u32;
+        self.register_slot(SlotStore::Coeffs, start as usize, w.len());
         self.topo.arena_parents.extend(w.iter().map(|v| v.0));
         self.arena_partials.extend_from_slice(c);
         self.topo.comp_kinds.push(CompKind::Affine);
@@ -627,10 +720,12 @@ impl Tape {
     /// Fused i.i.d. Normal observation plate: `ys[i] ~ N(loc, scale)`
     /// with shared latent parameters.  One replayable composite node.
     pub fn normal_iid_obs(&mut self, loc: Var, scale: Var, ys: &[f64]) -> Var {
+        let c = self.topo.consts.len();
         let kind = CompKind::NormalIid {
-            c: self.topo.consts.len() as u32,
+            c: c as u32,
             n: ys.len() as u32,
         };
+        self.register_slot(SlotStore::Consts, c, ys.len());
         self.topo.consts.extend_from_slice(ys);
         self.topo.arena_parents.push(loc.0);
         self.topo.arena_parents.push(scale.0);
@@ -640,10 +735,12 @@ impl Tape {
     /// Fused i.i.d. Bernoulli observation plate with one shared latent
     /// logit.  One replayable composite node.
     pub fn bernoulli_logits_iid_obs(&mut self, logits: Var, ys: &[f64]) -> Var {
+        let c = self.topo.consts.len();
         let kind = CompKind::BernoulliIid {
-            c: self.topo.consts.len() as u32,
+            c: c as u32,
             n: ys.len() as u32,
         };
+        self.register_slot(SlotStore::Consts, c, ys.len());
         self.topo.consts.extend_from_slice(ys);
         self.topo.arena_parents.push(logits.0);
         self.fused(kind, 1)
@@ -653,10 +750,12 @@ impl Tape {
     /// and a shared latent scale: `ys[i] ~ N(locs[i], scale)`.
     pub fn normal_plate_obs(&mut self, locs: &[Var], scale: Var, ys: &[f64]) -> Var {
         assert_eq!(locs.len(), ys.len());
+        let c = self.topo.consts.len();
         let kind = CompKind::NormalPlate {
-            c: self.topo.consts.len() as u32,
+            c: c as u32,
             n: ys.len() as u32,
         };
+        self.register_slot(SlotStore::Consts, c, ys.len());
         self.topo.consts.extend_from_slice(ys);
         self.topo.arena_parents.extend(locs.iter().map(|v| v.0));
         self.topo.arena_parents.push(scale.0);
@@ -668,10 +767,14 @@ impl Tape {
     pub fn normal_fixed_plate_obs(&mut self, locs: &[Var], sigmas: &[f64], ys: &[f64]) -> Var {
         assert_eq!(locs.len(), ys.len());
         assert_eq!(sigmas.len(), ys.len());
+        let c = self.topo.consts.len();
         let kind = CompKind::NormalFixedPlate {
-            c: self.topo.consts.len() as u32,
+            c: c as u32,
             n: ys.len() as u32,
         };
+        // the slot spans the whole interleaved [sigma_0, y_0, ...]
+        // region: rebinding supplies both per-row scales and labels
+        self.register_slot(SlotStore::Consts, c, 2 * ys.len());
         for (s, y) in sigmas.iter().zip(ys) {
             self.topo.consts.push(*s);
             self.topo.consts.push(*y);
@@ -684,10 +787,12 @@ impl Tape {
     /// (the GLM fast path: partials `y_i - σ(z_i)`).
     pub fn bernoulli_logits_plate_obs(&mut self, logits: &[Var], ys: &[f64]) -> Var {
         assert_eq!(logits.len(), ys.len());
+        let c = self.topo.consts.len();
         let kind = CompKind::BernoulliPlate {
-            c: self.topo.consts.len() as u32,
+            c: c as u32,
             n: ys.len() as u32,
         };
+        self.register_slot(SlotStore::Consts, c, ys.len());
         self.topo.consts.extend_from_slice(ys);
         self.topo.arena_parents.extend(logits.iter().map(|v| v.0));
         self.fused(kind, logits.len())
@@ -840,6 +945,38 @@ impl TapeProgram {
     /// [`forward`]: TapeProgram::forward
     pub fn output_value(&self) -> f64 {
         self.values[self.output as usize]
+    }
+
+    /// Number of rebindable data slots recorded inside data regions
+    /// (see [`Tape::begin_data_region`]).
+    pub fn num_data_slots(&self) -> usize {
+        self.topo.data_slots.len()
+    }
+
+    /// Element count of data slot `slot`.
+    pub fn data_slot_len(&self, slot: usize) -> usize {
+        self.topo.data_slots[slot].len as usize
+    }
+
+    /// Overwrite the data behind slot `slot` (a fresh minibatch row)
+    /// without touching the program structure: the next [`forward`]
+    /// recomputes against the new data.  `data.len()` must equal
+    /// [`TapeProgram::data_slot_len`].
+    ///
+    /// [`forward`]: TapeProgram::forward
+    pub fn rebind_data_slot(&mut self, slot: usize, data: &[f64]) {
+        let DataSlot { store, start, len } = self.topo.data_slots[slot];
+        let (s, l) = (start as usize, len as usize);
+        assert_eq!(data.len(), l, "rebind_data_slot: length mismatch");
+        match store {
+            SlotStore::Coeffs => self.partials[s..s + l].copy_from_slice(data),
+            SlotStore::Consts => self.topo.consts[s..s + l].copy_from_slice(data),
+            SlotStore::Nodes => {
+                for (j, &id) in self.topo.slot_nodes[s..s + l].iter().enumerate() {
+                    self.values[id as usize] = data[j];
+                }
+            }
+        }
     }
 
     /// Rebind the inputs and run the forward sweep; returns the output
@@ -1361,6 +1498,62 @@ mod tests {
                 );
                 assert_eq!(prog.adjoint(vars[i]).to_bits(), radj[v.0 as usize].to_bits());
             }
+        }
+    }
+
+    /// A frozen program with rebound data slots must bitwise-equal
+    /// re-recording the same program against the new data — the
+    /// subsampling index-gather contract, across all three slot stores
+    /// (dot_const coefficients, fused-plate constants, node leaves).
+    #[test]
+    fn rebound_slots_match_rerecorded_tape_bitwise() {
+        fn build(t: &mut Tape, x: &[f64], coef: &[f64], ys: &[f64], zs: &[f64]) -> (Vec<Var>, Var) {
+            let vars: Vec<Var> = x.iter().map(|&v| t.input(v)).collect();
+            t.begin_data_region();
+            let d = t.dot_const(&vars, coef);
+            let sg = t.sigmoid(vars[0]);
+            let scale = t.exp(vars[1]);
+            let n = t.normal_iid_obs(sg, scale, ys);
+            // generic-fallback shape: observation data as constant leaves
+            let leaves: Vec<Var> = zs.iter().map(|&z| t.constant(z)).collect();
+            t.register_data_nodes(&leaves);
+            let mut acc = d;
+            for &lz in &leaves {
+                let m = t.mul(lz, vars[0]);
+                acc = t.add(acc, m);
+            }
+            t.end_data_region();
+            let out = t.add(acc, n);
+            (vars, out)
+        }
+        let x = [0.4, -0.3];
+        let (c0, y0, z0) = ([0.5, -1.5], [0.1, 0.9, -0.4], [1.0, 2.0]);
+        let (c1, y1, z1) = ([2.0, 0.25], [-0.6, 0.2, 1.3], [-3.0, 0.5]);
+
+        let mut t = Tape::new();
+        let (_, out) = build(&mut t, &x, &c0, &y0, &z0);
+        assert_eq!(t.num_data_slots(), 3);
+        let mut prog = t.freeze(out);
+        assert_eq!(prog.num_data_slots(), 3);
+        assert_eq!(prog.data_slot_len(0), 2);
+        assert_eq!(prog.data_slot_len(1), 3);
+        assert_eq!(prog.data_slot_len(2), 2);
+
+        prog.rebind_data_slot(0, &c1);
+        prog.rebind_data_slot(1, &y1);
+        prog.rebind_data_slot(2, &z1);
+        let v = prog.forward(&x);
+        prog.backward();
+        let mut g = vec![0.0; 2];
+        prog.input_adjoints(&mut g);
+
+        let mut rt = Tape::new();
+        let (rvars, rout) = build(&mut rt, &x, &c1, &y1, &z1);
+        let rval = rt.value(rout);
+        let radj = rt.grad(rout).to_vec();
+        assert_eq!(v.to_bits(), rval.to_bits());
+        for (i, rv) in rvars.iter().enumerate() {
+            assert_eq!(g[i].to_bits(), radj[rv.0 as usize].to_bits(), "grad[{i}]");
         }
     }
 

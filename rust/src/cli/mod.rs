@@ -38,6 +38,9 @@ const VALUE_FLAGS: &[&str] = &[
     "checkpoint",
     "checkpoint-every",
     "max-seconds",
+    "subsample-size",
+    "rows",
+    "dim",
 ];
 
 impl Args {

@@ -41,6 +41,7 @@ use crate::autodiff::{BatchTape, BatchTapeProgram, Var};
 use crate::compile::layout::{SiteLayout, SiteTransform};
 #[cfg(debug_assertions)]
 use crate::compile::potential::REPLAY_CHECK_PERIOD;
+use crate::compile::subsample::{SubsampleRebind, SubsampledModel};
 use crate::compile::{pool_take, DistV, EffModel, ProbCtx};
 use crate::effects::site_key;
 use crate::mcmc::{tile_partition, BatchPotential, TiledBatchPotential};
@@ -151,6 +152,7 @@ impl<M: EffModel> BatchedCompiledModel<M> {
                 cursor: 0,
                 terms: &mut *terms,
                 pool: &mut *pool,
+                lik_scale: 1.0,
             };
             model.run(&mut ctx);
             assert_eq!(
@@ -239,6 +241,42 @@ impl<M: EffModel> BatchPotential for BatchedCompiledModel<M> {
     }
 }
 
+impl<M: SubsampledModel> SubsampleRebind for BatchedCompiledModel<M> {
+    /// Gather the indexed rows into the model's staging buffers and, if
+    /// a frozen program is serving evaluations, rebind its lane-shared
+    /// data slots in place — the batched mirror of the scalar
+    /// [`crate::compile::CompiledModel`] impl (staging and program
+    /// updated together, so the debug replay audit stays consistent).
+    fn set_minibatch(&mut self, idx: &[usize]) {
+        let BatchedCompiledModel { model, program, .. } = self;
+        model.load_rows(idx);
+        if let Some(prog) = program.as_mut() {
+            assert_eq!(
+                prog.num_data_slots(),
+                model.num_slots(),
+                "subsample rebind: slot count mismatch between frozen program and model"
+            );
+            for s in 0..prog.num_data_slots() {
+                prog.rebind_data_slot(s, model.slot_data(s));
+            }
+        }
+    }
+}
+
+impl<M: EffModel + Clone + Send + SubsampledModel> SubsampleRebind
+    for TiledBatchPotential<BatchedCompiledModel<M>>
+{
+    /// Every tile holds its own clone of the model and its own frozen
+    /// program, so the minibatch swap fans out to each tile — the lane
+    /// data is shared across lanes within a tile (lane-shared slots),
+    /// identical across tiles.
+    fn set_minibatch(&mut self, idx: &[usize]) {
+        for tile in self.tiles_mut() {
+            tile.set_minibatch(idx);
+        }
+    }
+}
+
 /// The batched evaluation interpreter: value domain = multi-lane tape
 /// [`Var`]s.  Site matching is the same cursor-over-visit-order scheme
 /// as the scalar `TapeCtx` — no string lookups, no allocation.  Fused
@@ -251,6 +289,11 @@ struct BatchTapeCtx<'a> {
     cursor: usize,
     terms: &'a mut Vec<Var>,
     pool: &'a mut Vec<Vec<Var>>,
+    /// active subsample scale correction (N/B inside a subsample scope,
+    /// 1.0 otherwise — a scale of exactly 1.0 records no extra node, so
+    /// full-batch subsampled programs are bitwise identical to their
+    /// plain counterparts)
+    lik_scale: f64,
 }
 
 impl BatchTapeCtx<'_> {
@@ -281,6 +324,19 @@ impl BatchTapeCtx<'_> {
             site.event_len
         );
         (site.offset, site.transform)
+    }
+
+    /// Push an observation log-density term, applying the active
+    /// subsample scale correction (one recorded lane-wise `Scale` node
+    /// when inside a subsample scope, nothing otherwise) — the exact
+    /// mirror of the scalar `TapeCtx::push_obs_term`.
+    fn push_obs_term(&mut self, lp: Var) {
+        let lp = if self.lik_scale != 1.0 {
+            self.tape.scale(lp, self.lik_scale)
+        } else {
+            lp
+        };
+        self.terms.push(lp);
     }
 
     /// Apply the site's constraining bijection lane-wise (identical op
@@ -343,7 +399,7 @@ impl ProbCtx for BatchTapeCtx<'_> {
         let _ = self.next_site(name, true, 1);
         let x = self.tape.constant(y);
         let lp = d.log_prob(self.tape, x);
-        self.terms.push(lp);
+        self.push_obs_term(lp);
     }
 
     fn observe_iid(&mut self, name: &str, d: DistV<Var>, ys: &[f64]) {
@@ -351,20 +407,30 @@ impl ProbCtx for BatchTapeCtx<'_> {
         match d {
             DistV::Normal { loc, scale } => {
                 let node = self.tape.normal_iid_obs(loc, scale, ys);
-                self.terms.push(node);
+                self.push_obs_term(node);
             }
             DistV::BernoulliLogits { logits } => {
                 let node = self.tape.bernoulli_logits_iid_obs(logits, ys);
-                self.terms.push(node);
+                self.push_obs_term(node);
             }
             _ => {
                 // generic fallback: per-element log-probs on the tape
-                // (lane-wise through the Alg ops)
+                // (lane-wise through the Alg ops).  Constants are
+                // pushed first as one contiguous run so a subsample
+                // data region can register them as a single rebindable
+                // node slot; term order (and therefore every bit of
+                // the sum and the reverse sweep) is unchanged.
+                let mut xs = self.vec_take();
                 for &y in ys {
                     let x = self.tape.constant(y);
-                    let lp = d.log_prob(self.tape, x);
-                    self.terms.push(lp);
+                    xs.push(x);
                 }
+                self.tape.register_data_nodes(&xs);
+                for i in 0..xs.len() {
+                    let lp = d.log_prob(self.tape, xs[i]);
+                    self.push_obs_term(lp);
+                }
+                self.vec_put(xs);
             }
         }
     }
@@ -377,7 +443,7 @@ impl ProbCtx for BatchTapeCtx<'_> {
         );
         let _ = self.next_site(name, true, ys.len());
         let node = self.tape.normal_plate_obs(locs, scale, ys);
-        self.terms.push(node);
+        self.push_obs_term(node);
     }
 
     fn observe_normal_fixed(&mut self, name: &str, locs: &[Var], sigmas: &[f64], ys: &[f64]) {
@@ -393,7 +459,7 @@ impl ProbCtx for BatchTapeCtx<'_> {
         );
         let _ = self.next_site(name, true, ys.len());
         let node = self.tape.normal_fixed_plate_obs(locs, sigmas, ys);
-        self.terms.push(node);
+        self.push_obs_term(node);
     }
 
     fn observe_bernoulli_logits(&mut self, name: &str, logits: &[Var], ys: &[f64]) {
@@ -404,7 +470,21 @@ impl ProbCtx for BatchTapeCtx<'_> {
         );
         let _ = self.next_site(name, true, ys.len());
         let node = self.tape.bernoulli_logits_plate_obs(logits, ys);
-        self.terms.push(node);
+        self.push_obs_term(node);
+    }
+
+    fn subsample(&mut self, total: usize, batch: usize) {
+        assert!(
+            batch > 0 && batch <= total,
+            "subsample: need 0 < batch ({batch}) <= total ({total})"
+        );
+        self.lik_scale = total as f64 / batch as f64;
+        self.tape.begin_data_region();
+    }
+
+    fn end_subsample(&mut self) {
+        self.lik_scale = 1.0;
+        self.tape.end_data_region();
     }
 
     fn dot(&mut self, ws: &[Var], xs: &[f64]) -> Var {

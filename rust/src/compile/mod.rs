@@ -75,6 +75,7 @@ pub mod batch_potential;
 pub mod handler_ctx;
 pub mod layout;
 pub mod potential;
+pub mod subsample;
 pub mod zoo;
 
 use anyhow::Result;
@@ -87,6 +88,7 @@ pub use batch_potential::{compile_batched, compile_tiled, tiled_from_layout, Bat
 pub use handler_ctx::HandlerCtx;
 pub use layout::{SiteLayout, SiteSpec, SiteTransform};
 pub use potential::CompiledModel;
+pub use subsample::{SubsampleRebind, SubsampledLogistic, SubsampledModel};
 
 /// A probabilistic program, written once and runnable over any
 /// [`ProbCtx`] — the `Fn(&mut Interp)` of the effects module, made
@@ -151,6 +153,22 @@ pub trait ProbCtx {
     /// Vectorized Bernoulli observations with per-element logits (the
     /// GLM fast path: one fused composite, partials `y_i - σ(z_i)`).
     fn observe_bernoulli_logits(&mut self, name: &str, logits: &[Self::V], ys: &[f64]);
+
+    /// Enter a subsampled observation scope — the compiled counterpart
+    /// of Pyro's `plate(..., subsample_size=B)`: the observation
+    /// statements until [`ProbCtx::end_subsample`] carry a minibatch of
+    /// `batch` rows drawn from a population of `total`, and their
+    /// log-likelihood terms are scaled by `total / batch` so the joint
+    /// log-density stays an **unbiased** estimator of the full-data one
+    /// (in expectation over uniformly drawn minibatches).  Tape
+    /// contexts additionally open a rebindable data region so a frozen
+    /// program can swap the minibatch without re-recording.  Default:
+    /// no-op (trace pass).
+    fn subsample(&mut self, _total: usize, _batch: usize) {}
+
+    /// Leave the subsampled observation scope opened by
+    /// [`ProbCtx::subsample`].  Default: no-op.
+    fn end_subsample(&mut self) {}
 
     /// dot(ws, xs) for constant coefficients `xs` (a single fused node
     /// in the tape domain).

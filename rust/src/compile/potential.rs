@@ -36,6 +36,7 @@
 
 use crate::autodiff::{Tape, TapeProgram, Var};
 use crate::compile::layout::{SiteLayout, SiteTransform};
+use crate::compile::subsample::{SubsampleRebind, SubsampledModel};
 use crate::compile::{pool_take, DistV, EffModel, ProbCtx};
 use crate::effects::site_key;
 use crate::mcmc::Potential;
@@ -147,6 +148,7 @@ impl<M: EffModel> CompiledModel<M> {
                 cursor: 0,
                 terms: &mut *terms,
                 pool: &mut *pool,
+                lik_scale: 1.0,
             };
             model.run(&mut ctx);
             assert_eq!(
@@ -227,6 +229,29 @@ impl<M: EffModel> Potential for CompiledModel<M> {
     }
 }
 
+impl<M: SubsampledModel> SubsampleRebind for CompiledModel<M> {
+    /// Gather the indexed rows into the model's staging buffers and, if
+    /// a frozen program is serving evaluations, rebind its data slots
+    /// in place.  Staging and program are updated *together*, so the
+    /// debug replay audit (which re-records from staging) keeps
+    /// agreeing with the frozen result, and a not-yet-frozen model
+    /// simply records its first program from the fresh staging data.
+    fn set_minibatch(&mut self, idx: &[usize]) {
+        let CompiledModel { model, program, .. } = self;
+        model.load_rows(idx);
+        if let Some(prog) = program.as_mut() {
+            assert_eq!(
+                prog.num_data_slots(),
+                model.num_slots(),
+                "subsample rebind: slot count mismatch between frozen program and model"
+            );
+            for s in 0..prog.num_data_slots() {
+                prog.rebind_data_slot(s, model.slot_data(s));
+            }
+        }
+    }
+}
+
 /// The evaluation interpreter: value domain = tape [`Var`]s.  Matches
 /// program sites to the compiled layout with a cursor over the recorded
 /// visit order plus a pre-hashed key check — no string lookups, no
@@ -240,6 +265,11 @@ struct TapeCtx<'a> {
     cursor: usize,
     terms: &'a mut Vec<Var>,
     pool: &'a mut Vec<Vec<Var>>,
+    /// active subsample scale correction (N/B inside a subsample scope,
+    /// 1.0 otherwise — a scale of exactly 1.0 records no extra node, so
+    /// full-batch subsampled programs are bitwise identical to their
+    /// plain counterparts)
+    lik_scale: f64,
 }
 
 impl TapeCtx<'_> {
@@ -270,6 +300,18 @@ impl TapeCtx<'_> {
             site.event_len
         );
         (site.offset, site.transform)
+    }
+
+    /// Push an observation log-density term, applying the active
+    /// subsample scale correction (one recorded `Scale` node when
+    /// inside a subsample scope, nothing otherwise).
+    fn push_obs_term(&mut self, lp: Var) {
+        let lp = if self.lik_scale != 1.0 {
+            self.tape.scale(lp, self.lik_scale)
+        } else {
+            lp
+        };
+        self.terms.push(lp);
     }
 
     /// Apply the site's constraining bijection to one unconstrained
@@ -331,7 +373,7 @@ impl ProbCtx for TapeCtx<'_> {
         let _ = self.next_site(name, true, 1);
         let x = self.tape.constant(y);
         let lp = d.log_prob(self.tape, x);
-        self.terms.push(lp);
+        self.push_obs_term(lp);
     }
 
     fn observe_iid(&mut self, name: &str, d: DistV<Var>, ys: &[f64]) {
@@ -339,19 +381,29 @@ impl ProbCtx for TapeCtx<'_> {
         match d {
             DistV::Normal { loc, scale } => {
                 let node = self.tape.normal_iid_obs(loc, scale, ys);
-                self.terms.push(node);
+                self.push_obs_term(node);
             }
             DistV::BernoulliLogits { logits } => {
                 let node = self.tape.bernoulli_logits_iid_obs(logits, ys);
-                self.terms.push(node);
+                self.push_obs_term(node);
             }
             _ => {
-                // generic fallback: per-element log-probs on the tape
+                // generic fallback: per-element log-probs on the tape.
+                // Constants are pushed first as one contiguous run so a
+                // subsample data region can register them as a single
+                // rebindable node slot; term order (and therefore every
+                // bit of the sum and the reverse sweep) is unchanged.
+                let mut xs = self.vec_take();
                 for &y in ys {
                     let x = self.tape.constant(y);
-                    let lp = d.log_prob(self.tape, x);
-                    self.terms.push(lp);
+                    xs.push(x);
                 }
+                self.tape.register_data_nodes(&xs);
+                for i in 0..xs.len() {
+                    let lp = d.log_prob(self.tape, xs[i]);
+                    self.push_obs_term(lp);
+                }
+                self.vec_put(xs);
             }
         }
     }
@@ -364,7 +416,7 @@ impl ProbCtx for TapeCtx<'_> {
         );
         let _ = self.next_site(name, true, ys.len());
         let node = self.tape.normal_plate_obs(locs, scale, ys);
-        self.terms.push(node);
+        self.push_obs_term(node);
     }
 
     fn observe_normal_fixed(&mut self, name: &str, locs: &[Var], sigmas: &[f64], ys: &[f64]) {
@@ -380,7 +432,7 @@ impl ProbCtx for TapeCtx<'_> {
         );
         let _ = self.next_site(name, true, ys.len());
         let node = self.tape.normal_fixed_plate_obs(locs, sigmas, ys);
-        self.terms.push(node);
+        self.push_obs_term(node);
     }
 
     fn observe_bernoulli_logits(&mut self, name: &str, logits: &[Var], ys: &[f64]) {
@@ -391,7 +443,21 @@ impl ProbCtx for TapeCtx<'_> {
         );
         let _ = self.next_site(name, true, ys.len());
         let node = self.tape.bernoulli_logits_plate_obs(logits, ys);
-        self.terms.push(node);
+        self.push_obs_term(node);
+    }
+
+    fn subsample(&mut self, total: usize, batch: usize) {
+        assert!(
+            batch > 0 && batch <= total,
+            "subsample: need 0 < batch ({batch}) <= total ({total})"
+        );
+        self.lik_scale = total as f64 / batch as f64;
+        self.tape.begin_data_region();
+    }
+
+    fn end_subsample(&mut self) {
+        self.lik_scale = 1.0;
+        self.tape.end_data_region();
     }
 
     fn dot(&mut self, ws: &[Var], xs: &[f64]) -> Var {

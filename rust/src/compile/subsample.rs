@@ -1,0 +1,313 @@
+//! Subsampled (minibatch) compiled models — the compile-layer half of
+//! Pyro's `plate(..., subsample_size=B)` contract (ROADMAP open item
+//! 4, the paper's tall-data regime).
+//!
+//! A subsampled model is an ordinary [`EffModel`] whose observation
+//! section is wrapped in [`ProbCtx::subsample`] /
+//! [`ProbCtx::end_subsample`] and reads its data from small **staging
+//! buffers** of `B` rows instead of the full `N`-row dataset.  Under a
+//! tape context that wrapper does two things:
+//!
+//! 1. every observation log-density term inside the scope is scaled by
+//!    `N/B` (one recorded `Scale` node), so the joint log-density is an
+//!    unbiased estimator of the full-data one over uniformly drawn
+//!    minibatches — exactly the correction NumPyro's `scale` handler
+//!    applies under a subsampled plate;
+//! 2. a **data region** is opened on the tape, registering every
+//!    constant fed to the fused observation composites (dot-product
+//!    coefficient runs, observed-value runs, generic-fallback constant
+//!    nodes) as a rebindable [`crate::autodiff::Tape`] data slot.
+//!
+//! Because the recorded op *structure* is independent of which rows
+//! occupy the staging buffers, swapping minibatches never re-records:
+//! [`SubsampleRebind::set_minibatch`] gathers the new rows into staging
+//! and patches the frozen `TapeProgram` / `BatchTapeProgram` slots in
+//! place — a handful of `copy_from_slice` calls per step, not a
+//! re-freeze.  With `B == N` the scale is exactly 1.0, no `Scale` node
+//! is recorded, and the program is **bitwise identical** to the plain
+//! full-batch model (`rust/tests/subsampling.rs`).
+
+use crate::compile::{EffModel, ProbCtx};
+use crate::data::stream::RowLoader;
+
+/// A model whose observations read from minibatch staging buffers.
+/// The compiled wrappers ([`crate::compile::CompiledModel`],
+/// [`crate::compile::BatchedCompiledModel`] and the tiled potential)
+/// use this interface to implement [`SubsampleRebind`]: `load_rows`
+/// refills the staging buffers, and `num_slots`/`slot_data` expose the
+/// staged constants in **tape registration order** so each frozen data
+/// slot can be rebound from the matching staging span.
+pub trait SubsampledModel: EffModel {
+    /// Population size `N`.
+    fn total_rows(&self) -> usize;
+    /// Minibatch size `B` (fixed at compile time — the recorded
+    /// program has exactly `B` observation rows).
+    fn batch_rows(&self) -> usize;
+    /// Gather the rows named by `idx` (length `B`) into staging.
+    fn load_rows(&mut self, idx: &[usize]);
+    /// Number of rebindable data slots the model registers while
+    /// recording (must equal the frozen program's slot count).
+    fn num_slots(&self) -> usize;
+    /// The staged constants for slot `slot`, in registration order.
+    fn slot_data(&self, slot: usize) -> &[f64];
+}
+
+/// Swap the active minibatch of a compiled potential without
+/// re-recording or re-freezing — implemented by the scalar, batched
+/// and tiled compiled wrappers.  Call it before each ELBO evaluation;
+/// the next `value_and_grad` sees the new rows.
+pub trait SubsampleRebind {
+    fn set_minibatch(&mut self, idx: &[usize]);
+}
+
+/// Bayesian logistic regression over a [`RowLoader`], subsampled:
+/// the same priors, logits and Bernoulli likelihood as
+/// [`crate::compile::zoo::LogisticModel`] — the identical operation
+/// sequence, in fact, which is what makes the `B == N` case bitwise
+/// equal — but evaluated on a `B`-row staging window of an `N`-row
+/// (possibly virtual, never-materialized) dataset.
+///
+/// Flat layout (sorted names): `[b, m_0..m_{d-1}]`.
+#[derive(Debug, Clone)]
+pub struct SubsampledLogistic<L: RowLoader> {
+    loader: L,
+    d: usize,
+    batch: usize,
+    /// staging: minibatch covariates, row-major (B, d)
+    x_batch: Vec<f64>,
+    /// staging: minibatch labels (B)
+    y_batch: Vec<f64>,
+}
+
+impl<L: RowLoader> SubsampledLogistic<L> {
+    /// Wrap `loader` with a `batch`-row staging window, pre-filled with
+    /// rows `0..batch` so the model is evaluable (and traceable)
+    /// before the first [`SubsampleRebind::set_minibatch`].
+    pub fn new(loader: L, batch: usize) -> SubsampledLogistic<L> {
+        let (n, d) = (loader.num_rows(), loader.dim());
+        assert!(
+            batch > 0 && batch <= n,
+            "SubsampledLogistic: need 0 < batch ({batch}) <= rows ({n})"
+        );
+        let mut m = SubsampledLogistic {
+            loader,
+            d,
+            batch,
+            x_batch: vec![0.0; batch * d],
+            y_batch: vec![0.0; batch],
+        };
+        let idx: Vec<usize> = (0..batch).collect();
+        m.load_rows(&idx);
+        m
+    }
+
+    /// The wrapped row source.
+    pub fn loader(&self) -> &L {
+        &self.loader
+    }
+}
+
+impl<L: RowLoader> EffModel for SubsampledLogistic<L> {
+    fn run<C: ProbCtx>(&self, c: &mut C) {
+        let prior = c.normal(0.0, 1.0);
+        let b = c.sample("b", prior);
+        let prior = c.normal(0.0, 1.0);
+        let mut m = c.vec_take();
+        c.sample_vec("m", prior, self.d, &mut m);
+        c.subsample(self.loader.num_rows(), self.batch);
+        let mut logits = c.vec_take();
+        for i in 0..self.batch {
+            let xi = &self.x_batch[i * self.d..(i + 1) * self.d];
+            let dm = c.dot(&m, xi);
+            let zl = c.add(b, dm);
+            logits.push(zl);
+        }
+        c.observe_bernoulli_logits("y", &logits, &self.y_batch);
+        c.end_subsample();
+        c.vec_put(logits);
+        c.vec_put(m);
+    }
+}
+
+impl<L: RowLoader> SubsampledModel for SubsampledLogistic<L> {
+    fn total_rows(&self) -> usize {
+        self.loader.num_rows()
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.batch
+    }
+
+    fn load_rows(&mut self, idx: &[usize]) {
+        assert_eq!(
+            idx.len(),
+            self.batch,
+            "SubsampledLogistic: minibatch must have exactly {} rows",
+            self.batch
+        );
+        for (j, &i) in idx.iter().enumerate() {
+            self.y_batch[j] = self
+                .loader
+                .load_row(i, &mut self.x_batch[j * self.d..(j + 1) * self.d]);
+        }
+    }
+
+    // Registration order inside the data region: one dot-product
+    // coefficient run per row (B Coeffs slots), then the observed
+    // labels of the fused Bernoulli composite (1 Consts slot).
+    fn num_slots(&self) -> usize {
+        self.batch + 1
+    }
+
+    fn slot_data(&self, slot: usize) -> &[f64] {
+        if slot < self.batch {
+            &self.x_batch[slot * self.d..(slot + 1) * self.d]
+        } else if slot == self.batch {
+            &self.y_batch
+        } else {
+            panic!("SubsampledLogistic: slot {slot} out of range");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compile::compile;
+    use crate::compile::zoo::LogisticModel;
+    use crate::data::make_covtype_like;
+    use crate::data::stream::InMemoryRows;
+    use crate::mcmc::Potential;
+    use crate::rng::Rng;
+
+    fn small_rows(n: usize, d: usize) -> InMemoryRows {
+        let data = make_covtype_like(5, n, d);
+        InMemoryRows::new(data.x, data.y, n, d)
+    }
+
+    /// B == N: the subsampled model must be bitwise identical to the
+    /// plain LogisticModel — same ops, no scale node, no divergence on
+    /// the frozen path either.
+    #[test]
+    fn full_batch_subsampled_is_bitwise_identical_to_plain() {
+        let (n, d) = (12, 3);
+        let rows = small_rows(n, d);
+        let plain = LogisticModel {
+            x: rows.x.clone(),
+            y: rows.y.clone(),
+            n,
+            d,
+        };
+        let mut a = compile(plain, 0).unwrap();
+        let mut b = compile(SubsampledLogistic::new(rows, n), 0).unwrap();
+        assert_eq!(a.dim(), b.dim());
+        let dim = a.dim();
+        let mut rng = Rng::new(2);
+        let mut ga = vec![0.0; dim];
+        let mut gb = vec![0.0; dim];
+        for _ in 0..5 {
+            let z: Vec<f64> = (0..dim).map(|_| 0.5 * rng.normal()).collect();
+            let ua = a.value_and_grad(&z, &mut ga);
+            let ub = b.value_and_grad(&z, &mut gb);
+            assert_eq!(ua.to_bits(), ub.to_bits());
+            for i in 0..dim {
+                assert_eq!(ga[i].to_bits(), gb[i].to_bits(), "grad[{i}]");
+            }
+        }
+    }
+
+    /// Rebinding a minibatch on the frozen program must equal
+    /// compiling a fresh model whose staging holds the same rows.
+    #[test]
+    fn rebound_minibatch_matches_fresh_compile_bitwise() {
+        let (n, d, bsz) = (10, 3, 4);
+        let rows = small_rows(n, d);
+        let mut sub = compile(SubsampledLogistic::new(rows.clone(), bsz), 0).unwrap();
+        let dim = sub.dim();
+        let z = vec![0.2; dim];
+        let mut g = vec![0.0; dim];
+        let _ = sub.value_and_grad(&z, &mut g); // record + freeze
+
+        let idx = [7usize, 1, 9, 3];
+        sub.set_minibatch(&idx);
+        let u = sub.value_and_grad(&z, &mut g);
+
+        let mut fresh_model = SubsampledLogistic::new(rows, bsz);
+        fresh_model.load_rows(&idx);
+        let mut fresh = compile(fresh_model, 0).unwrap();
+        let mut gf = vec![0.0; dim];
+        let uf = fresh.value_and_grad(&z, &mut gf);
+        assert_eq!(u.to_bits(), uf.to_bits());
+        for i in 0..dim {
+            assert_eq!(g[i].to_bits(), gf[i].to_bits(), "grad[{i}]");
+        }
+    }
+
+    /// The N/B scale correction: a minibatch potential with scale N/B
+    /// equals prior + (N/B) * minibatch likelihood, checked against a
+    /// hand-assembled combination of plain compiled models.
+    #[test]
+    fn scale_correction_is_n_over_b() {
+        let (n, d, bsz) = (8, 2, 2);
+        let rows = small_rows(n, d);
+        let idx = [5usize, 2];
+        let mut sub_model = SubsampledLogistic::new(rows.clone(), bsz);
+        sub_model.load_rows(&idx);
+        let mut sub = compile(sub_model, 0).unwrap();
+        let dim = sub.dim();
+        let z = vec![0.3; dim];
+        let mut g = vec![0.0; dim];
+        let u_sub = sub.value_and_grad(&z, &mut g);
+
+        // plain model on exactly the minibatch rows (scale 1)
+        let xb: Vec<f64> = idx
+            .iter()
+            .flat_map(|&i| rows.x[i * d..(i + 1) * d].to_vec())
+            .collect();
+        let yb: Vec<f64> = idx.iter().map(|&i| rows.y[i]).collect();
+        let mut mini = compile(
+            LogisticModel {
+                x: xb,
+                y: yb,
+                n: bsz,
+                d,
+            },
+            0,
+        )
+        .unwrap();
+        // prior-only: a model with zero observations is rejected by
+        // the compiler, so recover the prior from two mini evaluations
+        // is not possible either; instead use the identity
+        //   U_sub = prior + (N/B) lik_mini
+        //   U_mini = prior + lik_mini
+        // => U_sub - U_mini = (N/B - 1) lik_mini, with lik_mini
+        // recovered from a second model holding the batch twice:
+        //   U_twice = prior + 2 lik_mini
+        let xb2: Vec<f64> = idx
+            .iter()
+            .chain(idx.iter())
+            .flat_map(|&i| rows.x[i * d..(i + 1) * d].to_vec())
+            .collect();
+        let yb2: Vec<f64> = idx.iter().chain(idx.iter()).map(|&i| rows.y[i]).collect();
+        let mut twice = compile(
+            LogisticModel {
+                x: xb2,
+                y: yb2,
+                n: 2 * bsz,
+                d,
+            },
+            0,
+        )
+        .unwrap();
+        let mut gm = vec![0.0; dim];
+        let u_mini = mini.value_and_grad(&z, &mut gm);
+        let u_twice = twice.value_and_grad(&z, &mut gm);
+        let lik = u_twice - u_mini; // -(lik_mini) in potential sign
+        let scale = n as f64 / bsz as f64;
+        let expect = u_mini + (scale - 1.0) * lik;
+        assert!(
+            (u_sub - expect).abs() < 1e-9,
+            "{u_sub} vs {expect} (scale {scale})"
+        );
+    }
+}

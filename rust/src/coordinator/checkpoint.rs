@@ -40,7 +40,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::compile::{BatchedCompiledModel, CompiledModel, EffModel, SiteLayout};
+use crate::compile::{BatchedCompiledModel, CompiledModel, EffModel, SiteLayout, SubsampledModel};
 use crate::coordinator::chain::{
     advance_chain, chain_start, ChainCursor, ChainResult, ChainStats, NutsOptions,
 };
@@ -48,10 +48,14 @@ use crate::coordinator::sampler::{NativeSampler, Sampler, TreeAlgorithm};
 use crate::coordinator::vectorized::{run_chains_vectorized_from, ChainMethod};
 use crate::coordinator::warmup::WarmupSchedule;
 use crate::error::InferenceError;
+use crate::data::stream::MinibatchScheduler;
 use crate::mcmc::{DualAverage, Welford};
 use crate::rng::Rng;
 use crate::svi::native::{
     BatchedParticles, NativeSvi, NativeSviResult, ScalarParticles, SviCursor, SviOptions,
+};
+use crate::svi::subsample::{
+    scheduler_rng, SubsampledBatchedParticles, SubsampledScalarParticles,
 };
 use crate::util::json::Json;
 
@@ -560,6 +564,19 @@ pub fn save_svi_checkpoint(
     o.insert("avg_count".into(), enc_u64(cur.avg_count));
     o.insert("backoff".into(), enc_f64(cur.backoff));
     o.insert("skipped".into(), enc_u64(cur.skipped));
+    // minibatch-scheduler state: written only by subsampled runs, so
+    // full-batch checkpoints keep the exact pre-subsampling schema
+    if let Some(sc) = &cur.subsample {
+        let mut s = std::collections::BTreeMap::new();
+        s.insert("epoch".into(), enc_u64(sc.epoch));
+        s.insert("pos".into(), Json::Num(sc.pos as f64));
+        s.insert(
+            "rng_s".into(),
+            Json::Arr(sc.rng_s.iter().map(|&w| enc_u64(w)).collect()),
+        );
+        s.insert("rng_spare".into(), sc.rng_spare.map_or(Json::Null, enc_f64));
+        o.insert("subsample".into(), Json::Obj(s));
+    }
     write_atomic(path, &Json::Obj(o).to_string_pretty())
 }
 
@@ -595,6 +612,31 @@ pub fn load_svi_checkpoint(
     let opt_moments = field(&root, "opt_moments", path, |v| {
         v.as_arr()?.iter().map(dec_f64s).collect::<Option<Vec<Vec<f64>>>>()
     })?;
+    // absent in pre-subsampling checkpoints → full-batch resume
+    let subsample = match root.get("subsample") {
+        Some(Json::Null) | None => None,
+        Some(sj) => {
+            let s_rng = field(sj, "rng_s", path, |v| {
+                v.as_arr()?.iter().map(dec_u64).collect::<Option<Vec<u64>>>()
+            })?;
+            if s_rng.len() != 4 {
+                return Err(ck_err(path, "subsample rng_s must have 4 words".into()));
+            }
+            let spare = match sj.get("rng_spare") {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(
+                    dec_f64(v)
+                        .ok_or_else(|| ck_err(path, "malformed subsample 'rng_spare'".into()))?,
+                ),
+            };
+            Some(crate::data::stream::SubsampleCursor {
+                epoch: field(sj, "epoch", path, dec_u64)?,
+                pos: field(sj, "pos", path, |v| v.as_usize())?,
+                rng_s: [s_rng[0], s_rng[1], s_rng[2], s_rng[3]],
+                rng_spare: spare,
+            })
+        }
+    };
     Ok(SviCursor {
         params: field(&root, "params", path, dec_f64s)?,
         opt_moments,
@@ -606,6 +648,7 @@ pub fn load_svi_checkpoint(
         avg_count: field(&root, "avg_count", path, dec_u64)?,
         backoff: field(&root, "backoff", path, dec_f64)?,
         skipped: field(&root, "skipped", path, dec_u64)?,
+        subsample,
     })
 }
 
@@ -663,6 +706,69 @@ pub fn run_svi_checkpointed<M: EffModel + Clone + Send>(
     } else {
         let pot = CompiledModel::new(model.clone(), layout.clone());
         let mut svi = NativeSvi::new(ScalarParticles::new(pot, opts.num_particles), opts)?;
+        restore_into(&mut svi, cfg, seed, num_steps, layout.dim)?;
+        svi.run_with(cfg.deadline(), cfg.every, &mut sink)?
+    };
+    Ok((layout, result))
+}
+
+/// [`run_svi_checkpointed`] for **subsampled** models — the
+/// checkpointed twin of [`crate::coordinator::run_svi_subsampled`].
+/// The minibatch scheduler's cursor rides the `subsample` object of the
+/// SVI checkpoint, so an interrupted + resumed run walks the exact same
+/// epoch permutations and minibatch sequence as an uninterrupted one.
+pub fn run_svi_subsampled_checkpointed<M: SubsampledModel + Clone + Send>(
+    model: &M,
+    opts: &SviOptions,
+    cfg: &CheckpointConfig,
+) -> Result<(SiteLayout, NativeSviResult)> {
+    anyhow::ensure!(opts.num_particles > 0, "SVI needs at least one ELBO particle");
+    let (total, batch) = (model.total_rows(), model.batch_rows());
+    let sched = MinibatchScheduler::new(total, batch, scheduler_rng(opts.seed));
+    let layout = SiteLayout::trace(model, opts.seed)?;
+    let save_path = cfg.path.clone();
+    let (seed, num_steps) = (opts.seed, opts.num_steps);
+    let mut sink = move |cur: &SviCursor| match &save_path {
+        Some(p) => save_svi_checkpoint(p, seed, num_steps, cur),
+        None => Ok(()),
+    };
+    fn restore_into<E: crate::svi::native::ElboEngine>(
+        svi: &mut NativeSvi<E>,
+        cfg: &CheckpointConfig,
+        seed: u64,
+        num_steps: usize,
+        dim: usize,
+    ) -> Result<()> {
+        if let Some(p) = &cfg.path {
+            if cfg.resume && p.exists() {
+                let cur = load_svi_checkpoint(p, seed, num_steps, dim)?;
+                svi.import_cursor(&cur)?;
+            }
+        }
+        Ok(())
+    }
+    let result = if opts.vectorize_particles
+        && opts.num_particles > crate::coordinator::TILED_LANE_THRESHOLD
+    {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let tile = crate::mcmc::auto_tile_width(opts.num_particles, threads);
+        let pot = crate::compile::tiled_from_layout(model, &layout, opts.num_particles, tile);
+        let mut svi = NativeSvi::new(SubsampledBatchedParticles::new(pot, sched), opts)?;
+        restore_into(&mut svi, cfg, seed, num_steps, layout.dim)?;
+        svi.run_with(cfg.deadline(), cfg.every, &mut sink)?
+    } else if opts.vectorize_particles && opts.num_particles > 1 {
+        let pot = BatchedCompiledModel::new(model.clone(), layout.clone(), opts.num_particles);
+        let mut svi = NativeSvi::new(SubsampledBatchedParticles::new(pot, sched), opts)?;
+        restore_into(&mut svi, cfg, seed, num_steps, layout.dim)?;
+        svi.run_with(cfg.deadline(), cfg.every, &mut sink)?
+    } else {
+        let pot = CompiledModel::new(model.clone(), layout.clone());
+        let mut svi = NativeSvi::new(
+            SubsampledScalarParticles::new(pot, opts.num_particles, sched),
+            opts,
+        )?;
         restore_into(&mut svi, cfg, seed, num_steps, layout.dim)?;
         svi.run_with(cfg.deadline(), cfg.every, &mut sink)?
     };

@@ -13,11 +13,15 @@
 use anyhow::{ensure, Result};
 
 use crate::compile::{
-    tiled_from_layout, BatchedCompiledModel, CompiledModel, EffModel, SiteLayout,
+    tiled_from_layout, BatchedCompiledModel, CompiledModel, EffModel, SiteLayout, SubsampledModel,
 };
 use crate::coordinator::TILED_LANE_THRESHOLD;
+use crate::data::stream::MinibatchScheduler;
 use crate::mcmc::auto_tile_width;
 use crate::svi::native::{BatchedParticles, NativeSvi, NativeSviResult, ScalarParticles, SviOptions};
+use crate::svi::subsample::{
+    scheduler_rng, SubsampledBatchedParticles, SubsampledScalarParticles,
+};
 
 /// Compile `model` and fit a mean-field ADVI posterior with the native
 /// engine — the entry point behind the `fugue svi-model` CLI.  Returns
@@ -47,6 +51,43 @@ pub fn run_svi_native<M: EffModel + Clone + Send>(
     } else {
         let pot = CompiledModel::new(model.clone(), layout.clone());
         NativeSvi::new(ScalarParticles::new(pot, opts.num_particles), opts)?.run()
+    };
+    Ok((layout, result))
+}
+
+/// [`run_svi_native`] for **subsampled** models: same backend choice
+/// (scalar / fused-lane / tiled particles), plus a deterministic
+/// minibatch scheduler ([`scheduler_rng`] stream of `opts.seed`) that
+/// swaps the compiled potential's minibatch before every ELBO step.
+/// With `model.batch_rows() == model.total_rows()` the scheduler is
+/// the identity and the run is bitwise-identical to
+/// [`run_svi_native`] on the equivalent full-batch model
+/// (`rust/tests/subsampling.rs`).
+pub fn run_svi_subsampled<M: SubsampledModel + Clone + Send>(
+    model: &M,
+    opts: &SviOptions,
+) -> Result<(SiteLayout, NativeSviResult)> {
+    ensure!(opts.num_particles > 0, "SVI needs at least one ELBO particle");
+    let (total, batch) = (model.total_rows(), model.batch_rows());
+    let sched = MinibatchScheduler::new(total, batch, scheduler_rng(opts.seed));
+    let layout = SiteLayout::trace(model, opts.seed)?;
+    let result = if opts.vectorize_particles && opts.num_particles > TILED_LANE_THRESHOLD {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let tile = auto_tile_width(opts.num_particles, threads);
+        let pot = tiled_from_layout(model, &layout, opts.num_particles, tile);
+        NativeSvi::new(SubsampledBatchedParticles::new(pot, sched), opts)?.run()
+    } else if opts.vectorize_particles && opts.num_particles > 1 {
+        let pot = BatchedCompiledModel::new(model.clone(), layout.clone(), opts.num_particles);
+        NativeSvi::new(SubsampledBatchedParticles::new(pot, sched), opts)?.run()
+    } else {
+        let pot = CompiledModel::new(model.clone(), layout.clone());
+        NativeSvi::new(
+            SubsampledScalarParticles::new(pot, opts.num_particles, sched),
+            opts,
+        )?
+        .run()
     };
     Ok((layout, result))
 }

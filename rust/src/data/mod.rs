@@ -3,10 +3,16 @@
 //! the seed and produce both the raw arrays and the [`HostTensor`]s the
 //! artifacts take as inputs.
 
+pub mod stream;
+
 use crate::ppl::special::sigmoid;
 use crate::rng::Rng;
 use crate::runtime::engine::HostTensor;
 use crate::runtime::manifest::DType;
+
+pub use stream::{
+    InMemoryRows, MinibatchScheduler, RowLoader, SubsampleCursor, SyntheticLogisticStream,
+};
 
 /// Semi-supervised HMM sequence (K states, V categories), sticky
 /// transitions + informative emissions as in

@@ -1,0 +1,371 @@
+//! Streaming row loaders and the deterministic minibatch scheduler —
+//! the data side of subsampled SVI (ROADMAP open item 4, the paper's
+//! tall-data regime).
+//!
+//! A [`RowLoader`] yields one `(x_i, y_i)` row at a time, so the ELBO
+//! hot path only ever touches the `B` rows of the current minibatch:
+//! [`SyntheticLogisticStream`] regenerates row `i` on demand from
+//! `(seed, i)` and stores nothing but its true weight vector, which is
+//! how a 10M-row logistic regression fits in a few hundred bytes of
+//! loader state.  [`InMemoryRows`] wraps an already-materialized
+//! matrix for small problems and tests.
+//!
+//! [`MinibatchScheduler`] reproduces the Pyro `plate(...,
+//! subsample_size=B)` sampling contract: each epoch is a fresh
+//! Fisher–Yates shuffle of `0..N` (one dedicated xoshiro stream),
+//! served in consecutive windows of `B` with the ragged tail dropped,
+//! so every row appears at most once per epoch and exactly once when
+//! `B` divides `N` — the property the unbiasedness of the scaled ELBO
+//! estimator rests on.  Scheduling is deterministic in the seed and
+//! checkpointable: a [`SubsampleCursor`] (epoch, position, and the RNG
+//! state snapshotted at the *start* of the epoch) is enough to rebuild
+//! the permutation and resume bitwise-identically
+//! (`rust/tests/subsampling.rs`).
+
+use crate::ppl::special::sigmoid;
+use crate::rng::Rng;
+
+/// A source of `(covariates, label)` rows addressed by index — the
+/// only interface the subsampled models see, so swapping a synthetic
+/// stream for a memory-mapped file never touches the model.
+///
+/// Implementations must be deterministic: `load_row(i)` always yields
+/// the same row, regardless of call order (minibatch gathers jump
+/// around the index space).
+pub trait RowLoader {
+    /// Total number of rows `N` in the (possibly virtual) dataset.
+    fn num_rows(&self) -> usize;
+    /// Covariate dimension `d`.
+    fn dim(&self) -> usize;
+    /// Write row `i`'s covariates into `x_out` (length `d`) and return
+    /// its label.
+    fn load_row(&self, i: usize, x_out: &mut [f64]) -> f64;
+}
+
+/// A virtual logistic-regression dataset generated row-by-row from the
+/// seed: standard-normal covariates, labels drawn from
+/// `Bernoulli(sigmoid(x . w_true - 0.5))` with a sparse `w_true` — the
+/// same recipe as [`crate::data::make_covtype_like`], but **never
+/// materialized**.  Memory is `O(d)` no matter how many rows, so this
+/// is the 10M-row workload of the subsampling acceptance tests.
+#[derive(Debug, Clone)]
+pub struct SyntheticLogisticStream {
+    seed: u64,
+    n: usize,
+    d: usize,
+    w_true: Vec<f64>,
+}
+
+impl SyntheticLogisticStream {
+    /// Build the virtual dataset: draws `w_true` (each coordinate a
+    /// unit normal with probability 0.3, else exactly zero) from
+    /// `seed` and records the row-generation seed.  No rows are
+    /// generated here.
+    pub fn new(seed: u64, n: usize, d: usize) -> SyntheticLogisticStream {
+        assert!(n > 0 && d > 0, "SyntheticLogisticStream: empty shape");
+        let mut rng = Rng::new(seed ^ 0xC0FF_EE00_D15E_A5E5);
+        let w_true: Vec<f64> = (0..d)
+            .map(|_| if rng.bernoulli(0.3) { rng.normal() } else { 0.0 })
+            .collect();
+        SyntheticLogisticStream { seed, n, d, w_true }
+    }
+
+    /// The generating weight vector (for posterior-recovery checks).
+    pub fn w_true(&self) -> &[f64] {
+        &self.w_true
+    }
+}
+
+impl RowLoader for SyntheticLogisticStream {
+    fn num_rows(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn load_row(&self, i: usize, x_out: &mut [f64]) -> f64 {
+        assert!(i < self.n, "row index {i} out of range (n = {})", self.n);
+        assert_eq!(x_out.len(), self.d, "row buffer must have length d");
+        // a private xoshiro stream per row: splitmix over (seed, i)
+        // gives independent, order-free row generation
+        let mut rng = Rng::new(
+            self.seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        rng.fill_normal(x_out);
+        let logit: f64 = x_out
+            .iter()
+            .zip(&self.w_true)
+            .map(|(a, b)| a * b)
+            .sum::<f64>()
+            - 0.5;
+        if rng.bernoulli(sigmoid(logit)) {
+            1.0
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A [`RowLoader`] over an already-materialized row-major matrix —
+/// the bridge from [`crate::data::make_covtype_like`]-style datasets
+/// (and the tool for full-batch-equivalence tests, where the same
+/// rows must reach both the plain and the subsampled model).
+#[derive(Debug, Clone)]
+pub struct InMemoryRows {
+    /// row-major (n, d)
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl InMemoryRows {
+    pub fn new(x: Vec<f64>, y: Vec<f64>, n: usize, d: usize) -> InMemoryRows {
+        assert_eq!(x.len(), n * d, "InMemoryRows: x must be n x d");
+        assert_eq!(y.len(), n, "InMemoryRows: y must have n rows");
+        InMemoryRows { x, y, n, d }
+    }
+}
+
+impl RowLoader for InMemoryRows {
+    fn num_rows(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn load_row(&self, i: usize, x_out: &mut [f64]) -> f64 {
+        x_out.copy_from_slice(&self.x[i * self.d..(i + 1) * self.d]);
+        self.y[i]
+    }
+}
+
+/// Everything needed to resume a [`MinibatchScheduler`]
+/// bitwise-identically: the epoch counter, the position within the
+/// epoch's permutation, and the RNG state snapshotted at the **start**
+/// of the epoch (before its shuffle) — replaying the shuffle from that
+/// state rebuilds the identical permutation, so a restored scheduler
+/// serves the exact index sequence the original would have.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SubsampleCursor {
+    pub epoch: u64,
+    pub pos: usize,
+    pub rng_s: [u64; 4],
+    pub rng_spare: Option<f64>,
+}
+
+/// Deterministic epoch-shuffling minibatch scheduler (see the module
+/// docs for the contract).  Drive it with [`MinibatchScheduler::next_batch`];
+/// snapshot/restore with [`MinibatchScheduler::cursor`] /
+/// [`MinibatchScheduler::from_cursor`].
+#[derive(Debug, Clone)]
+pub struct MinibatchScheduler {
+    total: usize,
+    batch: usize,
+    /// this epoch's permutation of `0..total`
+    perm: Vec<usize>,
+    /// next unread offset into `perm`
+    pos: usize,
+    epoch: u64,
+    rng: Rng,
+    /// RNG state at the start of the current epoch (pre-shuffle)
+    epoch_state: ([u64; 4], Option<f64>),
+}
+
+impl MinibatchScheduler {
+    /// Build a scheduler over `total` rows serving batches of `batch`,
+    /// drawing its shuffles from `rng` (hand it a dedicated
+    /// [`Rng::split`] stream so subsampling never perturbs the SVI
+    /// noise sequence).  When `batch == total` the scheduler is the
+    /// **identity**: no shuffle is performed and the RNG is never
+    /// advanced, so full-batch runs are bitwise-identical to the
+    /// non-subsampled path.
+    pub fn new(total: usize, batch: usize, rng: Rng) -> MinibatchScheduler {
+        assert!(
+            batch > 0 && batch <= total,
+            "MinibatchScheduler: need 0 < batch ({batch}) <= total ({total})"
+        );
+        let mut s = MinibatchScheduler {
+            total,
+            batch,
+            perm: (0..total).collect(),
+            pos: 0,
+            epoch: 0,
+            rng,
+            epoch_state: ([0; 4], None),
+        };
+        s.begin_epoch();
+        s
+    }
+
+    /// Snapshot the RNG, reset the permutation to identity, and (unless
+    /// full-batch) shuffle it — the one place randomness enters, and
+    /// exactly what [`MinibatchScheduler::from_cursor`] replays.
+    fn begin_epoch(&mut self) {
+        self.epoch_state = self.rng.state();
+        self.pos = 0;
+        for (i, p) in self.perm.iter_mut().enumerate() {
+            *p = i;
+        }
+        if self.batch < self.total {
+            self.rng.shuffle(&mut self.perm);
+        }
+    }
+
+    /// The next minibatch of row indices.  Consecutive windows of the
+    /// epoch's permutation; when fewer than `batch` indices remain the
+    /// ragged tail is dropped and a fresh epoch begins.
+    pub fn next_batch(&mut self) -> &[usize] {
+        if self.pos + self.batch > self.total {
+            self.epoch += 1;
+            self.begin_epoch();
+        }
+        let b = &self.perm[self.pos..self.pos + self.batch];
+        self.pos += self.batch;
+        b
+    }
+
+    /// Completed-epoch counter (0 while serving the first epoch).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Minibatch size `B`.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Population size `N`.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Number of batches served per epoch (`floor(N / B)`).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.total / self.batch
+    }
+
+    /// Snapshot the resume state (see [`SubsampleCursor`]).
+    pub fn cursor(&self) -> SubsampleCursor {
+        SubsampleCursor {
+            epoch: self.epoch,
+            pos: self.pos,
+            rng_s: self.epoch_state.0,
+            rng_spare: self.epoch_state.1,
+        }
+    }
+
+    /// Rebuild a scheduler mid-stream from a [`SubsampleCursor`]:
+    /// restores the epoch-start RNG state, replays the epoch's shuffle,
+    /// and seeks to the recorded position — the resumed scheduler's
+    /// index sequence is bitwise-identical to the original's.
+    pub fn from_cursor(total: usize, batch: usize, cur: &SubsampleCursor) -> MinibatchScheduler {
+        let rng = Rng::from_state(cur.rng_s, cur.rng_spare);
+        let mut s = MinibatchScheduler::new(total, batch, rng);
+        s.epoch = cur.epoch;
+        s.pos = cur.pos;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_stream_rows_are_deterministic_and_order_free() {
+        let s = SyntheticLogisticStream::new(9, 1000, 4);
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        let ya = s.load_row(777, &mut a);
+        // touching other rows in between must not change row 777
+        let _ = s.load_row(3, &mut b);
+        let _ = s.load_row(999, &mut b);
+        let yb = s.load_row(777, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(ya, yb);
+        assert!(ya == 0.0 || ya == 1.0);
+    }
+
+    #[test]
+    fn synthetic_stream_labels_correlate_with_truth() {
+        let s = SyntheticLogisticStream::new(4, 4000, 6);
+        let mut x = vec![0.0; 6];
+        let (mut mp, mut np, mut mn, mut nn) = (0.0, 0.0, 0.0, 0.0);
+        for i in 0..s.num_rows() {
+            let y = s.load_row(i, &mut x);
+            let score: f64 = x.iter().zip(s.w_true()).map(|(a, b)| a * b).sum();
+            if y > 0.5 {
+                mp += score;
+                np += 1.0;
+            } else {
+                mn += score;
+                nn += 1.0;
+            }
+        }
+        assert!(np > 0.0 && nn > 0.0);
+        assert!(mp / np > mn / nn + 0.3, "{} vs {}", mp / np, mn / nn);
+    }
+
+    #[test]
+    fn scheduler_epoch_is_a_permutation_and_deterministic() {
+        let n = 20;
+        let mut s1 = MinibatchScheduler::new(n, 5, Rng::new(3));
+        let mut s2 = MinibatchScheduler::new(n, 5, Rng::new(3));
+        let mut seen = vec![false; n];
+        for _ in 0..4 {
+            let b1: Vec<usize> = s1.next_batch().to_vec();
+            let b2: Vec<usize> = s2.next_batch().to_vec();
+            assert_eq!(b1, b2);
+            for &i in &b1 {
+                assert!(!seen[i], "row {i} repeated within an epoch");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "epoch did not cover every row");
+        assert_eq!(s1.epoch(), 0);
+        let _ = s1.next_batch();
+        assert_eq!(s1.epoch(), 1);
+    }
+
+    #[test]
+    fn full_batch_scheduler_is_identity_and_rng_free() {
+        let mut rng = Rng::new(7);
+        let before = rng.state();
+        let mut s = MinibatchScheduler::new(6, 6, rng);
+        for _ in 0..3 {
+            assert_eq!(s.next_batch(), &[0, 1, 2, 3, 4, 5]);
+        }
+        // the scheduler never consumed randomness
+        assert_eq!(s.cursor().rng_s, before.0);
+    }
+
+    #[test]
+    fn ragged_tail_is_dropped() {
+        let mut s = MinibatchScheduler::new(10, 3, Rng::new(1));
+        assert_eq!(s.batches_per_epoch(), 3);
+        for _ in 0..3 {
+            assert_eq!(s.next_batch().len(), 3);
+        }
+        assert_eq!(s.epoch(), 0);
+        let _ = s.next_batch(); // tail of 1 dropped; epoch rolls
+        assert_eq!(s.epoch(), 1);
+    }
+
+    #[test]
+    fn cursor_resume_is_bitwise_identical() {
+        let mut a = MinibatchScheduler::new(50, 7, Rng::new(11));
+        for _ in 0..10 {
+            let _ = a.next_batch();
+        }
+        let cur = a.cursor();
+        let mut b = MinibatchScheduler::from_cursor(50, 7, &cur);
+        for _ in 0..30 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+    }
+}

@@ -51,6 +51,14 @@
 //!    bitwise-equality `ensure!` against the single-program
 //!    `BatchTape` path (`tiled_bitwise_equal`), plus the per-lane cost
 //!    ratio K=512 vs K=8 (`per_lane_ratio_512_vs_8`, target < 2x).
+//! 8. **subsampling** ([`crate::coordinator::run_svi_subsampled`]):
+//!    minibatch SVI throughput on the streaming synthetic logistic
+//!    dataset ([`crate::data::SyntheticLogisticStream`] — rows
+//!    generated on demand, never materialized), reported as
+//!    `rows_per_sec` (minibatch rows consumed per wall-clock second)
+//!    and ms/step, gated by a bitwise-equality `ensure!` that the
+//!    `B = N` subsampled run reproduces the plain full-batch SVI path
+//!    exactly (`full_batch_bitwise_equal`).
 //!
 //! Results are written as machine-readable JSON (`BENCH_native.json` at
 //! the repo root by default) so the perf trajectory is diffable across
@@ -983,6 +991,110 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
         jobj(fields)
     };
 
+    // --- subsampling: minibatch SVI over streaming data ---
+    // Throughput of the minibatch engine on the on-demand synthetic
+    // logistic stream (resident memory O(B*D) regardless of N), plus
+    // the identity gate: B = N through the subsampled path must be
+    // bitwise equal to the plain full-batch SVI path.
+    let subsampling_json = {
+        use crate::compile::SubsampledLogistic;
+        use crate::coordinator::run_svi_subsampled;
+        use crate::data::{InMemoryRows, SyntheticLogisticStream};
+
+        report.push_str("== subsampling (minibatch SVI, streaming data) ==\n");
+
+        // identity gate first: it is the correctness contract the
+        // throughput number rests on
+        let (gn, gd) = (200, 4);
+        let gset = data::make_covtype_like(settings.seed ^ 0x5B5A, gn, gd);
+        let gopts = SviOptions {
+            num_steps: if settings.quick { 40 } else { 120 },
+            num_particles: 8,
+            lr: 0.05,
+            seed: settings.seed,
+            optimizer: OptimKind::Adam,
+            schedule: StepSchedule::Constant,
+            vectorize_particles: true,
+            convergence: None,
+            tail_average: 0.0,
+        };
+        let full_model = LogisticModel {
+            x: gset.x.clone(),
+            y: gset.y.clone(),
+            n: gn,
+            d: gd,
+        };
+        let sub_model =
+            SubsampledLogistic::new(InMemoryRows::new(gset.x, gset.y, gn, gd), gn);
+        let (_, full_fit) = run_svi_native(&full_model, &gopts)?;
+        let (_, sub_fit) = run_svi_subsampled(&sub_model, &gopts)?;
+        let full_batch_equal = full_fit
+            .elbo_trace
+            .iter()
+            .zip(&sub_fit.elbo_trace)
+            .all(|(a, b)| a.to_bits() == b.to_bits())
+            && full_fit
+                .guide
+                .params()
+                .iter()
+                .zip(sub_fit.guide.params())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        anyhow::ensure!(
+            full_batch_equal,
+            "subsampled SVI with B = N diverged bitwise from the plain full-batch path — \
+             the minibatch machinery must be invisible at full batch"
+        );
+        report.push_str(&format!(
+            "  identity gate (n={gn} d={gd}, B=N): bitwise equal to full-batch path: \
+             {full_batch_equal}\n"
+        ));
+
+        // throughput: streaming synthetic logistic, minibatch B per step
+        let (rows, dim_s, batch) = if settings.quick {
+            (100_000, 8, 256)
+        } else {
+            (1_000_000, 8, 1024)
+        };
+        let steps = if settings.quick { 40 } else { 150 };
+        let loader = SyntheticLogisticStream::new(settings.seed ^ 0x10C1, rows, dim_s);
+        let model = SubsampledLogistic::new(loader, batch);
+        let opts = SviOptions {
+            num_steps: steps,
+            num_particles: 8,
+            lr: 0.02,
+            seed: settings.seed,
+            optimizer: OptimKind::Adam,
+            schedule: StepSchedule::Constant,
+            vectorize_particles: true,
+            convergence: None,
+            tail_average: 0.0,
+        };
+        let t0 = std::time::Instant::now();
+        let (_, fit) = run_svi_subsampled(&model, &opts)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        let ms_per_step = 1e3 * wall_s / fit.steps.max(1) as f64;
+        let rows_per_sec = (fit.steps * batch) as f64 / wall_s.max(1e-12);
+        report.push_str(&format!(
+            "  streaming logistic N={rows} D={dim_s} B={batch}: {} steps in {wall_s:.3}s \
+             -> {ms_per_step:.3} ms/step, {rows_per_sec:.0} rows/s (scale N/B = {:.0})\n\n",
+            fit.steps,
+            rows as f64 / batch as f64
+        ));
+        jobj(vec![
+            ("model", Json::Str("logistic_stream".to_string())),
+            ("rows", jnum(rows as f64)),
+            ("d", jnum(dim_s as f64)),
+            ("batch", jnum(batch as f64)),
+            ("particles", jnum(8.0)),
+            ("steps", jnum(fit.steps as f64)),
+            ("wall_s", jnum(wall_s)),
+            ("ms_per_step", jnum(ms_per_step)),
+            ("rows_per_sec", jnum(rows_per_sec)),
+            ("likelihood_scale", jnum(rows as f64 / batch as f64)),
+            ("full_batch_bitwise_equal", Json::Bool(full_batch_equal)),
+        ])
+    };
+
     // --- lane scaling: the tiled massive-lane engine ---
     // ms/leapfrog-per-lane of the two-level (tile-per-thread x
     // micro-lane SIMD) engine across the K sweep, with a bitwise
@@ -1149,6 +1261,7 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
             ("frozen_vs_replay".to_string(), Json::Obj(frozen_rows)),
             ("robustness_overhead".to_string(), robustness_json),
             ("svi_native".to_string(), svi_json),
+            ("subsampling".to_string(), subsampling_json),
             ("lane_scaling".to_string(), lane_scaling_json),
             ("models".to_string(), Json::Obj(models)),
         ]

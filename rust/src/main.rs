@@ -62,6 +62,14 @@ SUBCOMMANDS
                             (--checkpoint/--resume/--checkpoint-every/
                              --max-seconds); non-finite ELBO steps are skipped
                             with learning-rate backoff, never propagated.
+                            Subsampling (--model logistic only): --subsample-size
+                            B fits minibatches of B rows per ELBO step with the
+                            N/B likelihood scale correction (Pyro plate
+                            semantics; B = N is bitwise-identical to the
+                            full-batch path).  --rows N [--dim D] swaps the
+                            in-memory dataset for a streaming synthetic
+                            logistic dataset of N rows generated on the fly —
+                            memory stays O(B*D) even at N = 10,000,000.
                             Needs no artifacts and no pjrt feature.
   experiment table2a        Table 2a: ms/leapfrog across architectures (--model hmm|covtype)
   experiment fig2b          Fig 2b: SKIM ms/effective-sample vs p
@@ -555,6 +563,10 @@ fn cmd_svi_model(args: &Args, settings: &Settings) -> Result<()> {
         optimizer.name(),
         settings.seed
     );
+    let subsample = args.get_usize("subsample-size")?;
+    if subsample.is_some() && name != "logistic" {
+        bail!("--subsample-size is only supported for --model logistic");
+    }
     match name {
         "eight-schools" => {
             svi_fit_and_report(&EightSchools::classic(), &opts, &ckpt, args, settings)
@@ -564,8 +576,34 @@ fn cmd_svi_model(args: &Args, settings: &Settings) -> Result<()> {
             svi_fit_and_report(&model, &opts, &ckpt, args, settings)
         }
         "logistic" => {
+            use fugue::compile::SubsampledLogistic;
+            use fugue::data::{InMemoryRows, RowLoader, SyntheticLogisticStream};
+            // --rows switches to the streaming synthetic dataset: rows
+            // are generated on demand, so the full matrix never exists
+            if let Some(rows) = args.get_usize("rows")? {
+                let d = args.get_usize("dim")?.unwrap_or(8);
+                let batch = subsample
+                    .context("--rows needs --subsample-size (streaming data is minibatch-only)")?;
+                let loader = SyntheticLogisticStream::new(settings.seed, rows, d);
+                println!(
+                    "streaming synthetic logistic: {rows} rows x {d} dims, minibatch {batch} \
+                     (resident: {} floats)",
+                    batch * (d + 1)
+                );
+                let model = SubsampledLogistic::new(loader, batch);
+                return svi_fit_and_report_subsampled(&model, &opts, &ckpt, args, settings);
+            }
             let (n, d) = (500, 8);
             let dset = fugue::data::make_covtype_like(settings.seed, n, d);
+            if let Some(batch) = subsample {
+                let loader = InMemoryRows::new(dset.x, dset.y, n, d);
+                println!(
+                    "subsampled logistic: {n} rows, minibatch {batch} (scale {:.2})",
+                    loader.num_rows() as f64 / batch as f64
+                );
+                let model = SubsampledLogistic::new(loader, batch);
+                return svi_fit_and_report_subsampled(&model, &opts, &ckpt, args, settings);
+            }
             let model = LogisticModel {
                 x: dset.x,
                 y: dset.y,
@@ -587,7 +625,6 @@ fn svi_fit_and_report<M: fugue::compile::EffModel + Clone + Send>(
     settings: &Settings,
 ) -> Result<()> {
     use fugue::coordinator::{run_svi_checkpointed, run_svi_native};
-    use fugue::svi::posterior_predictive_draws;
 
     let contained = ckpt.path.is_some() || ckpt.max_seconds.is_some();
     let (layout, result) = if contained {
@@ -595,6 +632,40 @@ fn svi_fit_and_report<M: fugue::compile::EffModel + Clone + Send>(
     } else {
         run_svi_native(model, opts)?
     };
+    svi_report(model, &layout, &result, opts, ckpt, args, settings)
+}
+
+/// [`svi_fit_and_report`] for subsampled models: same reporting, but
+/// the fit swaps minibatches into the frozen potential every step.
+fn svi_fit_and_report_subsampled<M: fugue::compile::SubsampledModel + Clone + Send>(
+    model: &M,
+    opts: &fugue::svi::SviOptions,
+    ckpt: &fugue::coordinator::CheckpointConfig,
+    args: &Args,
+    settings: &Settings,
+) -> Result<()> {
+    use fugue::coordinator::{run_svi_subsampled, run_svi_subsampled_checkpointed};
+
+    let contained = ckpt.path.is_some() || ckpt.max_seconds.is_some();
+    let (layout, result) = if contained {
+        run_svi_subsampled_checkpointed(model, opts, ckpt)?
+    } else {
+        run_svi_subsampled(model, opts)?
+    };
+    svi_report(model, &layout, &result, opts, ckpt, args, settings)
+}
+
+fn svi_report<M: fugue::compile::EffModel + Clone>(
+    model: &M,
+    layout: &fugue::compile::SiteLayout,
+    result: &fugue::svi::NativeSviResult,
+    opts: &fugue::svi::SviOptions,
+    ckpt: &fugue::coordinator::CheckpointConfig,
+    args: &Args,
+    settings: &Settings,
+) -> Result<()> {
+    use fugue::svi::posterior_predictive_draws;
+
     let chunk = (result.steps / 6).max(1);
     for (i, c) in result.elbo_trace.chunks(chunk).enumerate() {
         let mean = c.iter().sum::<f64>() / c.len() as f64;
@@ -637,13 +708,13 @@ fn svi_fit_and_report<M: fugue::compile::EffModel + Clone + Send>(
     // posterior summary from the fitted guide, in the constrained space
     let dim = layout.dim;
     let mut rng = fugue::rng::Rng::new(settings.seed ^ 0x5A17);
-    let draws = result.guide.posterior_draws(&layout, &mut rng, 2000);
+    let draws = result.guide.posterior_draws(layout, &mut rng, 2000);
     let spans = layout.param_spans();
     let rows = summarize(std::slice::from_ref(&draws), dim, &spans);
     println!("{}", render_table(&rows));
 
     if let Some(n) = args.get_usize("predictive")? {
-        let pred = posterior_predictive_draws(model, &layout, &result.guide, settings.seed, n);
+        let pred = posterior_predictive_draws(model, layout, &result.guide, settings.seed, n);
         println!("posterior predictive ({n} replicates per observation site):");
         for (i, (site, vals)) in pred.iter().enumerate() {
             if i == 8 {

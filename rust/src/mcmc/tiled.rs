@@ -182,6 +182,14 @@ impl<BP: BatchPotential + Send> TiledBatchPotential<BP> {
     pub fn threads(&self) -> usize {
         self.max_threads.min(self.tiles.len()).max(1)
     }
+
+    /// Mutable access to the per-tile potentials (lane order) — the
+    /// hook that lets cross-cutting operations (e.g. the subsample
+    /// minibatch rebind in [`crate::compile::batch_potential`]) fan
+    /// out over every tile's own program.
+    pub fn tiles_mut(&mut self) -> &mut [BP] {
+        &mut self.tiles
+    }
 }
 
 /// Copy tile `t`'s lanes out of a lane-minor K-wide array into the
@@ -309,6 +317,69 @@ mod tests {
         assert_eq!(auto_tile_width(64, 4), 16);
         assert_eq!(auto_tile_width(65, 4), 24); // 17 → next multiple of 8
         assert_eq!(auto_tile_width(5, 64), 5);
+    }
+
+    /// Degenerate-case audit (K < MICRO_LANES, K = 1, K around the
+    /// micro-lane and typical tile boundaries): pin the exact
+    /// partitions so neither helper can regress into a panic, an empty
+    /// tile, or a lost lane.
+    #[test]
+    fn partition_pins_for_degenerate_lane_counts() {
+        use crate::autodiff::MICRO_LANES;
+        assert_eq!(MICRO_LANES, 8, "pins below assume 8-wide micro-lanes");
+
+        // auto width at 8 worker threads (the common CI shape)
+        assert_eq!(auto_tile_width(1, 8), 1);
+        assert_eq!(auto_tile_width(7, 8), 7); // never wider than K
+        assert_eq!(auto_tile_width(8, 8), 8);
+        assert_eq!(auto_tile_width(9, 8), 8);
+        assert_eq!(auto_tile_width(63, 8), 8);
+        assert_eq!(auto_tile_width(64, 8), 8);
+        assert_eq!(auto_tile_width(65, 8), 16); // 9 → next multiple of 8
+
+        // partitions at that auto width
+        assert_eq!(tile_partition(1, auto_tile_width(1, 8)), vec![1]);
+        assert_eq!(tile_partition(7, auto_tile_width(7, 8)), vec![7]);
+        assert_eq!(tile_partition(8, auto_tile_width(8, 8)), vec![8]);
+        assert_eq!(tile_partition(9, auto_tile_width(9, 8)), vec![8, 1]);
+        assert_eq!(
+            tile_partition(63, auto_tile_width(63, 8)),
+            vec![8, 8, 8, 8, 8, 8, 8, 7]
+        );
+        assert_eq!(tile_partition(64, auto_tile_width(64, 8)), vec![8; 8]);
+        assert_eq!(
+            tile_partition(65, auto_tile_width(65, 8)),
+            vec![16, 16, 16, 16, 1]
+        );
+
+        // threads > num_tiles: the worker count clamps to the tile
+        // count instead of spawning idle threads
+        let tiles: Vec<ScalarLanes<Bowl>> = tile_partition(7, 8)
+            .into_iter()
+            .map(|w| ScalarLanes::new(vec![Bowl; w]))
+            .collect();
+        let pot = TiledBatchPotential::new(tiles).with_threads(64);
+        assert_eq!(pot.num_tiles(), 1);
+        assert_eq!(pot.threads(), 1);
+
+        // single worker: one tile spanning all K, no rounding overflow
+        assert_eq!(auto_tile_width(65, 1), 65);
+        assert_eq!(tile_partition(65, 65), vec![65]);
+
+        // invariants across the audit range: total preserved, no empty
+        // tiles, every non-final tile full
+        for k in [1usize, 7, 8, 9, 63, 64, 65] {
+            for threads in [1usize, 2, 8, 64] {
+                let w = auto_tile_width(k, threads);
+                let parts = tile_partition(k, w);
+                assert_eq!(parts.iter().sum::<usize>(), k, "K={k} threads={threads}");
+                assert!(parts.iter().all(|&p| p > 0), "empty tile at K={k}");
+                assert!(
+                    parts[..parts.len() - 1].iter().all(|&p| p == w),
+                    "non-final ragged tile at K={k} threads={threads}"
+                );
+            }
+        }
     }
 
     /// Every (tile width, thread count) configuration is bitwise-equal

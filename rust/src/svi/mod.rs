@@ -31,6 +31,7 @@ pub mod guide;
 pub mod native;
 pub mod optim;
 pub mod predictive;
+pub mod subsample;
 
 pub use elbo::ReparamElbo;
 pub use guide::MeanFieldGuide;
@@ -38,6 +39,7 @@ pub use native::{
     BatchedParticles, Convergence, ElboEngine, NativeSvi, NativeSviResult, ScalarParticles,
     SviCursor, SviOptions, MAX_CONSECUTIVE_SKIPS,
 };
+pub use subsample::{scheduler_rng, SubsampledBatchedParticles, SubsampledScalarParticles};
 pub use optim::{Adam, OptimKind, Optimizer, SgdMomentum, StepSchedule};
 pub use predictive::{posterior_predictive_draws, posterior_predictive_trace, StripObserved};
 

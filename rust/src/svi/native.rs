@@ -15,6 +15,7 @@
 
 use anyhow::{ensure, Result};
 
+use crate::data::stream::SubsampleCursor;
 use crate::mcmc::{BatchPotential, Potential};
 use crate::rng::Rng;
 use crate::svi::elbo::ReparamElbo;
@@ -35,6 +36,17 @@ pub trait ElboEngine {
         rng: &mut Rng,
         grad: &mut [f64],
     ) -> f64;
+
+    /// Resume state of the engine's minibatch scheduler, when the
+    /// engine subsamples ([`crate::svi::subsample`]); `None` for the
+    /// full-batch engines, and the checkpoint omits the field.
+    fn subsample_cursor(&self) -> Option<SubsampleCursor> {
+        None
+    }
+
+    /// Restore the minibatch scheduler from a checkpointed cursor
+    /// (no-op for full-batch engines).
+    fn restore_subsample(&mut self, _cur: &SubsampleCursor) {}
 }
 
 /// K particles evaluated one scalar [`Potential`] call at a time —
@@ -213,6 +225,10 @@ pub struct SviCursor {
     pub avg_count: u64,
     pub backoff: f64,
     pub skipped: u64,
+    /// Minibatch-scheduler resume state (`None` for full-batch runs —
+    /// absent from, and backward-compatible with, pre-subsampling
+    /// checkpoints).
+    pub subsample: Option<SubsampleCursor>,
 }
 
 impl NativeSviResult {
@@ -382,6 +398,7 @@ impl<E: ElboEngine> NativeSvi<E> {
             avg_count: self.avg_count,
             backoff: self.backoff,
             skipped: self.skipped,
+            subsample: self.engine.subsample_cursor(),
         }
     }
 
@@ -414,6 +431,9 @@ impl<E: ElboEngine> NativeSvi<E> {
         self.backoff = cur.backoff;
         self.skipped = cur.skipped;
         self.consec_skips = 0;
+        if let Some(sc) = &cur.subsample {
+            self.engine.restore_subsample(sc);
+        }
         Ok(())
     }
 

@@ -1,0 +1,137 @@
+//! Minibatch (subsampled) ELBO engines: the SVI half of the
+//! Pyro-`plate(subsample_size)` contract (ROADMAP open item 4).
+//!
+//! Each engine wraps a full-batch particle backend with a
+//! [`MinibatchScheduler`]: every step draws the next index window,
+//! swaps it into the compiled potential via
+//! [`SubsampleRebind::set_minibatch`] (a few `copy_from_slice` calls
+//! into the frozen tape's data slots — **no re-recording, no
+//! re-freezing**), and evaluates the ordinary reparameterized ELBO.
+//! Because the compiled model scales its minibatch likelihood by
+//! `N/B`, the step's ELBO gradient is an unbiased estimator of the
+//! full-batch gradient over the scheduler's uniform minibatches —
+//! pinned numerically in `rust/tests/subsampling.rs`.
+//!
+//! The scheduler draws from its **own** xoshiro stream
+//! ([`scheduler_rng`], split off the run seed), so the eps noise
+//! sequence is identical with and without subsampling; with `B == N`
+//! the scheduler is the identity and never consumes randomness, making
+//! the full-batch subsampled run bitwise equal to the plain SVI path.
+
+use crate::compile::SubsampleRebind;
+use crate::data::stream::{MinibatchScheduler, SubsampleCursor};
+use crate::mcmc::{BatchPotential, Potential};
+use crate::rng::Rng;
+use crate::svi::elbo::ReparamElbo;
+use crate::svi::native::ElboEngine;
+
+/// The dedicated RNG stream for minibatch scheduling, split off the
+/// run seed: deterministic per seed, independent of the eps stream
+/// (`Rng::new(seed)`) the SVI driver itself consumes.
+pub fn scheduler_rng(seed: u64) -> Rng {
+    let mut base = Rng::new(seed);
+    base.split(0x5B5A_11CE)
+}
+
+/// Minibatch particles evaluated one scalar [`Potential`] call at a
+/// time — [`crate::svi::ScalarParticles`] plus a per-step minibatch
+/// swap.
+pub struct SubsampledScalarParticles<P: Potential + SubsampleRebind> {
+    pot: P,
+    elbo: ReparamElbo,
+    sched: MinibatchScheduler,
+}
+
+impl<P: Potential + SubsampleRebind> SubsampledScalarParticles<P> {
+    pub fn new(pot: P, particles: usize, sched: MinibatchScheduler) -> Self {
+        let dim = pot.dim();
+        SubsampledScalarParticles {
+            pot,
+            elbo: ReparamElbo::new(dim, particles),
+            sched,
+        }
+    }
+}
+
+impl<P: Potential + SubsampleRebind> ElboEngine for SubsampledScalarParticles<P> {
+    fn dim(&self) -> usize {
+        self.elbo.dim()
+    }
+
+    fn particles(&self) -> usize {
+        self.elbo.particles()
+    }
+
+    fn elbo_and_grad(
+        &mut self,
+        loc: &[f64],
+        log_scale: &[f64],
+        rng: &mut Rng,
+        grad: &mut [f64],
+    ) -> f64 {
+        let idx = self.sched.next_batch();
+        self.pot.set_minibatch(idx);
+        self.elbo
+            .value_and_grad_scalar(&mut self.pot, loc, log_scale, rng, grad)
+    }
+
+    fn subsample_cursor(&self) -> Option<SubsampleCursor> {
+        Some(self.sched.cursor())
+    }
+
+    fn restore_subsample(&mut self, cur: &SubsampleCursor) {
+        self.sched = MinibatchScheduler::from_cursor(self.sched.total(), self.sched.batch(), cur);
+    }
+}
+
+/// Minibatch particles in one fused lane-minor [`BatchPotential`]
+/// sweep per step — [`crate::svi::BatchedParticles`] plus a per-step
+/// minibatch swap (the swap is lane-shared: one rebind serves all K
+/// particle lanes, and every tile of a tiled potential).
+pub struct SubsampledBatchedParticles<BP: BatchPotential + SubsampleRebind> {
+    pot: BP,
+    elbo: ReparamElbo,
+    sched: MinibatchScheduler,
+}
+
+impl<BP: BatchPotential + SubsampleRebind> SubsampledBatchedParticles<BP> {
+    pub fn new(pot: BP, sched: MinibatchScheduler) -> Self {
+        let (dim, lanes) = (pot.dim(), pot.lanes());
+        SubsampledBatchedParticles {
+            pot,
+            elbo: ReparamElbo::new(dim, lanes),
+            sched,
+        }
+    }
+}
+
+impl<BP: BatchPotential + SubsampleRebind> ElboEngine for SubsampledBatchedParticles<BP> {
+    fn dim(&self) -> usize {
+        self.elbo.dim()
+    }
+
+    fn particles(&self) -> usize {
+        self.elbo.particles()
+    }
+
+    fn elbo_and_grad(
+        &mut self,
+        loc: &[f64],
+        log_scale: &[f64],
+        rng: &mut Rng,
+        grad: &mut [f64],
+    ) -> f64 {
+        let idx = self.sched.next_batch();
+        self.pot.set_minibatch(idx);
+        self.elbo
+            .value_and_grad_batched(&mut self.pot, loc, log_scale, rng, grad)
+    }
+
+    fn subsample_cursor(&self) -> Option<SubsampleCursor> {
+        Some(self.sched.cursor())
+    }
+
+    fn restore_subsample(&mut self, cur: &SubsampleCursor) {
+        self.sched = MinibatchScheduler::from_cursor(self.sched.total(), self.sched.batch(), cur);
+    }
+}

@@ -1,0 +1,319 @@
+//! Integration tests for minibatch (subsampled) SVI: the Pyro
+//! `plate(subsample_size)` contract over frozen tape programs.
+//!
+//! Pins the three contracts the subsampling engine rests on:
+//!
+//! 1. **Full-batch identity**: `B = N` through the subsampled path is
+//!    bitwise identical to the plain SVI path on the equivalent model —
+//!    the minibatch machinery (scheduler, data slots, scale node) must
+//!    be invisible at full batch, on both particle backends.
+//! 2. **Unbiasedness**: with `B | N`, the epoch average of the scaled
+//!    minibatch ELBO (and its gradient) at fixed reparameterization
+//!    noise equals the full-batch ELBO exactly up to float summation
+//!    order — the N/B scale correction makes every row count once.
+//! 3. **Resume**: the minibatch scheduler's cursor rides the SVI
+//!    checkpoint, so a mid-epoch kill + JSON round-trip + resume walks
+//!    the exact same minibatch sequence as an uninterrupted run.
+//!
+//! Plus the generic `observe_iid` fallback contract at K = 64: an
+//! Exponential-likelihood model (no fused observation composite) must
+//! agree bitwise between the scalar, batched and tiled backends.
+
+use fugue::compile::zoo::LogisticModel;
+use fugue::compile::{
+    compile, compile_batched, tiled_from_layout, DistV, EffModel, ProbCtx, SiteLayout,
+    SubsampleRebind, SubsampledLogistic,
+};
+use fugue::coordinator::{
+    run_svi_native, run_svi_subsampled, run_svi_subsampled_checkpointed, CheckpointConfig,
+};
+use fugue::data::{make_covtype_like, InMemoryRows, MinibatchScheduler, SyntheticLogisticStream};
+use fugue::mcmc::{BatchPotential, Potential};
+use fugue::rng::Rng;
+use fugue::svi::{
+    scheduler_rng, NativeSvi, OptimKind, ReparamElbo, StepSchedule, SubsampledBatchedParticles,
+    SviOptions,
+};
+
+fn svi_opts(steps: usize, particles: usize, vectorize: bool, seed: u64) -> SviOptions {
+    SviOptions {
+        num_steps: steps,
+        num_particles: particles,
+        lr: 0.05,
+        seed,
+        optimizer: OptimKind::Adam,
+        schedule: StepSchedule::Constant,
+        vectorize_particles: vectorize,
+        convergence: None,
+        tail_average: 0.0,
+    }
+}
+
+fn logistic_pair(seed: u64, n: usize, d: usize) -> (LogisticModel, InMemoryRows) {
+    let dset = make_covtype_like(seed, n, d);
+    let full = LogisticModel {
+        x: dset.x.clone(),
+        y: dset.y.clone(),
+        n,
+        d,
+    };
+    (full, InMemoryRows::new(dset.x, dset.y, n, d))
+}
+
+/// Contract 1: the subsampled runner at B = N is bitwise identical to
+/// the plain full-batch runner, on both particle backends.
+#[test]
+fn full_batch_subsampled_run_is_bitwise_identical_to_native_run() {
+    let (full, rows) = logistic_pair(42, 120, 4);
+    let sub = SubsampledLogistic::new(rows, 120);
+    for (particles, vectorize) in [(4usize, true), (2, false), (1, true)] {
+        let opts = svi_opts(50, particles, vectorize, 7);
+        let (_, a) = run_svi_native(&full, &opts).unwrap();
+        let (_, b) = run_svi_subsampled(&sub, &opts).unwrap();
+        assert_eq!(a.steps, b.steps);
+        for (x, y) in a.elbo_trace.iter().zip(&b.elbo_trace) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "ELBO trace diverged (particles={particles} vectorize={vectorize})"
+            );
+        }
+        for (x, y) in a.guide.params().iter().zip(b.guide.params()) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "guide params diverged (particles={particles} vectorize={vectorize})"
+            );
+        }
+    }
+}
+
+/// Contract 2: at fixed reparameterization noise, averaging the scaled
+/// minibatch ELBO gradient over one epoch (B | N, each row visited
+/// exactly once) reproduces the full-batch ELBO gradient to float
+/// summation accuracy.  This is the linearity argument that makes the
+/// minibatch estimator unbiased: E[(N/B) * L_batch] = L_total.
+#[test]
+fn epoch_averaged_minibatch_elbo_gradient_matches_full_batch() {
+    let (n, d, batch) = (96, 4, 16);
+    let (full, rows) = logistic_pair(5, n, d);
+    let sub = SubsampledLogistic::new(rows, batch);
+
+    let mut pot_full = compile(full, 11).unwrap();
+    let mut pot_sub = compile(sub, 11).unwrap();
+    let dim = pot_full.dim();
+
+    let mut elbo = ReparamElbo::new(dim, 1);
+    let mut rng = Rng::new(99);
+    elbo.draw_eps(&mut rng);
+    let eps: Vec<f64> = elbo.eps().to_vec();
+
+    let loc: Vec<f64> = (0..dim).map(|i| 0.05 * (i as f64 + 1.0)).collect();
+    let log_scale = vec![-1.0; dim];
+
+    let mut g_full = vec![0.0; 2 * dim];
+    let v_full = elbo.eval_scalar(&mut pot_full, &loc, &log_scale, &mut g_full);
+
+    let mut sched = MinibatchScheduler::new(n, batch, scheduler_rng(3));
+    let n_batches = sched.batches_per_epoch();
+    assert_eq!(n_batches, n / batch);
+    let mut v_avg = 0.0;
+    let mut g_avg = vec![0.0; 2 * dim];
+    let mut g = vec![0.0; 2 * dim];
+    for _ in 0..n_batches {
+        let idx: Vec<usize> = sched.next_batch().to_vec();
+        pot_sub.set_minibatch(&idx);
+        elbo.set_eps(&eps);
+        let v = elbo.eval_scalar(&mut pot_sub, &loc, &log_scale, &mut g);
+        v_avg += v / n_batches as f64;
+        for (a, b) in g_avg.iter_mut().zip(&g) {
+            *a += b / n_batches as f64;
+        }
+    }
+
+    let tol = 1e-8 * (1.0 + v_full.abs());
+    assert!(
+        (v_avg - v_full).abs() < tol,
+        "epoch-averaged ELBO {v_avg} != full-batch {v_full}"
+    );
+    for i in 0..2 * dim {
+        let tol = 1e-8 * (1.0 + g_full[i].abs());
+        assert!(
+            (g_avg[i] - g_full[i]).abs() < tol,
+            "grad[{i}]: epoch average {} != full batch {}",
+            g_avg[i],
+            g_full[i]
+        );
+    }
+}
+
+/// Contract 3 (engine level): export the cursor mid-epoch, round-trip
+/// it through the checkpoint JSON, import into a fresh engine, and the
+/// resumed run is bitwise identical to the uninterrupted one.
+#[test]
+fn mid_epoch_checkpoint_resume_is_bitwise_identical() {
+    use fugue::coordinator::{load_svi_checkpoint, save_svi_checkpoint};
+
+    let (_, rows) = logistic_pair(21, 64, 3);
+    let model = SubsampledLogistic::new(rows, 16);
+    let opts = svi_opts(30, 4, true, 13);
+    let dim = SiteLayout::trace(&model, 13).unwrap().dim;
+
+    let make_engine = || {
+        let sched = MinibatchScheduler::new(64, 16, scheduler_rng(13));
+        let pot = compile_batched(model.clone(), 13, 4).unwrap();
+        NativeSvi::new(SubsampledBatchedParticles::new(pot, sched), &opts).unwrap()
+    };
+
+    // uninterrupted reference
+    let mut a = make_engine();
+    for _ in 0..30 {
+        a.step();
+    }
+
+    // killed after 13 steps (mid-epoch: 4 batches per epoch), resumed
+    // from the JSON checkpoint
+    let mut b1 = make_engine();
+    for _ in 0..13 {
+        b1.step();
+    }
+    let path = std::env::temp_dir().join("fugue_subsampling_resume_test.json");
+    save_svi_checkpoint(&path, 13, 30, &b1.export_cursor()).unwrap();
+    let cur = load_svi_checkpoint(&path, 13, 30, dim).unwrap();
+    assert!(cur.subsample.is_some(), "subsample cursor missing from checkpoint");
+    let mut b2 = make_engine();
+    b2.import_cursor(&cur).unwrap();
+    for _ in 0..17 {
+        b2.step();
+    }
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(a.elbo_trace().len(), b2.elbo_trace().len());
+    for (x, y) in a.elbo_trace().iter().zip(b2.elbo_trace()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "ELBO trace diverged after resume");
+    }
+    for (x, y) in a.guide().params().iter().zip(b2.guide().params()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "guide params diverged after resume");
+    }
+}
+
+/// Contract 3 (runner level): the checkpointed subsampled runner with a
+/// checkpoint file and no interruption matches the plain subsampled
+/// runner bitwise.
+#[test]
+fn checkpointed_subsampled_runner_matches_plain_runner() {
+    let (_, rows) = logistic_pair(77, 48, 3);
+    let model = SubsampledLogistic::new(rows, 12);
+    let opts = svi_opts(20, 4, true, 5);
+    let path = std::env::temp_dir().join("fugue_subsampling_runner_test.json");
+    let cfg = CheckpointConfig {
+        path: Some(path.clone()),
+        resume: false,
+        every: 6,
+        max_seconds: None,
+    };
+    let (_, plain) = run_svi_subsampled(&model, &opts).unwrap();
+    let (_, checked) = run_svi_subsampled_checkpointed(&model, &opts, &cfg).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(plain.steps, checked.steps);
+    for (x, y) in plain.elbo_trace.iter().zip(&checked.elbo_trace) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    for (x, y) in plain.guide.params().iter().zip(checked.guide.params()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+/// Fixed-memory streaming: SVI over a 10-million-row synthetic logistic
+/// dataset whose rows are generated on demand.  The loader holds O(D)
+/// state and the model O(B*D) staging — the full 10M x D matrix never
+/// exists.  A few steps suffice to pin that the hot path works at this
+/// scale; throughput is the bench's job.
+#[test]
+fn streaming_ten_million_rows_runs_at_fixed_memory() {
+    let loader = SyntheticLogisticStream::new(3, 10_000_000, 4);
+    let model = SubsampledLogistic::new(loader, 64);
+    let opts = svi_opts(3, 2, true, 17);
+    let (_, fit) = run_svi_subsampled(&model, &opts).unwrap();
+    assert_eq!(fit.steps, 3);
+    assert!(
+        fit.elbo_trace.iter().all(|e| e.is_finite()),
+        "non-finite ELBO on the streaming model: {:?}",
+        fit.elbo_trace
+    );
+}
+
+/// Exercises the generic (non-fused) `observe_iid` fallback: an
+/// Exponential likelihood has no fused observation composite, so its
+/// log-probs run lane-wise through the Alg ops and its observed
+/// constants through the data-node registration path.
+#[derive(Clone)]
+struct ExpObs {
+    y: Vec<f64>,
+}
+
+impl EffModel for ExpObs {
+    fn run<C: ProbCtx>(&self, c: &mut C) {
+        let d = c.half_normal(1.0);
+        let rate = c.sample("rate", d);
+        c.observe_iid("y", DistV::Exponential { rate }, &self.y);
+    }
+}
+
+/// Satellite contract: generic `observe_iid` fallback at K = 64 —
+/// scalar, batched and tiled backends agree bitwise per lane, on both
+/// the first (recording) and later (frozen replay) evaluations.
+#[test]
+fn generic_observe_iid_scalar_batched_tiled_bitwise_at_k64() {
+    let k = 64;
+    let model = ExpObs {
+        y: vec![0.5, 1.2, 0.1, 2.3, 0.9],
+    };
+    let layout = SiteLayout::trace(&model, 0).unwrap();
+    let dim = layout.dim;
+    assert_eq!(dim, 1);
+
+    let mut batched = compile_batched(model.clone(), 0, k).unwrap();
+    let mut tiled = tiled_from_layout(&model, &layout, k, 8);
+
+    let mut rng = Rng::new(31);
+    let mut u_b = vec![0.0; k];
+    let mut g_b = vec![0.0; dim * k];
+    let mut u_t = vec![0.0; k];
+    let mut g_t = vec![0.0; dim * k];
+    // round 0 records the tapes; round 1+ replays the frozen programs —
+    // both must match the scalar path bitwise
+    for round in 0..3 {
+        let z: Vec<f64> = (0..dim * k).map(|_| 0.4 * rng.normal()).collect();
+        batched.value_and_grad_batch(&z, &mut u_b, &mut g_b);
+        tiled.value_and_grad_batch(&z, &mut u_t, &mut g_t);
+        for lane in 0..k {
+            let mut pot = compile(model.clone(), 0).unwrap();
+            let zk: Vec<f64> = (0..dim).map(|i| z[i * k + lane]).collect();
+            let mut g_s = vec![0.0; dim];
+            let u_s = pot.value_and_grad(&zk, &mut g_s);
+            assert_eq!(
+                u_s.to_bits(),
+                u_b[lane].to_bits(),
+                "batched U diverged at lane {lane} round {round}"
+            );
+            assert_eq!(
+                u_s.to_bits(),
+                u_t[lane].to_bits(),
+                "tiled U diverged at lane {lane} round {round}"
+            );
+            for i in 0..dim {
+                assert_eq!(
+                    g_s[i].to_bits(),
+                    g_b[i * k + lane].to_bits(),
+                    "batched grad diverged at lane {lane} dim {i} round {round}"
+                );
+                assert_eq!(
+                    g_s[i].to_bits(),
+                    g_t[i * k + lane].to_bits(),
+                    "tiled grad diverged at lane {lane} dim {i} round {round}"
+                );
+            }
+        }
+    }
+}
