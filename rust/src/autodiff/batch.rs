@@ -54,7 +54,7 @@ use crate::ppl::special::{softplus_sigmoid, LN_2PI};
 /// differ per chain) or shared-across-lanes (`CompositeShared`, used by
 /// `sum`/`dot_const` whose partials are data constants).
 #[derive(Debug, Clone, Copy)]
-enum BOp {
+pub(super) enum BOp {
     /// Constant leaf: lane values fixed at record time.
     Leaf,
     /// Differentiable input leaf: lane values rebound on frozen replay.
@@ -87,21 +87,21 @@ enum BOp {
 /// static-structure program.  [`BatchTape::freeze`] clones this into a
 /// [`BatchTapeProgram`].
 #[derive(Debug, Clone, Default)]
-struct BTopology {
-    ops: Vec<BOp>,
-    arena_parents: Vec<u32>,
+pub(super) struct BTopology {
+    pub(super) ops: Vec<BOp>,
+    pub(super) arena_parents: Vec<u32>,
     /// lane-shared composite partials (data constants)
-    arena_shared: Vec<f64>,
+    pub(super) arena_shared: Vec<f64>,
     /// kernel descriptor per composite node, in node order
-    comp_kinds: Vec<CompKind>,
+    pub(super) comp_kinds: Vec<CompKind>,
     /// fused-kernel constant data (observations, known scales)
-    consts: Vec<f64>,
+    pub(super) consts: Vec<f64>,
     /// node ids of input leaves, in record order
-    inputs: Vec<u32>,
+    pub(super) inputs: Vec<u32>,
     /// minibatch-rebindable data spans, in record order
-    data_slots: Vec<DataSlot>,
+    pub(super) data_slots: Vec<DataSlot>,
     /// node ids referenced by [`SlotStore::Nodes`] slots
-    slot_nodes: Vec<u32>,
+    pub(super) slot_nodes: Vec<u32>,
 }
 
 /// K-lane reverse-mode tape (see the module docs).  Build the
@@ -136,7 +136,7 @@ pub struct BatchTape {
 /// `xstart * lanes`.  Lane values are written to `vals` (length
 /// `lanes`); `acc_a`/`acc_b` are lane-sized scratch.
 #[allow(clippy::too_many_arguments)]
-fn batch_composite_forward(
+pub(super) fn batch_composite_forward(
     kind: CompKind,
     lanes: usize,
     pstart: usize,
@@ -1032,11 +1032,11 @@ impl BatchTape {
 /// lane, forward/backward are bitwise identical to a batched (and
 /// therefore scalar) tape replay of the same program.
 pub struct BatchTapeProgram {
-    lanes: usize,
-    topo: BTopology,
-    output: u32,
-    values: Vec<f64>,
-    partials: Vec<f64>,
+    pub(super) lanes: usize,
+    pub(super) topo: BTopology,
+    pub(super) output: u32,
+    pub(super) values: Vec<f64>,
+    pub(super) partials: Vec<f64>,
     adj: Vec<f64>,
     vals: Vec<f64>,
     acc_a: Vec<f64>,

@@ -45,8 +45,10 @@
 //! is present.
 
 pub mod batch;
+pub mod opt;
 
 pub use batch::{BatchTape, BatchTapeProgram, MICRO_LANES};
+pub use opt::{OptBatchTapeProgram, OptTapeProgram, PlanStats};
 
 use crate::ppl::special::{softplus_sigmoid, LN_2PI};
 

@@ -1,0 +1,737 @@
+//! Threaded-code executors for an [`ExecPlan`] — the scalar and
+//! lane-minor batched forward/backward dispatch loops.
+//!
+//! Every arithmetic statement here is a transcription of the matching
+//! interpreter rule (`TapeProgram::forward` / `reverse_sweep` /
+//! `BatchTapeProgram::forward` / `batch_reverse_sweep`) with node rows
+//! replaced by register slots: same expressions, same operand order,
+//! same zero-adjoint skips, same composite kernels
+//! (`scalar_composite_forward` / `batch_composite_forward` are shared,
+//! not reimplemented).  That transcription — plus the plan builder's
+//! guarantee that fused runs preserve recorded op order — is what makes
+//! the optimized path bitwise-identical to interpreted replay.
+//!
+//! Register aliasing is safe by construction: a destination register
+//! may recycle a parent that dies at the same node, and every
+//! elementwise statement reads its operands before writing (per lane),
+//! while composite kernels finish reading before their result is
+//! stored.  Adjoint registers for a node and its parents are always
+//! distinct (a node's register is recycled only after its backward
+//! instruction is emitted).
+
+use super::plan::{BwdInstr, ExecPlan, FwdInstr, MicroOp, NONE};
+use crate::autodiff::batch::{batch_composite_forward, MICRO_LANES};
+use crate::autodiff::{scalar_composite_forward, sigmoid_val, softplus_val};
+
+#[inline(always)]
+fn micro_scalar(m: MicroOp, regs: &mut [f64]) {
+    match m {
+        MicroOp::Add { x, y, d } => regs[d as usize] = regs[x as usize] + regs[y as usize],
+        MicroOp::Sub { x, y, d } => regs[d as usize] = regs[x as usize] - regs[y as usize],
+        MicroOp::Mul { x, y, d } => regs[d as usize] = regs[x as usize] * regs[y as usize],
+        MicroOp::Div { x, y, d } => regs[d as usize] = regs[x as usize] / regs[y as usize],
+        MicroOp::Neg { x, d } => regs[d as usize] = -regs[x as usize],
+        MicroOp::Exp { x, d } => regs[d as usize] = regs[x as usize].exp(),
+        MicroOp::Ln { x, d } => regs[d as usize] = regs[x as usize].ln(),
+        MicroOp::Log1p { x, d } => regs[d as usize] = regs[x as usize].ln_1p(),
+        MicroOp::Sqrt { x, d } => regs[d as usize] = regs[x as usize].sqrt(),
+        MicroOp::Sigmoid { x, d } => regs[d as usize] = sigmoid_val(regs[x as usize]),
+        MicroOp::Softplus { x, d } => regs[d as usize] = softplus_val(regs[x as usize]),
+        MicroOp::Tanh { x, d } => regs[d as usize] = regs[x as usize].tanh(),
+        MicroOp::Powi { x, d, n } => regs[d as usize] = regs[x as usize].powi(n),
+        MicroOp::Scale { x, d, c } => regs[d as usize] = c * regs[x as usize],
+        MicroOp::Offset { x, d, c } => regs[d as usize] = regs[x as usize] + c,
+    }
+}
+
+/// Execute the forward plan on the scalar register file; returns the
+/// output value.  Zero allocations.
+pub(super) fn scalar_forward(
+    plan: &ExecPlan,
+    regs: &mut [f64],
+    partials: &mut [f64],
+    consts: &[f64],
+    inputs: &[f64],
+) -> f64 {
+    debug_assert_eq!(inputs.len(), plan.input_val_slots.len());
+    for (k, &s) in plan.input_val_slots.iter().enumerate() {
+        regs[s as usize] = inputs[k];
+    }
+    for instr in &plan.fwd {
+        match *instr {
+            FwdInstr::Run { start, len } => {
+                for &m in &plan.micro[start as usize..(start + len) as usize] {
+                    micro_scalar(m, regs);
+                }
+            }
+            FwdInstr::Composite { dst, kind, pstart, len, .. } => {
+                let v = scalar_composite_forward(
+                    kind,
+                    pstart as usize,
+                    len as usize,
+                    &plan.parents,
+                    consts,
+                    regs,
+                    partials,
+                );
+                regs[dst as usize] = v;
+            }
+            FwdInstr::CompositeShared { .. } => {
+                unreachable!("CompositeShared only occurs in batched programs")
+            }
+        }
+    }
+    regs[plan.output_val_slot as usize]
+}
+
+/// Execute the backward plan on the scalar register file.  `regs` and
+/// `partials` are the state left by [`scalar_forward`].
+pub(super) fn scalar_backward(plan: &ExecPlan, regs: &[f64], partials: &[f64], adj: &mut [f64]) {
+    for instr in &plan.bwd {
+        match *instr {
+            BwdInstr::Zero { a } => adj[a as usize] = 0.0,
+            BwdInstr::Seed { a } => adj[a as usize] = 1.0,
+            BwdInstr::Add { a, ax, ay } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                if ax != NONE {
+                    adj[ax as usize] += av;
+                }
+                if ay != NONE {
+                    adj[ay as usize] += av;
+                }
+            }
+            BwdInstr::Sub { a, ax, ay } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                if ax != NONE {
+                    adj[ax as usize] += av;
+                }
+                if ay != NONE {
+                    adj[ay as usize] -= av;
+                }
+            }
+            BwdInstr::Mul { a, ax, ay, vx, vy } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                if ax != NONE {
+                    adj[ax as usize] += av * regs[vy as usize];
+                }
+                if ay != NONE {
+                    adj[ay as usize] += av * regs[vx as usize];
+                }
+            }
+            BwdInstr::Div { a, ax, ay, vx, vy } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                if ax != NONE {
+                    adj[ax as usize] += av / regs[vy as usize];
+                }
+                if ay != NONE {
+                    let vyv = regs[vy as usize];
+                    adj[ay as usize] -= av * regs[vx as usize] / (vyv * vyv);
+                }
+            }
+            BwdInstr::Neg { a, ax } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                adj[ax as usize] -= av;
+            }
+            BwdInstr::Exp { a, ax, v } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                adj[ax as usize] += av * regs[v as usize];
+            }
+            BwdInstr::Sqrt { a, ax, v } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                adj[ax as usize] += av * 0.5 / regs[v as usize];
+            }
+            BwdInstr::Sigmoid { a, ax, v } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                let vi = regs[v as usize];
+                adj[ax as usize] += av * vi * (1.0 - vi);
+            }
+            BwdInstr::Tanh { a, ax, v } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                let vi = regs[v as usize];
+                adj[ax as usize] += av * (1.0 - vi * vi);
+            }
+            BwdInstr::Ln { a, ax, vx } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                adj[ax as usize] += av / regs[vx as usize];
+            }
+            BwdInstr::Log1p { a, ax, vx } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                adj[ax as usize] += av / (1.0 + regs[vx as usize]);
+            }
+            BwdInstr::Softplus { a, ax, vx } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                let s = sigmoid_val(regs[vx as usize]);
+                adj[ax as usize] += av * s;
+            }
+            BwdInstr::Powi { a, ax, vx, n } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                let xv = regs[vx as usize];
+                adj[ax as usize] += av * (n as f64) * xv.powi(n - 1);
+            }
+            BwdInstr::Scale { a, ax, c } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                adj[ax as usize] += av * c;
+            }
+            BwdInstr::Offset { a, ax } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                adj[ax as usize] += av;
+            }
+            BwdInstr::Composite { a, estart, elen } => {
+                let av = adj[a as usize];
+                if av == 0.0 {
+                    continue;
+                }
+                for e in estart as usize..(estart + elen) as usize {
+                    adj[plan.edge_adj[e] as usize] +=
+                        av * partials[plan.edge_partial[e] as usize];
+                }
+            }
+            BwdInstr::CompositeShared { .. } => {
+                unreachable!("CompositeShared only occurs in batched programs")
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn micro_batch(m: MicroOp, regs: &mut [f64], base: usize, w: usize, l: usize) {
+    match m {
+        MicroOp::Add { x, y, d } => {
+            let (xs, ys, ds) = (
+                x as usize * l + base,
+                y as usize * l + base,
+                d as usize * l + base,
+            );
+            for j in 0..w {
+                regs[ds + j] = regs[xs + j] + regs[ys + j];
+            }
+        }
+        MicroOp::Sub { x, y, d } => {
+            let (xs, ys, ds) = (
+                x as usize * l + base,
+                y as usize * l + base,
+                d as usize * l + base,
+            );
+            for j in 0..w {
+                regs[ds + j] = regs[xs + j] - regs[ys + j];
+            }
+        }
+        MicroOp::Mul { x, y, d } => {
+            let (xs, ys, ds) = (
+                x as usize * l + base,
+                y as usize * l + base,
+                d as usize * l + base,
+            );
+            for j in 0..w {
+                regs[ds + j] = regs[xs + j] * regs[ys + j];
+            }
+        }
+        MicroOp::Div { x, y, d } => {
+            let (xs, ys, ds) = (
+                x as usize * l + base,
+                y as usize * l + base,
+                d as usize * l + base,
+            );
+            for j in 0..w {
+                regs[ds + j] = regs[xs + j] / regs[ys + j];
+            }
+        }
+        MicroOp::Neg { x, d } => {
+            let (xs, ds) = (x as usize * l + base, d as usize * l + base);
+            for j in 0..w {
+                regs[ds + j] = -regs[xs + j];
+            }
+        }
+        MicroOp::Exp { x, d } => {
+            let (xs, ds) = (x as usize * l + base, d as usize * l + base);
+            for j in 0..w {
+                regs[ds + j] = regs[xs + j].exp();
+            }
+        }
+        MicroOp::Ln { x, d } => {
+            let (xs, ds) = (x as usize * l + base, d as usize * l + base);
+            for j in 0..w {
+                regs[ds + j] = regs[xs + j].ln();
+            }
+        }
+        MicroOp::Log1p { x, d } => {
+            let (xs, ds) = (x as usize * l + base, d as usize * l + base);
+            for j in 0..w {
+                regs[ds + j] = regs[xs + j].ln_1p();
+            }
+        }
+        MicroOp::Sqrt { x, d } => {
+            let (xs, ds) = (x as usize * l + base, d as usize * l + base);
+            for j in 0..w {
+                regs[ds + j] = regs[xs + j].sqrt();
+            }
+        }
+        MicroOp::Sigmoid { x, d } => {
+            let (xs, ds) = (x as usize * l + base, d as usize * l + base);
+            for j in 0..w {
+                regs[ds + j] = sigmoid_val(regs[xs + j]);
+            }
+        }
+        MicroOp::Softplus { x, d } => {
+            let (xs, ds) = (x as usize * l + base, d as usize * l + base);
+            for j in 0..w {
+                regs[ds + j] = softplus_val(regs[xs + j]);
+            }
+        }
+        MicroOp::Tanh { x, d } => {
+            let (xs, ds) = (x as usize * l + base, d as usize * l + base);
+            for j in 0..w {
+                regs[ds + j] = regs[xs + j].tanh();
+            }
+        }
+        MicroOp::Powi { x, d, n } => {
+            let (xs, ds) = (x as usize * l + base, d as usize * l + base);
+            for j in 0..w {
+                regs[ds + j] = regs[xs + j].powi(n);
+            }
+        }
+        MicroOp::Scale { x, d, c } => {
+            let (xs, ds) = (x as usize * l + base, d as usize * l + base);
+            for j in 0..w {
+                regs[ds + j] = c * regs[xs + j];
+            }
+        }
+        MicroOp::Offset { x, d, c } => {
+            let (xs, ds) = (x as usize * l + base, d as usize * l + base);
+            for j in 0..w {
+                regs[ds + j] = regs[xs + j] + c;
+            }
+        }
+    }
+}
+
+/// Execute the forward plan on the lane-minor batched register file
+/// (`regs[slot * lanes + k]`).  Fused runs sweep in `MICRO_LANES`
+/// blocks with the run's ops applied per block (block-major loop
+/// interchange — bitwise-safe because lanes are independent), with a
+/// ragged remainder block.  Zero allocations.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn batch_forward(
+    plan: &ExecPlan,
+    lanes: usize,
+    regs: &mut [f64],
+    partials: &mut [f64],
+    shared: &[f64],
+    consts: &[f64],
+    vals: &mut [f64],
+    acc_a: &mut [f64],
+    acc_b: &mut [f64],
+    inputs: &[f64],
+) {
+    let l = lanes;
+    debug_assert_eq!(inputs.len(), plan.input_val_slots.len() * l);
+    for (k, &s) in plan.input_val_slots.iter().enumerate() {
+        let d = s as usize * l;
+        regs[d..d + l].copy_from_slice(&inputs[k * l..(k + 1) * l]);
+    }
+    for instr in &plan.fwd {
+        match *instr {
+            FwdInstr::Run { start, len } => {
+                let ops = &plan.micro[start as usize..(start + len) as usize];
+                let mut base = 0usize;
+                while base + MICRO_LANES <= l {
+                    for &m in ops {
+                        micro_batch(m, regs, base, MICRO_LANES, l);
+                    }
+                    base += MICRO_LANES;
+                }
+                if base < l {
+                    let w = l - base;
+                    for &m in ops {
+                        micro_batch(m, regs, base, w, l);
+                    }
+                }
+            }
+            FwdInstr::Composite { dst, kind, pstart, xstart, .. } => {
+                batch_composite_forward(
+                    kind,
+                    l,
+                    pstart as usize,
+                    xstart as usize,
+                    &plan.parents,
+                    consts,
+                    regs,
+                    partials,
+                    vals,
+                    acc_a,
+                    acc_b,
+                );
+                let d = dst as usize * l;
+                regs[d..d + l].copy_from_slice(vals);
+            }
+            FwdInstr::CompositeShared { dst, pstart, sstart, len } => {
+                for v in vals.iter_mut() {
+                    *v = 0.0;
+                }
+                for j in 0..len as usize {
+                    let p = shared[sstart as usize + j];
+                    let s = plan.parents[pstart as usize + j] as usize * l;
+                    for k in 0..l {
+                        vals[k] += p * regs[s + k];
+                    }
+                }
+                let d = dst as usize * l;
+                regs[d..d + l].copy_from_slice(vals);
+            }
+        }
+    }
+}
+
+/// Execute the backward plan on the lane-minor batched register file.
+/// Adjoint registers for a node and its parents are disjoint, so plain
+/// sequential indexing reproduces the interpreter's
+/// `split_at_mut`-based sweep exactly (per-lane reads of the node
+/// adjoint precede the parent accumulation, edge loops run x-block
+/// then y-block, and the all-lanes-zero skip is preserved).
+pub(super) fn batch_backward(
+    plan: &ExecPlan,
+    lanes: usize,
+    regs: &[f64],
+    partials: &[f64],
+    shared: &[f64],
+    adj: &mut [f64],
+) {
+    let l = lanes;
+    for instr in &plan.bwd {
+        match *instr {
+            BwdInstr::Zero { a } => {
+                let s = a as usize * l;
+                for v in &mut adj[s..s + l] {
+                    *v = 0.0;
+                }
+            }
+            BwdInstr::Seed { a } => {
+                let s = a as usize * l;
+                for v in &mut adj[s..s + l] {
+                    *v = 1.0;
+                }
+            }
+            BwdInstr::Add { a, ax, ay } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                if ax != NONE {
+                    let xs = ax as usize * l;
+                    for k in 0..l {
+                        let ak = adj[as_ + k];
+                        if ak != 0.0 {
+                            adj[xs + k] += ak;
+                        }
+                    }
+                }
+                if ay != NONE {
+                    let ys = ay as usize * l;
+                    for k in 0..l {
+                        let ak = adj[as_ + k];
+                        if ak != 0.0 {
+                            adj[ys + k] += ak;
+                        }
+                    }
+                }
+            }
+            BwdInstr::Sub { a, ax, ay } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                if ax != NONE {
+                    let xs = ax as usize * l;
+                    for k in 0..l {
+                        let ak = adj[as_ + k];
+                        if ak != 0.0 {
+                            adj[xs + k] += ak;
+                        }
+                    }
+                }
+                if ay != NONE {
+                    let ys = ay as usize * l;
+                    for k in 0..l {
+                        let ak = adj[as_ + k];
+                        if ak != 0.0 {
+                            adj[ys + k] -= ak;
+                        }
+                    }
+                }
+            }
+            BwdInstr::Mul { a, ax, ay, vx, vy } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                if ax != NONE {
+                    let (xs, vys) = (ax as usize * l, vy as usize * l);
+                    for k in 0..l {
+                        let ak = adj[as_ + k];
+                        if ak != 0.0 {
+                            adj[xs + k] += ak * regs[vys + k];
+                        }
+                    }
+                }
+                if ay != NONE {
+                    let (ys, vxs) = (ay as usize * l, vx as usize * l);
+                    for k in 0..l {
+                        let ak = adj[as_ + k];
+                        if ak != 0.0 {
+                            adj[ys + k] += ak * regs[vxs + k];
+                        }
+                    }
+                }
+            }
+            BwdInstr::Div { a, ax, ay, vx, vy } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                if ax != NONE {
+                    let (xs, vys) = (ax as usize * l, vy as usize * l);
+                    for k in 0..l {
+                        let ak = adj[as_ + k];
+                        if ak != 0.0 {
+                            adj[xs + k] += ak / regs[vys + k];
+                        }
+                    }
+                }
+                if ay != NONE {
+                    let (ys, vxs, vys) = (ay as usize * l, vx as usize * l, vy as usize * l);
+                    for k in 0..l {
+                        let ak = adj[as_ + k];
+                        if ak != 0.0 {
+                            let vyk = regs[vys + k];
+                            adj[ys + k] -= ak * regs[vxs + k] / (vyk * vyk);
+                        }
+                    }
+                }
+            }
+            BwdInstr::Neg { a, ax } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let xs = ax as usize * l;
+                for k in 0..l {
+                    let ak = adj[as_ + k];
+                    if ak != 0.0 {
+                        adj[xs + k] -= ak;
+                    }
+                }
+            }
+            BwdInstr::Exp { a, ax, v } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let (xs, vs) = (ax as usize * l, v as usize * l);
+                for k in 0..l {
+                    let ak = adj[as_ + k];
+                    if ak != 0.0 {
+                        adj[xs + k] += ak * regs[vs + k];
+                    }
+                }
+            }
+            BwdInstr::Sqrt { a, ax, v } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let (xs, vs) = (ax as usize * l, v as usize * l);
+                for k in 0..l {
+                    let ak = adj[as_ + k];
+                    if ak != 0.0 {
+                        adj[xs + k] += ak * 0.5 / regs[vs + k];
+                    }
+                }
+            }
+            BwdInstr::Sigmoid { a, ax, v } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let (xs, vs) = (ax as usize * l, v as usize * l);
+                for k in 0..l {
+                    let ak = adj[as_ + k];
+                    if ak != 0.0 {
+                        let vi = regs[vs + k];
+                        adj[xs + k] += ak * vi * (1.0 - vi);
+                    }
+                }
+            }
+            BwdInstr::Tanh { a, ax, v } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let (xs, vs) = (ax as usize * l, v as usize * l);
+                for k in 0..l {
+                    let ak = adj[as_ + k];
+                    if ak != 0.0 {
+                        let vi = regs[vs + k];
+                        adj[xs + k] += ak * (1.0 - vi * vi);
+                    }
+                }
+            }
+            BwdInstr::Ln { a, ax, vx } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let (xs, vxs) = (ax as usize * l, vx as usize * l);
+                for k in 0..l {
+                    let ak = adj[as_ + k];
+                    if ak != 0.0 {
+                        adj[xs + k] += ak / regs[vxs + k];
+                    }
+                }
+            }
+            BwdInstr::Log1p { a, ax, vx } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let (xs, vxs) = (ax as usize * l, vx as usize * l);
+                for k in 0..l {
+                    let ak = adj[as_ + k];
+                    if ak != 0.0 {
+                        adj[xs + k] += ak / (1.0 + regs[vxs + k]);
+                    }
+                }
+            }
+            BwdInstr::Softplus { a, ax, vx } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let (xs, vxs) = (ax as usize * l, vx as usize * l);
+                for k in 0..l {
+                    let ak = adj[as_ + k];
+                    if ak != 0.0 {
+                        let s = sigmoid_val(regs[vxs + k]);
+                        adj[xs + k] += ak * s;
+                    }
+                }
+            }
+            BwdInstr::Powi { a, ax, vx, n } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let (xs, vxs) = (ax as usize * l, vx as usize * l);
+                for k in 0..l {
+                    let ak = adj[as_ + k];
+                    if ak != 0.0 {
+                        let xv = regs[vxs + k];
+                        adj[xs + k] += ak * (n as f64) * xv.powi(n - 1);
+                    }
+                }
+            }
+            BwdInstr::Scale { a, ax, c } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let xs = ax as usize * l;
+                for k in 0..l {
+                    let ak = adj[as_ + k];
+                    if ak != 0.0 {
+                        adj[xs + k] += ak * c;
+                    }
+                }
+            }
+            BwdInstr::Offset { a, ax } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let xs = ax as usize * l;
+                for k in 0..l {
+                    let ak = adj[as_ + k];
+                    if ak != 0.0 {
+                        adj[xs + k] += ak;
+                    }
+                }
+            }
+            BwdInstr::Composite { a, estart, elen } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                for e in estart as usize..(estart + elen) as usize {
+                    let ps = plan.edge_adj[e] as usize * l;
+                    let xs = plan.edge_partial[e] as usize * l;
+                    for k in 0..l {
+                        let ak = adj[as_ + k];
+                        if ak != 0.0 {
+                            adj[ps + k] += ak * partials[xs + k];
+                        }
+                    }
+                }
+            }
+            BwdInstr::CompositeShared { a, estart, elen } => {
+                let as_ = a as usize * l;
+                if adj[as_..as_ + l].iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                for e in estart as usize..(estart + elen) as usize {
+                    let ps = plan.edge_adj[e] as usize * l;
+                    let p = shared[plan.edge_partial[e] as usize];
+                    for k in 0..l {
+                        let ak = adj[as_ + k];
+                        if ak != 0.0 {
+                            adj[ps + k] += ak * p;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

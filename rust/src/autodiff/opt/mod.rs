@@ -1,0 +1,613 @@
+//! Optimizing compiler for frozen tape programs.
+//!
+//! [`TapeProgram`] / [`BatchTapeProgram`] are flat, static IRs, but the
+//! stock replay still *interprets* them: one match-dispatch and one
+//! full-width value row per recorded node, every evaluation.  This
+//! module compiles the frozen topology once into an
+//! [`plan::ExecPlan`] — dead code eliminated, constants folded,
+//! elementwise runs fused into superblocks, values/adjoints re-slotted
+//! into a small recycled register file — and replays *that* through a
+//! threaded-code dispatch loop ([`dispatch`]).
+//!
+//! The contract is the repo-wide bitwise discipline: **no pass is
+//! allowed to change a single bit of any output**.  The interpreter
+//! stays the oracle (the debug-mode replay audit in
+//! `compile/{potential,batch_potential}.rs` now checks the optimized
+//! path against a fresh tape replay as well), every pass preserves IEEE
+//! evaluation order on the surviving computation, constant folding
+//! pins *recorded* values instead of re-deriving them, and data-slot
+//! rebinding survives re-slotting through explicit remap tables.
+//! `rust/tests/tape_opt.rs` fuzzes 500 random programs across lane
+//! counts against the interpreter, bit for bit.
+//!
+//! Entry points: [`TapeProgram::optimize`] /
+//! [`BatchTapeProgram::optimize`], normally reached through
+//! `CompiledModel::set_optimized` (on by default).
+
+pub(crate) mod dispatch;
+pub(crate) mod plan;
+
+pub use plan::PlanStats;
+
+use super::batch::{BOp, BatchTapeProgram};
+use super::{BatchTape, DataSlot, Op, SlotStore, Tape, TapeProgram, Var};
+use plan::{build_plan, ExecPlan, GOp, PlanInput};
+
+fn gops_scalar(ops: &[Op]) -> Vec<GOp> {
+    ops.iter()
+        .map(|op| match *op {
+            Op::Leaf => GOp::Leaf,
+            Op::Input => GOp::Input,
+            Op::Add(x, y) => GOp::Add(x, y),
+            Op::Sub(x, y) => GOp::Sub(x, y),
+            Op::Mul(x, y) => GOp::Mul(x, y),
+            Op::Div(x, y) => GOp::Div(x, y),
+            Op::Neg(x) => GOp::Neg(x),
+            Op::Exp(x) => GOp::Exp(x),
+            Op::Ln(x) => GOp::Ln(x),
+            Op::Log1p(x) => GOp::Log1p(x),
+            Op::Sqrt(x) => GOp::Sqrt(x),
+            Op::Sigmoid(x) => GOp::Sigmoid(x),
+            Op::Softplus(x) => GOp::Softplus(x),
+            Op::Tanh(x) => GOp::Tanh(x),
+            Op::Powi(x, n) => GOp::Powi(x, n),
+            Op::Scale(x, c) => GOp::Scale(x, c),
+            Op::Offset(x, c) => GOp::Offset(x, c),
+            // the scalar arena interleaves parents and partials at the
+            // same indices, so both spans start at `start`
+            Op::Composite { start, len } => GOp::Composite {
+                pstart: start,
+                xstart: start,
+                len,
+            },
+        })
+        .collect()
+}
+
+fn gops_batch(ops: &[BOp]) -> Vec<GOp> {
+    ops.iter()
+        .map(|op| match *op {
+            BOp::Leaf => GOp::Leaf,
+            BOp::Input => GOp::Input,
+            BOp::Add(x, y) => GOp::Add(x, y),
+            BOp::Sub(x, y) => GOp::Sub(x, y),
+            BOp::Mul(x, y) => GOp::Mul(x, y),
+            BOp::Div(x, y) => GOp::Div(x, y),
+            BOp::Neg(x) => GOp::Neg(x),
+            BOp::Exp(x) => GOp::Exp(x),
+            BOp::Ln(x) => GOp::Ln(x),
+            BOp::Log1p(x) => GOp::Log1p(x),
+            BOp::Sqrt(x) => GOp::Sqrt(x),
+            BOp::Sigmoid(x) => GOp::Sigmoid(x),
+            BOp::Softplus(x) => GOp::Softplus(x),
+            BOp::Powi(x, n) => GOp::Powi(x, n),
+            BOp::Scale(x, c) => GOp::Scale(x, c),
+            BOp::Offset(x, c) => GOp::Offset(x, c),
+            BOp::Composite { pstart, xstart, len } => GOp::Composite { pstart, xstart, len },
+            BOp::CompositeShared { pstart, sstart, len } => {
+                GOp::CompositeShared { pstart, sstart, len }
+            }
+        })
+        .collect()
+}
+
+/// An optimized scalar gradient program: the [`plan::ExecPlan`]
+/// compiled from a frozen [`TapeProgram`] plus its private register
+/// file.  Drop-in replacement for the interpreted program — same
+/// `forward`/`backward`/`input_adjoints`/`rebind_data_slot` surface,
+/// bitwise-identical results, zero steady-state allocations.
+pub struct OptTapeProgram {
+    plan: ExecPlan,
+    /// value register file (`num_val_slots`, pinned + recycled)
+    regs: Vec<f64>,
+    /// adjoint register file (`num_adj_slots`)
+    adj: Vec<f64>,
+    /// composite partial arena (full recorded width — not re-slotted,
+    /// so `Coeffs` data slots rebind at their recorded indices)
+    partials: Vec<f64>,
+    /// fused-kernel constants (observations; `Consts` rebind target)
+    consts: Vec<f64>,
+}
+
+impl OptTapeProgram {
+    pub(crate) fn compile(prog: &TapeProgram) -> OptTapeProgram {
+        let gops = gops_scalar(&prog.topo.ops);
+        let plan = build_plan(&PlanInput {
+            ops: &gops,
+            comp_kinds: &prog.topo.comp_kinds,
+            arena_parents: &prog.topo.arena_parents,
+            inputs: &prog.topo.inputs,
+            data_slots: &prog.topo.data_slots,
+            slot_nodes: &prog.topo.slot_nodes,
+            output: prog.output,
+            rec_values: &prog.values,
+        });
+        let mut regs = vec![0.0; plan.num_val_slots];
+        for &(s, v) in &plan.init_values {
+            regs[s as usize] = v;
+        }
+        let adj = vec![0.0; plan.num_adj_slots];
+        OptTapeProgram {
+            regs,
+            adj,
+            partials: prog.partials.clone(),
+            consts: prog.topo.consts.clone(),
+            plan,
+        }
+    }
+
+    /// Rebind the inputs and execute the forward plan; returns the
+    /// output value.  Zero allocations.
+    pub fn forward(&mut self, inputs: &[f64]) -> f64 {
+        dispatch::scalar_forward(
+            &self.plan,
+            &mut self.regs,
+            &mut self.partials,
+            &self.consts,
+            inputs,
+        )
+    }
+
+    /// Execute the backward plan against the state left by the last
+    /// [`forward`].
+    ///
+    /// [`forward`]: OptTapeProgram::forward
+    pub fn backward(&mut self) {
+        dispatch::scalar_backward(&self.plan, &self.regs, &self.partials, &mut self.adj)
+    }
+
+    /// Copy the input adjoints (record order) into `grad` after a
+    /// [`backward`].
+    ///
+    /// [`backward`]: OptTapeProgram::backward
+    pub fn input_adjoints(&self, grad: &mut [f64]) {
+        for (g, &s) in grad.iter_mut().zip(self.plan.input_adj_slots.iter()) {
+            *g = self.adj[s as usize];
+        }
+    }
+
+    /// Output value left by the last [`forward`].
+    ///
+    /// [`forward`]: OptTapeProgram::forward
+    pub fn output_value(&self) -> f64 {
+        self.regs[self.plan.output_val_slot as usize]
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.plan.input_val_slots.len()
+    }
+
+    pub fn num_data_slots(&self) -> usize {
+        self.plan.data_slots.len()
+    }
+
+    pub fn data_slot_len(&self, slot: usize) -> usize {
+        self.plan.data_slots[slot].len as usize
+    }
+
+    /// Rebind a data slot — the optimized twin of
+    /// [`TapeProgram::rebind_data_slot`].  `Coeffs`/`Consts` spans keep
+    /// their recorded indices (those arenas are not re-slotted);
+    /// `Nodes` spans route through the plan's slot-remap table.
+    pub fn rebind_data_slot(&mut self, slot: usize, data: &[f64]) {
+        let DataSlot { store, start, len } = self.plan.data_slots[slot];
+        let (s, l) = (start as usize, len as usize);
+        assert_eq!(data.len(), l, "rebind_data_slot: length mismatch");
+        match store {
+            SlotStore::Coeffs => self.partials[s..s + l].copy_from_slice(data),
+            SlotStore::Consts => self.consts[s..s + l].copy_from_slice(data),
+            SlotStore::Nodes => {
+                for (j, &rs) in self.plan.slot_node_slots[s..s + l].iter().enumerate() {
+                    self.regs[rs as usize] = data[j];
+                }
+            }
+        }
+    }
+
+    /// Compile-time plan statistics (DCE/fusion/slot-reuse effect).
+    pub fn stats(&self) -> PlanStats {
+        self.plan.stats
+    }
+}
+
+/// An optimized batched gradient program compiled from a frozen
+/// [`BatchTapeProgram`]: same lane-minor layout and surface, executing
+/// the fused plan on a recycled register file whose working set is
+/// `peak_val_slots * lanes` instead of `nodes * lanes`.
+pub struct OptBatchTapeProgram {
+    lanes: usize,
+    plan: ExecPlan,
+    /// lane-minor value register file: `regs[slot * lanes + k]`
+    regs: Vec<f64>,
+    /// lane-minor adjoint register file
+    adj: Vec<f64>,
+    /// per-lane composite partial arena (full recorded width)
+    partials: Vec<f64>,
+    /// lane-shared composite coefficients (`Coeffs` rebind target)
+    shared: Vec<f64>,
+    /// fused-kernel constants (`Consts` rebind target)
+    consts: Vec<f64>,
+    /// lane-sized composite output scratch
+    vals: Vec<f64>,
+    /// lane-sized fused-kernel scratch
+    acc_a: Vec<f64>,
+    acc_b: Vec<f64>,
+}
+
+impl OptBatchTapeProgram {
+    pub(crate) fn compile(prog: &BatchTapeProgram) -> OptBatchTapeProgram {
+        let l = prog.lanes;
+        let n = prog.topo.ops.len();
+        // lane 0 stands in for the recorded value of every foldable
+        // node: leaves are recorded lane-uniform (`constant`
+        // broadcasts), and anything derived from uniform leaves by the
+        // same per-lane op stays uniform
+        let rec: Vec<f64> = (0..n).map(|i| prog.values[i * l]).collect();
+        #[cfg(debug_assertions)]
+        for i in 0..n {
+            if matches!(prog.topo.ops[i], BOp::Leaf) {
+                let b0 = prog.values[i * l].to_bits();
+                assert!(
+                    prog.values[i * l..(i + 1) * l]
+                        .iter()
+                        .all(|v| v.to_bits() == b0),
+                    "OptBatchTapeProgram::compile: non-lane-uniform constant leaf {}",
+                    i
+                );
+            }
+        }
+        let gops = gops_batch(&prog.topo.ops);
+        let plan = build_plan(&PlanInput {
+            ops: &gops,
+            comp_kinds: &prog.topo.comp_kinds,
+            arena_parents: &prog.topo.arena_parents,
+            inputs: &prog.topo.inputs,
+            data_slots: &prog.topo.data_slots,
+            slot_nodes: &prog.topo.slot_nodes,
+            output: prog.output,
+            rec_values: &rec,
+        });
+        let mut regs = vec![0.0; plan.num_val_slots * l];
+        for &(s, v) in &plan.init_values {
+            let d = s as usize * l;
+            regs[d..d + l].fill(v);
+        }
+        let adj = vec![0.0; plan.num_adj_slots * l];
+        OptBatchTapeProgram {
+            lanes: l,
+            regs,
+            adj,
+            partials: prog.partials.clone(),
+            shared: prog.topo.arena_shared.clone(),
+            consts: prog.topo.consts.clone(),
+            vals: vec![0.0; l],
+            acc_a: vec![0.0; l],
+            acc_b: vec![0.0; l],
+            plan,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.plan.input_val_slots.len()
+    }
+
+    /// Rebind the inputs (input-major, lane-minor) and execute the
+    /// forward plan.  Zero allocations.
+    pub fn forward(&mut self, inputs: &[f64]) {
+        dispatch::batch_forward(
+            &self.plan,
+            self.lanes,
+            &mut self.regs,
+            &mut self.partials,
+            &self.shared,
+            &self.consts,
+            &mut self.vals,
+            &mut self.acc_a,
+            &mut self.acc_b,
+            inputs,
+        )
+    }
+
+    /// Execute the backward plan against the state left by the last
+    /// [`forward`].
+    ///
+    /// [`forward`]: OptBatchTapeProgram::forward
+    pub fn backward(&mut self) {
+        dispatch::batch_backward(
+            &self.plan,
+            self.lanes,
+            &self.regs,
+            &self.partials,
+            &self.shared,
+            &mut self.adj,
+        )
+    }
+
+    /// Lane values of the output after the last [`forward`].
+    ///
+    /// [`forward`]: OptBatchTapeProgram::forward
+    pub fn output_values(&self) -> &[f64] {
+        let s = self.plan.output_val_slot as usize * self.lanes;
+        &self.regs[s..s + self.lanes]
+    }
+
+    /// Copy the input adjoints (input-major, lane-minor) into `grad`
+    /// after a [`backward`].
+    ///
+    /// [`backward`]: OptBatchTapeProgram::backward
+    pub fn input_adjoints(&self, grad: &mut [f64]) {
+        let l = self.lanes;
+        for (k, &s) in self.plan.input_adj_slots.iter().enumerate() {
+            let a = s as usize * l;
+            grad[k * l..(k + 1) * l].copy_from_slice(&self.adj[a..a + l]);
+        }
+    }
+
+    pub fn num_data_slots(&self) -> usize {
+        self.plan.data_slots.len()
+    }
+
+    pub fn data_slot_len(&self, slot: usize) -> usize {
+        self.plan.data_slots[slot].len as usize
+    }
+
+    /// Rebind a data slot — the optimized twin of
+    /// [`BatchTapeProgram::rebind_data_slot`] (node slots broadcast to
+    /// every lane through the slot-remap table).
+    pub fn rebind_data_slot(&mut self, slot: usize, data: &[f64]) {
+        let DataSlot { store, start, len } = self.plan.data_slots[slot];
+        let (s, l) = (start as usize, len as usize);
+        assert_eq!(data.len(), l, "rebind_data_slot: length mismatch");
+        match store {
+            SlotStore::Coeffs => self.shared[s..s + l].copy_from_slice(data),
+            SlotStore::Consts => self.consts[s..s + l].copy_from_slice(data),
+            SlotStore::Nodes => {
+                let lanes = self.lanes;
+                for (j, &rs) in self.plan.slot_node_slots[s..s + l].iter().enumerate() {
+                    let d = rs as usize * lanes;
+                    self.regs[d..d + lanes].fill(data[j]);
+                }
+            }
+        }
+    }
+
+    /// Compile-time plan statistics (DCE/fusion/slot-reuse effect).
+    pub fn stats(&self) -> PlanStats {
+        self.plan.stats
+    }
+}
+
+impl TapeProgram {
+    /// Compile this frozen program into an [`OptTapeProgram`]:
+    /// DCE + constant folding, superblock fusion and register
+    /// re-slotting, bitwise-identical to interpreted replay.
+    pub fn optimize(&self) -> OptTapeProgram {
+        OptTapeProgram::compile(self)
+    }
+}
+
+impl BatchTapeProgram {
+    /// Compile this frozen program into an [`OptBatchTapeProgram`]
+    /// (see [`TapeProgram::optimize`]).
+    pub fn optimize(&self) -> OptBatchTapeProgram {
+        OptBatchTapeProgram::compile(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(x: f64) -> u64 {
+        x.to_bits()
+    }
+
+    /// Record a small mixed program: elementwise prologue, a fused
+    /// observation composite, elementwise epilogue, plus a dead branch
+    /// and a constant subexpression.
+    fn record_mixed(tape: &mut Tape, x0: f64, x1: f64) -> Var {
+        let a = tape.input(x0);
+        let b = tape.input(x1);
+        let c = tape.constant(2.5);
+        let cc = tape.ln(c); // foldable: constant subexpression
+        let s = tape.softplus(b);
+        let loc = tape.mul(a, cc);
+        let t = tape.tanh(loc);
+        let dead = tape.exp(t); // never reaches the output
+        let _ = tape.sqrt(dead); // dead chain
+        let obs = tape.normal_iid_obs(loc, s, &[0.3, -1.2, 0.7]);
+        let sc = tape.scale(obs, 1.0); // lik_scale == 1.0 shape: must survive
+        let d = tape.div(sc, c);
+        tape.add(d, t)
+    }
+
+    fn grads(prog: &mut TapeProgram, inputs: &[f64]) -> (f64, Vec<f64>) {
+        let u = prog.forward(inputs);
+        prog.backward();
+        let mut g = vec![0.0; prog.num_inputs()];
+        prog.input_adjoints(&mut g);
+        (u, g)
+    }
+
+    fn opt_grads(prog: &mut OptTapeProgram, inputs: &[f64]) -> (f64, Vec<f64>) {
+        let u = prog.forward(inputs);
+        prog.backward();
+        let mut g = vec![0.0; prog.num_inputs()];
+        prog.input_adjoints(&mut g);
+        (u, g)
+    }
+
+    #[test]
+    fn optimized_matches_interpreter_bitwise() {
+        let mut tape = Tape::new();
+        let out = record_mixed(&mut tape, 0.4, -0.9);
+        let mut prog = tape.freeze(out);
+        let mut opt = prog.optimize();
+        for pt in [[0.4, -0.9], [1.7, 2.2], [-3.1, 0.05], [0.0, 0.0]] {
+            let (u_i, g_i) = grads(&mut prog, &pt);
+            let (u_o, g_o) = opt_grads(&mut opt, &pt);
+            assert_eq!(bits(u_i), bits(u_o), "forward value diverged at {:?}", pt);
+            for (gi, go) in g_i.iter().zip(g_o.iter()) {
+                assert_eq!(bits(*gi), bits(*go), "gradient diverged at {:?}", pt);
+            }
+            assert_eq!(bits(opt.output_value()), bits(u_i));
+        }
+    }
+
+    #[test]
+    fn dce_folding_and_slot_reuse_shrink_the_plan() {
+        let mut tape = Tape::new();
+        let out = record_mixed(&mut tape, 0.4, -0.9);
+        let prog = tape.freeze(out);
+        let opt = prog.optimize();
+        let st = opt.stats();
+        assert_eq!(st.nodes_total, prog.len());
+        // the exp/sqrt dead chain must be eliminated
+        assert!(st.nodes_live < st.nodes_total, "DCE found nothing: {:?}", st);
+        // ln(2.5) must be folded
+        assert!(st.nodes_folded >= 1, "constant folding found nothing: {:?}", st);
+        // prologue and epilogue fuse around the one composite
+        assert_eq!(st.composites, 1);
+        assert!(st.fused_runs >= 2, "expected >= 2 superblocks: {:?}", st);
+        assert!(st.micro_ops < st.nodes_live);
+        // the register file must be narrower than one row per node
+        assert!(st.peak_val_slots < st.nodes_total, "no slot reuse: {:?}", st);
+        assert!(st.peak_adj_slots <= st.nodes_total);
+    }
+
+    #[test]
+    fn output_is_input_and_constant_output_edge_cases() {
+        // output == input: forward is the identity, gradient is 1
+        let mut tape = Tape::new();
+        let x = tape.input(0.7);
+        let _ = tape.exp(x); // dead
+        let mut prog = tape.freeze(x);
+        let mut opt = prog.optimize();
+        let (u_i, g_i) = grads(&mut prog, &[2.25]);
+        let (u_o, g_o) = opt_grads(&mut opt, &[2.25]);
+        assert_eq!(bits(u_i), bits(u_o));
+        assert_eq!(bits(g_i[0]), bits(g_o[0]));
+        assert_eq!(g_o[0], 1.0);
+
+        // constant output: gradient of every input is exactly 0
+        let mut tape = Tape::new();
+        let _x = tape.input(0.3);
+        let c = tape.constant(4.0);
+        let out = tape.sqrt(c);
+        let mut prog = tape.freeze(out);
+        let mut opt = prog.optimize();
+        let (u_i, g_i) = grads(&mut prog, &[9.9]);
+        let (u_o, g_o) = opt_grads(&mut opt, &[9.9]);
+        assert_eq!(bits(u_i), bits(u_o));
+        assert_eq!(bits(g_i[0]), bits(g_o[0]));
+        assert_eq!(g_o[0], 0.0);
+    }
+
+    #[test]
+    fn node_slot_rebinding_survives_reslotting() {
+        // per-element observation leaves registered as a Nodes slot:
+        // rebinding after optimization must hit the remapped registers
+        let build = |ys: &[f64]| {
+            let mut tape = Tape::new();
+            let mu = tape.input(0.2);
+            tape.begin_data_region();
+            let leaves: Vec<Var> = ys.iter().map(|&y| tape.constant(y)).collect();
+            tape.register_data_nodes(&leaves);
+            tape.end_data_region();
+            let mut acc = tape.constant(0.0);
+            for &leaf in &leaves {
+                let r = tape.sub(leaf, mu);
+                let r2 = tape.square(r);
+                acc = tape.add(acc, r2);
+            }
+            let out = tape.scale(acc, -0.5);
+            tape.freeze(out)
+        };
+        let mut prog = build(&[1.0, 2.0, 3.0]);
+        let mut opt = prog.optimize();
+        // rebind both paths to a fresh "minibatch" and compare against
+        // a program recorded directly on that data
+        let fresh = [0.25, -1.5, 4.0];
+        prog.rebind_data_slot(0, &fresh);
+        opt.rebind_data_slot(0, &fresh);
+        let mut oracle = build(&fresh);
+        for pt in [[0.2], [-1.4], [3.3]] {
+            let (u_i, g_i) = grads(&mut prog, &pt);
+            let (u_o, g_o) = opt_grads(&mut opt, &pt);
+            let (u_f, g_f) = grads(&mut oracle, &pt);
+            assert_eq!(bits(u_i), bits(u_o));
+            assert_eq!(bits(u_f), bits(u_o));
+            assert_eq!(bits(g_i[0]), bits(g_o[0]));
+            assert_eq!(bits(g_f[0]), bits(g_o[0]));
+        }
+    }
+
+    #[test]
+    fn coeffs_slot_rebinding_survives_optimization() {
+        // dot_const coefficients live in the partial arena, which is
+        // *not* re-slotted — rebinding must keep working on both paths
+        let mut tape = Tape::new();
+        let w0 = tape.input(0.5);
+        let w1 = tape.input(-0.25);
+        tape.begin_data_region();
+        let dot = tape.dot_const(&[w0, w1], &[1.0, 2.0]);
+        tape.end_data_region();
+        let out = tape.softplus(dot);
+        let mut prog = tape.freeze(out);
+        let mut opt = prog.optimize();
+        prog.rebind_data_slot(0, &[-3.0, 0.75]);
+        opt.rebind_data_slot(0, &[-3.0, 0.75]);
+        for pt in [[0.5, -0.25], [2.0, 2.0]] {
+            let (u_i, g_i) = grads(&mut prog, &pt);
+            let (u_o, g_o) = opt_grads(&mut opt, &pt);
+            assert_eq!(bits(u_i), bits(u_o));
+            for (gi, go) in g_i.iter().zip(g_o.iter()) {
+                assert_eq!(bits(*gi), bits(*go));
+            }
+        }
+    }
+
+    #[test]
+    fn batched_optimized_matches_interpreter_bitwise() {
+        let lanes = 4usize;
+        let mut tape = BatchTape::new(lanes);
+        let a = tape.input(&[0.4, 1.7, -3.1, 0.0]);
+        let b = tape.input(&[-0.9, 2.2, 0.05, 0.0]);
+        let c = tape.constant(2.5);
+        let cc = tape.ln(c);
+        let s = tape.softplus(b);
+        let loc = tape.mul(a, cc);
+        let dead = tape.exp(loc);
+        let _ = tape.sqrt(dead);
+        let obs = tape.normal_iid_obs(loc, s, &[0.3, -1.2, 0.7]);
+        let sum = tape.sum(&[obs, loc]);
+        let out = tape.scale(sum, 1.0);
+        let mut prog = tape.freeze(out);
+        let mut opt = prog.optimize();
+        let n_in = prog.num_inputs();
+        let inputs: Vec<f64> = (0..n_in * lanes).map(|i| 0.3 * i as f64 - 1.1).collect();
+        prog.forward(&inputs);
+        prog.backward();
+        let mut g_i = vec![0.0; n_in * lanes];
+        prog.input_adjoints(&mut g_i);
+        opt.forward(&inputs);
+        opt.backward();
+        let mut g_o = vec![0.0; n_in * lanes];
+        opt.input_adjoints(&mut g_o);
+        for (ui, uo) in prog.output_values().iter().zip(opt.output_values()) {
+            assert_eq!(bits(*ui), bits(*uo));
+        }
+        for (gi, go) in g_i.iter().zip(g_o.iter()) {
+            assert_eq!(bits(*gi), bits(*go));
+        }
+        let st = opt.stats();
+        assert!(st.nodes_live < st.nodes_total);
+        assert!(st.peak_val_slots < st.nodes_total);
+    }
+}

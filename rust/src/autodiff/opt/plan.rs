@@ -1,0 +1,701 @@
+//! The execution-plan IR and the pass pipeline that lowers a frozen
+//! topology into it.
+//!
+//! `build_plan` consumes a backend-neutral view of a recorded program
+//! (`PlanInput`, with scalar `Op` / batched `BOp` streams unified into
+//! [`GOp`]) and runs, in order:
+//!
+//! 1. **liveness** — reverse reachability from the output node; nodes
+//!    that never feed the potential are dead and emit nothing;
+//! 2. **constant folding** — live nodes that do not depend on an input,
+//!    a rebindable slot leaf, or a composite kernel are *constified*:
+//!    they keep their recorded value in a pinned register and are never
+//!    recomputed (no arithmetic is re-associated — the recorded value
+//!    is exactly what every interpreted forward would recompute, so
+//!    folding is bitwise-neutral by construction);
+//! 3. **superblock fusion** — maximal runs of elementwise ops between
+//!    composite kernels collapse into a single [`FwdInstr::Run`] over a
+//!    contiguous [`MicroOp`] span, dispatched once per run.  Ops inside
+//!    a run execute in recorded order, so IEEE evaluation order is
+//!    untouched;
+//! 4. **linear-scan slot reuse** — node values and adjoints are
+//!    re-slotted into a small recycled register file.  Values read by
+//!    the backward sweep, inputs, the output, constants and rebindable
+//!    slot leaves are *pinned* (never recycled); everything else is
+//!    freed at its last forward use.  Adjoint slots are recycled during
+//!    the descending backward emission.  The remap tables
+//!    (`input_val_slots`, `slot_node_slots`, `parents`) are how
+//!    data-slot rebinding and the debug replay audit survive
+//!    re-slotting.
+//!
+//! The backward stream replicates the interpreter's reverse sweep on
+//! the live, gradient-relevant subgraph: one instruction per node,
+//! edges to gradient-irrelevant parents pruned (their adjoints can
+//! never reach an input adjoint), each adjoint register zeroed exactly
+//! once before its first accumulation, and the zero-adjoint skip
+//! preserved per instruction.  Composite edges keep their recorded
+//! `j`-order.  The result is bitwise-identical input adjoints — pinned
+//! by `rust/tests/tape_opt.rs` against the interpreter on random
+//! programs and the whole model zoo.
+
+use crate::autodiff::{CompKind, DataSlot};
+
+/// Sentinel for "no slot": a pruned adjoint edge or an unused operand.
+pub(super) const NONE: u32 = u32::MAX;
+
+/// Backend-neutral op: the union of the scalar tape's `Op` and the
+/// batched tape's `BOp`.  Scalar composites map to `Composite` with
+/// `pstart == xstart == start`; `Tanh` only occurs in scalar programs
+/// and `CompositeShared` only in batched ones.
+#[derive(Debug, Clone, Copy)]
+pub(super) enum GOp {
+    Leaf,
+    Input,
+    Add(u32, u32),
+    Sub(u32, u32),
+    Mul(u32, u32),
+    Div(u32, u32),
+    Neg(u32),
+    Exp(u32),
+    Ln(u32),
+    Log1p(u32),
+    Sqrt(u32),
+    Sigmoid(u32),
+    Softplus(u32),
+    Tanh(u32),
+    Powi(u32, i32),
+    Scale(u32, f64),
+    Offset(u32, f64),
+    Composite { pstart: u32, xstart: u32, len: u32 },
+    CompositeShared { pstart: u32, sstart: u32, len: u32 },
+}
+
+impl GOp {
+    /// Visit every parent node id (composites via the shared arena).
+    pub(super) fn for_each_parent(&self, arena: &[u32], mut f: impl FnMut(u32)) {
+        match *self {
+            GOp::Leaf | GOp::Input => {}
+            GOp::Add(x, y) | GOp::Sub(x, y) | GOp::Mul(x, y) | GOp::Div(x, y) => {
+                f(x);
+                f(y);
+            }
+            GOp::Neg(x)
+            | GOp::Exp(x)
+            | GOp::Ln(x)
+            | GOp::Log1p(x)
+            | GOp::Sqrt(x)
+            | GOp::Sigmoid(x)
+            | GOp::Softplus(x)
+            | GOp::Tanh(x)
+            | GOp::Powi(x, _)
+            | GOp::Scale(x, _)
+            | GOp::Offset(x, _) => f(x),
+            GOp::Composite { pstart, len, .. } | GOp::CompositeShared { pstart, len, .. } => {
+                for j in 0..len as usize {
+                    f(arena[pstart as usize + j]);
+                }
+            }
+        }
+    }
+
+    pub(super) fn is_composite(&self) -> bool {
+        matches!(self, GOp::Composite { .. } | GOp::CompositeShared { .. })
+    }
+
+    fn has_instr(&self) -> bool {
+        !matches!(self, GOp::Leaf | GOp::Input)
+    }
+}
+
+/// One fused elementwise operation inside a [`FwdInstr::Run`].  All
+/// operands are *register slots*, not node ids.
+#[derive(Debug, Clone, Copy)]
+pub(super) enum MicroOp {
+    Add { x: u32, y: u32, d: u32 },
+    Sub { x: u32, y: u32, d: u32 },
+    Mul { x: u32, y: u32, d: u32 },
+    Div { x: u32, y: u32, d: u32 },
+    Neg { x: u32, d: u32 },
+    Exp { x: u32, d: u32 },
+    Ln { x: u32, d: u32 },
+    Log1p { x: u32, d: u32 },
+    Sqrt { x: u32, d: u32 },
+    Sigmoid { x: u32, d: u32 },
+    Softplus { x: u32, d: u32 },
+    Tanh { x: u32, d: u32 },
+    Powi { x: u32, d: u32, n: i32 },
+    Scale { x: u32, d: u32, c: f64 },
+    Offset { x: u32, d: u32, c: f64 },
+}
+
+/// Forward-plan instruction: a fused elementwise superblock or one
+/// composite kernel call.  Composite operands keep their recorded
+/// arena indices — the parent span is remapped to register slots
+/// through [`ExecPlan::parents`], while partial/const indices are
+/// untouched (those arenas are not re-slotted, which is what keeps
+/// `Coeffs`/`Consts` data-slot rebinding working unchanged).
+#[derive(Debug, Clone, Copy)]
+pub(super) enum FwdInstr {
+    /// Execute `micro[start .. start + len]` in order.
+    Run { start: u32, len: u32 },
+    Composite { dst: u32, kind: CompKind, pstart: u32, xstart: u32, len: u32 },
+    CompositeShared { dst: u32, pstart: u32, sstart: u32, len: u32 },
+}
+
+/// Backward-plan instruction.  `a` is the node's own adjoint register;
+/// `ax`/`ay` are parent adjoint registers (`NONE` when the edge was
+/// pruned as gradient-irrelevant); `v*` are the pinned value registers
+/// the interpreter's reverse rule reads (`NONE` when the surviving
+/// edges do not need them).  Composite edges live in
+/// `ExecPlan::{edge_adj, edge_partial}[estart .. estart + elen]`.
+#[derive(Debug, Clone, Copy)]
+pub(super) enum BwdInstr {
+    /// `adj[a] = 0` — emitted exactly once per adjoint register, before
+    /// its first accumulation (the re-slotted equivalent of the
+    /// interpreter's upfront memset).
+    Zero { a: u32 },
+    /// `adj[a] = 1` — the output seed; emitted after the input zeros so
+    /// an output-is-input program seeds correctly.
+    Seed { a: u32 },
+    Add { a: u32, ax: u32, ay: u32 },
+    Sub { a: u32, ax: u32, ay: u32 },
+    Mul { a: u32, ax: u32, ay: u32, vx: u32, vy: u32 },
+    Div { a: u32, ax: u32, ay: u32, vx: u32, vy: u32 },
+    Neg { a: u32, ax: u32 },
+    Exp { a: u32, ax: u32, v: u32 },
+    Sqrt { a: u32, ax: u32, v: u32 },
+    Sigmoid { a: u32, ax: u32, v: u32 },
+    Tanh { a: u32, ax: u32, v: u32 },
+    Ln { a: u32, ax: u32, vx: u32 },
+    Log1p { a: u32, ax: u32, vx: u32 },
+    Softplus { a: u32, ax: u32, vx: u32 },
+    Powi { a: u32, ax: u32, vx: u32, n: i32 },
+    Scale { a: u32, ax: u32, c: f64 },
+    Offset { a: u32, ax: u32 },
+    /// Per-lane partials at `edge_partial[e]` (absolute scalar arena
+    /// index; the batched executor scales by `lanes`).
+    Composite { a: u32, estart: u32, elen: u32 },
+    /// Lane-shared coefficients at `edge_partial[e]` into the shared
+    /// arena.
+    CompositeShared { a: u32, estart: u32, elen: u32 },
+}
+
+/// Plan statistics, surfaced through
+/// `CompiledModel::plan_stats` / the `tape_opt` bench section.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanStats {
+    /// Recorded nodes in the frozen topology.
+    pub nodes_total: usize,
+    /// Nodes reachable from the output (survive DCE).
+    pub nodes_live: usize,
+    /// Live nodes constant-folded into pinned registers.
+    pub nodes_folded: usize,
+    /// Fused elementwise superblocks in the forward plan.
+    pub fused_runs: usize,
+    /// Total elementwise micro-ops across all runs.
+    pub micro_ops: usize,
+    /// Composite kernel calls in the forward plan.
+    pub composites: usize,
+    /// Forward-plan instructions (runs + composites).
+    pub fwd_instrs: usize,
+    /// Backward-plan instructions (including zero/seed).
+    pub bwd_instrs: usize,
+    /// Peak live value registers (vs `nodes_total` rows interpreted).
+    pub peak_val_slots: usize,
+    /// Peak live adjoint registers.
+    pub peak_adj_slots: usize,
+}
+
+/// A compiled execution plan: the output of the pass pipeline, executed
+/// by `opt::dispatch` on a recycled register file.
+#[derive(Debug, Clone)]
+pub(super) struct ExecPlan {
+    pub(super) fwd: Vec<FwdInstr>,
+    pub(super) micro: Vec<MicroOp>,
+    pub(super) bwd: Vec<BwdInstr>,
+    /// Composite backward edges: parent adjoint registers, `j`-ordered.
+    pub(super) edge_adj: Vec<u32>,
+    /// Composite backward edges: partial / shared-coefficient indices.
+    pub(super) edge_partial: Vec<u32>,
+    /// The composite parent arena remapped node-id → value register
+    /// (`NONE` outside live composite spans).
+    pub(super) parents: Vec<u32>,
+    /// `(register, recorded value)` pairs materialized at program
+    /// construction: folded constants and rebindable slot leaves.
+    pub(super) init_values: Vec<(u32, f64)>,
+    /// Value register per input, in record order.
+    pub(super) input_val_slots: Vec<u32>,
+    /// Adjoint register per input, in record order.
+    pub(super) input_adj_slots: Vec<u32>,
+    pub(super) output_val_slot: u32,
+    /// Rebindable spans, copied verbatim (`Coeffs`/`Consts` indices are
+    /// not re-slotted; `Nodes` slots resolve via `slot_node_slots`).
+    pub(super) data_slots: Vec<DataSlot>,
+    /// Value register per `slot_nodes` entry — the slot-remap table
+    /// that keeps `SlotStore::Nodes` rebinding working after re-slotting.
+    pub(super) slot_node_slots: Vec<u32>,
+    pub(super) num_val_slots: usize,
+    pub(super) num_adj_slots: usize,
+    pub(super) stats: PlanStats,
+}
+
+/// Borrowed view of a frozen topology, backend-neutral.  `rec_values`
+/// are the recorded node values (lane 0 for batched programs — leaves
+/// are lane-uniform by construction) used to materialize folded
+/// constants and slot-leaf initial data.
+pub(super) struct PlanInput<'a> {
+    pub(super) ops: &'a [GOp],
+    pub(super) comp_kinds: &'a [CompKind],
+    pub(super) arena_parents: &'a [u32],
+    pub(super) inputs: &'a [u32],
+    pub(super) data_slots: &'a [DataSlot],
+    pub(super) slot_nodes: &'a [u32],
+    pub(super) output: u32,
+    pub(super) rec_values: &'a [f64],
+}
+
+fn ensure_adj(
+    p: usize,
+    grad_rel: &[bool],
+    adj_slot: &mut [u32],
+    free_adj: &mut Vec<u32>,
+    next_adj: &mut u32,
+    bwd: &mut Vec<BwdInstr>,
+) -> u32 {
+    if !grad_rel[p] {
+        return NONE;
+    }
+    if adj_slot[p] == NONE {
+        let s = free_adj.pop().unwrap_or_else(|| {
+            let s = *next_adj;
+            *next_adj += 1;
+            s
+        });
+        adj_slot[p] = s;
+        bwd.push(BwdInstr::Zero { a: s });
+    }
+    adj_slot[p]
+}
+
+/// Run the pass pipeline over a frozen topology.
+pub(super) fn build_plan(inp: &PlanInput) -> ExecPlan {
+    let n = inp.ops.len();
+    let out = inp.output as usize;
+    assert!(out < n, "build_plan: output node out of range");
+
+    let mut is_input = vec![false; n];
+    for &id in inp.inputs {
+        is_input[id as usize] = true;
+    }
+    let mut is_slot_node = vec![false; n];
+    for &id in inp.slot_nodes {
+        is_slot_node[id as usize] = true;
+    }
+
+    // -- pass 1: liveness (reverse reachability from the output) ---------
+    let mut live = vec![false; n];
+    live[out] = true;
+    for i in (0..n).rev() {
+        if live[i] {
+            inp.ops[i].for_each_parent(inp.arena_parents, |p| live[p as usize] = true);
+        }
+    }
+
+    // -- pass 2: varying / gradient-relevance classification -------------
+    // A node varies across replays if it is an input, a rebindable slot
+    // leaf, a composite (its partial/const arenas can be rebound), or
+    // has a varying parent.  Live non-varying nodes are folded: their
+    // recorded value is exactly what every interpreted forward would
+    // recompute, so pinning it is bitwise-neutral.
+    let mut varying = vec![false; n];
+    let mut grad_rel = vec![false; n];
+    for i in 0..n {
+        let mut v = is_input[i] || is_slot_node[i] || inp.ops[i].is_composite();
+        let mut g = is_input[i];
+        inp.ops[i].for_each_parent(inp.arena_parents, |p| {
+            v |= varying[p as usize];
+            g |= grad_rel[p as usize];
+        });
+        varying[i] = v;
+        grad_rel[i] = g;
+    }
+
+    let recompute: Vec<bool> = (0..n)
+        .map(|i| live[i] && varying[i] && inp.ops[i].has_instr())
+        .collect();
+    let constify: Vec<bool> = (0..n).map(|i| live[i] && !varying[i]).collect();
+    let bwd_emit: Vec<bool> = (0..n)
+        .map(|i| live[i] && grad_rel[i] && inp.ops[i].has_instr())
+        .collect();
+
+    // -- pass 3a: pin values the backward sweep reads ---------------------
+    let mut val_pin = vec![false; n];
+    for i in 0..n {
+        if !bwd_emit[i] {
+            continue;
+        }
+        match inp.ops[i] {
+            GOp::Mul(x, y) => {
+                if grad_rel[x as usize] {
+                    val_pin[y as usize] = true;
+                }
+                if grad_rel[y as usize] {
+                    val_pin[x as usize] = true;
+                }
+            }
+            GOp::Div(x, y) => {
+                // x-edge reads vy; y-edge reads vx and vy
+                if grad_rel[x as usize] || grad_rel[y as usize] {
+                    val_pin[y as usize] = true;
+                }
+                if grad_rel[y as usize] {
+                    val_pin[x as usize] = true;
+                }
+            }
+            GOp::Exp(_) | GOp::Sqrt(_) | GOp::Sigmoid(_) | GOp::Tanh(_) => val_pin[i] = true,
+            GOp::Ln(x) | GOp::Log1p(x) | GOp::Softplus(x) | GOp::Powi(x, _) => {
+                val_pin[x as usize] = true
+            }
+            _ => {}
+        }
+    }
+
+    // -- pass 3b: pinned value registers ----------------------------------
+    // Inputs (in record order), rebindable slot leaves (even dead ones:
+    // they stay valid rebind targets), the output, folded constants and
+    // backward-read values get dedicated registers that are never
+    // recycled.
+    let mut val_slot = vec![NONE; n];
+    let mut next_val: u32 = 0;
+    for &id in inp.inputs {
+        let i = id as usize;
+        if val_slot[i] == NONE {
+            val_slot[i] = next_val;
+            next_val += 1;
+        }
+    }
+    for i in 0..n {
+        if (is_slot_node[i] || i == out || constify[i] || val_pin[i]) && val_slot[i] == NONE {
+            val_slot[i] = next_val;
+            next_val += 1;
+        }
+    }
+    let pinned: Vec<bool> = val_slot.iter().map(|&s| s != NONE).collect();
+
+    // -- pass 3c: last forward use per node (transient lifetimes) ---------
+    let mut last_use = vec![usize::MAX; n];
+    for i in 0..n {
+        if recompute[i] {
+            inp.ops[i].for_each_parent(inp.arena_parents, |p| last_use[p as usize] = i);
+        }
+    }
+
+    // -- pass 4: forward emission (fusion + linear-scan value reuse) ------
+    let mut fwd: Vec<FwdInstr> = Vec::new();
+    let mut micro: Vec<MicroOp> = Vec::new();
+    let mut parents_map: Vec<u32> = vec![NONE; inp.arena_parents.len()];
+    let mut free_val: Vec<u32> = Vec::new();
+    let mut freed = vec![false; n];
+    let mut run_start = 0usize;
+    let mut ci = 0usize;
+
+    for i in 0..n {
+        let op = inp.ops[i];
+        let is_comp = op.is_composite();
+        let kind = if is_comp {
+            // the kernel-descriptor cursor advances for every composite,
+            // live or dead, to stay aligned with the recorded stream
+            let k = inp.comp_kinds[ci];
+            ci += 1;
+            Some(k)
+        } else {
+            None
+        };
+        if !recompute[i] {
+            continue;
+        }
+        // free transient parent registers that die here, *before*
+        // allocating the destination: the destination may reuse a
+        // parent's register (reads precede writes elementwise, and
+        // composite kernels finish reading before the result is stored)
+        op.for_each_parent(inp.arena_parents, |p| {
+            let p = p as usize;
+            if !pinned[p] && !freed[p] && last_use[p] == i && val_slot[p] != NONE {
+                freed[p] = true;
+                free_val.push(val_slot[p]);
+            }
+        });
+        let dst = if val_slot[i] != NONE {
+            val_slot[i]
+        } else if let Some(s) = free_val.pop() {
+            val_slot[i] = s;
+            s
+        } else {
+            let s = next_val;
+            next_val += 1;
+            val_slot[i] = s;
+            s
+        };
+        if is_comp {
+            // close the open elementwise superblock
+            if micro.len() > run_start {
+                fwd.push(FwdInstr::Run {
+                    start: run_start as u32,
+                    len: (micro.len() - run_start) as u32,
+                });
+            }
+            match op {
+                GOp::Composite { pstart, xstart, len } => {
+                    for j in 0..len as usize {
+                        let p = inp.arena_parents[pstart as usize + j] as usize;
+                        parents_map[pstart as usize + j] = val_slot[p];
+                    }
+                    fwd.push(FwdInstr::Composite {
+                        dst,
+                        kind: kind.expect("composite without kernel descriptor"),
+                        pstart,
+                        xstart,
+                        len,
+                    });
+                }
+                GOp::CompositeShared { pstart, sstart, len } => {
+                    for j in 0..len as usize {
+                        let p = inp.arena_parents[pstart as usize + j] as usize;
+                        parents_map[pstart as usize + j] = val_slot[p];
+                    }
+                    fwd.push(FwdInstr::CompositeShared { dst, pstart, sstart, len });
+                }
+                _ => unreachable!(),
+            }
+            run_start = micro.len();
+        } else {
+            let s = |p: u32| {
+                debug_assert!(val_slot[p as usize] != NONE, "parent of a live node unslotted");
+                val_slot[p as usize]
+            };
+            micro.push(match op {
+                GOp::Add(x, y) => MicroOp::Add { x: s(x), y: s(y), d: dst },
+                GOp::Sub(x, y) => MicroOp::Sub { x: s(x), y: s(y), d: dst },
+                GOp::Mul(x, y) => MicroOp::Mul { x: s(x), y: s(y), d: dst },
+                GOp::Div(x, y) => MicroOp::Div { x: s(x), y: s(y), d: dst },
+                GOp::Neg(x) => MicroOp::Neg { x: s(x), d: dst },
+                GOp::Exp(x) => MicroOp::Exp { x: s(x), d: dst },
+                GOp::Ln(x) => MicroOp::Ln { x: s(x), d: dst },
+                GOp::Log1p(x) => MicroOp::Log1p { x: s(x), d: dst },
+                GOp::Sqrt(x) => MicroOp::Sqrt { x: s(x), d: dst },
+                GOp::Sigmoid(x) => MicroOp::Sigmoid { x: s(x), d: dst },
+                GOp::Softplus(x) => MicroOp::Softplus { x: s(x), d: dst },
+                GOp::Tanh(x) => MicroOp::Tanh { x: s(x), d: dst },
+                GOp::Powi(x, p) => MicroOp::Powi { x: s(x), d: dst, n: p },
+                GOp::Scale(x, c) => MicroOp::Scale { x: s(x), d: dst, c },
+                GOp::Offset(x, c) => MicroOp::Offset { x: s(x), d: dst, c },
+                GOp::Leaf | GOp::Input | GOp::Composite { .. } | GOp::CompositeShared { .. } => {
+                    unreachable!()
+                }
+            });
+        }
+    }
+    if micro.len() > run_start {
+        fwd.push(FwdInstr::Run {
+            start: run_start as u32,
+            len: (micro.len() - run_start) as u32,
+        });
+    }
+
+    // -- pass 5: backward emission (adjoint re-slotting) ------------------
+    let mut bwd: Vec<BwdInstr> = Vec::new();
+    let mut edge_adj: Vec<u32> = Vec::new();
+    let mut edge_partial: Vec<u32> = Vec::new();
+    let mut adj_slot = vec![NONE; n];
+    let mut next_adj: u32 = 0;
+    let mut free_adj: Vec<u32> = Vec::new();
+
+    // input adjoints first: persistent registers, zeroed every sweep so
+    // gradient-unreachable inputs read back 0.0 like the interpreter's
+    let mut input_adj_slots = Vec::with_capacity(inp.inputs.len());
+    for &id in inp.inputs {
+        let s = next_adj;
+        next_adj += 1;
+        adj_slot[id as usize] = s;
+        input_adj_slots.push(s);
+        bwd.push(BwdInstr::Zero { a: s });
+    }
+    // seed the output (after the zeros: output-is-input must end at 1.0)
+    let oa = if adj_slot[out] != NONE {
+        adj_slot[out]
+    } else {
+        let s = next_adj;
+        next_adj += 1;
+        adj_slot[out] = s;
+        s
+    };
+    bwd.push(BwdInstr::Seed { a: oa });
+
+    for i in (0..n).rev() {
+        if !bwd_emit[i] {
+            continue;
+        }
+        let a = adj_slot[i];
+        debug_assert!(
+            a != NONE,
+            "live gradient-relevant node {} has no adjoint register",
+            i
+        );
+        let vs = |p: u32| {
+            debug_assert!(val_slot[p as usize] != NONE);
+            val_slot[p as usize]
+        };
+        match inp.ops[i] {
+            GOp::Leaf | GOp::Input => unreachable!(),
+            GOp::Add(x, y) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                let ay = ensure_adj(y as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                bwd.push(BwdInstr::Add { a, ax, ay });
+            }
+            GOp::Sub(x, y) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                let ay = ensure_adj(y as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                bwd.push(BwdInstr::Sub { a, ax, ay });
+            }
+            GOp::Mul(x, y) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                let ay = ensure_adj(y as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                let vx = if ay != NONE { vs(x) } else { NONE };
+                let vy = if ax != NONE { vs(y) } else { NONE };
+                bwd.push(BwdInstr::Mul { a, ax, ay, vx, vy });
+            }
+            GOp::Div(x, y) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                let ay = ensure_adj(y as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                let vx = if ay != NONE { vs(x) } else { NONE };
+                let vy = if ax != NONE || ay != NONE { vs(y) } else { NONE };
+                bwd.push(BwdInstr::Div { a, ax, ay, vx, vy });
+            }
+            GOp::Neg(x) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                bwd.push(BwdInstr::Neg { a, ax });
+            }
+            GOp::Exp(x) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                bwd.push(BwdInstr::Exp { a, ax, v: val_slot[i] });
+            }
+            GOp::Sqrt(x) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                bwd.push(BwdInstr::Sqrt { a, ax, v: val_slot[i] });
+            }
+            GOp::Sigmoid(x) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                bwd.push(BwdInstr::Sigmoid { a, ax, v: val_slot[i] });
+            }
+            GOp::Tanh(x) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                bwd.push(BwdInstr::Tanh { a, ax, v: val_slot[i] });
+            }
+            GOp::Ln(x) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                bwd.push(BwdInstr::Ln { a, ax, vx: vs(x) });
+            }
+            GOp::Log1p(x) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                bwd.push(BwdInstr::Log1p { a, ax, vx: vs(x) });
+            }
+            GOp::Softplus(x) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                bwd.push(BwdInstr::Softplus { a, ax, vx: vs(x) });
+            }
+            GOp::Powi(x, pn) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                bwd.push(BwdInstr::Powi { a, ax, vx: vs(x), n: pn });
+            }
+            GOp::Scale(x, c) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                bwd.push(BwdInstr::Scale { a, ax, c });
+            }
+            GOp::Offset(x, _) => {
+                let ax = ensure_adj(x as usize, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                bwd.push(BwdInstr::Offset { a, ax });
+            }
+            GOp::Composite { pstart, xstart, len } => {
+                let estart = edge_adj.len() as u32;
+                for j in 0..len as usize {
+                    let p = inp.arena_parents[pstart as usize + j] as usize;
+                    if !grad_rel[p] {
+                        continue; // pruned: this adjoint never reaches an input
+                    }
+                    let pa = ensure_adj(p, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                    edge_adj.push(pa);
+                    edge_partial.push(xstart + j as u32);
+                }
+                let elen = edge_adj.len() as u32 - estart;
+                bwd.push(BwdInstr::Composite { a, estart, elen });
+            }
+            GOp::CompositeShared { pstart, sstart, len } => {
+                let estart = edge_adj.len() as u32;
+                for j in 0..len as usize {
+                    let p = inp.arena_parents[pstart as usize + j] as usize;
+                    if !grad_rel[p] {
+                        continue;
+                    }
+                    let pa = ensure_adj(p, &grad_rel, &mut adj_slot, &mut free_adj, &mut next_adj, &mut bwd);
+                    edge_adj.push(pa);
+                    edge_partial.push(sstart + j as u32);
+                }
+                let elen = edge_adj.len() as u32 - estart;
+                bwd.push(BwdInstr::CompositeShared { a, estart, elen });
+            }
+        }
+        // this node's adjoint is fully consumed (descending order);
+        // recycle its register only *after* the instruction above, so a
+        // parent's alloc+Zero can never clobber it in the stream
+        free_adj.push(a);
+    }
+
+    // -- assembly ---------------------------------------------------------
+    let mut init_values: Vec<(u32, f64)> = Vec::new();
+    for i in 0..n {
+        if constify[i] || (is_slot_node[i] && !recompute[i]) {
+            init_values.push((val_slot[i], inp.rec_values[i]));
+        }
+    }
+    let input_val_slots: Vec<u32> = inp.inputs.iter().map(|&id| val_slot[id as usize]).collect();
+    let slot_node_slots: Vec<u32> = inp
+        .slot_nodes
+        .iter()
+        .map(|&id| val_slot[id as usize])
+        .collect();
+
+    let fused_runs = fwd
+        .iter()
+        .filter(|f| matches!(f, FwdInstr::Run { .. }))
+        .count();
+    let stats = PlanStats {
+        nodes_total: n,
+        nodes_live: live.iter().filter(|&&b| b).count(),
+        nodes_folded: constify.iter().filter(|&&b| b).count(),
+        fused_runs,
+        micro_ops: micro.len(),
+        composites: fwd.len() - fused_runs,
+        fwd_instrs: fwd.len(),
+        bwd_instrs: bwd.len(),
+        peak_val_slots: next_val as usize,
+        peak_adj_slots: next_adj as usize,
+    };
+
+    ExecPlan {
+        fwd,
+        micro,
+        bwd,
+        edge_adj,
+        edge_partial,
+        parents: parents_map,
+        init_values,
+        input_val_slots,
+        input_adj_slots,
+        output_val_slot: val_slot[out],
+        data_slots: inp.data_slots.to_vec(),
+        slot_node_slots,
+        num_val_slots: next_val as usize,
+        num_adj_slots: next_adj as usize,
+        stats,
+    }
+}

@@ -37,7 +37,7 @@
 
 use anyhow::Result;
 
-use crate::autodiff::{BatchTape, BatchTapeProgram, Var};
+use crate::autodiff::{BatchTape, BatchTapeProgram, OptBatchTapeProgram, PlanStats, Var};
 use crate::compile::layout::{SiteLayout, SiteTransform};
 #[cfg(debug_assertions)]
 use crate::compile::potential::REPLAY_CHECK_PERIOD;
@@ -64,8 +64,14 @@ pub struct BatchedCompiledModel<M: EffModel> {
     pool: Vec<Vec<Var>>,
     /// the frozen program (recorded on the first evaluation)
     program: Option<BatchTapeProgram>,
+    /// the optimized execution plan compiled from the frozen program
+    /// (built eagerly at freeze time when `opt_enabled`)
+    opt: Option<OptBatchTapeProgram>,
     /// false = always interpret (benchmark / cross-check mode)
     frozen_enabled: bool,
+    /// false = serve frozen evaluations from the interpreter instead
+    /// of the optimized plan (benchmark / cross-check mode)
+    opt_enabled: bool,
     /// scratch for the debug re-replay audit
     #[cfg(debug_assertions)]
     check_u: Vec<f64>,
@@ -86,7 +92,9 @@ impl<M: EffModel> BatchedCompiledModel<M> {
             terms: Vec::new(),
             pool: Vec::new(),
             program: None,
+            opt: None,
             frozen_enabled: true,
+            opt_enabled: true,
             #[cfg(debug_assertions)]
             check_u: vec![0.0; lanes],
             #[cfg(debug_assertions)]
@@ -111,6 +119,7 @@ impl<M: EffModel> BatchedCompiledModel<M> {
         self.frozen_enabled = enabled;
         if !enabled {
             self.program = None;
+            self.opt = None;
         }
     }
 
@@ -118,6 +127,29 @@ impl<M: EffModel> BatchedCompiledModel<M> {
     /// evaluations.
     pub fn is_frozen(&self) -> bool {
         self.program.is_some()
+    }
+
+    /// Enable/disable the optimizing tape compiler (enabled by
+    /// default); see [`crate::compile::CompiledModel::set_optimized`].
+    pub fn set_optimized(&mut self, enabled: bool) {
+        self.opt_enabled = enabled;
+        if !enabled {
+            self.opt = None;
+        } else if self.opt.is_none() {
+            if let Some(prog) = self.program.as_ref() {
+                self.opt = Some(prog.optimize());
+            }
+        }
+    }
+
+    /// Whether an optimized plan is compiled and serving evaluations.
+    pub fn is_optimized(&self) -> bool {
+        self.opt.is_some()
+    }
+
+    /// Compiler statistics for the optimized plan, if one is built.
+    pub fn plan_stats(&self) -> Option<PlanStats> {
+        self.opt.as_ref().map(|o| o.stats())
     }
 
     /// One full interpreter replay on the multi-lane tape.  Returns the
@@ -215,7 +247,13 @@ impl<M: EffModel> BatchPotential for BatchedCompiledModel<M> {
         }
         if self.program.is_none() {
             let out = self.replay(z, u, grad);
-            self.program = Some(self.tape.freeze(out));
+            let prog = self.tape.freeze(out);
+            if self.opt_enabled {
+                // compile eagerly so steady-state evaluations never
+                // allocate — the plan build is absorbed into warmup
+                self.opt = Some(prog.optimize());
+            }
+            self.program = Some(prog);
             // release builds never interpret again (no periodic audit),
             // so drop the recording buffers — the frozen program holds
             // its own copies; debug builds keep them warm for the audit
@@ -223,11 +261,18 @@ impl<M: EffModel> BatchPotential for BatchedCompiledModel<M> {
             self.tape.clear_and_shrink();
             return;
         }
-        let prog = self.program.as_mut().expect("frozen program present");
-        prog.forward(z);
-        u.copy_from_slice(prog.output_values());
-        prog.backward();
-        prog.input_adjoints(grad);
+        if let Some(opt) = self.opt.as_mut() {
+            opt.forward(z);
+            u.copy_from_slice(opt.output_values());
+            opt.backward();
+            opt.input_adjoints(grad);
+        } else {
+            let prog = self.program.as_mut().expect("frozen program present");
+            prog.forward(z);
+            u.copy_from_slice(prog.output_values());
+            prog.backward();
+            prog.input_adjoints(grad);
+        }
         #[cfg(debug_assertions)]
         {
             if self.evals % REPLAY_CHECK_PERIOD == 0 {
@@ -248,7 +293,12 @@ impl<M: SubsampledModel> SubsampleRebind for BatchedCompiledModel<M> {
     /// [`crate::compile::CompiledModel`] impl (staging and program
     /// updated together, so the debug replay audit stays consistent).
     fn set_minibatch(&mut self, idx: &[usize]) {
-        let BatchedCompiledModel { model, program, .. } = self;
+        let BatchedCompiledModel {
+            model,
+            program,
+            opt,
+            ..
+        } = self;
         model.load_rows(idx);
         if let Some(prog) = program.as_mut() {
             assert_eq!(
@@ -260,6 +310,40 @@ impl<M: SubsampledModel> SubsampleRebind for BatchedCompiledModel<M> {
                 prog.rebind_data_slot(s, model.slot_data(s));
             }
         }
+        // the optimized plan keeps its own copies of the shared /
+        // const arenas and a slot-remap table for re-slotted data
+        // nodes, so it rebinds independently but in lockstep
+        if let Some(o) = opt.as_mut() {
+            assert_eq!(
+                o.num_data_slots(),
+                model.num_slots(),
+                "subsample rebind: slot count mismatch between optimized plan and model"
+            );
+            for s in 0..o.num_data_slots() {
+                o.rebind_data_slot(s, model.slot_data(s));
+            }
+        }
+    }
+}
+
+impl<M: EffModel> TiledBatchPotential<BatchedCompiledModel<M>> {
+    /// Enable/disable the optimizing tape compiler on every tile; see
+    /// [`crate::compile::CompiledModel::set_optimized`].
+    pub fn set_optimized(&mut self, enabled: bool) {
+        for tile in self.tiles_mut() {
+            tile.set_optimized(enabled);
+        }
+    }
+
+    /// Whether every tile is serving from an optimized plan.
+    pub fn is_optimized(&self) -> bool {
+        !self.tiles().is_empty() && self.tiles().iter().all(|t| t.is_optimized())
+    }
+
+    /// Compiler statistics from the first tile's plan (all tiles share
+    /// one recorded structure, so one plan is representative).
+    pub fn plan_stats(&self) -> Option<PlanStats> {
+        self.tiles().first().and_then(|t| t.plan_stats())
     }
 }
 

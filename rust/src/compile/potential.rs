@@ -34,7 +34,7 @@
 //! (`rust/tests/alloc_free.rs` enforces this with a counting
 //! allocator).
 
-use crate::autodiff::{Tape, TapeProgram, Var};
+use crate::autodiff::{OptTapeProgram, PlanStats, Tape, TapeProgram, Var};
 use crate::compile::layout::{SiteLayout, SiteTransform};
 use crate::compile::subsample::{SubsampleRebind, SubsampledModel};
 use crate::compile::{pool_take, DistV, EffModel, ProbCtx};
@@ -63,9 +63,16 @@ pub struct CompiledModel<M: EffModel> {
     pool: Vec<Vec<Var>>,
     /// the frozen program (recorded on the first evaluation)
     program: Option<TapeProgram>,
+    /// the optimized execution plan compiled from the frozen program
+    /// (built eagerly at freeze time when `opt_enabled`)
+    opt: Option<OptTapeProgram>,
     /// false = always interpret (the pre-freeze behaviour, kept for
     /// benchmarking and the bitwise cross-checks)
     frozen_enabled: bool,
+    /// false = serve frozen evaluations from the tape interpreter
+    /// instead of the optimized plan (kept for benchmarking and the
+    /// bitwise cross-checks)
+    opt_enabled: bool,
     /// gradient scratch for the debug re-replay audit
     #[cfg(debug_assertions)]
     check_grad: Vec<f64>,
@@ -83,7 +90,9 @@ impl<M: EffModel> CompiledModel<M> {
             terms: Vec::new(),
             pool: Vec::new(),
             program: None,
+            opt: None,
             frozen_enabled: true,
+            opt_enabled: true,
             #[cfg(debug_assertions)]
             check_grad: vec![0.0; dim],
             evals: 0,
@@ -110,6 +119,7 @@ impl<M: EffModel> CompiledModel<M> {
         self.frozen_enabled = enabled;
         if !enabled {
             self.program = None;
+            self.opt = None;
         }
     }
 
@@ -117,6 +127,36 @@ impl<M: EffModel> CompiledModel<M> {
     /// evaluations.
     pub fn is_frozen(&self) -> bool {
         self.program.is_some()
+    }
+
+    /// Enable/disable the optimizing tape compiler (enabled by
+    /// default).  When enabled, the frozen program is compiled into a
+    /// DCE'd, fused, re-slotted [`crate::autodiff::OptTapeProgram`] at
+    /// freeze time and all later evaluations run the optimized plan;
+    /// when disabled, frozen evaluations fall back to the tape
+    /// interpreter.  Both paths are bitwise identical — the switch
+    /// exists so `fugue bench` can measure
+    /// `opt_speedup_vs_interpreted` and the property tests can compare
+    /// the two bitwise.
+    pub fn set_optimized(&mut self, enabled: bool) {
+        self.opt_enabled = enabled;
+        if !enabled {
+            self.opt = None;
+        } else if self.opt.is_none() {
+            if let Some(prog) = self.program.as_ref() {
+                self.opt = Some(prog.optimize());
+            }
+        }
+    }
+
+    /// Whether an optimized plan is compiled and serving evaluations.
+    pub fn is_optimized(&self) -> bool {
+        self.opt.is_some()
+    }
+
+    /// Compiler statistics for the optimized plan, if one is built.
+    pub fn plan_stats(&self) -> Option<PlanStats> {
+        self.opt.as_ref().map(|o| o.stats())
     }
 
     /// One full interpreter replay: reset the tape, rebuild the graph
@@ -203,7 +243,13 @@ impl<M: EffModel> Potential for CompiledModel<M> {
             // record once: the first evaluation both answers the query
             // and leaves the complete graph behind to freeze
             let (u, out) = self.replay(z, grad);
-            self.program = Some(self.tape.freeze(out));
+            let prog = self.tape.freeze(out);
+            if self.opt_enabled {
+                // compile eagerly so steady-state evaluations never
+                // allocate — the plan build is absorbed into warmup
+                self.opt = Some(prog.optimize());
+            }
+            self.program = Some(prog);
             // release builds never interpret again (no periodic audit),
             // so drop the recording buffers — the frozen program holds
             // its own copies; debug builds keep them warm for the audit
@@ -211,10 +257,18 @@ impl<M: EffModel> Potential for CompiledModel<M> {
             self.tape.clear_and_shrink();
             return u;
         }
-        let prog = self.program.as_mut().expect("frozen program present");
-        let u = prog.forward(z);
-        prog.backward();
-        prog.input_adjoints(grad);
+        let u = if let Some(opt) = self.opt.as_mut() {
+            let u = opt.forward(z);
+            opt.backward();
+            opt.input_adjoints(grad);
+            u
+        } else {
+            let prog = self.program.as_mut().expect("frozen program present");
+            let u = prog.forward(z);
+            prog.backward();
+            prog.input_adjoints(grad);
+            u
+        };
         #[cfg(debug_assertions)]
         {
             if self.evals % REPLAY_CHECK_PERIOD == 0 {
@@ -237,7 +291,12 @@ impl<M: SubsampledModel> SubsampleRebind for CompiledModel<M> {
     /// agreeing with the frozen result, and a not-yet-frozen model
     /// simply records its first program from the fresh staging data.
     fn set_minibatch(&mut self, idx: &[usize]) {
-        let CompiledModel { model, program, .. } = self;
+        let CompiledModel {
+            model,
+            program,
+            opt,
+            ..
+        } = self;
         model.load_rows(idx);
         if let Some(prog) = program.as_mut() {
             assert_eq!(
@@ -247,6 +306,19 @@ impl<M: SubsampledModel> SubsampleRebind for CompiledModel<M> {
             );
             for s in 0..prog.num_data_slots() {
                 prog.rebind_data_slot(s, model.slot_data(s));
+            }
+        }
+        // the optimized plan keeps its own copies of the partial /
+        // const arenas and a slot-remap table for re-slotted data
+        // nodes, so it rebinds independently but in lockstep
+        if let Some(o) = opt.as_mut() {
+            assert_eq!(
+                o.num_data_slots(),
+                model.num_slots(),
+                "subsample rebind: slot count mismatch between optimized plan and model"
+            );
+            for s in 0..o.num_data_slots() {
+                o.rebind_data_slot(s, model.slot_data(s));
             }
         }
     }

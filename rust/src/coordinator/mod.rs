@@ -42,11 +42,13 @@ pub use checkpoint::{
     run_compiled_chains_checkpointed, run_svi_checkpointed, run_svi_subsampled_checkpointed,
     save_chain_checkpoint, save_svi_checkpoint, CheckpointConfig,
 };
-pub use parallel::{run_chains_parallel, run_compiled_chains, ParallelChainRunner};
+pub use parallel::{
+    run_chains_parallel, run_compiled_chains, run_compiled_chains_opt, ParallelChainRunner,
+};
 pub use sampler::{FusedSampler, NativeSampler, Sampler, TreeAlgorithm};
 pub use svi::{run_svi_native, run_svi_subsampled};
 pub use vectorized::{
-    run_chains_vectorized, run_chains_vectorized_from, run_compiled_chains_method, ChainMethod,
-    TILED_LANE_THRESHOLD,
+    run_chains_vectorized, run_chains_vectorized_from, run_compiled_chains_method,
+    run_compiled_chains_method_opt, ChainMethod, TILED_LANE_THRESHOLD,
 };
 pub use warmup::WarmupSchedule;

@@ -101,12 +101,30 @@ pub fn run_compiled_chains<M: EffModel + Clone + Sync>(
     max_tree_depth: u32,
     opts: &NutsOptions,
 ) -> Result<(SiteLayout, Vec<ChainResult>)> {
+    run_compiled_chains_opt(model, num_chains, max_tree_depth, opts, true)
+}
+
+/// [`run_compiled_chains`] with an explicit optimizing-compiler switch:
+/// `optimized = false` serves every frozen evaluation from the tape
+/// interpreter instead of the fused/re-slotted
+/// [`crate::autodiff::OptTapeProgram`].  The two settings are bitwise
+/// identical (`rust/tests/tape_opt.rs`); the switch exists for
+/// benchmarking and cross-checks.
+pub fn run_compiled_chains_opt<M: EffModel + Clone + Sync>(
+    model: &M,
+    num_chains: usize,
+    max_tree_depth: u32,
+    opts: &NutsOptions,
+    optimized: bool,
+) -> Result<(SiteLayout, Vec<ChainResult>)> {
     let layout = SiteLayout::trace(model, opts.seed)?;
     let runner = ParallelChainRunner::new(num_chains);
     let results = runner.run(
         |_c| {
+            let mut pot = CompiledModel::new(model.clone(), layout.clone());
+            pot.set_optimized(optimized);
             Ok(NativeSampler::new(
-                CompiledModel::new(model.clone(), layout.clone()),
+                pot,
                 TreeAlgorithm::Iterative,
                 max_tree_depth,
             ))

@@ -30,7 +30,7 @@ use crate::compile::{
 use crate::coordinator::chain::{
     chain_start, run_chains, ChainCursor, ChainResult, NutsOptions,
 };
-use crate::coordinator::parallel::run_compiled_chains;
+use crate::coordinator::parallel::run_compiled_chains_opt;
 use crate::coordinator::sampler::{NativeSampler, TreeAlgorithm};
 use crate::coordinator::warmup::WarmupSchedule;
 use crate::mcmc::batch_nuts::{draw_batch, BatchTreeWorkspace};
@@ -328,15 +328,33 @@ pub fn run_compiled_chains_method<M: EffModel + Clone + Send + Sync>(
     max_tree_depth: u32,
     opts: &NutsOptions,
 ) -> Result<(SiteLayout, Vec<ChainResult>)> {
+    run_compiled_chains_method_opt(model, method, num_chains, max_tree_depth, opts, true)
+}
+
+/// [`run_compiled_chains_method`] with an explicit optimizing-compiler
+/// switch: `optimized = false` serves every frozen evaluation (scalar,
+/// batched, and tiled alike) from the tape interpreter instead of the
+/// fused/re-slotted execution plan.  The two settings are bitwise
+/// identical across all three chain methods
+/// (`rust/tests/tape_opt.rs`); the switch exists for benchmarking and
+/// cross-checks.
+pub fn run_compiled_chains_method_opt<M: EffModel + Clone + Send + Sync>(
+    model: &M,
+    method: ChainMethod,
+    num_chains: usize,
+    max_tree_depth: u32,
+    opts: &NutsOptions,
+    optimized: bool,
+) -> Result<(SiteLayout, Vec<ChainResult>)> {
     match method {
-        ChainMethod::Parallel => run_compiled_chains(model, num_chains, max_tree_depth, opts),
+        ChainMethod::Parallel => {
+            run_compiled_chains_opt(model, num_chains, max_tree_depth, opts, optimized)
+        }
         ChainMethod::Sequential => {
             let layout = SiteLayout::trace(model, opts.seed)?;
-            let mut sampler = NativeSampler::new(
-                CompiledModel::new(model.clone(), layout.clone()),
-                TreeAlgorithm::Iterative,
-                max_tree_depth,
-            );
+            let mut pot = CompiledModel::new(model.clone(), layout.clone());
+            pot.set_optimized(optimized);
+            let mut sampler = NativeSampler::new(pot, TreeAlgorithm::Iterative, max_tree_depth);
             let results = run_chains(&mut sampler, num_chains, opts)?;
             Ok((layout, results))
         }
@@ -354,10 +372,12 @@ pub fn run_compiled_chains_method<M: EffModel + Clone + Send + Sync>(
                     .unwrap_or(1);
                 let tile = auto_tile_width(num_chains, threads);
                 let mut pot = tiled_from_layout(model, &layout, num_chains, tile);
+                pot.set_optimized(optimized);
                 let results = run_chains_vectorized(&mut pot, opts, max_tree_depth)?;
                 return Ok((layout, results));
             }
             let mut pot = BatchedCompiledModel::new(model.clone(), layout.clone(), num_chains);
+            pot.set_optimized(optimized);
             let results = run_chains_vectorized(&mut pot, opts, max_tree_depth)?;
             Ok((layout, results))
         }

@@ -59,6 +59,15 @@
 //!    and ms/step, gated by a bitwise-equality `ensure!` that the
 //!    `B = N` subsampled run reproduces the plain full-batch SVI path
 //!    exactly (`full_batch_bitwise_equal`).
+//! 9. **optimizing tape compiler** (`tape_opt`): per compiled zoo
+//!    model, ms/leapfrog with the `ExecPlan` threaded-code path (the
+//!    default) vs the frozen node-per-node interpreter
+//!    (`set_optimized(false)`), recorded as
+//!    `opt_speedup_vs_interpreted` plus the plan statistics
+//!    ([`crate::autodiff::PlanStats`]), and the same comparison on the
+//!    lane-minor batch programs at K ∈ {8, 512}.  Every row is
+//!    preceded by a **fatal** bitwise `ensure!` against the
+//!    interpreter oracle (`opt_bitwise_equal`).
 //!
 //! Results are written as machine-readable JSON (`BENCH_native.json` at
 //! the repo root by default) so the perf trajectory is diffable across
@@ -315,6 +324,110 @@ fn jobj(fields: Vec<(&str, Json)>) -> Json {
             .map(|(k, v)| (k.to_string(), v))
             .collect::<BTreeMap<String, Json>>(),
     )
+}
+
+/// ms/leapfrog of a compiled zoo model with the optimizing tape
+/// compiler on or off.  Both paths serve the *frozen* program;
+/// `optimized = false` falls back to the node-by-node interpreter (the
+/// pre-PR-9 frozen cost model), so the delta is exactly the payoff of
+/// DCE + fusion + re-slotting.
+fn time_compiled_optimized<M: EffModel + Clone>(
+    model: &M,
+    optimized: bool,
+    eps: f64,
+    draws: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut pot = compile(model.clone(), seed)?;
+    pot.set_optimized(optimized);
+    let mut sampler = NativeSampler::new(pot, TreeAlgorithm::Iterative, TIMING_DEPTH);
+    let (ms, _) = time_fixed_eps(&mut sampler, eps, draws, seed)?;
+    Ok(ms)
+}
+
+/// Time one zoo model optimized-vs-interpreted on the frozen program,
+/// enforce the bitwise oracle fatally at several probe points, append
+/// the report line, and record the JSON row (including the `ExecPlan`
+/// statistics).  Returns the speedup.
+#[allow(clippy::too_many_arguments)]
+fn bench_tape_opt<M: EffModel + Clone>(
+    name: &str,
+    model: &M,
+    eps: f64,
+    draws: usize,
+    seed: u64,
+    report: &mut String,
+    rows: &mut BTreeMap<String, Json>,
+) -> Result<f64> {
+    // bitwise oracle: the optimized plan must reproduce the frozen
+    // interpreter exactly — value and every gradient component — at
+    // every probe point, or the bench aborts
+    let mut opt_pot = compile(model.clone(), seed)?;
+    let mut int_pot = compile(model.clone(), seed)?;
+    int_pot.set_optimized(false);
+    let dim = opt_pot.dim();
+    let mut zrng = Rng::new(seed ^ 0x09A7 ^ name.len() as u64);
+    let mut g_o = vec![0.0; dim];
+    let mut g_i = vec![0.0; dim];
+    for probe in 0..4 {
+        let z: Vec<f64> = (0..dim).map(|_| 0.3 * zrng.normal()).collect();
+        let u_o = opt_pot.value_and_grad(&z, &mut g_o);
+        let u_i = int_pot.value_and_grad(&z, &mut g_i);
+        let same = u_o.to_bits() == u_i.to_bits()
+            && g_o.iter().zip(&g_i).all(|(a, b)| a.to_bits() == b.to_bits());
+        anyhow::ensure!(
+            same,
+            "optimized plan diverged bitwise from the frozen interpreter on {name} \
+             (probe {probe}) — the tape compiler must be IEEE-transparent"
+        );
+    }
+    anyhow::ensure!(
+        opt_pot.is_optimized(),
+        "optimizer did not engage on {name} — the frozen program was never compiled to a plan"
+    );
+    let stats = opt_pot
+        .plan_stats()
+        .ok_or_else(|| anyhow::anyhow!("plan stats missing on {name} after optimization"))?;
+
+    let opt_ms = time_compiled_optimized(model, true, eps, draws, seed)?;
+    let int_ms = time_compiled_optimized(model, false, eps, draws, seed)?;
+    let speedup = int_ms / opt_ms.max(1e-12);
+    report.push_str(&format!(
+        "  {name}: optimized {opt_ms:.5} ms/leapfrog | interpreted {int_ms:.5} ms/leapfrog \
+         -> {speedup:.2}x  [live {}/{}, fused runs {}, micro-ops {}, val slots {}]\n",
+        stats.nodes_live,
+        stats.nodes_total,
+        stats.fused_runs,
+        stats.micro_ops,
+        stats.peak_val_slots
+    ));
+    rows.insert(
+        name.to_string(),
+        jobj(vec![
+            ("interpreted_ms_per_leapfrog", jnum(int_ms)),
+            ("optimized_ms_per_leapfrog", jnum(opt_ms)),
+            ("opt_speedup_vs_interpreted", jnum(speedup)),
+            // the per-probe ensure! above aborts the bench on any
+            // divergence, so reaching this row implies equality
+            ("opt_bitwise_equal", Json::Bool(true)),
+            (
+                "plan",
+                jobj(vec![
+                    ("nodes_total", jnum(stats.nodes_total as f64)),
+                    ("nodes_live", jnum(stats.nodes_live as f64)),
+                    ("nodes_folded", jnum(stats.nodes_folded as f64)),
+                    ("fused_runs", jnum(stats.fused_runs as f64)),
+                    ("micro_ops", jnum(stats.micro_ops as f64)),
+                    ("composites", jnum(stats.composites as f64)),
+                    ("fwd_instrs", jnum(stats.fwd_instrs as f64)),
+                    ("bwd_instrs", jnum(stats.bwd_instrs as f64)),
+                    ("peak_val_slots", jnum(stats.peak_val_slots as f64)),
+                    ("peak_adj_slots", jnum(stats.peak_adj_slots as f64)),
+                ]),
+            ),
+        ]),
+    );
+    Ok(speedup)
 }
 
 // ---------------------------------------------------------------------------
@@ -741,6 +854,196 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
         }
         report.push('\n');
     }
+
+    // --- optimizing tape compiler: fuse, prune, re-slot ---
+    // Per zoo model: ms/leapfrog with the ExecPlan threaded-code path
+    // (the default) vs the frozen node-by-node interpreter
+    // (`set_optimized(false)`).  The interpreter is the bitwise oracle:
+    // every comparison below is a fatal `ensure!`, so a published
+    // artifact always carries `opt_bitwise_equal: true` honestly.
+    let tape_opt_json = {
+        report.push_str("== optimizing tape compiler (DCE + fusion + re-slotting) ==\n");
+        let draws = timing_draws;
+        let mut opt_rows: BTreeMap<String, Json> = BTreeMap::new();
+        bench_tape_opt(
+            "eight_schools",
+            &EightSchools::classic(),
+            1e-2,
+            draws,
+            settings.seed,
+            &mut report,
+            &mut opt_rows,
+        )?;
+        bench_tape_opt(
+            "horseshoe",
+            &Horseshoe::synthetic(settings.seed, 60, 8, 2),
+            5e-3,
+            draws,
+            settings.seed,
+            &mut report,
+            &mut opt_rows,
+        )?;
+        let mut nm_rng = Rng::new(settings.seed ^ 0x0F0F);
+        let nm = NormalMean {
+            y: (0..64).map(|_| 0.4 + nm_rng.normal()).collect(),
+            sigma: 1.2,
+        };
+        bench_tape_opt(
+            "normal_mean",
+            &nm,
+            2e-2,
+            draws,
+            settings.seed,
+            &mut report,
+            &mut opt_rows,
+        )?;
+        let (on_, od_) = if settings.quick { (800, 16) } else { (2000, 16) };
+        let dset = data::make_covtype_like(settings.seed ^ 0x9F42, on_, od_);
+        let lm = LogisticModel {
+            x: dset.x,
+            y: dset.y,
+            n: on_,
+            d: od_,
+        };
+        let logi_opt_speedup = bench_tape_opt(
+            "logistic",
+            &lm,
+            1e-3,
+            draws,
+            settings.seed,
+            &mut report,
+            &mut opt_rows,
+        )?;
+        if let Some(Json::Obj(map)) = models.get_mut("logistic") {
+            map.insert(
+                "opt_speedup_vs_interpreted".to_string(),
+                jnum(logi_opt_speedup),
+            );
+        }
+        if logi_opt_speedup <= 1.0 {
+            report.push_str(&format!(
+                "  WARNING: logistic opt_speedup_vs_interpreted = {logi_opt_speedup:.2} <= 1.0 — \
+                 the ExecPlan path regressed below the frozen interpreter\n"
+            ));
+        }
+
+        // batched lanes: the same plan compiles the lane-minor
+        // BatchTapeProgram.  K=8 runs the single wide program, the
+        // large K runs the tiled thread-per-tile engine — the two
+        // engine shapes NUTS actually uses at those widths.
+        fn time_batch<BP: BatchPotential>(
+            pot: &mut BP,
+            z0: &[f64],
+            u: &mut [f64],
+            g: &mut [f64],
+            evals: usize,
+        ) -> f64 {
+            let t0 = std::time::Instant::now();
+            for _ in 0..evals {
+                pot.value_and_grad_batch(z0, u, g);
+            }
+            t0.elapsed().as_secs_f64() * 1e3 / evals as f64
+        }
+        let (bn, bd) = if settings.quick { (400, 8) } else { (1000, 16) };
+        let bset = data::make_covtype_like(settings.seed ^ 0x0B47, bn, bd);
+        let bmodel = LogisticModel {
+            x: bset.x,
+            y: bset.y,
+            n: bn,
+            d: bd,
+        };
+        let blayout = SiteLayout::trace(&bmodel, settings.seed)?;
+        let bdim = blayout.dim;
+        let ks: &[usize] = if settings.quick { &[8, 32] } else { &[8, 512] };
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let mut lane_rows: Vec<Json> = Vec::new();
+        for &k in ks {
+            let mut zrng = Rng::new(settings.seed ^ 0x0B17 ^ k as u64);
+            let z0: Vec<f64> = (0..bdim * k).map(|_| 0.05 * zrng.normal()).collect();
+            let mut u_o = vec![0.0; k];
+            let mut g_o = vec![0.0; bdim * k];
+            let mut u_i = vec![0.0; k];
+            let mut g_i = vec![0.0; bdim * k];
+            let evals = if settings.quick { 24 } else { 64 };
+            // warm both engines (record + freeze + plan build), check
+            // the optimizer engaged, then time steady-state sweeps
+            let (opt_ms, int_ms, engaged) = if k > 64 {
+                let tile = auto_tile_width(k, threads);
+                let mut on = tiled_from_layout(&bmodel, &blayout, k, tile);
+                let mut off = tiled_from_layout(&bmodel, &blayout, k, tile);
+                off.set_optimized(false);
+                on.value_and_grad_batch(&z0, &mut u_o, &mut g_o);
+                off.value_and_grad_batch(&z0, &mut u_i, &mut g_i);
+                let engaged = on.is_optimized() && !off.is_optimized();
+                (
+                    time_batch(&mut on, &z0, &mut u_o, &mut g_o, evals),
+                    time_batch(&mut off, &z0, &mut u_i, &mut g_i, evals),
+                    engaged,
+                )
+            } else {
+                let mut on = compile_batched(bmodel.clone(), settings.seed, k)?;
+                let mut off = compile_batched(bmodel.clone(), settings.seed, k)?;
+                off.set_optimized(false);
+                on.value_and_grad_batch(&z0, &mut u_o, &mut g_o);
+                off.value_and_grad_batch(&z0, &mut u_i, &mut g_i);
+                let engaged = on.is_optimized() && !off.is_optimized();
+                (
+                    time_batch(&mut on, &z0, &mut u_o, &mut g_o, evals),
+                    time_batch(&mut off, &z0, &mut u_i, &mut g_i, evals),
+                    engaged,
+                )
+            };
+            // the timed sweeps re-evaluate the same z0, so the warmup
+            // results left in the buffers are exactly comparable
+            let bitwise = u_o
+                .iter()
+                .zip(&u_i)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+                && g_o.iter().zip(&g_i).all(|(a, b)| a.to_bits() == b.to_bits());
+            anyhow::ensure!(
+                bitwise,
+                "optimized batch plan diverged bitwise from the frozen batch interpreter at \
+                 K={k} on the compiled logistic"
+            );
+            anyhow::ensure!(
+                engaged,
+                "batched optimizer state wrong at K={k}: expected on-engine optimized and \
+                 off-engine interpreted"
+            );
+            let speedup = int_ms / opt_ms.max(1e-12);
+            report.push_str(&format!(
+                "  K={k:4}: optimized {:.6} ms/eval/lane | interpreted {:.6} ms/eval/lane \
+                 -> {speedup:.2}x (bitwise equal: {bitwise})\n",
+                opt_ms / k as f64,
+                int_ms / k as f64
+            ));
+            lane_rows.push(jobj(vec![
+                ("k", jnum(k as f64)),
+                ("interpreted_ms_per_eval_per_lane", jnum(int_ms / k as f64)),
+                ("optimized_ms_per_eval_per_lane", jnum(opt_ms / k as f64)),
+                ("opt_speedup_vs_interpreted", jnum(speedup)),
+                ("opt_bitwise_equal", Json::Bool(bitwise)),
+            ]));
+        }
+        report.push('\n');
+        jobj(vec![
+            ("models", Json::Obj(opt_rows)),
+            (
+                "batched",
+                jobj(vec![
+                    ("n", jnum(bn as f64)),
+                    ("d", jnum(bd as f64)),
+                    ("lanes", Json::Arr(lane_rows)),
+                ]),
+            ),
+            // every scalar probe and batched lane comparison above is a
+            // fatal ensure!, so this flag cannot be published as true
+            // unless every path actually matched the interpreter
+            ("opt_bitwise_equal", Json::Bool(true)),
+        ])
+    };
 
     // --- robustness overhead: containment + checkpoint bookkeeping ---
     // The fault-contained runner threads every draw through a
@@ -1259,6 +1562,7 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
             ("quick".to_string(), Json::Bool(settings.quick)),
             ("max_chains".to_string(), jnum(max_chains as f64)),
             ("frozen_vs_replay".to_string(), Json::Obj(frozen_rows)),
+            ("tape_opt".to_string(), tape_opt_json),
             ("robustness_overhead".to_string(), robustness_json),
             ("svi_native".to_string(), svi_json),
             ("subsampling".to_string(), subsampling_json),

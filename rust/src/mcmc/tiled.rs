@@ -183,10 +183,18 @@ impl<BP: BatchPotential + Send> TiledBatchPotential<BP> {
         self.max_threads.min(self.tiles.len()).max(1)
     }
 
+    /// Shared access to the per-tile potentials (lane order) — for
+    /// read-only cross-cutting queries such as aggregating the
+    /// optimizing compiler's plan statistics.
+    pub fn tiles(&self) -> &[BP] {
+        &self.tiles
+    }
+
     /// Mutable access to the per-tile potentials (lane order) — the
     /// hook that lets cross-cutting operations (e.g. the subsample
-    /// minibatch rebind in [`crate::compile::batch_potential`]) fan
-    /// out over every tile's own program.
+    /// minibatch rebind or the `set_optimized` switch in
+    /// [`crate::compile::batch_potential`]) fan out over every tile's
+    /// own program.
     pub fn tiles_mut(&mut self) -> &mut [BP] {
         &mut self.tiles
     }

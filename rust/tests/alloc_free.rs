@@ -342,6 +342,51 @@ fn frozen_program_evaluations_are_allocation_free() {
     );
 }
 
+/// The optimizing tape compiler's execution plan (on by default since
+/// PR 9) serves scalar and batched frozen evaluations with zero
+/// steady-state allocations — the plan and its register files are
+/// built eagerly at freeze time, inside warmup.  The interpreter
+/// fallback (`set_optimized(false)`) must hit the same bar, pinning
+/// that *both* serving paths are allocation-free rather than one
+/// masking the other.
+#[test]
+fn optimized_plan_evaluations_are_allocation_free() {
+    // optimizer on (the default) — assert the plan is actually serving
+    let mut es = compile(EightSchools::classic(), 0).unwrap();
+    {
+        let dim = es.dim();
+        let z = vec![0.1; dim];
+        let mut g = vec![0.0; dim];
+        let _ = es.value_and_grad(&z, &mut g); // record + freeze + optimize
+    }
+    assert!(es.is_optimized(), "optimizer should be on by default");
+    assert_frozen_evals_alloc_free("optimized eight-schools", es, 71);
+
+    // optimizer off: the interpreter fallback, same zero bar
+    let mut es_off = compile(EightSchools::classic(), 0).unwrap();
+    es_off.set_optimized(false);
+    {
+        let dim = es_off.dim();
+        let z = vec![0.1; dim];
+        let mut g = vec![0.0; dim];
+        let _ = es_off.value_and_grad(&z, &mut g);
+    }
+    assert!(!es_off.is_optimized());
+    assert_frozen_evals_alloc_free("interpreted eight-schools", es_off, 72);
+
+    // batched plan, K = 4
+    let mut esb = compile_batched(EightSchools::classic(), 0, 4).unwrap();
+    {
+        let dim = esb.dim();
+        let z = vec![0.1; dim * 4];
+        let mut u = vec![0.0; 4];
+        let mut g = vec![0.0; dim * 4];
+        esb.value_and_grad_batch(&z, &mut u, &mut g);
+    }
+    assert!(esb.is_optimized(), "batched optimizer should be on by default");
+    assert_frozen_batch_evals_alloc_free("optimized batched eight-schools x4", esb, 73);
+}
+
 /// Steady-state bar for the **native SVI engine**: once the guide, the
 /// optimizer state, the ELBO scratch and the frozen tape have warmed
 /// up, a full SVI step — noise draw, K-particle ELBO gradient,

@@ -1,0 +1,520 @@
+//! The optimizing tape compiler's bitwise gate (`autodiff::opt`).
+//!
+//! The interpreter is the oracle: for every program the optimizer may
+//! prune, fold, fuse, and re-slot however it likes, but the executed
+//! plan must reproduce interpreted replay **bit for bit** — values,
+//! gradients, and rebound-minibatch results alike.  Three layers:
+//!
+//! 1. **Property fuzz**: 500 randomly generated programs (random
+//!    elementwise ops, fused composites, data regions with rebindable
+//!    Nodes/Coeffs/Consts slots, dead branches, constant subgraphs,
+//!    `scale(·, 1.0)` / `scale(·, 0.0)` shapes) across lane counts
+//!    K ∈ {1 (scalar), 1, 4, 64 (batched)}, each compared bitwise
+//!    against the interpreter before and after random data-slot
+//!    rebinds.
+//! 2. **Subsampling regression**: rebinding a minibatch *after*
+//!    optimization (`SubsampleRebind::set_minibatch` on a
+//!    `CompiledModel` serving from the optimized plan) must match a
+//!    fresh interpreter-only compile on the same rows, for both
+//!    B < N and the scale-free B == N case.
+//! 3. **End-to-end**: full NUTS runs with the optimizer on vs off must
+//!    be bitwise identical across all three chain methods.
+
+use fugue::autodiff::{BatchTape, BatchTapeProgram, Tape, TapeProgram, Var};
+use fugue::compile::zoo::EightSchools;
+use fugue::compile::{compile, SubsampleRebind, SubsampledLogistic, SubsampledModel};
+use fugue::coordinator::{
+    run_compiled_chains_method, run_compiled_chains_method_opt, ChainMethod, ChainResult,
+    NutsOptions,
+};
+use fugue::data::make_covtype_like;
+use fugue::data::stream::InMemoryRows;
+use fugue::mcmc::Potential;
+use fugue::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// random program generators
+// ---------------------------------------------------------------------------
+
+fn pick(rng: &mut Rng, pool: &[Var]) -> Var {
+    pool[rng.below(pool.len())]
+}
+
+/// Record a random scalar program: a pool of inputs and constants grown
+/// by randomly chosen ops.  Roughly half the pool never reaches the
+/// output (DCE fodder), constant-only subgraphs appear naturally
+/// (folding fodder), and data regions register every flavour of
+/// rebindable slot.
+fn random_scalar_program(seed: u64) -> TapeProgram {
+    let mut rng = Rng::new(seed);
+    let mut tape = Tape::new();
+    let n_inputs = 1 + rng.below(4);
+    let mut pool: Vec<Var> = (0..n_inputs).map(|_| tape.input(rng.normal())).collect();
+    for _ in 0..(1 + rng.below(3)) {
+        pool.push(tape.constant(rng.uniform_in(0.2, 3.0)));
+    }
+    let steps = 12 + rng.below(28);
+    for _ in 0..steps {
+        let x = pick(&mut rng, &pool);
+        let y = pick(&mut rng, &pool);
+        let v = match rng.below(24) {
+            0 => tape.add(x, y),
+            1 => tape.sub(x, y),
+            2 => tape.mul(x, y),
+            3 => tape.div(x, y),
+            4 => tape.neg(x),
+            5 => tape.exp(x),
+            6 => tape.ln(x),
+            7 => tape.log1p(x),
+            8 => tape.sqrt(x),
+            9 => tape.sigmoid(x),
+            10 => tape.softplus(x),
+            11 => tape.tanh(x),
+            12 => tape.square(x),
+            13 => tape.powi(x, rng.below(5) as i32 - 2),
+            // the lik_scale shapes: exact 1.0 and exact 0.0 scales
+            // must survive every pass untouched
+            14 => tape.scale(x, 1.0),
+            15 => tape.scale(x, 0.0),
+            16 => tape.scale(x, rng.normal()),
+            17 => tape.offset(x, rng.normal()),
+            18 => {
+                let k = 2 + rng.below(3);
+                let xs: Vec<Var> = (0..k).map(|_| pick(&mut rng, &pool)).collect();
+                tape.sum(&xs)
+            }
+            19 => {
+                let k = 2 + rng.below(3);
+                let xs: Vec<Var> = (0..k).map(|_| pick(&mut rng, &pool)).collect();
+                tape.logsumexp(&xs)
+            }
+            20 => {
+                let n = 1 + rng.below(5);
+                let ys: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                tape.normal_iid_obs(x, y, &ys)
+            }
+            21 => {
+                let n = 1 + rng.below(5);
+                let ys: Vec<f64> = (0..n).map(|_| rng.below(2) as f64).collect();
+                tape.bernoulli_logits_iid_obs(x, &ys)
+            }
+            22 => {
+                // a rebindable data block: Nodes, Coeffs, or Consts
+                tape.begin_data_region();
+                let v = match rng.below(3) {
+                    0 => {
+                        let n = 1 + rng.below(4);
+                        let leaves: Vec<Var> =
+                            (0..n).map(|_| tape.constant(rng.normal())).collect();
+                        tape.register_data_nodes(&leaves);
+                        let s = tape.sum(&leaves);
+                        tape.add(s, x)
+                    }
+                    1 => {
+                        let n = 1 + rng.below(4);
+                        let ws: Vec<Var> = (0..n).map(|_| pick(&mut rng, &pool)).collect();
+                        let cs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                        tape.dot_const(&ws, &cs)
+                    }
+                    _ => {
+                        let n = 1 + rng.below(5);
+                        let ys: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                        tape.normal_iid_obs(x, y, &ys)
+                    }
+                };
+                tape.end_data_region();
+                v
+            }
+            _ => {
+                let n = 1 + rng.below(4);
+                let locs: Vec<Var> = (0..n).map(|_| pick(&mut rng, &pool)).collect();
+                let ys: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                tape.normal_plate_obs(&locs, y, &ys)
+            }
+        };
+        pool.push(v);
+    }
+    // output mixes a few pool nodes; everything else is dead
+    let mut out = pick(&mut rng, &pool);
+    for _ in 0..rng.below(3) {
+        let v = pick(&mut rng, &pool);
+        out = tape.add(out, v);
+    }
+    tape.freeze(out)
+}
+
+/// Batched twin of [`random_scalar_program`] (no `tanh`/`logsumexp` —
+/// the batch tape doesn't record them; `sum`/`dot_const` exercise the
+/// lane-shared composite form instead).
+fn random_batch_program(seed: u64, lanes: usize) -> BatchTapeProgram {
+    let mut rng = Rng::new(seed);
+    let mut tape = BatchTape::new(lanes);
+    let n_inputs = 1 + rng.below(4);
+    let mut pool: Vec<Var> = (0..n_inputs)
+        .map(|_| {
+            let vals: Vec<f64> = (0..lanes).map(|_| rng.normal()).collect();
+            tape.input(&vals)
+        })
+        .collect();
+    for _ in 0..(1 + rng.below(3)) {
+        pool.push(tape.constant(rng.uniform_in(0.2, 3.0)));
+    }
+    let steps = 12 + rng.below(28);
+    for _ in 0..steps {
+        let x = pick(&mut rng, &pool);
+        let y = pick(&mut rng, &pool);
+        let v = match rng.below(22) {
+            0 => tape.add(x, y),
+            1 => tape.sub(x, y),
+            2 => tape.mul(x, y),
+            3 => tape.div(x, y),
+            4 => tape.neg(x),
+            5 => tape.exp(x),
+            6 => tape.ln(x),
+            7 => tape.log1p(x),
+            8 => tape.sqrt(x),
+            9 => tape.sigmoid(x),
+            10 => tape.softplus(x),
+            11 => tape.square(x),
+            12 => tape.powi(x, rng.below(5) as i32 - 2),
+            13 => tape.scale(x, 1.0),
+            14 => tape.scale(x, 0.0),
+            15 => tape.scale(x, rng.normal()),
+            16 => tape.offset(x, rng.normal()),
+            17 => {
+                let k = 2 + rng.below(3);
+                let xs: Vec<Var> = (0..k).map(|_| pick(&mut rng, &pool)).collect();
+                tape.sum(&xs)
+            }
+            18 => {
+                let n = 1 + rng.below(5);
+                let ys: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                tape.normal_iid_obs(x, y, &ys)
+            }
+            19 => {
+                let n = 1 + rng.below(5);
+                let ys: Vec<f64> = (0..n).map(|_| rng.below(2) as f64).collect();
+                tape.bernoulli_logits_iid_obs(x, &ys)
+            }
+            20 => {
+                tape.begin_data_region();
+                let v = match rng.below(3) {
+                    0 => {
+                        let n = 1 + rng.below(4);
+                        let leaves: Vec<Var> =
+                            (0..n).map(|_| tape.constant(rng.normal())).collect();
+                        tape.register_data_nodes(&leaves);
+                        let s = tape.sum(&leaves);
+                        tape.add(s, x)
+                    }
+                    1 => {
+                        let n = 1 + rng.below(4);
+                        let ws: Vec<Var> = (0..n).map(|_| pick(&mut rng, &pool)).collect();
+                        let cs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                        tape.dot_const(&ws, &cs)
+                    }
+                    _ => {
+                        let n = 1 + rng.below(5);
+                        let ys: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                        tape.normal_iid_obs(x, y, &ys)
+                    }
+                };
+                tape.end_data_region();
+                v
+            }
+            _ => {
+                let n = 1 + rng.below(4);
+                let locs: Vec<Var> = (0..n).map(|_| pick(&mut rng, &pool)).collect();
+                let ys: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                tape.normal_plate_obs(&locs, y, &ys)
+            }
+        };
+        pool.push(v);
+    }
+    let mut out = pick(&mut rng, &pool);
+    for _ in 0..rng.below(3) {
+        let v = pick(&mut rng, &pool);
+        out = tape.add(out, v);
+    }
+    tape.freeze(out)
+}
+
+// ---------------------------------------------------------------------------
+// bitwise comparison drivers
+// ---------------------------------------------------------------------------
+
+fn compare_scalar(
+    prog: &mut TapeProgram,
+    opt: &mut fugue::autodiff::OptTapeProgram,
+    rng: &mut Rng,
+    points: usize,
+    label: &str,
+) {
+    let n = prog.num_inputs();
+    assert_eq!(opt.num_inputs(), n, "{label}: input count");
+    let mut gi = vec![0.0; n];
+    let mut go = vec![0.0; n];
+    for p in 0..points {
+        let z: Vec<f64> = (0..n).map(|_| 1.5 * rng.normal()).collect();
+        let ui = prog.forward(&z);
+        prog.backward();
+        prog.input_adjoints(&mut gi);
+        let uo = opt.forward(&z);
+        opt.backward();
+        opt.input_adjoints(&mut go);
+        assert_eq!(
+            ui.to_bits(),
+            uo.to_bits(),
+            "{label}: forward value diverged at point {p} ({ui} vs {uo})"
+        );
+        for i in 0..n {
+            assert_eq!(
+                gi[i].to_bits(),
+                go[i].to_bits(),
+                "{label}: grad[{i}] diverged at point {p} ({} vs {})",
+                gi[i],
+                go[i]
+            );
+        }
+    }
+}
+
+fn compare_batch(
+    prog: &mut BatchTapeProgram,
+    opt: &mut fugue::autodiff::OptBatchTapeProgram,
+    lanes: usize,
+    rng: &mut Rng,
+    points: usize,
+    label: &str,
+) {
+    let n = prog.num_inputs();
+    assert_eq!(opt.num_inputs(), n, "{label}: input count");
+    assert_eq!(opt.lanes(), lanes, "{label}: lane count");
+    let mut gi = vec![0.0; n * lanes];
+    let mut go = vec![0.0; n * lanes];
+    for p in 0..points {
+        let z: Vec<f64> = (0..n * lanes).map(|_| 1.5 * rng.normal()).collect();
+        prog.forward(&z);
+        prog.backward();
+        prog.input_adjoints(&mut gi);
+        opt.forward(&z);
+        opt.backward();
+        opt.input_adjoints(&mut go);
+        for (k, (ui, uo)) in prog
+            .output_values()
+            .iter()
+            .zip(opt.output_values())
+            .enumerate()
+        {
+            assert_eq!(
+                ui.to_bits(),
+                uo.to_bits(),
+                "{label}: lane {k} value diverged at point {p} ({ui} vs {uo})"
+            );
+        }
+        for i in 0..n * lanes {
+            assert_eq!(
+                gi[i].to_bits(),
+                go[i].to_bits(),
+                "{label}: grad[{i}] diverged at point {p}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the 500-program property gate
+// ---------------------------------------------------------------------------
+
+/// 200 random scalar programs: optimized plan == interpreted replay,
+/// bit for bit, before and after rebinding every data slot.
+#[test]
+fn fuzz_scalar_optimized_matches_interpreter_bitwise() {
+    for seed in 0..200u64 {
+        let mut prog = random_scalar_program(seed);
+        let mut opt = prog.optimize();
+        let mut rng = Rng::new(seed ^ 0xA5A5_5A5A);
+        let label = format!("scalar seed {seed}");
+        compare_scalar(&mut prog, &mut opt, &mut rng, 4, &label);
+        // rebind every registered data slot on both paths and re-check
+        for s in 0..prog.num_data_slots() {
+            let len = prog.data_slot_len(s);
+            let data: Vec<f64> = (0..len).map(|_| rng.uniform_in(0.1, 2.0)).collect();
+            prog.rebind_data_slot(s, &data);
+            opt.rebind_data_slot(s, &data);
+        }
+        if prog.num_data_slots() > 0 {
+            let label = format!("scalar seed {seed} (rebound)");
+            compare_scalar(&mut prog, &mut opt, &mut rng, 2, &label);
+        }
+    }
+}
+
+/// 300 random batched programs (100 per lane count, K in {1, 4, 64}):
+/// same bitwise gate, lane for lane.
+#[test]
+fn fuzz_batched_optimized_matches_interpreter_bitwise() {
+    for &lanes in &[1usize, 4, 64] {
+        for seed in 0..100u64 {
+            let mut prog = random_batch_program(seed, lanes);
+            let mut opt = prog.optimize();
+            let mut rng = Rng::new(seed ^ 0x5A5A_A5A5 ^ (lanes as u64) << 32);
+            let label = format!("batch K={lanes} seed {seed}");
+            compare_batch(&mut prog, &mut opt, lanes, &mut rng, 3, &label);
+            for s in 0..prog.num_data_slots() {
+                let len = prog.data_slot_len(s);
+                let data: Vec<f64> = (0..len).map(|_| rng.uniform_in(0.1, 2.0)).collect();
+                prog.rebind_data_slot(s, &data);
+                opt.rebind_data_slot(s, &data);
+            }
+            if prog.num_data_slots() > 0 {
+                let label = format!("batch K={lanes} seed {seed} (rebound)");
+                compare_batch(&mut prog, &mut opt, lanes, &mut rng, 2, &label);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// subsampling regression (PR 8 interaction)
+// ---------------------------------------------------------------------------
+
+fn small_rows(n: usize, d: usize) -> InMemoryRows {
+    let data = make_covtype_like(5, n, d);
+    InMemoryRows::new(data.x, data.y, n, d)
+}
+
+/// Rebinding a minibatch on a `CompiledModel` serving from the
+/// *optimized* plan must match a fresh interpreter-only compile on the
+/// same rows — for B < N (a `lik_scale` Scale node in the program) and
+/// B == N (scale exactly 1.0, no Scale node recorded).  Guards the
+/// satellite hazard: neither the scale node nor the data slots may be
+/// folded or pruned out from under the rebind.
+#[test]
+fn rebound_minibatch_after_optimization_matches_interpreter() {
+    for &(n, d, bsz) in &[(10usize, 3usize, 4usize), (10, 3, 10)] {
+        let rows = small_rows(n, d);
+        let mut sub = compile(SubsampledLogistic::new(rows.clone(), bsz), 0).unwrap();
+        let dim = sub.dim();
+        let z = vec![0.2; dim];
+        let mut g = vec![0.0; dim];
+        let _ = sub.value_and_grad(&z, &mut g); // record + freeze + optimize
+        assert!(sub.is_optimized(), "optimizer should be on by default");
+
+        let idx: Vec<usize> = (0..bsz).map(|i| (3 * i + 1) % n).collect();
+        sub.set_minibatch(&idx);
+        let u = sub.value_and_grad(&z, &mut g);
+
+        let mut fresh_model = SubsampledLogistic::new(rows, bsz);
+        fresh_model.load_rows(&idx);
+        let mut fresh = compile(fresh_model, 0).unwrap();
+        fresh.set_optimized(false); // interpreter oracle
+        let mut gf = vec![0.0; dim];
+        let _ = fresh.value_and_grad(&z, &mut gf); // record + freeze
+        let uf = fresh.value_and_grad(&z, &mut gf);
+        assert!(!fresh.is_optimized());
+        assert_eq!(u.to_bits(), uf.to_bits(), "B={bsz}: potential");
+        for i in 0..dim {
+            assert_eq!(g[i].to_bits(), gf[i].to_bits(), "B={bsz}: grad[{i}]");
+        }
+    }
+}
+
+/// Repeated minibatch swaps with the optimizer on vs off stay in
+/// lockstep — the slot-remap tables keep working across many rebinds.
+#[test]
+fn minibatch_swaps_agree_optimized_vs_interpreted() {
+    let (n, d, bsz) = (12usize, 3usize, 5usize);
+    let rows = small_rows(n, d);
+    let mut on = compile(SubsampledLogistic::new(rows.clone(), bsz), 0).unwrap();
+    let mut off = compile(SubsampledLogistic::new(rows, bsz), 0).unwrap();
+    off.set_optimized(false);
+    let dim = on.dim();
+    let mut rng = Rng::new(31);
+    let mut ga = vec![0.0; dim];
+    let mut gb = vec![0.0; dim];
+    let z0 = vec![0.1; dim];
+    let _ = on.value_and_grad(&z0, &mut ga);
+    let _ = off.value_and_grad(&z0, &mut gb);
+    for step in 0..6 {
+        let idx = rng.choose(n, bsz);
+        on.set_minibatch(&idx);
+        off.set_minibatch(&idx);
+        let z: Vec<f64> = (0..dim).map(|_| 0.5 * rng.normal()).collect();
+        let ua = on.value_and_grad(&z, &mut ga);
+        let ub = off.value_and_grad(&z, &mut gb);
+        assert_eq!(ua.to_bits(), ub.to_bits(), "swap {step}: potential");
+        for i in 0..dim {
+            assert_eq!(ga[i].to_bits(), gb[i].to_bits(), "swap {step}: grad[{i}]");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end: chains with the optimizer on vs off
+// ---------------------------------------------------------------------------
+
+fn assert_bitwise_equal(a: &[ChainResult], b: &[ChainResult], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: chain count");
+    for (c, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.samples, y.samples, "{label}: chain {c} samples");
+        assert_eq!(x.step_size, y.step_size, "{label}: chain {c} step size");
+        assert_eq!(x.inv_mass, y.inv_mass, "{label}: chain {c} mass matrix");
+        assert_eq!(x.divergences, y.divergences, "{label}: chain {c} divergences");
+        assert_eq!(
+            x.stats.accept_prob, y.stats.accept_prob,
+            "{label}: chain {c} accept stats"
+        );
+        assert_eq!(
+            x.total_leapfrogs, y.total_leapfrogs,
+            "{label}: chain {c} leapfrogs"
+        );
+    }
+}
+
+/// Full NUTS runs — warmup adaptation, tree building, the lot — must be
+/// bitwise identical with the optimizing compiler on (the default) and
+/// off, for every chain method.
+#[test]
+fn chains_agree_optimized_vs_interpreted_all_methods() {
+    let model = EightSchools::classic();
+    let opts = NutsOptions {
+        num_warmup: 150,
+        num_samples: 200,
+        seed: 42,
+        ..Default::default()
+    };
+    for method in [
+        ChainMethod::Sequential,
+        ChainMethod::Parallel,
+        ChainMethod::Vectorized,
+    ] {
+        let (_, on) = run_compiled_chains_method(&model, method, 3, 10, &opts).unwrap();
+        let (_, off) =
+            run_compiled_chains_method_opt(&model, method, 3, 10, &opts, false).unwrap();
+        let label = format!("eight-schools {}", method.name());
+        assert_bitwise_equal(&on, &off, &label);
+    }
+}
+
+/// The optimizer must actually shrink the program on a real model, not
+/// just match it: DCE'd/folded nodes, fused superblocks, and a register
+/// file narrower than one slot per node.
+#[test]
+fn plan_stats_show_real_optimization_on_a_zoo_model() {
+    let mut pot = compile(EightSchools::classic(), 0).unwrap();
+    let dim = pot.dim();
+    let z = vec![0.1; dim];
+    let mut g = vec![0.0; dim];
+    let _ = pot.value_and_grad(&z, &mut g);
+    let st = pot.plan_stats().expect("optimized plan present");
+    assert!(st.nodes_total > 0);
+    assert!(st.nodes_live <= st.nodes_total);
+    assert!(st.fused_runs >= 1, "no superblocks formed: {st:?}");
+    assert!(st.micro_ops >= 1);
+    assert!(
+        st.peak_val_slots < st.nodes_total,
+        "no slot reuse: {st:?}"
+    );
+    assert!(st.fwd_instrs < st.nodes_live.max(1) + 1);
+}
