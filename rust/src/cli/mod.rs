@@ -41,6 +41,9 @@ const VALUE_FLAGS: &[&str] = &[
     "subsample-size",
     "rows",
     "dim",
+    "trace-out",
+    "metrics-out",
+    "metrics-every",
 ];
 
 impl Args {

@@ -252,6 +252,12 @@ impl<M: EffModel> BatchPotential for BatchedCompiledModel<M> {
                 // compile eagerly so steady-state evaluations never
                 // allocate — the plan build is absorbed into warmup
                 self.opt = Some(prog.optimize());
+                // one-time freeze event: surface the compiled plan's
+                // instruction counts to the flight recorder
+                if let Some(st) = self.opt.as_ref().map(|o| o.stats()) {
+                    crate::obs::Recorder::global()
+                        .record_plan_instrs(st.fwd_instrs as u64, st.bwd_instrs as u64);
+                }
             }
             self.program = Some(prog);
             // release builds never interpret again (no periodic audit),

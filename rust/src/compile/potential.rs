@@ -40,6 +40,7 @@ use crate::compile::subsample::{SubsampleRebind, SubsampledModel};
 use crate::compile::{pool_take, DistV, EffModel, ProbCtx};
 use crate::effects::site_key;
 use crate::mcmc::Potential;
+use crate::obs::{Recorder, SpanKind, SWEEP_SAMPLE_PERIOD};
 
 /// In debug builds, every N-th frozen evaluation re-runs the
 /// interpreter path and asserts the frozen program still agrees
@@ -77,6 +78,10 @@ pub struct CompiledModel<M: EffModel> {
     #[cfg(debug_assertions)]
     check_grad: Vec<f64>,
     evals: u64,
+    /// flight-recorder handle; times forward/reverse sweeps on a
+    /// 1-in-[`SWEEP_SAMPLE_PERIOD`] sample of evaluations (see
+    /// [`crate::obs`])
+    recorder: Recorder,
 }
 
 impl<M: EffModel> CompiledModel<M> {
@@ -96,7 +101,15 @@ impl<M: EffModel> CompiledModel<M> {
             #[cfg(debug_assertions)]
             check_grad: vec![0.0; dim],
             evals: 0,
+            recorder: Recorder::global(),
         }
+    }
+
+    /// Override the flight recorder captured at construction (tests
+    /// inject local registries here; the default is the process
+    /// global, which is disabled outside the CLI).
+    pub fn set_recorder(&mut self, recorder: Recorder) {
+        self.recorder = recorder;
     }
 
     /// The compiled parameter layout (site spans, transforms, labels).
@@ -248,6 +261,10 @@ impl<M: EffModel> Potential for CompiledModel<M> {
                 // compile eagerly so steady-state evaluations never
                 // allocate — the plan build is absorbed into warmup
                 self.opt = Some(prog.optimize());
+                if let Some(st) = self.opt.as_ref().map(|o| o.stats()) {
+                    self.recorder
+                        .record_plan_instrs(st.fwd_instrs as u64, st.bwd_instrs as u64);
+                }
             }
             self.program = Some(prog);
             // release builds never interpret again (no periodic audit),
@@ -257,16 +274,46 @@ impl<M: EffModel> Potential for CompiledModel<M> {
             self.tape.clear_and_shrink();
             return u;
         }
+        // Sweep timing is *sampled* (1 in SWEEP_SAMPLE_PERIOD evals) so
+        // the clock reads stay far under the observability overhead bar
+        // even for sub-microsecond potentials.  Pure observation: the
+        // arithmetic below is identical whether or not it is timed.
+        let rec = self.recorder;
+        let timed = rec.enabled() && self.evals % SWEEP_SAMPLE_PERIOD == 0;
         let u = if let Some(opt) = self.opt.as_mut() {
+            let fwd = if timed {
+                Some(std::time::Instant::now())
+            } else {
+                None
+            };
             let u = opt.forward(z);
+            let bwd = fwd.map(|t0| {
+                rec.add_span_nanos(SpanKind::ForwardSweep, t0.elapsed().as_nanos() as u64);
+                std::time::Instant::now()
+            });
             opt.backward();
             opt.input_adjoints(grad);
+            if let Some(t0) = bwd {
+                rec.add_span_nanos(SpanKind::ReverseSweep, t0.elapsed().as_nanos() as u64);
+            }
             u
         } else {
             let prog = self.program.as_mut().expect("frozen program present");
+            let fwd = if timed {
+                Some(std::time::Instant::now())
+            } else {
+                None
+            };
             let u = prog.forward(z);
+            let bwd = fwd.map(|t0| {
+                rec.add_span_nanos(SpanKind::ForwardSweep, t0.elapsed().as_nanos() as u64);
+                std::time::Instant::now()
+            });
             prog.backward();
             prog.input_adjoints(grad);
+            if let Some(t0) = bwd {
+                rec.add_span_nanos(SpanKind::ReverseSweep, t0.elapsed().as_nanos() as u64);
+            }
             u
         };
         #[cfg(debug_assertions)]

@@ -7,6 +7,7 @@ use anyhow::Result;
 use crate::coordinator::sampler::Sampler;
 use crate::coordinator::warmup::WarmupSchedule;
 use crate::mcmc::{DualAverage, Welford};
+use crate::obs::{Phase, Recorder, SpanKind};
 use crate::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -216,6 +217,9 @@ pub(crate) fn advance_chain<S: Sampler>(
         cur.sample_leapfrogs += tr.num_leapfrog as u64;
     }
     cur.i = i + 1;
+    // flight recorder: trace the (already updated) step size; pure
+    // observation, after all adaptation decisions for this draw
+    Recorder::global().record_step_size(cur.step_size);
     Ok(())
 }
 
@@ -231,19 +235,28 @@ pub fn run_chain<S: Sampler>(
     let closes = schedule.window_closes();
     let total = opts.num_warmup + opts.num_samples;
 
+    let rec = Recorder::global();
     let mut cur = ChainCursor::new(init_z, opts);
     let t_warm = std::time::Instant::now();
     let mut warmup_secs = 0.0;
+    rec.set_phase(if opts.num_warmup > 0 {
+        Phase::Warmup
+    } else {
+        Phase::Sampling
+    });
     while cur.i < total {
         advance_chain(sampler, &mut cur, opts, &schedule, &closes)?;
         if cur.i == opts.num_warmup {
             warmup_secs = t_warm.elapsed().as_secs_f64();
+            rec.set_phase(Phase::Sampling);
         }
     }
     if opts.num_warmup == 0 {
         warmup_secs = 0.0;
     }
     let sample_secs = t_warm.elapsed().as_secs_f64() - warmup_secs;
+    rec.add_span_secs(SpanKind::Warmup, warmup_secs);
+    rec.add_span_secs(SpanKind::Sampling, sample_secs);
     Ok(cur.into_result(warmup_secs, sample_secs))
 }
 

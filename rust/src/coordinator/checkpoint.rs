@@ -50,6 +50,7 @@ use crate::coordinator::warmup::WarmupSchedule;
 use crate::error::InferenceError;
 use crate::data::stream::MinibatchScheduler;
 use crate::mcmc::{DualAverage, Welford};
+use crate::obs::{Counter, Recorder, SpanKind};
 use crate::rng::Rng;
 use crate::svi::native::{
     BatchedParticles, NativeSvi, NativeSviResult, ScalarParticles, SviCursor, SviOptions,
@@ -156,6 +157,11 @@ fn field<T>(
 }
 
 fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    // flight recorder: checkpoint I/O is a wall-clock span + write
+    // counter — observation only, the bytes written are untouched
+    let rec = Recorder::global();
+    let _io_span = rec.span(SpanKind::CheckpointIo);
+    rec.incr(Counter::CheckpointWrites);
     let mut tmp = path.as_os_str().to_owned();
     tmp.push(".tmp");
     let tmp = PathBuf::from(tmp);

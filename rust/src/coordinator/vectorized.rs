@@ -35,6 +35,7 @@ use crate::coordinator::sampler::{NativeSampler, TreeAlgorithm};
 use crate::coordinator::warmup::WarmupSchedule;
 use crate::mcmc::batch_nuts::{draw_batch, BatchTreeWorkspace};
 use crate::mcmc::{auto_tile_width, BatchPotential, DrawStats, DualAverage, Welford};
+use crate::obs::{Phase, Recorder, SpanKind};
 use crate::rng::Rng;
 
 /// Chain counts above this ride the tiled massive-lane engine
@@ -222,6 +223,16 @@ pub fn run_chains_vectorized_from<BP: BatchPotential + ?Sized>(
     let mut warmup_secs = 0.0;
     let mut completed = true;
 
+    // flight recorder: pure observation of already-computed values —
+    // never consumes RNG, never reorders sampler fp ops (bitwise gate
+    // in rust/tests/observability.rs)
+    let rec = Recorder::global();
+    rec.set_phase(if i0 < opts.num_warmup {
+        Phase::Warmup
+    } else {
+        Phase::Sampling
+    });
+
     for i in i0..total {
         if let Some(d) = deadline {
             if std::time::Instant::now() >= d {
@@ -289,8 +300,14 @@ pub fn run_chains_vectorized_from<BP: BatchPotential + ?Sized>(
             }
             cursors[k].i = i + 1;
         }
+        // lane 0's step size stands in for the lock-step trajectory —
+        // recorded after all adaptation decisions for this draw
+        if let Some(&s) = steps.first() {
+            rec.record_step_size(s);
+        }
         if i + 1 == opts.num_warmup {
             warmup_secs = t_warm.elapsed().as_secs_f64();
+            rec.set_phase(Phase::Sampling);
         }
         if checkpoint_every > 0 && (i + 1) % checkpoint_every == 0 && i + 1 < total {
             sync_cursors(cursors, &rngs, &das, &steps, &welfords, &z, &inv_mass, dim);
@@ -301,6 +318,8 @@ pub fn run_chains_vectorized_from<BP: BatchPotential + ?Sized>(
         warmup_secs = 0.0;
     }
     let sample_secs = t_warm.elapsed().as_secs_f64() - warmup_secs;
+    rec.add_span_secs(SpanKind::Warmup, warmup_secs);
+    rec.add_span_secs(SpanKind::Sampling, sample_secs);
 
     sync_cursors(cursors, &rngs, &das, &steps, &welfords, &z, &inv_mass, dim);
     Ok((warmup_secs, sample_secs, completed))

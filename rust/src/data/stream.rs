@@ -22,6 +22,7 @@
 //! the permutation and resume bitwise-identically
 //! (`rust/tests/subsampling.rs`).
 
+use crate::obs::{Counter, Recorder};
 use crate::ppl::special::sigmoid;
 use crate::rng::Rng;
 
@@ -174,6 +175,9 @@ pub struct MinibatchScheduler {
     rng: Rng,
     /// RNG state at the start of the current epoch (pre-shuffle)
     epoch_state: ([u64; 4], Option<f64>),
+    /// Flight recorder ([`crate::obs`]): epochs completed and rows
+    /// streamed — pure counters, never touches the shuffle RNG.
+    recorder: Recorder,
 }
 
 impl MinibatchScheduler {
@@ -197,9 +201,16 @@ impl MinibatchScheduler {
             epoch: 0,
             rng,
             epoch_state: ([0; 4], None),
+            recorder: Recorder::global(),
         };
         s.begin_epoch();
         s
+    }
+
+    /// Point this scheduler's flight-recorder counters at an explicit
+    /// registry (tests; normal construction picks up the global one).
+    pub fn set_recorder(&mut self, recorder: Recorder) {
+        self.recorder = recorder;
     }
 
     /// Snapshot the RNG, reset the permutation to identity, and (unless
@@ -222,8 +233,10 @@ impl MinibatchScheduler {
     pub fn next_batch(&mut self) -> &[usize] {
         if self.pos + self.batch > self.total {
             self.epoch += 1;
+            self.recorder.incr(Counter::Epochs);
             self.begin_epoch();
         }
+        self.recorder.add(Counter::RowsStreamed, self.batch as u64);
         let b = &self.perm[self.pos..self.pos + self.batch];
         self.pos += self.batch;
         b

@@ -68,6 +68,13 @@
 //!    lane-minor batch programs at K ∈ {8, 512}.  Every row is
 //!    preceded by a **fatal** bitwise `ensure!` against the
 //!    interpreter oracle (`opt_bitwise_equal`).
+//! 10. **observability overhead** (`observability_overhead`):
+//!    ms/leapfrog of the compiled logistic model with the flight
+//!    recorder ([`crate::obs`]) disabled vs installed, gated by a
+//!    **fatal** bitwise `ensure!` that the two runs' draws are
+//!    identical (`recorder_bitwise_equal` — the recorder must never
+//!    consume RNG or reorder sampler arithmetic), with a < 1%
+//!    `overhead_frac` warning bar.
 //!
 //! Results are written as machine-readable JSON (`BENCH_native.json` at
 //! the repo root by default) so the perf trajectory is diffable across
@@ -1124,6 +1131,100 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
         ])
     };
 
+    // --- observability overhead: flight recorder on vs off ---
+    // When disabled the recorder is one relaxed atomic-pointer load per
+    // draw; when enabled it only stores values the sampler already
+    // computed.  Both contracts are gated here: the on/off runs must be
+    // bitwise identical (fatal — the recorder may not consume RNG or
+    // reorder floating-point work), and the ms/leapfrog delta must stay
+    // under 1% (warning, not fatal, to keep shared-runner noise from
+    // flaking the bench).
+    let observability_json = {
+        report.push_str("== observability overhead (flight recorder on vs off) ==\n");
+        let (obn, obd) = if settings.quick { (800, 16) } else { (2000, 16) };
+        let dset = data::make_covtype_like(settings.seed ^ 0x0B5E, obn, obd);
+        let model = LogisticModel {
+            x: dset.x,
+            y: dset.y,
+            n: obn,
+            d: obd,
+        };
+        let eps = 1e-3;
+        let opts = NutsOptions {
+            num_warmup: 0,
+            num_samples: timing_draws,
+            target_accept: 0.8,
+            init_step_size: eps,
+            fixed_step_size: Some(eps),
+            adapt_mass: false,
+            seed: settings.seed,
+        };
+
+        // off: make sure no registry is installed, then run the plain
+        // single-chain protocol (same as the ms/leapfrog rows above)
+        crate::obs::uninstall();
+        let mut off_sampler = NativeSampler::new(
+            compile(model.clone(), settings.seed)?,
+            TreeAlgorithm::Iterative,
+            TIMING_DEPTH,
+        );
+        let init = vec![0.1; off_sampler.dim()];
+        let off_res = run_chain(&mut off_sampler, &init, &opts)?;
+        let off_ms = off_res.ms_per_leapfrog();
+
+        // on: install a live registry *before* constructing the sampler
+        // so every workspace picks up the enabled recorder handle
+        crate::obs::install();
+        let mut on_sampler = NativeSampler::new(
+            compile(model.clone(), settings.seed)?,
+            TreeAlgorithm::Iterative,
+            TIMING_DEPTH,
+        );
+        let on_res = run_chain(&mut on_sampler, &init, &opts)?;
+        crate::obs::uninstall();
+        let on_ms = on_res.ms_per_leapfrog();
+
+        anyhow::ensure!(
+            off_res.samples.len() == on_res.samples.len()
+                && off_res
+                    .samples
+                    .iter()
+                    .zip(&on_res.samples)
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+                && off_res.sample_leapfrogs == on_res.sample_leapfrogs,
+            "flight recorder perturbed the sample path: recorder-on draws are not \
+             bitwise identical to recorder-off (n={obn} d={obd} draws={timing_draws})"
+        );
+
+        let overhead = on_ms / off_ms.max(1e-12) - 1.0;
+        report.push_str(&format!(
+            "  logistic n={obn} d={obd}: off {off_ms:.5} ms/leapfrog | on {on_ms:.5} \
+             ms/leapfrog -> overhead {:+.2}% (bitwise equal)\n",
+            100.0 * overhead
+        ));
+        if overhead > 0.01 {
+            report.push_str(&format!(
+                "  WARNING: recorder overhead {:.2}% > 1% — instrumentation regressed \
+                 the hot path\n",
+                100.0 * overhead
+            ));
+        }
+        report.push('\n');
+        jobj(vec![
+            ("model", Json::Str("logistic".to_string())),
+            ("n", jnum(obn as f64)),
+            ("d", jnum(obd as f64)),
+            ("timing_leapfrogs", jnum(off_res.sample_leapfrogs as f64)),
+            ("recorder_off_ms_per_leapfrog", jnum(off_ms)),
+            ("recorder_on_ms_per_leapfrog", jnum(on_ms)),
+            ("overhead_frac", jnum(overhead)),
+            // the ensure! above aborts the bench on any divergence, and
+            // rust/tests/observability.rs pins the same contract across
+            // every chain method plus SVI and subsampled SVI
+            ("recorder_bitwise_equal", Json::Bool(true)),
+        ])
+    };
+
     // --- native SVI: reparameterized ADVI over the frozen tape ---
     // 1. ms/step with the K particles evaluated as a scalar-potential
     //    loop vs one fused multi-lane sweep (`svi_particle_batch_speedup`
@@ -1564,6 +1665,7 @@ pub fn run(settings: &Settings, max_chains: usize, out_path: &str) -> Result<Str
             ("frozen_vs_replay".to_string(), Json::Obj(frozen_rows)),
             ("tape_opt".to_string(), tape_opt_json),
             ("robustness_overhead".to_string(), robustness_json),
+            ("observability_overhead".to_string(), observability_json),
             ("svi_native".to_string(), svi_json),
             ("subsampling".to_string(), subsampling_json),
             ("lane_scaling".to_string(), lane_scaling_json),

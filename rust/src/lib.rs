@@ -45,6 +45,7 @@ pub mod error;
 pub mod harness;
 pub mod mcmc;
 pub mod models;
+pub mod obs;
 pub mod ppl;
 pub mod rng;
 pub mod runtime;

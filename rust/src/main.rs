@@ -90,6 +90,19 @@ FLAGS
   --quick           ~10x smaller workloads (CI/smoke)
   --full            paper-scale workloads
 
+OBSERVABILITY (bench, sample-model, svi-model, diagnose)
+  --trace-out FILE      structured JSONL event stream (run_start, phase
+                        changes, checkpoints, epochs, run_end)
+  --metrics-out FILE    metrics snapshot (counters, gauges, tree-depth
+                        histogram, timing spans, trajectory windows;
+                        written atomically, schema fugue-metrics/v1)
+  --metrics-every S     re-write the snapshot every S seconds while the
+                        run is live (default snapshot path:
+                        fugue-metrics.json)
+  --progress            single-line live progress report on stderr
+  Recording is bitwise-neutral: a run with these flags produces
+  identical draws/ELBOs to one without (rust/tests/observability.rs).
+
 The default build stubs out the PJRT runtime; `bench` and `diagnose`
 work everywhere, the artifact-backed subcommands need `--features pjrt`
 plus `make artifacts`.
@@ -341,10 +354,22 @@ fn main() -> Result<()> {
     // native-only: no artifact manifest, no PJRT engine — they must
     // work on a fresh clone with the default (stub) feature set.
     match sub {
-        "bench" => return cmd_bench(&args, &settings),
-        "sample-model" => return cmd_sample_model(&args, &settings),
-        "svi-model" => return cmd_svi_model(&args, &settings),
-        "diagnose" => return cmd_diagnose(&args, &settings),
+        "bench" | "sample-model" | "svi-model" | "diagnose" => {
+            // flight recorder: installed only when an observability
+            // flag asks for it; recording is bitwise-neutral, so the
+            // subcommands below never need to know it is on
+            let obs = ObsSession::from_args(&args, sub)?;
+            let result = match sub {
+                "bench" => cmd_bench(&args, &settings),
+                "sample-model" => cmd_sample_model(&args, &settings),
+                "svi-model" => cmd_svi_model(&args, &settings),
+                _ => cmd_diagnose(&args, &settings),
+            };
+            if let Some(o) = obs {
+                o.finish()?;
+            }
+            return result;
+        }
         _ => {}
     }
     let engine = Engine::new(&settings.artifacts_dir)?;
@@ -354,6 +379,161 @@ fn main() -> Result<()> {
         "experiment" => cmd_experiment(&engine, &args, &settings),
         "artifacts-check" => cmd_artifacts_check(&engine, &settings),
         other => bail!("unknown subcommand '{other}'; run `fugue help`"),
+    }
+}
+
+/// One CLI run's flight-recorder session (`--trace-out`,
+/// `--metrics-out`, `--metrics-every`, `--progress`): installs the
+/// process-global registry, runs the exporter thread off the hot path,
+/// and finalizes the trace stream + final snapshot on exit.
+struct ObsSession {
+    reg: &'static fugue::obs::MetricsRegistry,
+    trace: Option<std::sync::Arc<fugue::obs::TraceWriter>>,
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    exporter: Option<std::thread::JoinHandle<()>>,
+    metrics_out: Option<std::path::PathBuf>,
+    progress: bool,
+}
+
+impl ObsSession {
+    /// `Some` only when at least one observability flag was passed —
+    /// otherwise the global recorder stays uninstalled and every
+    /// engine runs with recording disabled (one branch per site).
+    fn from_args(args: &Args, sub: &str) -> Result<Option<ObsSession>> {
+        use fugue::obs::{TraceWriter, Val};
+        use std::sync::{atomic::AtomicBool, Arc};
+
+        let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+        let metrics_every = args.get_f64("metrics-every")?;
+        let metrics_out = args
+            .get("metrics-out")
+            .map(std::path::PathBuf::from)
+            .or_else(|| metrics_every.map(|_| std::path::PathBuf::from("fugue-metrics.json")));
+        let progress = args.has("progress");
+        if trace_out.is_none() && metrics_out.is_none() && !progress {
+            return Ok(None);
+        }
+        let rec = fugue::obs::install();
+        let reg = rec.registry().expect("freshly installed recorder");
+        let trace = match &trace_out {
+            Some(p) => {
+                let t = TraceWriter::create(p)?;
+                t.event("run_start", &[("subcommand", Val::S(sub.to_string()))])?;
+                Some(Arc::new(t))
+            }
+            None => None,
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let exporter = {
+            let stop = stop.clone();
+            let trace = trace.clone();
+            let metrics_out = metrics_out.clone();
+            let every = metrics_every
+                .map(|s| std::time::Duration::from_secs_f64(s.max(0.05)));
+            Some(std::thread::spawn(move || {
+                exporter_loop(reg, &stop, trace.as_deref(), metrics_out.as_deref(), every, progress)
+            }))
+        };
+        Ok(Some(ObsSession {
+            reg,
+            trace,
+            stop,
+            exporter,
+            metrics_out,
+            progress,
+        }))
+    }
+
+    /// Stop the exporter, write the final snapshot and `run_end`
+    /// event, and disable the global recorder.
+    fn finish(mut self) -> Result<()> {
+        use fugue::obs::{Counter, Val};
+        self.stop.store(true, std::sync::atomic::Ordering::Release);
+        if let Some(t) = self.exporter.take() {
+            let _ = t.join();
+        }
+        if self.progress {
+            eprintln!(); // terminate the \r-overwritten progress line
+        }
+        if let Some(p) = &self.metrics_out {
+            fugue::obs::write_snapshot(self.reg, p)?;
+            println!("metrics snapshot saved to {}", p.display());
+        }
+        if let Some(t) = &self.trace {
+            t.event(
+                "run_end",
+                &[
+                    ("uptime_ms", Val::F(self.reg.uptime().as_secs_f64() * 1e3)),
+                    ("phase", Val::S(self.reg.phase().name().to_string())),
+                    ("draws", Val::U(self.reg.counter(Counter::Draws))),
+                    ("leapfrogs", Val::U(self.reg.counter(Counter::Leapfrogs))),
+                    ("divergences", Val::U(self.reg.counter(Counter::Divergences))),
+                    ("svi_steps", Val::U(self.reg.counter(Counter::SviSteps))),
+                ],
+            )?;
+            println!("trace stream saved to {}", t.path().display());
+        }
+        fugue::obs::uninstall();
+        Ok(())
+    }
+}
+
+/// Exporter thread body: polls the all-atomic registry (never the hot
+/// path), deriving trace events from phase/counter deltas, re-writing
+/// the periodic snapshot, and repainting the progress line.
+fn exporter_loop(
+    reg: &'static fugue::obs::MetricsRegistry,
+    stop: &std::sync::atomic::AtomicBool,
+    trace: Option<&fugue::obs::TraceWriter>,
+    metrics_out: Option<&std::path::Path>,
+    snapshot_every: Option<std::time::Duration>,
+    progress: bool,
+) {
+    use fugue::obs::{Counter, Val};
+    use std::sync::atomic::Ordering;
+    use std::time::{Duration, Instant};
+
+    let mut last_phase = reg.phase();
+    let mut last_ckpt = reg.counter(Counter::CheckpointWrites);
+    let mut last_epoch = reg.counter(Counter::Epochs);
+    let mut last_snapshot = Instant::now();
+    let mut last_progress = Instant::now();
+    while !stop.load(Ordering::Acquire) {
+        std::thread::sleep(Duration::from_millis(50));
+        if let Some(t) = trace {
+            let phase = reg.phase();
+            if phase != last_phase {
+                let _ = t.event("phase", &[("phase", Val::S(phase.name().to_string()))]);
+                last_phase = phase;
+            }
+            let ckpt = reg.counter(Counter::CheckpointWrites);
+            if ckpt != last_ckpt {
+                let _ = t.event("checkpoint", &[("writes", Val::U(ckpt))]);
+                last_ckpt = ckpt;
+            }
+            let ep = reg.counter(Counter::Epochs);
+            if ep != last_epoch {
+                let _ = t.event(
+                    "epoch",
+                    &[
+                        ("epochs", Val::U(ep)),
+                        ("rows_streamed", Val::U(reg.counter(Counter::RowsStreamed))),
+                    ],
+                );
+                last_epoch = ep;
+            }
+        }
+        if let (Some(every), Some(path)) = (snapshot_every, metrics_out) {
+            if last_snapshot.elapsed() >= every {
+                let _ = fugue::obs::write_snapshot(reg, path);
+                last_snapshot = Instant::now();
+            }
+        }
+        if progress && last_progress.elapsed() >= Duration::from_secs(1) {
+            eprint!("\r{}", fugue::obs::progress_line(reg));
+            let _ = std::io::Write::flush(&mut std::io::stderr());
+            last_progress = Instant::now();
+        }
     }
 }
 
@@ -691,6 +871,19 @@ fn svi_report<M: fugue::compile::EffModel + Clone>(
             String::new()
         }
     );
+    // convergence diagnostic: the ELBO's Monte-Carlo noise floor over
+    // the same window the early-stop rule compares means across
+    if result.steps > 0 {
+        let mcse_window = opts
+            .convergence
+            .map_or((result.steps / 10).max(25), |c| c.window)
+            .min(result.steps);
+        println!(
+            "ELBO MC-SE {:.4} over the final {mcse_window}-step window (final ELBO {:.4})",
+            result.elbo_mcse,
+            result.final_elbo(mcse_window),
+        );
+    }
     if !result.completed {
         println!(
             "WARNING: {}",

@@ -37,6 +37,7 @@
 
 use crate::mcmc::nuts_iterative::{bit_count, candidate_range};
 use crate::mcmc::{log_add_exp, BatchPotential, DrawStats, MAX_DELTA_ENERGY};
+use crate::obs::Recorder;
 use crate::rng::Rng;
 
 /// Per-lane control block of the lock-step state machine.  Mirrors the
@@ -102,6 +103,9 @@ pub struct BatchTreeWorkspace {
     /// per-lane masked step size for the current global leapfrog
     eps: Vec<f64>,
     ctl: Vec<LaneCtl>,
+    /// flight-recorder handle; observes finished draws only, so it is
+    /// bitwise-neutral and allocation-free (see [`crate::obs`])
+    recorder: Recorder,
 }
 
 impl BatchTreeWorkspace {
@@ -131,7 +135,15 @@ impl BatchTreeWorkspace {
             z_prop: vec![0.0; dl],
             eps: vec![0.0; lanes],
             ctl: vec![LaneCtl::default(); lanes],
+            recorder: Recorder::global(),
         }
+    }
+
+    /// Override the flight recorder captured at construction (tests
+    /// inject local registries here; the default is the process
+    /// global, which is disabled outside the CLI).
+    pub fn set_recorder(&mut self, recorder: Recorder) {
+        self.recorder = recorder;
     }
 
     pub fn dim(&self) -> usize {
@@ -539,6 +551,17 @@ pub fn draw_batch<BP: BatchPotential + ?Sized>(
             depth: c.depth,
             poisoned: c.poisoned,
         };
+    }
+    if ws.recorder.enabled() {
+        for o in out.iter() {
+            ws.recorder.record_draw(
+                o.accept_prob,
+                o.depth,
+                o.num_leapfrog as u64,
+                o.diverging,
+                o.poisoned,
+            );
+        }
     }
 }
 

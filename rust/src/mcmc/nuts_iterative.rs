@@ -23,6 +23,7 @@ use crate::mcmc::{
     is_u_turn, kinetic, leapfrog_inplace, log_add_exp, DrawStats, PhaseState, Potential,
     Transition, MAX_DELTA_ENERGY,
 };
+use crate::obs::{Recorder, SpanKind};
 use crate::rng::Rng;
 
 #[inline]
@@ -62,6 +63,9 @@ pub struct TreeWorkspace {
     right: PhaseState,
     /// draw-level proposal (the result of [`draw_in_workspace`])
     z_prop: Vec<f64>,
+    /// flight-recorder handle; observes finished draws only, so it is
+    /// bitwise-neutral and allocation-free (see [`crate::obs`])
+    recorder: Recorder,
 }
 
 impl TreeWorkspace {
@@ -77,7 +81,15 @@ impl TreeWorkspace {
             left: PhaseState::zeros(dim),
             right: PhaseState::zeros(dim),
             z_prop: vec![0.0; dim],
+            recorder: Recorder::global(),
         }
+    }
+
+    /// Override the flight recorder captured at construction (tests
+    /// inject local registries here; the default is the process
+    /// global, which is disabled outside the CLI).
+    pub fn set_recorder(&mut self, recorder: Recorder) {
+        self.recorder = recorder;
     }
 
     pub fn dim(&self) -> usize {
@@ -199,6 +211,7 @@ pub fn draw_in_workspace<P: Potential + ?Sized>(
     inv_mass: &[f64],
     max_depth: u32,
 ) -> DrawStats {
+    let _draw_span = ws.recorder.span(SpanKind::Draw);
     let dim = z0.len();
     assert_eq!(dim, ws.dim, "workspace dimension mismatch");
     assert!(
@@ -225,6 +238,7 @@ pub fn draw_in_workspace<P: Potential + ?Sized>(
     // leapfrogs, proposal = start) and let the coordinator decide
     // whether to quarantine/restart the chain.
     if !energy_0.is_finite() {
+        ws.recorder.record_draw(0.0, 0, 0, true, true);
         return DrawStats {
             accept_prob: 0.0,
             num_leapfrog: 0,
@@ -275,8 +289,11 @@ pub fn draw_in_workspace<P: Potential + ?Sized>(
         }
     }
 
+    let accept_prob = sum_accept / (n_leapfrog.max(1) as f64);
+    ws.recorder
+        .record_draw(accept_prob, depth, n_leapfrog as u64, diverging, false);
     DrawStats {
-        accept_prob: sum_accept / (n_leapfrog.max(1) as f64),
+        accept_prob,
         num_leapfrog: n_leapfrog,
         potential: u_prop,
         diverging,

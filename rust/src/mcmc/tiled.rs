@@ -53,6 +53,7 @@
 
 use crate::autodiff::MICRO_LANES;
 use crate::mcmc::BatchPotential;
+use crate::obs::{Recorder, SpanKind};
 
 /// Split `lanes` into tile widths of at most `tile` lanes each: as
 /// many full tiles as fit, plus one ragged remainder tile.
@@ -108,6 +109,9 @@ pub struct TiledBatchPotential<BP: BatchPotential + Send> {
     lanes: usize,
     max_threads: usize,
     evals: u64,
+    /// flight-recorder handle; counts evals/gathers/scatters and times
+    /// the whole batched evaluation (see [`crate::obs`])
+    recorder: Recorder,
 }
 
 impl<BP: BatchPotential + Send> TiledBatchPotential<BP> {
@@ -152,7 +156,15 @@ impl<BP: BatchPotential + Send> TiledBatchPotential<BP> {
             lanes,
             max_threads,
             evals: 0,
+            recorder: Recorder::global(),
         }
+    }
+
+    /// Override the flight recorder captured at construction (tests
+    /// inject local registries here; the default is the process
+    /// global, which is disabled outside the CLI).
+    pub fn set_recorder(&mut self, recorder: Recorder) {
+        self.recorder = recorder;
     }
 
     /// Cap the worker-thread count (builder form).  `1` forces the
@@ -224,6 +236,8 @@ impl<BP: BatchPotential + Send> BatchPotential for TiledBatchPotential<BP> {
         assert_eq!(u.len(), l);
         assert_eq!(grad.len(), dim * l);
         self.evals += 1;
+        let _eval_span = self.recorder.span(SpanKind::TileEval);
+        self.recorder.record_tile_eval(self.tiles.len() as u64);
 
         let threads = self.threads();
         if threads == 1 {

@@ -1,0 +1,241 @@
+//! Exporters: the JSONL trace stream, the atomic metrics snapshot,
+//! and the single-line progress report.
+//!
+//! None of these run on an inference hot path — they read the
+//! all-atomic [`MetricsRegistry`] from the outside (the CLI's exporter
+//! thread, a test, or a run boundary), so they are free to allocate.
+//!
+//! Formats:
+//!
+//! * **Trace (`--trace-out`)**: one JSON object per line, each with a
+//!   monotonic `ts_ms` (milliseconds since the writer was created) and
+//!   an `event` name, plus event-specific fields.  Lines are flushed
+//!   as written so a killed process keeps every completed event.
+//! * **Snapshot (`--metrics-out` / `--metrics-every`)**: a single JSON
+//!   document (`schema: "fugue-metrics/v1"`) with counters, gauges,
+//!   the tree-depth histogram, span totals, and the retained
+//!   trajectory windows; written via the same `.tmp` + rename idiom as
+//!   checkpoints so readers never observe a torn file.
+//! * **Progress**: a one-line human summary of the registry, suitable
+//!   for `\r`-overwriting.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::registry::{Counter, Gauge, MetricsRegistry, SpanKind};
+use crate::util::json::Json;
+
+/// Schema tag stamped into every metrics snapshot.
+pub const SNAPSHOT_SCHEMA: &str = "fugue-metrics/v1";
+
+/// A field value in a trace event.
+#[derive(Debug, Clone)]
+pub enum Val {
+    U(u64),
+    F(f64),
+    S(String),
+    B(bool),
+}
+
+impl Val {
+    fn write(&self, out: &mut String) {
+        match self {
+            Val::U(n) => out.push_str(&n.to_string()),
+            Val::F(x) if x.is_finite() => out.push_str(&format!("{x}")),
+            Val::F(_) => out.push_str("null"),
+            Val::S(s) => write_json_str(out, s),
+            Val::B(b) => out.push_str(if *b { "true" } else { "false" }),
+        }
+    }
+}
+
+fn write_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Line-oriented JSONL event writer (`--trace-out`).  Thread-safe; an
+/// event is one locked write + flush, so concurrent writers interleave
+/// whole lines, never bytes.
+pub struct TraceWriter {
+    out: Mutex<BufWriter<fs::File>>,
+    epoch: Instant,
+    path: PathBuf,
+}
+
+impl TraceWriter {
+    pub fn create(path: &Path) -> Result<TraceWriter> {
+        let file = fs::File::create(path)
+            .with_context(|| format!("creating trace stream {}", path.display()))?;
+        Ok(TraceWriter {
+            out: Mutex::new(BufWriter::new(file)),
+            epoch: Instant::now(),
+            path: path.to_path_buf(),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one event line: `{"ts_ms":...,"event":NAME, fields...}`.
+    pub fn event(&self, name: &str, fields: &[(&str, Val)]) -> Result<()> {
+        let ts_ms = self.epoch.elapsed().as_secs_f64() * 1e3;
+        let mut line = String::with_capacity(64 + fields.len() * 24);
+        line.push_str("{\"ts_ms\":");
+        line.push_str(&format!("{ts_ms:.3}"));
+        line.push_str(",\"event\":");
+        write_json_str(&mut line, name);
+        for (k, v) in fields {
+            line.push(',');
+            write_json_str(&mut line, k);
+            line.push(':');
+            v.write(&mut line);
+        }
+        line.push_str("}\n");
+        let mut out = self.out.lock().expect("trace writer poisoned");
+        out.write_all(line.as_bytes())?;
+        out.flush()?;
+        Ok(())
+    }
+}
+
+fn jnum(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// Full registry state as one JSON document.
+pub fn snapshot_json(reg: &MetricsRegistry) -> Json {
+    let counters = jobj(
+        Counter::ALL
+            .iter()
+            .map(|&c| (c.name(), Json::Num(reg.counter(c) as f64)))
+            .collect(),
+    );
+    let gauges = jobj(
+        Gauge::ALL
+            .iter()
+            .map(|&g| (g.name(), jnum(reg.gauge(g))))
+            .collect(),
+    );
+    let spans = jobj(
+        SpanKind::ALL
+            .iter()
+            .map(|&k| {
+                let (nanos, count) = reg.span_totals(k);
+                (
+                    k.name(),
+                    jobj(vec![
+                        ("ms", Json::Num(nanos as f64 / 1e6)),
+                        ("count", Json::Num(count as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let hist = reg.depth_histogram();
+    let depth_hist = Json::Arr(hist.iter().map(|&n| Json::Num(n as f64)).collect());
+    let traj = |window: Vec<f64>, pushed: u64| {
+        jobj(vec![
+            ("total", Json::Num(pushed as f64)),
+            ("window", Json::Arr(window.into_iter().map(jnum).collect())),
+        ])
+    };
+    let (ss, ss_n) = reg.step_size_trajectory();
+    let (ap, ap_n) = reg.accept_trajectory();
+    let (el, el_n) = reg.elbo_trajectory();
+    jobj(vec![
+        ("schema", Json::Str(SNAPSHOT_SCHEMA.to_string())),
+        ("uptime_ms", Json::Num(reg.uptime().as_secs_f64() * 1e3)),
+        ("phase", Json::Str(reg.phase().name().to_string())),
+        ("counters", counters),
+        ("gauges", gauges),
+        ("tree_depth_hist", depth_hist),
+        ("spans", spans),
+        (
+            "trajectories",
+            jobj(vec![
+                ("step_size", traj(ss, ss_n)),
+                ("accept_prob", traj(ap, ap_n)),
+                ("elbo", traj(el, el_n)),
+            ]),
+        ),
+    ])
+}
+
+/// Write a metrics snapshot atomically (`.tmp` + rename, the
+/// checkpoint idiom): readers never observe a torn document, even if
+/// the process dies mid-write.
+pub fn write_snapshot(reg: &MetricsRegistry, path: &Path) -> Result<()> {
+    let t0 = Instant::now();
+    let text = snapshot_json(reg).to_string_pretty();
+    write_atomic(path, &text)?;
+    reg.add_span(SpanKind::SnapshotIo, t0.elapsed().as_nanos() as u64);
+    reg.add_counter(Counter::SnapshotWrites, 1);
+    Ok(())
+}
+
+fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", path.display()))?;
+    Ok(())
+}
+
+/// One-line human progress summary of the registry, for `--progress`.
+pub fn progress_line(reg: &MetricsRegistry) -> String {
+    let secs = reg.uptime().as_secs_f64();
+    let draws = reg.counter(Counter::Draws);
+    let steps = reg.counter(Counter::SviSteps);
+    if steps > 0 && draws == 0 {
+        format!(
+            "[{phase}] {secs:.1}s | svi steps {steps} | elbo {elbo:.4} | grad norm {gn:.3} | skips {skips} | backoff {bo:.3}",
+            phase = reg.phase().name(),
+            elbo = reg.gauge(Gauge::Elbo),
+            gn = reg.gauge(Gauge::GradNorm),
+            skips = reg.counter(Counter::SviSkips),
+            bo = reg.gauge(Gauge::LrBackoff),
+        )
+    } else {
+        format!(
+            "[{phase}] {secs:.1}s | draws {draws} | leapfrogs {lf} | div {div} | quar {quar} | step {eps:.4} | accept {acc:.3}",
+            phase = reg.phase().name(),
+            lf = reg.counter(Counter::Leapfrogs),
+            div = reg.counter(Counter::Divergences),
+            quar = reg.counter(Counter::Quarantines),
+            eps = reg.gauge(Gauge::StepSize),
+            acc = reg.gauge(Gauge::AcceptProb),
+        )
+    }
+}

@@ -1,0 +1,37 @@
+//! Flight recorder: zero-allocation metrics, timing spans, and
+//! exporters shared by every inference engine.
+//!
+//! Three layers:
+//!
+//! 1. [`MetricsRegistry`] — preallocated counters, gauges, a
+//!    tree-depth histogram, trajectory rings, and span accumulators,
+//!    all atomics.  Hot paths update it through the `Copy`
+//!    [`Recorder`] handle, which is always compiled and runtime
+//!    toggled: disabled recording costs one branch, enabled recording
+//!    is a few relaxed atomic stores, and neither consumes RNG nor
+//!    touches any floating-point value on the inference path — so
+//!    recorder-on and recorder-off runs are **bitwise identical**
+//!    (enforced by `tests/observability.rs`) and instrumented draws
+//!    stay **zero-allocation** (enforced by `tests/alloc_free.rs`).
+//! 2. Timing spans ([`SpanKind`]) — monotonic-clock durations (warmup
+//!    vs sampling, draws, forward/reverse sweeps sampled 1-in-N,
+//!    checkpoint and snapshot I/O, per-tile evals) aggregated into the
+//!    same registry.
+//! 3. Exporters — the JSONL trace stream ([`TraceWriter`], CLI
+//!    `--trace-out`), the atomic metrics snapshot ([`write_snapshot`],
+//!    CLI `--metrics-out`/`--metrics-every`), and the one-line
+//!    progress report ([`progress_line`], CLI `--progress`).
+//!
+//! Engines capture their recorder at construction from the process
+//! global ([`Recorder::global`], installed only by binaries via
+//! [`install`]) and expose `set_recorder` hooks so tests can inject
+//! local registries without sharing state across parallel tests.
+
+mod export;
+mod registry;
+
+pub use export::{progress_line, snapshot_json, write_snapshot, TraceWriter, Val, SNAPSHOT_SCHEMA};
+pub use registry::{
+    install, uninstall, Counter, Gauge, MetricsRegistry, Phase, Recorder, SpanGuard, SpanKind,
+    DEPTH_BUCKETS, NUM_COUNTERS, NUM_GAUGES, NUM_SPANS, RING_CAPACITY, SWEEP_SAMPLE_PERIOD,
+};

@@ -1,0 +1,663 @@
+//! The metrics registry and the [`Recorder`] handle the hot paths hold.
+//!
+//! Design contract (enforced by `tests/observability.rs` and
+//! `tests/alloc_free.rs`):
+//!
+//! * **Zero-allocation in steady state.** Every slot a recording can
+//!   touch — counters, gauges, the tree-depth histogram, the
+//!   trajectory rings, the span accumulators — is preallocated when
+//!   the registry is built.  Recording is a handful of relaxed atomic
+//!   stores; the rings overwrite in place.
+//! * **Bitwise-neutral by construction.** The recorder only *observes*
+//!   values the engines already computed (draw statistics, step sizes,
+//!   ELBO values).  It never consumes RNG draws, never reorders or
+//!   introduces floating-point operations on the inference path, and
+//!   nothing it stores is ever read back by an engine.  Recorder-on
+//!   and recorder-off runs are therefore bitwise identical; the only
+//!   thing recording can perturb is wall-clock time, which is already
+//!   outside the bitwise contract (see `coordinator/checkpoint.rs`).
+//! * **Always compiled, runtime-toggled.** [`Recorder`] is a `Copy`
+//!   wrapper over `Option<&'static MetricsRegistry>`; the disabled
+//!   handle costs one branch per call site.  Registries are leaked
+//!   (`'static`) so handles can be copied freely across threads.
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Tree depths land in `min(depth, DEPTH_BUCKETS - 1)`; NUTS depth is
+/// capped well below this in practice (`max_tree_depth` ≤ 10–12).
+pub const DEPTH_BUCKETS: usize = 32;
+
+/// Capacity of each trajectory ring (step size, acceptance statistic,
+/// ELBO).  Rings overwrite oldest-first; `pushed` keeps the total so
+/// exporters can report how much history was dropped.
+pub const RING_CAPACITY: usize = 1024;
+
+/// Forward/reverse sweep spans are sampled one-in-N evaluations so the
+/// monotonic-clock reads stay far below the <1% overhead bar even for
+/// sub-microsecond potentials.
+pub const SWEEP_SAMPLE_PERIOD: u64 = 64;
+
+/// Monotonic event counters, updated with relaxed `fetch_add`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(usize)]
+pub enum Counter {
+    /// completed NUTS draws (every lane of every chain, warmup included)
+    Draws,
+    /// leapfrog steps across all draws
+    Leapfrogs,
+    /// draws that ended diverging
+    Divergences,
+    /// draws quarantined at a non-finite starting energy
+    Quarantines,
+    /// accepted SVI steps
+    SviSteps,
+    /// SVI steps skipped on a non-finite ELBO/gradient
+    SviSkips,
+    /// completed passes over a subsampled dataset
+    Epochs,
+    /// minibatch rows served by the scheduler
+    RowsStreamed,
+    /// batched potential evaluations through the tiled engine
+    TileEvals,
+    /// per-tile gathers (lane-block copies in)
+    TileGathers,
+    /// per-tile scatters (lane-block copies out)
+    TileScatters,
+    /// checkpoint files written
+    CheckpointWrites,
+    /// metrics snapshots written
+    SnapshotWrites,
+    /// forward instructions in the active optimized plan (absolute, stored)
+    PlanFwdInstrs,
+    /// reverse instructions in the active optimized plan (absolute, stored)
+    PlanBwdInstrs,
+}
+
+pub const NUM_COUNTERS: usize = 15;
+
+impl Counter {
+    pub const ALL: [Counter; NUM_COUNTERS] = [
+        Counter::Draws,
+        Counter::Leapfrogs,
+        Counter::Divergences,
+        Counter::Quarantines,
+        Counter::SviSteps,
+        Counter::SviSkips,
+        Counter::Epochs,
+        Counter::RowsStreamed,
+        Counter::TileEvals,
+        Counter::TileGathers,
+        Counter::TileScatters,
+        Counter::CheckpointWrites,
+        Counter::SnapshotWrites,
+        Counter::PlanFwdInstrs,
+        Counter::PlanBwdInstrs,
+    ];
+
+    /// Stable snake_case name used by the exporters.
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Draws => "draws",
+            Counter::Leapfrogs => "leapfrogs",
+            Counter::Divergences => "divergences",
+            Counter::Quarantines => "quarantines",
+            Counter::SviSteps => "svi_steps",
+            Counter::SviSkips => "svi_skips",
+            Counter::Epochs => "epochs",
+            Counter::RowsStreamed => "rows_streamed",
+            Counter::TileEvals => "tile_evals",
+            Counter::TileGathers => "tile_gathers",
+            Counter::TileScatters => "tile_scatters",
+            Counter::CheckpointWrites => "checkpoint_writes",
+            Counter::SnapshotWrites => "snapshot_writes",
+            Counter::PlanFwdInstrs => "plan_fwd_instrs",
+            Counter::PlanBwdInstrs => "plan_bwd_instrs",
+        }
+    }
+}
+
+/// Last-value gauges, stored as `f64` bit patterns in an `AtomicU64`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(usize)]
+pub enum Gauge {
+    /// current NUTS step size (last recorded lane)
+    StepSize,
+    /// acceptance statistic of the last recorded draw
+    AcceptProb,
+    /// last SVI ELBO estimate
+    Elbo,
+    /// gradient L2 norm of the last SVI step
+    GradNorm,
+    /// ELBO Monte-Carlo standard error over the convergence window
+    ElboMcse,
+    /// current SVI learning-rate backoff factor (1.0 = healthy)
+    LrBackoff,
+}
+
+pub const NUM_GAUGES: usize = 6;
+
+impl Gauge {
+    pub const ALL: [Gauge; NUM_GAUGES] = [
+        Gauge::StepSize,
+        Gauge::AcceptProb,
+        Gauge::Elbo,
+        Gauge::GradNorm,
+        Gauge::ElboMcse,
+        Gauge::LrBackoff,
+    ];
+
+    /// Stable snake_case name used by the exporters.
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::StepSize => "step_size",
+            Gauge::AcceptProb => "accept_prob",
+            Gauge::Elbo => "elbo",
+            Gauge::GradNorm => "grad_norm",
+            Gauge::ElboMcse => "elbo_mcse",
+            Gauge::LrBackoff => "lr_backoff",
+        }
+    }
+}
+
+/// Monotonic-clock timing spans aggregated as (total nanos, count).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(usize)]
+pub enum SpanKind {
+    /// warmup phase wall-clock (one record per chain/run)
+    Warmup,
+    /// sampling phase wall-clock (one record per chain/run)
+    Sampling,
+    /// one NUTS draw (tree build), scalar path
+    Draw,
+    /// forward sweep of the frozen/optimized program (sampled 1-in-N)
+    ForwardSweep,
+    /// reverse sweep of the frozen/optimized program (sampled 1-in-N)
+    ReverseSweep,
+    /// checkpoint serialization + atomic write
+    CheckpointIo,
+    /// metrics snapshot serialization + atomic write
+    SnapshotIo,
+    /// one batched evaluation through the tiled engine
+    TileEval,
+}
+
+pub const NUM_SPANS: usize = 8;
+
+impl SpanKind {
+    pub const ALL: [SpanKind; NUM_SPANS] = [
+        SpanKind::Warmup,
+        SpanKind::Sampling,
+        SpanKind::Draw,
+        SpanKind::ForwardSweep,
+        SpanKind::ReverseSweep,
+        SpanKind::CheckpointIo,
+        SpanKind::SnapshotIo,
+        SpanKind::TileEval,
+    ];
+
+    /// Stable snake_case name used by the exporters.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Warmup => "warmup",
+            SpanKind::Sampling => "sampling",
+            SpanKind::Draw => "draw",
+            SpanKind::ForwardSweep => "forward_sweep",
+            SpanKind::ReverseSweep => "reverse_sweep",
+            SpanKind::CheckpointIo => "checkpoint_io",
+            SpanKind::SnapshotIo => "snapshot_io",
+            SpanKind::TileEval => "tile_eval",
+        }
+    }
+}
+
+/// Coarse run phase, for the progress line and the trace stream.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u64)]
+pub enum Phase {
+    Idle = 0,
+    Warmup = 1,
+    Sampling = 2,
+    Optimizing = 3,
+    Done = 4,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Idle => "idle",
+            Phase::Warmup => "warmup",
+            Phase::Sampling => "sampling",
+            Phase::Optimizing => "optimizing",
+            Phase::Done => "done",
+        }
+    }
+
+    pub fn from_u64(v: u64) -> Phase {
+        match v {
+            1 => Phase::Warmup,
+            2 => Phase::Sampling,
+            3 => Phase::Optimizing,
+            4 => Phase::Done,
+            _ => Phase::Idle,
+        }
+    }
+}
+
+/// Fixed-capacity overwrite-oldest ring of `f64` values stored as bit
+/// patterns.  Pushing is two relaxed atomic ops and never allocates.
+struct Ring {
+    /// total values ever pushed (the write head is `pushed % capacity`)
+    pushed: AtomicU64,
+    data: Box<[AtomicU64]>,
+}
+
+impl Ring {
+    fn new(capacity: usize) -> Ring {
+        let data: Vec<AtomicU64> = (0..capacity).map(|_| AtomicU64::new(0)).collect();
+        Ring {
+            pushed: AtomicU64::new(0),
+            data: data.into_boxed_slice(),
+        }
+    }
+
+    #[inline]
+    fn push(&self, v: f64) {
+        let i = self.pushed.fetch_add(1, Ordering::Relaxed) as usize % self.data.len();
+        self.data[i].store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+
+    /// Oldest-to-newest copy of the retained window.
+    fn snapshot(&self) -> Vec<f64> {
+        let n = self.pushed.load(Ordering::Relaxed) as usize;
+        let cap = self.data.len();
+        let len = n.min(cap);
+        let start = if n > cap { n % cap } else { 0 };
+        (0..len)
+            .map(|k| f64::from_bits(self.data[(start + k) % cap].load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+struct SpanCell {
+    nanos: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Preallocated, all-atomic metrics storage shared by every engine.
+///
+/// One registry serves a whole process (or a whole test, when injected
+/// locally through the `set_recorder` hooks): parallel chains and
+/// tiled worker threads all record into the same atomics, so counters
+/// are process totals and gauges/rings hold the latest interleaved
+/// observations.
+pub struct MetricsRegistry {
+    start: Instant,
+    counters: [AtomicU64; NUM_COUNTERS],
+    gauges: [AtomicU64; NUM_GAUGES],
+    depth_hist: [AtomicU64; DEPTH_BUCKETS],
+    spans: [SpanCell; NUM_SPANS],
+    phase: AtomicU64,
+    step_size_traj: Ring,
+    accept_traj: Ring,
+    elbo_traj: Ring,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            start: Instant::now(),
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            gauges: std::array::from_fn(|_| AtomicU64::new(0.0f64.to_bits())),
+            depth_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            spans: std::array::from_fn(|_| SpanCell {
+                nanos: AtomicU64::new(0),
+                count: AtomicU64::new(0),
+            }),
+            phase: AtomicU64::new(Phase::Idle as u64),
+            step_size_traj: Ring::new(RING_CAPACITY),
+            accept_traj: Ring::new(RING_CAPACITY),
+            elbo_traj: Ring::new(RING_CAPACITY),
+        }
+    }
+
+    /// Allocate a registry that lives for the rest of the process —
+    /// the backing store for every [`Recorder`] handle.
+    pub fn leak() -> &'static MetricsRegistry {
+        Box::leak(Box::new(MetricsRegistry::new()))
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        f64::from_bits(self.gauges[g as usize].load(Ordering::Relaxed))
+    }
+
+    pub fn phase(&self) -> Phase {
+        Phase::from_u64(self.phase.load(Ordering::Relaxed))
+    }
+
+    /// (bucket count)[depth], saturated at `DEPTH_BUCKETS - 1`.
+    pub fn depth_histogram(&self) -> [u64; DEPTH_BUCKETS] {
+        std::array::from_fn(|i| self.depth_hist[i].load(Ordering::Relaxed))
+    }
+
+    /// Accumulated (nanos, count) for a span kind.
+    pub fn span_totals(&self, k: SpanKind) -> (u64, u64) {
+        let cell = &self.spans[k as usize];
+        (
+            cell.nanos.load(Ordering::Relaxed),
+            cell.count.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Direct counter bump, for callers holding a plain (non-leaked)
+    /// registry reference — e.g. the exporters.
+    pub fn add_counter(&self, c: Counter, n: u64) {
+        self.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Direct span accumulation, for callers holding a plain registry
+    /// reference.
+    pub fn add_span(&self, kind: SpanKind, nanos: u64) {
+        let cell = &self.spans[kind as usize];
+        cell.nanos.fetch_add(nanos, Ordering::Relaxed);
+        cell.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Retained trajectory window (oldest first) plus total pushes.
+    pub fn step_size_trajectory(&self) -> (Vec<f64>, u64) {
+        (self.step_size_traj.snapshot(), self.step_size_traj.pushed())
+    }
+
+    pub fn accept_trajectory(&self) -> (Vec<f64>, u64) {
+        (self.accept_traj.snapshot(), self.accept_traj.pushed())
+    }
+
+    pub fn elbo_trajectory(&self) -> (Vec<f64>, u64) {
+        (self.elbo_traj.snapshot(), self.elbo_traj.pushed())
+    }
+}
+
+/// The handle hot paths hold: `Copy`, always compiled, one branch when
+/// disabled.  Build one from an installed global
+/// ([`Recorder::global`]) or a leaked registry ([`Recorder::new`]).
+#[derive(Clone, Copy, Default, Debug)]
+pub struct Recorder(Option<&'static MetricsRegistry>);
+
+/// Process-global registry pointer, installed by the CLI (or a bench
+/// run) and read by every engine constructor as its default recorder.
+/// Null (the default) means recording is off everywhere.
+static GLOBAL: AtomicPtr<MetricsRegistry> = AtomicPtr::new(std::ptr::null_mut());
+
+/// Install a fresh global registry and return its handle.  Intended
+/// for binaries (CLI, bench); library tests should inject local
+/// registries through the `set_recorder` hooks instead so parallel
+/// tests cannot cross-contaminate counters.
+pub fn install() -> Recorder {
+    let reg = MetricsRegistry::leak();
+    GLOBAL.store(reg as *const MetricsRegistry as *mut MetricsRegistry, Ordering::Release);
+    Recorder(Some(reg))
+}
+
+/// Disable the global recorder.  Engines that already captured a
+/// handle keep recording into the (leaked) registry harmlessly; newly
+/// constructed engines come up disabled.
+pub fn uninstall() {
+    GLOBAL.store(std::ptr::null_mut(), Ordering::Release);
+}
+
+impl Recorder {
+    /// The disabled recorder: every call is a no-op behind one branch.
+    pub const OFF: Recorder = Recorder(None);
+
+    pub fn new(reg: &'static MetricsRegistry) -> Recorder {
+        Recorder(Some(reg))
+    }
+
+    /// The process-global recorder (disabled unless [`install`] ran).
+    pub fn global() -> Recorder {
+        let p = GLOBAL.load(Ordering::Acquire);
+        if p.is_null() {
+            Recorder(None)
+        } else {
+            // Safety: the pointer only ever comes from `Box::leak` in
+            // `install`, so it is valid for 'static and never freed.
+            Recorder(Some(unsafe { &*p }))
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    pub fn registry(&self) -> Option<&'static MetricsRegistry> {
+        self.0
+    }
+
+    #[inline]
+    pub fn add(&self, c: Counter, n: u64) {
+        if let Some(r) = self.0 {
+            r.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn incr(&self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    /// Store an absolute counter value (for set-once facts like plan
+    /// instruction counts).
+    #[inline]
+    pub fn store(&self, c: Counter, v: u64) {
+        if let Some(r) = self.0 {
+            r.counters[c as usize].store(v, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn set_gauge(&self, g: Gauge, v: f64) {
+        if let Some(r) = self.0 {
+            r.gauges[g as usize].store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn set_phase(&self, p: Phase) {
+        if let Some(r) = self.0 {
+            r.phase.store(p as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one completed NUTS draw from its already-computed
+    /// statistics.  Pure observation: nothing here feeds back into the
+    /// sampler.
+    #[inline]
+    pub fn record_draw(
+        &self,
+        accept_prob: f64,
+        depth: u32,
+        num_leapfrog: u64,
+        diverging: bool,
+        poisoned: bool,
+    ) {
+        if let Some(r) = self.0 {
+            r.counters[Counter::Draws as usize].fetch_add(1, Ordering::Relaxed);
+            r.counters[Counter::Leapfrogs as usize].fetch_add(num_leapfrog, Ordering::Relaxed);
+            if diverging {
+                r.counters[Counter::Divergences as usize].fetch_add(1, Ordering::Relaxed);
+            }
+            if poisoned {
+                r.counters[Counter::Quarantines as usize].fetch_add(1, Ordering::Relaxed);
+            }
+            let bucket = (depth as usize).min(DEPTH_BUCKETS - 1);
+            r.depth_hist[bucket].fetch_add(1, Ordering::Relaxed);
+            r.gauges[Gauge::AcceptProb as usize].store(accept_prob.to_bits(), Ordering::Relaxed);
+            r.accept_traj.push(accept_prob);
+        }
+    }
+
+    /// Record the current step size (gauge + trajectory ring).
+    #[inline]
+    pub fn record_step_size(&self, eps: f64) {
+        if let Some(r) = self.0 {
+            r.gauges[Gauge::StepSize as usize].store(eps.to_bits(), Ordering::Relaxed);
+            r.step_size_traj.push(eps);
+        }
+    }
+
+    /// Record one SVI ELBO estimate (gauge + trajectory ring).
+    #[inline]
+    pub fn record_elbo(&self, elbo: f64) {
+        if let Some(r) = self.0 {
+            r.gauges[Gauge::Elbo as usize].store(elbo.to_bits(), Ordering::Relaxed);
+            r.elbo_traj.push(elbo);
+        }
+    }
+
+    /// Record one batched evaluation through the tiled engine.
+    #[inline]
+    pub fn record_tile_eval(&self, num_tiles: u64) {
+        if let Some(r) = self.0 {
+            r.counters[Counter::TileEvals as usize].fetch_add(1, Ordering::Relaxed);
+            r.counters[Counter::TileGathers as usize].fetch_add(num_tiles, Ordering::Relaxed);
+            r.counters[Counter::TileScatters as usize].fetch_add(num_tiles, Ordering::Relaxed);
+        }
+    }
+
+    /// Record the instruction counts of the active optimized plan.
+    pub fn record_plan_instrs(&self, fwd: u64, bwd: u64) {
+        self.store(Counter::PlanFwdInstrs, fwd);
+        self.store(Counter::PlanBwdInstrs, bwd);
+    }
+
+    /// Open a timing span; elapsed nanos accumulate on drop.  Disabled
+    /// recorders never read the clock.
+    #[inline]
+    pub fn span(&self, kind: SpanKind) -> SpanGuard {
+        SpanGuard {
+            open: self.0.map(|r| (r, kind, Instant::now())),
+        }
+    }
+
+    /// Add an externally measured duration to a span accumulator.
+    #[inline]
+    pub fn add_span_nanos(&self, kind: SpanKind, nanos: u64) {
+        if let Some(r) = self.0 {
+            let cell = &r.spans[kind as usize];
+            cell.nanos.fetch_add(nanos, Ordering::Relaxed);
+            cell.count.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// [`Recorder::add_span_nanos`] from seconds.
+    pub fn add_span_secs(&self, kind: SpanKind, secs: f64) {
+        if secs.is_finite() && secs >= 0.0 {
+            self.add_span_nanos(kind, (secs * 1e9) as u64);
+        }
+    }
+}
+
+/// RAII guard from [`Recorder::span`]: accumulates elapsed nanos into
+/// the registry on drop.  Holds no allocation.
+pub struct SpanGuard {
+    open: Option<(&'static MetricsRegistry, SpanKind, Instant)>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((r, kind, t0)) = self.open.take() {
+            let cell = &r.spans[kind as usize];
+            cell.nanos
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            cell.count.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let rec = Recorder::OFF;
+        assert!(!rec.enabled());
+        rec.incr(Counter::Draws);
+        rec.set_gauge(Gauge::StepSize, 0.3);
+        rec.record_draw(0.9, 3, 7, false, false);
+        rec.record_step_size(0.1);
+        rec.record_elbo(-10.0);
+        rec.set_phase(Phase::Sampling);
+        drop(rec.span(SpanKind::Draw));
+    }
+
+    #[test]
+    fn counters_gauges_and_histogram_accumulate() {
+        let reg = MetricsRegistry::leak();
+        let rec = Recorder::new(reg);
+        rec.record_draw(0.875, 3, 7, true, false);
+        rec.record_draw(0.5, 40, 1, false, true);
+        rec.record_step_size(0.25);
+        assert_eq!(reg.counter(Counter::Draws), 2);
+        assert_eq!(reg.counter(Counter::Leapfrogs), 8);
+        assert_eq!(reg.counter(Counter::Divergences), 1);
+        assert_eq!(reg.counter(Counter::Quarantines), 1);
+        assert_eq!(reg.gauge(Gauge::StepSize).to_bits(), 0.25f64.to_bits());
+        assert_eq!(reg.gauge(Gauge::AcceptProb).to_bits(), 0.5f64.to_bits());
+        let hist = reg.depth_histogram();
+        assert_eq!(hist[3], 1);
+        assert_eq!(hist[DEPTH_BUCKETS - 1], 1, "deep draws saturate the last bucket");
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_reports_total() {
+        let reg = MetricsRegistry::leak();
+        let rec = Recorder::new(reg);
+        let n = RING_CAPACITY + 10;
+        for i in 0..n {
+            rec.record_elbo(i as f64);
+        }
+        let (window, pushed) = reg.elbo_trajectory();
+        assert_eq!(pushed, n as u64);
+        assert_eq!(window.len(), RING_CAPACITY);
+        assert_eq!(window[0], 10.0, "oldest retained value");
+        assert_eq!(*window.last().unwrap(), (n - 1) as f64);
+    }
+
+    #[test]
+    fn spans_accumulate_nanos_and_counts() {
+        let reg = MetricsRegistry::leak();
+        let rec = Recorder::new(reg);
+        drop(rec.span(SpanKind::CheckpointIo));
+        rec.add_span_nanos(SpanKind::CheckpointIo, 500);
+        let (nanos, count) = reg.span_totals(SpanKind::CheckpointIo);
+        assert!(nanos >= 500);
+        assert_eq!(count, 2);
+    }
+
+    #[test]
+    fn global_recorder_defaults_off() {
+        // Never `install()` in library tests: this assertion is shared
+        // state with every other test in the binary.
+        assert!(!Recorder::global().enabled());
+    }
+}

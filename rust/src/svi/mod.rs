@@ -36,8 +36,8 @@ pub mod subsample;
 pub use elbo::ReparamElbo;
 pub use guide::MeanFieldGuide;
 pub use native::{
-    BatchedParticles, Convergence, ElboEngine, NativeSvi, NativeSviResult, ScalarParticles,
-    SviCursor, SviOptions, MAX_CONSECUTIVE_SKIPS,
+    elbo_mcse, BatchedParticles, Convergence, ElboEngine, NativeSvi, NativeSviResult,
+    ScalarParticles, SviCursor, SviOptions, MAX_CONSECUTIVE_SKIPS,
 };
 pub use subsample::{scheduler_rng, SubsampledBatchedParticles, SubsampledScalarParticles};
 pub use optim::{Adam, OptimKind, Optimizer, SgdMomentum, StepSchedule};

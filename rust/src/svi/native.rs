@@ -17,6 +17,7 @@ use anyhow::{ensure, Result};
 
 use crate::data::stream::SubsampleCursor;
 use crate::mcmc::{BatchPotential, Potential};
+use crate::obs::{Counter, Gauge, Phase, Recorder};
 use crate::rng::Rng;
 use crate::svi::elbo::ReparamElbo;
 use crate::svi::guide::MeanFieldGuide;
@@ -195,6 +196,26 @@ pub struct NativeSviResult {
     /// [`MAX_CONSECUTIVE_SKIPS`] unrecoverable steps) cut the run
     /// short of `num_steps`/convergence.
     pub completed: bool,
+    /// Monte-Carlo standard error of the ELBO over the convergence
+    /// window (sample sd of the trace tail divided by `sqrt(window)`):
+    /// the noise floor the windowed-mean convergence rule is comparing
+    /// against.  `0.0` when fewer than two steps were recorded.
+    pub elbo_mcse: f64,
+}
+
+/// Monte-Carlo standard error of the mean of the last `window` entries
+/// of `trace`: sample standard deviation of the tail divided by
+/// `sqrt(window)`.  Returns `0.0` when fewer than two entries exist.
+pub fn elbo_mcse(trace: &[f64], window: usize) -> f64 {
+    let n = trace.len();
+    let w = window.min(n);
+    if w < 2 {
+        return 0.0;
+    }
+    let tail = &trace[n - w..];
+    let mean = tail.iter().sum::<f64>() / w as f64;
+    let var = tail.iter().map(|e| (e - mean) * (e - mean)).sum::<f64>() / (w - 1) as f64;
+    (var / w as f64).sqrt()
 }
 
 /// Abort threshold for the containment layer: this many non-finite
@@ -269,6 +290,10 @@ pub struct NativeSvi<E: ElboEngine> {
     /// [`MAX_CONSECUTIVE_SKIPS`]).  Not checkpointed: a resume starts
     /// with a clean retry budget.
     consec_skips: u32,
+    /// Flight recorder ([`crate::obs`]) — observes finished steps only;
+    /// never consumes RNG or perturbs the optimization, so a recording
+    /// run stays bitwise identical to a silent one.
+    recorder: Recorder,
 }
 
 impl<E: ElboEngine> NativeSvi<E> {
@@ -311,7 +336,15 @@ impl<E: ElboEngine> NativeSvi<E> {
             backoff: 1.0,
             skipped: 0,
             consec_skips: 0,
+            recorder: Recorder::global(),
         })
+    }
+
+    /// Point this driver's flight-recorder hooks at an explicit
+    /// registry (tests and benchmarks; normal construction picks up
+    /// the process-global recorder).
+    pub fn set_recorder(&mut self, recorder: Recorder) {
+        self.recorder = recorder;
     }
 
     /// The guide in its current (raw, non-averaged) state.
@@ -339,6 +372,7 @@ impl<E: ElboEngine> NativeSvi<E> {
         let t = self.elbo_trace.len();
         let lr = self.schedule.lr_at(self.base_lr, t) * self.backoff;
         let dim = self.guide.dim();
+        let rec = self.recorder;
         let NativeSvi {
             engine,
             guide,
@@ -364,11 +398,22 @@ impl<E: ElboEngine> NativeSvi<E> {
             *skipped += 1;
             *consec_skips += 1;
             *backoff *= 0.5;
+            rec.incr(Counter::SviSkips);
+            rec.set_gauge(Gauge::LrBackoff, *backoff);
             return elbo;
         }
         *consec_skips = 0;
         if *backoff < 1.0 {
             *backoff = (*backoff * 1.5).min(1.0);
+        }
+        // pure observation of the finished gradient — the norm is
+        // computed only when a recorder is live and feeds nothing back
+        if rec.enabled() {
+            rec.incr(Counter::SviSteps);
+            rec.record_elbo(elbo);
+            let norm = grad.iter().map(|g| g * g).sum::<f64>().sqrt();
+            rec.set_gauge(Gauge::GradNorm, norm);
+            rec.set_gauge(Gauge::LrBackoff, *backoff);
         }
         opt.step_ascent(params, grad);
         if t >= *avg_from {
@@ -476,6 +521,8 @@ impl<E: ElboEngine> NativeSvi<E> {
         sink: &mut dyn FnMut(&SviCursor) -> Result<()>,
     ) -> Result<NativeSviResult> {
         let t0 = std::time::Instant::now();
+        let rec = self.recorder;
+        rec.set_phase(Phase::Optimizing);
         let mut converged = false;
         let mut completed = true;
         while self.elbo_trace.len() < self.num_steps {
@@ -508,6 +555,10 @@ impl<E: ElboEngine> NativeSvi<E> {
         let secs = t0.elapsed().as_secs_f64();
         let steps = self.elbo_trace.len();
         let skipped = self.skipped;
+        let mcse_window = self.convergence.map_or((steps / 10).max(25), |c| c.window);
+        let mcse = elbo_mcse(&self.elbo_trace, mcse_window);
+        rec.set_gauge(Gauge::ElboMcse, mcse);
+        rec.set_phase(Phase::Done);
         let mut guide = self.guide;
         if self.avg_count > 0 {
             let inv = 1.0 / self.avg_count as f64;
@@ -523,6 +574,7 @@ impl<E: ElboEngine> NativeSvi<E> {
             secs,
             skipped,
             completed,
+            elbo_mcse: mcse,
         })
     }
 }

@@ -711,6 +711,183 @@ fn assert_hmc_draws_alloc_free<P: Potential>(name: &str, mut pot: P, eps: f64, s
     );
 }
 
+/// The **enabled flight recorder** hits the same zero-allocation bar
+/// as the disabled one: instrumented steady-state NUTS draws (scalar,
+/// batched, tiled — draw spans, depth histogram, trajectory rings and
+/// the 1-in-64 sampled sweep spans all live), SVI steps (ELBO ring,
+/// gradient-norm gauge) and minibatch scheduling (epoch/row counters)
+/// touch only preallocated atomics.
+#[test]
+fn instrumented_hot_paths_are_allocation_free() {
+    use fugue::obs::{Counter, MetricsRegistry, Recorder};
+    let rec = Recorder::new(MetricsRegistry::leak());
+    let max_depth = 6;
+
+    // scalar draws, recorder live on both the potential (sweep spans)
+    // and the tree workspace (draw span + stats); 80 draws of depth-6
+    // trees comfortably cross the 1-in-64 sweep sampling period
+    let mut pot = compile(EightSchools::classic(), 0).unwrap();
+    pot.set_recorder(rec);
+    let dim = pot.dim();
+    let mut ws = TreeWorkspace::new(dim, max_depth);
+    ws.set_recorder(rec);
+    let mut rng = Rng::new(81);
+    let mut z = vec![0.05; dim];
+    let inv_mass = vec![1.0; dim];
+    for _ in 0..5 {
+        let _ = draw_in_workspace(&mut pot, &mut rng, &mut ws, &z, 1e-2, &inv_mass, max_depth);
+        z.copy_from_slice(ws.proposal());
+    }
+    let before = allocation_count();
+    for _ in 0..80 {
+        let _ = draw_in_workspace(&mut pot, &mut rng, &mut ws, &z, 1e-2, &inv_mass, max_depth);
+        z.copy_from_slice(ws.proposal());
+    }
+    assert_eq!(
+        allocation_count() - before,
+        0,
+        "instrumented scalar draws allocated on the heap"
+    );
+    assert!(
+        rec.registry().unwrap().counter(Counter::Draws) >= 85,
+        "recorder missed instrumented draws"
+    );
+
+    // batched lanes, per-lane draw recording live
+    let mut bpot = compile_batched(EightSchools::classic(), 0, 4).unwrap();
+    let lanes = 4;
+    let mut bws = BatchTreeWorkspace::new(bpot.dim(), lanes, max_depth);
+    bws.set_recorder(rec);
+    let mut rngs: Vec<Rng> = (0..lanes).map(|k| Rng::new(82 + k as u64)).collect();
+    let mut zb = vec![0.05; bpot.dim() * lanes];
+    let inv_mass_b = vec![1.0; bpot.dim() * lanes];
+    let steps = vec![1e-2; lanes];
+    let mut stats = vec![
+        DrawStats {
+            accept_prob: 0.0,
+            num_leapfrog: 0,
+            potential: 0.0,
+            diverging: false,
+            depth: 0,
+            poisoned: false,
+        };
+        lanes
+    ];
+    for _ in 0..5 {
+        draw_batch(
+            &mut bpot, &mut rngs, &mut bws, &zb, &steps, &inv_mass_b, max_depth, &mut stats,
+        );
+        zb.copy_from_slice(bws.proposal());
+    }
+    let before = allocation_count();
+    for _ in 0..15 {
+        draw_batch(
+            &mut bpot, &mut rngs, &mut bws, &zb, &steps, &inv_mass_b, max_depth, &mut stats,
+        );
+        zb.copy_from_slice(bws.proposal());
+    }
+    assert_eq!(
+        allocation_count() - before,
+        0,
+        "instrumented batched draws allocated on the heap"
+    );
+
+    // tiled engine (inline path), tile-eval spans + gather/scatter
+    // counters live
+    let mut tpot = compile_tiled(EightSchools::classic(), 0, 128, 32)
+        .unwrap()
+        .with_threads(1);
+    tpot.set_recorder(rec);
+    let lanes = 128;
+    let mut tws = BatchTreeWorkspace::new(tpot.dim(), lanes, max_depth);
+    tws.set_recorder(rec);
+    let mut rngs: Vec<Rng> = (0..lanes).map(|k| Rng::new(83 + k as u64)).collect();
+    let mut zt = vec![0.05; tpot.dim() * lanes];
+    let inv_mass_t = vec![1.0; tpot.dim() * lanes];
+    let steps_t = vec![1e-2; lanes];
+    let mut stats_t = vec![
+        DrawStats {
+            accept_prob: 0.0,
+            num_leapfrog: 0,
+            potential: 0.0,
+            diverging: false,
+            depth: 0,
+            poisoned: false,
+        };
+        lanes
+    ];
+    for _ in 0..3 {
+        draw_batch(
+            &mut tpot, &mut rngs, &mut tws, &zt, &steps_t, &inv_mass_t, max_depth, &mut stats_t,
+        );
+        zt.copy_from_slice(tws.proposal());
+    }
+    let before = allocation_count();
+    for _ in 0..5 {
+        draw_batch(
+            &mut tpot, &mut rngs, &mut tws, &zt, &steps_t, &inv_mass_t, max_depth, &mut stats_t,
+        );
+        zt.copy_from_slice(tws.proposal());
+    }
+    assert_eq!(
+        allocation_count() - before,
+        0,
+        "instrumented tiled draws allocated on the heap"
+    );
+    assert!(
+        rec.registry().unwrap().counter(Counter::TileEvals) > 0,
+        "recorder missed tiled evaluations"
+    );
+
+    // SVI steps with the ELBO ring and gradient-norm gauge live
+    let mut spot = compile(EightSchools::classic(), 0).unwrap();
+    spot.set_recorder(rec);
+    let opts = SviOptions {
+        num_steps: 100,
+        num_particles: 4,
+        lr: 0.02,
+        seed: 84,
+        ..Default::default()
+    };
+    let mut svi = NativeSvi::new(ScalarParticles::new(spot, 4), &opts).unwrap();
+    svi.set_recorder(rec);
+    for _ in 0..5 {
+        svi.step();
+    }
+    let before = allocation_count();
+    for _ in 0..25 {
+        svi.step();
+    }
+    assert_eq!(
+        allocation_count() - before,
+        0,
+        "instrumented SVI steps allocated on the heap"
+    );
+    assert!(
+        rec.registry().unwrap().counter(Counter::SviSteps) >= 25,
+        "recorder missed SVI steps"
+    );
+
+    // minibatch scheduling with epoch/row counters live
+    let mut sched =
+        fugue::data::MinibatchScheduler::new(64, 16, fugue::svi::scheduler_rng(7));
+    sched.set_recorder(rec);
+    let _ = sched.next_batch();
+    let before = allocation_count();
+    for _ in 0..50 {
+        let _ = sched.next_batch();
+    }
+    assert_eq!(
+        allocation_count() - before,
+        0,
+        "instrumented minibatch scheduling allocated on the heap"
+    );
+    assert!(
+        rec.registry().unwrap().counter(Counter::Epochs) > 0,
+        "recorder missed epoch boundaries"
+    );
+}
+
 #[test]
 fn hmc_draws_are_allocation_free() {
     let l = data::make_covtype_like(3, 300, 8);

@@ -1,0 +1,357 @@
+//! Flight-recorder integration tests: the observability layer must be
+//! invisible to the numerics and visible to the operator.
+//!
+//! Contracts pinned here:
+//!
+//! 1. **Bitwise neutrality** — installing the recorder changes no
+//!    sampled bit: NUTS through all three chain methods (plus the tiled
+//!    lane engine past the vectorization threshold), native SVI, and
+//!    subsampled SVI all produce bitwise-identical results with the
+//!    recorder on vs off.  The recorder observes values the engines
+//!    already computed; it never consumes RNG or reorders float work.
+//! 2. **It actually records** — the same instrumented runs leave
+//!    nonzero draw/leapfrog/SVI-step/epoch counters behind.
+//! 3. **Exporters** — the JSONL event stream round-trips through the
+//!    crate's own JSON parser; the metrics snapshot carries the
+//!    `fugue-metrics/v1` schema and is written atomically (no `.tmp`
+//!    litter), including across a kill-and-resume checkpoint cycle.
+//! 4. **ELBO MC-SE** — the convergence diagnostic is zero on degenerate
+//!    traces, matches a hand computation, and lands in the SVI result.
+//!
+//! Tests that install the process-global recorder serialize on
+//! `OBS_LOCK`; everything else uses private leaked registries.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+use fugue::compile::zoo::EightSchools;
+use fugue::compile::SubsampledLogistic;
+use fugue::coordinator::{
+    run_compiled_chains_checkpointed, run_compiled_chains_method, run_svi_native,
+    run_svi_subsampled, ChainMethod, ChainResult, CheckpointConfig, NutsOptions,
+};
+use fugue::data::{make_covtype_like, InMemoryRows};
+use fugue::obs::{
+    install, progress_line, snapshot_json, uninstall, write_snapshot, Counter, Gauge,
+    MetricsRegistry, Phase, Recorder, SpanKind, TraceWriter, Val, SNAPSHOT_SCHEMA,
+};
+use fugue::svi::{elbo_mcse, NativeSviResult, OptimKind, StepSchedule, SviOptions};
+use fugue::util::json::Json;
+
+/// Serializes every test that touches the process-global recorder so
+/// parallel test threads cannot observe each other's installs.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_lock() -> MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fugue_obs_{}_{}.json", std::process::id(), name))
+}
+
+fn nuts(warmup: usize, samples: usize, seed: u64) -> NutsOptions {
+    NutsOptions {
+        num_warmup: warmup,
+        num_samples: samples,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn svi_opts(steps: usize, particles: usize, vectorize: bool, seed: u64) -> SviOptions {
+    SviOptions {
+        num_steps: steps,
+        num_particles: particles,
+        lr: 0.05,
+        seed,
+        optimizer: OptimKind::Adam,
+        schedule: StepSchedule::Constant,
+        vectorize_particles: vectorize,
+        convergence: None,
+        tail_average: 0.0,
+    }
+}
+
+fn assert_chains_bitwise_equal(a: &[ChainResult], b: &[ChainResult], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: chain count");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.samples, y.samples, "{what}: chain {k} samples");
+        assert_eq!(x.step_size.to_bits(), y.step_size.to_bits(), "{what}: chain {k} step size");
+        assert_eq!(x.inv_mass, y.inv_mass, "{what}: chain {k} inverse mass");
+        assert_eq!(x.divergences, y.divergences, "{what}: chain {k} divergences");
+        assert_eq!(x.quarantines, y.quarantines, "{what}: chain {k} quarantines");
+        assert_eq!(x.total_leapfrogs, y.total_leapfrogs, "{what}: chain {k} leapfrogs");
+        assert_eq!(x.stats.accept_prob, y.stats.accept_prob, "{what}: chain {k} accepts");
+    }
+}
+
+fn assert_svi_bitwise_equal(a: &NativeSviResult, b: &NativeSviResult, what: &str) {
+    assert_eq!(a.steps, b.steps, "{what}: step count");
+    for (i, (x, y)) in a.elbo_trace.iter().zip(&b.elbo_trace).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: ELBO trace diverged at step {i}");
+    }
+    for (i, (x, y)) in a.guide.params().iter().zip(b.guide.params()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: guide param {i} diverged");
+    }
+    assert_eq!(a.elbo_mcse.to_bits(), b.elbo_mcse.to_bits(), "{what}: MC-SE diverged");
+}
+
+// ---------------------------------------------------------------------
+// 1 + 2. bitwise neutrality across every engine, and proof-of-recording
+// ---------------------------------------------------------------------
+
+/// NUTS draws are bitwise identical with the recorder on vs off for
+/// every chain method, including the tiled lane engine (128 chains is
+/// past the vectorization threshold), and the enabled run leaves real
+/// counters behind.
+#[test]
+fn recorder_is_bitwise_neutral_for_all_chain_methods() {
+    let _g = obs_lock();
+    let model = EightSchools::classic();
+    let configs = [
+        (ChainMethod::Sequential, 2, 40, 40),
+        (ChainMethod::Parallel, 2, 40, 40),
+        (ChainMethod::Vectorized, 4, 40, 40),
+        // > TILED_LANE_THRESHOLD lanes: the tiled batch engine
+        (ChainMethod::Vectorized, 128, 15, 15),
+    ];
+    for (method, chains, warmup, samples) in configs {
+        let o = nuts(warmup, samples, 31);
+        uninstall();
+        let (_, off) = run_compiled_chains_method(&model, method, chains, 6, &o).unwrap();
+        let rec = install();
+        let (_, on) = run_compiled_chains_method(&model, method, chains, 6, &o).unwrap();
+        let reg = rec.registry().expect("installed recorder has a registry");
+        let draws = reg.counter(Counter::Draws);
+        let leapfrogs = reg.counter(Counter::Leapfrogs);
+        uninstall();
+        assert_chains_bitwise_equal(&off, &on, &format!("{method:?} x{chains} on-vs-off"));
+        assert!(
+            draws >= (chains * (warmup + samples)) as u64,
+            "{method:?} x{chains}: recorder saw only {draws} draws"
+        );
+        assert!(leapfrogs > 0, "{method:?} x{chains}: no leapfrogs recorded");
+    }
+}
+
+/// Native SVI (scalar and batched particle backends) and subsampled
+/// minibatch SVI are bitwise identical with the recorder on vs off;
+/// the enabled runs record steps, epochs and streamed rows.
+#[test]
+fn recorder_is_bitwise_neutral_for_svi_and_subsampled_svi() {
+    let _g = obs_lock();
+    let (n, d) = (96, 4);
+    let dset = make_covtype_like(42, n, d);
+    let full = fugue::compile::zoo::LogisticModel {
+        x: dset.x.clone(),
+        y: dset.y.clone(),
+        n,
+        d,
+    };
+    let sub = SubsampledLogistic::new(InMemoryRows::new(dset.x, dset.y, n, d), 16);
+
+    for (particles, vectorize) in [(4usize, true), (2, false)] {
+        let opts = svi_opts(40, particles, vectorize, 9);
+
+        uninstall();
+        let (_, full_off) = run_svi_native(&full, &opts).unwrap();
+        let (_, sub_off) = run_svi_subsampled(&sub, &opts).unwrap();
+
+        let rec = install();
+        let (_, full_on) = run_svi_native(&full, &opts).unwrap();
+        let (_, sub_on) = run_svi_subsampled(&sub, &opts).unwrap();
+        let reg = rec.registry().unwrap();
+        let steps = reg.counter(Counter::SviSteps);
+        let epochs = reg.counter(Counter::Epochs);
+        let rows = reg.counter(Counter::RowsStreamed);
+        uninstall();
+
+        let tag = format!("particles={particles} vectorize={vectorize}");
+        assert_svi_bitwise_equal(&full_off, &full_on, &format!("full-batch SVI {tag}"));
+        assert_svi_bitwise_equal(&sub_off, &sub_on, &format!("subsampled SVI {tag}"));
+        assert!(steps >= 40, "{tag}: recorder saw only {steps} SVI steps");
+        assert!(epochs > 0, "{tag}: no minibatch epochs recorded");
+        assert!(rows >= 40 * 16, "{tag}: only {rows} streamed rows recorded");
+        assert!(full_on.elbo_mcse.is_finite() && full_on.elbo_mcse >= 0.0);
+    }
+}
+
+/// The recorder stays neutral across an automated kill-and-resume
+/// checkpoint cycle, and a snapshot written after every slice is
+/// atomic: the final file parses and no `.tmp` is ever left behind.
+#[test]
+fn recorder_survives_kill_and_resume_with_atomic_snapshots() {
+    let _g = obs_lock();
+    let model = EightSchools::classic();
+    let o = nuts(60, 80, 57);
+
+    uninstall();
+    let (_, plain) =
+        run_compiled_chains_method(&model, ChainMethod::Sequential, 2, 6, &o).unwrap();
+
+    let ck = tmp_path("kill_ck");
+    let snap = tmp_path("kill_snap");
+    let _ = std::fs::remove_file(&ck);
+    let cfg = CheckpointConfig {
+        path: Some(ck.clone()),
+        resume: true,
+        every: 7,
+        max_seconds: Some(0.02),
+    };
+    let rec = install();
+    let reg = rec.registry().unwrap();
+    let mut slices = 0u32;
+    let resumed = loop {
+        let (_, results, completed) =
+            run_compiled_chains_checkpointed(&model, ChainMethod::Sequential, 2, 6, &o, &cfg)
+                .unwrap();
+        write_snapshot(reg, &snap).unwrap();
+        assert!(
+            !snap.with_extension("json.tmp").exists() && !snap.with_extension("tmp").exists(),
+            "snapshot tmp file left behind after slice {slices}"
+        );
+        slices += 1;
+        assert!(slices < 10_000, "budgeted runner made no progress");
+        if completed {
+            break results;
+        }
+    };
+    let checkpoint_writes = reg.counter(Counter::CheckpointWrites);
+    let snapshot_writes = reg.counter(Counter::SnapshotWrites);
+    uninstall();
+
+    assert_chains_bitwise_equal(&plain, &resumed, "kill-and-resume with recorder on");
+    assert!(checkpoint_writes > 0, "no checkpoint writes recorded");
+    assert_eq!(snapshot_writes, slices as u64, "one snapshot per slice");
+
+    let parsed = Json::parse(&std::fs::read_to_string(&snap).unwrap()).unwrap();
+    assert_eq!(parsed.get("schema").and_then(Json::as_str), Some(SNAPSHOT_SCHEMA));
+    let _ = std::fs::remove_file(&ck);
+    let _ = std::fs::remove_file(&snap);
+}
+
+/// With nothing installed, the global recorder is disabled and every
+/// recording call is a silent no-op.
+#[test]
+fn global_recorder_defaults_off_and_off_calls_are_inert() {
+    let _g = obs_lock();
+    uninstall();
+    let rec = Recorder::global();
+    assert!(!rec.enabled());
+    assert!(rec.registry().is_none());
+    rec.incr(Counter::Draws);
+    rec.add(Counter::Leapfrogs, 100);
+    rec.set_gauge(Gauge::StepSize, 0.5);
+    rec.set_phase(Phase::Sampling);
+    rec.record_draw(0.9, 3, 7, false, false);
+    drop(rec.span(SpanKind::Draw));
+    let off = Recorder::OFF;
+    assert!(!off.enabled());
+}
+
+// ---------------------------------------------------------------------
+// 3. exporters
+// ---------------------------------------------------------------------
+
+/// Every JSONL event line round-trips through the crate's own JSON
+/// parser with its field types intact; non-finite floats serialize as
+/// null rather than breaking the stream.
+#[test]
+fn trace_writer_jsonl_round_trips_through_json_parser() {
+    let path = tmp_path("trace").with_extension("jsonl");
+    let tw = TraceWriter::create(&path).unwrap();
+    tw.event("run_start", &[("subcommand", Val::S("sample-model".to_string()))]).unwrap();
+    tw.event(
+        "phase",
+        &[
+            ("phase", Val::S("warmup".to_string())),
+            ("draws", Val::U(123)),
+            ("step_size", Val::F(0.375)),
+            ("nan_field", Val::F(f64::NAN)),
+        ],
+    )
+    .unwrap();
+    tw.event("run_end", &[("ok", Val::B(true))]).unwrap();
+    drop(tw);
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3, "one JSON object per event line");
+    let events: Vec<Json> = lines.iter().map(|l| Json::parse(l).unwrap()).collect();
+
+    let names: Vec<&str> =
+        events.iter().map(|e| e.get("event").and_then(Json::as_str).unwrap()).collect();
+    assert_eq!(names, ["run_start", "phase", "run_end"]);
+    for e in &events {
+        let ts = e.get("ts_ms").and_then(Json::as_f64).expect("every event has ts_ms");
+        assert!(ts >= 0.0);
+    }
+    let phase = &events[1];
+    assert_eq!(phase.get("phase").and_then(Json::as_str), Some("warmup"));
+    assert_eq!(phase.get("draws").and_then(Json::as_usize), Some(123));
+    assert_eq!(phase.get("step_size").and_then(Json::as_f64), Some(0.375));
+    assert!(matches!(phase.get("nan_field"), Some(Json::Null)), "NaN must serialize as null");
+    assert_eq!(events[2].get("ok").and_then(Json::as_bool), Some(true));
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The snapshot JSON exposes the full registry — schema tag, counters,
+/// gauges, depth histogram, spans, trajectories — with values matching
+/// what was recorded, using only a private registry (no global state).
+#[test]
+fn snapshot_json_reflects_recorded_state() {
+    let reg = MetricsRegistry::leak();
+    let rec = Recorder::new(reg);
+    rec.set_phase(Phase::Sampling);
+    for _ in 0..5 {
+        rec.record_draw(0.8, 3, 7, false, false);
+    }
+    rec.record_draw(0.1, 2, 3, true, false);
+    rec.record_step_size(0.25);
+    rec.record_elbo(-12.5);
+    rec.add_span_nanos(SpanKind::Warmup, 2_000_000);
+
+    let j = snapshot_json(reg);
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some(SNAPSHOT_SCHEMA));
+    assert_eq!(j.get("phase").and_then(Json::as_str), Some("sampling"));
+    let counters = j.get("counters").unwrap();
+    assert_eq!(counters.get("draws").and_then(Json::as_usize), Some(6));
+    assert_eq!(counters.get("leapfrogs").and_then(Json::as_usize), Some(5 * 7 + 3));
+    assert_eq!(counters.get("divergences").and_then(Json::as_usize), Some(1));
+    let gauges = j.get("gauges").unwrap();
+    assert_eq!(gauges.get("step_size").and_then(Json::as_f64), Some(0.25));
+    assert_eq!(gauges.get("elbo").and_then(Json::as_f64), Some(-12.5));
+    let hist = j.get("tree_depth_hist").and_then(Json::as_arr).unwrap();
+    assert_eq!(hist[3].as_usize(), Some(5));
+    assert_eq!(hist[2].as_usize(), Some(1));
+    let warm = j.get("spans").and_then(|s| s.get("warmup")).unwrap();
+    assert_eq!(warm.get("ms").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(warm.get("count").and_then(Json::as_usize), Some(1));
+
+    // the registry also feeds the single-line progress report
+    let line = progress_line(reg);
+    assert!(line.contains("draws"), "progress line should mention draws: {line}");
+}
+
+// ---------------------------------------------------------------------
+// 4. ELBO Monte-Carlo standard error
+// ---------------------------------------------------------------------
+
+#[test]
+fn elbo_mcse_matches_hand_computation_and_degenerate_cases() {
+    // degenerate traces: no noise estimate to report
+    assert_eq!(elbo_mcse(&[], 10), 0.0);
+    assert_eq!(elbo_mcse(&[1.0], 10), 0.0);
+    assert_eq!(elbo_mcse(&[5.0; 100], 1), 0.0);
+    // constant trace: zero variance exactly
+    assert_eq!(elbo_mcse(&[3.0; 50], 20), 0.0);
+    // hand computation over the final window of 4: values 1,2,3,4 have
+    // sample variance 5/3, so MC-SE = sqrt(5/3/4)
+    let trace = [99.0, -4.0, 1.0, 2.0, 3.0, 4.0];
+    let expect = (5.0 / 3.0 / 4.0_f64).sqrt();
+    assert!((elbo_mcse(&trace, 4) - expect).abs() < 1e-15);
+    // window longer than the trace clamps to the whole trace
+    let whole = elbo_mcse(&trace, 100);
+    assert!(whole.is_finite() && whole > 0.0);
+}
